@@ -1,0 +1,99 @@
+//! Matrix-kernel scenario from the paper's motivation (§I cites vector
+//! reduction for matrix operations, Hessenberg reduction, etc.):
+//! accumulate the row-dot-products of an iterative matrix-vector solve,
+//! where each row is one variable-length data set arriving back-to-back.
+//!
+//! Two paths compute the same workload:
+//!   1. the cycle-accurate JugglePAC circuit (what the FPGA would do);
+//!   2. the AOT `dot_f32_b8_n256` artifact through PJRT (the TPU-shaped
+//!      analogue with the multiply fused in, per DESIGN.md §Hardware-
+//!      Adaptation).
+//!
+//! Run: `make artifacts && cargo run --release --example matrix_reduction`
+
+use jugglepac::fp::{f32_bits, F32};
+use jugglepac::jugglepac::{run_sets, JugglePacConfig};
+use jugglepac::runtime::{default_artifacts_dir, Runtime};
+use jugglepac::util::Xoshiro256;
+
+const N: usize = 256; // matrix width = artifact row width
+const ROWS: usize = 64;
+
+fn main() {
+    let mut rng = Xoshiro256::seeded(0xA7B);
+    // A banded matrix: row i has a variable number of nonzeros (its "set
+    // length"), values in fixed-point so sums are exact.
+    let row_len: Vec<usize> = (0..ROWS).map(|_| rng.range(64, N)).collect();
+    let a: Vec<Vec<f32>> = row_len
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.range_i64(-128, 128) as f32 / 16.0).collect())
+        .collect();
+    let x: Vec<f32> = (0..N).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+
+    // Exact reference (f64 accumulation of fixed-point values is exact).
+    let want: Vec<f32> = a
+        .iter()
+        .map(|row| row.iter().zip(&x).map(|(&aij, &xj)| aij as f64 * xj as f64).sum::<f64>() as f32)
+        .collect();
+
+    // ---- path 1: JugglePAC circuit accumulates pre-multiplied streams.
+    let cfg = JugglePacConfig { fmt: F32, adder_latency: 8, pis_registers: 4, ..Default::default() };
+    let sets: Vec<Vec<u64>> = a
+        .iter()
+        .map(|row| {
+            row.iter().zip(&x).map(|(&aij, &xj)| f32_bits(aij * xj) as u64).collect()
+        })
+        .collect();
+    let (outs, jp) = run_sets(cfg, &sets, &|_| 0, 1_000_000);
+    assert_eq!(outs.len(), ROWS);
+    let circuit: Vec<f32> = {
+        let mut v = vec![0f32; ROWS];
+        for o in &outs {
+            v[o.set_id as usize] = f32::from_bits(o.bits as u32);
+        }
+        v
+    };
+    let exact1 = circuit.iter().zip(&want).filter(|(g, w)| g == w).count();
+    println!(
+        "JugglePAC circuit: {}/{} row dot-products exact | {} cycles, adder util {:.0}%",
+        exact1,
+        ROWS,
+        jp.stats().cycles,
+        100.0 * jp.stats().op_utilization()
+    );
+
+    // ---- path 2: the dot artifact via PJRT (multiply inside the kernel).
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("(skipping PJRT path: run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("runtime");
+    let m = rt.model("dot_f32_b8_n256").expect("dot artifact");
+    let (b, n) = (m.spec.batch, m.spec.n);
+    assert_eq!(n, N);
+    let mut pjrt = vec![0f32; ROWS];
+    for chunk in 0..(ROWS / b) {
+        let mut abuf = vec![0f32; b * n];
+        let mut bbuf = vec![0f32; b * n];
+        let mut lens = vec![0i32; b];
+        for r in 0..b {
+            let row = chunk * b + r;
+            let l = row_len[row];
+            abuf[r * n..r * n + l].copy_from_slice(&a[row]);
+            bbuf[r * n..r * n + l].copy_from_slice(&x[..l]);
+            lens[r] = l as i32;
+        }
+        let res = m.run_dot(&abuf, &bbuf, &lens).expect("execute");
+        pjrt[chunk * b..(chunk + 1) * b].copy_from_slice(&res.sums);
+    }
+    let exact2 = pjrt.iter().zip(&want).filter(|(g, w)| g == w).count();
+    println!("PJRT dot artifact:  {exact2}/{ROWS} row dot-products exact");
+
+    let agree = pjrt.iter().zip(&circuit).filter(|(a, b)| a.to_bits() == b.to_bits()).count();
+    println!("circuit vs PJRT bit-agreement: {agree}/{ROWS} (exact workload ⇒ all)");
+    assert_eq!(exact1, ROWS);
+    assert_eq!(exact2, ROWS);
+    assert_eq!(agree, ROWS);
+    println!("matrix_reduction OK");
+}

@@ -1,0 +1,63 @@
+//! Quickstart: accumulate a few variable-length data sets through the
+//! cycle-accurate JugglePAC circuit and verify against the behavioral
+//! serial model — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use jugglepac::baselines::SerialAccumulator;
+use jugglepac::fp::{f64_bits, F64};
+use jugglepac::jugglepac::{run_sets, JugglePacConfig};
+
+fn main() {
+    // The paper's headline configuration: double precision, a 14-stage
+    // pipelined adder, 4 PIS registers, the 4-slot pair FIFO.
+    let cfg = JugglePacConfig::default();
+    println!(
+        "JugglePAC: fmt=F64 L={} R={} fifo={}",
+        cfg.adder_latency, cfg.pis_registers, cfg.fifo_capacity
+    );
+
+    // Three back-to-back sets with different lengths (Fig. 1's shape).
+    // Values are "exactly summable" so every association order agrees —
+    // the paper's §IV-E testbench trick, which makes bit-exact checking
+    // against the in-order serial model meaningful.
+    let sets: Vec<Vec<u64>> = vec![
+        (1..=128).map(|i| f64_bits(i as f64)).collect(),
+        (1..=64).map(|i| f64_bits(i as f64 * 0.25)).collect(),
+        (1..=200).map(|i| f64_bits(-(i as f64) * 0.5)).collect(),
+    ];
+
+    let (outputs, jp) = run_sets(cfg, &sets, &|_| 0, 100_000);
+
+    println!("\n{:>4} {:>14} {:>14} {:>8} {:>6}", "set", "jugglepac", "serial", "match", "cycle");
+    for o in &outputs {
+        let (serial, _) = SerialAccumulator::reduce(F64, &sets[o.set_id as usize]);
+        println!(
+            "{:>4} {:>14.3} {:>14.3} {:>8} {:>6}",
+            o.set_id,
+            f64::from_bits(o.bits),
+            f64::from_bits(serial),
+            if o.bits == serial { "bit=" } else { "DIFF" },
+            o.cycle
+        );
+        assert_eq!(o.bits, serial);
+    }
+
+    let s = jp.stats();
+    println!(
+        "\n{} cycles, adder utilization {:.1}%, results in input order: {}",
+        s.cycles,
+        100.0 * s.op_utilization(),
+        outputs.windows(2).all(|w| w[0].set_id < w[1].set_id)
+    );
+
+    // Every output carries its recorded addition DAG: replay it for a
+    // bit-exact audit and render the Fig.-2-style tree of the second set.
+    let o = &outputs[1];
+    let replayed = jp.dag().replay(o.node, cfg.operator, cfg.fmt, &|s, i| {
+        sets[s as usize][i as usize]
+    });
+    assert_eq!(replayed, o.bits);
+    println!("\naccumulation tree of set 1 (c = adder issue cycle):");
+    print!("{}", jp.dag().render_tree(o.node, &|n| jp.issue_cycle_of(n)));
+}

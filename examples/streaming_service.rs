@@ -1,0 +1,107 @@
+//! END-TO-END DRIVER: the full three-layer stack on a realistic workload.
+//!
+//! Exercises every layer composing:
+//!   L1  Pallas tree-reduction kernel  ──lowered once by `make artifacts`──┐
+//!   L2  JAX batched model                                                 │
+//!   L3  rust streaming coordinator ── PJRT loads the HLO text artifact ◄──┘
+//!
+//! Workload: a back-to-back stream of variable-length labeled reduction
+//! sets (the paper's Fig. 1 scenario at software scale — e.g. per-row dot
+//! products of a sparse solver, or sensor-fusion windows). The service
+//! batches sets into the fixed-shape artifact, chunks long sets, juggles
+//! partials per label (software PIS), and delivers results **in input
+//! order**. Reports latency/throughput and cross-checks every sum
+//! bit-for-bit against the native engine.
+//!
+//! Run: `make artifacts && cargo run --release --example streaming_service`
+//! The measured numbers are archived in EXPERIMENTS.md §E2E.
+
+use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::runtime::default_artifacts_dir;
+use jugglepac::util::Xoshiro256;
+use std::time::{Duration, Instant};
+
+fn gen_requests(seed: u64, count: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..count)
+        .map(|_| {
+            // Bimodal lengths: mostly short sensor windows, occasional
+            // long solver rows spanning several chunks.
+            let n = if rng.chance(0.85) { rng.range(8, 250) } else { rng.range(250, 1500) };
+            (0..n).map(|_| rng.range_i64(-512, 512) as f32 / 32.0).collect()
+        })
+        .collect()
+}
+
+fn drive(engine: EngineKind, requests: &[Vec<f32>]) -> (Vec<u32>, String) {
+    let mut svc = Service::start(ServiceConfig { engine, ..Default::default() })
+        .expect("service starts");
+    let t0 = Instant::now();
+    for chunk in requests.chunks(128) {
+        svc.submit_burst(chunk.to_vec()).expect("submit");
+    }
+    let mut sums = Vec::with_capacity(requests.len());
+    for i in 0..requests.len() {
+        let r = svc
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|| panic!("timeout at response {i}"));
+        assert_eq!(r.req_id, i as u64, "input-order delivery");
+        sums.push(r.sum.to_bits());
+    }
+    let wall = t0.elapsed();
+    let cap = svc.batch_capacity();
+    let m = svc.shutdown();
+    (sums, m.report(wall, cap))
+}
+
+fn main() {
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", artifacts.display());
+        std::process::exit(2);
+    }
+
+    let requests = gen_requests(0xE2E, 4000);
+    let total_values: usize = requests.iter().map(|r| r.len()).sum();
+    println!(
+        "workload: {} sets, {} values total, lengths {}..{}",
+        requests.len(),
+        total_values,
+        requests.iter().map(|r| r.len()).min().unwrap(),
+        requests.iter().map(|r| r.len()).max().unwrap()
+    );
+
+    println!("\n[XLA engine — AOT Pallas kernel via PJRT]");
+    let (xla_sums, xla_report) = drive(
+        EngineKind::Xla {
+            artifacts_dir: artifacts.clone(),
+            artifact: "reduce_f32_b32_n128".to_string(),
+        },
+        &requests,
+    );
+    println!("{xla_report}");
+
+    println!("\n[native engine — rust scalar tree-reduction]");
+    let (native_sums, native_report) = drive(EngineKind::Native { batch: 8, n: 256 }, &requests);
+    println!("{native_report}");
+
+    let agree = xla_sums.iter().zip(&native_sums).filter(|(a, b)| a == b).count();
+    println!(
+        "\ncross-check: {agree}/{} sums bit-identical between engines",
+        requests.len()
+    );
+    assert_eq!(agree, requests.len(), "engines must agree bit-for-bit");
+
+    // Spot-check against exact arithmetic (values are fixed-point ⇒ the
+    // true sum is representable; any association order agrees).
+    let mut exact = 0;
+    for (req, &bits) in requests.iter().zip(&xla_sums) {
+        let want: f64 = req.iter().map(|&v| v as f64).sum();
+        if f32::from_bits(bits) == want as f32 {
+            exact += 1;
+        }
+    }
+    println!("value check: {exact}/{} sums exactly correct", requests.len());
+    assert_eq!(exact, requests.len());
+    println!("\nE2E OK — all three layers compose.");
+}

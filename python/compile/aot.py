@@ -1,0 +1,107 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** artifacts + manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (``make artifacts``):
+    artifacts/<name>.hlo.txt        one per model variant
+    artifacts/manifest.txt          ``name path kind batch n dtype outputs``
+
+Python runs only here, never on the request path; the rust runtime
+(rust/src/runtime/) loads these once at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Variant table: (name, kind, batch, n, dtype). The service picks by shape;
+# benches exercise all of them. N must be a power of two (kernel contract).
+VARIANTS = [
+    ("reduce_f32_b8_n256", "reduce", 8, 256, jnp.float32),
+    ("reduce_f32_b32_n128", "reduce", 32, 128, jnp.float32),
+    ("reduce_f32_b1_n1024", "reduce", 1, 1024, jnp.float32),
+    ("reduce_f32_b16_n512", "reduce", 16, 512, jnp.float32),
+    ("stats_f32_b8_n256", "stats", 8, 256, jnp.float32),
+    ("dot_f32_b8_n256", "dot", 8, 256, jnp.float32),
+]
+
+
+def lower_variant(name: str, kind: str, batch: int, n: int, dtype) -> tuple[str, int]:
+    x = jax.ShapeDtypeStruct((batch, n), dtype)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    if kind == "reduce":
+        lowered = jax.jit(model.reduce_batch).lower(x, lens)
+        n_out = 1
+    elif kind == "stats":
+        lowered = jax.jit(model.reduce_batch_stats).lower(x, lens)
+        n_out = 2
+    elif kind == "dot":
+        lowered = jax.jit(model.dot_accumulate).lower(x, x, lens)
+        n_out = 1
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return to_hlo_text(lowered), n_out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=str(pathlib.Path(__file__).resolve().parents[2] / "artifacts"),
+        help="artifact output directory",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="(compat) also write the first variant to this exact path",
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest_lines = []
+    for name, kind, batch, n, dtype in VARIANTS:
+        text, n_out = lower_variant(name, kind, batch, n, dtype)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        dtype_name = jnp.dtype(dtype).name
+        manifest_lines.append(
+            f"{name} {path.name} {kind} {batch} {n} {dtype_name} {n_out}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'} ({len(manifest_lines)} variants)")
+
+    if args.out:
+        # Back-compat with `make artifacts`' single-file target.
+        first = VARIANTS[0][0]
+        text = (out_dir / f"{first}.hlo.txt").read_text()
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(args.out).write_text(text)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: masked segmented tree-reduction (the JugglePAC order).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): JugglePAC keeps one
+pipelined FP adder busy on a serial stream, parking intermediates in a few
+label-indexed registers. On TPU the analogous structure is
+
+- the serial input stream  -> an HBM->VMEM BlockSpec stream of row tiles
+  (one grid step per set, the whole row resident in VMEM);
+- the adder's level-1 pass -> an adjacent-pair add over the tile (vector
+  lanes play the role of back-to-back issue slots);
+- the PIS pair-merging     -> the remaining log2(N)-1 halving steps, a
+  *fixed* binary tree, preserving the paper's reproducible-rounding story
+  (a deterministic association order, unlike a data-dependent one);
+- "no BRAM for intermediates" -> no HBM round-trips: every intermediate
+  level lives in registers/VMEM within one kernel invocation.
+
+The kernel is lowered with ``interpret=True`` — real-TPU Mosaic lowering
+cannot execute on the CPU PJRT plugin (see /opt/xla-example/README.md);
+correctness is proven against the pure-jnp oracle in ``ref.py``, and the
+VMEM/roofline discussion lives in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_reduce_row(row: jnp.ndarray) -> jnp.ndarray:
+    """Adjacent-pair tree reduction of a [N] vector, N a power of two.
+
+    Level k adds elements 2i and 2i+1 of the previous level — exactly the
+    accumulation-tree shape of the paper's Fig. 2 (level 1 = state-1
+    additions; upper levels = the PIS's pair merges).
+    """
+    v = row
+    while v.shape[0] > 1:
+        half = v.shape[0] // 2
+        pairs = v.reshape(half, 2)
+        v = pairs[:, 0] + pairs[:, 1]
+    return v[0]
+
+
+def _reduce_kernel(x_ref, len_ref, o_ref):
+    """One grid step: reduce one set (row) with masking to its length."""
+    x = x_ref[...]  # [1, N] tile in VMEM
+    n = len_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    masked = jnp.where(idx < n, x, jnp.zeros_like(x))
+    o_ref[0] = _tree_reduce_row(masked[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def jugglepac_reduce(x: jnp.ndarray, lengths: jnp.ndarray, *, interpret: bool = True):
+    """Segmented reduction: per-row masked sum in JugglePAC tree order.
+
+    Args:
+      x: [B, N] values, N a power of two (pad with anything; masked off).
+      lengths: [B] int32 valid-prefix lengths.
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot
+        execute there); kept as an argument so a real-TPU build can flip it.
+
+    Returns:
+      [B] per-set sums, bit-identical to ``ref.tree_reduce_reference``.
+    """
+    b, n = x.shape
+    assert n & (n - 1) == 0, f"N={n} must be a power of two"
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=interpret,
+    )(x, lengths)

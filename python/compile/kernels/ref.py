@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the L1 kernel.
+
+Two references, used differently:
+
+- ``masked_sum``: the mathematical answer (order-free). Kernel output must
+  be allclose to this for well-conditioned inputs, and *bit-equal* for
+  exactly-summable fixed-point workloads (the paper's §IV-E methodology).
+- ``tree_reduce_reference``: the exact adjacent-pair association order the
+  kernel implements. Kernel output must be **bit-identical** to this for
+  arbitrary inputs — this is the FP-non-associativity contract the paper
+  spends §I motivating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_sum(x: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """Order-free masked row sums of a [B, N] batch."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    masked = jnp.where(idx < lengths[:, None], x, jnp.zeros_like(x))
+    return masked.sum(axis=1)
+
+
+def tree_reduce_reference(x: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact reference for the kernel's adjacent-pair tree order."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    v = jnp.where(idx < lengths[:, None], x, jnp.zeros_like(x))
+    while v.shape[1] > 1:
+        half = v.shape[1] // 2
+        pairs = v.reshape(v.shape[0], half, 2)
+        v = pairs[:, :, 0] + pairs[:, :, 1]
+    return v[:, 0]

@@ -1,0 +1,45 @@
+"""L2 JAX model: the batched accumulation graph the rust service executes.
+
+The coordinator batches labeled variable-length sets into a padded
+[B, N] matrix plus a lengths vector; this module defines the compute graph
+over that batch, calling the L1 Pallas kernel for the per-set reductions.
+Beyond the plain sums the service also wants running statistics (count and
+mean) for its metrics — computing them in the same lowered program saves a
+second device round-trip, and demonstrates a multi-output artifact through
+the PJRT boundary.
+
+Python never runs at serve time: ``aot.py`` lowers these functions once to
+HLO text and the rust runtime loads the artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.jugglepac_reduce import jugglepac_reduce
+
+
+def reduce_batch(x: jnp.ndarray, lengths: jnp.ndarray):
+    """Per-set sums of a padded batch. Returns a 1-tuple (sums,)."""
+    return (jugglepac_reduce(x, lengths),)
+
+
+def reduce_batch_stats(x: jnp.ndarray, lengths: jnp.ndarray):
+    """Sums plus per-set means (guarding empty sets).
+
+    Returns (sums[B], means[B]).
+    """
+    sums = jugglepac_reduce(x, lengths)
+    denom = jnp.maximum(lengths, 1).astype(x.dtype)
+    means = sums / denom
+    return (sums, means)
+
+
+def dot_accumulate(a: jnp.ndarray, b: jnp.ndarray, lengths: jnp.ndarray):
+    """The paper's motivating matrix-kernel shape: rowwise dot products.
+
+    Elementwise products feed the same masked tree reduction — i.e.
+    JugglePAC with its "multi-cycle operator" slot reused for a
+    multiply-accumulate pipeline. a, b: [B, N]; returns (dots[B],).
+    """
+    return (jugglepac_reduce(a * b, lengths),)

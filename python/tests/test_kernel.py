@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+The three contracts, in increasing strictness:
+1. allclose vs the order-free masked sum (well-conditioned inputs);
+2. bit-identical vs the tree-order reference (arbitrary inputs) — the
+   FP-non-associativity contract;
+3. bit-identical vs the serial sum for exactly-summable fixed-point
+   workloads (the paper's §IV-E testbench methodology).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.jugglepac_reduce import jugglepac_reduce
+from compile.kernels.ref import masked_sum, tree_reduce_reference
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_batch(rng, b, n, scale=1.0):
+    x = (rng.standard_normal((b, n)) * scale).astype(np.float32)
+    lengths = rng.integers(0, n + 1, size=(b,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(lengths)
+
+
+class TestBasics:
+    def test_full_rows_match_sum(self):
+        rng = np.random.default_rng(0)
+        x, _ = _rand_batch(rng, 4, 64)
+        lengths = jnp.full((4,), 64, jnp.int32)
+        got = jugglepac_reduce(x, lengths)
+        np.testing.assert_allclose(got, masked_sum(x, lengths), rtol=1e-6)
+
+    def test_masking_excludes_tail(self):
+        x = jnp.ones((2, 8), jnp.float32)
+        lengths = jnp.array([3, 0], jnp.int32)
+        got = np.asarray(jugglepac_reduce(x, lengths))
+        np.testing.assert_array_equal(got, [3.0, 0.0])
+
+    def test_single_row_single_element(self):
+        x = jnp.full((1, 1), 7.5, jnp.float32)
+        lengths = jnp.array([1], jnp.int32)
+        assert float(jugglepac_reduce(x, lengths)[0]) == 7.5
+
+    def test_bitexact_vs_tree_reference(self):
+        rng = np.random.default_rng(1)
+        x, lengths = _rand_batch(rng, 8, 256, scale=1e6)
+        got = np.asarray(jugglepac_reduce(x, lengths)).view(np.uint32)
+        want = np.asarray(tree_reduce_reference(x, lengths)).view(np.uint32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_fixed_point_workload_matches_serial_bitexact(self):
+        # §IV-E: integers scaled by 2^-12 sum exactly; any order agrees.
+        rng = np.random.default_rng(2)
+        ints = rng.integers(-1000, 1000, size=(4, 128))
+        x = (ints / 4096.0).astype(np.float32)
+        lengths = np.array([128, 100, 1, 37], np.int32)
+        got = np.asarray(jugglepac_reduce(jnp.asarray(x), jnp.asarray(lengths)))
+        for b in range(4):
+            serial = np.float32(0.0)
+            for v in x[b, : lengths[b]]:
+                serial = np.float32(serial + np.float32(v))
+            assert got[b].view(np.uint32) == serial.view(np.uint32) if hasattr(got[b], "view") else True
+            assert np.float32(got[b]) == serial
+
+
+@st.composite
+def batch_and_lengths(draw):
+    b = draw(st.integers(min_value=1, max_value=8))
+    log_n = draw(st.integers(min_value=0, max_value=9))
+    n = 1 << log_n
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n)).astype(np.float32) * draw(
+        st.sampled_from([1e-3, 1.0, 1e4])
+    )
+    lengths = rng.integers(0, n + 1, size=(b,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(lengths)
+
+
+class TestHypothesis:
+    @hypothesis.given(batch_and_lengths())
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_sweep_shapes_bitexact_vs_tree(self, data):
+        x, lengths = data
+        got = np.asarray(jugglepac_reduce(x, lengths)).view(np.uint32)
+        want = np.asarray(tree_reduce_reference(x, lengths)).view(np.uint32)
+        np.testing.assert_array_equal(got, want)
+
+    @hypothesis.given(batch_and_lengths())
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_sweep_shapes_allclose_vs_masked_sum(self, data):
+        x, lengths = data
+        got = np.asarray(jugglepac_reduce(x, lengths), dtype=np.float64)
+        want = np.asarray(masked_sum(x, lengths), dtype=np.float64)
+        scale = np.maximum(np.abs(x).max() * x.shape[1], 1e-30)
+        np.testing.assert_allclose(got, want, atol=scale * 1e-6, rtol=1e-5)
+
+    @hypothesis.given(
+        st.integers(min_value=0, max_value=2**31 - 1),
+        st.sampled_from([16, 64, 256]),
+    )
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_special_values_propagate(self, seed, n):
+        # NaN/Inf in the valid prefix must reach the output; in the masked
+        # tail they must not.
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((2, n)).astype(np.float32)
+        x[0, 0] = np.inf
+        x[1, n - 1] = np.nan
+        lengths = jnp.asarray(np.array([n, n - 1], np.int32))
+        got = np.asarray(jugglepac_reduce(jnp.asarray(x), lengths))
+        assert np.isinf(got[0])
+        assert not np.isnan(got[1])
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_roundtrip(self, dtype):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((2, 32)), dtype=dtype)
+        lengths = jnp.array([32, 16], jnp.int32)
+        got = jugglepac_reduce(x, lengths)
+        want = tree_reduce_reference(x, lengths)
+        assert got.dtype == x.dtype
+        np.testing.assert_array_equal(
+            np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32)
+        )
+
+    def test_rejects_non_power_of_two(self):
+        x = jnp.ones((1, 12), jnp.float32)
+        lengths = jnp.array([12], jnp.int32)
+        with pytest.raises(AssertionError):
+            jugglepac_reduce(x, lengths)

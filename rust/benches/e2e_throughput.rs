@@ -1,0 +1,57 @@
+//! Bench: end-to-end service throughput/latency — XLA (AOT Pallas via
+//! PJRT) vs native engine on the same workload. The system-level analogue
+//! of the paper's frequency claims; archived in EXPERIMENTS.md §E2E.
+
+use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::runtime::default_artifacts_dir;
+use jugglepac::util::Xoshiro256;
+use std::time::{Duration, Instant};
+
+fn workload(count: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seeded(0xE2E2);
+    (0..count)
+        .map(|_| {
+            let n = rng.range(8, 512);
+            (0..n).map(|_| rng.range_i64(-512, 512) as f32 / 32.0).collect()
+        })
+        .collect()
+}
+
+fn drive(name: &str, engine: EngineKind, requests: &[Vec<f32>]) {
+    let mut svc = Service::start(ServiceConfig { engine, ..Default::default() }).unwrap();
+    let t0 = Instant::now();
+    for chunk in requests.chunks(128) {
+        svc.submit_burst(chunk.to_vec()).unwrap();
+    }
+    for i in 0..requests.len() {
+        let r = svc.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(r.req_id, i as u64);
+    }
+    let wall = t0.elapsed();
+    let cap = svc.batch_capacity();
+    let m = svc.shutdown();
+    println!("[{name}] {}", m.report(wall, cap));
+}
+
+fn main() {
+    let requests = workload(3000);
+    println!(
+        "=== e2e service throughput: {} variable-length sets ===",
+        requests.len()
+    );
+    if default_artifacts_dir().join("manifest.txt").exists() {
+        for artifact in ["reduce_f32_b8_n256", "reduce_f32_b32_n128", "reduce_f32_b16_n512"] {
+            drive(
+                &format!("xla {artifact}"),
+                EngineKind::Xla {
+                    artifacts_dir: default_artifacts_dir(),
+                    artifact: artifact.to_string(),
+                },
+                &requests,
+            );
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the XLA rows)");
+    }
+    drive("native 8x256", EngineKind::Native { batch: 8, n: 256 }, &requests);
+}

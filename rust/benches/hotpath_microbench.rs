@@ -1,0 +1,88 @@
+//! Microbenchmarks of the stack's hot paths — the §Perf working set:
+//!   - bit-accurate fp_add/fp_mul (the innermost sim operation);
+//!   - JugglePAC step loop (cycles/s — the L3 sim headline);
+//!   - INTAC step loop;
+//!   - PJRT execute round-trip per batch (the service's unit cost).
+
+use jugglepac::benchkit::{bench, report_throughput};
+use jugglepac::fp::{fp_add, fp_mul, F64};
+use jugglepac::intac::{FinalAdderKind, IntacConfig};
+use jugglepac::jugglepac::JugglePacConfig;
+use jugglepac::runtime::{default_artifacts_dir, Runtime};
+use jugglepac::util::Xoshiro256;
+use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
+
+fn main() {
+    // fp_add / fp_mul
+    let mut rng = Xoshiro256::seeded(1);
+    let pairs: Vec<(u64, u64)> = (0..100_000)
+        .map(|_| {
+            (
+                (rng.next_f64() * 2e3 - 1e3).to_bits(),
+                (rng.next_f64() * 2e3 - 1e3).to_bits(),
+            )
+        })
+        .collect();
+    let d = bench("fp_add F64 x100k", 20, || {
+        let mut acc = 0u64;
+        for &(a, b) in &pairs {
+            acc ^= fp_add(F64, a, b);
+        }
+        std::hint::black_box(acc);
+    });
+    report_throughput("adds", pairs.len() as u64, "add", d);
+    let d = bench("fp_mul F64 x100k", 20, || {
+        let mut acc = 0u64;
+        for &(a, b) in &pairs {
+            acc ^= fp_mul(F64, a, b);
+        }
+        std::hint::black_box(acc);
+    });
+    report_throughput("muls", pairs.len() as u64, "mul", d);
+
+    // JugglePAC cycle loop
+    let ws = SetStream::generate(&WorkloadConfig {
+        sets: 256,
+        len: LenDist::Fixed(128),
+        seed: 2,
+        ..Default::default()
+    });
+    let cfg = JugglePacConfig::default();
+    let cycles = (ws.total_values() + 4096) as u64;
+    let d = bench("JugglePAC sim: 256 sets x 128 DP", 10, || {
+        let (outs, _) = jugglepac::jugglepac::run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
+        assert_eq!(outs.len(), 256);
+    });
+    report_throughput("cycles", cycles, "cycle", d);
+
+    // INTAC cycle loop
+    let intac_cfg = IntacConfig {
+        final_adder: FinalAdderKind::ResourceShared { fa_cells: 16 },
+        ..Default::default()
+    };
+    let n = intac_cfg.min_set_len() + 64;
+    let sets: Vec<Vec<u64>> =
+        (0..256).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
+    let d = bench(&format!("INTAC sim: 256 sets x {n} u64"), 10, || {
+        let (outs, _) = jugglepac::intac::run_sets(intac_cfg, &sets, 1_000_000);
+        assert_eq!(outs.len(), 256);
+    });
+    report_throughput("values", 256 * n, "value", d);
+
+    // PJRT execute round-trip
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        let rt = Runtime::load(&dir).unwrap();
+        for name in ["reduce_f32_b8_n256", "reduce_f32_b32_n128"] {
+            let m = rt.model(name).unwrap();
+            let (b, nn) = (m.spec.batch, m.spec.n);
+            let x = vec![1.0f32; b * nn];
+            let lens = vec![nn as i32; b];
+            let d = bench(&format!("PJRT execute {name}"), 50, || {
+                let r = m.run(&x, &lens).unwrap();
+                std::hint::black_box(r);
+            });
+            report_throughput("values", (b * nn) as u64, "value", d);
+        }
+    }
+}

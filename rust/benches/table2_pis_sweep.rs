@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table II (PIS register sweep) and time the
+//! underlying simulations.
+
+use jugglepac::benchkit::bench;
+use jugglepac::jugglepac::{min_set_size, JugglePacConfig};
+use jugglepac::report;
+
+fn main() {
+    println!("=== Table II — PIS register sweep ===\n");
+    println!("{}", report::table2());
+
+    println!("--- timings ---");
+    for r in [2usize, 4, 8] {
+        let cfg = JugglePacConfig { pis_registers: r, ..Default::default() };
+        bench(&format!("min_set_size search (R={r})"), 3, || {
+            std::hint::black_box(min_set_size(cfg, 6));
+        });
+        bench(&format!("latency-tail measurement (R={r})"), 3, || {
+            std::hint::black_box(report::measured_latency_tail(cfg, 128, 16));
+        });
+    }
+}

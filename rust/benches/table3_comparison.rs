@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Table III (XC2VP30 comparison, DS=128, DP
+//! L=14) — published values vs our area model and executable schedulers.
+
+use jugglepac::baselines::treesched::{run_sets, SchedKind, TreeSchedulerConfig};
+use jugglepac::benchkit::{bench, report_throughput};
+use jugglepac::fp::F64;
+use jugglepac::report;
+use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
+
+fn main() {
+    println!("=== Table III — comparison on XC2VP30 ===\n");
+    println!("{}", report::table3());
+
+    // Time the executable pieces: JugglePAC sim vs the literature shapes
+    // on the identical 64×128 DP workload.
+    let ws = SetStream::generate(&WorkloadConfig {
+        sets: 64,
+        len: LenDist::Fixed(128),
+        seed: 0x7AB3,
+        ..Default::default()
+    });
+    println!("--- executable-model timings (64 sets × 128 DP values) ---");
+    let total_values = ws.total_values() as u64;
+    let cfg = jugglepac::jugglepac::JugglePacConfig::default();
+    let d = bench("JugglePAC cycle sim", 5, || {
+        let (outs, _) = jugglepac::jugglepac::run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
+        assert_eq!(outs.len(), 64);
+    });
+    report_throughput("values", total_values, "values", d);
+    for kind in [SchedKind::Ssa, SchedKind::Dsa, SchedKind::Fcbt] {
+        let tcfg = TreeSchedulerConfig { fmt: F64, adder_latency: 14, kind };
+        let d = bench(&format!("{kind:?} scheduler sim"), 5, || {
+            let (outs, _) = run_sets(tcfg, &ws.sets, 1_000_000);
+            assert_eq!(outs.len(), 64);
+        });
+        report_throughput("values", total_values, "values", d);
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table IV (Virtex-5 cross-FPGA comparison).
+
+use jugglepac::report;
+
+fn main() {
+    println!("=== Table IV — Virtex-5 comparison ===\n");
+    println!("{}", report::table4());
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Table V (INTAC vs standard adder) and time the
+//! INTAC bit-level simulator.
+
+use jugglepac::benchkit::{bench, report_throughput};
+use jugglepac::intac::{run_sets, FinalAdderKind, IntacConfig};
+use jugglepac::report;
+use jugglepac::util::Xoshiro256;
+
+fn main() {
+    println!("=== Table V — INTAC vs standard adder ===\n");
+    println!("{}", report::table5());
+
+    println!("--- INTAC simulator timings ---");
+    let mut rng = Xoshiro256::seeded(9);
+    for (inputs, fas) in [(1u32, 1u32), (1, 16), (2, 2), (2, 16)] {
+        let cfg = IntacConfig {
+            inputs_per_cycle: inputs,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+            ..Default::default()
+        };
+        let n = cfg.min_set_len() + 64;
+        let sets: Vec<Vec<u64>> =
+            (0..32).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
+        let values: u64 = sets.iter().map(|s| s.len() as u64).sum();
+        let d = bench(&format!("INTAC sim inputs={inputs} FAs={fas}"), 5, || {
+            let (outs, m) = run_sets(cfg, &sets, 1_000_000);
+            assert_eq!(outs.len(), 32);
+            assert!(!m.stalled());
+        });
+        report_throughput("values", values, "values", d);
+    }
+}

@@ -1,0 +1,22 @@
+//! Literature baselines the paper evaluates against (Tables III–V).
+//!
+//! Three kinds of model live here, matched to what each comparison needs:
+//!
+//! - [`serial`] — the behavioral serial accumulator, the §IV-E value
+//!   oracle, and the "SA" (standard adder) rows of Table V;
+//! - [`treesched`] — an executable multi-adder reduction scheduler that
+//!   can be configured to the occupancy disciplines of the literature
+//!   designs (SSA/DSA/FCBT/DB shapes): it measures real cycle latencies
+//!   and buffer high-water marks on real input streams;
+//! - [`catalog`] — the published Table III/IV rows (adders, slices,
+//!   BRAMs, MHz, latency) as data, so benches can print paper-vs-ours
+//!   side by side and the area model can be sanity-checked against
+//!   independent designs.
+
+pub mod catalog;
+pub mod serial;
+pub mod treesched;
+
+pub use catalog::{published_table3, published_table4, PublishedRow};
+pub use serial::{SerialAccumulator, StandardAdder};
+pub use treesched::{SchedKind, TreeScheduler, TreeSchedulerConfig};

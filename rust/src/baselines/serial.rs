@@ -1,0 +1,132 @@
+//! Serial accumulation baselines.
+//!
+//! - [`SerialAccumulator`]: the behavioral model of §IV-E — one in-order
+//!   IEEE addition per cycle with a combinational adder. It is the value
+//!   oracle for order-insensitive workloads and the latency reference
+//!   ("latency N for a set of size N", Table V's SA row).
+//! - [`StandardAdder`]: the integer "+"-operator design of Table V — a
+//!   plain registered adder accepting N inputs/cycle, whose cycle time is
+//!   limited by the full carry chain (the thing INTAC beats).
+
+use crate::fp::{FpFormat, OpFn};
+use crate::intac::csa::width_mask;
+
+/// Behavioral in-order FP accumulator: 1 addition per cycle, combinational.
+pub struct SerialAccumulator {
+    fmt: FpFormat,
+    op: OpFn,
+    acc: u64,
+    count: u64,
+    pub cycles: u64,
+}
+
+impl SerialAccumulator {
+    pub fn new(fmt: FpFormat) -> Self {
+        Self { fmt, op: crate::fp::fp_add, acc: fmt.zero(false), count: 0, cycles: 0 }
+    }
+
+    pub fn with_op(fmt: FpFormat, op: OpFn, identity: u64) -> Self {
+        Self { fmt, op, acc: identity, count: 0, cycles: 0 }
+    }
+
+    /// Feed one value (one cycle).
+    pub fn push(&mut self, bits: u64) {
+        self.acc = (self.op)(self.fmt, self.acc, bits);
+        self.count += 1;
+        self.cycles += 1;
+    }
+
+    /// Current accumulated value.
+    pub fn value(&self) -> u64 {
+        self.acc
+    }
+
+    /// Reduce a whole set in order; returns (bits, cycles == set length).
+    pub fn reduce(fmt: FpFormat, set: &[u64]) -> (u64, u64) {
+        let mut s = Self::new(fmt);
+        for &v in set {
+            s.push(v);
+        }
+        (s.value(), s.cycles)
+    }
+}
+
+/// Plain registered integer adder: `acc += input` with a full-width carry
+/// chain in one cycle. N inputs per cycle means an N-operand combinational
+/// add, which lengthens the carry chain further (Table V's SA rows: 227
+/// MHz at 1 input, 200 MHz at 2 — vs INTAC's 588/500).
+pub struct StandardAdder {
+    width: u32,
+    acc: u128,
+    pub cycles: u64,
+}
+
+impl StandardAdder {
+    pub fn new(width: u32) -> Self {
+        Self { width, acc: 0, cycles: 0 }
+    }
+
+    pub fn push(&mut self, inputs: &[u64], in_width: u32) {
+        let imask = width_mask(in_width);
+        for &v in inputs {
+            self.acc = self.acc.wrapping_add((v as u128) & imask);
+        }
+        self.acc &= width_mask(self.width);
+        self.cycles += 1;
+    }
+
+    pub fn value(&self) -> u128 {
+        self.acc
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// Latency in cycles for a set of `n` inputs at `per_cycle` inputs per
+    /// cycle: Table V's "N" / "N/2" column.
+    pub fn latency(n: u64, per_cycle: u32) -> u64 {
+        n.div_ceil(per_cycle as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{f64_bits, F64};
+
+    #[test]
+    fn serial_matches_fold() {
+        let vals = [0.1f64, 0.2, 0.3, 0.7, -0.4];
+        let set: Vec<u64> = vals.iter().map(|v| f64_bits(*v)).collect();
+        let (bits, cycles) = SerialAccumulator::reduce(F64, &set);
+        let want = vals.iter().fold(0.0f64, |a, &v| a + v);
+        assert_eq!(bits, f64_bits(want));
+        assert_eq!(cycles, 5);
+    }
+
+    #[test]
+    fn standard_adder_wraps_at_width() {
+        let mut sa = StandardAdder::new(8);
+        sa.push(&[200], 8);
+        sa.push(&[100], 8);
+        assert_eq!(sa.value(), (300u128) & 0xFF);
+    }
+
+    #[test]
+    fn standard_adder_two_per_cycle_latency() {
+        assert_eq!(StandardAdder::latency(128, 1), 128);
+        assert_eq!(StandardAdder::latency(128, 2), 64);
+        assert_eq!(StandardAdder::latency(129, 2), 65);
+    }
+
+    #[test]
+    fn multiplier_identity_serial() {
+        let set: Vec<u64> = [2.0f64, 4.0].iter().map(|v| f64_bits(*v)).collect();
+        let mut s = SerialAccumulator::with_op(F64, crate::fp::fp_mul, f64_bits(1.0));
+        for &v in &set {
+            s.push(v);
+        }
+        assert_eq!(s.value(), f64_bits(8.0));
+    }
+}

@@ -1,0 +1,53 @@
+//! Minimal benchmark harness (the offline crate set has no criterion).
+//!
+//! `bench(name, iters, f)` warms up, runs `iters` timed repetitions,
+//! and prints min/median/mean so regressions are visible run-to-run.
+//! Benches are `harness = false` binaries invoked by `cargo bench`;
+//! their stdout is archived in bench_output.txt / EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Timed repetitions of `f`; returns (min, median, mean).
+pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> (Duration, Duration, Duration) {
+    // Warm-up.
+    f();
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    (min, median, mean)
+}
+
+/// Run and report one benchmark case.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> Duration {
+    let (min, median, mean) = time_it(iters, f);
+    println!(
+        "bench {name:<44} min {:>10.3?}  median {:>10.3?}  mean {:>10.3?}  (n={iters})",
+        min, median, mean
+    );
+    median
+}
+
+/// Pretty throughput line derived from a measured duration.
+pub fn report_throughput(name: &str, items: u64, unit: &str, dur: Duration) {
+    let per_s = items as f64 / dur.as_secs_f64();
+    println!("  ↳ {name}: {per_s:.3e} {unit}/s");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_ordered_stats() {
+        let (min, median, _mean) = time_it(5, || std::thread::sleep(Duration::from_micros(50)));
+        assert!(min <= median);
+        assert!(min >= Duration::from_micros(40));
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny argv parser (the offline crate set has no clap).
+//!
+//! Supports `program <subcommand> [--key value] [--flag]` with typed
+//! accessors and an auto-generated usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv\[0\]).
+    pub fn parse() -> Result<Self> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                }
+                _ => out.flags.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --sets 100 --ordered --seed 42");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("sets", 0).unwrap(), 100);
+        assert!(a.flag("ordered"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::from_iter(["run".into(), "stray".into()]).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Partial-result assembly + ordered delivery — the software PIS.
+//!
+//! Long sets arrive back from the engine as per-chunk partial sums,
+//! possibly interleaved across many in-flight sets and out of submission
+//! order. Exactly like the circuit's PIS, the assembler holds partials in
+//! per-label state until a set completes, then (optionally) holds finished
+//! results until all earlier sets have finished, so results leave in input
+//! order (paper §IV-D).
+
+use std::collections::HashMap;
+
+/// A finished set reduction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Completed {
+    pub req_id: u64,
+    pub sum: f32,
+}
+
+/// Per-request partial-sum tracker.
+#[derive(Debug)]
+struct PartialSet {
+    expected: u32,
+    received: u32,
+    /// chunk_idx -> partial sum; combined in chunk order (a fixed
+    /// association order, like the kernel's fixed tree).
+    parts: Vec<Option<f32>>,
+}
+
+/// Assembles chunk partials into set results, optionally reordering.
+#[derive(Debug)]
+pub struct Assembler {
+    inflight: HashMap<u64, PartialSet>,
+    ordered: bool,
+    next_to_deliver: u64,
+    /// Finished but waiting for earlier ids (ordered mode only).
+    held: HashMap<u64, f32>,
+}
+
+impl Assembler {
+    pub fn new(ordered: bool) -> Self {
+        Self { inflight: HashMap::new(), ordered, next_to_deliver: 0, held: HashMap::new() }
+    }
+
+    /// Declare a request and how many chunks it was split into.
+    pub fn expect(&mut self, req_id: u64, chunks: u32) {
+        let prev = self.inflight.insert(
+            req_id,
+            PartialSet { expected: chunks, received: 0, parts: vec![None; chunks as usize] },
+        );
+        debug_assert!(prev.is_none(), "request {req_id} declared twice");
+    }
+
+    /// Feed one partial; returns any results now deliverable (in order if
+    /// `ordered`).
+    pub fn add_partial(&mut self, req_id: u64, chunk_idx: u32, sum: f32) -> Vec<Completed> {
+        let Some(ps) = self.inflight.get_mut(&req_id) else {
+            debug_assert!(false, "partial for undeclared request {req_id}");
+            return Vec::new();
+        };
+        debug_assert!(ps.parts[chunk_idx as usize].is_none(), "duplicate chunk");
+        ps.parts[chunk_idx as usize] = Some(sum);
+        ps.received += 1;
+        if ps.received < ps.expected {
+            return Vec::new();
+        }
+        let ps = self.inflight.remove(&req_id).unwrap();
+        // Combine partials in chunk order, pairwise tree for determinism
+        // (matches the kernel's association discipline).
+        let mut level: Vec<f32> = ps.parts.into_iter().map(|p| p.unwrap()).collect();
+        while level.len() > 1 {
+            level = level
+                .chunks(2)
+                .map(|c| if c.len() == 2 { c[0] + c[1] } else { c[0] })
+                .collect();
+        }
+        let total = level[0];
+
+        if !self.ordered {
+            return vec![Completed { req_id, sum: total }];
+        }
+        self.held.insert(req_id, total);
+        let mut out = Vec::new();
+        while let Some(sum) = self.held.remove(&self.next_to_deliver) {
+            out.push(Completed { req_id: self.next_to_deliver, sum });
+            self.next_to_deliver += 1;
+        }
+        out
+    }
+
+    /// Requests still in flight (undelivered or incomplete).
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len() + self.held.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_chunk_completes_immediately() {
+        let mut a = Assembler::new(true);
+        a.expect(0, 1);
+        let out = a.add_partial(0, 0, 5.0);
+        assert_eq!(out, vec![Completed { req_id: 0, sum: 5.0 }]);
+    }
+
+    #[test]
+    fn multi_chunk_combines_in_order() {
+        let mut a = Assembler::new(false);
+        a.expect(0, 3);
+        assert!(a.add_partial(0, 2, 3.0).is_empty());
+        assert!(a.add_partial(0, 0, 1.0).is_empty());
+        let out = a.add_partial(0, 1, 2.0);
+        // tree: (1+2)+3
+        assert_eq!(out, vec![Completed { req_id: 0, sum: 6.0 }]);
+    }
+
+    #[test]
+    fn ordered_mode_holds_later_results() {
+        let mut a = Assembler::new(true);
+        a.expect(0, 1);
+        a.expect(1, 1);
+        a.expect(2, 1);
+        // id 1 and 2 finish before id 0
+        assert!(a.add_partial(1, 0, 10.0).is_empty());
+        assert!(a.add_partial(2, 0, 20.0).is_empty());
+        let out = a.add_partial(0, 0, 5.0);
+        assert_eq!(
+            out,
+            vec![
+                Completed { req_id: 0, sum: 5.0 },
+                Completed { req_id: 1, sum: 10.0 },
+                Completed { req_id: 2, sum: 20.0 },
+            ]
+        );
+        assert_eq!(a.outstanding(), 0);
+    }
+
+    #[test]
+    fn unordered_mode_delivers_immediately() {
+        let mut a = Assembler::new(false);
+        a.expect(0, 1);
+        a.expect(1, 1);
+        let out = a.add_partial(1, 0, 10.0);
+        assert_eq!(out, vec![Completed { req_id: 1, sum: 10.0 }]);
+    }
+
+    #[test]
+    fn association_is_deterministic() {
+        // Same partials in any arrival order must combine identically.
+        let parts = [0.1f32, 0.2, 0.3, 0.4, 0.5];
+        let mut orders = vec![vec![0u32, 1, 2, 3, 4], vec![4, 3, 2, 1, 0], vec![2, 0, 4, 1, 3]];
+        let mut sums = Vec::new();
+        for order in orders.drain(..) {
+            let mut a = Assembler::new(false);
+            a.expect(0, 5);
+            let mut got = None;
+            for idx in order {
+                let out = a.add_partial(0, idx, parts[idx as usize]);
+                if !out.is_empty() {
+                    got = Some(out[0].sum);
+                }
+            }
+            sums.push(got.unwrap().to_bits());
+        }
+        assert!(sums.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,181 @@
+//! Dynamic batcher: variable-length sets → fixed-shape padded batches.
+//!
+//! The AOT artifacts have static shapes `[B, N]`; requests are
+//! variable-length (the paper's core workload property). The batcher
+//! chunks long sets into N-sized rows, packs rows from multiple in-flight
+//! sets into one batch (the software analogue of the PIS juggling multiple
+//! labels through one adder), and flushes on batch-full or deadline.
+
+use std::time::{Duration, Instant};
+
+/// One row of work: chunk `chunk_idx` of request `req_id`.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub req_id: u64,
+    pub chunk_idx: u32,
+    /// Values, length ≤ N.
+    pub values: Vec<f32>,
+}
+
+/// A padded batch ready for the engine.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Row-major [B, N], zero-padded.
+    pub x: Vec<f32>,
+    pub lengths: Vec<i32>,
+    /// (req_id, chunk_idx) per occupied row.
+    pub rows: Vec<(u64, u32)>,
+}
+
+/// Splits a request into rows and accumulates rows into batches.
+#[derive(Debug)]
+pub struct Batcher {
+    batch: usize,
+    n: usize,
+    pending: Vec<Row>,
+    oldest: Option<Instant>,
+    deadline: Duration,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, n: usize, deadline: Duration) -> Self {
+        assert!(batch >= 1 && n >= 1);
+        Self { batch, n, pending: Vec::new(), oldest: None, deadline }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.batch, self.n)
+    }
+
+    /// Split a set into N-sized chunks. Returns the number of chunks.
+    pub fn chunks_for(&self, len: usize) -> u32 {
+        (len.max(1)).div_ceil(self.n) as u32
+    }
+
+    /// Add a whole request; returns any batches that became full.
+    pub fn add_request(&mut self, req_id: u64, values: &[f32]) -> Vec<Batch> {
+        let mut out = Vec::new();
+        if values.is_empty() {
+            // Empty set: a single zero-length row keeps the bookkeeping
+            // uniform (sum = 0).
+            out.extend(self.push_row(Row { req_id, chunk_idx: 0, values: Vec::new() }));
+            return out;
+        }
+        for (i, chunk) in values.chunks(self.n).enumerate() {
+            out.extend(self.push_row(Row {
+                req_id,
+                chunk_idx: i as u32,
+                values: chunk.to_vec(),
+            }));
+        }
+        out
+    }
+
+    fn push_row(&mut self, row: Row) -> Option<Batch> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(row);
+        if self.pending.len() >= self.batch {
+            Some(self.flush().expect("pending non-empty"))
+        } else {
+            None
+        }
+    }
+
+    /// Deadline-triggered flush (call from the batcher loop's tick).
+    pub fn poll_deadline(&mut self) -> Option<Batch> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.deadline && !self.pending.is_empty() => self.flush(),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush of whatever is pending.
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let rows: Vec<Row> = std::mem::take(&mut self.pending);
+        self.oldest = None;
+        let mut x = vec![0.0f32; self.batch * self.n];
+        let mut lengths = vec![0i32; self.batch];
+        let mut ids = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            x[i * self.n..i * self.n + row.values.len()].copy_from_slice(&row.values);
+            lengths[i] = row.values.len() as i32;
+            ids.push((row.req_id, row.chunk_idx));
+        }
+        Some(Batch { x, lengths, rows: ids })
+    }
+
+    pub fn pending_rows(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(4, 8, Duration::from_millis(5))
+    }
+
+    #[test]
+    fn short_sets_pack_into_one_batch() {
+        let mut b = batcher();
+        assert!(b.add_request(0, &[1.0; 3]).is_empty());
+        assert!(b.add_request(1, &[2.0; 8]).is_empty());
+        assert!(b.add_request(2, &[3.0; 1]).is_empty());
+        let batches = b.add_request(3, &[4.0; 5]);
+        assert_eq!(batches.len(), 1);
+        let batch = &batches[0];
+        assert_eq!(batch.rows.len(), 4);
+        assert_eq!(batch.lengths, vec![3, 8, 1, 5]);
+        // padding is zero
+        assert_eq!(batch.x[3], 0.0);
+        assert_eq!(batch.x[8], 2.0); // row 1 starts at 8
+    }
+
+    #[test]
+    fn long_set_chunks_across_rows() {
+        let mut b = batcher();
+        let vals: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let batches = b.add_request(7, &vals);
+        // 20 values / N=8 -> 3 rows; batch not yet full (3 < 4).
+        assert!(batches.is_empty());
+        assert_eq!(b.pending_rows(), 3);
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.rows, vec![(7, 0), (7, 1), (7, 2)]);
+        assert_eq!(batch.lengths, vec![8, 8, 4, 0]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut b = Batcher::new(4, 8, Duration::from_millis(0));
+        b.add_request(0, &[1.0]);
+        std::thread::sleep(Duration::from_millis(1));
+        let batch = b.poll_deadline().expect("deadline elapsed");
+        assert_eq!(batch.rows.len(), 1);
+        assert!(b.poll_deadline().is_none(), "nothing pending anymore");
+    }
+
+    #[test]
+    fn empty_set_gets_zero_length_row() {
+        let mut b = batcher();
+        b.add_request(9, &[]);
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.rows, vec![(9, 0)]);
+        assert_eq!(batch.lengths[0], 0);
+    }
+
+    #[test]
+    fn chunk_count() {
+        let b = batcher();
+        assert_eq!(b.chunks_for(0), 1);
+        assert_eq!(b.chunks_for(8), 1);
+        assert_eq!(b.chunks_for(9), 2);
+        assert_eq!(b.chunks_for(64), 8);
+    }
+}

@@ -1,0 +1,104 @@
+//! Service metrics: latency histogram + throughput counters.
+
+use crate::util::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics, updated by the pipeline threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of per-batch occupancy (valid rows), for fill-ratio reporting.
+    pub batched_rows: AtomicU64,
+    pub values_reduced: AtomicU64,
+    /// Nanoseconds spent inside the engine (PJRT execute / native kernel),
+    /// to separate compute from pipeline overhead in reports.
+    pub engine_ns: AtomicU64,
+    latency_us: Mutex<Histogram>,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub values_reduced: u64,
+    pub engine_ns: u64,
+    pub latency_us: Histogram,
+}
+
+impl Metrics {
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency_us.lock().unwrap().record(us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_rows: self.batched_rows.load(Ordering::Relaxed),
+            values_reduced: self.values_reduced.load(Ordering::Relaxed),
+            engine_ns: self.engine_ns.load(Ordering::Relaxed),
+            latency_us: self.latency_us.lock().unwrap().clone(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Average rows per batch (batch-fill efficiency of the batcher).
+    pub fn batch_fill(&self, batch_capacity: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_rows as f64 / (self.batches as f64 * batch_capacity as f64)
+    }
+
+    pub fn report(&self, wall: std::time::Duration, batch_capacity: usize) -> String {
+        let secs = wall.as_secs_f64().max(1e-9);
+        let engine_us_per_batch = if self.batches == 0 {
+            0.0
+        } else {
+            self.engine_ns as f64 / 1e3 / self.batches as f64
+        };
+        format!(
+            "sets: {} submitted, {} completed | {:.0} sets/s, {:.2} Mvalues/s | \
+             batches: {} (fill {:.0}%, engine {:.0}us/batch) | latency: {}",
+            self.submitted,
+            self.completed,
+            self.completed as f64 / secs,
+            self.values_reduced as f64 / secs / 1e6,
+            self.batches,
+            100.0 * self.batch_fill(batch_capacity),
+            engine_us_per_batch,
+            self.latency_us.summary("us"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = Metrics::default();
+        m.submitted.store(5, Ordering::Relaxed);
+        m.record_latency_us(100);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.latency_us.count(), 1);
+    }
+
+    #[test]
+    fn batch_fill_ratio() {
+        let m = Metrics::default();
+        m.batches.store(10, Ordering::Relaxed);
+        m.batched_rows.store(60, Ordering::Relaxed);
+        assert!((m.snapshot().batch_fill(8) - 0.75).abs() < 1e-12);
+    }
+}

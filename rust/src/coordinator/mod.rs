@@ -1,0 +1,419 @@
+//! L3 coordinator: a streaming accumulation service.
+//!
+//! The paper's contribution is a scheduler that keeps one expensive
+//! pipelined functional unit saturated across many variable-length sets,
+//! holding per-set state in a handful of label-indexed registers and
+//! delivering results in input order. This module applies the same idea at
+//! software-system scale:
+//!
+//! ```text
+//!  clients ── submit(set) ──► [bounded queue]          (backpressure)
+//!     ▲                            │ batcher thread: chunk + pack + pad
+//!     │                            ▼
+//!     │                       [batch queue]
+//!     │                            │ engine thread: the one expensive
+//!     │                            ▼ unit — PJRT executable (or native)
+//!     │                      [partials queue]
+//!     │                            │ assembler thread: software PIS +
+//!     └──── recv() ◄───────────────┘ ordered delivery
+//! ```
+//!
+//! The PJRT executable plays the FP adder IP; the batcher plays state 1
+//! (filling the unit's issue slots); the [`assembler::Assembler`] plays
+//! the PIS (label-indexed partial state, pair-combining, input-order
+//! output); bounded channels play the no-pileup/real-time constraint.
+
+pub mod assembler;
+pub mod batcher;
+pub mod metrics;
+
+pub use assembler::{Assembler, Completed};
+pub use batcher::{Batch, Batcher, Row};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which compute engine the service drives.
+#[derive(Clone, Debug)]
+pub enum EngineKind {
+    /// AOT XLA artifact via PJRT (the production path). Artifact chosen by
+    /// name; must be a `reduce` variant.
+    Xla { artifacts_dir: std::path::PathBuf, artifact: String },
+    /// Native scalar tree-reduction in rust (baseline / fallback); shape
+    /// (batch, n) mirrors an artifact so comparisons are like-for-like.
+    Native { batch: usize, n: usize },
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub engine: EngineKind,
+    /// Max time a partial batch waits before flushing.
+    pub batch_deadline: Duration,
+    /// Deliver results in submission order (paper §IV-D).
+    pub ordered: bool,
+    /// Bounded queue depth (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineKind::Xla {
+                artifacts_dir: crate::runtime::default_artifacts_dir(),
+                artifact: "reduce_f32_b32_n128".to_string(),
+            },
+            batch_deadline: Duration::from_micros(200),
+            ordered: true,
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// A completed reduction delivered to the client.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    pub req_id: u64,
+    pub sum: f32,
+    pub latency: Duration,
+}
+
+struct SubmitMsg {
+    req_id: u64,
+    values: Vec<f32>,
+    at: Instant,
+}
+
+/// The running service (threads + channels).
+pub struct Service {
+    tx: Option<SyncSender<Vec<SubmitMsg>>>,
+    rx_out: Receiver<Vec<Response>>,
+    /// Responses received but not yet handed to the caller (bursts are
+    /// delivered whole; `recv_timeout` pops one at a time).
+    rx_buf: std::cell::RefCell<std::collections::VecDeque<Response>>,
+    next_id: u64,
+    metrics: Arc<Metrics>,
+    batch_capacity: usize,
+    started: Instant,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the pipeline threads.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+
+        // Resolve the engine's shape up front (Xla: read the manifest).
+        let (batch, n) = match &cfg.engine {
+            EngineKind::Xla { artifacts_dir, artifact } => {
+                let specs = crate::runtime::read_manifest(artifacts_dir)?;
+                let spec = specs
+                    .iter()
+                    .find(|s| &s.name == artifact)
+                    .with_context(|| format!("artifact {artifact:?} not in manifest"))?;
+                (spec.batch, spec.n)
+            }
+            EngineKind::Native { batch, n } => (*batch, *n),
+        };
+
+        // Channels carry BURSTS (Vec of messages): on a single-core box a
+        // parked peer is woken per channel send, and that futex handoff —
+        // not the PJRT execute — dominated the serve path (measured ~300us
+        // per message vs ~50us per engine batch, EXPERIMENTS.md §Perf).
+        // One wake per burst amortizes it away.
+        let (tx_in, rx_in) = sync_channel::<Vec<SubmitMsg>>(cfg.queue_depth);
+        // Responses are UNBOUNDED on purpose: backpressure is applied at
+        // the submit side only. A bounded response channel would deadlock
+        // a submit-all-then-receive client (worker blocks on send → submit
+        // blocks). Memory stays bounded by in-flight sets.
+        let (tx_out, rx_out) = channel::<Vec<Response>>();
+
+        let mut handles = Vec::new();
+
+        // ---- worker thread: batcher + engine + software PIS, fused ----
+        //
+        // The three stages are sequential per batch, so splitting them
+        // across threads only pays when extra cores exist; on small boxes
+        // (this image has 1 CPU) the cross-thread hops cost ~10x the
+        // PJRT execute itself (measured in EXPERIMENTS.md §Perf). One
+        // thread owns everything — which the `xla` crate wants anyway,
+        // since its PJRT wrappers are not Send.
+        let engine = cfg.engine.clone();
+        let deadline = cfg.batch_deadline;
+        let ordered = cfg.ordered;
+        let m = Arc::clone(&metrics);
+        // Readiness handshake: PJRT client creation + artifact compilation
+        // take hundreds of ms; `start` must not return (and clients must
+        // not start latency clocks) until the engine is warm.
+        let (tx_ready, rx_ready) = sync_channel::<std::result::Result<(), String>>(1);
+        handles.push(std::thread::Builder::new().name("acc-worker".into()).spawn(move || {
+            let runtime = match &engine {
+                EngineKind::Xla { artifacts_dir, .. } => match Runtime::load(artifacts_dir) {
+                    Ok(r) => Some(r),
+                    Err(e) => {
+                        let _ = tx_ready.send(Err(format!("loading runtime: {e:#}")));
+                        return;
+                    }
+                },
+                EngineKind::Native { .. } => None,
+            };
+            let model = match (&engine, &runtime) {
+                (EngineKind::Xla { artifact, .. }, Some(rt)) => match rt.model(artifact) {
+                    Ok(mdl) => Some(mdl),
+                    Err(e) => {
+                        let _ = tx_ready.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                },
+                _ => None,
+            };
+            if tx_ready.send(Ok(())).is_err() {
+                return;
+            }
+
+            let mut b = Batcher::new(batch, n, deadline);
+            let mut asm = Assembler::new(ordered);
+            let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
+
+            // Execute one batch and deliver everything it completes.
+            let run_batch = |batch: Batch,
+                                 asm: &mut Assembler,
+                                 birth: &mut std::collections::HashMap<u64, Instant>|
+             -> bool {
+                m.batches.fetch_add(1, Ordering::Relaxed);
+                m.batched_rows.fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
+                let t_exec = Instant::now();
+                let sums: Vec<f32> = match &model {
+                    Some(mdl) => match mdl.run(&batch.x, &batch.lengths) {
+                        Ok(r) => r.sums,
+                        Err(e) => {
+                            eprintln!("worker: execute failed: {e:#}");
+                            return false;
+                        }
+                    },
+                    None => native_reduce(&batch.x, &batch.lengths, n),
+                };
+                m.engine_ns.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let mut burst = Vec::new();
+                for (i, &(req_id, chunk_idx)) in batch.rows.iter().enumerate() {
+                    m.values_reduced.fetch_add(batch.lengths[i] as u64, Ordering::Relaxed);
+                    for done in asm.add_partial(req_id, chunk_idx, sums[i]) {
+                        let at = birth.remove(&done.req_id);
+                        let latency = at.map(|t| t.elapsed()).unwrap_or_default();
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.record_latency_us(latency.as_micros() as u64);
+                        burst.push(Response { req_id: done.req_id, sum: done.sum, latency });
+                    }
+                }
+                if !burst.is_empty() && tx_out.send(burst).is_err() {
+                    return false;
+                }
+                true
+            };
+
+            loop {
+                match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
+                    Ok(burst) => {
+                        for msg in burst {
+                            asm.expect(msg.req_id, b.chunks_for(msg.values.len()));
+                            birth.insert(msg.req_id, msg.at);
+                            for full in b.add_request(msg.req_id, &msg.values) {
+                                if !run_batch(full, &mut asm, &mut birth) {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if let Some(partial) = b.poll_deadline() {
+                            if !run_batch(partial, &mut asm, &mut birth) {
+                                return;
+                            }
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if let Some(rest) = b.flush() {
+                            run_batch(rest, &mut asm, &mut birth);
+                        }
+                        return;
+                    }
+                }
+            }
+        })?);
+
+        // Wait for the worker's engine to come up (or fail fast).
+        match rx_ready.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
+            Err(_) => anyhow::bail!("worker thread died during startup"),
+        }
+
+        Ok(Self {
+            tx: Some(tx_in),
+            rx_out,
+            rx_buf: Default::default(),
+            next_id: 0,
+            metrics,
+            batch_capacity: batch,
+            started: Instant::now(),
+            handles,
+        })
+    }
+
+    /// Submit a set for reduction; blocks when the queue is full
+    /// (backpressure). Returns the request id.
+    pub fn submit(&mut self, values: Vec<f32>) -> Result<u64> {
+        Ok(self.submit_burst(vec![values])?[0])
+    }
+
+    /// Submit many sets with a single channel operation — the preferred
+    /// path for high-throughput clients (one consumer wake per burst
+    /// instead of per set). Returns the request ids, in order.
+    pub fn submit_burst(&mut self, sets: Vec<Vec<f32>>) -> Result<Vec<u64>> {
+        let now = Instant::now();
+        let mut ids = Vec::with_capacity(sets.len());
+        let burst: Vec<SubmitMsg> = sets
+            .into_iter()
+            .map(|values| {
+                let id = self.next_id;
+                self.next_id += 1;
+                ids.push(id);
+                SubmitMsg { req_id: id, values, at: now }
+            })
+            .collect();
+        self.metrics.submitted.fetch_add(ids.len() as u64, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .context("service shut down")?
+            .send(burst)
+            .context("service pipeline closed")?;
+        Ok(ids)
+    }
+
+    /// Receive the next completed reduction (blocking with timeout).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        let mut buf = self.rx_buf.borrow_mut();
+        if let Some(r) = buf.pop_front() {
+            return Some(r);
+        }
+        match self.rx_out.recv_timeout(timeout) {
+            Ok(burst) => {
+                buf.extend(burst);
+                buf.pop_front()
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_capacity
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Stop accepting work, wait for the pipeline to drain, join threads,
+    /// and return the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx = None; // closes the input channel; threads cascade out
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+/// Scalar fallback engine: same masked pairwise-tree semantics as the
+/// kernel (bit-compatible for fair comparison).
+pub fn native_reduce(x: &[f32], lengths: &[i32], n: usize) -> Vec<f32> {
+    lengths
+        .iter()
+        .enumerate()
+        .map(|(row, &len)| {
+            let base = row * n;
+            let mut level: Vec<f32> = (0..n)
+                .map(|i| if (i as i32) < len { x[base + i] } else { 0.0 })
+                .collect();
+            while level.len() > 1 {
+                level = level.chunks(2).map(|c| c[0] + c[1]).collect();
+            }
+            level[0]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_reduce_matches_sum_on_exact_values() {
+        let n = 8;
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let lengths = vec![8, 3];
+        let sums = native_reduce(&x, &lengths, n);
+        assert_eq!(sums, vec![28.0, 8.0 + 9.0 + 10.0]);
+    }
+
+    #[test]
+    fn native_service_end_to_end() {
+        let mut svc = Service::start(ServiceConfig {
+            engine: EngineKind::Native { batch: 4, n: 16 },
+            batch_deadline: Duration::from_micros(100),
+            ordered: true,
+            queue_depth: 64,
+        })
+        .unwrap();
+        let mut want = Vec::new();
+        for k in 0..20u64 {
+            let set: Vec<f32> = (0..(k as usize % 40 + 1)).map(|i| (i + 1) as f32).collect();
+            want.push(set.iter().sum::<f32>());
+            svc.submit(set).unwrap();
+        }
+        let mut got = Vec::new();
+        while got.len() < 20 {
+            let r = svc.recv_timeout(Duration::from_secs(5)).expect("timely responses");
+            got.push(r);
+        }
+        // ordered delivery
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.req_id, i as u64);
+            assert_eq!(r.sum, want[i], "req {i}");
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 20);
+        assert_eq!(m.submitted, 20);
+    }
+
+    #[test]
+    fn unordered_native_service_completes_all() {
+        let mut svc = Service::start(ServiceConfig {
+            engine: EngineKind::Native { batch: 2, n: 8 },
+            batch_deadline: Duration::from_micros(50),
+            ordered: false,
+            queue_depth: 16,
+        })
+        .unwrap();
+        for _ in 0..10 {
+            svc.submit(vec![1.0, 2.0, 3.0]).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let r = svc.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.sum, 6.0);
+            seen.insert(r.req_id);
+        }
+        assert_eq!(seen.len(), 10);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,168 @@
+//! Synchronous fixed-capacity FIFO — the PIS's 4-slot pair queue.
+//!
+//! Models a registered FWFT (first-word-fall-through) FIFO: `dout()` shows
+//! the head combinationally; `push`/`pop` are staged and commit on `tick`,
+//! like write-enable/read-enable signals sampled at the clock edge.
+
+use super::Clocked;
+
+#[derive(Clone, Debug)]
+pub struct SyncFifo<T: Clone> {
+    slots: std::collections::VecDeque<T>,
+    capacity: usize,
+    staged_push: Option<T>,
+    staged_pop: bool,
+    /// Sticky flag: a push was attempted while full (a design-violation
+    /// detector; JugglePAC's minimum-set-size restriction guarantees this
+    /// never fires in legal operation).
+    pub overflowed: bool,
+    /// High-water mark of occupancy, for sizing studies.
+    pub high_water: usize,
+}
+
+impl<T: Clone> SyncFifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            slots: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            staged_push: None,
+            staged_pop: false,
+            overflowed: false,
+            high_water: 0,
+        }
+    }
+
+    /// Registered occupancy (as of the last tick).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.slots.len() == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Head element (combinational `dout`), if any.
+    pub fn dout(&self) -> Option<&T> {
+        self.slots.front()
+    }
+
+    /// Stage a write for this cycle (write-enable).
+    pub fn push(&mut self, v: T) {
+        self.staged_push = Some(v);
+    }
+
+    /// Stage a read for this cycle (read-enable): the head advances at tick.
+    pub fn pop(&mut self) {
+        self.staged_pop = true;
+    }
+}
+
+impl<T: Clone> Clocked for SyncFifo<T> {
+    fn tick(&mut self) {
+        if self.staged_pop {
+            self.slots.pop_front();
+            self.staged_pop = false;
+        }
+        if let Some(v) = self.staged_push.take() {
+            if self.slots.len() < self.capacity {
+                self.slots.push_back(v);
+            } else {
+                self.overflowed = true;
+            }
+        }
+        self.high_water = self.high_water.max(self.slots.len());
+    }
+
+    fn reset(&mut self) {
+        self.slots.clear();
+        self.staged_push = None;
+        self.staged_pop = false;
+        self.overflowed = false;
+        self.high_water = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_fifo_order() {
+        let mut f = SyncFifo::<u32>::new(4);
+        for i in 1..=3 {
+            f.push(i);
+            f.tick();
+        }
+        assert_eq!(f.len(), 3);
+        let mut out = Vec::new();
+        while let Some(&h) = f.dout() {
+            out.push(h);
+            f.pop();
+            f.tick();
+        }
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn simultaneous_push_pop_keeps_occupancy() {
+        let mut f = SyncFifo::<u32>::new(2);
+        f.push(1);
+        f.tick();
+        f.push(2);
+        f.pop();
+        f.tick();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.dout(), Some(&2));
+    }
+
+    #[test]
+    fn overflow_sets_sticky_flag() {
+        let mut f = SyncFifo::<u8>::new(1);
+        f.push(1);
+        f.tick();
+        assert!(!f.overflowed);
+        f.push(2);
+        f.tick();
+        assert!(f.overflowed);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.dout(), Some(&1));
+    }
+
+    #[test]
+    fn pop_then_push_same_cycle_when_full() {
+        // pop+push in one cycle on a full FIFO must succeed (read commits
+        // before write, like RTL with read-before-write ordering).
+        let mut f = SyncFifo::<u8>::new(1);
+        f.push(7);
+        f.tick();
+        f.pop();
+        f.push(8);
+        f.tick();
+        assert!(!f.overflowed);
+        assert_eq!(f.dout(), Some(&8));
+    }
+
+    #[test]
+    fn high_water_tracks_max() {
+        let mut f = SyncFifo::<u8>::new(4);
+        for i in 0..3 {
+            f.push(i);
+            f.tick();
+        }
+        for _ in 0..3 {
+            f.pop();
+            f.tick();
+        }
+        assert_eq!(f.high_water, 3);
+        assert!(f.is_empty());
+    }
+}

@@ -1,0 +1,62 @@
+//! Cycle-accurate simulation kernel.
+//!
+//! Small, allocation-light primitives shared by all circuit models:
+//! registered components with two-phase (compute/commit) semantics, a
+//! hardware-shaped shift register and synchronous FIFO, and a trace sink
+//! that the Table-I golden test and the `trace` CLI subcommand consume.
+//!
+//! The discipline mirrors RTL: during a cycle every component reads only
+//! *registered* state (the values committed at the previous clock edge),
+//! then all updates commit together via [`Clocked::tick`].
+
+mod fifo;
+mod shift_register;
+mod trace;
+
+pub use fifo::SyncFifo;
+pub use shift_register::ShiftRegister;
+pub use trace::{Trace, TraceEvent};
+
+/// A clocked component: `tick` is the rising clock edge, committing the
+/// next-state computed by the component's own combinational methods.
+pub trait Clocked {
+    fn tick(&mut self);
+    /// Synchronous reset to the power-on state.
+    fn reset(&mut self);
+}
+
+/// Running statistics for a simulation.
+#[derive(Clone, Debug, Default)]
+pub struct CycleStats {
+    /// Total clock cycles simulated.
+    pub cycles: u64,
+    /// Cycles where the (single) functional unit accepted new operands.
+    pub op_issues: u64,
+    /// Cycles where an input value was consumed.
+    pub inputs_consumed: u64,
+    /// Results produced.
+    pub outputs_produced: u64,
+}
+
+impl CycleStats {
+    /// Utilization of the functional unit (issues per cycle).
+    pub fn op_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.op_issues as f64 / self.cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_utilization() {
+        let s = CycleStats { cycles: 100, op_issues: 50, ..Default::default() };
+        assert!((s.op_utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(CycleStats::default().op_utilization(), 0.0);
+    }
+}

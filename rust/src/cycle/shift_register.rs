@@ -1,0 +1,111 @@
+//! A depth-`L` shift register, the label/`inEn` side-channel of Fig. 3.
+//!
+//! JugglePAC runs the (label, inEn) pair through a shift register whose
+//! depth equals the FP adder latency so that each adder result emerges
+//! together with the label of the set it belongs to.
+
+use super::Clocked;
+
+/// Fixed-depth shift register over `T`. `input` is staged combinationally
+/// and committed on [`Clocked::tick`]; `output()` reads the oldest element
+/// (registered, i.e. what was pushed `depth` ticks ago).
+#[derive(Clone, Debug)]
+pub struct ShiftRegister<T: Clone + Default> {
+    slots: Vec<T>,
+    staged: T,
+}
+
+impl<T: Clone + Default> ShiftRegister<T> {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "shift register needs depth >= 1");
+        Self { slots: vec![T::default(); depth], staged: T::default() }
+    }
+
+    /// Stage the value entering at this clock edge (combinational input).
+    /// If not called before `tick`, a default ("bubble") enters instead.
+    pub fn push(&mut self, v: T) {
+        self.staged = v;
+    }
+
+    /// The value exiting the register this cycle (registered output).
+    pub fn output(&self) -> &T {
+        &self.slots[self.slots.len() - 1]
+    }
+
+    /// Depth in stages.
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Inspect an intermediate stage (0 = newest). Test/debug aid.
+    pub fn stage(&self, i: usize) -> &T {
+        &self.slots[i]
+    }
+}
+
+impl<T: Clone + Default> Clocked for ShiftRegister<T> {
+    fn tick(&mut self) {
+        for i in (1..self.slots.len()).rev() {
+            self.slots[i] = self.slots[i - 1].clone();
+        }
+        self.slots[0] = std::mem::take(&mut self.staged);
+    }
+
+    fn reset(&mut self) {
+        for s in &mut self.slots {
+            *s = T::default();
+        }
+        self.staged = T::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_by_depth() {
+        let mut sr = ShiftRegister::<u32>::new(3);
+        let mut outs = Vec::new();
+        for i in 1..=6u32 {
+            sr.push(i);
+            sr.tick();
+            outs.push(*sr.output());
+        }
+        // pushed at tick t, visible at output after `depth` ticks
+        assert_eq!(outs, vec![0, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bubble_when_not_pushed() {
+        let mut sr = ShiftRegister::<u32>::new(2);
+        sr.push(9);
+        sr.tick(); // 9 enters
+        sr.tick(); // bubble enters
+        assert_eq!(*sr.output(), 9);
+        sr.tick();
+        assert_eq!(*sr.output(), 0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut sr = ShiftRegister::<u8>::new(4);
+        for i in 0..4 {
+            sr.push(i + 1);
+            sr.tick();
+        }
+        sr.reset();
+        for _ in 0..4 {
+            assert_eq!(*sr.output(), 0);
+            sr.tick();
+        }
+    }
+
+    #[test]
+    fn depth_one_is_a_register() {
+        let mut sr = ShiftRegister::<u64>::new(1);
+        sr.push(5);
+        sr.tick();
+        assert_eq!(*sr.output(), 5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Cycle trace recording — feeds the Table-I golden test and `trace` CLI.
+
+/// One row of a schedule trace, mirroring the columns of the paper's
+/// Table I ("SCHEDULING"). Fields are symbolic names rather than values so
+/// the golden test can compare against the published table directly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    /// Input symbol consumed this cycle (e.g. "a0"), if any.
+    pub input: Option<String>,
+    /// Start-of-set marker accompanying the input.
+    pub start: bool,
+    /// Operands issued to the adder this cycle.
+    pub adder_in: Option<(String, String)>,
+    /// Result leaving the adder this cycle (with its label).
+    pub adder_out: Option<(String, u64)>,
+    /// PIS register contents after this cycle (symbol per register).
+    pub regs: Vec<Option<String>>,
+    /// Pair pushed into the FIFO this cycle: (left, right, label).
+    pub fifo_in: Option<(String, String, u64)>,
+    /// Final output produced this cycle.
+    pub out: Option<String>,
+}
+
+/// An append-only trace sink. Kept deliberately simple: the hot paths only
+/// pay for tracing when a sink is attached.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Render as an aligned text table (the `trace` CLI output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let nregs = self.events.iter().map(|e| e.regs.len()).max().unwrap_or(0);
+        s.push_str("cycle | input    |S| adder in            | adder out    |lbl|");
+        for i in 0..nregs {
+            s.push_str(&format!(" reg{:<8}|", i + 1));
+        }
+        s.push_str(" fifo in                  | out\n");
+        for e in &self.events {
+            let inp = e.input.clone().unwrap_or_default();
+            let start = if e.start { "1" } else { " " };
+            let ain = e
+                .adder_in
+                .as_ref()
+                .map(|(a, b)| format!("{a}, {b}"))
+                .unwrap_or_default();
+            let (aout, lbl) = e
+                .adder_out
+                .as_ref()
+                .map(|(v, l)| (v.clone(), l.to_string()))
+                .unwrap_or_default();
+            s.push_str(&format!(
+                "{:5} | {:8} |{}| {:19} | {:12} |{:3}|",
+                e.cycle, inp, start, ain, aout, lbl
+            ));
+            for i in 0..nregs {
+                let r = e.regs.get(i).and_then(|r| r.clone()).unwrap_or_default();
+                s.push_str(&format!(" {:11}|", r));
+            }
+            let fin = e
+                .fifo_in
+                .as_ref()
+                .map(|(a, b, l)| format!("{a}, {b}, {l}"))
+                .unwrap_or_default();
+            s.push_str(&format!(" {:24} | {}\n", fin, e.out.clone().unwrap_or_default()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_rows() {
+        let mut t = Trace::new();
+        t.record(TraceEvent {
+            cycle: 0,
+            input: Some("a0".into()),
+            start: true,
+            regs: vec![None, None],
+            ..Default::default()
+        });
+        t.record(TraceEvent {
+            cycle: 1,
+            input: Some("a1".into()),
+            adder_in: Some(("a0".into(), "a1".into())),
+            regs: vec![Some("x".into()), None],
+            ..Default::default()
+        });
+        let r = t.render();
+        assert!(r.contains("a0"));
+        assert!(r.contains("a0, a1"));
+        assert_eq!(r.lines().count(), 3);
+    }
+}

@@ -1,0 +1,544 @@
+//! Bit-accurate IEEE-754 addition and multiplication (round-to-nearest-even).
+//!
+//! This module plays the role of the vendor FP adder/multiplier IP the paper
+//! instantiates: a combinational-datapath model whose *values* are exactly
+//! IEEE-754 and whose *timing* is supplied by [`super::pipeline`]. It is
+//! written from scratch over raw bit patterns so the simulator can run any
+//! format (F16/BF16/F32/F64) through the identical datapath, and so tests can
+//! cross-check it against the host FPU (which is also IEEE RNE).
+//!
+//! Semantics notes (matching typical FPGA FP cores and the host FPU):
+//! - rounding mode: round-to-nearest, ties-to-even (the only mode the paper's
+//!   IP uses);
+//! - any NaN input (or invalid operation) produces the canonical quiet NaN;
+//! - exact zero results of effective subtraction are +0;
+//! - subnormals are fully supported (no flush-to-zero).
+
+use super::format::FpFormat;
+
+/// Internal: guard-bit headroom used when aligning addends. Three bits
+/// (guard/round/sticky) is the textbook minimum; we keep the full shifted
+/// tail when it fits in 128 bits and compress only the truly-below-range
+/// part into a sticky flag, which keeps the proof of correctness simple.
+#[inline]
+fn align_headroom(fmt: FpFormat) -> u32 {
+    fmt.man_bits + 3
+}
+
+/// Decompose into (effective biased exponent, significand with hidden bit).
+/// Subnormals get effective exponent 1 and no hidden bit, per IEEE.
+#[inline]
+fn effective(fmt: FpFormat, exp_field: u64, man: u64) -> (i64, u64) {
+    if exp_field == 0 {
+        (1, man)
+    } else {
+        (exp_field as i64, man | (1u64 << fmt.man_bits))
+    }
+}
+
+/// Round-and-pack helper.
+///
+/// The exact (or sticky-augmented) magnitude is `v * 2^(e_v - bias - man)`,
+/// i.e. `v` carries the significand with its hidden-bit position mapped to
+/// bit `man` when the biased exponent is `e_v`. `sticky` says bits strictly
+/// below `v`'s LSB were lost; `sub_lost` says those lost bits were
+/// *subtracted* (so the true value is slightly below `v`) rather than added.
+fn round_pack(fmt: FpFormat, sign: bool, v: u128, e_v: i64, sticky: bool, sub_lost: bool) -> u64 {
+    debug_assert!(v != 0 || sticky);
+    if v == 0 {
+        // Only reachable with sticky set: magnitude is a tiny positive value
+        // strictly below the smallest representable step at this anchor;
+        // it rounds to zero at any representable position.
+        return fmt.zero(sign);
+    }
+    let man = fmt.man_bits as i64;
+    let hb = 127 - v.leading_zeros() as i64; // index of MSB of v
+    let e_res = hb + e_v - man;
+
+    // Amount to shift v right so its MSB lands at bit `man` (normal), or to
+    // place it on the subnormal grid (stored exponent field 0, effective 1).
+    let sh: i64 = if e_res < 1 { 1 - e_v } else { hb - man };
+
+    let (mut q, rem, half): (u128, u128, u128) = if sh > 0 {
+        if sh >= 128 {
+            (0, if v != 0 { 1 } else { 0 }, 2) // pure sticky, rem<half
+        } else {
+            let mask = (1u128 << sh) - 1;
+            (v >> sh, v & mask, 1u128 << (sh - 1))
+        }
+    } else {
+        // Exact left shift: no bits lost, no rounding needed below.
+        ((v) << ((-sh) as u32), 0, 1)
+    };
+
+    // Round to nearest, ties to even, with the lost-tail (`sticky`) folded in.
+    let round_up = if !sticky {
+        rem > half || (rem == half && (q & 1) == 1)
+    } else if sub_lost {
+        // true value = q*2^sh + rem - f, 0 < f < 1:
+        //   rem == 0  -> borrows into q-1 with a near-full remainder -> q.
+        //   otherwise -> up iff rem > half (a tie cannot occur).
+        rem > half
+    } else {
+        // true value = q*2^sh + rem + f, 0 < f < 1: up iff rem >= half.
+        rem >= half
+    };
+    if round_up {
+        q += 1;
+    }
+
+    let hidden = 1u128 << fmt.man_bits;
+    let mut e_out = if e_res < 1 { 1 } else { e_res };
+    if q >= hidden << 1 {
+        // Rounding carried out (q was all-ones): renormalize. The shifted-out
+        // bit is zero because q is now a power of two.
+        q >>= 1;
+        e_out += 1;
+    }
+    if q < hidden {
+        // Subnormal (or zero after rounding a tiny sticky tail).
+        debug_assert!(e_out == 1);
+        return fmt.pack(sign, 0, q as u64);
+    }
+    if e_out >= fmt.exp_max() as i64 {
+        return fmt.inf(sign);
+    }
+    fmt.pack(sign, e_out as u64, (q as u64) & fmt.man_mask())
+}
+
+/// IEEE-754 addition on raw bit patterns, round-to-nearest-even.
+pub fn fp_add(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sb, eb, mb) = fmt.unpack(b);
+    let emax = fmt.exp_max();
+
+    // Specials.
+    if (ea == emax && ma != 0) || (eb == emax && mb != 0) {
+        return fmt.quiet_nan();
+    }
+    match (ea == emax, eb == emax) {
+        (true, true) => {
+            return if sa == sb { fmt.inf(sa) } else { fmt.quiet_nan() };
+        }
+        (true, false) => return fmt.inf(sa),
+        (false, true) => return fmt.inf(sb),
+        _ => {}
+    }
+    let a_zero = ea == 0 && ma == 0;
+    let b_zero = eb == 0 && mb == 0;
+    if a_zero && b_zero {
+        // +0 unless both are -0 (RNE).
+        return fmt.zero(sa && sb);
+    }
+    if a_zero {
+        return fmt.pack(sb, eb, mb);
+    }
+    if b_zero {
+        return fmt.pack(sa, ea, ma);
+    }
+
+    let (e1, s1) = effective(fmt, ea, ma);
+    let (e2, s2) = effective(fmt, eb, mb);
+
+    // Order so x is the larger-exponent operand.
+    let (ex, sx, sgx, ey, sy, sgy) =
+        if e1 >= e2 { (e1, s1, sa, e2, s2, sb) } else { (e2, s2, sb, e1, s1, sa) };
+
+    let hr = align_headroom(fmt); // headroom below x's LSB
+    let d = (ex - ey) as u128;
+    let x128 = (sx as u128) << hr;
+    // Align y below x, tracking any tail that falls off the 128-bit window.
+    let (y128, sticky) = {
+        let y_shifted = (sy as u128) << hr; // same anchor as x
+        if d == 0 {
+            (y_shifted, false)
+        } else if d < 128 {
+            let lost = y_shifted & ((1u128 << d) - 1) != 0;
+            (y_shifted >> d, lost)
+        } else {
+            (0u128, true)
+        }
+    };
+
+    let e_v = ex - hr as i64;
+    if sgx == sgy {
+        round_pack(fmt, sgx, x128 + y128, e_v, sticky, false)
+    } else {
+        // Effective subtraction. Compare the aligned magnitudes; the kept
+        // part decides except on exact equality of kept bits.
+        use std::cmp::Ordering;
+        match x128.cmp(&y128) {
+            Ordering::Equal => {
+                if sticky {
+                    // x == kept(y) but y had a lost tail, so |y| > |x|:
+                    // result is a tiny value with y's sign, equal to the
+                    // lost tail — strictly below half an ULP at the
+                    // subnormal grid only when the tail itself is. Recompute
+                    // exactly via the no-clamp path: the tail of y is
+                    // y*2^-d's fraction; since d >= 128 here is impossible
+                    // (y128 would be 0 < x128), d < 128 and we can get it.
+                    let y_full = (sy as u128) << hr;
+                    let tail = y_full & ((1u128 << d) - 1);
+                    return round_pack(fmt, sgy, tail, e_v - d as i64, false, false);
+                }
+                // Exact cancellation: +0 under RNE.
+                fmt.zero(false)
+            }
+            Ordering::Greater => round_pack(fmt, sgx, x128 - y128, e_v, sticky, sticky),
+            Ordering::Less => {
+                // Only possible when d == 0 (exact) — same anchor.
+                debug_assert!(!sticky);
+                round_pack(fmt, sgy, y128 - x128, e_v, false, false)
+            }
+        }
+    }
+}
+
+/// IEEE-754 subtraction: `a - b = a + (-b)`.
+pub fn fp_sub(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    fp_add(fmt, a, b ^ (1u64 << fmt.sign_shift()))
+}
+
+/// IEEE-754 multiplication on raw bit patterns, round-to-nearest-even.
+///
+/// JugglePAC's operator slot accepts "any multi-cycle operator (such as a FP
+/// multiplier)" — this provides that alternative operator for the reduction
+/// generalization tests.
+pub fn fp_mul(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    let (sa, ea, ma) = fmt.unpack(a);
+    let (sb, eb, mb) = fmt.unpack(b);
+    let emax = fmt.exp_max();
+    let sign = sa ^ sb;
+
+    if (ea == emax && ma != 0) || (eb == emax && mb != 0) {
+        return fmt.quiet_nan();
+    }
+    let a_inf = ea == emax;
+    let b_inf = eb == emax;
+    let a_zero = ea == 0 && ma == 0;
+    let b_zero = eb == 0 && mb == 0;
+    if a_inf || b_inf {
+        if a_zero || b_zero {
+            return fmt.quiet_nan(); // Inf * 0
+        }
+        return fmt.inf(sign);
+    }
+    if a_zero || b_zero {
+        return fmt.zero(sign);
+    }
+
+    let (e1, s1) = effective(fmt, ea, ma);
+    let (e2, s2) = effective(fmt, eb, mb);
+    let prod = (s1 as u128) * (s2 as u128); // exact, <= 2^106 for F64
+    // value = prod * 2^(e1 - bias - man) * 2^(e2 - bias - man)
+    //       = prod * 2^(e_v - bias - man)  with  e_v = e1 + e2 - bias - man.
+    let e_v = e1 + e2 - fmt.bias() - fmt.man_bits as i64;
+    round_pack(fmt, sign, prod, e_v, false, false)
+}
+
+/// IEEE-754-2019 `maximum` on raw bit patterns: NaN-propagating,
+/// +0 > -0. Fills JugglePAC's "any multi-cycle operator" slot with a
+/// comparator for max-reductions.
+pub fn fp_max(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    if fmt.is_nan(a) || fmt.is_nan(b) {
+        return fmt.quiet_nan();
+    }
+    // Map to totally-ordered integers: positive values keep their order
+    // with the sign bit set; negatives are bit-inverted.
+    let key = |bits: u64| -> u64 {
+        let bits = bits & fmt.value_mask();
+        if bits >> fmt.sign_shift() & 1 == 1 {
+            !bits & fmt.value_mask()
+        } else {
+            bits | (1u64 << fmt.sign_shift())
+        }
+    };
+    if key(a) >= key(b) {
+        a & fmt.value_mask()
+    } else {
+        b & fmt.value_mask()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::*;
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn check_add_f32(x: f32, y: f32) {
+        let got = fp_add(F32, f32_bits(x), f32_bits(y));
+        let want = x + y;
+        if want.is_nan() {
+            assert!(F32.is_nan(got), "add({x:?},{y:?}) want NaN got {got:#x}");
+        } else {
+            assert_eq!(
+                got,
+                f32_bits(want),
+                "add({x:?}={:#x}, {y:?}={:#x}) got {:#x}({}) want {:#x}({})",
+                f32_bits(x),
+                f32_bits(y),
+                got,
+                bits_f32(got),
+                f32_bits(want),
+                want
+            );
+        }
+    }
+
+    fn check_mul_f32(x: f32, y: f32) {
+        let got = fp_mul(F32, f32_bits(x), f32_bits(y));
+        let want = x * y;
+        if want.is_nan() {
+            assert!(F32.is_nan(got), "mul({x:?},{y:?}) want NaN got {got:#x}");
+        } else {
+            assert_eq!(got, f32_bits(want), "mul({x:?},{y:?})");
+        }
+    }
+
+    fn check_add_f64(x: f64, y: f64) {
+        let got = fp_add(F64, f64_bits(x), f64_bits(y));
+        let want = x + y;
+        if want.is_nan() {
+            assert!(F64.is_nan(got), "add({x:?},{y:?}) want NaN");
+        } else {
+            assert_eq!(got, f64_bits(want), "add({x:?},{y:?})");
+        }
+    }
+
+    const EDGE_F32: &[f32] = &[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        1.5,
+        2.0,
+        0.1,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        f32::MIN_POSITIVE / 2.0,  // subnormal
+        f32::MIN_POSITIVE / 4.0,  // subnormal
+        1.0e-45,                  // smallest subnormal
+        -1.0e-45,
+        f32::MAX,
+        -f32::MAX,
+        f32::MAX / 2.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        3.4028233e38,
+        1.1754942e-38, // largest subnormal
+        8388608.0,     // 2^23
+        16777216.0,    // 2^24
+        16777215.0,
+    ];
+
+    #[test]
+    fn add_f32_edge_cases() {
+        for &x in EDGE_F32 {
+            for &y in EDGE_F32 {
+                check_add_f32(x, y);
+                check_mul_f32(x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn add_f32_random_vs_host() {
+        let mut rng = Xoshiro256::seeded(0x1234_5678);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            let y = f32::from_bits(rng.next_u64() as u32);
+            if x.is_nan() || y.is_nan() {
+                continue;
+            }
+            check_add_f32(x, y);
+        }
+    }
+
+    #[test]
+    fn mul_f32_random_vs_host() {
+        let mut rng = Xoshiro256::seeded(0x9999_0001);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            let y = f32::from_bits(rng.next_u64() as u32);
+            if x.is_nan() || y.is_nan() {
+                continue;
+            }
+            check_mul_f32(x, y);
+        }
+    }
+
+    #[test]
+    fn add_f32_nearby_exponents_stress() {
+        // Alignment distances 0..=40 exercise the guard/round/sticky paths.
+        let mut rng = Xoshiro256::seeded(0xabcd_ef01);
+        for _ in 0..100_000 {
+            let m1 = (rng.next_u64() & F32.man_mask()) as u32;
+            let m2 = (rng.next_u64() & F32.man_mask()) as u32;
+            let e1 = 60 + (rng.next_u64() % 120) as u32;
+            let d = (rng.next_u64() % 42) as u32;
+            let s1 = (rng.next_u64() & 1) as u32;
+            let s2 = (rng.next_u64() & 1) as u32;
+            let x = f32::from_bits((s1 << 31) | (e1 << 23) | m1);
+            let y = f32::from_bits((s2 << 31) | ((e1 - d.min(e1 - 1)) << 23) | m2);
+            check_add_f32(x, y);
+        }
+    }
+
+    #[test]
+    fn add_f64_random_vs_host() {
+        let mut rng = Xoshiro256::seeded(0x5555_aaaa);
+        for _ in 0..200_000 {
+            let x = f64::from_bits(rng.next_u64());
+            let y = f64::from_bits(rng.next_u64());
+            if x.is_nan() || y.is_nan() {
+                continue;
+            }
+            check_add_f64(x, y);
+        }
+    }
+
+    #[test]
+    fn add_f64_subnormal_boundary() {
+        let tiny = f64::from_bits(1); // smallest subnormal
+        let min_norm = f64::MIN_POSITIVE;
+        for (x, y) in [
+            (tiny, tiny),
+            (min_norm, -tiny),
+            (min_norm, tiny),
+            (-min_norm, tiny),
+            (tiny, -tiny),
+            (f64::MAX, f64::MAX),
+            (f64::MAX, -f64::MAX),
+            (f64::MAX, f64::MAX / 4.0),
+        ] {
+            check_add_f64(x, y);
+        }
+    }
+
+    #[test]
+    fn f16_add_exhaustive_vs_double_rounding_free_reference() {
+        // For binary16, the f64 sum of any two finite values is exact
+        // (11-bit significands, exponent range 40), so rounding that sum
+        // once to binary16 is the correct RNE result. Exhaustive over all
+        // sign/exponent combinations with sampled mantissas.
+        let mut rng = Xoshiro256::seeded(77);
+        let to_f64 = |bits: u64| -> f64 {
+            let (s, e, m) = F16.unpack(bits);
+            let sgn = if s { -1.0 } else { 1.0 };
+            if e == F16.exp_max() {
+                if m != 0 {
+                    f64::NAN
+                } else {
+                    sgn * f64::INFINITY
+                }
+            } else if e == 0 {
+                sgn * (m as f64) * (2.0f64).powi(1 - 15 - 10)
+            } else {
+                sgn * (1024.0 + m as f64) * (2.0f64).powi(e as i32 - 15 - 10)
+            }
+        };
+        // Correct single rounding f64 -> f16 via our own mul-free packer:
+        // reuse fp_add with zero (identity) after converting through bits is
+        // circular, so instead round by decomposing the exact f64.
+        let f64_to_f16 = |v: f64| -> u64 {
+            if v.is_nan() {
+                return F16.quiet_nan();
+            }
+            let bits = v.to_bits();
+            let (s, e, m) = F64.unpack(bits);
+            if e == F64.exp_max() {
+                return F16.inf(s);
+            }
+            if e == 0 && m == 0 {
+                return F16.zero(s);
+            }
+            let (ee, sig) = super::effective(F64, e, m);
+            // value = sig * 2^(ee - 1023 - 52); express for round_pack in F16
+            // coords: v * 2^(e_v - 15 - 10) = sig * 2^(ee - 1023 - 52)
+            let e_v = ee - 1023 - 52 + 15 + 10;
+            super::round_pack(F16, s, sig as u128, e_v, false, false)
+        };
+        for ex in 0..=F16.exp_max() {
+            for ey in 0..=F16.exp_max() {
+                for _ in 0..24 {
+                    let mx = rng.next_u64() & F16.man_mask();
+                    let my = rng.next_u64() & F16.man_mask();
+                    let sx = rng.next_u64() & 1 == 1;
+                    let sy = rng.next_u64() & 1 == 1;
+                    let a = F16.pack(sx, ex, mx);
+                    let b = F16.pack(sy, ey, my);
+                    if F16.is_nan(a) || F16.is_nan(b) {
+                        continue;
+                    }
+                    let got = fp_add(F16, a, b);
+                    let want_v = to_f64(a) + to_f64(b);
+                    let want = if want_v.is_nan() { F16.quiet_nan() } else { f64_to_f16(want_v) };
+                    // Exact-cancel sign convention: IEEE says +0; reference
+                    // f64 path also yields +0. -0 + -0 = -0 both ways.
+                    assert_eq!(
+                        got, want,
+                        "f16 add {a:#06x}+{b:#06x}: got {got:#06x} want {want:#06x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub_matches_negated_add() {
+        let mut rng = Xoshiro256::seeded(3);
+        for _ in 0..20_000 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            let y = f32::from_bits(rng.next_u64() as u32);
+            if x.is_nan() || y.is_nan() {
+                continue;
+            }
+            let got = fp_sub(F32, f32_bits(x), f32_bits(y));
+            let want = x - y;
+            if want.is_nan() {
+                assert!(F32.is_nan(got));
+            } else {
+                assert_eq!(got, f32_bits(want));
+            }
+        }
+    }
+
+    #[test]
+    fn max_matches_host_semantics() {
+        let mut rng = Xoshiro256::seeded(0x3A3);
+        for _ in 0..100_000 {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            let y = f32::from_bits(rng.next_u64() as u32);
+            let got = fp_max(F32, f32_bits(x), f32_bits(y));
+            if x.is_nan() || y.is_nan() {
+                assert!(F32.is_nan(got));
+            } else if x == y {
+                // ±0 ties: +0 wins under `maximum`.
+                let want = if x.is_sign_negative() && !y.is_sign_negative() {
+                    y
+                } else if !x.is_sign_negative() {
+                    x
+                } else {
+                    x
+                };
+                assert_eq!(got, f32_bits(want), "{x:?} vs {y:?}");
+            } else {
+                assert_eq!(got, f32_bits(x.max(y)), "{x:?} vs {y:?}");
+            }
+        }
+        // identity: max(x, -inf) == x
+        assert_eq!(fp_max(F32, f32_bits(-5.0), F32.inf(true)), f32_bits(-5.0));
+    }
+
+    #[test]
+    fn bf16_add_smoke() {
+        // bf16 has the same exponent range as f32; check a few identities.
+        let one = BF16.pack(false, 127, 0);
+        let two = BF16.pack(false, 128, 0);
+        assert_eq!(fp_add(BF16, one, one), two);
+        assert_eq!(fp_add(BF16, one, BF16.zero(false)), one);
+        assert_eq!(fp_add(BF16, one, one ^ (1 << BF16.sign_shift())), BF16.zero(false));
+    }
+}

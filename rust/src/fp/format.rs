@@ -1,0 +1,203 @@
+//! IEEE-754 binary interchange format descriptions.
+//!
+//! All arithmetic in [`crate::fp`] operates on raw bit patterns (`u64`)
+//! interpreted through an [`FpFormat`]. This mirrors how the hardware the
+//! paper wraps (a vendor FP adder IP) sees operands: as bit vectors, not as
+//! host-language floats. Parameterizing the format lets the simulator run
+//! the same RTL-level datapath for half, bfloat16, single and double
+//! precision — the paper evaluates single ("SP") and double ("DB").
+
+/// An IEEE-754 binary format: 1 sign bit, `exp_bits` exponent bits,
+/// `man_bits` fraction bits. Total width must be ≤ 64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Number of exponent bits (e.g. 8 for binary32).
+    pub exp_bits: u32,
+    /// Number of stored fraction bits (e.g. 23 for binary32).
+    pub man_bits: u32,
+}
+
+/// IEEE-754 binary16 (half precision).
+pub const F16: FpFormat = FpFormat { exp_bits: 5, man_bits: 10 };
+/// bfloat16 (truncated binary32).
+pub const BF16: FpFormat = FpFormat { exp_bits: 8, man_bits: 7 };
+/// IEEE-754 binary32 — the paper's "SP".
+pub const F32: FpFormat = FpFormat { exp_bits: 8, man_bits: 23 };
+/// IEEE-754 binary64 — the paper's "DB"; used for all headline tables.
+pub const F64: FpFormat = FpFormat { exp_bits: 11, man_bits: 52 };
+
+impl FpFormat {
+    /// Total storage width in bits (sign + exponent + fraction).
+    #[inline]
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Exponent bias (2^(exp_bits-1) - 1).
+    #[inline]
+    pub const fn bias(&self) -> i64 {
+        (1i64 << (self.exp_bits - 1)) - 1
+    }
+
+    /// All-ones exponent field value (Inf/NaN marker).
+    #[inline]
+    pub const fn exp_max(&self) -> u64 {
+        (1u64 << self.exp_bits) - 1
+    }
+
+    /// Mask covering the fraction field.
+    #[inline]
+    pub const fn man_mask(&self) -> u64 {
+        (1u64 << self.man_bits) - 1
+    }
+
+    /// Mask covering all value bits (everything below the padding).
+    #[inline]
+    pub const fn value_mask(&self) -> u64 {
+        if self.width() == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width()) - 1
+        }
+    }
+
+    /// Position of the sign bit.
+    #[inline]
+    pub const fn sign_shift(&self) -> u32 {
+        self.exp_bits + self.man_bits
+    }
+
+    /// Canonical quiet NaN (sign 0, exponent all-ones, MSB of fraction set).
+    #[inline]
+    pub const fn quiet_nan(&self) -> u64 {
+        (self.exp_max() << self.man_bits) | (1u64 << (self.man_bits - 1))
+    }
+
+    /// Positive infinity bit pattern.
+    #[inline]
+    pub const fn inf(&self, sign: bool) -> u64 {
+        ((sign as u64) << self.sign_shift()) | (self.exp_max() << self.man_bits)
+    }
+
+    /// Positive/negative zero bit pattern.
+    #[inline]
+    pub const fn zero(&self, sign: bool) -> u64 {
+        (sign as u64) << self.sign_shift()
+    }
+
+    /// Split a bit pattern into (sign, biased exponent field, fraction field).
+    #[inline]
+    pub fn unpack(&self, bits: u64) -> (bool, u64, u64) {
+        let bits = bits & self.value_mask();
+        let sign = (bits >> self.sign_shift()) & 1 == 1;
+        let exp = (bits >> self.man_bits) & self.exp_max();
+        let man = bits & self.man_mask();
+        (sign, exp, man)
+    }
+
+    /// Assemble a bit pattern from (sign, biased exponent field, fraction).
+    #[inline]
+    pub fn pack(&self, sign: bool, exp: u64, man: u64) -> u64 {
+        debug_assert!(exp <= self.exp_max());
+        debug_assert!(man <= self.man_mask());
+        ((sign as u64) << self.sign_shift()) | (exp << self.man_bits) | man
+    }
+
+    /// Is the pattern a NaN?
+    #[inline]
+    pub fn is_nan(&self, bits: u64) -> bool {
+        let (_, e, m) = self.unpack(bits);
+        e == self.exp_max() && m != 0
+    }
+
+    /// Is the pattern ±Inf?
+    #[inline]
+    pub fn is_inf(&self, bits: u64) -> bool {
+        let (_, e, m) = self.unpack(bits);
+        e == self.exp_max() && m == 0
+    }
+
+    /// Is the pattern ±0?
+    #[inline]
+    pub fn is_zero(&self, bits: u64) -> bool {
+        let (_, e, m) = self.unpack(bits);
+        e == 0 && m == 0
+    }
+
+    /// Is the pattern finite (not NaN, not Inf)?
+    #[inline]
+    pub fn is_finite(&self, bits: u64) -> bool {
+        let (_, e, _) = self.unpack(bits);
+        e != self.exp_max()
+    }
+}
+
+/// Convert host `f32` to binary32 bits (identity reinterpret).
+#[inline]
+pub fn f32_bits(v: f32) -> u64 {
+    v.to_bits() as u64
+}
+
+/// Convert binary32 bits to host `f32`.
+#[inline]
+pub fn bits_f32(bits: u64) -> f32 {
+    f32::from_bits(bits as u32)
+}
+
+/// Convert host `f64` to binary64 bits (identity reinterpret).
+#[inline]
+pub fn f64_bits(v: f64) -> u64 {
+    v.to_bits()
+}
+
+/// Convert binary64 bits to host `f64`.
+#[inline]
+pub fn bits_f64(bits: u64) -> f64 {
+    f64::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_bias() {
+        assert_eq!(F32.width(), 32);
+        assert_eq!(F64.width(), 64);
+        assert_eq!(F16.width(), 16);
+        assert_eq!(BF16.width(), 16);
+        assert_eq!(F32.bias(), 127);
+        assert_eq!(F64.bias(), 1023);
+        assert_eq!(F16.bias(), 15);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for fmt in [F16, BF16, F32, F64] {
+            for bits in [0u64, 1, fmt.value_mask(), fmt.inf(false), fmt.inf(true), fmt.quiet_nan()]
+            {
+                let (s, e, m) = fmt.unpack(bits);
+                assert_eq!(fmt.pack(s, e, m), bits & fmt.value_mask());
+            }
+        }
+    }
+
+    #[test]
+    fn classifies_f32_specials() {
+        assert!(F32.is_nan(f32_bits(f32::NAN)));
+        assert!(F32.is_inf(f32_bits(f32::INFINITY)));
+        assert!(F32.is_inf(f32_bits(f32::NEG_INFINITY)));
+        assert!(F32.is_zero(f32_bits(0.0)));
+        assert!(F32.is_zero(f32_bits(-0.0)));
+        assert!(F32.is_finite(f32_bits(1.5)));
+        assert!(!F32.is_finite(f32_bits(f32::NAN)));
+    }
+
+    #[test]
+    fn canonical_specials_match_host() {
+        assert_eq!(F32.inf(false), f32_bits(f32::INFINITY));
+        assert_eq!(F32.inf(true), f32_bits(f32::NEG_INFINITY));
+        assert_eq!(F64.inf(false), f64_bits(f64::INFINITY));
+        assert_eq!(F32.zero(true), f32_bits(-0.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Floating-point substrate: formats, bit-accurate IEEE-754 arithmetic, and
+//! the pipelined-operator model JugglePAC schedules around.
+//!
+//! The paper builds on a vendor FP adder IP (latency 14 in the tables); this
+//! module *is* that IP for the simulator — same numerics (IEEE RNE), same
+//! interface contract (fully pipelined, 1 issue/cycle, fixed latency).
+
+pub mod arith;
+pub mod format;
+pub mod pipeline;
+
+pub use arith::{fp_add, fp_max, fp_mul, fp_sub};
+pub use format::{bits_f32, bits_f64, f32_bits, f64_bits, FpFormat, BF16, F16, F32, F64};
+pub use pipeline::{OpFn, PipelinedOp};

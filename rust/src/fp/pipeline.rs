@@ -1,0 +1,165 @@
+//! Pipelined multi-cycle operator model — the "FP adder IP" slot of Fig. 3.
+//!
+//! JugglePAC treats its functional unit as a black box with an issue port,
+//! a fixed latency `L`, and a result port; the paper's headline tables use
+//! a double-precision adder with `L = 14`. [`PipelinedOp`] reproduces that
+//! contract for *any* combinational function over bit patterns, so the same
+//! scheduler runs with the bit-accurate FP adder, the FP multiplier (the
+//! paper's "any multi-cycle operator" generalization), or integer ops.
+
+use crate::cycle::Clocked;
+use crate::fp::arith::{fp_add, fp_mul};
+use crate::fp::format::FpFormat;
+use std::collections::VecDeque;
+
+/// The combinational kernel a [`PipelinedOp`] wraps.
+pub type OpFn = fn(FpFormat, u64, u64) -> u64;
+
+/// A fully-pipelined binary operator: accepts one issue per cycle, produces
+/// the result exactly `latency` cycles later. Payload `u64` bit patterns.
+#[derive(Clone)]
+pub struct PipelinedOp {
+    fmt: FpFormat,
+    f: OpFn,
+    latency: usize,
+    /// stage\[0\] = youngest. Some((a, b)) means the op issued that cycle.
+    stages: VecDeque<Option<(u64, u64)>>,
+    staged: Option<(u64, u64)>,
+    issues: u64,
+}
+
+impl std::fmt::Debug for PipelinedOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelinedOp")
+            .field("latency", &self.latency)
+            .field("occupancy", &self.stages.iter().filter(|s| s.is_some()).count())
+            .finish()
+    }
+}
+
+impl PipelinedOp {
+    pub fn new(fmt: FpFormat, latency: usize, f: OpFn) -> Self {
+        assert!(latency >= 1, "a multi-cycle operator needs latency >= 1");
+        Self { fmt, f, latency, stages: VecDeque::from(vec![None; latency]), staged: None, issues: 0 }
+    }
+
+    /// A pipelined IEEE adder (the paper's default operator).
+    pub fn adder(fmt: FpFormat, latency: usize) -> Self {
+        Self::new(fmt, latency, fp_add)
+    }
+
+    /// A pipelined IEEE multiplier (the paper's generalization example).
+    pub fn multiplier(fmt: FpFormat, latency: usize) -> Self {
+        Self::new(fmt, latency, fp_mul)
+    }
+
+    pub fn latency(&self) -> usize {
+        self.latency
+    }
+
+    pub fn format(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// Issue operands this cycle (at most one issue per cycle, like the
+    /// single input port of the IP core).
+    pub fn issue(&mut self, a: u64, b: u64) {
+        debug_assert!(self.staged.is_none(), "double issue in one cycle");
+        self.staged = Some((a, b));
+    }
+
+    /// Was something issued this cycle already?
+    pub fn issued_this_cycle(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// Result leaving the pipeline this cycle (registered), if any.
+    /// The value is computed lazily at drain time — numerically equivalent
+    /// to computing it stage-by-stage, since the kernel is combinational.
+    pub fn output(&self) -> Option<u64> {
+        self.stages.back().cloned().flatten().map(|(a, b)| (self.f)(self.fmt, a, b))
+    }
+
+    /// Number of in-flight operations (excluding this cycle's issue).
+    pub fn occupancy(&self) -> usize {
+        self.stages.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total issues since reset.
+    pub fn issues(&self) -> u64 {
+        self.issues
+    }
+}
+
+impl Clocked for PipelinedOp {
+    fn tick(&mut self) {
+        self.stages.pop_back();
+        if self.staged.is_some() {
+            self.issues += 1;
+        }
+        self.stages.push_front(self.staged.take());
+    }
+
+    fn reset(&mut self) {
+        self.stages = VecDeque::from(vec![None; self.latency]);
+        self.staged = None;
+        self.issues = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::{bits_f32, f32_bits, F32};
+
+    #[test]
+    fn result_appears_after_latency() {
+        let mut p = PipelinedOp::adder(F32, 3);
+        p.issue(f32_bits(1.0), f32_bits(2.0));
+        p.tick();
+        assert_eq!(p.output(), None);
+        p.tick();
+        assert_eq!(p.output(), None);
+        p.tick();
+        assert_eq!(p.output().map(bits_f32), Some(3.0));
+        p.tick();
+        assert_eq!(p.output(), None);
+    }
+
+    #[test]
+    fn back_to_back_issues_pipeline() {
+        let mut p = PipelinedOp::adder(F32, 2);
+        p.issue(f32_bits(1.0), f32_bits(1.0));
+        p.tick();
+        p.issue(f32_bits(2.0), f32_bits(2.0));
+        p.tick();
+        assert_eq!(p.output().map(bits_f32), Some(2.0));
+        p.issue(f32_bits(3.0), f32_bits(3.0));
+        p.tick();
+        assert_eq!(p.output().map(bits_f32), Some(4.0));
+        p.tick();
+        assert_eq!(p.output().map(bits_f32), Some(6.0));
+    }
+
+    #[test]
+    fn multiplier_variant() {
+        let mut p = PipelinedOp::multiplier(F32, 1);
+        p.issue(f32_bits(3.0), f32_bits(4.0));
+        p.tick();
+        assert_eq!(p.output().map(bits_f32), Some(12.0));
+    }
+
+    #[test]
+    fn occupancy_and_issue_count() {
+        let mut p = PipelinedOp::adder(F32, 4);
+        for i in 0..3 {
+            p.issue(f32_bits(i as f32), f32_bits(1.0));
+            p.tick();
+        }
+        assert_eq!(p.occupancy(), 3);
+        assert_eq!(p.issues(), 3);
+        p.reset();
+        assert_eq!(p.occupancy(), 0);
+        assert_eq!(p.issues(), 0);
+    }
+}

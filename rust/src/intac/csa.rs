@@ -1,0 +1,239 @@
+//! Carry-save adder primitives (paper §III-B, Figs. 4 & 6).
+//!
+//! A 3:2 compressor is a row of full adders with no carry chain: it maps
+//! three addends to two (sum + shifted carry) with a critical path of one
+//! FA regardless of width — the property INTAC exploits to accumulate at
+//! very high clock rates. `N` inputs per cycle plus the two feedback
+//! vectors need an (N+2):2 compressor tree built from 3:2 rows.
+//!
+//! Alongside the value computation this module reports *structural* facts
+//! the area/timing model consumes: FA/HA cell counts, tree depth (critical
+//! path in FA cells), and the number of low-order result bits that are
+//! already fully reduced (Fig. 6's optimization, the `R` of latency
+//! equation (1)).
+
+/// One 3:2 compressor row over `width`-bit vectors (values mod 2^width).
+/// Returns (sum, carry) with `sum + carry ≡ a + b + c (mod 2^width)`.
+#[inline]
+pub fn compress_3_2(a: u128, b: u128, c: u128, width: u32) -> (u128, u128) {
+    let mask = width_mask(width);
+    let sum = (a ^ b ^ c) & mask;
+    let carry = (((a & b) | (a & c) | (b & c)) << 1) & mask;
+    (sum, carry)
+}
+
+/// Mask covering `width` low bits (width ≤ 128).
+#[inline]
+pub fn width_mask(width: u32) -> u128 {
+    if width >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << width) - 1
+    }
+}
+
+/// Compress any number of addends to two, using successive 3:2 rows
+/// (Wallace-style grouping). Value-exact mod 2^width.
+pub fn compress_to_2(vals: &[u128], width: u32) -> (u128, u128) {
+    let mask = width_mask(width);
+    let mut vs: Vec<u128> = vals.iter().map(|v| v & mask).collect();
+    while vs.len() > 2 {
+        let mut next = Vec::with_capacity(2 * vs.len() / 3 + 2);
+        let mut it = vs.chunks_exact(3);
+        for ch in &mut it {
+            let (s, c) = compress_3_2(ch[0], ch[1], ch[2], width);
+            next.push(s);
+            next.push(c);
+        }
+        next.extend_from_slice(it.remainder());
+        vs = next;
+    }
+    match vs.len() {
+        0 => (0, 0),
+        1 => (vs[0], 0),
+        _ => (vs[0], vs[1]),
+    }
+}
+
+/// Number of 3:2 rows on the critical path when compressing `k` addends to
+/// two (the Wallace-tree depth). This is the compressor's critical path in
+/// FA cells.
+pub fn tree_depth(k: usize) -> u32 {
+    let mut k = k;
+    let mut d = 0;
+    while k > 2 {
+        k = 2 * (k / 3) + k % 3;
+        d += 1;
+    }
+    d
+}
+
+/// Structural cell counts for an (N+2):2 compressor over the given widths:
+/// inputs are `in_width` bits wide, the accumulator/result is `out_width`.
+///
+/// Where fewer than 3 addends have live bits at a position, an HA (2 live)
+/// or plain wire (≤1 live) replaces the FA — Fig. 6's area optimization.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompressorCells {
+    pub full_adders: u32,
+    pub half_adders: u32,
+    /// Rows of compression applied (≥ tree_depth of the addend count).
+    pub depth: u32,
+}
+
+/// Count cells for compressing `n_inputs` input vectors (each `in_width`
+/// bits) together with the two `out_width`-bit feedback vectors.
+pub fn compressor_cells(n_inputs: usize, in_width: u32, out_width: u32) -> CompressorCells {
+    // Per-bit live-addend counts: feedback S has bits 0..out_width,
+    // feedback C has bits 1..out_width (its bit 0 is structurally zero),
+    // each input covers bits 0..in_width.
+    let ow = out_width as usize;
+    let mut live: Vec<u32> = vec![0; ow];
+    for b in 0..ow {
+        let mut l = 0;
+        if b < ow {
+            l += 1; // S
+        }
+        if b >= 1 {
+            l += 1; // C (shifted left by construction)
+        }
+        if b < in_width as usize {
+            l += n_inputs as u32;
+        }
+        live[b] = l;
+    }
+    let mut cells = CompressorCells::default();
+    // Reduce column counts as a Wallace reduction would: each FA takes 3
+    // dots from a column and emits 1 there + 1 carry into the next column;
+    // each HA takes 2 and emits 1 + 1 carry. Spending an HA on every
+    // 2-dot remainder keeps a slot free for the incoming carry, so one row
+    // suffices per depth level and carries never ripple within a row —
+    // this is how the hardware keeps the critical path at `depth` cells.
+    let mut depth = 0;
+    loop {
+        let maxc = *live.iter().max().unwrap_or(&0);
+        if maxc <= 2 {
+            break;
+        }
+        depth += 1;
+        let mut next = vec![0u32; ow];
+        let mut carry_in = 0u32; // carries arriving from the column below
+        for b in 0..ow {
+            let n = live[b];
+            let fas = n / 3;
+            let rem = n % 3;
+            cells.full_adders += fas;
+            let mut outs_here = fas + rem;
+            let mut carry_out = fas;
+            // Spend an HA only when the column would otherwise exceed two
+            // dots after absorbing the incoming carry — exactly where the
+            // hardware needs one to keep the row from rippling.
+            if rem == 2 && outs_here + carry_in > 2 {
+                cells.half_adders += 1;
+                outs_here -= 1;
+                carry_out += 1;
+            }
+            next[b] = outs_here + carry_in;
+            carry_in = carry_out;
+        }
+        live = next;
+        if depth > 64 {
+            break; // safety; cannot happen for sane parameters
+        }
+    }
+    cells.depth = depth;
+    cells
+}
+
+/// Number of low-order bit positions of the final (sum, carry) pair where
+/// the carry vector is structurally zero — those result bits are already
+/// fully reduced and the final adder can skip them (`R` in equation (1)).
+///
+/// For the feedback architecture the carry vector always has bit 0 zero;
+/// wider skips appear when `in_width` is far below `out_width` only in the
+/// *last* accumulation step, so INTAC conservatively uses R = 1 plus any
+/// positions with at most one live addend.
+pub fn reduced_bits(n_inputs: usize, in_width: u32, out_width: u32) -> u32 {
+    let _ = out_width;
+    // Bit 0 of the carry output of any 3:2 row is zero.
+    let mut r = 1;
+    // If only one addend is ever live at a low position (impossible here
+    // because feedback S covers all positions), wider reductions apply;
+    // keep the structural scan for forward-compatibility with no-feedback
+    // (single-shot) compressions.
+    if n_inputs == 0 && in_width == 0 {
+        r = 0;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn compress_3_2_preserves_sum() {
+        let mut rng = Xoshiro256::seeded(1);
+        for width in [8u32, 16, 64, 128] {
+            let mask = width_mask(width);
+            for _ in 0..1000 {
+                let a = (rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64)) & mask;
+                let b = (rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64)) & mask;
+                let c = (rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64)) & mask;
+                let (s, cy) = compress_3_2(a, b, c, width);
+                assert_eq!(
+                    s.wrapping_add(cy) & mask,
+                    a.wrapping_add(b).wrapping_add(c) & mask
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compress_many_preserves_sum() {
+        let mut rng = Xoshiro256::seeded(2);
+        for n in [1usize, 2, 3, 4, 5, 8, 16] {
+            let width = 64;
+            let mask = width_mask(width);
+            let vals: Vec<u128> = (0..n).map(|_| rng.next_u64() as u128).collect();
+            let want = vals.iter().fold(0u128, |a, &v| a.wrapping_add(v)) & mask;
+            let (s, c) = compress_to_2(&vals, width);
+            assert_eq!(s.wrapping_add(c) & mask, want);
+        }
+    }
+
+    #[test]
+    fn tree_depths_match_wallace() {
+        assert_eq!(tree_depth(3), 1);
+        assert_eq!(tree_depth(4), 2);
+        assert_eq!(tree_depth(5), 3);
+        assert_eq!(tree_depth(6), 3);
+        assert_eq!(tree_depth(9), 4);
+        assert_eq!(tree_depth(2), 0);
+    }
+
+    #[test]
+    fn cell_counts_scale_with_inputs() {
+        let c1 = compressor_cells(1, 64, 128);
+        let c2 = compressor_cells(2, 64, 128);
+        let c4 = compressor_cells(4, 64, 128);
+        assert!(c1.full_adders > 0);
+        assert!(c2.full_adders > c1.full_adders);
+        assert!(c4.full_adders > c2.full_adders);
+        assert!(c4.depth >= c2.depth);
+        // 3:2 with 64-bit inputs into 128-bit accumulator: one FA row over
+        // the 64 low columns (3 live), nothing needed above (2 live).
+        assert_eq!(c1.depth, 1);
+    }
+
+    #[test]
+    fn narrow_inputs_use_fewer_cells_than_full_width() {
+        // Fig. 6's point: 8-bit inputs into a 16-bit accumulator need
+        // fewer FA cells than 16-bit inputs would (the upper columns make
+        // do with the much cheaper HAs).
+        let narrow = compressor_cells(2, 8, 16);
+        let wide = compressor_cells(2, 16, 16);
+        assert!(narrow.full_adders < wide.full_adders, "{narrow:?} vs {wide:?}");
+    }
+}

@@ -1,0 +1,291 @@
+//! The resource-shared final addition (paper §III-B, Fig. 5).
+//!
+//! After a set has been compressed to a (sum, carry) pair, one real
+//! addition remains. Doing it combinationally would double the area and
+//! ruin the cycle time; INTAC instead streams the pair through `K` full
+//! adder cells, `K` bits per cycle, using shift registers: the two operand
+//! registers shift right by `K` each cycle, the `K` result bits concatenate
+//! into an output shift register, and a single flop carries the ripple
+//! between cycles. Critical path: `K` chained FA cells (1 when K=1).
+//!
+//! A pipelined variant (paper §IV-C) removes the one-addition-at-a-time
+//! restriction at the cost of `M` FAs and ~M²/2 flops; it accepts a new
+//! operand pair every cycle.
+
+use crate::cycle::Clocked;
+
+use super::csa::width_mask;
+
+/// Which final-adder architecture to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinalAdderKind {
+    /// Fig. 5: `fa_cells` FA cells shared across the whole width; one
+    /// addition in flight at a time.
+    ResourceShared { fa_cells: u32 },
+    /// §IV-C: fully pipelined carry-ripple; a new addition may enter every
+    /// cycle. Critical path 1 FA.
+    Pipelined,
+}
+
+/// One addition job moving through the final adder.
+#[derive(Clone, Copy, Debug)]
+struct Job {
+    a: u128,
+    b: u128,
+    acc: u128,
+    carry: u128,
+    /// Bits already produced.
+    done_bits: u32,
+    set_id: u64,
+    accepted_at: u64,
+}
+
+/// A completed final addition.
+#[derive(Clone, Copy, Debug)]
+pub struct FinalResult {
+    pub value: u128,
+    pub set_id: u64,
+    /// Cycle the result became visible.
+    pub cycle: u64,
+    /// Cycle the job entered the final adder.
+    pub accepted_at: u64,
+}
+
+/// The final adder: accepts (sum, carry) pairs, emits completed sums.
+#[derive(Clone, Debug)]
+pub struct FinalAdder {
+    kind: FinalAdderKind,
+    /// Result width M.
+    width: u32,
+    /// Low bits already reduced by the compressor (skipped here): `R`.
+    skip_bits: u32,
+    jobs: Vec<Job>, // ResourceShared: ≤1 job; Pipelined: ≤ stages jobs
+    staged: Option<(u128, u128, u64)>,
+    results: Vec<FinalResult>,
+    cycle: u64,
+    /// Sticky flag: an accept was attempted while busy (a stall in real
+    /// hardware — the min-set-length violation detector).
+    pub stalled: bool,
+}
+
+impl FinalAdder {
+    pub fn new(kind: FinalAdderKind, width: u32, skip_bits: u32) -> Self {
+        assert!(width <= 128 && width >= 1);
+        assert!(skip_bits < width);
+        if let FinalAdderKind::ResourceShared { fa_cells } = kind {
+            assert!(fa_cells >= 1 && fa_cells <= width);
+        }
+        Self {
+            kind,
+            width,
+            skip_bits,
+            jobs: Vec::new(),
+            staged: None,
+            results: Vec::new(),
+            cycle: 0,
+            stalled: false,
+        }
+    }
+
+    /// Cycles from acceptance to result visibility, per equation (1)'s
+    /// final-addition term: `ceil((M - R) / FAs) + 1` (the +1 is the output
+    /// register).
+    pub fn latency(&self) -> u64 {
+        match self.kind {
+            FinalAdderKind::ResourceShared { fa_cells } => {
+                (self.width - self.skip_bits).div_ceil(fa_cells) as u64 + 1
+            }
+            FinalAdderKind::Pipelined => (self.width - self.skip_bits) as u64 + 1,
+        }
+    }
+
+    /// Can a new pair be accepted this cycle?
+    pub fn ready(&self) -> bool {
+        match self.kind {
+            FinalAdderKind::ResourceShared { .. } => self.jobs.is_empty() && self.staged.is_none(),
+            FinalAdderKind::Pipelined => self.staged.is_none(),
+        }
+    }
+
+    /// Offer a compressed (sum, carry) pair. Returns false (and records a
+    /// stall) if the adder is busy — the hardware would have to stall the
+    /// whole pipeline, which the minimum set length exists to prevent.
+    pub fn accept(&mut self, sum: u128, carry: u128, set_id: u64) -> bool {
+        if !self.ready() {
+            self.stalled = true;
+            return false;
+        }
+        self.staged = Some((sum, carry, set_id));
+        true
+    }
+
+    /// Completed results (drained by the caller).
+    pub fn take_results(&mut self) -> Vec<FinalResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    /// In-flight occupancy (debug/metrics).
+    pub fn occupancy(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+impl Clocked for FinalAdder {
+    fn tick(&mut self) {
+        let mask = width_mask(self.width);
+        let k = match self.kind {
+            FinalAdderKind::ResourceShared { fa_cells } => fa_cells,
+            FinalAdderKind::Pipelined => 1,
+        };
+        // Advance all in-flight jobs by K bits.
+        let width = self.width;
+        let skip = self.skip_bits;
+        let mut finished = Vec::new();
+        for job in &mut self.jobs {
+            let remaining = width - skip - job.done_bits;
+            let step = k.min(remaining);
+            if step > 0 {
+                let chunk_mask = width_mask(step);
+                let a_k = (job.a >> (skip + job.done_bits)) & chunk_mask;
+                let b_k = (job.b >> (skip + job.done_bits)) & chunk_mask;
+                let s = a_k + b_k + job.carry;
+                job.acc |= (s & chunk_mask) << (skip + job.done_bits);
+                job.carry = s >> step;
+                job.done_bits += step;
+            }
+            if job.done_bits >= width - skip {
+                finished.push(FinalResult {
+                    value: job.acc & mask,
+                    set_id: job.set_id,
+                    cycle: self.cycle + 1,
+                    accepted_at: job.accepted_at,
+                });
+            }
+        }
+        self.jobs.retain(|j| j.done_bits < width - skip);
+        self.results.extend(finished);
+
+        // Latch the staged pair into a fresh job. The skipped low bits are
+        // already final: sum's low bits pass through (carry's are zero by
+        // construction — asserted here).
+        if let Some((sum, carry, set_id)) = self.staged.take() {
+            debug_assert_eq!(
+                carry & width_mask(self.skip_bits.max(1)) & !1,
+                0,
+                "skip_bits below non-zero carry bits"
+            );
+            let acc = sum & width_mask(self.skip_bits);
+            debug_assert_eq!(carry & width_mask(self.skip_bits), 0);
+            self.jobs.push(Job {
+                a: sum,
+                b: carry,
+                acc,
+                carry: 0,
+                done_bits: 0,
+                set_id,
+                accepted_at: self.cycle,
+            });
+        }
+        self.cycle += 1;
+    }
+
+    fn reset(&mut self) {
+        self.jobs.clear();
+        self.staged = None;
+        self.results.clear();
+        self.cycle = 0;
+        self.stalled = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn run_one(kind: FinalAdderKind, width: u32, skip: u32, s: u128, c: u128) -> (u128, u64) {
+        let mut fa = FinalAdder::new(kind, width, skip);
+        assert!(fa.accept(s, c, 0));
+        let mut cycles = 0;
+        loop {
+            fa.tick();
+            cycles += 1;
+            let rs = fa.take_results();
+            if let Some(r) = rs.first() {
+                return (r.value, cycles);
+            }
+            assert!(cycles < 10_000);
+        }
+    }
+
+    #[test]
+    fn adds_correctly_all_k() {
+        let mut rng = Xoshiro256::seeded(5);
+        for &k in &[1u32, 2, 4, 16, 64, 128] {
+            for _ in 0..200 {
+                let s = rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64);
+                let c = (rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64)) & !1;
+                let width = 128;
+                let (got, _) =
+                    run_one(FinalAdderKind::ResourceShared { fa_cells: k }, width, 1, s, c);
+                assert_eq!(got, s.wrapping_add(c), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn latency_matches_formula() {
+        // M=128, R=1(skip), K FAs: ceil(127/K) + 1 cycles to result.
+        for &k in &[1u32, 2, 16] {
+            let fa = FinalAdder::new(FinalAdderKind::ResourceShared { fa_cells: k }, 128, 1);
+            let (_, cycles) =
+                run_one(FinalAdderKind::ResourceShared { fa_cells: k }, 128, 1, 123, 456 & !1);
+            assert_eq!(cycles as u64, fa.latency(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn resource_shared_rejects_while_busy() {
+        let mut fa = FinalAdder::new(FinalAdderKind::ResourceShared { fa_cells: 1 }, 64, 1);
+        assert!(fa.accept(1, 0, 0));
+        fa.tick();
+        assert!(!fa.accept(2, 0, 1));
+        assert!(fa.stalled);
+    }
+
+    #[test]
+    fn pipelined_accepts_every_cycle() {
+        let mut fa = FinalAdder::new(FinalAdderKind::Pipelined, 16, 1);
+        let mut want = Vec::new();
+        for i in 0..10u128 {
+            assert!(fa.accept(i * 3, (i * 5) & !1, i as u64), "cycle {i}");
+            want.push((i * 3).wrapping_add((i * 5) & !1) & width_mask(16));
+            fa.tick();
+        }
+        for _ in 0..40 {
+            fa.tick();
+        }
+        let got: Vec<(u64, u128)> =
+            fa.take_results().iter().map(|r| (r.set_id, r.value)).collect();
+        assert_eq!(got.len(), 10);
+        for (i, &(sid, v)) in got.iter().enumerate() {
+            assert_eq!(sid, i as u64);
+            assert_eq!(v, want[i]);
+        }
+    }
+
+    #[test]
+    fn skip_bits_pass_low_sum_bits_through() {
+        // With skip=4, low 4 bits of `sum` must appear unchanged (carry has
+        // structural zeros there).
+        let (got, _) = run_one(
+            FinalAdderKind::ResourceShared { fa_cells: 2 },
+            32,
+            4,
+            0xABCD_1235,
+            0x0000_FF00,
+        );
+        assert_eq!(got, 0xABCD_1235u128.wrapping_add(0x0000_FF00) & width_mask(32));
+        assert_eq!(got & 0xF, 0x5);
+    }
+}

@@ -1,0 +1,393 @@
+//! INTAC — the paper's integer accumulation circuit (§III-B, Fig. 4).
+//!
+//! Architecture: an (N+2):2 carry-save compressor with feedback registers
+//! accumulates `N` inputs per cycle at a critical path of a few FA cells;
+//! when a set completes, the residual (sum, carry) pair is handed to the
+//! resource-shared final adder ([`final_adder::FinalAdder`]) which
+//! resolves the carries `K` bits per cycle. The combination reaches clock
+//! rates far above a plain `+` accumulator (paper Table V) at modest area.
+//!
+//! The minimum-set-length restriction (§IV-C) falls out naturally: the
+//! final adder holds one addition at a time, so sets must be long enough
+//! (`ceil((M-R)/FAs)` cycles × `N` inputs) to cover its occupancy. The sim
+//! detects violations as stalls rather than silently corrupting results.
+
+pub mod csa;
+pub mod final_adder;
+
+pub use csa::{compress_3_2, compress_to_2, compressor_cells, reduced_bits, tree_depth, CompressorCells};
+pub use final_adder::{FinalAdder, FinalAdderKind, FinalResult};
+
+use crate::cycle::Clocked;
+use csa::width_mask;
+
+/// Static configuration of an INTAC instance.
+#[derive(Clone, Copy, Debug)]
+pub struct IntacConfig {
+    /// Input bit width (64 in the paper's Table V).
+    pub in_width: u32,
+    /// Output/accumulator bit width M (128 in Table V).
+    pub out_width: u32,
+    /// Inputs accepted per cycle, N (1 or 2 in Table V).
+    pub inputs_per_cycle: u32,
+    /// Final adder architecture (resource-shared with K FA cells, or the
+    /// §IV-C pipelined variant).
+    pub final_adder: FinalAdderKind,
+}
+
+impl Default for IntacConfig {
+    /// Table V's base configuration: 64-bit inputs, 128-bit output, one
+    /// input per cycle, one FA cell in the final adder.
+    fn default() -> Self {
+        Self {
+            in_width: 64,
+            out_width: 128,
+            inputs_per_cycle: 1,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 1 },
+        }
+    }
+}
+
+impl IntacConfig {
+    /// Low result bits already reduced by the compressor (`R` in eq. (1)).
+    pub fn reduced(&self) -> u32 {
+        reduced_bits(self.inputs_per_cycle as usize, self.in_width, self.out_width)
+    }
+
+    /// Total latency in cycles for a set of `set_len` inputs, per the
+    /// paper's equation (1):
+    ///
+    /// `Latency = ceil(I / N) + ceil((M - R) / FAs) + 1`
+    ///
+    /// (The paper prints the first term as `ceil(N/I)`; with its own
+    /// definitions — N = inputs per cycle, I = number of inputs — the
+    /// dimensionally consistent reading is `ceil(I/N)`, which also matches
+    /// the Table V latency column, e.g. `N/2 + 64` for 2 inputs/cycle and
+    /// 2 FAs. We implement that reading.)
+    pub fn latency(&self, set_len: u64) -> u64 {
+        let feed = set_len.div_ceil(self.inputs_per_cycle as u64);
+        let fa = match self.final_adder {
+            FinalAdderKind::ResourceShared { fa_cells } => {
+                ((self.out_width - self.reduced()).div_ceil(fa_cells)) as u64
+            }
+            FinalAdderKind::Pipelined => (self.out_width - self.reduced()) as u64,
+        };
+        feed + fa + 1
+    }
+
+    /// Minimum set length (in inputs) so consecutive sets never stall the
+    /// resource-shared final adder: its occupancy in cycles × N
+    /// (paper §IV-C: `ceil(M*inputs/FAs)` before the R optimization).
+    pub fn min_set_len(&self) -> u64 {
+        match self.final_adder {
+            FinalAdderKind::ResourceShared { fa_cells } => {
+                ((self.out_width - self.reduced()).div_ceil(fa_cells) as u64 + 1)
+                    * self.inputs_per_cycle as u64
+            }
+            FinalAdderKind::Pipelined => 1,
+        }
+    }
+}
+
+/// A completed accumulation.
+#[derive(Clone, Copy, Debug)]
+pub struct IntacOutput {
+    /// Result value mod 2^out_width.
+    pub value: u128,
+    pub set_id: u64,
+    /// Cycle `outEn` pulsed.
+    pub cycle: u64,
+}
+
+/// The INTAC circuit simulator.
+#[derive(Clone, Debug)]
+pub struct Intac {
+    cfg: IntacConfig,
+    /// Compressor feedback registers.
+    sum: u128,
+    carry: u128,
+    final_adder: FinalAdder,
+    cur_set: u64,
+    next_set: u64,
+    in_set: bool,
+    cycle: u64,
+    outputs: Vec<IntacOutput>,
+    /// Inputs consumed (for stats).
+    pub inputs_consumed: u64,
+}
+
+impl Intac {
+    pub fn new(cfg: IntacConfig) -> Self {
+        assert!(cfg.in_width >= 1 && cfg.in_width <= cfg.out_width && cfg.out_width <= 128);
+        assert!(cfg.inputs_per_cycle >= 1);
+        let skip = cfg.reduced();
+        Self {
+            final_adder: FinalAdder::new(cfg.final_adder, cfg.out_width, skip),
+            cfg,
+            sum: 0,
+            carry: 0,
+            cur_set: 0,
+            next_set: 0,
+            in_set: false,
+            cycle: 0,
+            outputs: Vec::new(),
+            inputs_consumed: 0,
+        }
+    }
+
+    pub fn config(&self) -> &IntacConfig {
+        &self.cfg
+    }
+
+    /// Feed one cycle of inputs (up to `inputs_per_cycle` values, already
+    /// masked to `in_width` bits). `start` marks the first beat of a set;
+    /// `last` marks the final beat, after which the residual pair moves to
+    /// the final adder.
+    ///
+    /// Returns false if a set boundary had to stall on the final adder
+    /// (minimum-set-length violation).
+    pub fn step(&mut self, inputs: &[u64], start: bool, last: bool) -> bool {
+        assert!(inputs.len() <= self.cfg.inputs_per_cycle as usize);
+        let mut ok = true;
+        if start {
+            self.cur_set = self.next_set;
+            self.next_set += 1;
+            self.in_set = true;
+            self.sum = 0;
+            self.carry = 0;
+        }
+        if !inputs.is_empty() {
+            debug_assert!(self.in_set, "input outside a set");
+            let mask = width_mask(self.cfg.in_width);
+            let mut vals: Vec<u128> = Vec::with_capacity(inputs.len() + 2);
+            vals.push(self.sum);
+            vals.push(self.carry);
+            vals.extend(inputs.iter().map(|&v| (v as u128) & mask));
+            let (s, c) = compress_to_2(&vals, self.cfg.out_width);
+            self.sum = s;
+            self.carry = c;
+            self.inputs_consumed += inputs.len() as u64;
+        }
+        if last && self.in_set {
+            ok = self.final_adder.accept(self.sum, self.carry, self.cur_set);
+            if ok {
+                self.in_set = false;
+                self.sum = 0;
+                self.carry = 0;
+            }
+        }
+        self.final_adder.tick();
+        for r in self.final_adder.take_results() {
+            self.outputs.push(IntacOutput { value: r.value, set_id: r.set_id, cycle: self.cycle });
+        }
+        self.cycle += 1;
+        ok
+    }
+
+    /// Idle cycles (no input).
+    pub fn idle(&mut self, n: usize) {
+        for _ in 0..n {
+            self.final_adder.tick();
+            for r in self.final_adder.take_results() {
+                self.outputs.push(IntacOutput {
+                    value: r.value,
+                    set_id: r.set_id,
+                    cycle: self.cycle,
+                });
+            }
+            self.cycle += 1;
+        }
+    }
+
+    pub fn take_outputs(&mut self) -> Vec<IntacOutput> {
+        std::mem::take(&mut self.outputs)
+    }
+
+    pub fn stalled(&self) -> bool {
+        self.final_adder.stalled
+    }
+
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+}
+
+/// Run whole sets through a fresh INTAC; returns outputs in emission order.
+/// Values are masked to `in_width`. Panics if draining exceeds `max_drain`.
+pub fn run_sets(cfg: IntacConfig, sets: &[Vec<u64>], max_drain: usize) -> (Vec<IntacOutput>, Intac) {
+    let mut m = Intac::new(cfg);
+    let n = cfg.inputs_per_cycle as usize;
+    for set in sets {
+        let mut i = 0;
+        while i < set.len() {
+            let hi = (i + n).min(set.len());
+            m.step(&set[i..hi], i == 0, hi == set.len());
+            i = hi;
+        }
+    }
+    let mut drained = 0;
+    while m.outputs.len() < sets.len() && drained < max_drain {
+        m.idle(1);
+        drained += 1;
+    }
+    let outs = m.take_outputs();
+    (outs, m)
+}
+
+/// Oracle: wrapping sum of a set mod 2^out_width (inputs masked to
+/// in_width), i.e. what a plain `+` accumulator computes.
+pub fn oracle_sum(cfg: IntacConfig, set: &[u64]) -> u128 {
+    let imask = width_mask(cfg.in_width);
+    let omask = width_mask(cfg.out_width);
+    set.iter().fold(0u128, |a, &v| a.wrapping_add((v as u128) & imask)) & omask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn accumulates_exactly() {
+        let mut rng = Xoshiro256::seeded(11);
+        let cfg = IntacConfig::default();
+        let sets: Vec<Vec<u64>> =
+            (0..4).map(|_| (0..200).map(|_| rng.next_u64()).collect()).collect();
+        let (outs, m) = run_sets(cfg, &sets, 10_000);
+        assert_eq!(outs.len(), 4);
+        assert!(!m.stalled());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64);
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]), "set {i}");
+        }
+    }
+
+    #[test]
+    fn two_inputs_per_cycle() {
+        let mut rng = Xoshiro256::seeded(12);
+        let cfg = IntacConfig { inputs_per_cycle: 2, ..Default::default() };
+        let sets: Vec<Vec<u64>> =
+            (0..3).map(|_| (0..300).map(|_| rng.next_u64()).collect()).collect();
+        let (outs, m) = run_sets(cfg, &sets, 10_000);
+        assert_eq!(outs.len(), 3);
+        assert!(!m.stalled());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]));
+        }
+    }
+
+    #[test]
+    fn latency_matches_equation_1() {
+        // Table V latency column: N + 128 for (1 input, 1 FA),
+        // N + 64 for 2 FAs, N + 8 for 16 FAs, with M=128, R=1 →
+        // ceil(127/1)=127 ≈ 128 (the paper rounds R=0).
+        for (fas, tail) in [(1u32, 127u64), (2, 64), (16, 8)] {
+            let cfg = IntacConfig {
+                final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+                ..Default::default()
+            };
+            assert_eq!(cfg.latency(1000), 1000 + tail + 1, "fas={fas}");
+        }
+        // Measured: run a set and compare first-input→outEn cycles. The
+        // sim overlaps the final-adder handoff with the last feed cycle,
+        // so it is one cycle faster than the printed equation (whose own
+        // "+1" the paper's Table V applies inconsistently across rows —
+        // N+128 includes it, N+64 and N+8 do not). Assert within ±1.
+        for fas in [1u32, 2, 16] {
+            let cfg = IntacConfig {
+                final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+                ..Default::default()
+            };
+            let set: Vec<u64> = (0..100).collect();
+            let (outs, _) = run_sets(cfg, &[set.clone()], 10_000);
+            let measured = outs[0].cycle + 1; // inclusive cycle count
+            let formula = cfg.latency(100);
+            assert!(
+                measured.abs_diff(formula) <= 1,
+                "fas={fas}: measured {measured} vs eq(1) {formula}"
+            );
+        }
+    }
+
+    #[test]
+    fn short_sets_stall_resource_shared_adder() {
+        let cfg = IntacConfig {
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 1 },
+            ..Default::default()
+        };
+        let min = cfg.min_set_len();
+        assert!(min > 100); // 128-ish for K=1
+        let sets: Vec<Vec<u64>> = (0..3).map(|_| (0..8u64).collect()).collect();
+        let (_, m) = run_sets(cfg, &sets, 10_000);
+        assert!(m.stalled(), "8-element sets must stall a K=1 final adder");
+    }
+
+    #[test]
+    fn min_length_sets_do_not_stall() {
+        for fas in [1u32, 2, 16] {
+            let cfg = IntacConfig {
+                final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+                ..Default::default()
+            };
+            let n = cfg.min_set_len();
+            let sets: Vec<Vec<u64>> = (0..5).map(|s| (0..n).map(|i| i * 7 + s).collect()).collect();
+            let (outs, m) = run_sets(cfg, &sets, 100_000);
+            assert!(!m.stalled(), "fas={fas} min={n}");
+            assert_eq!(outs.len(), 5);
+            for (i, o) in outs.iter().enumerate() {
+                assert_eq!(o.value, oracle_sum(cfg, &sets[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_final_adder_handles_short_sets() {
+        let cfg = IntacConfig { final_adder: FinalAdderKind::Pipelined, ..Default::default() };
+        let sets: Vec<Vec<u64>> = (0..20).map(|s| vec![s, s + 1, s + 2]).collect();
+        let (outs, m) = run_sets(cfg, &sets, 10_000);
+        assert!(!m.stalled());
+        assert_eq!(outs.len(), 20);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]));
+            assert_eq!(o.set_id, i as u64, "ordered results");
+        }
+    }
+
+    #[test]
+    fn narrow_inputs_wide_output() {
+        let mut rng = Xoshiro256::seeded(13);
+        let cfg = IntacConfig {
+            in_width: 8,
+            out_width: 16,
+            inputs_per_cycle: 4,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 2 },
+        };
+        let sets: Vec<Vec<u64>> = (0..3)
+            .map(|_| (0..64).map(|_| rng.next_u64() & 0xFF).collect())
+            .collect();
+        let (outs, m) = run_sets(cfg, &sets, 10_000);
+        assert!(!m.stalled());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]));
+        }
+    }
+
+    #[test]
+    fn ordered_results_always() {
+        let mut rng = Xoshiro256::seeded(14);
+        let cfg = IntacConfig {
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 16 },
+            ..Default::default()
+        };
+        let sets: Vec<Vec<u64>> = (0..10)
+            .map(|_| {
+                let n = cfg.min_set_len() + rng.range_u64(0, 32);
+                (0..n).map(|_| rng.next_u64()).collect()
+            })
+            .collect();
+        let (outs, _) = run_sets(cfg, &sets, 100_000);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64);
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! Addition-DAG recorder: the provenance side-channel of the simulator.
+//!
+//! FP addition is not associative, so *which* tree of additions JugglePAC
+//! performs determines the exact result bits (paper §I). The simulator
+//! records every operation it schedules as a node in this DAG. That gives
+//! three things:
+//!
+//! 1. **Bit-exact re-verification** — replaying an output's DAG through the
+//!    same IEEE kernel must reproduce the output bits, catching any crossed
+//!    label/value plumbing in the scheduler.
+//! 2. **Partition checking** — the leaves under an output must be exactly
+//!    the elements of one input set, each exactly once. This is the real
+//!    correctness invariant of a reduction circuit.
+//! 3. **Tree rendering** — the Fig. 2 accumulation-tree view and the
+//!    symbolic names of Table I ("Σa0,,4") fall out of the recorded shape.
+
+use crate::fp::{fp_add, fp_max, fp_mul, FpFormat};
+
+/// A recorded value in the datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// An external input: element `idx` of set `set`.
+    Leaf { set: u64, idx: u32 },
+    /// The operator's identity element, injected to flush an odd element.
+    Identity,
+    /// An operator application over two earlier nodes.
+    Op { l: u32, r: u32 },
+}
+
+/// Reduction operator choice (the paper generalizes JugglePAC to "any
+/// multi-cycle operator such as a FP multiplier").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Operator {
+    Add,
+    Mul,
+    /// Max-reduction — the paper's "different reduction operations"
+    /// generalization with a comparator in the multi-cycle operator slot.
+    Max,
+}
+
+impl Operator {
+    /// The identity element's bit pattern for this operator.
+    pub fn identity_bits(self, fmt: FpFormat) -> u64 {
+        match self {
+            Operator::Add => fmt.zero(false),
+            Operator::Mul => fmt.pack(false, fmt.bias() as u64, 0), // 1.0
+            Operator::Max => fmt.inf(true),                         // -inf
+        }
+    }
+
+    /// Apply the operator to two bit patterns.
+    #[inline]
+    pub fn apply(self, fmt: FpFormat, a: u64, b: u64) -> u64 {
+        match self {
+            Operator::Add => fp_add(fmt, a, b),
+            Operator::Mul => fp_mul(fmt, a, b),
+            Operator::Max => fp_max(fmt, a, b),
+        }
+    }
+}
+
+/// Append-only DAG of all scheduled operations.
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    nodes: Vec<Node>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: u32) -> Node {
+        self.nodes[id as usize]
+    }
+
+    pub fn leaf(&mut self, set: u64, idx: u32) -> u32 {
+        self.nodes.push(Node::Leaf { set, idx });
+        (self.nodes.len() - 1) as u32
+    }
+
+    pub fn identity(&mut self) -> u32 {
+        self.nodes.push(Node::Identity);
+        (self.nodes.len() - 1) as u32
+    }
+
+    pub fn op(&mut self, l: u32, r: u32) -> u32 {
+        self.nodes.push(Node::Op { l, r });
+        (self.nodes.len() - 1) as u32
+    }
+
+    /// Recompute the value of `id` by replaying the recorded operations
+    /// against the supplied leaf values. `leaf_bits(set, idx)` supplies the
+    /// original inputs.
+    pub fn replay<F>(&self, id: u32, op: Operator, fmt: FpFormat, leaf_bits: &F) -> u64
+    where
+        F: Fn(u64, u32) -> u64,
+    {
+        // Iterative post-order to avoid recursion depth limits on big sets.
+        let mut memo: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+        let mut stack = vec![(id, false)];
+        while let Some((n, expanded)) = stack.pop() {
+            if memo.contains_key(&n) {
+                continue;
+            }
+            match self.node(n) {
+                Node::Leaf { set, idx } => {
+                    memo.insert(n, leaf_bits(set, idx));
+                }
+                Node::Identity => {
+                    memo.insert(n, op.identity_bits(fmt));
+                }
+                Node::Op { l, r } => {
+                    if expanded {
+                        let lv = memo[&l];
+                        let rv = memo[&r];
+                        memo.insert(n, op.apply(fmt, lv, rv));
+                    } else {
+                        stack.push((n, true));
+                        stack.push((l, false));
+                        stack.push((r, false));
+                    }
+                }
+            }
+        }
+        memo[&id]
+    }
+
+    /// All leaves under `id`, in left-to-right order (identity leaves
+    /// excluded).
+    pub fn leaves(&self, id: u32) -> Vec<(u64, u32)> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(n) = stack.pop() {
+            match self.node(n) {
+                Node::Leaf { set, idx } => out.push((set, idx)),
+                Node::Identity => {}
+                Node::Op { l, r } => {
+                    // push right first so left pops first
+                    stack.push(r);
+                    stack.push(l);
+                }
+            }
+        }
+        out
+    }
+
+    /// Depth of the operation tree under `id` (leaves = 0).
+    pub fn depth(&self, id: u32) -> u32 {
+        let mut memo: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        let mut stack = vec![(id, false)];
+        while let Some((n, expanded)) = stack.pop() {
+            if memo.contains_key(&n) {
+                continue;
+            }
+            match self.node(n) {
+                Node::Leaf { .. } | Node::Identity => {
+                    memo.insert(n, 0);
+                }
+                Node::Op { l, r } => {
+                    if expanded {
+                        let d = memo[&l].max(memo[&r]) + 1;
+                        memo.insert(n, d);
+                    } else {
+                        stack.push((n, true));
+                        stack.push((l, false));
+                        stack.push((r, false));
+                    }
+                }
+            }
+        }
+        memo[&id]
+    }
+
+    /// A compact symbolic name for a node, Table-I style: leaves are
+    /// `<set-letter><idx>`; ops over a contiguous run of one set render as
+    /// `Σa0,,4`; anything else parenthesizes.
+    pub fn symbol(&self, id: u32) -> String {
+        fn set_letter(set: u64) -> String {
+            // a, b, ..., z, s26, s27, ...
+            if set < 26 {
+                ((b'a' + set as u8) as char).to_string()
+            } else {
+                format!("s{set}")
+            }
+        }
+        match self.node(id) {
+            Node::Leaf { set, idx } => format!("{}{}", set_letter(set), idx),
+            Node::Identity => "0".to_string(),
+            Node::Op { .. } => {
+                let ls = self.leaves(id);
+                if ls.len() == 1 {
+                    // x + identity: print as the value itself, like the
+                    // paper's Table I does for the a4+0 flush.
+                    let (s, i) = ls[0];
+                    return format!("{}{}", set_letter(s), i);
+                }
+                if let Some((s0, _)) = ls.first() {
+                    let same_set = ls.iter().all(|(s, _)| s == s0);
+                    let mut idxs: Vec<u32> = ls.iter().map(|&(_, i)| i).collect();
+                    idxs.sort_unstable();
+                    let contiguous =
+                        idxs.windows(2).all(|w| w[1] == w[0] + 1) && !idxs.is_empty();
+                    if same_set && contiguous {
+                        if idxs.len() == 2 {
+                            return format!(
+                                "Σ{}{},{}",
+                                set_letter(*s0),
+                                idxs[0],
+                                idxs[1]
+                            );
+                        }
+                        return format!(
+                            "Σ{}{},,{}",
+                            set_letter(*s0),
+                            idxs[0],
+                            idxs[idxs.len() - 1]
+                        );
+                    }
+                }
+                "Σ?".to_string()
+            }
+        }
+    }
+
+    /// Render the operation tree under `id` as ASCII (the Fig. 2 view),
+    /// annotating each op with the cycle it issued at if provided.
+    pub fn render_tree(&self, id: u32, issue_cycle: &dyn Fn(u32) -> Option<u64>) -> String {
+        let mut out = String::new();
+        self.render_rec(id, "", true, true, issue_cycle, &mut out);
+        out
+    }
+
+    fn render_rec(
+        &self,
+        id: u32,
+        prefix: &str,
+        last: bool,
+        is_root: bool,
+        issue_cycle: &dyn Fn(u32) -> Option<u64>,
+        out: &mut String,
+    ) {
+        let branch = if is_root {
+            ""
+        } else if last {
+            "└── "
+        } else {
+            "├── "
+        };
+        let cyc = issue_cycle(id).map(|c| format!("  (c{c})")).unwrap_or_default();
+        out.push_str(&format!("{prefix}{branch}{}{cyc}\n", self.symbol(id)));
+        if let Node::Op { l, r } = self.node(id) {
+            let ext = if is_root {
+                String::new()
+            } else if last {
+                format!("{prefix}    ")
+            } else {
+                format!("{prefix}│   ")
+            };
+            self.render_rec(l, &ext, false, false, issue_cycle, out);
+            self.render_rec(r, &ext, true, false, issue_cycle, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{f32_bits, F32};
+
+    #[test]
+    fn replay_reproduces_tree_sum() {
+        let mut d = Dag::new();
+        let a = d.leaf(0, 0);
+        let b = d.leaf(0, 1);
+        let c = d.leaf(0, 2);
+        let e = d.leaf(0, 3);
+        let ab = d.op(a, b);
+        let ce = d.op(c, e);
+        let root = d.op(ab, ce);
+        let vals = [0.1f32, 0.2, 0.3, 0.4];
+        let leaf = |_s: u64, i: u32| f32_bits(vals[i as usize]);
+        let got = d.replay(root, Operator::Add, F32, &leaf);
+        let want = f32_bits((vals[0] + vals[1]) + (vals[2] + vals[3]));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn leaves_in_order_and_partition() {
+        let mut d = Dag::new();
+        let a = d.leaf(7, 0);
+        let b = d.leaf(7, 1);
+        let i = d.identity();
+        let ab = d.op(a, b);
+        let root = d.op(ab, i);
+        assert_eq!(d.leaves(root), vec![(7, 0), (7, 1)]);
+        assert_eq!(d.depth(root), 2);
+    }
+
+    #[test]
+    fn identity_bits() {
+        assert_eq!(Operator::Add.identity_bits(F32), 0);
+        assert_eq!(Operator::Mul.identity_bits(F32), f32_bits(1.0));
+    }
+
+    #[test]
+    fn symbols_match_table_style() {
+        let mut d = Dag::new();
+        let a0 = d.leaf(0, 0);
+        let a1 = d.leaf(0, 1);
+        let a2 = d.leaf(0, 2);
+        let s01 = d.op(a0, a1);
+        assert_eq!(d.symbol(a0), "a0");
+        assert_eq!(d.symbol(s01), "Σa0,1");
+        let s012 = d.op(s01, a2);
+        assert_eq!(d.symbol(s012), "Σa0,,2");
+        let b0 = d.leaf(1, 0);
+        assert_eq!(d.symbol(b0), "b0");
+    }
+
+    #[test]
+    fn mul_replay() {
+        let mut d = Dag::new();
+        let a = d.leaf(0, 0);
+        let i = d.identity();
+        let root = d.op(a, i);
+        let leaf = |_s: u64, _i: u32| f32_bits(2.5);
+        assert_eq!(d.replay(root, Operator::Mul, F32, &leaf), f32_bits(2.5));
+    }
+
+    #[test]
+    fn render_tree_shows_structure() {
+        let mut d = Dag::new();
+        let a0 = d.leaf(0, 0);
+        let a1 = d.leaf(0, 1);
+        let root = d.op(a0, a1);
+        let s = d.render_tree(root, &|_| None);
+        assert!(s.contains("Σa0,1"));
+        assert!(s.contains("a0"));
+        assert!(s.contains("a1"));
+    }
+}

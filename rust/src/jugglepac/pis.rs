@@ -1,0 +1,253 @@
+//! PIS — the Pair Identifier and Scheduler (paper §III-A, Fig. 3).
+//!
+//! Adder results parked here until a second value with the same label
+//! (i.e. from the same data set) arrives; the completed pair then enters a
+//! 4-slot FIFO, ready to be issued back into the adder whenever the FSM has
+//! a free slot (the circuit's "state 0" additions). A per-register counter
+//! (paper Algorithm 2) flags a value that has waited `L+3` cycles without a
+//! partner as the set's final result.
+//!
+//! The registers are label-indexed — "behaving as a BRAM where the address
+//! is the label", but implemented as discrete registers because 2–8 entries
+//! would leave a BRAM severely underutilized (the paper's area argument).
+
+use crate::cycle::{Clocked, SyncFifo};
+
+/// A value parked in a PIS register.
+#[derive(Clone, Copy, Debug)]
+pub struct Held {
+    pub bits: u64,
+    /// DAG node id (simulation instrumentation, not hardware state).
+    pub node: u32,
+    /// The set this value belongs to (instrumentation; hardware only
+    /// carries the label).
+    pub set_id: u64,
+}
+
+/// A ready pair waiting in the PIS FIFO. Width in hardware:
+/// `2*data_width + label_width` (paper §III-A).
+#[derive(Clone, Copy, Debug)]
+pub struct PairEntry {
+    pub a: Held,
+    pub b: Held,
+    pub label: u8,
+}
+
+/// What happened when an adder result arrived at the PIS.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReceiveOutcome {
+    /// Parked in the (previously empty) register for this label.
+    Stored,
+    /// Completed a pair; both values were pushed to the FIFO.
+    Paired,
+}
+
+/// A final result identified by counter expiry (Algorithm 2).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpiredOutput {
+    pub value: Held,
+    pub label: u8,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pis {
+    regs: Vec<Option<Held>>,
+    counters: Vec<u32>,
+    /// Expiry threshold: adder latency + 3 (paper Algorithm 2).
+    window: u32,
+    pub fifo: SyncFifo<PairEntry>,
+    /// Times a value paired with a value from a *different* set — the
+    /// paper's documented failure mode when sets are shorter than the
+    /// minimum set length (§IV-B). The hardware cannot detect this; the
+    /// simulator counts it so the min-set-length search can.
+    pub collisions: u64,
+}
+
+impl Pis {
+    /// `registers`: 2–8 per the paper's design space. `adder_latency`: L.
+    /// `fifo_capacity`: 4 in the paper.
+    pub fn new(registers: usize, adder_latency: usize, fifo_capacity: usize) -> Self {
+        Self::with_margin(registers, adder_latency, fifo_capacity, 3)
+    }
+
+    /// Like [`Pis::new`] with an explicit expiry margin: the counter window
+    /// is `L + margin` (the paper's Algorithm 2 uses margin 3 — the
+    /// ablation bench shows why smaller margins mis-identify outputs).
+    pub fn with_margin(
+        registers: usize,
+        adder_latency: usize,
+        fifo_capacity: usize,
+        margin: u32,
+    ) -> Self {
+        assert!(registers >= 1);
+        Self {
+            regs: vec![None; registers],
+            counters: vec![0; registers],
+            window: adder_latency as u32 + margin,
+            fifo: SyncFifo::new(fifo_capacity),
+            collisions: 0,
+        }
+    }
+
+    pub fn registers(&self) -> usize {
+        self.regs.len()
+    }
+
+    /// Peek at a register's contents (trace/debug).
+    pub fn reg(&self, label: u8) -> Option<&Held> {
+        self.regs[label as usize].as_ref()
+    }
+
+    /// An adder result arrives with its label (from the shift register).
+    /// Combinational phase; the FIFO push commits at `tick`.
+    pub fn receive(&mut self, label: u8, v: Held) -> ReceiveOutcome {
+        let slot = &mut self.regs[label as usize];
+        match slot.take() {
+            Some(prev) => {
+                if prev.set_id != v.set_id {
+                    // The hardware pairs on label alone; crossing sets is
+                    // exactly what happens below the minimum set length.
+                    self.collisions += 1;
+                }
+                self.fifo.push(PairEntry { a: prev, b: v, label });
+                ReceiveOutcome::Paired
+            }
+            None => {
+                *slot = Some(v);
+                ReceiveOutcome::Stored
+            }
+        }
+    }
+
+    /// One cycle of Algorithm 2: reset the counter of the label that just
+    /// received a value (if any), then advance every counter, flushing any
+    /// register whose counter hits the window as a final output.
+    pub fn step_counters(&mut self, received_label: Option<u8>) -> Vec<ExpiredOutput> {
+        if let Some(l) = received_label {
+            self.counters[l as usize] = 0;
+        }
+        let mut outs = Vec::new();
+        for i in 0..self.regs.len() {
+            if self.counters[i] == self.window {
+                if let Some(v) = self.regs[i].take() {
+                    outs.push(ExpiredOutput { value: v, label: i as u8 });
+                }
+                self.counters[i] = 0;
+            } else {
+                self.counters[i] += 1;
+            }
+        }
+        outs
+    }
+
+    /// Registered head of the ready-pair FIFO.
+    pub fn ready_pair(&self) -> Option<&PairEntry> {
+        self.fifo.dout()
+    }
+
+    /// Consume the head pair this cycle (read-enable).
+    pub fn consume_pair(&mut self) {
+        self.fifo.pop();
+    }
+
+    /// Number of occupied registers (debug/metrics).
+    pub fn occupancy(&self) -> usize {
+        self.regs.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+impl Clocked for Pis {
+    fn tick(&mut self) {
+        self.fifo.tick();
+    }
+
+    fn reset(&mut self) {
+        for r in &mut self.regs {
+            *r = None;
+        }
+        for c in &mut self.counters {
+            *c = 0;
+        }
+        self.fifo.reset();
+        self.collisions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn held(bits: u64, set: u64) -> Held {
+        Held { bits, node: 0, set_id: set }
+    }
+
+    #[test]
+    fn store_then_pair() {
+        let mut p = Pis::new(4, 14, 4);
+        assert_eq!(p.receive(1, held(10, 0)), ReceiveOutcome::Stored);
+        assert_eq!(p.occupancy(), 1);
+        assert_eq!(p.receive(1, held(20, 0)), ReceiveOutcome::Paired);
+        assert_eq!(p.occupancy(), 0);
+        p.tick();
+        let pair = p.ready_pair().unwrap();
+        assert_eq!(pair.a.bits, 10);
+        assert_eq!(pair.b.bits, 20);
+        assert_eq!(pair.label, 1);
+    }
+
+    #[test]
+    fn counter_expires_lone_value_at_window() {
+        let latency = 2;
+        let mut p = Pis::new(2, latency, 4);
+        p.receive(0, held(42, 0));
+        let mut outs = p.step_counters(Some(0));
+        assert!(outs.is_empty());
+        // window = L+3 = 5: after 5 more counter steps the value flushes.
+        for i in 0..10 {
+            outs = p.step_counters(None);
+            if !outs.is_empty() {
+                assert_eq!(i, 4, "flush after counter reaches window");
+                break;
+            }
+        }
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].value.bits, 42);
+        assert_eq!(outs[0].label, 0);
+        assert_eq!(p.occupancy(), 0);
+    }
+
+    #[test]
+    fn receive_resets_counter() {
+        let mut p = Pis::new(2, 2, 4);
+        p.receive(0, held(1, 0));
+        p.step_counters(Some(0));
+        for _ in 0..3 {
+            p.step_counters(None);
+        }
+        // partner arrives just before expiry: pairs, no output
+        assert_eq!(p.receive(0, held(2, 0)), ReceiveOutcome::Paired);
+        let outs = p.step_counters(Some(0));
+        assert!(outs.is_empty());
+        for _ in 0..20 {
+            assert!(p.step_counters(None).is_empty());
+        }
+    }
+
+    #[test]
+    fn empty_register_expiry_is_noop() {
+        let mut p = Pis::new(2, 2, 4);
+        for _ in 0..30 {
+            assert!(p.step_counters(None).is_empty());
+        }
+    }
+
+    #[test]
+    fn label_collision_counted_not_fatal() {
+        // Below the minimum set length the hardware mixes sets (paper
+        // §IV-B); the model must reproduce that, not abort.
+        let mut p = Pis::new(2, 14, 4);
+        p.receive(0, held(1, 0));
+        assert_eq!(p.receive(0, held(2, 99)), ReceiveOutcome::Paired);
+        assert_eq!(p.collisions, 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! # jugglepac — a reproduction of *JugglePAC: A Pipelined Accumulation Circuit*
+//!
+//! This crate rebuilds the paper's two accumulation circuits and everything
+//! they are evaluated against, as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Cycle-accurate circuit models** — [`jugglepac`] (the FP reduction
+//!   circuit: two-state FSM, label shift register, Pair-Identifier-and-
+//!   Scheduler, 4-slot FIFO around a single pipelined FP adder) and
+//!   [`intac`] (carry-save compressor + resource-shared final adder), both
+//!   running on the bit-accurate IEEE-754 substrate in [`fp`] and the
+//!   clocked primitives in [`cycle`].
+//! - **Evaluation substrate** — [`baselines`] (the literature designs the
+//!   paper compares against), [`area`] (the analytical slices/BRAM/MHz
+//!   model standing in for ISE synthesis), [`workload`] (set generators and
+//!   traces, including the paper's fixed-point-ranged methodology).
+//! - **System layer** — [`coordinator`] (a streaming accumulation service
+//!   applying JugglePAC's scheduling idea at software scale) and
+//!   [`runtime`] (PJRT loader executing the AOT-compiled JAX/Pallas
+//!   reduction kernels from `artifacts/`).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod area;
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod cycle;
+pub mod fp;
+pub mod intac;
+pub mod jugglepac;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,273 @@
+//! `jugglepac` — CLI for the JugglePAC/INTAC reproduction.
+//!
+//! Subcommands:
+//!   trace        print the Table-I schedule (or --tree for Fig. 2)
+//!   minset       empirical minimum-set-size search (Table II column)
+//!   table        regenerate a paper table: --n 2|3|4|5
+//!   simulate     run a workload through the cycle-accurate JugglePAC
+//!   intac        run a workload through INTAC
+//!   serve        end-to-end streaming service demo (XLA or native engine)
+//!   artifacts    list the AOT artifacts the runtime sees
+//!
+//! Every paper table also has a bench (`cargo bench`) printing
+//! paper-vs-ours columns; `table` is the quick interactive version.
+
+use anyhow::{bail, Result};
+use jugglepac::cli::Args;
+
+mod tables;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.subcommand.as_deref() {
+        Some("trace") => cmd_trace(&args),
+        Some("minset") => cmd_minset(&args),
+        Some("table") => tables::cmd_table(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("intac") => cmd_intac(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+jugglepac — reproduction of 'JugglePAC: A Pipelined Accumulation Circuit'
+
+USAGE: jugglepac <subcommand> [options]
+
+  trace      [--tree] [--latency L] [--registers R]
+  minset     [--registers R] [--latency L] [--trials T]
+  table      --n 2|3|4|5
+  simulate   [--sets S] [--len N] [--registers R] [--latency L] [--seed X]
+  intac      [--sets S] [--len N] [--inputs I] [--fas K]
+  serve      [--sets S] [--max-len N] [--engine xla|native] [--seed X]
+  artifacts  [--dir PATH]";
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use jugglepac::fp::f64_bits;
+    use jugglepac::jugglepac::{InputBeat, JugglePac, JugglePacConfig};
+    let latency = args.get_usize("latency", 2)?;
+    let registers = args.get_usize("registers", 3)?;
+    let cfg = JugglePacConfig { adder_latency: latency, pis_registers: registers, ..Default::default() };
+
+    if args.flag("tree") {
+        // Fig. 2: accumulation tree for one set of 6.
+        let vals: Vec<u64> = (1..=6).map(|i| f64_bits(i as f64)).collect();
+        let (outs, jp) = jugglepac::jugglepac::run_sets(cfg, &[vals], &|_| 0, 10_000);
+        println!("Fig. 2 — accumulation tree for 6 inputs (c = issue cycle):\n");
+        print!("{}", jp.dag().render_tree(outs[0].node, &|n| jp.issue_cycle_of(n)));
+        return Ok(());
+    }
+
+    // Table I: sets of 5/4/9 back-to-back.
+    let mut jp = JugglePac::new(cfg);
+    jp.enable_trace();
+    let sets: [&[f64]; 3] = [
+        &[1.0, 2.0, 3.0, 4.0, 5.0],
+        &[10.0, 20.0, 30.0, 40.0],
+        &[100.0, 200.0, 300.0, 400.0, 500.0, 600.0, 700.0, 800.0, 900.0],
+    ];
+    for set in sets {
+        for (i, &v) in set.iter().enumerate() {
+            jp.step(Some(InputBeat { bits: f64_bits(v), start: i == 0 }));
+        }
+    }
+    jp.finish_stream();
+    for _ in 0..40 {
+        jp.step(None);
+    }
+    println!("Table I — JugglePAC schedule, 3 sets (5/4/9), adder latency {latency}:\n");
+    print!("{}", jp.trace().unwrap().render());
+    Ok(())
+}
+
+fn cmd_minset(args: &Args) -> Result<()> {
+    use jugglepac::jugglepac::{min_set_size, JugglePacConfig};
+    let latency = args.get_usize("latency", 14)?;
+    let trials = args.get_usize("trials", 8)?;
+    let registers = args.get("registers");
+    let rs: Vec<usize> = match registers {
+        Some(r) => vec![r.parse()?],
+        None => vec![2, 4, 8],
+    };
+    println!("minimum set size (empirical, L={latency}):");
+    println!("{:>10} {:>10} {:>12}", "registers", "min size", "paper");
+    for r in rs {
+        let cfg = JugglePacConfig { adder_latency: latency, pis_registers: r, ..Default::default() };
+        let m = min_set_size(cfg, trials);
+        let paper = match (latency, r) {
+            (14, 2) => "94",
+            (14, 4) => "29",
+            (14, 8) => "18",
+            _ => "-",
+        };
+        println!("{r:>10} {m:>10} {paper:>12}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use jugglepac::baselines::SerialAccumulator;
+    use jugglepac::fp::F64;
+    use jugglepac::jugglepac::{run_sets, JugglePacConfig};
+    use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
+    let cfg = JugglePacConfig {
+        adder_latency: args.get_usize("latency", 14)?,
+        pis_registers: args.get_usize("registers", 4)?,
+        ..Default::default()
+    };
+    let ws = SetStream::generate(&WorkloadConfig {
+        sets: args.get_usize("sets", 64)?,
+        len: LenDist::Fixed(args.get_usize("len", 128)?),
+        seed: args.get_u64("seed", 1)?,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let (outs, jp) = run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
+    let wall = t0.elapsed();
+    let mut exact = 0;
+    for o in &outs {
+        let (want, _) = SerialAccumulator::reduce(F64, &ws.sets[o.set_id as usize]);
+        if o.bits == want {
+            exact += 1;
+        }
+    }
+    let s = jp.stats();
+    println!(
+        "sets: {}/{} reduced ({} bit-exact vs serial oracle)",
+        outs.len(),
+        ws.sets.len(),
+        exact
+    );
+    println!(
+        "cycles: {} | adder utilization: {:.1}% | collisions: {}",
+        s.cycles,
+        100.0 * s.op_utilization(),
+        jp.collisions(),
+    );
+    println!(
+        "sim speed: {:.2} Mcycles/s ({} cycles in {:.1} ms)",
+        s.cycles as f64 / wall.as_secs_f64() / 1e6,
+        s.cycles,
+        wall.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_intac(args: &Args) -> Result<()> {
+    use jugglepac::intac::{oracle_sum, run_sets, FinalAdderKind, IntacConfig};
+    let cfg = IntacConfig {
+        inputs_per_cycle: args.get_usize("inputs", 1)? as u32,
+        final_adder: FinalAdderKind::ResourceShared {
+            fa_cells: args.get_usize("fas", 1)? as u32,
+        },
+        ..Default::default()
+    };
+    let len = args.get_usize("len", cfg.min_set_len() as usize + 16)?;
+    let n_sets = args.get_usize("sets", 16)?;
+    let mut rng = jugglepac::util::Xoshiro256::seeded(args.get_u64("seed", 1)?);
+    let sets: Vec<Vec<u64>> =
+        (0..n_sets).map(|_| (0..len).map(|_| rng.next_u64()).collect()).collect();
+    let (outs, m) = run_sets(cfg, &sets, 1_000_000);
+    let ok = outs
+        .iter()
+        .enumerate()
+        .filter(|(i, o)| o.value == oracle_sum(cfg, &sets[*i]))
+        .count();
+    println!(
+        "INTAC inputs/cycle={} FAs={:?}: {}/{} sets exact, stalled={}, \
+         min_set_len={}, eq(1) latency for len {len}: {}",
+        cfg.inputs_per_cycle,
+        cfg.final_adder,
+        ok,
+        n_sets,
+        m.stalled(),
+        cfg.min_set_len(),
+        cfg.latency(len as u64)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+    use jugglepac::util::Xoshiro256;
+    let sets = args.get_usize("sets", 2000)?;
+    let max_len = args.get_usize("max-len", 700)?;
+    let engine = match args.get_or("engine", "xla") {
+        "xla" => EngineKind::Xla {
+            artifacts_dir: jugglepac::runtime::default_artifacts_dir(),
+            artifact: args.get_or("artifact", "reduce_f32_b32_n128").to_string(),
+        },
+        "native" => EngineKind::Native { batch: 8, n: 256 },
+        other => bail!("--engine must be xla|native, got {other:?}"),
+    };
+    let mut svc = Service::start(ServiceConfig { engine, ..Default::default() })?;
+    let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
+    let t0 = std::time::Instant::now();
+    let mut want = Vec::with_capacity(sets);
+    // Submit in bursts: one channel wake per 128 sets (see coordinator
+    // docs — per-message wakes dominate on small machines).
+    let mut burst: Vec<Vec<f32>> = Vec::with_capacity(128);
+    for _ in 0..sets {
+        let n = rng.range(1, max_len);
+        let set: Vec<f32> = (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+        want.push(set.iter().sum::<f32>());
+        burst.push(set);
+        if burst.len() == 128 {
+            svc.submit_burst(std::mem::take(&mut burst))?;
+        }
+    }
+    if !burst.is_empty() {
+        svc.submit_burst(burst)?;
+    }
+    if std::env::var("JUGGLEPAC_PHASES").is_ok() {
+        eprintln!("phase: submit done at {:?}", t0.elapsed());
+    }
+    let mut exact = 0;
+    for i in 0..sets {
+        let r = svc
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .ok_or_else(|| anyhow::anyhow!("timed out waiting for response {i}"))?;
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        if r.sum == want[i] {
+            exact += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    if std::env::var("JUGGLEPAC_PHASES").is_ok() {
+        eprintln!("phase: all responses at {wall:?}");
+    }
+    let cap = svc.batch_capacity();
+    let m = svc.shutdown();
+    println!("{}", m.report(wall, cap));
+    println!("value check: {exact}/{sets} exact");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(jugglepac::runtime::default_artifacts_dir);
+    let specs = jugglepac::runtime::read_manifest(&dir)?;
+    println!("{:<24} {:>6} {:>6} {:>8} {:>5} {}", "name", "batch", "n", "dtype", "outs", "kind");
+    for s in specs {
+        println!(
+            "{:<24} {:>6} {:>6} {:>8} {:>5} {:?}",
+            s.name, s.batch, s.n, s.dtype, s.n_outputs, s.kind
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! Table regeneration — the evaluation-section reproduction (deliverable d).
+//!
+//! One function per paper table. Each prints published values next to what
+//! our models produce (analytical area/timing + executable cycle sims), so
+//! the *shape* claims — who wins, by what factor, where the trends bend —
+//! are checkable at a glance. Used by both `jugglepac table --n <k>` and
+//! the `cargo bench` harnesses; EXPERIMENTS.md archives the output.
+
+use crate::area::{estimate, Design, FpgaFamily};
+use crate::baselines::catalog::{
+    published_table2, published_table3, published_table4, published_table5,
+};
+use crate::baselines::treesched::{self, SchedKind, TreeSchedulerConfig};
+use crate::fp::{f64_bits, F64};
+use crate::intac::{FinalAdderKind, IntacConfig};
+use crate::jugglepac::{min_set_size, JugglePacConfig};
+use crate::util::Xoshiro256;
+use crate::workload::{LenDist, SetStream, WorkloadConfig};
+
+fn jp_cfg(r: usize) -> JugglePacConfig {
+    JugglePacConfig { adder_latency: 14, pis_registers: r, ..Default::default() }
+}
+
+/// Measured per-set latency tail (max over sets of first-input→outEn minus
+/// DS) for back-to-back DS-sized sets.
+pub fn measured_latency_tail(cfg: JugglePacConfig, ds: usize, n_sets: usize) -> u64 {
+    let ws = SetStream::generate(&WorkloadConfig {
+        sets: n_sets,
+        len: LenDist::Fixed(ds),
+        seed: 0x7A11,
+        ..Default::default()
+    });
+    let mut jp = crate::jugglepac::JugglePac::new(cfg);
+    let mut first = Vec::new();
+    for set in &ws.sets {
+        for (i, &v) in set.iter().enumerate() {
+            if i == 0 {
+                first.push(jp.now());
+            }
+            jp.step(Some(crate::jugglepac::InputBeat { bits: v, start: i == 0 }));
+        }
+    }
+    jp.finish_stream();
+    for _ in 0..20_000 {
+        jp.step(None);
+    }
+    jp.take_outputs()
+        .iter()
+        .map(|o| o.cycle - first[o.set_id as usize] - ds as u64)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Table II: PIS register sweep (slices / MHz / latency tail / min size).
+pub fn table2() -> String {
+    let mut s = String::new();
+    s.push_str("Table II — PIS register sweep (DP adder, L=14, XC2VP30)\n");
+    s.push_str(&format!(
+        "{:>4} | {:>7} {:>7} | {:>6} {:>6} | {:>9} {:>9} | {:>6} {:>6}\n",
+        "R", "slices", "(paper)", "MHz", "(pap.)", "lat tail", "(paper)", "minset", "(pap.)"
+    ));
+    for row in published_table2() {
+        let cfg = jp_cfg(row.registers as usize);
+        let rep = estimate(&Design::JugglePac(cfg), FpgaFamily::Virtex2Pro);
+        let tail = measured_latency_tail(cfg, 128, 24);
+        let minset = min_set_size(cfg, 6);
+        s.push_str(&format!(
+            "{:>4} | {:>7} {:>7} | {:>6.0} {:>6.0} | {:>9} {:>9} | {:>6} {:>6}\n",
+            row.registers,
+            rep.slices,
+            row.slices,
+            rep.freq_mhz,
+            row.freq_mhz,
+            format!("DS+{tail}"),
+            format!("DS+{}", row.latency_tail),
+            minset,
+            row.min_set_size,
+        ));
+    }
+    s
+}
+
+/// Measured total latency (cycles, first input → last result) for one
+/// DS-sized set through a literature scheduler shape.
+fn sched_latency(kind: SchedKind, ds: usize) -> u64 {
+    let mut rng = Xoshiro256::seeded(3);
+    let set: Vec<u64> =
+        (0..ds).map(|_| f64_bits(rng.range_i64(-1000, 1000) as f64)).collect();
+    let cfg = TreeSchedulerConfig { fmt: F64, adder_latency: 14, kind };
+    let (outs, _) = treesched::run_sets(cfg, &[set], 100_000);
+    outs[0].cycle + 1
+}
+
+/// Table III: comparison on XC2VP30 (DS=128, DP, L=14).
+pub fn table3() -> String {
+    let ds = 128usize;
+    let mut s = String::new();
+    s.push_str("Table III — accumulator comparison, XC2VP30, DS=128, DP L=14\n");
+    s.push_str(&format!(
+        "{:<14} {:>3} | {:>7} {:>7} | {:>4} | {:>5} {:>6} | {:>8} {:>8} | {:>9}\n",
+        "design", "add", "slices", "(model)", "BRAM", "MHz", "(modl)", "lat cyc", "(meas.)", "slices×µs"
+    ));
+    let jp_tail = |r: usize| 128 + measured_latency_tail(jp_cfg(r), ds, 16);
+    for row in published_table3() {
+        // Our model/measurement column where we have one.
+        let (model_slices, model_freq, measured_lat): (String, String, String) = match row.design
+        {
+            d if d.starts_with("JugglePAC") => {
+                let r: usize = d.rsplit('_').next().unwrap().parse().unwrap();
+                let rep = estimate(&Design::JugglePac(jp_cfg(r)), FpgaFamily::Virtex2Pro);
+                (rep.slices.to_string(), format!("{:.0}", rep.freq_mhz), jp_tail(r).to_string())
+            }
+            "FCBT [7]" => ("-".into(), "-".into(), sched_latency(SchedKind::Fcbt, ds).to_string()),
+            "DSA [7]" => ("-".into(), "-".into(), sched_latency(SchedKind::Dsa, ds).to_string()),
+            "SSA [7]" | "DB [14]" => {
+                ("-".into(), "-".into(), sched_latency(SchedKind::Ssa, ds).to_string())
+            }
+            _ => ("-".into(), "-".into(), "-".into()),
+        };
+        s.push_str(&format!(
+            "{:<14} {:>3} | {:>7} {:>7} | {:>4} | {:>5.0} {:>6} | {:>8} {:>8} | {:>9.0}\n",
+            row.design,
+            row.adders,
+            row.slices,
+            model_slices,
+            row.brams,
+            row.freq_mhz,
+            model_freq,
+            format!("{}{}", if row.latency_is_bound { "≤" } else { "" }, row.latency_cycles),
+            measured_lat,
+            row.slices_x_us(),
+        ));
+    }
+    // Headline shape checks.
+    let rows = published_table3();
+    let jp2 = rows.iter().find(|r| r.design == "JugglePAC_2").unwrap();
+    let min_slices = rows.iter().map(|r| r.slices).min().unwrap();
+    s.push_str(&format!(
+        "\nshape: JugglePAC_2 lowest slices ({} == min {}), 0 BRAMs; freq within {:.1}% of best\n",
+        jp2.slices,
+        min_slices,
+        100.0 * (207.0 - jp2.freq_mhz) / 207.0
+    ));
+    s
+}
+
+/// Table IV: cross-FPGA (Virtex-5) comparison.
+pub fn table4() -> String {
+    let mut s = String::new();
+    s.push_str("Table IV — Virtex-5 comparison (DP adder, L=14, ISE 14.7)\n");
+    s.push_str(&format!(
+        "{:<14} | {:>7} {:>7} | {:>4} | {:>5} {:>6} | {}\n",
+        "design", "slices", "(model)", "BRAM", "MHz", "(modl)", "FPGA"
+    ));
+    for row in published_table4() {
+        let (ms, mf) = if row.design.starts_with("JugglePAC") {
+            let r: usize = row.design.rsplit('_').next().unwrap().parse().unwrap();
+            let rep = estimate(&Design::JugglePac(jp_cfg(r)), FpgaFamily::Virtex5);
+            (rep.slices.to_string(), format!("{:.0}", rep.freq_mhz))
+        } else {
+            ("-".into(), "-".into())
+        };
+        s.push_str(&format!(
+            "{:<14} | {:>7} {:>7} | {:>4} | {:>5.0} {:>6} | {}\n",
+            row.design, row.slices, ms, row.brams, row.freq_mhz, mf, row.fpga
+        ));
+    }
+    s
+}
+
+/// Table V: INTAC vs standard adder (64-bit in, 128-bit out).
+pub fn table5() -> String {
+    let mut s = String::new();
+    s.push_str("Table V — INTAC vs standard adder (in 64b, out 128b, Virtex-5)\n");
+    s.push_str(&format!(
+        "{:<6} {:>6} {:>4} | {:>7} {:>7} | {:>5} {:>6} | {:>10} {:>10}\n",
+        "design", "inputs", "FAs", "slices", "(modl)", "MHz", "(modl)", "latency", "(meas.)"
+    ));
+    for row in published_table5() {
+        let (design, measured_lat): (Design, String) = if row.design == "SA" {
+            (
+                Design::StandardAdder(128, row.inputs),
+                format!("N/{}", row.inputs),
+            )
+        } else {
+            let cfg = IntacConfig {
+                inputs_per_cycle: row.inputs,
+                final_adder: FinalAdderKind::ResourceShared { fa_cells: row.fas },
+                ..Default::default()
+            };
+            // measure tail on a min-length workload
+            let n = cfg.min_set_len() + 32;
+            let set: Vec<u64> = (0..n).map(|i| i * 3).collect();
+            let (outs, _) = crate::intac::run_sets(cfg, &[set], 100_000);
+            let total = outs[0].cycle + 1;
+            let tail = total - n.div_ceil(row.inputs as u64);
+            (Design::Intac(cfg), format!("N/{}+{}", row.inputs, tail))
+        };
+        let rep = estimate(&design, FpgaFamily::Virtex5);
+        let pub_lat = if row.design == "SA" {
+            format!("N/{}", row.inputs)
+        } else {
+            format!("N/{}+{}", row.inputs, row.latency_tail)
+        };
+        s.push_str(&format!(
+            "{:<6} {:>6} {:>4} | {:>7} {:>7} | {:>5.0} {:>6.0} | {:>10} {:>10}\n",
+            row.design,
+            row.inputs,
+            row.fas,
+            row.slices,
+            rep.slices,
+            row.freq_mhz,
+            rep.freq_mhz,
+            pub_lat,
+            measured_lat,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_and_5_render() {
+        let t4 = table4();
+        assert!(t4.contains("JugglePAC_4"));
+        assert!(t4.contains("VC5VSX50T"));
+        let t5 = table5();
+        assert!(t5.contains("INTAC"));
+        assert!(t5.lines().count() >= 10);
+    }
+
+    #[test]
+    fn table2_renders_with_measurements() {
+        let t2 = table2();
+        assert!(t2.contains("DS+"));
+        assert!(t2.lines().count() == 5);
+    }
+}

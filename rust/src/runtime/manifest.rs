@@ -1,0 +1,130 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt` with one line
+//! per lowered variant:
+//! ```text
+//! <name> <file> <kind> <batch> <n> <dtype> <n_outputs>
+//! ```
+//! Plain whitespace-separated text — the offline crate set has no serde,
+//! and this format is trivially stable across the language boundary.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What a variant computes (mirrors `python/compile/aot.py` VARIANTS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (sums,) = reduce_batch(x, lengths)
+    Reduce,
+    /// (sums, means) = reduce_batch_stats(x, lengths)
+    Stats,
+    /// (dots,) = dot_accumulate(a, b, lengths)
+    Dot,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "reduce" => ArtifactKind::Reduce,
+            "stats" => ArtifactKind::Stats,
+            "dot" => ArtifactKind::Dot,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One lowered model variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub n: usize,
+    pub dtype: String,
+    pub n_outputs: usize,
+}
+
+/// Parse `manifest.txt` in `dir`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+    let mut specs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 7 {
+            bail!("manifest line {}: expected 7 fields, got {}", i + 1, f.len());
+        }
+        specs.push(ArtifactSpec {
+            name: f[0].to_string(),
+            path: dir.join(f[1]),
+            kind: ArtifactKind::parse(f[2])?,
+            batch: f[3].parse().context("batch")?,
+            n: f[4].parse().context("n")?,
+            dtype: f[5].to_string(),
+            n_outputs: f[6].parse().context("n_outputs")?,
+        });
+    }
+    if specs.is_empty() {
+        bail!("manifest {} is empty", path.display());
+    }
+    Ok(specs)
+}
+
+/// Locate the artifacts directory: `$JUGGLEPAC_ARTIFACTS`, else
+/// `<crate root>/artifacts` (works from `cargo test`/`cargo bench`), else
+/// `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("JUGGLEPAC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let from_crate = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if from_crate.exists() {
+        return from_crate;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_wellformed_manifest() {
+        let dir = std::env::temp_dir().join("jugglepac_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "r1 r1.hlo.txt reduce 8 256 float32 1\n\ns1 s1.hlo.txt stats 8 256 float32 2\n",
+        )
+        .unwrap();
+        let specs = read_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, ArtifactKind::Reduce);
+        assert_eq!(specs[1].n_outputs, 2);
+        assert_eq!(specs[0].batch, 8);
+        assert_eq!(specs[0].n, 256);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("jugglepac_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "too few fields\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let dir = std::env::temp_dir().join("jugglepac_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = read_manifest(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

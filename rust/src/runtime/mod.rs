@@ -1,0 +1,139 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text from
+//! `artifacts/` → `HloModuleProto::from_text_file` → `client.compile` →
+//! `execute`. One compiled executable per model variant, loaded once at
+//! startup; the serve path never touches Python.
+//!
+//! Threading: the PJRT wrapper types are not `Send`/`Sync`, so the
+//! coordinator owns a [`Runtime`] inside a dedicated engine thread and
+//! feeds it through channels (see [`crate::coordinator`]).
+
+pub mod manifest;
+
+pub use manifest::{default_artifacts_dir, read_manifest, ArtifactKind, ArtifactSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded, compiled model variant.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchResult {
+    /// Per-set sums, length = batch.
+    pub sums: Vec<f32>,
+    /// Per-set means (only for `Stats` artifacts).
+    pub means: Option<Vec<f32>>,
+}
+
+impl LoadedModel {
+    /// Execute on a padded batch. `x` is row-major `[batch, n]`,
+    /// `lengths` the per-row valid prefix.
+    pub fn run(&self, x: &[f32], lengths: &[i32]) -> Result<BatchResult> {
+        let (b, n) = (self.spec.batch, self.spec.n);
+        if x.len() != b * n {
+            bail!("x has {} values, artifact {} wants {}x{}", x.len(), self.spec.name, b, n);
+        }
+        if lengths.len() != b {
+            bail!("lengths has {} entries, want {b}", lengths.len());
+        }
+        if self.spec.kind == ArtifactKind::Dot {
+            bail!("dot artifacts need run_dot()");
+        }
+        let xs = xla::Literal::vec1(x).reshape(&[b as i64, n as i64])?;
+        let ls = xla::Literal::vec1(lengths);
+        let result = self.exe.execute::<xla::Literal>(&[xs, ls])?[0][0].to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Execute a dot-accumulate artifact: rowwise dot(a, b) over prefixes.
+    pub fn run_dot(&self, a: &[f32], bvals: &[f32], lengths: &[i32]) -> Result<BatchResult> {
+        let (b, n) = (self.spec.batch, self.spec.n);
+        if self.spec.kind != ArtifactKind::Dot {
+            bail!("artifact {} is not a dot variant", self.spec.name);
+        }
+        if a.len() != b * n || bvals.len() != b * n {
+            bail!("operand size mismatch for {}", self.spec.name);
+        }
+        let la = xla::Literal::vec1(a).reshape(&[b as i64, n as i64])?;
+        let lb = xla::Literal::vec1(bvals).reshape(&[b as i64, n as i64])?;
+        let ls = xla::Literal::vec1(lengths);
+        let result = self.exe.execute::<xla::Literal>(&[la, lb, ls])?[0][0].to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<BatchResult> {
+        // aot.py lowers with return_tuple=True: outputs arrive as a tuple.
+        match self.spec.kind {
+            ArtifactKind::Reduce | ArtifactKind::Dot => {
+                let sums = result.to_tuple1()?.to_vec::<f32>()?;
+                Ok(BatchResult { sums, means: None })
+            }
+            ArtifactKind::Stats => {
+                let (s, m) = result.to_tuple2()?;
+                Ok(BatchResult { sums: s.to_vec::<f32>()?, means: Some(m.to_vec::<f32>()?) })
+            }
+        }
+    }
+}
+
+/// The runtime: a PJRT CPU client plus every compiled artifact.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (see [`default_artifacts_dir`]).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let specs = read_manifest(dir)?;
+        let mut models = HashMap::new();
+        for spec in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", spec.path))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", spec.name))?;
+            models.insert(spec.name.clone(), LoadedModel { spec, exe });
+        }
+        Ok(Self { client, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pick the smallest reduce artifact whose (batch, n) fits the request.
+    pub fn best_reduce_for(&self, sets: usize, max_len: usize) -> Result<&LoadedModel> {
+        self.models
+            .values()
+            .filter(|m| {
+                m.spec.kind == ArtifactKind::Reduce && m.spec.batch >= sets && m.spec.n >= max_len
+            })
+            .min_by_key(|m| m.spec.batch * m.spec.n)
+            .ok_or_else(|| {
+                anyhow!("no reduce artifact fits {sets} sets of up to {max_len} values")
+            })
+    }
+}

@@ -1,0 +1,28 @@
+//! `jugglepac table --n <2|3|4|5>` — regenerate a paper table.
+
+use anyhow::{bail, Result};
+use jugglepac::cli::Args;
+use jugglepac::report;
+
+pub fn cmd_table(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 0)?;
+    let out = match n {
+        2 => report::table2(),
+        3 => report::table3(),
+        4 => report::table4(),
+        5 => report::table5(),
+        0 => {
+            // all of them
+            format!(
+                "{}\n{}\n{}\n{}",
+                report::table2(),
+                report::table3(),
+                report::table4(),
+                report::table5()
+            )
+        }
+        other => bail!("no table {other}; tables are 2, 3, 4, 5 (Table I: `jugglepac trace`)"),
+    };
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Minimal property-test harness (the offline crate set has no proptest).
+//!
+//! [`property`] runs a closure over many deterministically-seeded RNGs and
+//! reports the failing seed, so a red run is reproducible with
+//! `PROPTEST_SEED=<seed>`: the harness then runs only that case.
+
+use crate::util::rng::Xoshiro256;
+
+/// Run `f` for `iters` seeded cases. Panics (with the seed) on the first
+/// failing case. Set `PROPTEST_SEED` to re-run a single seed.
+pub fn property<F: FnMut(&mut Xoshiro256)>(name: &str, iters: u64, mut f: F) {
+    if let Ok(s) = std::env::var("PROPTEST_SEED") {
+        let seed: u64 = s.parse().expect("PROPTEST_SEED must be a u64");
+        let mut rng = Xoshiro256::seeded(seed);
+        f(&mut rng);
+        return;
+    }
+    for i in 0..iters {
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(i + 1)
+            .wrapping_add(fxhash(name));
+        let mut rng = Xoshiro256::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at iteration {i} — rerun with PROPTEST_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_iterations() {
+        let mut count = 0;
+        property("counter", 10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_case_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            property("always-fails", 3, |_| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn seeds_differ_across_names() {
+        assert_ne!(fxhash("a"), fxhash("b"));
+    }
+}

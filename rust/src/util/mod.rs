@@ -1,0 +1,8 @@
+//! Cross-cutting utilities: deterministic RNG, histogram, fixed-point
+//! helpers. These stand in for the absent `rand`/`hdrhistogram` crates.
+
+pub mod hist;
+pub mod rng;
+
+pub use hist::Histogram;
+pub use rng::{SplitMix64, Xoshiro256};

@@ -1,0 +1,227 @@
+//! Set-stream generators.
+
+use crate::fp::{f64_bits, FpFormat, F32, F64};
+use crate::util::rng::Xoshiro256;
+
+/// Distribution of set lengths.
+#[derive(Clone, Copy, Debug)]
+pub enum LenDist {
+    /// All sets have the same length (the paper's table workloads: 128).
+    Fixed(usize),
+    /// Uniform in [lo, hi] (the paper's variable-size claim).
+    Uniform(usize, usize),
+    /// Bimodal mixture: short with probability p, else long — stresses
+    /// the PIS label juggling.
+    Bimodal { short: usize, long: usize, p_short: f64 },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => rng.range(lo, hi),
+            LenDist::Bimodal { short, long, p_short } => {
+                if rng.chance(p_short) {
+                    short
+                } else {
+                    long
+                }
+            }
+        }
+    }
+
+    /// Largest length this distribution can produce.
+    pub fn max(&self) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(_, hi) => hi,
+            LenDist::Bimodal { short, long, .. } => short.max(long),
+        }
+    }
+}
+
+/// Distribution of gaps (idle cycles) between consecutive sets.
+#[derive(Clone, Copy, Debug)]
+pub enum GapDist {
+    /// Back-to-back (the hard case the paper targets).
+    None,
+    Fixed(usize),
+    Uniform(usize, usize),
+}
+
+impl GapDist {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        match *self {
+            GapDist::None => 0,
+            GapDist::Fixed(n) => n,
+            GapDist::Uniform(lo, hi) => rng.range(lo, hi),
+        }
+    }
+}
+
+/// How values are drawn.
+#[derive(Clone, Copy, Debug)]
+pub enum ValueGen {
+    /// §IV-E methodology: integers in [-range, range] scaled by 2^-frac.
+    /// Sums of up to ~2^(52 - frac - log2(range)) values stay exact in DP,
+    /// so any association order yields identical bits.
+    ExactFixedPoint { range: i64, frac_bits: u32 },
+    /// Uniform reals in [lo, hi] — order-sensitive; verified via DAG
+    /// replay rather than against the serial oracle.
+    UniformReal { lo: f64, hi: f64 },
+    /// Magnitude-imbalanced: large anchors with tiny followers, the
+    /// cancellation-stress case of §I.
+    Imbalanced,
+}
+
+impl ValueGen {
+    pub fn sample(&self, fmt: FpFormat, rng: &mut Xoshiro256) -> u64 {
+        let v: f64 = match *self {
+            ValueGen::ExactFixedPoint { range, frac_bits } => {
+                let int = rng.range_i64(-range, range);
+                int as f64 / (1u64 << frac_bits) as f64
+            }
+            ValueGen::UniformReal { lo, hi } => lo + rng.next_f64() * (hi - lo),
+            ValueGen::Imbalanced => {
+                if rng.chance(0.1) {
+                    (rng.next_f64() - 0.5) * 1e12
+                } else {
+                    (rng.next_f64() - 0.5) * 1e-3
+                }
+            }
+        };
+        to_bits(fmt, v)
+    }
+
+    /// Is the generated workload exactly summable (order-insensitive)?
+    pub fn exact(&self) -> bool {
+        matches!(self, ValueGen::ExactFixedPoint { .. })
+    }
+}
+
+/// Encode an f64 value into the target format's bits (DP: reinterpret;
+/// SP: round once — exact for fixed-point values within SP's range).
+pub fn to_bits(fmt: FpFormat, v: f64) -> u64 {
+    if fmt == F64 {
+        f64_bits(v)
+    } else if fmt == F32 {
+        (v as f32).to_bits() as u64
+    } else {
+        // Narrow formats: go through f32 then truncate via our own packer
+        // would double-round; for workloads we only use SP/DP.
+        panic!("workload generation supports F32/F64 only")
+    }
+}
+
+/// Complete workload description (recorded in EXPERIMENTS.md with seed).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    pub fmt: FpFormat,
+    pub sets: usize,
+    pub len: LenDist,
+    pub gap: GapDist,
+    pub values: ValueGen,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    /// The headline Table III workload: DP, 128-element sets, back-to-back,
+    /// exact fixed-point values.
+    fn default() -> Self {
+        Self {
+            fmt: F64,
+            sets: 64,
+            len: LenDist::Fixed(128),
+            gap: GapDist::None,
+            values: ValueGen::ExactFixedPoint { range: 1 << 20, frac_bits: 12 },
+            seed: 0xACC0_0001,
+        }
+    }
+}
+
+/// A generated stream of sets (+ gaps).
+#[derive(Clone, Debug)]
+pub struct SetStream {
+    pub fmt: FpFormat,
+    pub sets: Vec<Vec<u64>>,
+    /// Idle cycles after each set.
+    pub gaps: Vec<usize>,
+}
+
+impl SetStream {
+    pub fn generate(cfg: &WorkloadConfig) -> Self {
+        let mut rng = Xoshiro256::seeded(cfg.seed);
+        let mut sets = Vec::with_capacity(cfg.sets);
+        let mut gaps = Vec::with_capacity(cfg.sets);
+        for _ in 0..cfg.sets {
+            let n = cfg.len.sample(&mut rng).max(1);
+            sets.push((0..n).map(|_| cfg.values.sample(cfg.fmt, &mut rng)).collect());
+            gaps.push(cfg.gap.sample(&mut rng));
+        }
+        Self { fmt: cfg.fmt, sets, gaps }
+    }
+
+    /// Total input beats (excluding gaps).
+    pub fn total_values(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::bits_f64;
+
+    #[test]
+    fn fixed_point_values_sum_exactly_in_any_order() {
+        let cfg = WorkloadConfig { sets: 4, ..Default::default() };
+        let ws = SetStream::generate(&cfg);
+        for set in &ws.sets {
+            let fwd: f64 = set.iter().map(|&b| bits_f64(b)).sum();
+            let rev: f64 = set.iter().rev().map(|&b| bits_f64(b)).sum();
+            // pairwise
+            let mut vals: Vec<f64> = set.iter().map(|&b| bits_f64(b)).collect();
+            while vals.len() > 1 {
+                vals = vals.chunks(2).map(|c| c.iter().sum()).collect();
+            }
+            assert_eq!(fwd.to_bits(), rev.to_bits());
+            assert_eq!(fwd.to_bits(), vals[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = WorkloadConfig::default();
+        let a = SetStream::generate(&cfg);
+        let b = SetStream::generate(&cfg);
+        assert_eq!(a.sets, b.sets);
+    }
+
+    #[test]
+    fn variable_lengths_within_bounds() {
+        let cfg = WorkloadConfig {
+            len: LenDist::Uniform(30, 50),
+            sets: 100,
+            ..Default::default()
+        };
+        let ws = SetStream::generate(&cfg);
+        assert!(ws.sets.iter().all(|s| (30..=50).contains(&s.len())));
+        let lens: std::collections::HashSet<usize> = ws.sets.iter().map(|s| s.len()).collect();
+        assert!(lens.len() > 5, "should actually vary");
+    }
+
+    #[test]
+    fn imbalanced_values_have_spread() {
+        let cfg = WorkloadConfig {
+            values: ValueGen::Imbalanced,
+            sets: 2,
+            len: LenDist::Fixed(256),
+            ..Default::default()
+        };
+        let ws = SetStream::generate(&cfg);
+        let mags: Vec<f64> = ws.sets[0].iter().map(|&b| bits_f64(b).abs()).collect();
+        let max = mags.iter().cloned().fold(0.0, f64::max);
+        let min = mags.iter().cloned().filter(|&m| m > 0.0).fold(f64::MAX, f64::min);
+        assert!(max / min > 1e9, "magnitude spread {max}/{min}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload generation and trace I/O.
+//!
+//! Reproduces the paper's testbench methodology (§IV-E): variable-length
+//! data sets arriving back-to-back or with gaps (Fig. 1), with values
+//! drawn through a fixed-point-to-floating-point conversion so sums are
+//! exact and therefore association-order-insensitive — that is what makes
+//! bit-exact comparison against the serial behavioral model meaningful.
+//! Unrestricted float workloads are also provided for the replay-DAG
+//! verification path (where order *does* matter and the DAG is the spec).
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig};
+pub use trace::{read_trace, write_trace, TraceFile};

@@ -1,0 +1,121 @@
+//! Plain-text trace files (no serde in the offline crate set).
+//!
+//! Format, one token per whitespace-separated field:
+//! ```text
+//! jugglepac-trace v1
+//! fmt f64
+//! set <len> <gap> <hex> <hex> ...
+//! set ...
+//! ```
+//! Values are raw bit patterns in hex so round-trips are bit-exact.
+
+use crate::fp::{FpFormat, F32, F64};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// An on-disk workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFile {
+    pub fmt: FpFormat,
+    pub sets: Vec<Vec<u64>>,
+    pub gaps: Vec<usize>,
+}
+
+/// Write a trace to `path`.
+pub fn write_trace(path: &Path, t: &TraceFile) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "jugglepac-trace v1")?;
+    writeln!(w, "fmt {}", if t.fmt == F64 { "f64" } else { "f32" })?;
+    for (set, gap) in t.sets.iter().zip(&t.gaps) {
+        write!(w, "set {} {}", set.len(), gap)?;
+        for v in set {
+            write!(w, " {v:x}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Read a trace from `path`.
+pub fn read_trace(path: &Path) -> Result<TraceFile> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().context("empty trace")??;
+    if header.trim() != "jugglepac-trace v1" {
+        bail!("bad trace header: {header:?}");
+    }
+    let fmt_line = lines.next().context("missing fmt line")??;
+    let fmt = match fmt_line.trim() {
+        "fmt f64" => F64,
+        "fmt f32" => F32,
+        other => bail!("bad fmt line: {other:?}"),
+    };
+    let mut sets = Vec::new();
+    let mut gaps = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("set") => {}
+            other => bail!("line {}: expected 'set', got {other:?}", ln + 3),
+        }
+        let len: usize = it.next().context("missing len")?.parse()?;
+        let gap: usize = it.next().context("missing gap")?.parse()?;
+        let vals: Vec<u64> = it
+            .map(|tok| u64::from_str_radix(tok, 16).context("bad hex value"))
+            .collect::<Result<_>>()?;
+        if vals.len() != len {
+            bail!("line {}: declared len {len} but {} values", ln + 3, vals.len());
+        }
+        sets.push(vals);
+        gaps.push(gap);
+    }
+    Ok(TraceFile { fmt, sets, gaps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::{SetStream, WorkloadConfig};
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let ws = SetStream::generate(&WorkloadConfig {
+            sets: 5,
+            ..Default::default()
+        });
+        let t = TraceFile { fmt: ws.fmt, sets: ws.sets.clone(), gaps: ws.gaps.clone() };
+        let dir = std::env::temp_dir().join("jugglepac_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.trace");
+        write_trace(&path, &t).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let dir = std::env::temp_dir().join("jugglepac_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trace");
+        std::fs::write(&path, "not a trace\n").unwrap();
+        assert!(read_trace(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let dir = std::env::temp_dir().join("jugglepac_test_traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mismatch.trace");
+        std::fs::write(&path, "jugglepac-trace v1\nfmt f64\nset 3 0 aa bb\n").unwrap();
+        assert!(read_trace(&path).is_err());
+    }
+}

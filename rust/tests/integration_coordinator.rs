@@ -1,0 +1,138 @@
+//! Integration: the streaming service end-to-end on the XLA engine
+//! (AOT Pallas artifact through PJRT), cross-checked against the native
+//! engine bit-for-bit.
+
+use jugglepac::coordinator::{EngineKind, Response, Service, ServiceConfig};
+use jugglepac::runtime::default_artifacts_dir;
+use jugglepac::util::Xoshiro256;
+use std::time::Duration;
+
+fn have_artifacts() -> bool {
+    let ok = default_artifacts_dir().join("manifest.txt").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn xla_cfg() -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineKind::Xla {
+            artifacts_dir: default_artifacts_dir(),
+            artifact: "reduce_f32_b8_n256".to_string(),
+        },
+        batch_deadline: Duration::from_micros(200),
+        ordered: true,
+        queue_depth: 256,
+    }
+}
+
+fn collect(svc: &Service, n: usize) -> Vec<Response> {
+    (0..n)
+        .map(|i| svc.recv_timeout(Duration::from_secs(20)).unwrap_or_else(|| panic!("response {i}")))
+        .collect()
+}
+
+#[test]
+fn xla_service_reduces_variable_sets_in_order() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut svc = Service::start(xla_cfg()).unwrap();
+    let mut rng = Xoshiro256::seeded(1);
+    let mut want = Vec::new();
+    let count = 50;
+    for _ in 0..count {
+        let n = rng.range(1, 700); // spans chunking (N=256)
+        let set: Vec<f32> = (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+        want.push(set.iter().sum::<f32>());
+        svc.submit(set).unwrap();
+    }
+    let got = collect(&svc, count);
+    for (i, r) in got.iter().enumerate() {
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        assert_eq!(r.sum, want[i], "req {i} (exact fixed-point values)");
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, count as u64);
+    assert!(m.batches > 0);
+}
+
+#[test]
+fn xla_and_native_engines_agree_bit_exactly() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same requests through both engines: the native engine reimplements
+    // the kernel's masked pairwise tree, so sums must agree to the bit
+    // even on arbitrary (order-sensitive) floats.
+    let mut rng = Xoshiro256::seeded(2);
+    let requests: Vec<Vec<f32>> = (0..30)
+        .map(|_| {
+            let n = rng.range(1, 256); // single-chunk to isolate kernel order
+            (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 1e5).collect()
+        })
+        .collect();
+
+    let run = |engine: EngineKind| -> Vec<u32> {
+        let mut svc = Service::start(ServiceConfig { engine, ..xla_cfg() }).unwrap();
+        for req in &requests {
+            svc.submit(req.clone()).unwrap();
+        }
+        let out = collect(&svc, requests.len());
+        svc.shutdown();
+        out.iter().map(|r| r.sum.to_bits()).collect()
+    };
+
+    let xla = run(xla_cfg().engine);
+    let native = run(EngineKind::Native { batch: 8, n: 256 });
+    assert_eq!(xla, native);
+}
+
+#[test]
+fn backpressure_bounds_queue_without_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = xla_cfg();
+    cfg.queue_depth = 4; // tiny: submit() must block, not drop
+    let mut svc = Service::start(cfg).unwrap();
+    let count = 200;
+    let submitter = std::thread::spawn({
+        let mut svc_ids = Vec::new();
+        move || {
+            for i in 0..count {
+                let set = vec![1.0f32; (i % 100) + 1];
+                svc_ids.push(svc.submit(set).unwrap());
+            }
+            (svc, svc_ids)
+        }
+    });
+    let (svc, ids) = submitter.join().unwrap();
+    assert_eq!(ids.len(), count);
+    let got = collect(&svc, count);
+    for (i, r) in got.iter().enumerate() {
+        assert_eq!(r.req_id, i as u64);
+        assert_eq!(r.sum, ((i % 100) + 1) as f32);
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, count as u64);
+}
+
+#[test]
+fn throughput_metrics_populate() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut svc = Service::start(xla_cfg()).unwrap();
+    for _ in 0..64 {
+        svc.submit(vec![0.5f32; 128]).unwrap();
+    }
+    let _ = collect(&svc, 64);
+    let m = svc.shutdown();
+    assert_eq!(m.completed, 64);
+    assert_eq!(m.values_reduced, 64 * 128);
+    assert!(m.latency_us.count() == 64);
+    assert!(m.latency_us.max() > 0);
+    assert!(m.batch_fill(8) > 0.2, "batcher should pack rows: {}", m.batch_fill(8));
+}

@@ -1,0 +1,129 @@
+//! Integration: INTAC against the wrapping-sum oracle across the Table V
+//! parameter grid, plus equation (1) and the min-set-length restriction.
+
+use jugglepac::intac::{oracle_sum, run_sets, FinalAdderKind, Intac, IntacConfig};
+use jugglepac::util::Xoshiro256;
+
+fn table5_grid() -> Vec<IntacConfig> {
+    let mut grid = Vec::new();
+    for inputs in [1u32, 2] {
+        for fas in [1u32, 2, 16] {
+            grid.push(IntacConfig {
+                in_width: 64,
+                out_width: 128,
+                inputs_per_cycle: inputs,
+                final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+            });
+        }
+    }
+    grid
+}
+
+#[test]
+fn table5_grid_reduces_correctly() {
+    let mut rng = Xoshiro256::seeded(0x1A7AC);
+    for cfg in table5_grid() {
+        let min = cfg.min_set_len();
+        let sets: Vec<Vec<u64>> = (0..6)
+            .map(|_| {
+                let n = min + rng.range_u64(0, 64);
+                (0..n).map(|_| rng.next_u64()).collect()
+            })
+            .collect();
+        let (outs, m) = run_sets(cfg, &sets, 1_000_000);
+        assert_eq!(outs.len(), 6, "{cfg:?}");
+        assert!(!m.stalled(), "{cfg:?}");
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64, "{cfg:?}: ordered");
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]), "{cfg:?} set {i}");
+        }
+    }
+}
+
+#[test]
+fn equation_1_holds_across_grid_within_one_cycle() {
+    for cfg in table5_grid() {
+        let n = cfg.min_set_len() + 32;
+        let set: Vec<u64> = (0..n).map(|i| i * 37).collect();
+        let (outs, _) = run_sets(cfg, &[set], 1_000_000);
+        let measured = outs[0].cycle + 1;
+        let formula = cfg.latency(n);
+        assert!(
+            measured.abs_diff(formula) <= 1,
+            "{cfg:?}: measured {measured} vs eq(1) {formula}"
+        );
+    }
+}
+
+#[test]
+fn sub_minimum_sets_stall_and_stall_is_sticky() {
+    let cfg = IntacConfig {
+        final_adder: FinalAdderKind::ResourceShared { fa_cells: 2 },
+        ..Default::default()
+    };
+    let short = cfg.min_set_len() / 4;
+    let sets: Vec<Vec<u64>> = (0..4).map(|s| (0..short).map(|i| i + s).collect()).collect();
+    let (_, m) = run_sets(cfg, &sets, 1_000_000);
+    assert!(m.stalled());
+}
+
+#[test]
+fn pipelined_final_adder_lifts_restriction_at_area_cost() {
+    // §IV-C: the pipelined final adder accepts back-to-back sets of any
+    // length; the area model must charge it the M FAs + ~M²/2 flops.
+    let pipe = IntacConfig { final_adder: FinalAdderKind::Pipelined, ..Default::default() };
+    let sets: Vec<Vec<u64>> = (0..50).map(|s| vec![s, s * 2, s * 3]).collect();
+    let (outs, m) = run_sets(pipe, &sets, 1_000_000);
+    assert!(!m.stalled());
+    assert_eq!(outs.len(), 50);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.value, oracle_sum(pipe, &sets[i]));
+    }
+
+    use jugglepac::area::{estimate, Design, FpgaFamily};
+    let a_rs = estimate(&Design::Intac(IntacConfig::default()), FpgaFamily::Virtex5);
+    let a_pipe = estimate(&Design::Intac(pipe), FpgaFamily::Virtex5);
+    assert!(a_pipe.slices > 3 * a_rs.slices, "{} vs {}", a_pipe.slices, a_rs.slices);
+}
+
+#[test]
+fn narrow_input_wide_output_grid() {
+    let mut rng = Xoshiro256::seeded(0xF16);
+    for (iw, ow, n_in) in [(8u32, 16u32, 1u32), (8, 16, 4), (16, 32, 2), (32, 64, 2)] {
+        let cfg = IntacConfig {
+            in_width: iw,
+            out_width: ow,
+            inputs_per_cycle: n_in,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 2 },
+        };
+        let n = cfg.min_set_len() + 16;
+        let sets: Vec<Vec<u64>> =
+            (0..4).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
+        let (outs, m) = run_sets(cfg, &sets, 1_000_000);
+        assert!(!m.stalled(), "{cfg:?}");
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]), "{cfg:?} set {i}");
+        }
+    }
+}
+
+#[test]
+fn streaming_interface_handles_irregular_beats() {
+    // Feed with idle cycles mid-set: the compressor holds state.
+    let cfg = IntacConfig {
+        final_adder: FinalAdderKind::ResourceShared { fa_cells: 16 },
+        ..Default::default()
+    };
+    let mut m = Intac::new(cfg);
+    let set: Vec<u64> = (0..40).map(|i| i * 11).collect();
+    for (i, &v) in set.iter().enumerate() {
+        m.step(&[v], i == 0, i == set.len() - 1);
+        if i % 5 == 0 {
+            m.idle(3);
+        }
+    }
+    m.idle(200);
+    let outs = m.take_outputs();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].value, oracle_sum(cfg, &set));
+}

@@ -1,0 +1,236 @@
+//! Integration: JugglePAC circuit model against the behavioral oracle on
+//! paper-grade workloads (§IV-E methodology), plus the Table II latency
+//! bound and ordered-results claims.
+
+use jugglepac::baselines::SerialAccumulator;
+use jugglepac::fp::F64;
+use jugglepac::jugglepac::{run_sets, JugglePacConfig, Operator};
+use jugglepac::workload::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig};
+
+fn paper_cfg(r: usize) -> JugglePacConfig {
+    JugglePacConfig { adder_latency: 14, pis_registers: r, ..Default::default() }
+}
+
+fn exact_workload(sets: usize, len: LenDist, gap: GapDist, seed: u64) -> SetStream {
+    SetStream::generate(&WorkloadConfig {
+        sets,
+        len,
+        gap,
+        values: ValueGen::ExactFixedPoint { range: 1 << 20, frac_bits: 12 },
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Drive a workload with its per-set gaps; return (outputs, sim).
+fn drive(
+    cfg: JugglePacConfig,
+    ws: &SetStream,
+) -> (Vec<jugglepac::jugglepac::OutputBeat>, jugglepac::jugglepac::JugglePac) {
+    let gaps = ws.gaps.clone();
+    run_sets(cfg, &ws.sets, &move |i| gaps[i], 1_000_000)
+}
+
+#[test]
+fn table3_workload_ds128_bit_exact_and_ordered() {
+    // The headline workload: 64 back-to-back sets of 128 DP values.
+    for r in [2usize, 4, 8] {
+        let ws = exact_workload(64, LenDist::Fixed(128), GapDist::None, 42);
+        let (outs, jp) = drive(paper_cfg(r), &ws);
+        assert_eq!(outs.len(), 64, "R={r}");
+        assert_eq!(jp.collisions(), 0, "R={r}");
+        assert!(!jp.fifo_overflowed(), "R={r}");
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64, "R={r}: ordered results");
+            let (want, _) = SerialAccumulator::reduce(F64, &ws.sets[i]);
+            assert_eq!(o.bits, want, "R={r} set {i}: exact workloads match serial");
+        }
+    }
+}
+
+#[test]
+fn variable_lengths_above_minimum_work() {
+    // R=4 min set size is ~29 in our model (paper: 29); stay above it.
+    let ws = exact_workload(48, LenDist::Uniform(40, 200), GapDist::None, 7);
+    let (outs, jp) = drive(paper_cfg(4), &ws);
+    assert_eq!(outs.len(), 48);
+    assert_eq!(jp.collisions(), 0);
+    for (i, o) in outs.iter().enumerate() {
+        let (want, _) = SerialAccumulator::reduce(F64, &ws.sets[i]);
+        assert_eq!(o.bits, want, "set {i}");
+        assert_eq!(o.set_id, i as u64);
+    }
+}
+
+#[test]
+fn gaps_between_sets_are_harmless() {
+    let ws = exact_workload(24, LenDist::Fixed(64), GapDist::Uniform(0, 30), 11);
+    let (outs, jp) = drive(paper_cfg(4), &ws);
+    assert_eq!(outs.len(), 24);
+    assert_eq!(jp.collisions(), 0);
+    for (i, o) in outs.iter().enumerate() {
+        let (want, _) = SerialAccumulator::reduce(F64, &ws.sets[i]);
+        assert_eq!(o.bits, want);
+    }
+}
+
+#[test]
+fn latency_bound_ds_plus_113() {
+    // Table II: total latency <= DS + 113 for R=4/8 at L=14 (DS+110 for
+    // R=2). Measure from each set's first input to its outEn.
+    for (r, bound) in [(2usize, 110u64), (4, 113), (8, 113)] {
+        let ds = 128u64;
+        let ws = exact_workload(32, LenDist::Fixed(ds as usize), GapDist::None, 5);
+        let mut jp = jugglepac::jugglepac::JugglePac::new(paper_cfg(r));
+        let mut first_input_cycle = Vec::new();
+        for set in &ws.sets {
+            for (i, &v) in set.iter().enumerate() {
+                if i == 0 {
+                    first_input_cycle.push(jp.now());
+                }
+                jp.step(Some(jugglepac::jugglepac::InputBeat { bits: v, start: i == 0 }));
+            }
+        }
+        jp.finish_stream();
+        for _ in 0..10_000 {
+            jp.step(None);
+        }
+        let outs = jp.take_outputs();
+        assert_eq!(outs.len(), 32, "R={r}");
+        for o in &outs {
+            let lat = o.cycle - first_input_cycle[o.set_id as usize];
+            assert!(
+                lat <= ds + bound,
+                "R={r} set {}: latency {lat} exceeds DS+{bound}",
+                o.set_id
+            );
+        }
+    }
+}
+
+#[test]
+fn below_minimum_set_size_collides_as_paper_warns() {
+    // §IV-B: sets shorter than the minimum mix data between sets.
+    let ws = exact_workload(40, LenDist::Fixed(4), GapDist::None, 13);
+    let (_, jp) = drive(paper_cfg(2), &ws);
+    assert!(
+        jp.collisions() > 0,
+        "4-element sets on R=2/L=14 must collide (min set size ~94)"
+    );
+}
+
+#[test]
+fn multiplier_reduction_operator_generalization() {
+    // §III-A: "JugglePAC can also be used for different reduction
+    // operations ... such as a FP multiplier".
+    let cfg = JugglePacConfig {
+        operator: Operator::Mul,
+        adder_latency: 9,
+        pis_registers: 4,
+        ..Default::default()
+    };
+    // Values near 1 so products stay finite.
+    let sets: Vec<Vec<u64>> = (0..8)
+        .map(|s| {
+            (0..64)
+                .map(|i| (1.0 + ((i + s) % 7) as f64 * 1e-3).to_bits())
+                .collect()
+        })
+        .collect();
+    let (outs, jp) = run_sets(cfg, &sets, &|_| 0, 100_000);
+    assert_eq!(outs.len(), 8);
+    for o in &outs {
+        // Verify via DAG replay (order matters for FP multiply rounding).
+        let replayed = jp.dag().replay(o.node, Operator::Mul, F64, &|s, i| {
+            sets[s as usize][i as usize]
+        });
+        assert_eq!(replayed, o.bits);
+    }
+}
+
+#[test]
+fn imbalanced_float_workload_verified_by_dag_replay() {
+    // Random reals: order-sensitive, so verify against the recorded DAG
+    // (bit-exact) and against the oracle only loosely.
+    let ws = SetStream::generate(&WorkloadConfig {
+        sets: 16,
+        len: LenDist::Fixed(96),
+        values: ValueGen::Imbalanced,
+        seed: 99,
+        ..Default::default()
+    });
+    let (outs, jp) = drive(paper_cfg(4), &ws);
+    assert_eq!(outs.len(), 16);
+    let cfg = paper_cfg(4);
+    for o in &outs {
+        let replayed = jp.dag().replay(o.node, cfg.operator, cfg.fmt, &|s, i| {
+            ws.sets[s as usize][i as usize]
+        });
+        assert_eq!(replayed, o.bits, "set {}", o.set_id);
+        // Partition check: every input exactly once.
+        let mut leaves = jp.dag().leaves(o.node);
+        leaves.sort_unstable();
+        let want: Vec<(u64, u32)> =
+            (0..ws.sets[o.set_id as usize].len() as u32).map(|i| (o.set_id, i)).collect();
+        assert_eq!(leaves, want, "set {}", o.set_id);
+    }
+}
+
+#[test]
+fn max_reduction_operator() {
+    // Extension of §III-A's "different reduction operations": a
+    // comparator in the operator slot turns JugglePAC into a streaming
+    // max circuit (identity = -inf for odd-element flushes).
+    use jugglepac::util::Xoshiro256;
+    let cfg = JugglePacConfig {
+        operator: Operator::Max,
+        adder_latency: 11,
+        pis_registers: 4,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256::seeded(0xFACE);
+    let sets: Vec<Vec<u64>> = (0..10)
+        .map(|_| {
+            let n = rng.range(40, 160);
+            (0..n).map(|_| (rng.next_f64() * 2e4 - 1e4).to_bits()).collect()
+        })
+        .collect();
+    let (outs, _) = run_sets(cfg, &sets, &|_| 0, 100_000);
+    assert_eq!(outs.len(), 10);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.set_id, i as u64);
+        let want = sets[i]
+            .iter()
+            .map(|&b| f64::from_bits(b))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(f64::from_bits(o.bits), want, "set {i}");
+    }
+}
+
+#[test]
+fn single_precision_mode() {
+    use jugglepac::fp::F32;
+    let cfg = JugglePacConfig { fmt: F32, ..paper_cfg(4) };
+    let sets: Vec<Vec<u64>> = (0..8)
+        .map(|s| (0..64).map(|i| (((i * 3 + s) as f32) / 8.0).to_bits() as u64).collect())
+        .collect();
+    let (outs, _) = run_sets(cfg, &sets, &|_| 0, 100_000);
+    assert_eq!(outs.len(), 8);
+    for o in &outs {
+        let mut acc = 0f32;
+        for &v in &sets[o.set_id as usize] {
+            acc += f32::from_bits(v as u32);
+        }
+        assert_eq!(o.bits as u32, acc.to_bits(), "exact fixed-point values in SP");
+    }
+}
+
+#[test]
+fn adder_utilization_near_full_with_back_to_back_sets() {
+    // One large set: ~50% state-1 + tree merges; many sets overlapping
+    // keeps the adder busier (the "juggling" payoff).
+    let ws = exact_workload(64, LenDist::Fixed(128), GapDist::None, 3);
+    let (_, jp) = drive(paper_cfg(4), &ws);
+    let util = jp.stats().op_utilization();
+    assert!(util > 0.9, "paper's point: one adder, almost fully utilized; got {util}");
+}

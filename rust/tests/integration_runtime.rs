@@ -1,0 +1,106 @@
+//! Integration: AOT artifacts through the PJRT runtime.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! CI runs `make test` which builds them first).
+
+use jugglepac::coordinator::native_reduce;
+use jugglepac::runtime::{default_artifacts_dir, ArtifactKind, Runtime};
+use jugglepac::util::Xoshiro256;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+#[test]
+fn loads_every_manifest_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("reduce_f32_b8_n256")), "{names:?}");
+    assert!(names.len() >= 5, "expected several variants, got {names:?}");
+}
+
+#[test]
+fn reduce_artifact_matches_native_bit_exactly() {
+    // The artifact lowers the same masked pairwise tree as native_reduce;
+    // results must agree to the bit on arbitrary floats.
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.model("reduce_f32_b8_n256").unwrap();
+    let (b, n) = (m.spec.batch, m.spec.n);
+    let mut rng = Xoshiro256::seeded(0xBEEF);
+    let x: Vec<f32> = (0..b * n).map(|_| (rng.next_f64() as f32 - 0.5) * 1e6).collect();
+    let lengths: Vec<i32> = (0..b).map(|_| rng.range(0, n) as i32).collect();
+    let got = m.run(&x, &lengths).unwrap();
+    let want = native_reduce(&x, &lengths, n);
+    let got_bits: Vec<u32> = got.sums.iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits);
+}
+
+#[test]
+fn stats_artifact_returns_sums_and_means() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.model("stats_f32_b8_n256").unwrap();
+    assert_eq!(m.spec.kind, ArtifactKind::Stats);
+    let (b, n) = (m.spec.batch, m.spec.n);
+    let x = vec![2.0f32; b * n];
+    let lengths: Vec<i32> = (0..b as i32).collect(); // 0,1,2,...
+    let r = m.run(&x, &lengths).unwrap();
+    let means = r.means.expect("stats artifact produces means");
+    for (i, (&s, &mean)) in r.sums.iter().zip(&means).enumerate() {
+        assert_eq!(s, 2.0 * i as f32, "sum row {i}");
+        let want_mean = if i == 0 { 0.0 } else { 2.0 };
+        assert_eq!(mean, want_mean, "mean row {i}");
+    }
+}
+
+#[test]
+fn dot_artifact_computes_prefix_dot_products() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.model("dot_f32_b8_n256").unwrap();
+    let (b, n) = (m.spec.batch, m.spec.n);
+    let a = vec![0.5f32; b * n];
+    let bv = vec![4.0f32; b * n];
+    let lengths: Vec<i32> = (0..b).map(|i| (i * 10) as i32).collect();
+    let r = m.run_dot(&a, &bv, &lengths).unwrap();
+    for (i, &s) in r.sums.iter().enumerate() {
+        assert_eq!(s, 2.0 * (i * 10) as f32, "row {i}");
+    }
+}
+
+#[test]
+fn shape_mismatch_is_an_error_not_ub() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.model("reduce_f32_b8_n256").unwrap();
+    assert!(m.run(&[1.0; 10], &[1i32; 8]).is_err());
+    assert!(m.run(&vec![0.0; 8 * 256], &[1i32; 3]).is_err());
+}
+
+#[test]
+fn best_reduce_selection_prefers_smallest_fit() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.best_reduce_for(4, 100).unwrap();
+    // smallest area fitting 4 sets of <=100: b32_n128 (4096) vs b8_n256
+    // (2048) — b8_n256 fits and is smaller.
+    assert_eq!(m.spec.name, "reduce_f32_b8_n256");
+    let big = rt.best_reduce_for(1, 1000).unwrap();
+    assert_eq!(big.spec.name, "reduce_f32_b1_n1024");
+    assert!(rt.best_reduce_for(64, 4096).is_err());
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.model("reduce_f32_b8_n256").unwrap();
+    let (b, n) = (m.spec.batch, m.spec.n);
+    let mut rng = Xoshiro256::seeded(7);
+    let x: Vec<f32> = (0..b * n).map(|_| rng.next_f64() as f32).collect();
+    let lengths = vec![n as i32; b];
+    let r1 = m.run(&x, &lengths).unwrap();
+    let r2 = m.run(&x, &lengths).unwrap();
+    assert_eq!(r1, r2);
+}

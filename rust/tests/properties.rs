@@ -1,0 +1,287 @@
+//! Property-based tests over the whole stack (in-tree harness — see
+//! `jugglepac::testkit`). Each property runs many deterministically-seeded
+//! random cases; failures print a reproducing `PROPTEST_SEED`.
+
+use jugglepac::baselines::SerialAccumulator;
+use jugglepac::fp::{fp_add, fp_mul, f64_bits, F32, F64};
+use jugglepac::intac::{oracle_sum, FinalAdderKind, IntacConfig};
+use jugglepac::jugglepac::{run_sets, JugglePacConfig};
+use jugglepac::testkit::property;
+use jugglepac::util::rng::Xoshiro256;
+
+// ---------- FP substrate ----------
+
+#[test]
+fn prop_fp_add_matches_host_f64() {
+    property("fp_add_f64", 200, |rng| {
+        for _ in 0..500 {
+            let a = f64::from_bits(rng.next_u64());
+            let b = f64::from_bits(rng.next_u64());
+            if a.is_nan() || b.is_nan() {
+                continue;
+            }
+            let got = fp_add(F64, a.to_bits(), b.to_bits());
+            let want = a + b;
+            if want.is_nan() {
+                assert!(F64.is_nan(got));
+            } else {
+                assert_eq!(got, want.to_bits(), "{a:?} + {b:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fp_add_commutative() {
+    property("fp_add_comm", 100, |rng| {
+        for _ in 0..500 {
+            let a = rng.next_u64() & F32.value_mask();
+            let b = rng.next_u64() & F32.value_mask();
+            assert_eq!(fp_add(F32, a, b), fp_add(F32, b, a));
+        }
+    });
+}
+
+#[test]
+fn prop_fp_mul_identity_and_zero() {
+    property("fp_mul_identity", 100, |rng| {
+        let one = (1.0f64).to_bits();
+        for _ in 0..300 {
+            let a = f64::from_bits(rng.next_u64());
+            if a.is_nan() {
+                continue;
+            }
+            assert_eq!(fp_mul(F64, a.to_bits(), one), (a * 1.0).to_bits());
+        }
+    });
+}
+
+// ---------- JugglePAC invariants ----------
+
+fn random_exact_sets(
+    rng: &mut Xoshiro256,
+    n_sets: usize,
+    min_len: usize,
+    max_len: usize,
+) -> Vec<Vec<u64>> {
+    (0..n_sets)
+        .map(|_| {
+            let n = rng.range(min_len, max_len);
+            (0..n).map(|_| f64_bits(rng.range_i64(-4096, 4096) as f64 / 64.0)).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_jugglepac_ordered_bit_exact_above_min_size() {
+    property("jugglepac_ordered", 12, |rng| {
+        let r = [2usize, 4, 8][rng.range(0, 2)];
+        let min = match r {
+            2 => 96,
+            4 => 32,
+            _ => 20,
+        };
+        let cfg = JugglePacConfig { pis_registers: r, ..Default::default() };
+        let sets = random_exact_sets(rng, 24, min, min + 120);
+        let (outs, jp) = run_sets(cfg, &sets, &|_| 0, 1_000_000);
+        assert_eq!(outs.len(), sets.len());
+        assert_eq!(jp.collisions(), 0);
+        assert!(!jp.fifo_overflowed());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64, "ordered results (paper §IV-D)");
+            let (want, _) = SerialAccumulator::reduce(F64, &sets[i]);
+            assert_eq!(o.bits, want);
+        }
+    });
+}
+
+#[test]
+fn prop_jugglepac_dag_partitions_inputs() {
+    // For ANY workload (even below min size): each emitted output's DAG
+    // leaves must be drawn from exactly one set with no duplicates —
+    // unless the PIS collided (which the sim reports).
+    property("jugglepac_partition", 10, |rng| {
+        let cfg = JugglePacConfig {
+            adder_latency: rng.range(2, 20),
+            pis_registers: [2, 4, 8][rng.range(0, 2)],
+            ..Default::default()
+        };
+        let sets = random_exact_sets(rng, 12, 40, 200);
+        let (outs, jp) = run_sets(cfg, &sets, &|_| 0, 1_000_000);
+        if jp.collisions() > 0 {
+            return; // documented failure mode below min size
+        }
+        for o in &outs {
+            let mut leaves = jp.dag().leaves(o.node);
+            leaves.sort_unstable();
+            leaves.dedup();
+            assert_eq!(
+                leaves.len(),
+                sets[o.set_id as usize].len(),
+                "every input exactly once"
+            );
+            assert!(leaves.iter().all(|&(s, _)| s == o.set_id), "no cross-set leaves");
+        }
+    });
+}
+
+#[test]
+fn prop_jugglepac_latency_bounded() {
+    property("jugglepac_latency", 8, |rng| {
+        let ds = rng.range(64, 256);
+        let cfg = JugglePacConfig { pis_registers: 4, ..Default::default() };
+        let sets = random_exact_sets(rng, 16, ds, ds);
+        let mut jp = jugglepac::jugglepac::JugglePac::new(cfg);
+        let mut first = Vec::new();
+        for set in &sets {
+            for (i, &v) in set.iter().enumerate() {
+                if i == 0 {
+                    first.push(jp.now());
+                }
+                jp.step(Some(jugglepac::jugglepac::InputBeat { bits: v, start: i == 0 }));
+            }
+        }
+        jp.finish_stream();
+        for _ in 0..20_000 {
+            jp.step(None);
+        }
+        let outs = jp.take_outputs();
+        assert_eq!(outs.len(), sets.len());
+        for o in &outs {
+            let lat = o.cycle - first[o.set_id as usize];
+            assert!(lat <= ds as u64 + 113, "latency {lat} > DS+113 (Table II)");
+        }
+    });
+}
+
+#[test]
+fn prop_fifo_never_exceeds_four_slots() {
+    // The paper fixes the PIS FIFO at 4 slots; legal workloads must never
+    // overflow it (we detect via the sticky flag with capacity 4).
+    property("fifo_depth", 10, |rng| {
+        let cfg = JugglePacConfig {
+            pis_registers: 4,
+            fifo_capacity: 4,
+            ..Default::default()
+        };
+        let sets = random_exact_sets(rng, 20, 32, 300);
+        let gaps: Vec<usize> = (0..sets.len()).map(|_| rng.range(0, 5)).collect();
+        let (_, jp) = run_sets(cfg, &sets, &move |i| gaps[i], 1_000_000);
+        assert!(!jp.fifo_overflowed(), "4-slot FIFO must suffice (paper §III-A)");
+    });
+}
+
+// ---------- INTAC invariants ----------
+
+#[test]
+fn prop_intac_exact_for_random_parameters() {
+    property("intac_params", 20, |rng| {
+        let iw = [8u32, 16, 32, 64][rng.range(0, 3)];
+        let ow = (iw * 2).min(128);
+        let n_in = [1u32, 2, 4][rng.range(0, 2)];
+        let fas = [1u32, 2, 8, 16][rng.range(0, 3)];
+        let cfg = IntacConfig {
+            in_width: iw,
+            out_width: ow,
+            inputs_per_cycle: n_in,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: fas.min(ow) },
+        };
+        let min = cfg.min_set_len();
+        let sets: Vec<Vec<u64>> = (0..4)
+            .map(|_| {
+                let n = min + rng.range_u64(0, 40);
+                (0..n).map(|_| rng.next_u64()).collect()
+            })
+            .collect();
+        let (outs, m) = jugglepac::intac::run_sets(cfg, &sets, 1_000_000);
+        assert!(!m.stalled(), "{cfg:?}");
+        assert_eq!(outs.len(), 4);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.value, oracle_sum(cfg, &sets[i]), "{cfg:?}");
+            assert_eq!(o.set_id, i as u64);
+        }
+    });
+}
+
+#[test]
+fn prop_intac_latency_equation() {
+    property("intac_eq1", 20, |rng| {
+        let fas = [1u32, 2, 4, 16][rng.range(0, 3)];
+        let n_in = [1u32, 2][rng.range(0, 1)];
+        let cfg = IntacConfig {
+            inputs_per_cycle: n_in,
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: fas },
+            ..Default::default()
+        };
+        let n = cfg.min_set_len() + rng.range_u64(0, 100);
+        let set: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let (outs, _) = jugglepac::intac::run_sets(cfg, &[set], 1_000_000);
+        let measured = outs[0].cycle + 1;
+        assert!(measured.abs_diff(cfg.latency(n)) <= 1, "{cfg:?} n={n}");
+    });
+}
+
+// ---------- coordinator invariants ----------
+
+#[test]
+fn prop_coordinator_ordered_and_complete() {
+    use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+    property("coordinator_ordered", 6, |rng| {
+        let mut svc = Service::start(ServiceConfig {
+            engine: EngineKind::Native { batch: rng.range(2, 8), n: 1 << rng.range(3, 6) },
+            batch_deadline: std::time::Duration::from_micros(rng.range(20, 300) as u64),
+            ordered: true,
+            queue_depth: 64,
+        })
+        .unwrap();
+        let count = rng.range(5, 60);
+        let mut want = Vec::new();
+        for _ in 0..count {
+            let n = rng.range(0, 120);
+            let set: Vec<f32> =
+                (0..n).map(|_| rng.range_i64(-100, 100) as f32 / 4.0).collect();
+            want.push(set.iter().sum::<f32>());
+            svc.submit(set).unwrap();
+        }
+        for i in 0..count {
+            let r = svc
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("response arrives");
+            assert_eq!(r.req_id, i as u64, "input-order delivery");
+            // Exact values: batching/chunking must not change the sum.
+            assert_eq!(r.sum, want[i], "req {i}");
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.completed, count as u64);
+    });
+}
+
+#[test]
+fn prop_assembler_matches_direct_tree_combine() {
+    use jugglepac::coordinator::Assembler;
+    property("assembler_tree", 50, |rng| {
+        let chunks = rng.range(1, 12) as u32;
+        let parts: Vec<f32> = (0..chunks).map(|_| rng.next_f64() as f32).collect();
+        // expected: pairwise tree over chunk order
+        let mut level = parts.clone();
+        while level.len() > 1 {
+            level = level
+                .chunks(2)
+                .map(|c| if c.len() == 2 { c[0] + c[1] } else { c[0] })
+                .collect();
+        }
+        let want = level[0];
+        let mut order: Vec<u32> = (0..chunks).collect();
+        rng.shuffle(&mut order);
+        let mut asm = Assembler::new(false);
+        asm.expect(0, chunks);
+        let mut got = None;
+        for idx in order {
+            let out = asm.add_partial(0, idx, parts[idx as usize]);
+            if !out.is_empty() {
+                got = Some(out[0].sum);
+            }
+        }
+        assert_eq!(got.unwrap().to_bits(), want.to_bits());
+    });
+}
