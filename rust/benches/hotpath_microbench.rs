@@ -1,21 +1,42 @@
 //! Microbenchmarks of the stack's hot paths — the §Perf working set:
 //!   - bit-accurate fp_add/fp_mul (the innermost sim operation);
-//!   - JugglePAC step loop (cycles/s — the L3 sim headline);
+//!   - JugglePAC step loop (cycles/s — the L3 sim headline), measured
+//!     both with provenance recording (`Full`) and without (`Off`), and
+//!     through the zero-allocation reuse path (`reset` + `run_sets_into`);
 //!   - INTAC step loop;
 //!   - PJRT execute round-trip per batch (the service's unit cost).
+//!
+//! Alongside the pretty print, every case lands in `BENCH_1.json`
+//! (benchkit::JsonSink) so the perf trajectory is tracked PR-over-PR.
+//!
+//! Env knobs (CI smoke): `JUGGLEPAC_BENCH_ITERS` caps per-case repetitions,
+//! `JUGGLEPAC_BENCH_SMOKE=1` shrinks the workloads, and
+//! `JUGGLEPAC_BENCH_JSON` overrides the JSON output path.
 
-use jugglepac::benchkit::{bench, report_throughput};
+use jugglepac::benchkit::{bench, report_throughput, JsonSink};
 use jugglepac::fp::{fp_add, fp_mul, F64};
-use jugglepac::intac::{FinalAdderKind, IntacConfig};
-use jugglepac::jugglepac::JugglePacConfig;
+use jugglepac::intac::{FinalAdderKind, Intac, IntacConfig};
+use jugglepac::jugglepac::{JugglePac, JugglePacConfig, OutputBeat, Provenance};
 use jugglepac::runtime::{default_artifacts_dir, Runtime};
 use jugglepac::util::Xoshiro256;
 use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
 
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
 fn main() {
+    let cap = env_usize("JUGGLEPAC_BENCH_ITERS").unwrap_or(usize::MAX);
+    let iters = |default: usize| default.min(cap).max(1);
+    let smoke = std::env::var("JUGGLEPAC_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let mut sink = JsonSink::new();
+
     // fp_add / fp_mul
     let mut rng = Xoshiro256::seeded(1);
-    let pairs: Vec<(u64, u64)> = (0..100_000)
+    let n_pairs = if smoke { 10_000 } else { 100_000 };
+    let pairs: Vec<(u64, u64)> = (0..n_pairs)
         .map(|_| {
             (
                 (rng.next_f64() * 2e3 - 1e3).to_bits(),
@@ -23,7 +44,8 @@ fn main() {
             )
         })
         .collect();
-    let d = bench("fp_add F64 x100k", 20, || {
+    let name = format!("fp_add F64 x{}k", n_pairs / 1000);
+    let d = bench(&name, iters(20), || {
         let mut acc = 0u64;
         for &(a, b) in &pairs {
             acc ^= fp_add(F64, a, b);
@@ -31,7 +53,9 @@ fn main() {
         std::hint::black_box(acc);
     });
     report_throughput("adds", pairs.len() as u64, "add", d);
-    let d = bench("fp_mul F64 x100k", 20, || {
+    sink.record_throughput(&name, pairs.len() as u64, d);
+    let name = format!("fp_mul F64 x{}k", n_pairs / 1000);
+    let d = bench(&name, iters(20), || {
         let mut acc = 0u64;
         for &(a, b) in &pairs {
             acc ^= fp_mul(F64, a, b);
@@ -39,35 +63,83 @@ fn main() {
         std::hint::black_box(acc);
     });
     report_throughput("muls", pairs.len() as u64, "mul", d);
+    sink.record_throughput(&name, pairs.len() as u64, d);
 
-    // JugglePAC cycle loop
+    // JugglePAC cycle loop — the headline. Three variants on one workload:
+    //   1. legacy entry point (fresh instance per run, provenance Full);
+    //   2. reuse path with provenance Full (arena retained across runs);
+    //   3. reuse path with provenance Off (the zero-allocation mode).
+    let n_sets = if smoke { 16 } else { 256 };
     let ws = SetStream::generate(&WorkloadConfig {
-        sets: 256,
+        sets: n_sets,
         len: LenDist::Fixed(128),
         seed: 2,
         ..Default::default()
     });
     let cfg = JugglePacConfig::default();
-    let cycles = (ws.total_values() + 4096) as u64;
-    let d = bench("JugglePAC sim: 256 sets x 128 DP", 10, || {
+
+    // Exact cycle count for the throughput figure: measure one run.
+    let (_, probe) = jugglepac::jugglepac::run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
+    let cycles = probe.stats().cycles;
+
+    let name = format!("JugglePAC sim (fresh, prov=Full): {n_sets}x128 DP");
+    let d = bench(&name, iters(10), || {
         let (outs, _) = jugglepac::jugglepac::run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
-        assert_eq!(outs.len(), 256);
+        assert_eq!(outs.len(), n_sets);
     });
     report_throughput("cycles", cycles, "cycle", d);
+    sink.record_throughput(&name, cycles, d);
 
-    // INTAC cycle loop
+    let mut jp = JugglePac::new(cfg);
+    let mut outs: Vec<OutputBeat> = Vec::with_capacity(n_sets);
+    let name = format!("JugglePAC sim (reuse, prov=Full): {n_sets}x128 DP");
+    let d = bench(&name, iters(10), || {
+        jp.reset();
+        outs.clear();
+        let n = jp.run_sets_into(&mut outs, &ws.sets, &|_| 0, 1_000_000);
+        assert_eq!(n, n_sets);
+    });
+    report_throughput("cycles", cycles, "cycle", d);
+    sink.record_throughput(&name, cycles, d);
+    let d_full = d;
+
+    let cfg_off = JugglePacConfig { provenance: Provenance::Off, ..cfg };
+    let mut jp = JugglePac::new(cfg_off);
+    let name = format!("JugglePAC sim (reuse, prov=Off): {n_sets}x128 DP");
+    let d = bench(&name, iters(10), || {
+        jp.reset();
+        outs.clear();
+        let n = jp.run_sets_into(&mut outs, &ws.sets, &|_| 0, 1_000_000);
+        assert_eq!(n, n_sets);
+    });
+    report_throughput("cycles", cycles, "cycle", d);
+    sink.record_throughput(&name, cycles, d);
+    println!(
+        "  ↳ provenance off vs full (reuse): {:.2}x",
+        d_full.as_secs_f64() / d.as_secs_f64().max(1e-12)
+    );
+
+    // INTAC cycle loop, through the reuse fast path.
     let intac_cfg = IntacConfig {
         final_adder: FinalAdderKind::ResourceShared { fa_cells: 16 },
         ..Default::default()
     };
     let n = intac_cfg.min_set_len() + 64;
+    let n_isets = if smoke { 16 } else { 256 };
     let sets: Vec<Vec<u64>> =
-        (0..256).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
-    let d = bench(&format!("INTAC sim: 256 sets x {n} u64"), 10, || {
-        let (outs, _) = jugglepac::intac::run_sets(intac_cfg, &sets, 1_000_000);
-        assert_eq!(outs.len(), 256);
+        (0..n_isets).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
+    let mut m = Intac::new(intac_cfg);
+    let mut iouts = Vec::with_capacity(n_isets);
+    let name = format!("INTAC sim (reuse): {n_isets} sets x {n} u64");
+    let d = bench(&name, iters(10), || {
+        m.reset();
+        iouts.clear();
+        let k = m.run_sets_into(&mut iouts, &sets, 1_000_000);
+        assert_eq!(k, n_isets);
     });
-    report_throughput("values", 256 * n, "value", d);
+    let values = n_isets as u64 * n;
+    report_throughput("values", values, "value", d);
+    sink.record_throughput(&name, values, d);
 
     // PJRT execute round-trip
     let dir = default_artifacts_dir();
@@ -78,11 +150,19 @@ fn main() {
             let (b, nn) = (m.spec.batch, m.spec.n);
             let x = vec![1.0f32; b * nn];
             let lens = vec![nn as i32; b];
-            let d = bench(&format!("PJRT execute {name}"), 50, || {
+            let case = format!("PJRT execute {name}");
+            let d = bench(&case, iters(50), || {
                 let r = m.run(&x, &lens).unwrap();
                 std::hint::black_box(r);
             });
             report_throughput("values", (b * nn) as u64, "value", d);
+            sink.record_throughput(&case, (b * nn) as u64, d);
         }
+    }
+
+    let json_path = std::env::var("JUGGLEPAC_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_1.json".to_string());
+    if let Err(e) = sink.write(std::path::Path::new(&json_path)) {
+        eprintln!("could not write {json_path}: {e}");
     }
 }

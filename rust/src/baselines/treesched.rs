@@ -238,27 +238,58 @@ impl TreeScheduler {
     pub fn now(&self) -> u64 {
         self.cycle
     }
+
+    /// Return to the power-on state retaining internal allocations — the
+    /// reuse path for [`TreeScheduler::run_sets_into`].
+    pub fn reset(&mut self) {
+        self.avail.clear();
+        self.in_flight.clear();
+        self.remaining.clear();
+        self.set_len.clear();
+        self.arrived.clear();
+        self.cycle = 0;
+        self.outputs.clear();
+        self.buffer_high_water = 0;
+    }
+
+    /// Batched fast path (the same stepping contract as
+    /// [`crate::jugglepac::JugglePac::run_sets_into`]): stream all sets
+    /// back-to-back, drain until nothing is pending or `max_drain` idle
+    /// cycles pass, and append outputs (emission order) to `out`. Returns
+    /// the number of outputs appended. Use on a fresh or reset instance.
+    pub fn run_sets_into(
+        &mut self,
+        out: &mut Vec<SchedOutput>,
+        sets: &[Vec<u64>],
+        max_drain: usize,
+    ) -> usize {
+        let already = out.len();
+        for (si, set) in sets.iter().enumerate() {
+            for &v in set {
+                self.step(Some((v, si as u64, set.len() as u64)));
+            }
+        }
+        let mut drained = 0;
+        while self.pending() > 0 && drained < max_drain {
+            self.step(None);
+            drained += 1;
+        }
+        out.extend(self.outputs.drain(..));
+        out.len() - already
+    }
 }
 
 /// Run back-to-back sets through a scheduler; returns outputs in emission
-/// order plus the simulator for inspection.
+/// order plus the simulator for inspection. (Convenience wrapper over
+/// [`TreeScheduler::run_sets_into`].)
 pub fn run_sets(
     cfg: TreeSchedulerConfig,
     sets: &[Vec<u64>],
     max_drain: usize,
 ) -> (Vec<SchedOutput>, TreeScheduler) {
     let mut ts = TreeScheduler::new(cfg);
-    for (si, set) in sets.iter().enumerate() {
-        for &v in set {
-            ts.step(Some((v, si as u64, set.len() as u64)));
-        }
-    }
-    let mut drained = 0;
-    while ts.pending() > 0 && drained < max_drain {
-        ts.step(None);
-        drained += 1;
-    }
-    let outs = ts.take_outputs();
+    let mut outs = Vec::with_capacity(sets.len());
+    ts.run_sets_into(&mut outs, sets, max_drain);
     (outs, ts)
 }
 

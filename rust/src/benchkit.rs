@@ -4,7 +4,13 @@
 //! and prints min/median/mean so regressions are visible run-to-run.
 //! Benches are `harness = false` binaries invoked by `cargo bench`;
 //! their stdout is archived in bench_output.txt / EXPERIMENTS.md.
+//!
+//! For PR-over-PR trajectory tracking, [`JsonSink`] collects records
+//! (name, median ns, items/s) and writes them as a hand-rolled JSON array
+//! (no serde offline) — `hotpath_microbench` emits `BENCH_1.json` this way
+//! and CI archives it.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Timed repetitions of `f`; returns (min, median, mean).
@@ -40,6 +46,94 @@ pub fn report_throughput(name: &str, items: u64, unit: &str, dur: Duration) {
     println!("  ↳ {name}: {per_s:.3e} {unit}/s");
 }
 
+/// One machine-readable benchmark record.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub median_ns: u128,
+    /// Throughput derived from the median, when the case has a natural
+    /// item count (cycles, values, adds, ...).
+    pub items_per_s: Option<f64>,
+}
+
+/// Collects [`BenchRecord`]s and writes them as a JSON array.
+#[derive(Clone, Debug, Default)]
+pub struct JsonSink {
+    records: Vec<BenchRecord>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a timed case without a throughput figure.
+    pub fn record(&mut self, name: &str, median: Duration) {
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            median_ns: median.as_nanos(),
+            items_per_s: None,
+        });
+    }
+
+    /// Record a timed case with `items` processed per repetition.
+    pub fn record_throughput(&mut self, name: &str, items: u64, median: Duration) {
+        let per_s = items as f64 / median.as_secs_f64();
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            median_ns: median.as_nanos(),
+            items_per_s: per_s.is_finite().then_some(per_s),
+        });
+    }
+
+    pub fn records(&self) -> &[BenchRecord] {
+        &self.records
+    }
+
+    /// Serialize as a JSON array (stable field order, one object per line).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let ips = match r.items_per_s {
+                Some(v) => format!("{v}"),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "  {{\"name\": \"{}\", \"median_ns\": {}, \"items_per_s\": {}}}{}\n",
+                json_escape(&r.name),
+                r.median_ns,
+                ips,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        s.push(']');
+        s.push('\n');
+        s
+    }
+
+    /// Write the JSON array to `path` and say so on stdout.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("wrote {} bench records to {}", self.records.len(), path.display());
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,5 +143,34 @@ mod tests {
         let (min, median, _mean) = time_it(5, || std::thread::sleep(Duration::from_micros(50)));
         assert!(min <= median);
         assert!(min >= Duration::from_micros(40));
+    }
+
+    #[test]
+    fn json_sink_emits_valid_records() {
+        let mut sink = JsonSink::new();
+        sink.record("plain \"case\"", Duration::from_nanos(1500));
+        sink.record_throughput("cycles", 1_000_000, Duration::from_millis(10));
+        let j = sink.to_json();
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\\\"case\\\""), "{j}");
+        assert!(j.contains("\"median_ns\": 1500"), "{j}");
+        assert!(j.contains("\"items_per_s\": null"), "{j}");
+        // 1e6 items / 10ms = 1e8/s
+        assert!(j.contains("100000000"), "{j}");
+        // exactly one comma separator for two records
+        assert_eq!(j.matches("},\n").count(), 1, "{j}");
+    }
+
+    #[test]
+    fn json_sink_writes_file() {
+        let mut sink = JsonSink::new();
+        sink.record("a", Duration::from_nanos(10));
+        let dir = std::env::temp_dir().join("jugglepac_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        sink.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, sink.to_json());
     }
 }

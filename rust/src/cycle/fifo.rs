@@ -3,13 +3,22 @@
 //! Models a registered FWFT (first-word-fall-through) FIFO: `dout()` shows
 //! the head combinationally; `push`/`pop` are staged and commit on `tick`,
 //! like write-enable/read-enable signals sampled at the clock edge.
+//!
+//! Implementation: a fixed-capacity ring buffer (head cursor + occupancy
+//! count) instead of the seed's `VecDeque`. Capacity is allocated once in
+//! `new`; afterwards `tick` moves no elements and never allocates — which
+//! matters because the PIS FIFO ticks every simulated cycle
+//! (`tests/equivalence_core.rs` proves the behaviors identical).
 
 use super::Clocked;
 
 #[derive(Clone, Debug)]
 pub struct SyncFifo<T: Clone> {
-    slots: std::collections::VecDeque<T>,
-    capacity: usize,
+    /// Ring storage, length = capacity. Occupied slots are `Some`.
+    slots: Box<[Option<T>]>,
+    /// Index of the head element (valid when `len > 0`).
+    head: usize,
+    len: usize,
     staged_push: Option<T>,
     staged_pop: bool,
     /// Sticky flag: a push was attempted while full (a design-violation
@@ -24,8 +33,9 @@ impl<T: Clone> SyncFifo<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         Self {
-            slots: std::collections::VecDeque::with_capacity(capacity),
-            capacity,
+            slots: std::iter::repeat_with(|| None).take(capacity).collect(),
+            head: 0,
+            len: 0,
             staged_push: None,
             staged_pop: false,
             overflowed: false,
@@ -35,24 +45,28 @@ impl<T: Clone> SyncFifo<T> {
 
     /// Registered occupancy (as of the last tick).
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.len == 0
     }
 
     pub fn is_full(&self) -> bool {
-        self.slots.len() == self.capacity
+        self.len == self.slots.len()
     }
 
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.slots.len()
     }
 
     /// Head element (combinational `dout`), if any.
     pub fn dout(&self) -> Option<&T> {
-        self.slots.front()
+        if self.len == 0 {
+            None
+        } else {
+            self.slots[self.head].as_ref()
+        }
     }
 
     /// Stage a write for this cycle (write-enable).
@@ -68,22 +82,34 @@ impl<T: Clone> SyncFifo<T> {
 
 impl<T: Clone> Clocked for SyncFifo<T> {
     fn tick(&mut self) {
+        // Read commits before write (RTL read-before-write ordering), so a
+        // pop+push in one cycle succeeds even on a full FIFO.
         if self.staged_pop {
-            self.slots.pop_front();
+            if self.len > 0 {
+                self.slots[self.head] = None;
+                self.head = (self.head + 1) % self.slots.len();
+                self.len -= 1;
+            }
             self.staged_pop = false;
         }
         if let Some(v) = self.staged_push.take() {
-            if self.slots.len() < self.capacity {
-                self.slots.push_back(v);
+            if self.len < self.slots.len() {
+                let tail = (self.head + self.len) % self.slots.len();
+                self.slots[tail] = Some(v);
+                self.len += 1;
             } else {
                 self.overflowed = true;
             }
         }
-        self.high_water = self.high_water.max(self.slots.len());
+        self.high_water = self.high_water.max(self.len);
     }
 
     fn reset(&mut self) {
-        self.slots.clear();
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.head = 0;
+        self.len = 0;
         self.staged_push = None;
         self.staged_pop = false;
         self.overflowed = false;
@@ -164,5 +190,71 @@ mod tests {
         }
         assert_eq!(f.high_water, 3);
         assert!(f.is_empty());
+    }
+
+    #[test]
+    fn pop_on_empty_is_a_noop() {
+        // A staged read with nothing to read must not corrupt the cursor
+        // (the seed's VecDeque::pop_front was a silent no-op; the ring
+        // must match).
+        let mut f = SyncFifo::<u8>::new(2);
+        f.pop();
+        f.tick();
+        assert_eq!(f.len(), 0);
+        f.push(5);
+        f.tick();
+        assert_eq!(f.dout(), Some(&5));
+    }
+
+    #[test]
+    fn wraparound_preserves_order() {
+        // Drive the head cursor around the ring many times; FIFO order and
+        // occupancy must hold at every wrap position.
+        for cap in [1usize, 2, 3, 4] {
+            let mut f = SyncFifo::<u64>::new(cap);
+            let mut next_in = 0u64;
+            let mut next_out = 0u64;
+            for step in 0..200 {
+                // Alternate fill/drain phases to hit every head position.
+                if step % 2 == 0 && !f.is_full() {
+                    f.push(next_in);
+                    next_in += 1;
+                }
+                if step % 3 == 0 && !f.is_empty() {
+                    assert_eq!(f.dout(), Some(&next_out), "cap {cap} step {step}");
+                    f.pop();
+                    next_out += 1;
+                }
+                f.tick();
+                assert!(!f.overflowed);
+            }
+            // Drain the rest.
+            while let Some(&h) = f.dout() {
+                assert_eq!(h, next_out);
+                next_out += 1;
+                f.pop();
+                f.tick();
+            }
+            assert_eq!(next_out, next_in, "cap {cap}: nothing lost or duplicated");
+        }
+    }
+
+    #[test]
+    fn reset_mid_wrap_restarts_cleanly() {
+        let mut f = SyncFifo::<u8>::new(3);
+        for i in 0..3 {
+            f.push(i);
+            f.tick();
+        }
+        f.pop();
+        f.tick();
+        f.reset();
+        assert!(f.is_empty());
+        assert!(!f.overflowed);
+        assert_eq!(f.high_water, 0);
+        f.push(9);
+        f.tick();
+        assert_eq!(f.dout(), Some(&9));
+        assert_eq!(f.len(), 1);
     }
 }

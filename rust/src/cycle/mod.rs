@@ -1,9 +1,10 @@
 //! Cycle-accurate simulation kernel.
 //!
-//! Small, allocation-light primitives shared by all circuit models:
-//! registered components with two-phase (compute/commit) semantics, a
-//! hardware-shaped shift register and synchronous FIFO, and a trace sink
-//! that the Table-I golden test and the `trace` CLI subcommand consume.
+//! Zero-allocation primitives shared by all circuit models: registered
+//! components with two-phase (compute/commit) semantics, a hardware-shaped
+//! shift register and synchronous FIFO — both fixed-capacity ring buffers
+//! whose `tick` is O(1) and never allocates — and a trace sink that the
+//! Table-I golden test and the `trace` CLI subcommand consume.
 //!
 //! The discipline mirrors RTL: during a cycle every component reads only
 //! *registered* state (the values committed at the previous clock edge),

@@ -3,6 +3,13 @@
 //! JugglePAC runs the (label, inEn) pair through a shift register whose
 //! depth equals the FP adder latency so that each adder result emerges
 //! together with the label of the set it belongs to.
+//!
+//! Implementation: a fixed-capacity ring buffer with a head cursor. The
+//! seed implementation physically moved every element one slot per tick
+//! (O(L) clones in the innermost simulation loop); advancing a cursor over
+//! a stationary buffer is observably identical — `output()` still reads
+//! the value pushed `depth` ticks ago — at O(1) per tick with zero
+//! allocation (see `tests/equivalence_core.rs` for the lockstep proof).
 
 use super::Clocked;
 
@@ -11,14 +18,23 @@ use super::Clocked;
 /// (registered, i.e. what was pushed `depth` ticks ago).
 #[derive(Clone, Debug)]
 pub struct ShiftRegister<T: Clone + Default> {
-    slots: Vec<T>,
+    /// Ring storage; logically, stage 0 (newest) sits just behind `head`.
+    slots: Box<[T]>,
+    /// Index of the oldest element — the registered output. Each tick
+    /// overwrites it with the staged input and advances the cursor, which
+    /// is exactly a one-slot shift of the whole register.
+    head: usize,
     staged: T,
 }
 
 impl<T: Clone + Default> ShiftRegister<T> {
     pub fn new(depth: usize) -> Self {
         assert!(depth >= 1, "shift register needs depth >= 1");
-        Self { slots: vec![T::default(); depth], staged: T::default() }
+        Self {
+            slots: vec![T::default(); depth].into_boxed_slice(),
+            head: 0,
+            staged: T::default(),
+        }
     }
 
     /// Stage the value entering at this clock edge (combinational input).
@@ -29,7 +45,7 @@ impl<T: Clone + Default> ShiftRegister<T> {
 
     /// The value exiting the register this cycle (registered output).
     pub fn output(&self) -> &T {
-        &self.slots[self.slots.len() - 1]
+        &self.slots[self.head]
     }
 
     /// Depth in stages.
@@ -39,23 +55,25 @@ impl<T: Clone + Default> ShiftRegister<T> {
 
     /// Inspect an intermediate stage (0 = newest). Test/debug aid.
     pub fn stage(&self, i: usize) -> &T {
-        &self.slots[i]
+        let d = self.slots.len();
+        assert!(i < d, "stage {i} out of range for depth {d}");
+        // Newest is the slot written at the last tick: one behind `head`.
+        &self.slots[(self.head + d - 1 - i) % d]
     }
 }
 
 impl<T: Clone + Default> Clocked for ShiftRegister<T> {
     fn tick(&mut self) {
-        for i in (1..self.slots.len()).rev() {
-            self.slots[i] = self.slots[i - 1].clone();
-        }
-        self.slots[0] = std::mem::take(&mut self.staged);
+        self.slots[self.head] = std::mem::take(&mut self.staged);
+        self.head = (self.head + 1) % self.slots.len();
     }
 
     fn reset(&mut self) {
-        for s in &mut self.slots {
+        for s in self.slots.iter_mut() {
             *s = T::default();
         }
         self.staged = T::default();
+        self.head = 0;
     }
 }
 
@@ -107,5 +125,66 @@ mod tests {
         sr.push(5);
         sr.tick();
         assert_eq!(*sr.output(), 5);
+    }
+
+    #[test]
+    fn depth_one_bubbles_and_sustains() {
+        // Depth-1 wraps every tick: the head cursor must stay pinned at 0
+        // and each tick fully replaces the register contents.
+        let mut sr = ShiftRegister::<u64>::new(1);
+        for i in 1..=5u64 {
+            sr.push(i);
+            sr.tick();
+            assert_eq!(*sr.output(), i);
+        }
+        sr.tick(); // no push: bubble
+        assert_eq!(*sr.output(), 0);
+    }
+
+    #[test]
+    fn stages_read_newest_to_oldest() {
+        let mut sr = ShiftRegister::<u32>::new(3);
+        for i in [10u32, 20, 30] {
+            sr.push(i);
+            sr.tick();
+        }
+        assert_eq!(*sr.stage(0), 30, "stage 0 = newest");
+        assert_eq!(*sr.stage(1), 20);
+        assert_eq!(*sr.stage(2), 10, "last stage = oldest = output");
+        assert_eq!(sr.stage(2), sr.output());
+    }
+
+    #[test]
+    fn wraparound_many_times_keeps_delay_exact() {
+        // Push a known sequence for far more ticks than the depth: after
+        // the cursor has wrapped dozens of times, the output must still be
+        // exactly the value pushed `depth` ticks ago.
+        for depth in [1usize, 2, 3, 7] {
+            let mut sr = ShiftRegister::<u64>::new(depth);
+            for t in 1..=200u64 {
+                sr.push(t);
+                sr.tick();
+                let want = if (t as usize) < depth { 0 } else { t - depth as u64 + 1 };
+                assert_eq!(*sr.output(), want, "depth {depth} tick {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_mid_wrap_restarts_cleanly() {
+        let mut sr = ShiftRegister::<u32>::new(3);
+        for i in 1..=5u32 {
+            sr.push(i);
+            sr.tick();
+        }
+        sr.reset();
+        // Same behavior as a fresh register.
+        let mut outs = Vec::new();
+        for i in 1..=4u32 {
+            sr.push(i * 100);
+            sr.tick();
+            outs.push(*sr.output());
+        }
+        assert_eq!(outs, vec![0, 0, 100, 200]);
     }
 }

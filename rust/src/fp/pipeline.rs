@@ -6,11 +6,15 @@
 //! contract for *any* combinational function over bit patterns, so the same
 //! scheduler runs with the bit-accurate FP adder, the FP multiplier (the
 //! paper's "any multi-cycle operator" generalization), or integer ops.
+//!
+//! Implementation: a fixed-capacity ring buffer of pipeline slots with a
+//! head cursor — the seed's `VecDeque` push/pop per cycle replaced by one
+//! slot write and a cursor increment (O(1), zero-allocation per tick;
+//! `tests/equivalence_core.rs` proves the two behaviorally identical).
 
 use crate::cycle::Clocked;
 use crate::fp::arith::{fp_add, fp_mul};
 use crate::fp::format::FpFormat;
-use std::collections::VecDeque;
 
 /// The combinational kernel a [`PipelinedOp`] wraps.
 pub type OpFn = fn(FpFormat, u64, u64) -> u64;
@@ -21,9 +25,14 @@ pub type OpFn = fn(FpFormat, u64, u64) -> u64;
 pub struct PipelinedOp {
     fmt: FpFormat,
     f: OpFn,
-    latency: usize,
-    /// stage\[0\] = youngest. Some((a, b)) means the op issued that cycle.
-    stages: VecDeque<Option<(u64, u64)>>,
+    /// Ring of pipeline slots, length = latency. `Some((a, b))` means an
+    /// op issued the cycle that slot was written.
+    slots: Box<[Option<(u64, u64)>]>,
+    /// Drain end of the ring: the slot whose contents leave the pipeline
+    /// this cycle; each tick overwrites it with the staged issue and
+    /// advances the cursor.
+    head: usize,
+    in_flight: usize,
     staged: Option<(u64, u64)>,
     issues: u64,
 }
@@ -31,8 +40,8 @@ pub struct PipelinedOp {
 impl std::fmt::Debug for PipelinedOp {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PipelinedOp")
-            .field("latency", &self.latency)
-            .field("occupancy", &self.stages.iter().filter(|s| s.is_some()).count())
+            .field("latency", &self.slots.len())
+            .field("occupancy", &self.in_flight)
             .finish()
     }
 }
@@ -40,7 +49,15 @@ impl std::fmt::Debug for PipelinedOp {
 impl PipelinedOp {
     pub fn new(fmt: FpFormat, latency: usize, f: OpFn) -> Self {
         assert!(latency >= 1, "a multi-cycle operator needs latency >= 1");
-        Self { fmt, f, latency, stages: VecDeque::from(vec![None; latency]), staged: None, issues: 0 }
+        Self {
+            fmt,
+            f,
+            slots: vec![None; latency].into_boxed_slice(),
+            head: 0,
+            in_flight: 0,
+            staged: None,
+            issues: 0,
+        }
     }
 
     /// A pipelined IEEE adder (the paper's default operator).
@@ -54,7 +71,7 @@ impl PipelinedOp {
     }
 
     pub fn latency(&self) -> usize {
-        self.latency
+        self.slots.len()
     }
 
     pub fn format(&self) -> FpFormat {
@@ -77,12 +94,12 @@ impl PipelinedOp {
     /// The value is computed lazily at drain time — numerically equivalent
     /// to computing it stage-by-stage, since the kernel is combinational.
     pub fn output(&self) -> Option<u64> {
-        self.stages.back().cloned().flatten().map(|(a, b)| (self.f)(self.fmt, a, b))
+        self.slots[self.head].map(|(a, b)| (self.f)(self.fmt, a, b))
     }
 
     /// Number of in-flight operations (excluding this cycle's issue).
     pub fn occupancy(&self) -> usize {
-        self.stages.iter().filter(|s| s.is_some()).count()
+        self.in_flight
     }
 
     /// Total issues since reset.
@@ -93,15 +110,23 @@ impl PipelinedOp {
 
 impl Clocked for PipelinedOp {
     fn tick(&mut self) {
-        self.stages.pop_back();
+        if self.slots[self.head].is_some() {
+            self.in_flight -= 1;
+        }
         if self.staged.is_some() {
             self.issues += 1;
+            self.in_flight += 1;
         }
-        self.stages.push_front(self.staged.take());
+        self.slots[self.head] = self.staged.take();
+        self.head = (self.head + 1) % self.slots.len();
     }
 
     fn reset(&mut self) {
-        self.stages = VecDeque::from(vec![None; self.latency]);
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.head = 0;
+        self.in_flight = 0;
         self.staged = None;
         self.issues = 0;
     }
@@ -161,5 +186,42 @@ mod tests {
         p.reset();
         assert_eq!(p.occupancy(), 0);
         assert_eq!(p.issues(), 0);
+    }
+
+    #[test]
+    fn latency_one_wraps_every_tick() {
+        // Depth-1 ring: the head cursor stays at 0 and each tick both
+        // drains and refills the single slot.
+        let mut p = PipelinedOp::adder(F32, 1);
+        for i in 1..=4 {
+            p.issue(f32_bits(i as f32), f32_bits(0.0));
+            p.tick();
+            assert_eq!(p.output().map(bits_f32), Some(i as f32));
+            assert_eq!(p.occupancy(), 1);
+        }
+        p.tick(); // bubble
+        assert_eq!(p.output(), None);
+        assert_eq!(p.occupancy(), 0);
+        assert_eq!(p.issues(), 4);
+    }
+
+    #[test]
+    fn occupancy_tracks_through_wraparound_gaps() {
+        // Irregular issue pattern over many wraps: occupancy must equal
+        // the number of Some slots at all times.
+        let mut p = PipelinedOp::adder(F32, 3);
+        let mut expected_live = [false; 3];
+        let mut w = 0usize;
+        for t in 0..50u32 {
+            let issue = t % 7 != 0 && t % 3 != 1;
+            if issue {
+                p.issue(f32_bits(1.0), f32_bits(1.0));
+            }
+            p.tick();
+            expected_live[w] = issue;
+            w = (w + 1) % 3;
+            let want = expected_live.iter().filter(|&&b| b).count();
+            assert_eq!(p.occupancy(), want, "tick {t}");
+        }
     }
 }

@@ -124,6 +124,13 @@ impl FinalAdder {
         std::mem::take(&mut self.results)
     }
 
+    /// Drain completed results in place, keeping the buffer's allocation —
+    /// the per-cycle hot path ([`FinalAdder::take_results`] replaces the
+    /// buffer wholesale and is kept for tests/occasional callers).
+    pub fn drain_results(&mut self) -> std::vec::Drain<'_, FinalResult> {
+        self.results.drain(..)
+    }
+
     /// In-flight occupancy (debug/metrics).
     pub fn occupancy(&self) -> usize {
         self.jobs.len()

@@ -159,11 +159,18 @@ impl Intac {
         if !inputs.is_empty() {
             debug_assert!(self.in_set, "input outside a set");
             let mask = width_mask(self.cfg.in_width);
-            let mut vals: Vec<u128> = Vec::with_capacity(inputs.len() + 2);
-            vals.push(self.sum);
-            vals.push(self.carry);
-            vals.extend(inputs.iter().map(|&v| (v as u128) & mask));
-            let (s, c) = compress_to_2(&vals, self.cfg.out_width);
+            // Fold each input through one 3:2 row. For N=1 (the default)
+            // this is exactly the (N+2):2 compression; for N>1 the
+            // (sum, carry) pair differs bitwise from a Wallace grouping
+            // but sum+carry is identical mod 2^out_width, which is all the
+            // final adder observes. Allocation-free, unlike building a
+            // compress_to_2 operand Vec per cycle.
+            let (mut s, mut c) = (self.sum, self.carry);
+            for &v in inputs {
+                let (s2, c2) = compress_3_2(s, c, (v as u128) & mask, self.cfg.out_width);
+                s = s2;
+                c = c2;
+            }
             self.sum = s;
             self.carry = c;
             self.inputs_consumed += inputs.len() as u64;
@@ -177,8 +184,9 @@ impl Intac {
             }
         }
         self.final_adder.tick();
-        for r in self.final_adder.take_results() {
-            self.outputs.push(IntacOutput { value: r.value, set_id: r.set_id, cycle: self.cycle });
+        let cycle = self.cycle;
+        for r in self.final_adder.drain_results() {
+            self.outputs.push(IntacOutput { value: r.value, set_id: r.set_id, cycle });
         }
         self.cycle += 1;
         ok
@@ -188,12 +196,9 @@ impl Intac {
     pub fn idle(&mut self, n: usize) {
         for _ in 0..n {
             self.final_adder.tick();
-            for r in self.final_adder.take_results() {
-                self.outputs.push(IntacOutput {
-                    value: r.value,
-                    set_id: r.set_id,
-                    cycle: self.cycle,
-                });
+            let cycle = self.cycle;
+            for r in self.final_adder.drain_results() {
+                self.outputs.push(IntacOutput { value: r.value, set_id: r.set_id, cycle });
             }
             self.cycle += 1;
         }
@@ -201,6 +206,51 @@ impl Intac {
 
     pub fn take_outputs(&mut self) -> Vec<IntacOutput> {
         std::mem::take(&mut self.outputs)
+    }
+
+    /// Return to the power-on state retaining internal allocations (output
+    /// buffer, final-adder queues) — the reuse path for
+    /// [`Intac::run_sets_into`].
+    pub fn reset(&mut self) {
+        self.sum = 0;
+        self.carry = 0;
+        self.final_adder.reset();
+        self.cur_set = 0;
+        self.next_set = 0;
+        self.in_set = false;
+        self.cycle = 0;
+        self.outputs.clear();
+        self.inputs_consumed = 0;
+    }
+
+    /// Batched fast path (the same stepping contract as
+    /// [`crate::jugglepac::JugglePac::run_sets_into`]): feed whole sets
+    /// back-to-back, drain until every result emerges or `max_drain` idle
+    /// cycles pass, and append the outputs to `out`. Returns the number of
+    /// outputs appended. Use on a fresh or [`Intac::reset`] instance.
+    pub fn run_sets_into(
+        &mut self,
+        out: &mut Vec<IntacOutput>,
+        sets: &[Vec<u64>],
+        max_drain: usize,
+    ) -> usize {
+        let already = out.len();
+        let n = self.cfg.inputs_per_cycle as usize;
+        for set in sets {
+            let mut i = 0;
+            while i < set.len() {
+                let hi = (i + n).min(set.len());
+                self.step(&set[i..hi], i == 0, hi == set.len());
+                i = hi;
+            }
+        }
+        let mut drained = 0;
+        while self.outputs.len() < sets.len() && drained < max_drain {
+            self.idle(1);
+            drained += 1;
+        }
+        out.extend(self.outputs.drain(..));
+        out.len() - already
     }
 
     pub fn stalled(&self) -> bool {
@@ -213,24 +263,13 @@ impl Intac {
 }
 
 /// Run whole sets through a fresh INTAC; returns outputs in emission order.
-/// Values are masked to `in_width`. Panics if draining exceeds `max_drain`.
+/// Values are masked to `in_width`. (Convenience wrapper over
+/// [`Intac::run_sets_into`] — reuse an instance plus an output buffer when
+/// throughput matters.)
 pub fn run_sets(cfg: IntacConfig, sets: &[Vec<u64>], max_drain: usize) -> (Vec<IntacOutput>, Intac) {
     let mut m = Intac::new(cfg);
-    let n = cfg.inputs_per_cycle as usize;
-    for set in sets {
-        let mut i = 0;
-        while i < set.len() {
-            let hi = (i + n).min(set.len());
-            m.step(&set[i..hi], i == 0, hi == set.len());
-            i = hi;
-        }
-    }
-    let mut drained = 0;
-    while m.outputs.len() < sets.len() && drained < max_drain {
-        m.idle(1);
-        drained += 1;
-    }
-    let outs = m.take_outputs();
+    let mut outs = Vec::with_capacity(sets.len());
+    m.run_sets_into(&mut outs, sets, max_drain);
     (outs, m)
 }
 
@@ -369,6 +408,31 @@ mod tests {
         assert!(!m.stalled());
         for (i, o) in outs.iter().enumerate() {
             assert_eq!(o.value, oracle_sum(cfg, &sets[i]));
+        }
+    }
+
+    #[test]
+    fn reset_reuse_is_equivalent_to_fresh() {
+        let mut rng = Xoshiro256::seeded(15);
+        let cfg = IntacConfig {
+            final_adder: FinalAdderKind::ResourceShared { fa_cells: 16 },
+            ..Default::default()
+        };
+        let sets: Vec<Vec<u64>> = (0..3)
+            .map(|_| (0..cfg.min_set_len() + 8).map(|_| rng.next_u64()).collect())
+            .collect();
+        let (fresh, _) = run_sets(cfg, &sets, 10_000);
+
+        let mut m = Intac::new(cfg);
+        let mut outs = Vec::new();
+        // Dirty the instance, then reset and re-run the same workload.
+        m.run_sets_into(&mut outs, &sets[..1], 10_000);
+        m.reset();
+        outs.clear();
+        let n = m.run_sets_into(&mut outs, &sets, 10_000);
+        assert_eq!(n, fresh.len());
+        for (x, y) in fresh.iter().zip(&outs) {
+            assert_eq!((x.value, x.set_id, x.cycle), (y.value, y.set_id, y.cycle));
         }
     }
 

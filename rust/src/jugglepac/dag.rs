@@ -70,6 +70,13 @@ impl Dag {
         Self::default()
     }
 
+    /// Empty the arena, retaining its allocation — the reuse path for
+    /// driving many workloads through one simulator instance
+    /// ([`crate::jugglepac::JugglePac::reset`]).
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.nodes.len()
     }

@@ -16,6 +16,28 @@
 //! The simulator additionally records every scheduled operation in a
 //! [`dag::Dag`] so tests can replay each output bit-exactly and check that
 //! its leaves partition the input set.
+//!
+//! # Provenance policy
+//!
+//! DAG recording is instrumentation, not hardware state, and it costs
+//! several arena pushes per simulated cycle. [`JugglePacConfig::provenance`]
+//! selects the policy:
+//!
+//! - [`Provenance::Full`] (default): every leaf/op/identity is recorded in
+//!   a reusable `Vec` arena ([`Dag`]), enabling bit-exact replay, partition
+//!   checks, and Fig.-2 tree rendering. [`JugglePac::reset`] clears the
+//!   arena while keeping its allocation, so a long-lived instance can
+//!   drive workload after workload without reallocating.
+//! - [`Provenance::Off`]: recording is skipped entirely — the
+//!   zero-allocation mode used by the benches and throughput-oriented
+//!   callers. The datapath (values, labels, set ids, cycles) is bit-for-bit
+//!   identical either way; only [`OutputBeat::node`] becomes meaningless
+//!   (0). `tests/equivalence_core.rs` pins that equivalence.
+//!
+//! The batched driver [`JugglePac::run_sets_into`] pairs with this: it
+//! appends results into a caller-owned buffer (internal buffers are
+//! drained, not replaced), so the whole simulate-a-workload loop allocates
+//! nothing in steady state.
 
 pub mod dag;
 pub mod pis;
@@ -25,6 +47,23 @@ pub use pis::{ExpiredOutput, Held, PairEntry, Pis, ReceiveOutcome};
 
 use crate::cycle::{Clocked, CycleStats, ShiftRegister, Trace, TraceEvent};
 use crate::fp::{FpFormat, PipelinedOp, F64};
+
+/// DAG-recording policy (see the module docs' "Provenance policy").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Record every scheduled operation in the reusable [`Dag`] arena:
+    /// enables replay, partition checks and tree rendering (default).
+    Full,
+    /// Skip all recording — the zero-allocation throughput mode. The
+    /// datapath is unchanged; [`OutputBeat::node`] is 0.
+    Off,
+}
+
+impl Default for Provenance {
+    fn default() -> Self {
+        Provenance::Full
+    }
+}
 
 /// Static configuration of a JugglePAC instance.
 #[derive(Clone, Copy, Debug)]
@@ -41,6 +80,9 @@ pub struct JugglePacConfig {
     /// Output-identification window margin: a lone value is flushed as a
     /// final result after `L + expiry_margin` cycles (Algorithm 2 uses 3).
     pub expiry_margin: u32,
+    /// Whether to record the addition DAG (instrumentation only — does not
+    /// affect output bits, set ids, labels or cycles).
+    pub provenance: Provenance,
 }
 
 impl Default for JugglePacConfig {
@@ -53,6 +95,7 @@ impl Default for JugglePacConfig {
             fifo_capacity: 4,
             operator: Operator::Add,
             expiry_margin: 3,
+            provenance: Provenance::Full,
         }
     }
 }
@@ -119,6 +162,9 @@ pub struct JugglePac {
     cycle: u64,
     stats: CycleStats,
     outputs: Vec<OutputBeat>,
+    /// Reusable buffer for Algorithm-2 expirations (cleared every cycle;
+    /// avoids a per-cycle allocation in the hot loop).
+    expired_scratch: Vec<ExpiredOutput>,
     trace: Option<Trace>,
 }
 
@@ -151,8 +197,35 @@ impl JugglePac {
             cycle: 0,
             stats: CycleStats::default(),
             outputs: Vec::new(),
+            expired_scratch: Vec::with_capacity(cfg.pis_registers),
             trace: None,
             cfg,
+        }
+    }
+
+    /// Return to the power-on state while retaining every internal
+    /// allocation (pipeline ring, PIS FIFO slots, DAG arena, output and
+    /// scratch buffers) — the zero-allocation reuse path for driving many
+    /// workloads through one instance (see [`JugglePac::run_sets_into`]).
+    pub fn reset(&mut self) {
+        self.op.reset();
+        self.sr.reset();
+        self.pis.reset();
+        self.holding = None;
+        self.eos = false;
+        self.next_label = 0;
+        self.next_set_id = 0;
+        self.cur_label = 0;
+        self.cur_set_id = 0;
+        self.elem_idx = 0;
+        self.dag.clear();
+        self.issue_cycle.clear();
+        self.cycle = 0;
+        self.stats = CycleStats::default();
+        self.outputs.clear();
+        self.expired_scratch.clear();
+        if let Some(t) = self.trace.as_mut() {
+            t.events.clear();
         }
     }
 
@@ -160,8 +233,14 @@ impl JugglePac {
         &self.cfg
     }
 
-    /// Attach a trace sink (records every cycle from now on).
+    /// Attach a trace sink (records every cycle from now on). Tracing
+    /// renders symbolic names from the recorded DAG, so it requires
+    /// [`Provenance::Full`].
     pub fn enable_trace(&mut self) {
+        assert!(
+            self.cfg.provenance == Provenance::Full,
+            "tracing needs Provenance::Full (symbols come from the recorded DAG)"
+        );
         self.trace = Some(Trace::new());
     }
 
@@ -238,8 +317,11 @@ impl JugglePac {
             }
         }
 
-        // Algorithm 2: output identification.
-        for out in self.pis.step_counters(received_label) {
+        // Algorithm 2: output identification. Expirations land in a
+        // reusable scratch buffer (no per-cycle allocation).
+        self.pis.step_counters(received_label, &mut self.expired_scratch);
+        for k in 0..self.expired_scratch.len() {
+            let out = self.expired_scratch[k];
             let beat = OutputBeat {
                 bits: out.value.bits,
                 set_id: out.value.set_id,
@@ -255,6 +337,7 @@ impl JugglePac {
         }
 
         // ------------------------------------------------- Algorithm 1 FSM
+        let record = self.cfg.provenance == Provenance::Full;
         match input {
             Some(beat) => {
                 self.stats.inputs_consumed += 1;
@@ -266,7 +349,7 @@ impl JugglePac {
                     self.next_set_id += 1;
                     self.elem_idx = 0;
                 }
-                let leaf = self.dag.leaf(self.cur_set_id, self.elem_idx);
+                let leaf = if record { self.dag.leaf(self.cur_set_id, self.elem_idx) } else { 0 };
                 if let Some(ev) = ev.as_mut() {
                     ev.input = Some(self.dag.symbol(leaf));
                     ev.start = beat.start;
@@ -276,7 +359,7 @@ impl JugglePac {
                 match (self.holding, beat.start) {
                     (Some(held), false) => {
                         // State 1 -> 0: pair the held input with this one.
-                        let node = self.dag.op(held.node, leaf);
+                        let node = if record { self.dag.op(held.node, leaf) } else { 0 };
                         self.issue(held.bits, beat.bits, held.label, held.set_id, node, &mut ev);
                         self.holding = None;
                     }
@@ -284,8 +367,12 @@ impl JugglePac {
                         // New set while holding an odd element: flush it
                         // with the operator identity ("Adder <- previous
                         // input, 0"), keep state 1 with the new input.
-                        let id = self.dag.identity();
-                        let node = self.dag.op(held.node, id);
+                        let node = if record {
+                            let id = self.dag.identity();
+                            self.dag.op(held.node, id)
+                        } else {
+                            0
+                        };
                         let identity = self.cfg.operator.identity_bits(self.cfg.fmt);
                         self.issue(held.bits, identity, held.label, held.set_id, node, &mut ev);
                         self.holding = Some(HeldInput {
@@ -313,8 +400,12 @@ impl JugglePac {
                 // element at end-of-stream; otherwise serve the FIFO.
                 if self.eos && self.holding.is_some() {
                     let held = self.holding.take().unwrap();
-                    let id = self.dag.identity();
-                    let node = self.dag.op(held.node, id);
+                    let node = if record {
+                        let id = self.dag.identity();
+                        self.dag.op(held.node, id)
+                    } else {
+                        0
+                    };
                     let identity = self.cfg.operator.identity_bits(self.cfg.fmt);
                     self.issue(held.bits, identity, held.label, held.set_id, node, &mut ev);
                 } else {
@@ -343,7 +434,11 @@ impl JugglePac {
     /// Serve the PIS FIFO with the adder's free slot (state-0 addition).
     fn drain_fifo_slot(&mut self, ev: &mut Option<TraceEvent>) {
         if let Some(&pair) = self.pis.ready_pair() {
-            let node = self.dag.op(pair.a.node, pair.b.node);
+            let node = if self.cfg.provenance == Provenance::Full {
+                self.dag.op(pair.a.node, pair.b.node)
+            } else {
+                0
+            };
             self.pis.consume_pair();
             self.issue(pair.a.bits, pair.b.bits, pair.label, pair.a.set_id, node, ev);
         }
@@ -362,7 +457,9 @@ impl JugglePac {
     ) {
         self.op.issue(a, b);
         self.sr.push(SrTag { in_en: true, label, set_id, node });
-        self.issue_cycle.push((node, self.cycle));
+        if self.cfg.provenance == Provenance::Full {
+            self.issue_cycle.push((node, self.cycle));
+        }
         self.stats.op_issues += 1;
         if let Some(ev) = ev.as_mut() {
             if let Node::Op { l, r } = self.dag.node(node) {
@@ -382,13 +479,54 @@ impl JugglePac {
     pub fn now(&self) -> u64 {
         self.cycle
     }
+
+    /// Batched fast path: drive a complete workload through this instance —
+    /// back-to-back sets with optional inter-set gaps, then drain until all
+    /// results emerge (or `max_drain` idle cycles pass) — appending the
+    /// outputs, in emission order, to `out`.
+    ///
+    /// The instance must be fresh or [`JugglePac::reset`]: the driver
+    /// signals end-of-stream, so reuse without a reset would start with
+    /// `eos` already latched. Internal buffers are drained (capacity
+    /// retained), so a reused instance plus a reused `out` make the whole
+    /// loop allocation-free in steady state. Returns the number of outputs
+    /// appended.
+    pub fn run_sets_into(
+        &mut self,
+        out: &mut Vec<OutputBeat>,
+        sets: &[Vec<u64>],
+        gap_after: &dyn Fn(usize) -> usize,
+        max_drain: usize,
+    ) -> usize {
+        debug_assert!(!self.eos, "reuse a JugglePac via reset() before run_sets_into");
+        let already = out.len();
+        for (si, set) in sets.iter().enumerate() {
+            for (i, &v) in set.iter().enumerate() {
+                self.step(Some(InputBeat { bits: v, start: i == 0 }));
+            }
+            for _ in 0..gap_after(si) {
+                self.step(None);
+            }
+        }
+        self.finish_stream();
+        let expected = sets.len();
+        let mut drained = 0;
+        while self.outputs.len() < expected && drained < max_drain {
+            self.step(None);
+            drained += 1;
+        }
+        out.extend(self.outputs.drain(..));
+        out.len() - already
+    }
 }
 
 /// Drive a complete workload through a fresh JugglePAC instance:
 /// back-to-back sets with optional inter-set gaps, then drain until all
 /// results emerge (or `max_drain` cycles pass).
 ///
-/// Returns the outputs in emission order.
+/// Returns the outputs in emission order. (Convenience wrapper over
+/// [`JugglePac::run_sets_into`] — reuse an instance plus an output buffer
+/// when throughput matters.)
 pub fn run_sets(
     cfg: JugglePacConfig,
     sets: &[Vec<u64>],
@@ -396,22 +534,8 @@ pub fn run_sets(
     max_drain: usize,
 ) -> (Vec<OutputBeat>, JugglePac) {
     let mut jp = JugglePac::new(cfg);
-    for (si, set) in sets.iter().enumerate() {
-        for (i, &v) in set.iter().enumerate() {
-            jp.step(Some(InputBeat { bits: v, start: i == 0 }));
-        }
-        for _ in 0..gap_after(si) {
-            jp.step(None);
-        }
-    }
-    jp.finish_stream();
-    let expected = sets.len();
-    let mut drained = 0;
-    while jp.outputs.len() < expected && drained < max_drain {
-        jp.step(None);
-        drained += 1;
-    }
-    let outs = jp.take_outputs();
+    let mut outs = Vec::with_capacity(sets.len());
+    jp.run_sets_into(&mut outs, sets, gap_after, max_drain);
     (outs, jp)
 }
 
@@ -617,6 +741,65 @@ mod tests {
         let (_, jp) = run_sets(JugglePacConfig::default(), &sets, &|_| 0, 10_000);
         let util = jp.stats().op_utilization();
         assert!(util > 0.4 && util < 0.75, "utilization {util}");
+    }
+
+    #[test]
+    fn provenance_off_matches_full_on_everything_but_nodes() {
+        let sets = f64_sets(&[
+            &[1.0, 2.0, 3.0, 4.0, 5.0],
+            &[10.0, 20.0, 30.0, 40.0],
+            &[0.5, 1.5, 2.5, 3.5, 4.5, 5.5],
+        ]);
+        let full = cfg_l2_r3();
+        let off = JugglePacConfig { provenance: Provenance::Off, ..cfg_l2_r3() };
+        let (a, jp_full) = run_sets(full, &sets, &|_| 0, 10_000);
+        let (b, jp_off) = run_sets(off, &sets, &|_| 0, 10_000);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.bits, y.bits);
+            assert_eq!(x.set_id, y.set_id);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.cycle, y.cycle);
+        }
+        assert!(jp_full.dag().len() > 0, "Full records");
+        assert_eq!(jp_off.dag().len(), 0, "Off records nothing");
+        assert_eq!(jp_full.stats().cycles, jp_off.stats().cycles);
+        assert_eq!(jp_full.stats().op_issues, jp_off.stats().op_issues);
+    }
+
+    #[test]
+    fn reset_reuse_is_equivalent_to_fresh() {
+        let sets = f64_sets(&[&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0, 9.0]]);
+        let cfg = cfg_l2_r3();
+        let (fresh, _) = run_sets(cfg, &sets, &|_| 0, 10_000);
+
+        let mut jp = JugglePac::new(cfg);
+        let mut outs = Vec::new();
+        // Dirty the instance with a different workload, then reset.
+        let other = f64_sets(&[&[9.0, 8.0, 7.0]]);
+        jp.run_sets_into(&mut outs, &other, &|_| 0, 10_000);
+        jp.reset();
+        outs.clear();
+        let n = jp.run_sets_into(&mut outs, &sets, &|_| 0, 10_000);
+        assert_eq!(n, fresh.len());
+        for (x, y) in fresh.iter().zip(&outs) {
+            assert_eq!((x.bits, x.set_id, x.label, x.cycle), (y.bits, y.set_id, y.label, y.cycle));
+        }
+    }
+
+    #[test]
+    fn run_sets_into_appends_and_counts() {
+        let cfg = cfg_l2_r3();
+        let s1 = f64_sets(&[&[1.0, 2.0, 3.0, 4.0]]);
+        let s2 = f64_sets(&[&[5.0, 6.0, 7.0, 8.0]]);
+        let mut outs = Vec::new();
+        let mut jp = JugglePac::new(cfg);
+        assert_eq!(jp.run_sets_into(&mut outs, &s1, &|_| 0, 10_000), 1);
+        jp.reset();
+        assert_eq!(jp.run_sets_into(&mut outs, &s2, &|_| 0, 10_000), 1);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(bits_f64(outs[0].bits), 10.0);
+        assert_eq!(bits_f64(outs[1].bits), 26.0);
     }
 
     #[test]

@@ -122,11 +122,15 @@ impl Pis {
     /// One cycle of Algorithm 2: reset the counter of the label that just
     /// received a value (if any), then advance every counter, flushing any
     /// register whose counter hits the window as a final output.
-    pub fn step_counters(&mut self, received_label: Option<u8>) -> Vec<ExpiredOutput> {
+    ///
+    /// Expired outputs are written into `outs` (cleared first) so the
+    /// caller can reuse one buffer across cycles — this runs every
+    /// simulated cycle and must not allocate in steady state.
+    pub fn step_counters(&mut self, received_label: Option<u8>, outs: &mut Vec<ExpiredOutput>) {
+        outs.clear();
         if let Some(l) = received_label {
             self.counters[l as usize] = 0;
         }
-        let mut outs = Vec::new();
         for i in 0..self.regs.len() {
             if self.counters[i] == self.window {
                 if let Some(v) = self.regs[i].take() {
@@ -137,7 +141,6 @@ impl Pis {
                 self.counters[i] += 1;
             }
         }
-        outs
     }
 
     /// Registered head of the ready-pair FIFO.
@@ -199,12 +202,13 @@ mod tests {
     fn counter_expires_lone_value_at_window() {
         let latency = 2;
         let mut p = Pis::new(2, latency, 4);
+        let mut outs = Vec::new();
         p.receive(0, held(42, 0));
-        let mut outs = p.step_counters(Some(0));
+        p.step_counters(Some(0), &mut outs);
         assert!(outs.is_empty());
         // window = L+3 = 5: after 5 more counter steps the value flushes.
         for i in 0..10 {
-            outs = p.step_counters(None);
+            p.step_counters(None, &mut outs);
             if !outs.is_empty() {
                 assert_eq!(i, 4, "flush after counter reaches window");
                 break;
@@ -219,25 +223,29 @@ mod tests {
     #[test]
     fn receive_resets_counter() {
         let mut p = Pis::new(2, 2, 4);
+        let mut outs = Vec::new();
         p.receive(0, held(1, 0));
-        p.step_counters(Some(0));
+        p.step_counters(Some(0), &mut outs);
         for _ in 0..3 {
-            p.step_counters(None);
+            p.step_counters(None, &mut outs);
         }
         // partner arrives just before expiry: pairs, no output
         assert_eq!(p.receive(0, held(2, 0)), ReceiveOutcome::Paired);
-        let outs = p.step_counters(Some(0));
+        p.step_counters(Some(0), &mut outs);
         assert!(outs.is_empty());
         for _ in 0..20 {
-            assert!(p.step_counters(None).is_empty());
+            p.step_counters(None, &mut outs);
+            assert!(outs.is_empty());
         }
     }
 
     #[test]
     fn empty_register_expiry_is_noop() {
         let mut p = Pis::new(2, 2, 4);
+        let mut outs = Vec::new();
         for _ in 0..30 {
-            assert!(p.step_counters(None).is_empty());
+            p.step_counters(None, &mut outs);
+            assert!(outs.is_empty());
         }
     }
 

@@ -51,6 +51,7 @@ USAGE: jugglepac <subcommand> [options]
   minset     [--registers R] [--latency L] [--trials T]
   table      --n 2|3|4|5
   simulate   [--sets S] [--len N] [--registers R] [--latency L] [--seed X]
+             [--provenance full|off]
   intac      [--sets S] [--len N] [--inputs I] [--fas K]
   serve      [--sets S] [--max-len N] [--engine xla|native] [--seed X]
   artifacts  [--dir PATH]";
@@ -121,11 +122,17 @@ fn cmd_minset(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     use jugglepac::baselines::SerialAccumulator;
     use jugglepac::fp::F64;
-    use jugglepac::jugglepac::{run_sets, JugglePacConfig};
+    use jugglepac::jugglepac::{JugglePac, JugglePacConfig, Provenance};
     use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
+    let provenance = match args.get_or("provenance", "full") {
+        "off" => Provenance::Off,
+        "full" => Provenance::Full,
+        other => bail!("--provenance must be full|off, got {other:?}"),
+    };
     let cfg = JugglePacConfig {
         adder_latency: args.get_usize("latency", 14)?,
         pis_registers: args.get_usize("registers", 4)?,
+        provenance,
         ..Default::default()
     };
     let ws = SetStream::generate(&WorkloadConfig {
@@ -134,8 +141,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 1)?,
         ..Default::default()
     });
+    // The batched fast path: one instance, one output buffer, no per-call
+    // allocation.
+    let mut jp = JugglePac::new(cfg);
+    let mut outs = Vec::with_capacity(ws.sets.len());
     let t0 = std::time::Instant::now();
-    let (outs, jp) = run_sets(cfg, &ws.sets, &|_| 0, 1_000_000);
+    jp.run_sets_into(&mut outs, &ws.sets, &|_| 0, 1_000_000);
     let wall = t0.elapsed();
     let mut exact = 0;
     for o in &outs {

@@ -1,0 +1,339 @@
+//! Bit-exact equivalence of the zero-allocation cycle core.
+//!
+//! Two layers of proof that the ring-buffer rewrite changed *performance
+//! only*:
+//!
+//! 1. **Primitive lockstep** — the seed implementations of the three
+//!    clocked primitives (O(L) clone-shift `ShiftRegister`,
+//!    `VecDeque`-based `PipelinedOp` and `SyncFifo`) are reproduced here
+//!    verbatim and driven in lockstep with the ring-buffer versions under
+//!    randomized stimulus (including mid-stream resets); every observable
+//!    must agree on every cycle.
+//! 2. **End-to-end golden runs** — full JugglePAC workloads across
+//!    F16/BF16/F32/F64 and L ∈ {1, 2, 14}: the emitted `OutputBeat`s
+//!    (bits, set ids, labels, cycles) must be identical between
+//!    `Provenance::Full` and `Provenance::Off`, bit-equal to the serial
+//!    oracle on exactly-summable values, and (under `Full`) each output's
+//!    DAG leaves must partition its input set.
+
+use jugglepac::cycle::{Clocked, ShiftRegister, SyncFifo};
+use jugglepac::fp::{FpFormat, PipelinedOp, BF16, F16, F32, F64};
+use jugglepac::jugglepac::{run_sets, serial_sum, JugglePacConfig, Provenance};
+use jugglepac::util::Xoshiro256;
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------- layer 1
+
+/// The seed `ShiftRegister`: physically shifts every slot each tick.
+struct NaiveShift<T: Clone + Default> {
+    slots: Vec<T>,
+    staged: T,
+}
+
+impl<T: Clone + Default> NaiveShift<T> {
+    fn new(depth: usize) -> Self {
+        Self { slots: vec![T::default(); depth], staged: T::default() }
+    }
+    fn push(&mut self, v: T) {
+        self.staged = v;
+    }
+    fn output(&self) -> &T {
+        &self.slots[self.slots.len() - 1]
+    }
+    fn stage(&self, i: usize) -> &T {
+        &self.slots[i]
+    }
+    fn tick(&mut self) {
+        for i in (1..self.slots.len()).rev() {
+            self.slots[i] = self.slots[i - 1].clone();
+        }
+        self.slots[0] = std::mem::take(&mut self.staged);
+    }
+    fn reset(&mut self) {
+        for s in &mut self.slots {
+            *s = T::default();
+        }
+        self.staged = T::default();
+    }
+}
+
+#[test]
+fn shift_register_lockstep_with_seed_model() {
+    for depth in [1usize, 2, 3, 7, 14] {
+        let mut rng = Xoshiro256::seeded(100 + depth as u64);
+        let mut naive = NaiveShift::<u64>::new(depth);
+        let mut ring = ShiftRegister::<u64>::new(depth);
+        for t in 0..5000 {
+            if rng.chance(0.7) {
+                let v = rng.next_u64();
+                naive.push(v);
+                ring.push(v);
+            }
+            naive.tick();
+            ring.tick();
+            assert_eq!(naive.output(), ring.output(), "depth {depth} tick {t}");
+            let i = rng.range(0, depth - 1);
+            assert_eq!(naive.stage(i), ring.stage(i), "depth {depth} tick {t} stage {i}");
+            if rng.chance(0.01) {
+                naive.reset();
+                ring.reset();
+            }
+        }
+    }
+}
+
+/// The seed `PipelinedOp` pipeline structure (VecDeque of slots).
+struct NaivePipe {
+    fmt: FpFormat,
+    f: fn(FpFormat, u64, u64) -> u64,
+    stages: VecDeque<Option<(u64, u64)>>,
+    staged: Option<(u64, u64)>,
+    issues: u64,
+}
+
+impl NaivePipe {
+    fn new(fmt: FpFormat, latency: usize, f: fn(FpFormat, u64, u64) -> u64) -> Self {
+        Self { fmt, f, stages: VecDeque::from(vec![None; latency]), staged: None, issues: 0 }
+    }
+    fn issue(&mut self, a: u64, b: u64) {
+        self.staged = Some((a, b));
+    }
+    fn output(&self) -> Option<u64> {
+        self.stages.back().cloned().flatten().map(|(a, b)| (self.f)(self.fmt, a, b))
+    }
+    fn occupancy(&self) -> usize {
+        self.stages.iter().filter(|s| s.is_some()).count()
+    }
+    fn tick(&mut self) {
+        self.stages.pop_back();
+        if self.staged.is_some() {
+            self.issues += 1;
+        }
+        self.stages.push_front(self.staged.take());
+    }
+    fn reset(&mut self) {
+        let latency = self.stages.len();
+        self.stages = VecDeque::from(vec![None; latency]);
+        self.staged = None;
+        self.issues = 0;
+    }
+}
+
+#[test]
+fn pipelined_op_lockstep_with_seed_model() {
+    use jugglepac::fp::fp_add;
+    for latency in [1usize, 2, 3, 14] {
+        let mut rng = Xoshiro256::seeded(200 + latency as u64);
+        let mut naive = NaivePipe::new(F64, latency, fp_add);
+        let mut ring = PipelinedOp::adder(F64, latency);
+        for t in 0..5000 {
+            if rng.chance(0.6) {
+                let (a, b) = (rng.next_u64(), rng.next_u64());
+                naive.issue(a, b);
+                ring.issue(a, b);
+            }
+            naive.tick();
+            ring.tick();
+            assert_eq!(naive.output(), ring.output(), "L {latency} tick {t}");
+            assert_eq!(naive.occupancy(), ring.occupancy(), "L {latency} tick {t}");
+            assert_eq!(naive.issues, ring.issues(), "L {latency} tick {t}");
+            if rng.chance(0.005) {
+                naive.reset();
+                ring.reset();
+            }
+        }
+    }
+}
+
+/// The seed `SyncFifo` (VecDeque storage), observables included.
+struct NaiveFifo<T: Clone> {
+    slots: VecDeque<T>,
+    capacity: usize,
+    staged_push: Option<T>,
+    staged_pop: bool,
+    overflowed: bool,
+    high_water: usize,
+}
+
+impl<T: Clone> NaiveFifo<T> {
+    fn new(capacity: usize) -> Self {
+        Self {
+            slots: VecDeque::with_capacity(capacity),
+            capacity,
+            staged_push: None,
+            staged_pop: false,
+            overflowed: false,
+            high_water: 0,
+        }
+    }
+    fn dout(&self) -> Option<&T> {
+        self.slots.front()
+    }
+    fn push(&mut self, v: T) {
+        self.staged_push = Some(v);
+    }
+    fn pop(&mut self) {
+        self.staged_pop = true;
+    }
+    fn tick(&mut self) {
+        if self.staged_pop {
+            self.slots.pop_front();
+            self.staged_pop = false;
+        }
+        if let Some(v) = self.staged_push.take() {
+            if self.slots.len() < self.capacity {
+                self.slots.push_back(v);
+            } else {
+                self.overflowed = true;
+            }
+        }
+        self.high_water = self.high_water.max(self.slots.len());
+    }
+    fn reset(&mut self) {
+        self.slots.clear();
+        self.staged_push = None;
+        self.staged_pop = false;
+        self.overflowed = false;
+        self.high_water = 0;
+    }
+}
+
+#[test]
+fn sync_fifo_lockstep_with_seed_model() {
+    for cap in [1usize, 2, 3, 4, 7] {
+        let mut rng = Xoshiro256::seeded(300 + cap as u64);
+        let mut naive = NaiveFifo::<u64>::new(cap);
+        let mut ring = SyncFifo::<u64>::new(cap);
+        for t in 0..5000 {
+            // Push aggressively so overflow paths are exercised too.
+            if rng.chance(0.6) {
+                let v = rng.next_u64();
+                naive.push(v);
+                ring.push(v);
+            }
+            if rng.chance(0.4) {
+                naive.pop();
+                ring.pop();
+            }
+            naive.tick();
+            ring.tick();
+            assert_eq!(naive.dout(), ring.dout(), "cap {cap} tick {t}");
+            assert_eq!(naive.slots.len(), ring.len(), "cap {cap} tick {t}");
+            assert_eq!(naive.overflowed, ring.overflowed, "cap {cap} tick {t}");
+            assert_eq!(naive.high_water, ring.high_water, "cap {cap} tick {t}");
+            if rng.chance(0.01) {
+                naive.reset();
+                ring.reset();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- layer 2
+
+/// Exact bit pattern of a small integer in any FpFormat (|k| must fit the
+/// significand).
+fn int_bits(fmt: FpFormat, k: i64) -> u64 {
+    if k == 0 {
+        return fmt.zero(false);
+    }
+    let sign = k < 0;
+    let m = k.unsigned_abs();
+    let e = 63 - m.leading_zeros() as u64; // floor(log2(m))
+    assert!(e <= fmt.man_bits as u64, "{k} too wide for exact encoding");
+    let frac = (m << (fmt.man_bits as u64 - e)) & fmt.man_mask();
+    fmt.pack(sign, (e as i64 + fmt.bias()) as u64, frac)
+}
+
+#[test]
+fn int_bits_matches_host_encodings() {
+    for k in [-7i64, -3, -1, 0, 1, 2, 3, 5, 7] {
+        assert_eq!(int_bits(F32, k), (k as f32).to_bits() as u64, "F32 {k}");
+        assert_eq!(int_bits(F64, k), (k as f64).to_bits(), "F64 {k}");
+    }
+}
+
+fn golden_workload(fmt: FpFormat, n_sets: usize, len: usize, seed: u64, max_abs: i64) -> Vec<Vec<u64>> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n_sets)
+        .map(|_| (0..len).map(|_| int_bits(fmt, rng.range_i64(-max_abs, max_abs))).collect())
+        .collect()
+}
+
+#[test]
+fn golden_equivalence_across_formats_and_latencies() {
+    for (fi, fmt) in [F16, BF16, F32, F64].into_iter().enumerate() {
+        // Values in [-3, 3] with 40-element sets keep every partial sum an
+        // integer of magnitude ≤ 120 — exactly representable even in BF16
+        // (8 significand bits → exact to 256), so all association orders
+        // agree and the serial oracle is bit-authoritative.
+        let (n_sets, len, max_abs) = (12usize, 40usize, 3i64);
+        for latency in [1usize, 2, 14] {
+            let sets =
+                golden_workload(fmt, n_sets, len, 0xE0 + fi as u64 * 16 + latency as u64, max_abs);
+            let full_cfg = JugglePacConfig { fmt, adder_latency: latency, ..Default::default() };
+            let off_cfg = JugglePacConfig { provenance: Provenance::Off, ..full_cfg };
+            let (full, jp) = run_sets(full_cfg, &sets, &|_| 0, 100_000);
+            let (off, jp_off) = run_sets(off_cfg, &sets, &|_| 0, 100_000);
+            let ctx = format!("fmt #{fi} L={latency}");
+
+            assert_eq!(full.len(), n_sets, "{ctx}");
+            assert_eq!(jp.collisions(), 0, "{ctx}");
+            assert_eq!(jp_off.collisions(), 0, "{ctx}");
+            assert!(!jp.fifo_overflowed(), "{ctx}");
+
+            // Provenance Off must be a pure instrumentation change.
+            assert_eq!(full.len(), off.len(), "{ctx}");
+            for (x, y) in full.iter().zip(&off) {
+                assert_eq!(x.bits, y.bits, "{ctx}");
+                assert_eq!(x.set_id, y.set_id, "{ctx}");
+                assert_eq!(x.label, y.label, "{ctx}");
+                assert_eq!(x.cycle, y.cycle, "{ctx}");
+            }
+
+            // Bit-exact against the serial oracle, in input order; under
+            // Full, each output's recorded leaves partition its set.
+            for (i, o) in full.iter().enumerate() {
+                assert_eq!(o.set_id, i as u64, "{ctx}: ordered results");
+                assert_eq!(o.bits, serial_sum(full_cfg, &sets[i]), "{ctx} set {i}");
+                let mut ls = jp.dag().leaves(o.node);
+                ls.sort_unstable();
+                let want: Vec<(u64, u32)> = (0..len as u32).map(|j| (i as u64, j)).collect();
+                assert_eq!(ls, want, "{ctx} set {i}: partition");
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_equivalence_with_gaps_and_odd_lengths() {
+    // Gaps and odd set lengths drive the identity-flush and FIFO-drain
+    // paths; Full vs Off must still agree beat-for-beat.
+    let fmt = F64;
+    let mut rng = Xoshiro256::seeded(0x0DD);
+    let sets: Vec<Vec<u64>> = (0..10)
+        .map(|_| {
+            let n = rng.range(33, 80); // odd lengths included
+            (0..n).map(|_| int_bits(fmt, rng.range_i64(-100, 100))).collect()
+        })
+        .collect();
+    let gaps: Vec<usize> = (0..sets.len()).map(|_| rng.range(0, 6)).collect();
+    let full_cfg = JugglePacConfig::default();
+    let off_cfg = JugglePacConfig { provenance: Provenance::Off, ..full_cfg };
+    let g1 = gaps.clone();
+    let g2 = gaps;
+    let (full, jp) = run_sets(full_cfg, &sets, &move |i| g1[i], 100_000);
+    let (off, _) = run_sets(off_cfg, &sets, &move |i| g2[i], 100_000);
+    assert_eq!(jp.collisions(), 0);
+    assert_eq!(full.len(), sets.len());
+    assert_eq!(full.len(), off.len());
+    for (x, y) in full.iter().zip(&off) {
+        assert_eq!(
+            (x.bits, x.set_id, x.label, x.cycle),
+            (y.bits, y.set_id, y.label, y.cycle)
+        );
+    }
+    for (i, o) in full.iter().enumerate() {
+        assert_eq!(o.bits, serial_sum(full_cfg, &sets[i]), "set {i}");
+    }
+}

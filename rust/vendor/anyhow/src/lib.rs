@@ -1,0 +1,172 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the small
+//! slice of `anyhow` the codebase actually uses is vendored here with the
+//! same API shape: an opaque [`Error`] carrying a context chain, the
+//! [`Result`] alias with a defaulted error type, the [`Context`] extension
+//! trait for `Result`/`Option`, and the [`anyhow!`]/[`bail!`] macros.
+//!
+//! Semantics mirror upstream where the repo depends on them:
+//! - `{}` formats the outermost message only; `{:#}` formats the whole
+//!   context chain joined with `": "` (the `error: {e:#}` CLI path);
+//! - `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain;
+//! - `.context(..)`/`.with_context(..)` wrap errors and turn `None` into
+//!   an error from the supplied message.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with the error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    fn from_std(e: &(dyn StdError + 'static)) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+
+    /// The context chain, outermost first (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join("\n\nCaused by:\n    "))
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent
+// alongside core's reflexive `impl From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::from_std(&e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("bad value {}", 9);
+        assert_eq!(e.to_string(), "bad value 9");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+}
