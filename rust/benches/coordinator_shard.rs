@@ -1,0 +1,95 @@
+//! Bench: service throughput scaling across coordinator engine shards.
+//!
+//! Drives the same variable-length workload through the service at
+//! `shards ∈ {1, 2, 4}` and reports responses/s per configuration plus
+//! the 4-vs-1 speedup. Two engines:
+//!
+//! - `softfp` — the bit-accurate software IEEE adder engine. Each batch
+//!   costs hundreds of µs of real compute (like a PJRT execute), so the
+//!   engine dominates the pipeline and sharding is expected to scale
+//!   ~linearly up to the core count (the headline: ≥ 2× at 4 shards on a
+//!   ≥ 4-core runner).
+//! - `native` — the vectorized kernel. Batches cost ~µs, so the
+//!   single-threaded batcher dominates and sharding buys little; included
+//!   as the honest contrast (shard when the engine is expensive).
+//!
+//! Every case also lands in `BENCH_2.json` (benchkit::JsonSink) for
+//! PR-over-PR trajectory tracking. Env knobs as elsewhere:
+//! `JUGGLEPAC_BENCH_ITERS`, `JUGGLEPAC_BENCH_SMOKE`,
+//! `JUGGLEPAC_BENCH_JSON` (output path override).
+
+use jugglepac::benchkit::{bench, env_iters, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::util::Xoshiro256;
+use std::time::Duration;
+
+fn workload(count: usize, max_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seeded(0x5A4D);
+    (0..count)
+        .map(|_| {
+            let n = rng.range(64, max_len);
+            // Exact dyadic values: sums are order-independent, so every
+            // configuration is value-checked against the plain sum.
+            (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+        })
+        .collect()
+}
+
+/// One full drive: submit everything in bursts, receive in order, verify.
+fn drive(engine: EngineKind, shards: usize, requests: &[Vec<f32>], want: &[f32]) {
+    let mut svc = Service::start(ServiceConfig {
+        engine,
+        shards,
+        batch_deadline: Duration::from_micros(200),
+        ..Default::default()
+    })
+    .expect("service starts");
+    for chunk in requests.chunks(128) {
+        svc.submit_burst(chunk.to_vec()).expect("submit");
+    }
+    for (i, w) in want.iter().enumerate() {
+        let r = svc.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        assert_eq!(r.sum, *w, "req {i}");
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, requests.len() as u64);
+}
+
+fn main() {
+    let smoke = smoke();
+    let (n_sets, max_len) = if smoke { (200, 256) } else { (2000, 1024) };
+    let requests = workload(n_sets, max_len);
+    let want: Vec<f32> = requests.iter().map(|s| s.iter().sum()).collect();
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!(
+        "=== coordinator shard scaling: {n_sets} sets (len 64..{max_len}), {cores} cores ==="
+    );
+    let mut sink = JsonSink::new();
+
+    for (label, mk) in [
+        ("softfp 16x256", EngineKind::SoftFp { batch: 16, n: 256 }),
+        ("native 16x256", EngineKind::Native { batch: 16, n: 256 }),
+    ] {
+        let mut per_shard: Vec<(usize, f64)> = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let name = format!("service {label} shards={shards}: {n_sets} sets");
+            let d = bench(&name, env_iters(3), || {
+                drive(mk.clone(), shards, &requests, &want);
+            });
+            report_throughput("responses", n_sets as u64, "resp", d);
+            sink.record_throughput(&name, n_sets as u64, d);
+            per_shard.push((shards, n_sets as f64 / d.as_secs_f64()));
+        }
+        let base = per_shard[0].1;
+        for &(shards, rps) in per_shard.iter().skip(1) {
+            println!("  ↳ {label}: {shards} shards vs 1 = {:.2}x", rps / base);
+        }
+    }
+
+    let json_path = std::env::var("JUGGLEPAC_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_2.json".to_string());
+    if let Err(e) = sink.write(std::path::Path::new(&json_path)) {
+        eprintln!("could not write {json_path}: {e}");
+    }
+}

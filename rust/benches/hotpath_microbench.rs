@@ -13,7 +13,7 @@
 //! `JUGGLEPAC_BENCH_SMOKE=1` shrinks the workloads, and
 //! `JUGGLEPAC_BENCH_JSON` overrides the JSON output path.
 
-use jugglepac::benchkit::{bench, report_throughput, JsonSink};
+use jugglepac::benchkit::{bench, env_iters, report_throughput, smoke, JsonSink};
 use jugglepac::fp::{fp_add, fp_mul, F64};
 use jugglepac::intac::{FinalAdderKind, Intac, IntacConfig};
 use jugglepac::jugglepac::{JugglePac, JugglePacConfig, OutputBeat, Provenance};
@@ -21,16 +21,9 @@ use jugglepac::runtime::{default_artifacts_dir, Runtime};
 use jugglepac::util::Xoshiro256;
 use jugglepac::workload::{LenDist, SetStream, WorkloadConfig};
 
-fn env_usize(name: &str) -> Option<usize> {
-    std::env::var(name).ok().and_then(|v| v.parse().ok())
-}
-
 fn main() {
-    let cap = env_usize("JUGGLEPAC_BENCH_ITERS").unwrap_or(usize::MAX);
-    let iters = |default: usize| default.min(cap).max(1);
-    let smoke = std::env::var("JUGGLEPAC_BENCH_SMOKE")
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false);
+    let iters = env_iters;
+    let smoke = smoke();
     let mut sink = JsonSink::new();
 
     // fp_add / fp_mul

@@ -12,7 +12,7 @@
 //! overflow/high-water tracking, issue counters — so the measured cost is
 //! the data-movement structure alone.)
 
-use jugglepac::benchkit::{bench, report_throughput, JsonSink};
+use jugglepac::benchkit::{bench, env_iters, report_throughput, smoke, JsonSink};
 use jugglepac::cycle::{Clocked, ShiftRegister, SyncFifo};
 use jugglepac::fp::{PipelinedOp, F64};
 
@@ -114,17 +114,9 @@ struct Tag {
     _node: u32,
 }
 
-fn env_usize(name: &str) -> Option<usize> {
-    std::env::var(name).ok().and_then(|v| v.parse().ok())
-}
-
 fn main() {
-    let cap = env_usize("JUGGLEPAC_BENCH_ITERS").unwrap_or(usize::MAX);
-    let iters = |default: usize| default.min(cap).max(1);
-    let smoke = std::env::var("JUGGLEPAC_BENCH_SMOKE")
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false);
-    let ticks: u64 = if smoke { 100_000 } else { 1_000_000 };
+    let iters = env_iters;
+    let ticks: u64 = if smoke() { 100_000 } else { 1_000_000 };
     const L: usize = 14; // the paper's headline adder latency
     let mut sink = JsonSink::new();
     let speedup = |label: &str, naive: std::time::Duration, ring: std::time::Duration| {

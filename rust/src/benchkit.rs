@@ -13,6 +13,24 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+/// Parse an integer environment knob (unset / unparsable → `None`).
+pub fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Per-case repetition count: `default`, capped by `JUGGLEPAC_BENCH_ITERS`
+/// (the CI smoke knob), floored at 1.
+pub fn env_iters(default: usize) -> usize {
+    default.min(env_usize("JUGGLEPAC_BENCH_ITERS").unwrap_or(usize::MAX)).max(1)
+}
+
+/// True when `JUGGLEPAC_BENCH_SMOKE` asks for shrunken workloads (CI).
+pub fn smoke() -> bool {
+    std::env::var("JUGGLEPAC_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
 /// Timed repetitions of `f`; returns (min, median, mean).
 pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> (Duration, Duration, Duration) {
     // Warm-up.

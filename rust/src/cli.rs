@@ -1,7 +1,7 @@
 //! Tiny argv parser (the offline crate set has no clap).
 //!
-//! Supports `program <subcommand> [--key value] [--flag]` with typed
-//! accessors and an auto-generated usage string.
+//! Supports `program <subcommand> [--key value] [--key=value] [--flag]`
+//! with typed accessors and an auto-generated usage string.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -32,6 +32,14 @@ impl Args {
             let Some(key) = tok.strip_prefix("--") else {
                 bail!("unexpected positional argument {tok:?}");
             };
+            // `--key=value` form: split once at the first '='.
+            if let Some((k, v)) = key.split_once('=') {
+                if k.is_empty() {
+                    bail!("empty option name in {tok:?}");
+                }
+                out.opts.insert(k.to_string(), v.to_string());
+                continue;
+            }
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
                     let v = it.next().unwrap();
@@ -100,6 +108,18 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn equals_form_options() {
+        let a = parse("serve --shards=4 --engine=native --ordered");
+        assert_eq!(a.get_usize("shards", 1).unwrap(), 4);
+        assert_eq!(a.get("engine"), Some("native"));
+        assert!(a.flag("ordered"));
+        // value may itself contain '=' (only the first splits)
+        let a = parse("x --expr=a=b");
+        assert_eq!(a.get("expr"), Some("a=b"));
+        assert!(Args::from_iter(["x".into(), "--=v".into()]).is_err());
     }
 
     #[test]

@@ -64,16 +64,11 @@ impl Assembler {
             return Vec::new();
         }
         let ps = self.inflight.remove(&req_id).unwrap();
-        // Combine partials in chunk order, pairwise tree for determinism
-        // (matches the kernel's association discipline).
+        // Combine partials in chunk order, pairwise tree for determinism —
+        // the same association discipline as the engine kernel
+        // ([`crate::fp::vreduce::tree_reduce_in_place`]).
         let mut level: Vec<f32> = ps.parts.into_iter().map(|p| p.unwrap()).collect();
-        while level.len() > 1 {
-            level = level
-                .chunks(2)
-                .map(|c| if c.len() == 2 { c[0] + c[1] } else { c[0] })
-                .collect();
-        }
-        let total = level[0];
+        let total = crate::fp::vreduce::tree_reduce_in_place(&mut level);
 
         if !self.ordered {
             return vec![Completed { req_id, sum: total }];

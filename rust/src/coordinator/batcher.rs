@@ -6,6 +6,9 @@
 //! sets into one batch (the software analogue of the PIS juggling multiple
 //! labels through one adder), and flushes on batch-full or deadline.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One row of work: chunk `chunk_idx` of request `req_id`.
@@ -45,6 +48,10 @@ impl Batcher {
 
     pub fn shape(&self) -> (usize, usize) {
         (self.batch, self.n)
+    }
+
+    pub fn deadline(&self) -> Duration {
+        self.deadline
     }
 
     /// Split a set into N-sized chunks. Returns the number of chunks.
@@ -114,6 +121,95 @@ impl Batcher {
     }
 }
 
+/// A batch stamped with its dispatch sequence number. The reorder stage
+/// uses `seq` to merge per-shard completions back into the order batches
+/// left the batcher (see [`crate::coordinator::reorder`]).
+#[derive(Debug)]
+pub struct SeqBatch {
+    pub seq: u64,
+    pub batch: Batch,
+}
+
+/// Queue-depth-aware round-robin dispatch across the shard engine pool.
+///
+/// Each dispatch starts at the round-robin cursor but spills to the next
+/// shard whose bounded queue has room, so one slow shard (GC pause, noisy
+/// neighbor, long batch) does not stall the whole pipeline while its peers
+/// sit idle. Only when every queue is full does the batcher block — that is
+/// the service's backpressure point, same as the single-engine design.
+#[derive(Debug)]
+pub struct Router {
+    txs: Vec<SyncSender<SeqBatch>>,
+    /// Set by a shard worker whose engine failed: the router stops
+    /// routing there (the worker keeps draining raced-in batches as
+    /// empty completions so the sequence stream never gaps).
+    dead: Arc<Vec<AtomicBool>>,
+    rr: usize,
+    /// Dispatches that landed on a shard other than the round-robin target
+    /// (depth-triggered spill or a dead shard skipped).
+    pub spills: u64,
+}
+
+impl Router {
+    pub fn new(txs: Vec<SyncSender<SeqBatch>>, dead: Arc<Vec<AtomicBool>>) -> Self {
+        assert!(!txs.is_empty());
+        assert_eq!(txs.len(), dead.len());
+        Self { txs, dead, rr: 0, spills: 0 }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Dispatch one batch; returns the shard index it landed on, or `None`
+    /// when every shard has hung up or died (shutdown / crash).
+    pub fn dispatch(&mut self, seq: u64, batch: Batch) -> Option<usize> {
+        let n = self.txs.len();
+        let start = self.rr;
+        self.rr = (self.rr + 1) % n;
+        let mut msg = SeqBatch { seq, batch };
+        // Pass 1: non-blocking, spilling past full (or dead) queues.
+        for k in 0..n {
+            let i = (start + k) % n;
+            if self.dead[i].load(Ordering::Relaxed) {
+                continue;
+            }
+            match self.txs[i].try_send(msg) {
+                Ok(()) => {
+                    if k > 0 {
+                        self.spills += 1;
+                    }
+                    return Some(i);
+                }
+                Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => msg = m,
+            }
+        }
+        // Pass 2: every live queue full — block on the round-robin target
+        // (backpressure), walking on if it disconnects while we wait.
+        for k in 0..n {
+            let i = (start + k) % n;
+            if self.dead[i].load(Ordering::Relaxed) {
+                continue;
+            }
+            match self.txs[i].send(msg) {
+                Ok(()) => {
+                    if k > 0 {
+                        self.spills += 1;
+                    }
+                    return Some(i);
+                }
+                Err(std::sync::mpsc::SendError(m)) => msg = m,
+            }
+        }
+        None
+    }
+}
+
+/// One cleared liveness flag per shard (see [`Router::new`]).
+pub fn live_flags(shards: usize) -> Arc<Vec<AtomicBool>> {
+    Arc::new((0..shards).map(|_| AtomicBool::new(false)).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +273,65 @@ mod tests {
         assert_eq!(b.chunks_for(8), 1);
         assert_eq!(b.chunks_for(9), 2);
         assert_eq!(b.chunks_for(64), 8);
+    }
+
+    fn tiny_batch() -> Batch {
+        Batch { x: vec![0.0], lengths: vec![1], rows: vec![(0, 0)] }
+    }
+
+    #[test]
+    fn router_round_robins_when_queues_have_room() {
+        let (t0, r0) = std::sync::mpsc::sync_channel(4);
+        let (t1, r1) = std::sync::mpsc::sync_channel(4);
+        let mut router = Router::new(vec![t0, t1], live_flags(2));
+        let shards: Vec<usize> =
+            (0..4).map(|s| router.dispatch(s, tiny_batch()).unwrap()).collect();
+        assert_eq!(shards, vec![0, 1, 0, 1]);
+        assert_eq!(router.spills, 0);
+        assert_eq!(r0.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(r1.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn router_spills_past_a_full_queue() {
+        let (t0, _r0) = std::sync::mpsc::sync_channel(1);
+        let (t1, r1) = std::sync::mpsc::sync_channel(4);
+        let mut router = Router::new(vec![t0, t1], live_flags(2));
+        assert_eq!(router.dispatch(0, tiny_batch()), Some(0)); // fills shard 0
+        assert_eq!(router.dispatch(1, tiny_batch()), Some(1)); // rr target
+        // rr target is 0 again but it is full -> spill to 1.
+        assert_eq!(router.dispatch(2, tiny_batch()), Some(1));
+        assert_eq!(router.spills, 1);
+        assert_eq!(r1.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn router_skips_dead_shards_and_reports_total_loss() {
+        let (t0, r0) = std::sync::mpsc::sync_channel(4);
+        let (t1, r1) = std::sync::mpsc::sync_channel::<SeqBatch>(4);
+        drop(r1);
+        let mut router = Router::new(vec![t0, t1], live_flags(2));
+        assert_eq!(router.dispatch(0, tiny_batch()), Some(0));
+        // rr target 1 is disconnected -> spill back to 0.
+        assert_eq!(router.dispatch(1, tiny_batch()), Some(0));
+        assert_eq!(router.spills, 1);
+        assert_eq!(r0.try_iter().count(), 2);
+        drop(r0);
+        assert_eq!(router.dispatch(2, tiny_batch()), None);
+    }
+
+    #[test]
+    fn router_respects_dead_flags_even_with_a_live_channel() {
+        let (t0, _r0) = std::sync::mpsc::sync_channel(4);
+        let (t1, r1) = std::sync::mpsc::sync_channel(4);
+        let dead = live_flags(2);
+        let mut router = Router::new(vec![t0, t1], Arc::clone(&dead));
+        dead[0].store(true, Ordering::Relaxed);
+        // Shard 0's queue is alive but flagged dead: everything lands on 1.
+        assert_eq!(router.dispatch(0, tiny_batch()), Some(1));
+        assert_eq!(router.dispatch(1, tiny_batch()), Some(1));
+        assert_eq!(r1.try_iter().count(), 2);
+        dead[1].store(true, Ordering::Relaxed);
+        assert_eq!(router.dispatch(2, tiny_batch()), None);
     }
 }

@@ -1,11 +1,22 @@
-//! Service metrics: latency histogram + throughput counters.
+//! Service metrics: latency histogram, throughput counters, and per-shard
+//! engine counters (the sharded pipeline reports both the aggregate and
+//! each shard's share, so load imbalance is visible).
 
 use crate::util::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Shared metrics, updated by the pipeline threads.
+/// Per-shard engine counters.
 #[derive(Debug, Default)]
+pub struct ShardCounters {
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub values_reduced: AtomicU64,
+    pub engine_ns: AtomicU64,
+}
+
+/// Shared metrics, updated by the pipeline threads.
+#[derive(Debug)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
@@ -16,22 +27,51 @@ pub struct Metrics {
     /// Nanoseconds spent inside the engine (PJRT execute / native kernel),
     /// to separate compute from pipeline overhead in reports.
     pub engine_ns: AtomicU64,
+    /// Batches that landed on a shard other than their round-robin target
+    /// (queue-depth-aware spill in the dispatcher).
+    pub dispatch_spills: AtomicU64,
+    /// Peak batches parked in the reorder buffer waiting for an earlier
+    /// sequence number.
+    pub reorder_held_max: AtomicU64,
+    /// Batches lost to shard engine failures (reported as empty
+    /// completions so the sequence stream keeps flowing).
+    pub engine_failures: AtomicU64,
     latency_us: Mutex<Histogram>,
-}
-
-/// A point-in-time copy for reporting.
-#[derive(Clone, Debug)]
-pub struct MetricsSnapshot {
-    pub submitted: u64,
-    pub completed: u64,
-    pub batches: u64,
-    pub batched_rows: u64,
-    pub values_reduced: u64,
-    pub engine_ns: u64,
-    pub latency_us: Histogram,
+    shards: Vec<ShardCounters>,
 }
 
 impl Metrics {
+    /// Metrics for a service with `shards` engine workers (≥ 1).
+    pub fn new(shards: usize) -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            values_reduced: AtomicU64::new(0),
+            engine_ns: AtomicU64::new(0),
+            dispatch_spills: AtomicU64::new(0),
+            reorder_held_max: AtomicU64::new(0),
+            engine_failures: AtomicU64::new(0),
+            latency_us: Mutex::new(Histogram::new()),
+            shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
+        }
+    }
+
+    /// Account one executed batch to the aggregate and to `shard`'s share.
+    pub fn record_batch(&self, shard: usize, rows: u64, values: u64, engine_ns: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows, Ordering::Relaxed);
+        self.values_reduced.fetch_add(values, Ordering::Relaxed);
+        self.engine_ns.fetch_add(engine_ns, Ordering::Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.batches.fetch_add(1, Ordering::Relaxed);
+            s.batched_rows.fetch_add(rows, Ordering::Relaxed);
+            s.values_reduced.fetch_add(values, Ordering::Relaxed);
+            s.engine_ns.fetch_add(engine_ns, Ordering::Relaxed);
+        }
+    }
+
     pub fn record_latency_us(&self, us: u64) {
         self.latency_us.lock().unwrap().record(us);
     }
@@ -44,9 +84,53 @@ impl Metrics {
             batched_rows: self.batched_rows.load(Ordering::Relaxed),
             values_reduced: self.values_reduced.load(Ordering::Relaxed),
             engine_ns: self.engine_ns.load(Ordering::Relaxed),
+            dispatch_spills: self.dispatch_spills.load(Ordering::Relaxed),
+            reorder_held_max: self.reorder_held_max.load(Ordering::Relaxed),
+            engine_failures: self.engine_failures.load(Ordering::Relaxed),
             latency_us: self.latency_us.lock().unwrap().clone(),
+            per_shard: self
+                .shards
+                .iter()
+                .map(|s| ShardSnapshot {
+                    batches: s.batches.load(Ordering::Relaxed),
+                    batched_rows: s.batched_rows.load(Ordering::Relaxed),
+                    values_reduced: s.values_reduced.load(Ordering::Relaxed),
+                    engine_ns: s.engine_ns.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+/// A point-in-time copy of one shard's counters.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSnapshot {
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub values_reduced: u64,
+    pub engine_ns: u64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub values_reduced: u64,
+    pub engine_ns: u64,
+    pub dispatch_spills: u64,
+    pub reorder_held_max: u64,
+    pub engine_failures: u64,
+    pub latency_us: Histogram,
+    pub per_shard: Vec<ShardSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -65,7 +149,7 @@ impl MetricsSnapshot {
         } else {
             self.engine_ns as f64 / 1e3 / self.batches as f64
         };
-        format!(
+        let mut s = format!(
             "sets: {} submitted, {} completed | {:.0} sets/s, {:.2} Mvalues/s | \
              batches: {} (fill {:.0}%, engine {:.0}us/batch) | latency: {}",
             self.submitted,
@@ -76,7 +160,21 @@ impl MetricsSnapshot {
             100.0 * self.batch_fill(batch_capacity),
             engine_us_per_batch,
             self.latency_us.summary("us"),
-        )
+        );
+        if self.per_shard.len() > 1 {
+            let shares: Vec<String> =
+                self.per_shard.iter().map(|p| p.batches.to_string()).collect();
+            s.push_str(&format!(
+                " | shards: [{}] batches, {} spills, reorder held max {}",
+                shares.join("/"),
+                self.dispatch_spills,
+                self.reorder_held_max,
+            ));
+        }
+        if self.engine_failures > 0 {
+            s.push_str(&format!(" | ENGINE FAILURES: {} batches lost", self.engine_failures));
+        }
+        s
     }
 }
 
@@ -92,6 +190,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 5);
         assert_eq!(s.latency_us.count(), 1);
+        assert_eq!(s.per_shard.len(), 1);
     }
 
     #[test]
@@ -100,5 +199,25 @@ mod tests {
         m.batches.store(10, Ordering::Relaxed);
         m.batched_rows.store(60, Ordering::Relaxed);
         assert!((m.snapshot().batch_fill(8) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_batch_accounts_aggregate_and_shard() {
+        let m = Metrics::new(3);
+        m.record_batch(1, 4, 100, 2_000);
+        m.record_batch(1, 2, 50, 1_000);
+        m.record_batch(2, 8, 300, 5_000);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batched_rows, 14);
+        assert_eq!(s.values_reduced, 450);
+        assert_eq!(s.engine_ns, 8_000);
+        assert_eq!(s.per_shard[0].batches, 0);
+        assert_eq!(s.per_shard[1].batches, 2);
+        assert_eq!(s.per_shard[1].values_reduced, 150);
+        assert_eq!(s.per_shard[2].engine_ns, 5_000);
+        // shard-share report only renders for multi-shard snapshots
+        let line = s.report(std::time::Duration::from_secs(1), 8);
+        assert!(line.contains("shards: [0/2/1]"), "{line}");
     }
 }

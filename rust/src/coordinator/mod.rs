@@ -4,37 +4,51 @@
 //! pipelined functional unit saturated across many variable-length sets,
 //! holding per-set state in a handful of label-indexed registers and
 //! delivering results in input order. This module applies the same idea at
-//! software-system scale:
+//! software-system scale, with the engine generalized to an N-shard pool:
 //!
 //! ```text
-//!  clients ── submit(set) ──► [bounded queue]          (backpressure)
-//!     ▲                            │ batcher thread: chunk + pack + pad
+//!  clients ── submit(set) ──► [bounded queue]            (backpressure)
+//!     ▲                            │ batcher thread: chunk + pack + pad,
+//!     │                            │ stamp seq, round-robin w/ spill
+//!     │              ┌─────────────┼─────────────┐
+//!     │              ▼             ▼             ▼
+//!     │         [shard q 0]   [shard q 1] … [shard q N-1]   (bounded)
+//!     │              │             │             │  engine workers: each
+//!     │              ▼             ▼             ▼  owns a Runtime + bufs
+//!     │              └─────────────┼─────────────┘
 //!     │                            ▼
-//!     │                       [batch queue]
-//!     │                            │ engine thread: the one expensive
-//!     │                            ▼ unit — PJRT executable (or native)
-//!     │                      [partials queue]
-//!     │                            │ assembler thread: software PIS +
+//!     │                  [completion queue]  (seq-tagged, out of order)
+//!     │                            │ reorder thread: seq reorder buffer
+//!     │                            │ + software PIS (assembler) +
 //!     └──── recv() ◄───────────────┘ ordered delivery
 //! ```
 //!
-//! The PJRT executable plays the FP adder IP; the batcher plays state 1
-//! (filling the unit's issue slots); the [`assembler::Assembler`] plays
-//! the PIS (label-indexed partial state, pair-combining, input-order
-//! output); bounded channels play the no-pileup/real-time constraint.
+//! The engine workers play the FP adder IP (each shard its own pipelined
+//! unit); the batcher plays state 1 (filling the units' issue slots); the
+//! [`reorder::ReorderBuffer`] plus [`assembler::Assembler`] play the PIS —
+//! internal completions are out of order, delivery is in input order
+//! (paper §IV-D) — and bounded channels play the no-pileup/real-time
+//! constraint.
+//!
+//! With `shards = 1` the three stages are fused into a single thread (the
+//! pre-sharding pipeline, byte-for-byte): on a small box the cross-thread
+//! hops cost ~10x the engine execute itself (EXPERIMENTS.md §Perf), so the
+//! pool only pays when extra cores and an expensive engine exist.
 
 pub mod assembler;
 pub mod batcher;
 pub mod metrics;
+pub mod reorder;
+mod shard;
 
 pub use assembler::{Assembler, Completed};
-pub use batcher::{Batch, Batcher, Row};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use batcher::{live_flags, Batch, Batcher, Router, Row, SeqBatch};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+pub use reorder::ReorderBuffer;
 
-use crate::runtime::Runtime;
 use anyhow::{Context, Result};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -44,9 +58,16 @@ pub enum EngineKind {
     /// AOT XLA artifact via PJRT (the production path). Artifact chosen by
     /// name; must be a `reduce` variant.
     Xla { artifacts_dir: std::path::PathBuf, artifact: String },
-    /// Native scalar tree-reduction in rust (baseline / fallback); shape
-    /// (batch, n) mirrors an artifact so comparisons are like-for-like.
+    /// Native vectorized tree-reduction in rust (baseline / fallback);
+    /// shape (batch, n) mirrors an artifact so comparisons are
+    /// like-for-like. See [`crate::fp::vreduce`].
     Native { batch: usize, n: usize },
+    /// Bit-accurate software IEEE adder per tree node — deliberately
+    /// compute-heavy (each add runs the full round/normalize path), the
+    /// stand-in for an expensive FP adder IP when no PJRT plugin is
+    /// available. Same masked tree shape as `Native`, so exact-valued
+    /// workloads agree bit-for-bit.
+    SoftFp { batch: usize, n: usize },
 }
 
 /// Service configuration.
@@ -59,6 +80,17 @@ pub struct ServiceConfig {
     pub ordered: bool,
     /// Bounded queue depth (backpressure).
     pub queue_depth: usize,
+    /// Engine shards. 1 (the default) runs the fused single-thread
+    /// pipeline; N > 1 spawns a batcher thread, N engine workers (each
+    /// owning its own runtime and buffers), and a reorder/delivery thread.
+    pub shards: usize,
+    /// Bounded per-shard batch queue depth; the dispatcher spills to the
+    /// next shard when a queue is full (N > 1 only).
+    pub shard_queue_depth: usize,
+    /// Test/bench knob: upper bound (µs) on random per-batch completion
+    /// jitter injected in shard workers, to exercise the reorder buffer.
+    /// 0 disables. Ignored by the fused `shards = 1` pipeline.
+    pub shard_jitter_us: u64,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +103,9 @@ impl Default for ServiceConfig {
             batch_deadline: Duration::from_micros(200),
             ordered: true,
             queue_depth: 1024,
+            shards: 1,
+            shard_queue_depth: 4,
+            shard_jitter_us: 0,
         }
     }
 }
@@ -83,7 +118,7 @@ pub struct Response {
     pub latency: Duration,
 }
 
-struct SubmitMsg {
+pub(crate) struct SubmitMsg {
     req_id: u64,
     values: Vec<f32>,
     at: Instant,
@@ -106,7 +141,8 @@ pub struct Service {
 impl Service {
     /// Start the pipeline threads.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
-        let metrics = Arc::new(Metrics::default());
+        let shards = cfg.shards.max(1);
+        let metrics = Arc::new(Metrics::new(shards));
 
         // Resolve the engine's shape up front (Xla: read the manifest).
         let (batch, n) = match &cfg.engine {
@@ -118,7 +154,7 @@ impl Service {
                     .with_context(|| format!("artifact {artifact:?} not in manifest"))?;
                 (spec.batch, spec.n)
             }
-            EngineKind::Native { batch, n } => (*batch, *n),
+            EngineKind::Native { batch, n } | EngineKind::SoftFp { batch, n } => (*batch, *n),
         };
 
         // Channels carry BURSTS (Vec of messages): on a single-core box a
@@ -134,123 +170,77 @@ impl Service {
         let (tx_out, rx_out) = channel::<Vec<Response>>();
 
         let mut handles = Vec::new();
-
-        // ---- worker thread: batcher + engine + software PIS, fused ----
-        //
-        // The three stages are sequential per batch, so splitting them
-        // across threads only pays when extra cores exist; on small boxes
-        // (this image has 1 CPU) the cross-thread hops cost ~10x the
-        // PJRT execute itself (measured in EXPERIMENTS.md §Perf). One
-        // thread owns everything — which the `xla` crate wants anyway,
-        // since its PJRT wrappers are not Send.
-        let engine = cfg.engine.clone();
-        let deadline = cfg.batch_deadline;
-        let ordered = cfg.ordered;
-        let m = Arc::clone(&metrics);
         // Readiness handshake: PJRT client creation + artifact compilation
-        // take hundreds of ms; `start` must not return (and clients must
-        // not start latency clocks) until the engine is warm.
-        let (tx_ready, rx_ready) = sync_channel::<std::result::Result<(), String>>(1);
-        handles.push(std::thread::Builder::new().name("acc-worker".into()).spawn(move || {
-            let runtime = match &engine {
-                EngineKind::Xla { artifacts_dir, .. } => match Runtime::load(artifacts_dir) {
-                    Ok(r) => Some(r),
-                    Err(e) => {
-                        let _ = tx_ready.send(Err(format!("loading runtime: {e:#}")));
-                        return;
-                    }
-                },
-                EngineKind::Native { .. } => None,
+        // take hundreds of ms per engine; `start` must not return (and
+        // clients must not start latency clocks) until every engine is
+        // warm. One readiness message per engine worker.
+        let (tx_ready, rx_ready) = sync_channel::<std::result::Result<(), String>>(shards);
+
+        if shards == 1 {
+            // ---- fused worker: batcher + engine + software PIS ----
+            let args = shard::FusedArgs {
+                engine: cfg.engine.clone(),
+                batch,
+                n,
+                deadline: cfg.batch_deadline,
+                ordered: cfg.ordered,
+                metrics: Arc::clone(&metrics),
+                rx_in,
+                tx_out,
+                tx_ready,
             };
-            let model = match (&engine, &runtime) {
-                (EngineKind::Xla { artifact, .. }, Some(rt)) => match rt.model(artifact) {
-                    Ok(mdl) => Some(mdl),
-                    Err(e) => {
-                        let _ = tx_ready.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                },
-                _ => None,
-            };
-            if tx_ready.send(Ok(())).is_err() {
-                return;
+            handles.push(
+                std::thread::Builder::new()
+                    .name("acc-worker".into())
+                    .spawn(move || shard::run_fused(args))?,
+            );
+        } else {
+            // ---- sharded pipeline: batcher → N engine workers → reorder ----
+            let (tx_done, rx_done) = channel::<reorder::ToReorder>();
+            let dead = live_flags(shards);
+            let mut shard_txs = Vec::with_capacity(shards);
+            for s in 0..shards {
+                let (txb, rxb) = sync_channel::<SeqBatch>(cfg.shard_queue_depth.max(1));
+                shard_txs.push(txb);
+                let engine = cfg.engine.clone();
+                let tx_done = tx_done.clone();
+                let m = Arc::clone(&metrics);
+                let tx_ready = tx_ready.clone();
+                let jitter = cfg.shard_jitter_us;
+                let dead = Arc::clone(&dead);
+                handles.push(
+                    std::thread::Builder::new().name(format!("acc-shard-{s}")).spawn(
+                        move || {
+                            shard::run_shard(s, engine, n, rxb, tx_done, m, jitter, dead, tx_ready)
+                        },
+                    )?,
+                );
             }
-
-            let mut b = Batcher::new(batch, n, deadline);
-            let mut asm = Assembler::new(ordered);
-            let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
-
-            // Execute one batch and deliver everything it completes.
-            let run_batch = |batch: Batch,
-                                 asm: &mut Assembler,
-                                 birth: &mut std::collections::HashMap<u64, Instant>|
-             -> bool {
-                m.batches.fetch_add(1, Ordering::Relaxed);
-                m.batched_rows.fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
-                let t_exec = Instant::now();
-                let sums: Vec<f32> = match &model {
-                    Some(mdl) => match mdl.run(&batch.x, &batch.lengths) {
-                        Ok(r) => r.sums,
-                        Err(e) => {
-                            eprintln!("worker: execute failed: {e:#}");
-                            return false;
-                        }
-                    },
-                    None => native_reduce(&batch.x, &batch.lengths, n),
-                };
-                m.engine_ns.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                let mut burst = Vec::new();
-                for (i, &(req_id, chunk_idx)) in batch.rows.iter().enumerate() {
-                    m.values_reduced.fetch_add(batch.lengths[i] as u64, Ordering::Relaxed);
-                    for done in asm.add_partial(req_id, chunk_idx, sums[i]) {
-                        let at = birth.remove(&done.req_id);
-                        let latency = at.map(|t| t.elapsed()).unwrap_or_default();
-                        m.completed.fetch_add(1, Ordering::Relaxed);
-                        m.record_latency_us(latency.as_micros() as u64);
-                        burst.push(Response { req_id: done.req_id, sum: done.sum, latency });
-                    }
-                }
-                if !burst.is_empty() && tx_out.send(burst).is_err() {
-                    return false;
-                }
-                true
-            };
-
-            loop {
-                match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
-                    Ok(burst) => {
-                        for msg in burst {
-                            asm.expect(msg.req_id, b.chunks_for(msg.values.len()));
-                            birth.insert(msg.req_id, msg.at);
-                            for full in b.add_request(msg.req_id, &msg.values) {
-                                if !run_batch(full, &mut asm, &mut birth) {
-                                    return;
-                                }
-                            }
-                        }
-                    }
-                    Err(RecvTimeoutError::Timeout) => {
-                        if let Some(partial) = b.poll_deadline() {
-                            if !run_batch(partial, &mut asm, &mut birth) {
-                                return;
-                            }
-                        }
-                    }
-                    Err(RecvTimeoutError::Disconnected) => {
-                        if let Some(rest) = b.flush() {
-                            run_batch(rest, &mut asm, &mut birth);
-                        }
-                        return;
-                    }
-                }
+            drop(tx_ready);
+            {
+                let m = Arc::clone(&metrics);
+                let ordered = cfg.ordered;
+                handles.push(std::thread::Builder::new().name("acc-reorder".into()).spawn(
+                    move || reorder::run_reorder(rx_done, tx_out, ordered, m),
+                )?);
             }
-        })?);
+            {
+                let m = Arc::clone(&metrics);
+                let b = Batcher::new(batch, n, cfg.batch_deadline);
+                let router = Router::new(shard_txs, dead);
+                handles.push(std::thread::Builder::new().name("acc-batcher".into()).spawn(
+                    move || shard::run_batcher(rx_in, b, router, tx_done, m),
+                )?);
+            }
+        }
 
-        // Wait for the worker's engine to come up (or fail fast).
-        match rx_ready.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
-            Err(_) => anyhow::bail!("worker thread died during startup"),
+        // Wait for every engine worker to come up (or fail fast).
+        for _ in 0..shards {
+            match rx_ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
+                Err(_) => anyhow::bail!("worker thread died during startup"),
+            }
         }
 
         Ok(Self {
@@ -323,7 +313,10 @@ impl Service {
     }
 
     /// Stop accepting work, wait for the pipeline to drain, join threads,
-    /// and return the final metrics.
+    /// and return the final metrics. In the sharded pipeline the stages
+    /// cascade out: the batcher flushes and closes the shard queues, each
+    /// shard drains its queue, and the reorder stage flushes once every
+    /// producer has hung up.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.tx = None; // closes the input channel; threads cascade out
         for h in self.handles.drain(..) {
@@ -333,23 +326,43 @@ impl Service {
     }
 }
 
-/// Scalar fallback engine: same masked pairwise-tree semantics as the
-/// kernel (bit-compatible for fair comparison).
+/// Feed one executed batch's rows through the software PIS and ship every
+/// completion it unlocks. Shared by the fused pipeline and the reorder
+/// stage so delivery semantics (assembler feed, latency accounting,
+/// metrics, burst send) cannot diverge between them. Returns `false` when
+/// the client side has hung up.
+pub(crate) fn deliver_rows(
+    rows: &[(u64, u32)],
+    sums: &[f32],
+    asm: &mut Assembler,
+    birth: &mut std::collections::HashMap<u64, Instant>,
+    metrics: &Metrics,
+    tx_out: &std::sync::mpsc::Sender<Vec<Response>>,
+) -> bool {
+    let mut burst = Vec::new();
+    for (i, &(req_id, chunk_idx)) in rows.iter().enumerate() {
+        for done in asm.add_partial(req_id, chunk_idx, sums[i]) {
+            let at = birth.remove(&done.req_id);
+            let latency = at.map(|t| t.elapsed()).unwrap_or_default();
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.record_latency_us(latency.as_micros() as u64);
+            burst.push(Response { req_id: done.req_id, sum: done.sum, latency });
+        }
+    }
+    if !burst.is_empty() && tx_out.send(burst).is_err() {
+        return false;
+    }
+    true
+}
+
+/// Scalar-compatible fallback engine entry point: same masked pairwise-
+/// tree semantics as the AOT kernel (bit-compatible for fair comparison),
+/// computed by the vectorized in-place kernel in [`crate::fp::vreduce`].
 pub fn native_reduce(x: &[f32], lengths: &[i32], n: usize) -> Vec<f32> {
-    lengths
-        .iter()
-        .enumerate()
-        .map(|(row, &len)| {
-            let base = row * n;
-            let mut level: Vec<f32> = (0..n)
-                .map(|i| if (i as i32) < len { x[base + i] } else { 0.0 })
-                .collect();
-            while level.len() > 1 {
-                level = level.chunks(2).map(|c| c[0] + c[1]).collect();
-            }
-            level[0]
-        })
-        .collect()
+    let mut sums = Vec::with_capacity(lengths.len());
+    let mut scratch = Vec::with_capacity(n);
+    crate::fp::vreduce::reduce_rows_into(x, lengths, n, &mut sums, &mut scratch);
+    sums
 }
 
 #[cfg(test)]
@@ -372,6 +385,7 @@ mod tests {
             batch_deadline: Duration::from_micros(100),
             ordered: true,
             queue_depth: 64,
+            ..Default::default()
         })
         .unwrap();
         let mut want = Vec::new();
@@ -402,6 +416,7 @@ mod tests {
             batch_deadline: Duration::from_micros(50),
             ordered: false,
             queue_depth: 16,
+            ..Default::default()
         })
         .unwrap();
         for _ in 0..10 {
@@ -415,5 +430,60 @@ mod tests {
         }
         assert_eq!(seen.len(), 10);
         svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_native_service_delivers_in_order() {
+        let mut svc = Service::start(ServiceConfig {
+            engine: EngineKind::Native { batch: 4, n: 16 },
+            batch_deadline: Duration::from_micros(100),
+            ordered: true,
+            queue_depth: 64,
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut want = Vec::new();
+        for k in 0..40u64 {
+            let set: Vec<f32> = (0..(k as usize % 50 + 1)).map(|i| (i + 1) as f32).collect();
+            want.push(set.iter().sum::<f32>());
+            svc.submit(set).unwrap();
+        }
+        for (i, w) in want.iter().enumerate() {
+            let r = svc.recv_timeout(Duration::from_secs(10)).expect("timely responses");
+            assert_eq!(r.req_id, i as u64, "ordered delivery across shards");
+            assert_eq!(r.sum, *w, "req {i}");
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.completed, 40);
+        assert_eq!(m.per_shard.len(), 3);
+        assert_eq!(m.per_shard.iter().map(|p| p.batches).sum::<u64>(), m.batches);
+    }
+
+    #[test]
+    fn softfp_engine_matches_native_bit_for_bit_on_exact_values() {
+        let run = |engine: EngineKind| -> Vec<u32> {
+            let mut svc = Service::start(ServiceConfig {
+                engine,
+                batch_deadline: Duration::from_micros(50),
+                ordered: true,
+                queue_depth: 64,
+                ..Default::default()
+            })
+            .unwrap();
+            let mut rng = crate::util::Xoshiro256::seeded(3);
+            for _ in 0..15 {
+                let len = rng.range(1, 40);
+                let set: Vec<f32> =
+                    (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+                svc.submit(set).unwrap();
+            }
+            (0..15)
+                .map(|_| svc.recv_timeout(Duration::from_secs(5)).unwrap().sum.to_bits())
+                .collect()
+        };
+        let native = run(EngineKind::Native { batch: 4, n: 16 });
+        let soft = run(EngineKind::SoftFp { batch: 4, n: 16 });
+        assert_eq!(native, soft);
     }
 }

@@ -1,0 +1,181 @@
+//! Sequence-numbered reorder buffer — ordered cross-shard delivery.
+//!
+//! With N engine shards, batches complete out of dispatch order (shards
+//! differ in queue depth, batch cost, and scheduling luck). The paper's PIS
+//! faces the same problem one level down: partial results finish out of
+//! input order inside the circuit, yet results must leave in input order.
+//! Its answer — hold completions in label-indexed state and release them in
+//! sequence — is reproduced here at batch granularity: every batch carries
+//! the sequence number the batcher stamped at dispatch, and the reorder
+//! stage releases completions only when their sequence number is next.
+//!
+//! Feeding batches to the [`Assembler`](crate::coordinator::Assembler) in
+//! dispatch order makes the whole service deterministic: the stream of
+//! `add_partial` calls is identical to the single-engine pipeline's, so
+//! sums (and, in ordered mode, delivery order) are bit-identical at every
+//! shard count.
+
+use super::metrics::Metrics;
+use super::{Assembler, Response};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One executed batch coming back from a shard.
+#[derive(Debug)]
+pub struct ShardDone {
+    pub seq: u64,
+    pub shard: usize,
+    /// (req_id, chunk_idx) per occupied row, same order as dispatched.
+    pub rows: Vec<(u64, u32)>,
+    /// Per-row partial sums, `rows.len()` entries.
+    pub sums: Vec<f32>,
+}
+
+/// Messages flowing into the reorder/delivery thread. The batcher sends
+/// `Expect` *before* dispatching any batch containing that request's rows,
+/// and a shard sends `Done` only *after* receiving such a batch, so on the
+/// shared channel every `Expect` is observed before the `Done`s it covers.
+#[derive(Debug)]
+pub enum ToReorder {
+    Expect { req_id: u64, chunks: u32, at: Instant },
+    Done(ShardDone),
+}
+
+/// Holds out-of-order batch completions until their sequence number is
+/// next; releases runs of consecutive batches in dispatch order.
+#[derive(Debug, Default)]
+pub struct ReorderBuffer {
+    next_seq: u64,
+    held: BTreeMap<u64, ShardDone>,
+    /// Peak number of batches parked waiting for an earlier sequence
+    /// number — the software analogue of PIS register pressure.
+    pub held_high_water: usize,
+}
+
+impl ReorderBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer one completion; returns every batch now releasable, in
+    /// sequence order (empty while a gap remains).
+    pub fn push(&mut self, done: ShardDone) -> Vec<ShardDone> {
+        debug_assert!(done.seq >= self.next_seq, "sequence number reused");
+        if done.seq != self.next_seq {
+            self.held.insert(done.seq, done);
+            self.held_high_water = self.held_high_water.max(self.held.len());
+            return Vec::new();
+        }
+        let mut out = vec![done];
+        self.next_seq += 1;
+        while let Some(next) = self.held.remove(&self.next_seq) {
+            out.push(next);
+            self.next_seq += 1;
+        }
+        out
+    }
+
+    /// Batches currently parked behind a gap.
+    pub fn held(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Drain everything still parked, in sequence order, tolerating gaps —
+    /// the shutdown path after all producers hung up (a gap then means a
+    /// shard died and its batch is lost; the rest must still deliver).
+    pub fn drain(&mut self) -> Vec<ShardDone> {
+        let held = std::mem::take(&mut self.held);
+        held.into_values().collect()
+    }
+}
+
+/// The reorder/delivery thread: merges per-shard completions back into
+/// dispatch order, feeds them through the software PIS ([`Assembler`]),
+/// and ships finished responses to the client channel.
+pub(crate) fn run_reorder(
+    rx: Receiver<ToReorder>,
+    tx_out: Sender<Vec<Response>>,
+    ordered: bool,
+    metrics: Arc<Metrics>,
+) {
+    let mut asm = Assembler::new(ordered);
+    let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
+    let mut rob = ReorderBuffer::new();
+
+    let deliver = |done: ShardDone,
+                   asm: &mut Assembler,
+                   birth: &mut std::collections::HashMap<u64, Instant>|
+     -> bool { super::deliver_rows(&done.rows, &done.sums, asm, birth, &metrics, &tx_out) };
+
+    loop {
+        match rx.recv() {
+            Ok(ToReorder::Expect { req_id, chunks, at }) => {
+                asm.expect(req_id, chunks);
+                birth.insert(req_id, at);
+            }
+            Ok(ToReorder::Done(d)) => {
+                for ready in rob.push(d) {
+                    if !deliver(ready, &mut asm, &mut birth) {
+                        return;
+                    }
+                }
+                metrics.reorder_held_max.fetch_max(rob.held_high_water as u64, Ordering::Relaxed);
+            }
+            // All producers (batcher + every shard) hung up: flush whatever
+            // is parked — in sequence order, tolerating gaps — and exit.
+            Err(_) => {
+                for ready in rob.drain() {
+                    if !deliver(ready, &mut asm, &mut birth) {
+                        return;
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(seq: u64) -> ShardDone {
+        ShardDone { seq, shard: 0, rows: vec![(seq, 0)], sums: vec![seq as f32] }
+    }
+
+    fn seqs(v: &[ShardDone]) -> Vec<u64> {
+        v.iter().map(|d| d.seq).collect()
+    }
+
+    #[test]
+    fn in_order_batches_release_immediately() {
+        let mut rob = ReorderBuffer::new();
+        assert_eq!(seqs(&rob.push(done(0))), vec![0]);
+        assert_eq!(seqs(&rob.push(done(1))), vec![1]);
+        assert_eq!(rob.held(), 0);
+        assert_eq!(rob.held_high_water, 0);
+    }
+
+    #[test]
+    fn out_of_order_batches_park_until_the_gap_fills() {
+        let mut rob = ReorderBuffer::new();
+        assert!(rob.push(done(2)).is_empty());
+        assert!(rob.push(done(1)).is_empty());
+        assert_eq!(rob.held(), 2);
+        assert_eq!(seqs(&rob.push(done(0))), vec![0, 1, 2]);
+        assert_eq!(rob.held(), 0);
+        assert_eq!(rob.held_high_water, 2);
+    }
+
+    #[test]
+    fn drain_releases_past_gaps_in_order() {
+        let mut rob = ReorderBuffer::new();
+        assert!(rob.push(done(3)).is_empty());
+        assert!(rob.push(done(1)).is_empty());
+        assert_eq!(seqs(&rob.drain()), vec![1, 3]);
+        assert_eq!(rob.held(), 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Engine shards: the worker-thread bodies of the coordinator pipeline.
+//!
+//! Three loops live here:
+//!
+//! - [`run_fused`] — the single-shard pipeline (batcher + engine +
+//!   assembler fused in one thread). This is the pre-sharding coordinator,
+//!   kept byte-for-byte in behavior: on a small box the cross-thread hops
+//!   cost ~10x the engine execute itself (EXPERIMENTS.md §Perf), so
+//!   `shards = 1` must not pay for the pool.
+//! - [`run_batcher`] — the dispatch stage of the sharded pipeline: packs
+//!   rows into batches, stamps each with a sequence number, announces every
+//!   request to the reorder stage, and routes batches across the shard
+//!   pool ([`Router`]).
+//! - [`run_shard`] — one engine worker: owns its own engine instance
+//!   (its own PJRT runtime for XLA — the wrapper types are not `Send`, and
+//!   independent clients avoid any shared-executable serialization) and its
+//!   own reusable output/scratch buffers, executes batches, and forwards
+//!   completions to the reorder stage.
+
+use super::batcher::{Batcher, Router, SeqBatch};
+use super::metrics::Metrics;
+use super::reorder::{ShardDone, ToReorder};
+use super::{Batch, EngineKind, SubmitMsg};
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A shard's compute engine: one expensive reduction unit plus the
+/// reusable buffers that keep its steady state allocation-free.
+pub(crate) enum Engine {
+    /// AOT XLA artifact via PJRT; the runtime is loaded filtered to the one
+    /// artifact this shard executes.
+    Xla { rt: Runtime, artifact: String, sums: Vec<f32> },
+    /// Vectorized native kernel (see [`crate::fp::vreduce`]).
+    Native { n: usize, sums: Vec<f32>, scratch: Vec<f32> },
+    /// Bit-accurate software IEEE adder per tree node — compute-heavy by
+    /// design, the bench stand-in for an expensive FP adder IP.
+    SoftFp { n: usize, sums: Vec<f32>, scratch: Vec<u64> },
+}
+
+impl Engine {
+    /// Build the engine inside the owning worker thread (PJRT wrappers are
+    /// not `Send`, so creation cannot happen on the caller's side).
+    pub(crate) fn create(kind: &EngineKind, n: usize) -> Result<Self> {
+        Ok(match kind {
+            EngineKind::Xla { artifacts_dir, artifact } => Engine::Xla {
+                rt: Runtime::load_filtered(artifacts_dir, Some(artifact))?,
+                artifact: artifact.clone(),
+                sums: Vec::new(),
+            },
+            EngineKind::Native { .. } => {
+                Engine::Native { n, sums: Vec::new(), scratch: Vec::with_capacity(n) }
+            }
+            EngineKind::SoftFp { .. } => {
+                Engine::SoftFp { n, sums: Vec::new(), scratch: Vec::with_capacity(n) }
+            }
+        })
+    }
+
+    /// Execute one padded batch; returns one sum per row (padding rows
+    /// included, as the artifacts do).
+    pub(crate) fn run(&mut self, batch: &Batch) -> Result<&[f32]> {
+        match self {
+            Engine::Xla { rt, artifact, sums } => {
+                let model = rt.model(artifact)?;
+                *sums = model.run(&batch.x, &batch.lengths)?.sums;
+                Ok(sums)
+            }
+            Engine::Native { n, sums, scratch } => {
+                crate::fp::vreduce::reduce_rows_into(&batch.x, &batch.lengths, *n, sums, scratch);
+                Ok(sums)
+            }
+            Engine::SoftFp { n, sums, scratch } => {
+                crate::fp::vreduce::softfp_reduce_rows_into(
+                    &batch.x,
+                    &batch.lengths,
+                    *n,
+                    sums,
+                    scratch,
+                );
+                Ok(sums)
+            }
+        }
+    }
+}
+
+/// Sum of valid values across a batch's occupied rows (metrics).
+fn batch_values(batch: &Batch) -> u64 {
+    batch.lengths[..batch.rows.len()].iter().map(|&l| l.max(0) as u64).sum()
+}
+
+pub(crate) struct FusedArgs {
+    pub engine: EngineKind,
+    pub batch: usize,
+    pub n: usize,
+    pub deadline: Duration,
+    pub ordered: bool,
+    pub metrics: Arc<Metrics>,
+    pub rx_in: Receiver<Vec<SubmitMsg>>,
+    pub tx_out: Sender<Vec<super::Response>>,
+    pub tx_ready: SyncSender<std::result::Result<(), String>>,
+}
+
+/// The fused single-shard pipeline: batcher + engine + software PIS in one
+/// thread (see module docs for why `shards = 1` stays fused).
+pub(crate) fn run_fused(args: FusedArgs) {
+    let FusedArgs { engine, batch, n, deadline, ordered, metrics, rx_in, tx_out, tx_ready } = args;
+    let mut eng = match Engine::create(&engine, n) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = tx_ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    if tx_ready.send(Ok(())).is_err() {
+        return;
+    }
+
+    let mut b = Batcher::new(batch, n, deadline);
+    let mut asm = super::Assembler::new(ordered);
+    let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
+
+    // Execute one batch and deliver everything it completes.
+    let mut run_batch = |full: Batch,
+                         asm: &mut super::Assembler,
+                         birth: &mut std::collections::HashMap<u64, Instant>|
+     -> bool {
+        let t_exec = Instant::now();
+        // Borrow the engine's reusable output buffer directly — the fused
+        // hot path stays allocation-free at steady state.
+        let sums = match eng.run(&full) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("worker: execute failed: {e:#}");
+                return false;
+            }
+        };
+        metrics.record_batch(
+            0,
+            full.rows.len() as u64,
+            batch_values(&full),
+            t_exec.elapsed().as_nanos() as u64,
+        );
+        super::deliver_rows(&full.rows, sums, asm, birth, &metrics, &tx_out)
+    };
+
+    loop {
+        match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
+            Ok(burst) => {
+                for msg in burst {
+                    asm.expect(msg.req_id, b.chunks_for(msg.values.len()));
+                    birth.insert(msg.req_id, msg.at);
+                    for full in b.add_request(msg.req_id, &msg.values) {
+                        if !run_batch(full, &mut asm, &mut birth) {
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(partial) = b.poll_deadline() {
+                    if !run_batch(partial, &mut asm, &mut birth) {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if let Some(rest) = b.flush() {
+                    run_batch(rest, &mut asm, &mut birth);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch stage of the sharded pipeline. Announces every request to the
+/// reorder stage (`Expect`) *before* dispatching any batch carrying its
+/// rows — the ordering invariant the shared channel preserves — then
+/// routes sequence-stamped batches across the pool.
+pub(crate) fn run_batcher(
+    rx_in: Receiver<Vec<SubmitMsg>>,
+    mut b: Batcher,
+    mut router: Router,
+    tx_reorder: Sender<ToReorder>,
+    metrics: Arc<Metrics>,
+) {
+    let deadline = b.deadline();
+    let mut seq = 0u64;
+    let mut dispatch = |full: Batch, router: &mut Router| -> bool {
+        let this_seq = seq;
+        seq += 1;
+        let ok = router.dispatch(this_seq, full).is_some();
+        metrics.dispatch_spills.store(router.spills, Ordering::Relaxed);
+        ok
+    };
+    loop {
+        match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
+            Ok(burst) => {
+                for msg in burst {
+                    let announce = ToReorder::Expect {
+                        req_id: msg.req_id,
+                        chunks: b.chunks_for(msg.values.len()),
+                        at: msg.at,
+                    };
+                    if tx_reorder.send(announce).is_err() {
+                        return;
+                    }
+                    for full in b.add_request(msg.req_id, &msg.values) {
+                        if !dispatch(full, &mut router) {
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(partial) = b.poll_deadline() {
+                    if !dispatch(partial, &mut router) {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if let Some(rest) = b.flush() {
+                    dispatch(rest, &mut router);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// One engine worker of the shard pool.
+///
+/// On an engine failure the worker does NOT leave a hole in the sequence
+/// stream (which would park the reorder buffer forever): it flags itself
+/// dead so the router stops choosing it, then reports the failed batch —
+/// and any batch that raced into its queue — with **NaN partial sums** for
+/// its rows, and idles until shutdown. The affected requests therefore
+/// still complete (in order, with an unmistakably-poisoned NaN sum rather
+/// than silence), later responses are not stalled behind them, and the
+/// loss is counted in `engine_failures` while the remaining shards keep
+/// serving.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_shard(
+    shard: usize,
+    engine: EngineKind,
+    n: usize,
+    rx: Receiver<SeqBatch>,
+    tx_done: Sender<ToReorder>,
+    metrics: Arc<Metrics>,
+    jitter_us: u64,
+    dead: Arc<Vec<std::sync::atomic::AtomicBool>>,
+    tx_ready: SyncSender<std::result::Result<(), String>>,
+) {
+    let mut eng = match Engine::create(&engine, n) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = tx_ready.send(Err(format!("shard {shard}: {e:#}")));
+            return;
+        }
+    };
+    if tx_ready.send(Ok(())).is_err() {
+        return;
+    }
+    let mut rng = crate::util::Xoshiro256::seeded(0xC0FFEE ^ shard as u64);
+    while let Ok(SeqBatch { seq, batch }) = rx.recv() {
+        let t_exec = Instant::now();
+        let sums = match eng.run(&batch) {
+            Ok(s) => s[..batch.rows.len()].to_vec(),
+            Err(e) => {
+                eprintln!("shard {shard}: execute failed: {e:#}");
+                dead[shard].store(true, Ordering::Relaxed);
+                let poison = |b: Batch| ShardDone {
+                    seq: 0, // caller overwrites
+                    shard,
+                    sums: vec![f32::NAN; b.rows.len()],
+                    rows: b.rows,
+                };
+                metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
+                let done = ShardDone { seq, ..poison(batch) };
+                if tx_done.send(ToReorder::Done(done)).is_err() {
+                    return;
+                }
+                // Drain-and-report until shutdown: batches dispatched
+                // before the dead flag was observed must still close
+                // their sequence numbers (and complete their requests,
+                // poisoned).
+                while let Ok(SeqBatch { seq, batch }) = rx.recv() {
+                    metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
+                    let done = ShardDone { seq, ..poison(batch) };
+                    if tx_done.send(ToReorder::Done(done)).is_err() {
+                        return;
+                    }
+                }
+                return;
+            }
+        };
+        metrics.record_batch(
+            shard,
+            batch.rows.len() as u64,
+            batch_values(&batch),
+            t_exec.elapsed().as_nanos() as u64,
+        );
+        if jitter_us > 0 {
+            // Test/bench knob: skew shard completion times to exercise the
+            // reorder buffer.
+            std::thread::sleep(Duration::from_micros(rng.next_below(jitter_us)));
+        }
+        let done = ShardDone { seq, shard, rows: batch.rows, sums };
+        if tx_done.send(ToReorder::Done(done)).is_err() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Vectorized masked tree reduction — the coordinator's native engine
+//! kernel.
+//!
+//! The scalar baseline built a fresh `Vec` per tree level
+//! (`level.chunks(2).map(..).collect()`), allocating O(log N) vectors per
+//! row. This kernel reduces in place over a caller-owned scratch buffer
+//! with two loop shapes:
+//!
+//! - a **width-8 blocked pass** while the live prefix is a multiple of 8:
+//!   each block of 8 contiguous lanes collapses to one value through the
+//!   fixed 3-level tree `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))`. The block
+//!   loop reads 8 contiguous floats and writes one — a fixed-width inner
+//!   loop the SLP/loop vectorizers turn into shuffles + vertical adds under
+//!   `-C target-cpu` with SIMD available;
+//! - a **pairwise finish** (`buf[i] = buf[2i] + buf[2i+1]`, odd straggler
+//!   carried) for the remaining short prefix.
+//!
+//! One blocked pass is exactly three adjacent-pairwise levels, so the
+//! association tree is **bit-identical** to the scalar baseline's
+//! level-by-level reduction (and to the AOT Pallas kernel's masked pairwise
+//! tree) — the cross-engine bit-equality goldens hold unchanged.
+
+use crate::fp::{bits_f32, f32_bits, fp_add, F32};
+
+/// Collapse `buf` by the fixed adjacent-pairwise tree (odd stragglers carry
+/// to the next level) and return the root. Empty input sums to 0.
+///
+/// This is the one association discipline shared by the native kernel, the
+/// [`crate::coordinator::Assembler`]'s chunk combine, and the AOT kernel —
+/// keeping every layer bit-compatible.
+pub fn tree_reduce_in_place(buf: &mut [f32]) -> f32 {
+    let mut m = buf.len();
+    if m == 0 {
+        return 0.0;
+    }
+    // Width-8 blocked passes: each pass is three pairwise levels fused.
+    while m >= 8 && m % 8 == 0 {
+        let blocks = m / 8;
+        for j in 0..blocks {
+            let s = 8 * j;
+            let t0 = buf[s] + buf[s + 1];
+            let t1 = buf[s + 2] + buf[s + 3];
+            let t2 = buf[s + 4] + buf[s + 5];
+            let t3 = buf[s + 6] + buf[s + 7];
+            buf[j] = (t0 + t1) + (t2 + t3);
+        }
+        m = blocks;
+    }
+    // Pairwise finish on the short remainder.
+    while m > 1 {
+        let half = m / 2;
+        for i in 0..half {
+            buf[i] = buf[2 * i] + buf[2 * i + 1];
+        }
+        if m % 2 == 1 {
+            buf[half] = buf[m - 1];
+            m = half + 1;
+        } else {
+            m = half;
+        }
+    }
+    buf[0]
+}
+
+/// Reduce one padded row: the first `len` values of `row` are live, the
+/// rest are masked to zero (the same select the AOT kernel lowers).
+/// `scratch` is reused across calls; no allocation after warm-up.
+pub fn reduce_row_into_scratch(row: &[f32], len: usize, scratch: &mut Vec<f32>) -> f32 {
+    scratch.clear();
+    scratch.extend(row.iter().enumerate().map(|(i, &v)| if i < len { v } else { 0.0 }));
+    tree_reduce_in_place(scratch)
+}
+
+/// Reduce a padded batch: `x` is row-major `[lengths.len(), n]`, `sums`
+/// receives one root per row. Both output and scratch buffers are caller-
+/// owned so a shard worker runs allocation-free at steady state.
+pub fn reduce_rows_into(
+    x: &[f32],
+    lengths: &[i32],
+    n: usize,
+    sums: &mut Vec<f32>,
+    scratch: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), lengths.len() * n);
+    sums.clear();
+    for (row, &len) in x.chunks_exact(n).zip(lengths.iter()) {
+        sums.push(reduce_row_into_scratch(row, len.max(0) as usize, scratch));
+    }
+}
+
+/// Same masked pairwise tree, but every node goes through the bit-accurate
+/// software IEEE adder ([`fp_add`]) instead of the host FPU — the
+/// compute-heavy stand-in for an expensive pipelined FP adder IP. Used by
+/// the shard-scaling bench as an engine whose execute time dominates the
+/// pipeline (like PJRT), while still reducing by the same tree shape.
+pub fn softfp_reduce_rows_into(
+    x: &[f32],
+    lengths: &[i32],
+    n: usize,
+    sums: &mut Vec<f32>,
+    scratch: &mut Vec<u64>,
+) {
+    debug_assert_eq!(x.len(), lengths.len() * n);
+    sums.clear();
+    for (row, &len) in x.chunks_exact(n).zip(lengths.iter()) {
+        let live = len.max(0) as usize;
+        scratch.clear();
+        scratch.extend(
+            row.iter()
+                .enumerate()
+                .map(|(i, &v)| f32_bits(if i < live { v } else { 0.0 })),
+        );
+        let mut m = scratch.len();
+        while m > 1 {
+            let half = m / 2;
+            for i in 0..half {
+                scratch[i] = fp_add(F32, scratch[2 * i], scratch[2 * i + 1]);
+            }
+            if m % 2 == 1 {
+                scratch[half] = scratch[m - 1];
+                m = half + 1;
+            } else {
+                m = half;
+            }
+        }
+        sums.push(if scratch.is_empty() { 0.0 } else { bits_f32(scratch[0]) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    /// The pre-vectorization scalar baseline (allocating per level), kept
+    /// as the golden reference for the tree shape.
+    fn scalar_reference(x: &[f32], lengths: &[i32], n: usize) -> Vec<f32> {
+        lengths
+            .iter()
+            .enumerate()
+            .map(|(row, &len)| {
+                let base = row * n;
+                let mut level: Vec<f32> = (0..n)
+                    .map(|i| if (i as i32) < len { x[base + i] } else { 0.0 })
+                    .collect();
+                while level.len() > 1 {
+                    level = level
+                        .chunks(2)
+                        .map(|c| if c.len() == 2 { c[0] + c[1] } else { c[0] })
+                        .collect();
+                }
+                level[0]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bit_identical_to_scalar_reference_across_shapes() {
+        let mut rng = Xoshiro256::seeded(0x51AD);
+        for n in [1usize, 2, 4, 8, 16, 24, 64, 128, 256, 40, 100] {
+            let batch = 5;
+            let x: Vec<f32> =
+                (0..batch * n).map(|_| (rng.next_f64() as f32 - 0.5) * 1e6).collect();
+            let lengths: Vec<i32> =
+                (0..batch).map(|_| rng.range(0, n) as i32).collect();
+            let want = scalar_reference(&x, &lengths, n);
+            let mut sums = Vec::new();
+            let mut scratch = Vec::new();
+            reduce_rows_into(&x, &lengths, n, &mut sums, &mut scratch);
+            let got: Vec<u32> = sums.iter().map(|s| s.to_bits()).collect();
+            let want: Vec<u32> = want.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn masking_zeroes_the_padding() {
+        let x: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        let mut sums = Vec::new();
+        let mut scratch = Vec::new();
+        reduce_rows_into(&x, &[3], 8, &mut sums, &mut scratch);
+        assert_eq!(sums, vec![6.0]);
+        reduce_rows_into(&x, &[0], 8, &mut sums, &mut scratch);
+        assert_eq!(sums, vec![0.0]);
+    }
+
+    #[test]
+    fn tree_reduce_handles_degenerate_sizes() {
+        assert_eq!(tree_reduce_in_place(&mut []), 0.0);
+        assert_eq!(tree_reduce_in_place(&mut [7.5]), 7.5);
+        assert_eq!(tree_reduce_in_place(&mut [1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn blocked_pass_matches_three_pairwise_levels() {
+        // 16 lanes: one blocked pass + finish vs pure pairwise levels.
+        let vals: Vec<f32> = (0..16).map(|i| (i as f32 + 0.5) * 1.25e-3).collect();
+        let mut a = vals.clone();
+        let blocked = tree_reduce_in_place(&mut a);
+        let mut level = vals;
+        while level.len() > 1 {
+            level = level.chunks(2).map(|c| c[0] + c[1]).collect();
+        }
+        assert_eq!(blocked.to_bits(), level[0].to_bits());
+    }
+
+    #[test]
+    fn softfp_matches_hardware_tree_on_exact_values() {
+        // Dyadic values with small sums are exact in f32, so the software
+        // IEEE adder and the host FPU must agree bit-for-bit.
+        let mut rng = Xoshiro256::seeded(9);
+        for n in [8usize, 32, 128] {
+            let batch = 4;
+            let x: Vec<f32> =
+                (0..batch * n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+            let lengths: Vec<i32> =
+                (0..batch).map(|_| rng.range(0, n) as i32).collect();
+            let (mut hw, mut hw_scratch) = (Vec::new(), Vec::new());
+            reduce_rows_into(&x, &lengths, n, &mut hw, &mut hw_scratch);
+            let (mut sw, mut sw_scratch) = (Vec::new(), Vec::new());
+            softfp_reduce_rows_into(&x, &lengths, n, &mut sw, &mut sw_scratch);
+            let hw: Vec<u32> = hw.iter().map(|s| s.to_bits()).collect();
+            let sw: Vec<u32> = sw.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(hw, sw, "n={n}");
+        }
+    }
+}

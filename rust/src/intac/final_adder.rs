@@ -70,10 +70,10 @@ pub struct FinalAdder {
 
 impl FinalAdder {
     pub fn new(kind: FinalAdderKind, width: u32, skip_bits: u32) -> Self {
-        assert!(width <= 128 && width >= 1);
+        assert!((1..=128).contains(&width));
         assert!(skip_bits < width);
         if let FinalAdderKind::ResourceShared { fa_cells } = kind {
-            assert!(fa_cells >= 1 && fa_cells <= width);
+            assert!((1..=width).contains(&fa_cells));
         }
         Self {
             kind,

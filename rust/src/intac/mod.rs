@@ -118,7 +118,7 @@ pub struct Intac {
 
 impl Intac {
     pub fn new(cfg: IntacConfig) -> Self {
-        assert!(cfg.in_width >= 1 && cfg.in_width <= cfg.out_width && cfg.out_width <= 128);
+        assert!((1..=cfg.out_width).contains(&cfg.in_width) && cfg.out_width <= 128);
         assert!(cfg.inputs_per_cycle >= 1);
         let skip = cfg.reduced();
         Self {

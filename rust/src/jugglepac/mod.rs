@@ -170,7 +170,7 @@ pub struct JugglePac {
 
 impl JugglePac {
     pub fn new(cfg: JugglePacConfig) -> Self {
-        assert!(cfg.pis_registers >= 1 && cfg.pis_registers <= 256);
+        assert!((1..=256).contains(&cfg.pis_registers));
         let op = match cfg.operator {
             Operator::Add => PipelinedOp::adder(cfg.fmt, cfg.adder_latency),
             Operator::Mul => PipelinedOp::multiplier(cfg.fmt, cfg.adder_latency),
@@ -761,7 +761,7 @@ mod tests {
             assert_eq!(x.label, y.label);
             assert_eq!(x.cycle, y.cycle);
         }
-        assert!(jp_full.dag().len() > 0, "Full records");
+        assert!(!jp_full.dag().is_empty(), "Full records");
         assert_eq!(jp_off.dag().len(), 0, "Off records nothing");
         assert_eq!(jp_full.stats().cycles, jp_off.stats().cycles);
         assert_eq!(jp_full.stats().op_issues, jp_off.stats().op_issues);
@@ -813,6 +813,6 @@ mod tests {
         // Paper Table II reports 29 for R=4, L=14. Our cycle model should
         // land in the same region; the exact value is pinned in the
         // integration tests / EXPERIMENTS.md.
-        assert!(m >= 8 && m <= 64, "min set size {m}");
+        assert!((8..=64).contains(&m), "min set size {m}");
     }
 }

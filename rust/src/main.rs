@@ -53,7 +53,8 @@ USAGE: jugglepac <subcommand> [options]
   simulate   [--sets S] [--len N] [--registers R] [--latency L] [--seed X]
              [--provenance full|off]
   intac      [--sets S] [--len N] [--inputs I] [--fas K]
-  serve      [--sets S] [--max-len N] [--engine xla|native] [--seed X]
+  serve      [--sets S] [--max-len N] [--engine xla|native|softfp]
+             [--shards K] [--seed X]
   artifacts  [--dir PATH]";
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -216,15 +217,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use jugglepac::util::Xoshiro256;
     let sets = args.get_usize("sets", 2000)?;
     let max_len = args.get_usize("max-len", 700)?;
+    let shards = args.get_usize("shards", 1)?.max(1);
     let engine = match args.get_or("engine", "xla") {
         "xla" => EngineKind::Xla {
             artifacts_dir: jugglepac::runtime::default_artifacts_dir(),
             artifact: args.get_or("artifact", "reduce_f32_b32_n128").to_string(),
         },
         "native" => EngineKind::Native { batch: 8, n: 256 },
-        other => bail!("--engine must be xla|native, got {other:?}"),
+        "softfp" => EngineKind::SoftFp { batch: 8, n: 256 },
+        other => bail!("--engine must be xla|native|softfp, got {other:?}"),
     };
-    let mut svc = Service::start(ServiceConfig { engine, ..Default::default() })?;
+    let mut svc = Service::start(ServiceConfig { engine, shards, ..Default::default() })?;
     let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
     let t0 = std::time::Instant::now();
     let mut want = Vec::with_capacity(sets);

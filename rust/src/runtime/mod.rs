@@ -93,10 +93,27 @@ pub struct Runtime {
 impl Runtime {
     /// Load every artifact in `dir` (see [`default_artifacts_dir`]).
     pub fn load(dir: &Path) -> Result<Self> {
+        Self::load_filtered(dir, None)
+    }
+
+    /// Load artifacts from `dir`, restricted to `only` when given.
+    ///
+    /// The sharded coordinator gives every engine worker its own runtime;
+    /// compiling one artifact per shard instead of the whole manifest keeps
+    /// startup O(shards), not O(shards × artifacts).
+    pub fn load_filtered(dir: &Path, only: Option<&str>) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let specs = read_manifest(dir)?;
+        if let Some(name) = only {
+            if !specs.iter().any(|s| s.name == name) {
+                bail!("artifact {name:?} not in manifest at {}", dir.display());
+            }
+        }
         let mut models = HashMap::new();
         for spec in specs {
+            if only.is_some_and(|name| name != spec.name) {
+                continue;
+            }
             let proto = xla::HloModuleProto::from_text_file(
                 spec.path
                     .to_str()

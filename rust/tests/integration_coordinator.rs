@@ -24,6 +24,7 @@ fn xla_cfg() -> ServiceConfig {
         batch_deadline: Duration::from_micros(200),
         ordered: true,
         queue_depth: 256,
+        ..Default::default()
     }
 }
 
@@ -87,6 +88,35 @@ fn xla_and_native_engines_agree_bit_exactly() {
     let xla = run(xla_cfg().engine);
     let native = run(EngineKind::Native { batch: 8, n: 256 });
     assert_eq!(xla, native);
+}
+
+#[test]
+fn xla_sharded_service_matches_single_shard_bit_for_bit() {
+    if !have_artifacts() {
+        return;
+    }
+    // Each shard compiles its own PJRT executable; the reorder stage must
+    // make the pool indistinguishable from the fused pipeline.
+    let run = |shards: usize| -> Vec<u32> {
+        let mut svc = Service::start(ServiceConfig { shards, ..xla_cfg() }).unwrap();
+        let mut rng = Xoshiro256::seeded(5);
+        let requests: Vec<Vec<f32>> = (0..40)
+            .map(|_| {
+                let n = rng.range(1, 700);
+                (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+            })
+            .collect();
+        for req in &requests {
+            svc.submit(req.clone()).unwrap();
+        }
+        let out = collect(&svc, requests.len());
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.req_id, i as u64, "shards={shards}: ordered delivery");
+        }
+        svc.shutdown();
+        out.iter().map(|r| r.sum.to_bits()).collect()
+    };
+    assert_eq!(run(1), run(2));
 }
 
 #[test]

@@ -232,6 +232,7 @@ fn prop_coordinator_ordered_and_complete() {
             batch_deadline: std::time::Duration::from_micros(rng.range(20, 300) as u64),
             ordered: true,
             queue_depth: 64,
+            ..Default::default()
         })
         .unwrap();
         let count = rng.range(5, 60);
