@@ -18,7 +18,7 @@
 //! `JUGGLEPAC_BENCH_ITERS`, `JUGGLEPAC_BENCH_SMOKE`,
 //! `JUGGLEPAC_BENCH_JSON` (output path override).
 
-use jugglepac::benchkit::{bench, env_iters, report_throughput, smoke, JsonSink};
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
 use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
@@ -87,9 +87,7 @@ fn main() {
         }
     }
 
-    let json_path = std::env::var("JUGGLEPAC_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_2.json".to_string());
-    if let Err(e) = sink.write(std::path::Path::new(&json_path)) {
-        eprintln!("could not write {json_path}: {e}");
+    if let Err(e) = sink.write(&json_path("BENCH_2.json")) {
+        eprintln!("could not write bench json: {e}");
     }
 }

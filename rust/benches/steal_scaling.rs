@@ -1,0 +1,114 @@
+//! Bench: work stealing under skewed load — the tentpole headline.
+//!
+//! shards = 4 with a noisy neighbor (shard 0 stalls a fixed time per
+//! batch, the slow-engine model) and a Zipf length mix, driven through the
+//! zero-copy slab submission path. Round-robin-with-spill alone keeps
+//! feeding the slow shard and then waits on everything parked behind it;
+//! with stealing the idle peers pull those batches off the slow shard's
+//! deque tail, so the run should recover most of the stranded throughput:
+//! expect `steal on` ≥ 1.3× resp/s over `steal off` on a ≥ 4-core runner
+//! (the CI smoke run only proves the path end-to-end; 2-core runners
+//! undershoot).
+//!
+//! Every case lands in `BENCH_3.json` (benchkit::JsonSink) for PR-over-PR
+//! trajectory tracking. Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{BurstSlab, EngineKind, MetricsSnapshot, Service, ServiceConfig};
+use jugglepac::testkit::zipf_dyadic_sets;
+use std::time::Duration;
+
+/// Zipf-length sets of exact dyadic values (sums order-independent, so
+/// every configuration is value-checked against the plain sum).
+fn workload(count: usize, max_len: usize) -> Vec<Vec<f32>> {
+    zipf_dyadic_sets(0x57EA, count, max_len)
+}
+
+/// One full drive through the slab path: submit bursts, receive in order,
+/// verify sums, return the final metrics.
+fn drive(
+    shards: usize,
+    steal: bool,
+    stall0_us: u64,
+    requests: &[Vec<f32>],
+    want: &[f32],
+) -> MetricsSnapshot {
+    let mut svc = Service::start(ServiceConfig {
+        engine: EngineKind::SoftFp { batch: 16, n: 256 },
+        shards,
+        steal,
+        shard_stall_us: if stall0_us > 0 { vec![stall0_us] } else { Vec::new() },
+        // Deep enough that a stalled shard visibly strands work behind it
+        // when stealing is off.
+        shard_queue_depth: 6,
+        batch_deadline: Duration::from_micros(200),
+        ..Default::default()
+    })
+    .expect("service starts");
+    for chunk in requests.chunks(128) {
+        let mut slab = BurstSlab::with_capacity(chunk.iter().map(|s| s.len()).sum(), chunk.len());
+        for set in chunk {
+            slab.push_set(set);
+        }
+        svc.submit_burst_slab(&slab.share()).expect("submit");
+    }
+    for (i, w) in want.iter().enumerate() {
+        let r = svc.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        assert_eq!(r.sum, *w, "req {i}");
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, requests.len() as u64);
+    m
+}
+
+fn main() {
+    let smoke = smoke();
+    let shards = 4usize;
+    let (n_sets, max_len, stall0_us) = if smoke { (200, 256, 300) } else { (1500, 1024, 1500) };
+    let requests = workload(n_sets, max_len);
+    let want: Vec<f32> = requests.iter().map(|s| s.iter().sum()).collect();
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!(
+        "=== steal scaling: shards={shards}, {n_sets} Zipf sets (max {max_len}), \
+         shard 0 stalled {stall0_us}us/batch, {cores} cores ==="
+    );
+    let mut sink = JsonSink::new();
+
+    let mut rps = Vec::new();
+    for steal in [false, true] {
+        let label = if steal { "on" } else { "off" };
+        let name = format!("steal={label} shards={shards} stall0={stall0_us}us: {n_sets} sets");
+        let mut last = None;
+        let d = bench(&name, env_iters(3), || {
+            last = Some(drive(shards, steal, stall0_us, &requests, &want));
+        });
+        report_throughput("responses", n_sets as u64, "resp", d);
+        sink.record_throughput(&name, n_sets as u64, d);
+        rps.push(n_sets as f64 / d.as_secs_f64());
+        let m = last.expect("at least one drive ran");
+        println!(
+            "  ↳ steal={label}: {} steals ({} missed), {} spills, reorder held max {}",
+            m.steals, m.steal_misses, m.dispatch_spills, m.reorder_held_max
+        );
+        if steal && m.steals == 0 {
+            eprintln!("  !! stealing enabled but no steals recorded — stall too short?");
+        }
+    }
+    let factor = rps[1] / rps[0];
+    println!("  ↳ skewed-load recovery: steal on vs off = {factor:.2}x (target >= 1.3x)");
+
+    // Unskewed sanity point: with no stall, stealing should be ~neutral.
+    {
+        let name = format!("steal=on shards={shards} stall0=0: {n_sets} sets");
+        let d = bench(&name, env_iters(3), || {
+            drive(shards, true, 0, &requests, &want);
+        });
+        sink.record_throughput(&name, n_sets as u64, d);
+    }
+
+    if let Err(e) = sink.write(&json_path("BENCH_3.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

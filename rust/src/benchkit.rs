@@ -31,6 +31,12 @@ pub fn smoke() -> bool {
         .unwrap_or(false)
 }
 
+/// Resolve a bench's JSON output path: `JUGGLEPAC_BENCH_JSON` overrides
+/// `default` (the `BENCH_<n>.json` name CI archives).
+pub fn json_path(default: &str) -> std::path::PathBuf {
+    std::env::var("JUGGLEPAC_BENCH_JSON").unwrap_or_else(|_| default.to_string()).into()
+}
+
 /// Timed repetitions of `f`; returns (min, median, mean).
 pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> (Duration, Duration, Duration) {
     // Warm-up.

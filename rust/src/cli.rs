@@ -77,6 +77,16 @@ impl Args {
         }
     }
 
+    /// An on/off option: `--name on|off` (true/false and 1/0 accepted).
+    pub fn get_switch(&self, name: &str, default: bool) -> Result<bool> {
+        match self.get(name) {
+            None => Ok(default),
+            Some("on") | Some("true") | Some("1") => Ok(true),
+            Some("off") | Some("false") | Some("0") => Ok(false),
+            Some(other) => Err(anyhow!("--{name} expects on|off, got {other:?}")),
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -120,6 +130,16 @@ mod tests {
         let a = parse("x --expr=a=b");
         assert_eq!(a.get("expr"), Some("a=b"));
         assert!(Args::from_iter(["x".into(), "--=v".into()]).is_err());
+    }
+
+    #[test]
+    fn switch_options_parse_on_off() {
+        let a = parse("serve --steal off --other on");
+        assert!(!a.get_switch("steal", true).unwrap());
+        assert!(a.get_switch("other", false).unwrap());
+        assert!(a.get_switch("absent", true).unwrap());
+        assert!(!a.get_switch("absent2", false).unwrap());
+        assert!(parse("serve --steal sideways").get_switch("steal", true).is_err());
     }
 
     #[test]

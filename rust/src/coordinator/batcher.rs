@@ -5,20 +5,18 @@
 //! chunks long sets into N-sized rows, packs rows from multiple in-flight
 //! sets into one batch (the software analogue of the PIS juggling multiple
 //! labels through one adder), and flushes on batch-full or deadline.
+//!
+//! Rows are packed **directly into the padded batch buffer**: a chunk is
+//! copied from the caller's slice (a `Vec` set or a
+//! [`SlabRef`](crate::coordinator::SlabRef) arena view) straight into
+//! `x[row * n ..]` — no staging `Row` vector, zero per-set allocation on
+//! the hot path. The only allocation left is one `(x, lengths, rows)`
+//! triple per *batch*, amortized across its B rows.
 
+use super::steal::StealPool;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-/// One row of work: chunk `chunk_idx` of request `req_id`.
-#[derive(Clone, Debug)]
-pub struct Row {
-    pub req_id: u64,
-    pub chunk_idx: u32,
-    /// Values, length ≤ N.
-    pub values: Vec<f32>,
-}
 
 /// A padded batch ready for the engine.
 #[derive(Clone, Debug)]
@@ -30,12 +28,15 @@ pub struct Batch {
     pub rows: Vec<(u64, u32)>,
 }
 
-/// Splits a request into rows and accumulates rows into batches.
+/// Splits requests into N-sized chunks and packs chunks into batches.
 #[derive(Debug)]
 pub struct Batcher {
     batch: usize,
     n: usize,
-    pending: Vec<Row>,
+    /// The in-progress padded batch, packed in place.
+    x: Vec<f32>,
+    lengths: Vec<i32>,
+    rows: Vec<(u64, u32)>,
     oldest: Option<Instant>,
     deadline: Duration,
 }
@@ -43,7 +44,15 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(batch: usize, n: usize, deadline: Duration) -> Self {
         assert!(batch >= 1 && n >= 1);
-        Self { batch, n, pending: Vec::new(), oldest: None, deadline }
+        Self {
+            batch,
+            n,
+            x: vec![0.0; batch * n],
+            lengths: vec![0; batch],
+            rows: Vec::with_capacity(batch),
+            oldest: None,
+            deadline,
+        }
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -65,26 +74,26 @@ impl Batcher {
         if values.is_empty() {
             // Empty set: a single zero-length row keeps the bookkeeping
             // uniform (sum = 0).
-            out.extend(self.push_row(Row { req_id, chunk_idx: 0, values: Vec::new() }));
+            out.extend(self.push_chunk(req_id, 0, &[]));
             return out;
         }
         for (i, chunk) in values.chunks(self.n).enumerate() {
-            out.extend(self.push_row(Row {
-                req_id,
-                chunk_idx: i as u32,
-                values: chunk.to_vec(),
-            }));
+            out.extend(self.push_chunk(req_id, i as u32, chunk));
         }
         out
     }
 
-    fn push_row(&mut self, row: Row) -> Option<Batch> {
-        if self.pending.is_empty() {
+    /// Copy one chunk into the next row of the in-progress batch.
+    fn push_chunk(&mut self, req_id: u64, chunk_idx: u32, chunk: &[f32]) -> Option<Batch> {
+        if self.rows.is_empty() {
             self.oldest = Some(Instant::now());
         }
-        self.pending.push(row);
-        if self.pending.len() >= self.batch {
-            Some(self.flush().expect("pending non-empty"))
+        let r = self.rows.len();
+        self.x[r * self.n..r * self.n + chunk.len()].copy_from_slice(chunk);
+        self.lengths[r] = chunk.len() as i32;
+        self.rows.push((req_id, chunk_idx));
+        if self.rows.len() >= self.batch {
+            Some(self.flush().expect("rows non-empty"))
         } else {
             None
         }
@@ -93,56 +102,55 @@ impl Batcher {
     /// Deadline-triggered flush (call from the batcher loop's tick).
     pub fn poll_deadline(&mut self) -> Option<Batch> {
         match self.oldest {
-            Some(t) if t.elapsed() >= self.deadline && !self.pending.is_empty() => self.flush(),
+            Some(t) if t.elapsed() >= self.deadline && !self.rows.is_empty() => self.flush(),
             _ => None,
         }
     }
 
     /// Unconditional flush of whatever is pending.
     pub fn flush(&mut self) -> Option<Batch> {
-        if self.pending.is_empty() {
+        if self.rows.is_empty() {
             return None;
         }
-        let rows: Vec<Row> = std::mem::take(&mut self.pending);
         self.oldest = None;
-        let mut x = vec![0.0f32; self.batch * self.n];
-        let mut lengths = vec![0i32; self.batch];
-        let mut ids = Vec::with_capacity(rows.len());
-        for (i, row) in rows.iter().enumerate() {
-            x[i * self.n..i * self.n + row.values.len()].copy_from_slice(&row.values);
-            lengths[i] = row.values.len() as i32;
-            ids.push((row.req_id, row.chunk_idx));
-        }
-        Some(Batch { x, lengths, rows: ids })
+        let x = std::mem::replace(&mut self.x, vec![0.0; self.batch * self.n]);
+        let lengths = std::mem::replace(&mut self.lengths, vec![0; self.batch]);
+        let rows = std::mem::replace(&mut self.rows, Vec::with_capacity(self.batch));
+        Some(Batch { x, lengths, rows })
     }
 
     pub fn pending_rows(&self) -> usize {
-        self.pending.len()
+        self.rows.len()
     }
 }
 
 /// A batch stamped with its dispatch sequence number. The reorder stage
 /// uses `seq` to merge per-shard completions back into the order batches
-/// left the batcher (see [`crate::coordinator::reorder`]).
+/// left the batcher (see [`crate::coordinator::reorder`]) — which shard
+/// executes a batch (round-robin target, spill, or steal) never matters
+/// to delivery order or sums.
 #[derive(Debug)]
 pub struct SeqBatch {
     pub seq: u64,
     pub batch: Batch,
 }
 
-/// Queue-depth-aware round-robin dispatch across the shard engine pool.
+/// Queue-depth-aware round-robin dispatch into the shard pool's injector
+/// deques ([`StealPool`]).
 ///
 /// Each dispatch starts at the round-robin cursor but spills to the next
-/// shard whose bounded queue has room, so one slow shard (GC pause, noisy
+/// shard whose deque has room, so one slow shard (GC pause, noisy
 /// neighbor, long batch) does not stall the whole pipeline while its peers
-/// sit idle. Only when every queue is full does the batcher block — that is
-/// the service's backpressure point, same as the single-engine design.
+/// sit idle — and with stealing enabled, whatever does queue up behind a
+/// slow shard is pulled away by idle peers. Only when every deque is full
+/// does the batcher block — that is the service's backpressure point, same
+/// as the single-engine design.
 #[derive(Debug)]
 pub struct Router {
-    txs: Vec<SyncSender<SeqBatch>>,
+    pool: Arc<StealPool>,
     /// Set by a shard worker whose engine failed: the router stops
-    /// routing there (the worker keeps draining raced-in batches as
-    /// empty completions so the sequence stream never gaps).
+    /// routing there (the worker keeps draining its deque as poisoned
+    /// completions so the sequence stream never gaps).
     dead: Arc<Vec<AtomicBool>>,
     rr: usize,
     /// Dispatches that landed on a shard other than the round-robin target
@@ -151,54 +159,57 @@ pub struct Router {
 }
 
 impl Router {
-    pub fn new(txs: Vec<SyncSender<SeqBatch>>, dead: Arc<Vec<AtomicBool>>) -> Self {
-        assert!(!txs.is_empty());
-        assert_eq!(txs.len(), dead.len());
-        Self { txs, dead, rr: 0, spills: 0 }
+    pub fn new(pool: Arc<StealPool>, dead: Arc<Vec<AtomicBool>>) -> Self {
+        assert_eq!(pool.shards(), dead.len());
+        Self { pool, dead, rr: 0, spills: 0 }
     }
 
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.pool.shards()
     }
 
-    /// Dispatch one batch; returns the shard index it landed on, or `None`
-    /// when every shard has hung up or died (shutdown / crash).
+    pub fn pool(&self) -> &Arc<StealPool> {
+        &self.pool
+    }
+
+    /// Dispatch one batch; returns the shard deque it landed on, or `None`
+    /// when every shard is dead or the pool is closed (shutdown / crash).
     pub fn dispatch(&mut self, seq: u64, batch: Batch) -> Option<usize> {
-        let n = self.txs.len();
+        let n = self.pool.shards();
         let start = self.rr;
         self.rr = (self.rr + 1) % n;
         let mut msg = SeqBatch { seq, batch };
-        // Pass 1: non-blocking, spilling past full (or dead) queues.
+        // Pass 1: non-blocking, spilling past full (or dead) deques.
         for k in 0..n {
             let i = (start + k) % n;
             if self.dead[i].load(Ordering::Relaxed) {
                 continue;
             }
-            match self.txs[i].try_send(msg) {
+            match self.pool.try_push(i, msg) {
                 Ok(()) => {
                     if k > 0 {
                         self.spills += 1;
                     }
                     return Some(i);
                 }
-                Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => msg = m,
+                Err(m) => msg = m,
             }
         }
-        // Pass 2: every live queue full — block on the round-robin target
-        // (backpressure), walking on if it disconnects while we wait.
+        // Pass 2: every live deque full — block on the round-robin target
+        // (backpressure), walking on only if the pool closes under us.
         for k in 0..n {
             let i = (start + k) % n;
             if self.dead[i].load(Ordering::Relaxed) {
                 continue;
             }
-            match self.txs[i].send(msg) {
+            match self.pool.push_blocking(i, msg) {
                 Ok(()) => {
                     if k > 0 {
                         self.spills += 1;
                     }
                     return Some(i);
                 }
-                Err(std::sync::mpsc::SendError(m)) => msg = m,
+                Err(m) => msg = m,
             }
         }
         None
@@ -213,6 +224,7 @@ pub fn live_flags(shards: usize) -> Arc<Vec<AtomicBool>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Metrics;
 
     fn batcher() -> Batcher {
         Batcher::new(4, 8, Duration::from_millis(5))
@@ -267,6 +279,20 @@ mod tests {
     }
 
     #[test]
+    fn reused_buffer_leaves_no_stale_values() {
+        // A full batch, then a shorter row in the recycled buffer: the
+        // padding of the new batch must be zero, not the old values.
+        let mut b = Batcher::new(2, 4, Duration::from_millis(5));
+        let full = b.add_request(0, &[9.0; 8]); // 2 rows of 4 -> one batch
+        assert_eq!(full.len(), 1);
+        b.add_request(1, &[1.0]);
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.lengths, vec![1, 0]);
+        assert_eq!(&batch.x[0..4], &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&batch.x[4..8], &[0.0; 4]);
+    }
+
+    #[test]
     fn chunk_count() {
         let b = batcher();
         assert_eq!(b.chunks_for(0), 1);
@@ -279,59 +305,65 @@ mod tests {
         Batch { x: vec![0.0], lengths: vec![1], rows: vec![(0, 0)] }
     }
 
+    fn pool(shards: usize, depth: usize) -> Arc<StealPool> {
+        StealPool::new(shards, depth, Arc::new(Metrics::new(shards)))
+    }
+
+    fn drain_seqs(p: &Arc<StealPool>, shard: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        while p.len(shard) > 0 {
+            out.push(p.pop(shard, false).unwrap().seq);
+        }
+        out
+    }
+
     #[test]
     fn router_round_robins_when_queues_have_room() {
-        let (t0, r0) = std::sync::mpsc::sync_channel(4);
-        let (t1, r1) = std::sync::mpsc::sync_channel(4);
-        let mut router = Router::new(vec![t0, t1], live_flags(2));
+        let p = pool(2, 4);
+        let mut router = Router::new(Arc::clone(&p), live_flags(2));
         let shards: Vec<usize> =
             (0..4).map(|s| router.dispatch(s, tiny_batch()).unwrap()).collect();
         assert_eq!(shards, vec![0, 1, 0, 1]);
         assert_eq!(router.spills, 0);
-        assert_eq!(r0.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![0, 2]);
-        assert_eq!(r1.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(drain_seqs(&p, 0), vec![0, 2]);
+        assert_eq!(drain_seqs(&p, 1), vec![1, 3]);
     }
 
     #[test]
     fn router_spills_past_a_full_queue() {
-        let (t0, _r0) = std::sync::mpsc::sync_channel(1);
-        let (t1, r1) = std::sync::mpsc::sync_channel(4);
-        let mut router = Router::new(vec![t0, t1], live_flags(2));
+        let p = pool(2, 1);
+        let mut router = Router::new(Arc::clone(&p), live_flags(2));
         assert_eq!(router.dispatch(0, tiny_batch()), Some(0)); // fills shard 0
-        assert_eq!(router.dispatch(1, tiny_batch()), Some(1)); // rr target
-        // rr target is 0 again but it is full -> spill to 1.
+        assert_eq!(router.dispatch(1, tiny_batch()), Some(1)); // rr target; fills shard 1
+        // Shard 1 drains (fast shard); rr target is 0 again but it is
+        // still full -> spill to 1.
+        assert_eq!(p.pop(1, false).unwrap().seq, 1);
         assert_eq!(router.dispatch(2, tiny_batch()), Some(1));
         assert_eq!(router.spills, 1);
-        assert_eq!(r1.try_iter().map(|m| m.seq).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(drain_seqs(&p, 1), vec![2]);
     }
 
     #[test]
-    fn router_skips_dead_shards_and_reports_total_loss() {
-        let (t0, r0) = std::sync::mpsc::sync_channel(4);
-        let (t1, r1) = std::sync::mpsc::sync_channel::<SeqBatch>(4);
-        drop(r1);
-        let mut router = Router::new(vec![t0, t1], live_flags(2));
-        assert_eq!(router.dispatch(0, tiny_batch()), Some(0));
-        // rr target 1 is disconnected -> spill back to 0.
-        assert_eq!(router.dispatch(1, tiny_batch()), Some(0));
-        assert_eq!(router.spills, 1);
-        assert_eq!(r0.try_iter().count(), 2);
-        drop(r0);
-        assert_eq!(router.dispatch(2, tiny_batch()), None);
-    }
-
-    #[test]
-    fn router_respects_dead_flags_even_with_a_live_channel() {
-        let (t0, _r0) = std::sync::mpsc::sync_channel(4);
-        let (t1, r1) = std::sync::mpsc::sync_channel(4);
+    fn router_respects_dead_flags_and_reports_total_loss() {
+        let p = pool(2, 4);
         let dead = live_flags(2);
-        let mut router = Router::new(vec![t0, t1], Arc::clone(&dead));
+        let mut router = Router::new(Arc::clone(&p), Arc::clone(&dead));
         dead[0].store(true, Ordering::Relaxed);
-        // Shard 0's queue is alive but flagged dead: everything lands on 1.
+        // Shard 0's deque has room but is flagged dead: everything lands
+        // on 1 (one spill each time the rr cursor pointed at 0).
         assert_eq!(router.dispatch(0, tiny_batch()), Some(1));
         assert_eq!(router.dispatch(1, tiny_batch()), Some(1));
-        assert_eq!(r1.try_iter().count(), 2);
+        assert_eq!(drain_seqs(&p, 1), vec![0, 1]);
         dead[1].store(true, Ordering::Relaxed);
         assert_eq!(router.dispatch(2, tiny_batch()), None);
+    }
+
+    #[test]
+    fn router_gives_up_on_a_closed_pool() {
+        let p = pool(2, 4);
+        let mut router = Router::new(Arc::clone(&p), live_flags(2));
+        assert_eq!(router.dispatch(0, tiny_batch()), Some(0));
+        p.close();
+        assert_eq!(router.dispatch(1, tiny_batch()), None);
     }
 }

@@ -36,6 +36,20 @@ pub struct Metrics {
     /// Batches lost to shard engine failures (reported as empty
     /// completions so the sequence stream keeps flowing).
     pub engine_failures: AtomicU64,
+    /// Batches an idle shard worker pulled from the tail of a loaded
+    /// peer's deque (work stealing; see `coordinator::steal`).
+    pub steals: AtomicU64,
+    /// Steal attempts whose chosen victim was emptied by a race before
+    /// the take.
+    pub steal_misses: AtomicU64,
+    /// Late or duplicate sequence numbers the reorder buffer dropped —
+    /// nonzero means a producer replayed a batch (a real bug upstream),
+    /// caught instead of double-delivered.
+    pub reorder_duplicates: AtomicU64,
+    /// Gauge: bytes of caller-owned `BurstSlab` arenas submitted but not
+    /// yet packed into batches (the zero-copy submission path's working
+    /// set). Returns to 0 when the pipeline is drained.
+    pub slab_bytes_in_flight: AtomicU64,
     latency_us: Mutex<Histogram>,
     shards: Vec<ShardCounters>,
 }
@@ -53,6 +67,10 @@ impl Metrics {
             dispatch_spills: AtomicU64::new(0),
             reorder_held_max: AtomicU64::new(0),
             engine_failures: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            steal_misses: AtomicU64::new(0),
+            reorder_duplicates: AtomicU64::new(0),
+            slab_bytes_in_flight: AtomicU64::new(0),
             latency_us: Mutex::new(Histogram::new()),
             shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
         }
@@ -87,6 +105,10 @@ impl Metrics {
             dispatch_spills: self.dispatch_spills.load(Ordering::Relaxed),
             reorder_held_max: self.reorder_held_max.load(Ordering::Relaxed),
             engine_failures: self.engine_failures.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            steal_misses: self.steal_misses.load(Ordering::Relaxed),
+            reorder_duplicates: self.reorder_duplicates.load(Ordering::Relaxed),
+            slab_bytes_in_flight: self.slab_bytes_in_flight.load(Ordering::Relaxed),
             latency_us: self.latency_us.lock().unwrap().clone(),
             per_shard: self
                 .shards
@@ -129,6 +151,10 @@ pub struct MetricsSnapshot {
     pub dispatch_spills: u64,
     pub reorder_held_max: u64,
     pub engine_failures: u64,
+    pub steals: u64,
+    pub steal_misses: u64,
+    pub reorder_duplicates: u64,
+    pub slab_bytes_in_flight: u64,
     pub latency_us: Histogram,
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -165,9 +191,12 @@ impl MetricsSnapshot {
             let shares: Vec<String> =
                 self.per_shard.iter().map(|p| p.batches.to_string()).collect();
             s.push_str(&format!(
-                " | shards: [{}] batches, {} spills, reorder held max {}",
+                " | shards: [{}] batches, {} spills, {} steals ({} missed), \
+                 reorder held max {}",
                 shares.join("/"),
                 self.dispatch_spills,
+                self.steals,
+                self.steal_misses,
                 self.reorder_held_max,
             ));
         }

@@ -7,15 +7,15 @@
 //! software-system scale, with the engine generalized to an N-shard pool:
 //!
 //! ```text
-//!  clients ── submit(set) ──► [bounded queue]            (backpressure)
+//!  clients ── submit / submit_burst_slab ──► [bounded queue] (backpressure)
 //!     ▲                            │ batcher thread: chunk + pack + pad,
 //!     │                            │ stamp seq, round-robin w/ spill
 //!     │              ┌─────────────┼─────────────┐
 //!     │              ▼             ▼             ▼
-//!     │         [shard q 0]   [shard q 1] … [shard q N-1]   (bounded)
-//!     │              │             │             │  engine workers: each
-//!     │              ▼             ▼             ▼  owns a Runtime + bufs
-//!     │              └─────────────┼─────────────┘
+//!     │         [deque 0]     [deque 1]  …  [deque N-1]   (bounded)
+//!     │              │ ◄── steal ──► │ ◄── steal ──► │  engine workers:
+//!     │              ▼             ▼             ▼  idle ones pull from a
+//!     │              └─────────────┼─────────────┘  loaded peer's tail
 //!     │                            ▼
 //!     │                  [completion queue]  (seq-tagged, out of order)
 //!     │                            │ reorder thread: seq reorder buffer
@@ -28,7 +28,11 @@
 //! [`reorder::ReorderBuffer`] plus [`assembler::Assembler`] play the PIS —
 //! internal completions are out of order, delivery is in input order
 //! (paper §IV-D) — and bounded channels play the no-pileup/real-time
-//! constraint.
+//! constraint. Work stealing ([`steal::StealPool`]) moves only *where* a
+//! batch executes, never its sequence number or its reduction tree, so
+//! delivery order and sums stay bit-identical stealing on or off.
+//! High-throughput clients submit through a caller-owned arena
+//! ([`slab::BurstSlab`]) for zero per-set allocation end to end.
 //!
 //! With `shards = 1` the three stages are fused into a single thread (the
 //! pre-sharding pipeline, byte-for-byte): on a small box the cross-thread
@@ -40,11 +44,15 @@ pub mod batcher;
 pub mod metrics;
 pub mod reorder;
 mod shard;
+pub mod slab;
+pub mod steal;
 
 pub use assembler::{Assembler, Completed};
-pub use batcher::{live_flags, Batch, Batcher, Router, Row, SeqBatch};
+pub use batcher::{live_flags, Batch, Batcher, Router, SeqBatch};
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
-pub use reorder::ReorderBuffer;
+pub use reorder::{ReorderBuffer, ShardDone};
+pub use slab::{BurstSlab, SetView, SlabRef};
+pub use steal::StealPool;
 
 use anyhow::{Context, Result};
 use std::sync::atomic::Ordering;
@@ -87,10 +95,23 @@ pub struct ServiceConfig {
     /// Bounded per-shard batch queue depth; the dispatcher spills to the
     /// next shard when a queue is full (N > 1 only).
     pub shard_queue_depth: usize,
+    /// Work stealing between shard workers (N > 1 only): an idle worker
+    /// pulls whole batches from the tail of the most-loaded peer's deque.
+    /// Ordering and sums are bit-identical either way; stealing recovers
+    /// the throughput a skewed load would otherwise strand behind one
+    /// slow shard. `serve --steal on|off`.
+    pub steal: bool,
     /// Test/bench knob: upper bound (µs) on random per-batch completion
     /// jitter injected in shard workers, to exercise the reorder buffer.
     /// 0 disables. Ignored by the fused `shards = 1` pipeline.
     pub shard_jitter_us: u64,
+    /// Test/bench knob: fixed per-batch stall (µs) per shard (index =
+    /// shard; missing entries = 0) — the noisy-neighbor model the
+    /// stealing bench skews load with. Ignored when `shards = 1`.
+    pub shard_stall_us: Vec<u64>,
+    /// Test knob: shard `.0`'s engine reports a failure after `.1`
+    /// successful batches (exercises the dead-shard drain/steal races).
+    pub shard_fail_after: Option<(usize, u64)>,
 }
 
 impl Default for ServiceConfig {
@@ -105,7 +126,10 @@ impl Default for ServiceConfig {
             queue_depth: 1024,
             shards: 1,
             shard_queue_depth: 4,
+            steal: true,
             shard_jitter_us: 0,
+            shard_stall_us: Vec::new(),
+            shard_fail_after: None,
         }
     }
 }
@@ -124,9 +148,52 @@ pub(crate) struct SubmitMsg {
     at: Instant,
 }
 
+/// One burst entering the pipeline: either owned per-set vectors
+/// ([`Service::submit_burst`]) or a shared slab arena
+/// ([`Service::submit_burst_slab`] — zero per-set allocation; the batcher
+/// packs rows straight out of the arena).
+pub(crate) enum Submission {
+    Owned(Vec<SubmitMsg>),
+    Slab { slab: SlabRef, first_id: u64, at: Instant },
+}
+
+impl Submission {
+    /// Visit every set in submission order as `(req_id, values, at)`;
+    /// stops and returns `false` when the visitor does.
+    pub(crate) fn for_each_set<F: FnMut(u64, &[f32], Instant) -> bool>(&self, mut f: F) -> bool {
+        match self {
+            Submission::Owned(msgs) => {
+                for m in msgs {
+                    if !f(m.req_id, &m.values, m.at) {
+                        return false;
+                    }
+                }
+                true
+            }
+            Submission::Slab { slab, first_id, at } => {
+                for k in 0..slab.sets() {
+                    if !f(*first_id + k as u64, slab.set(k), *at) {
+                        return false;
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    /// Arena bytes this submission holds in flight (0 for the owned path);
+    /// the consumer releases them from `slab_bytes_in_flight` once packed.
+    pub(crate) fn slab_bytes(&self) -> u64 {
+        match self {
+            Submission::Owned(_) => 0,
+            Submission::Slab { slab, .. } => slab.bytes(),
+        }
+    }
+}
+
 /// The running service (threads + channels).
 pub struct Service {
-    tx: Option<SyncSender<Vec<SubmitMsg>>>,
+    tx: Option<SyncSender<Submission>>,
     rx_out: Receiver<Vec<Response>>,
     /// Responses received but not yet handed to the caller (bursts are
     /// delivered whole; `recv_timeout` pops one at a time).
@@ -162,7 +229,7 @@ impl Service {
         // not the PJRT execute — dominated the serve path (measured ~300us
         // per message vs ~50us per engine batch, EXPERIMENTS.md §Perf).
         // One wake per burst amortizes it away.
-        let (tx_in, rx_in) = sync_channel::<Vec<SubmitMsg>>(cfg.queue_depth);
+        let (tx_in, rx_in) = sync_channel::<Submission>(cfg.queue_depth);
         // Responses are UNBOUNDED on purpose: backpressure is applied at
         // the submit side only. A bounded response channel would deadlock
         // a submit-all-then-receive client (worker blocks on send → submit
@@ -198,22 +265,29 @@ impl Service {
             // ---- sharded pipeline: batcher → N engine workers → reorder ----
             let (tx_done, rx_done) = channel::<reorder::ToReorder>();
             let dead = live_flags(shards);
-            let mut shard_txs = Vec::with_capacity(shards);
+            let pool = StealPool::new(shards, cfg.shard_queue_depth.max(1), Arc::clone(&metrics));
             for s in 0..shards {
-                let (txb, rxb) = sync_channel::<SeqBatch>(cfg.shard_queue_depth.max(1));
-                shard_txs.push(txb);
-                let engine = cfg.engine.clone();
-                let tx_done = tx_done.clone();
-                let m = Arc::clone(&metrics);
-                let tx_ready = tx_ready.clone();
-                let jitter = cfg.shard_jitter_us;
-                let dead = Arc::clone(&dead);
+                let args = shard::ShardArgs {
+                    shard: s,
+                    engine: cfg.engine.clone(),
+                    n,
+                    pool: Arc::clone(&pool),
+                    steal: cfg.steal,
+                    tx_done: tx_done.clone(),
+                    metrics: Arc::clone(&metrics),
+                    jitter_us: cfg.shard_jitter_us,
+                    stall_us: cfg.shard_stall_us.get(s).copied().unwrap_or(0),
+                    fail_after: match cfg.shard_fail_after {
+                        Some((fs, k)) if fs == s => Some(k),
+                        _ => None,
+                    },
+                    dead: Arc::clone(&dead),
+                    tx_ready: tx_ready.clone(),
+                };
                 handles.push(
-                    std::thread::Builder::new().name(format!("acc-shard-{s}")).spawn(
-                        move || {
-                            shard::run_shard(s, engine, n, rxb, tx_done, m, jitter, dead, tx_ready)
-                        },
-                    )?,
+                    std::thread::Builder::new()
+                        .name(format!("acc-shard-{s}"))
+                        .spawn(move || shard::run_shard(args))?,
                 );
             }
             drop(tx_ready);
@@ -227,7 +301,7 @@ impl Service {
             {
                 let m = Arc::clone(&metrics);
                 let b = Batcher::new(batch, n, cfg.batch_deadline);
-                let router = Router::new(shard_txs, dead);
+                let router = Router::new(pool, dead);
                 handles.push(std::thread::Builder::new().name("acc-batcher".into()).spawn(
                     move || shard::run_batcher(rx_in, b, router, tx_done, m),
                 )?);
@@ -261,9 +335,10 @@ impl Service {
         Ok(self.submit_burst(vec![values])?[0])
     }
 
-    /// Submit many sets with a single channel operation — the preferred
-    /// path for high-throughput clients (one consumer wake per burst
-    /// instead of per set). Returns the request ids, in order.
+    /// Submit many sets with a single channel operation — one consumer
+    /// wake per burst instead of per set. Returns the request ids, in
+    /// order. Costs one `Vec` per set; the zero-copy path is
+    /// [`submit_burst_slab`](Self::submit_burst_slab).
     pub fn submit_burst(&mut self, sets: Vec<Vec<f32>>) -> Result<Vec<u64>> {
         let now = Instant::now();
         let mut ids = Vec::with_capacity(sets.len());
@@ -280,9 +355,42 @@ impl Service {
         self.tx
             .as_ref()
             .context("service shut down")?
-            .send(burst)
+            .send(Submission::Owned(burst))
             .context("service pipeline closed")?;
         Ok(ids)
+    }
+
+    /// Zero-copy burst submission: every set lives in the caller-owned
+    /// [`BurstSlab`] arena behind `slab`; the pipeline clones the `Arc`
+    /// (O(1)) and packs engine batches straight out of the arena — zero
+    /// per-set allocation end to end. Returns the contiguous request-id
+    /// range, in submission order. Blocks when the queue is full
+    /// (backpressure), like [`submit`](Self::submit).
+    ///
+    /// Reclaim the arena for the next burst with [`SlabRef::try_reclaim`]
+    /// once the pipeline has packed it (e.g. after draining responses).
+    pub fn submit_burst_slab(&mut self, slab: &SlabRef) -> Result<std::ops::Range<u64>> {
+        let now = Instant::now();
+        let first_id = self.next_id;
+        let count = slab.sets() as u64;
+        self.next_id += count;
+        self.metrics.submitted.fetch_add(count, Ordering::Relaxed);
+        // Gauge up BEFORE the send (the consumer's matching fetch_sub must
+        // never run first), rolled back if the pipeline refuses the burst.
+        self.metrics.slab_bytes_in_flight.fetch_add(slab.bytes(), Ordering::Relaxed);
+        let sent = self
+            .tx
+            .as_ref()
+            .context("service shut down")
+            .and_then(|tx| {
+                tx.send(Submission::Slab { slab: slab.clone(), first_id, at: now })
+                    .context("service pipeline closed")
+            });
+        if let Err(e) = sent {
+            self.metrics.slab_bytes_in_flight.fetch_sub(slab.bytes(), Ordering::Relaxed);
+            return Err(e);
+        }
+        Ok(first_id..first_id + count)
     }
 
     /// Receive the next completed reduction (blocking with timeout).
@@ -458,6 +566,96 @@ mod tests {
         assert_eq!(m.completed, 40);
         assert_eq!(m.per_shard.len(), 3);
         assert_eq!(m.per_shard.iter().map(|p| p.batches).sum::<u64>(), m.batches);
+    }
+
+    #[test]
+    fn slab_submission_matches_owned_submission_bit_for_bit() {
+        let run = |use_slab: bool, shards: usize| -> Vec<u32> {
+            let mut svc = Service::start(ServiceConfig {
+                engine: EngineKind::Native { batch: 4, n: 16 },
+                batch_deadline: Duration::from_micros(100),
+                ordered: true,
+                queue_depth: 64,
+                shards,
+                ..Default::default()
+            })
+            .unwrap();
+            let mut rng = crate::util::Xoshiro256::seeded(11);
+            let sets: Vec<Vec<f32>> = (0..30)
+                .map(|_| {
+                    let len = rng.range(0, 50);
+                    (0..len).map(|_| (rng.next_f64() as f32 - 0.5) * 100.0).collect()
+                })
+                .collect();
+            if use_slab {
+                for chunk in sets.chunks(8) {
+                    let mut slab = BurstSlab::with_capacity(64, 8);
+                    for set in chunk {
+                        slab.push_set(set);
+                    }
+                    svc.submit_burst_slab(&slab.share()).unwrap();
+                }
+            } else {
+                svc.submit_burst(sets.clone()).unwrap();
+            }
+            let bits: Vec<u32> = (0..30u64)
+                .map(|i| {
+                    let r = svc.recv_timeout(Duration::from_secs(10)).expect("response");
+                    assert_eq!(r.req_id, i, "ordered delivery");
+                    r.sum.to_bits()
+                })
+                .collect();
+            let m = svc.shutdown();
+            assert_eq!(m.completed, 30);
+            assert_eq!(m.slab_bytes_in_flight, 0, "gauge returns to zero after drain");
+            bits
+        };
+        for shards in [1usize, 3] {
+            assert_eq!(run(false, shards), run(true, shards), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn slab_arena_reclaims_after_drain() {
+        let mut svc = Service::start(ServiceConfig {
+            engine: EngineKind::Native { batch: 2, n: 8 },
+            batch_deadline: Duration::from_micros(50),
+            ordered: true,
+            queue_depth: 16,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut slab = BurstSlab::new();
+        slab.push_set(&[1.0, 2.0, 3.0]);
+        slab.push_set(&[4.0]);
+        let shared = slab.share();
+        let ids = svc.submit_burst_slab(&shared).unwrap();
+        assert_eq!(ids, 0..2);
+        for (i, want) in [6.0f32, 4.0].iter().enumerate() {
+            let r = svc.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(r.req_id, i as u64);
+            assert_eq!(r.sum, *want);
+        }
+        // Responses delivered ⇒ the batcher packed the burst; it drops its
+        // reference moments later, after which the arena is reclaimable.
+        let mut shared = shared;
+        let mut arena = None;
+        for _ in 0..2000 {
+            match shared.try_reclaim() {
+                Ok(a) => {
+                    arena = Some(a);
+                    break;
+                }
+                Err(still_shared) => {
+                    shared = still_shared;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        let mut arena = arena.expect("pipeline released the slab");
+        arena.clear();
+        assert_eq!(arena.sets(), 0);
+        svc.shutdown();
     }
 
     #[test]

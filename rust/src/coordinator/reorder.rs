@@ -46,6 +46,13 @@ pub enum ToReorder {
 
 /// Holds out-of-order batch completions until their sequence number is
 /// next; releases runs of consecutive batches in dispatch order.
+///
+/// Hardened against misbehaving producers (and fuzzed in
+/// `tests/reorder_fuzz.rs`): a completion whose sequence number was
+/// already released (late replay) or is already parked (duplicate) is
+/// dropped and counted, never delivered twice — the delivered stream is
+/// always a prefix of the dispatch order, each sequence number exactly
+/// once.
 #[derive(Debug, Default)]
 pub struct ReorderBuffer {
     next_seq: u64,
@@ -53,6 +60,8 @@ pub struct ReorderBuffer {
     /// Peak number of batches parked waiting for an earlier sequence
     /// number — the software analogue of PIS register pressure.
     pub held_high_water: usize,
+    /// Late replays and duplicate sequence numbers dropped.
+    pub duplicates: u64,
 }
 
 impl ReorderBuffer {
@@ -61,11 +70,26 @@ impl ReorderBuffer {
     }
 
     /// Offer one completion; returns every batch now releasable, in
-    /// sequence order (empty while a gap remains).
+    /// sequence order (empty while a gap remains). Late or duplicate
+    /// sequence numbers are dropped (counted in `duplicates`).
     pub fn push(&mut self, done: ShardDone) -> Vec<ShardDone> {
-        debug_assert!(done.seq >= self.next_seq, "sequence number reused");
+        if done.seq < self.next_seq {
+            // Already released: delivering again would violate the
+            // exactly-once contract downstream (the assembler would see a
+            // duplicate chunk).
+            self.duplicates += 1;
+            return Vec::new();
+        }
         if done.seq != self.next_seq {
-            self.held.insert(done.seq, done);
+            use std::collections::btree_map::Entry;
+            match self.held.entry(done.seq) {
+                Entry::Vacant(slot) => {
+                    slot.insert(done);
+                }
+                Entry::Occupied(_) => {
+                    self.duplicates += 1;
+                }
+            }
             self.held_high_water = self.held_high_water.max(self.held.len());
             return Vec::new();
         }
@@ -86,9 +110,15 @@ impl ReorderBuffer {
     /// Drain everything still parked, in sequence order, tolerating gaps —
     /// the shutdown path after all producers hung up (a gap then means a
     /// shard died and its batch is lost; the rest must still deliver).
+    /// `next_seq` advances past everything drained, so a straggler pushed
+    /// afterwards is treated as late, not re-parked.
     pub fn drain(&mut self) -> Vec<ShardDone> {
         let held = std::mem::take(&mut self.held);
-        held.into_values().collect()
+        let out: Vec<ShardDone> = held.into_values().collect();
+        if let Some(last) = out.last() {
+            self.next_seq = self.next_seq.max(last.seq + 1);
+        }
+        out
     }
 }
 
@@ -123,6 +153,7 @@ pub(crate) fn run_reorder(
                     }
                 }
                 metrics.reorder_held_max.fetch_max(rob.held_high_water as u64, Ordering::Relaxed);
+                metrics.reorder_duplicates.store(rob.duplicates, Ordering::Relaxed);
             }
             // All producers (batcher + every shard) hung up: flush whatever
             // is parked — in sequence order, tolerating gaps — and exit.
@@ -176,6 +207,25 @@ mod tests {
         assert!(rob.push(done(3)).is_empty());
         assert!(rob.push(done(1)).is_empty());
         assert_eq!(seqs(&rob.drain()), vec![1, 3]);
+        assert_eq!(rob.held(), 0);
+        // A straggler below the drained horizon counts as late.
+        assert!(rob.push(done(2)).is_empty());
+        assert_eq!(rob.duplicates, 1);
+    }
+
+    #[test]
+    fn late_and_duplicate_sequences_are_dropped_not_redelivered() {
+        let mut rob = ReorderBuffer::new();
+        assert_eq!(seqs(&rob.push(done(0))), vec![0]);
+        // Late replay of an already-released seq.
+        assert!(rob.push(done(0)).is_empty());
+        assert_eq!(rob.duplicates, 1);
+        // Duplicate of a parked seq: first copy wins, second is dropped.
+        assert!(rob.push(done(2)).is_empty());
+        assert!(rob.push(done(2)).is_empty());
+        assert_eq!(rob.duplicates, 2);
+        assert_eq!(rob.held(), 1);
+        assert_eq!(seqs(&rob.push(done(1))), vec![1, 2]);
         assert_eq!(rob.held(), 0);
     }
 }

@@ -9,18 +9,21 @@
 //!   `shards = 1` must not pay for the pool.
 //! - [`run_batcher`] — the dispatch stage of the sharded pipeline: packs
 //!   rows into batches, stamps each with a sequence number, announces every
-//!   request to the reorder stage, and routes batches across the shard
-//!   pool ([`Router`]).
+//!   request to the reorder stage, and routes batches into the shard
+//!   pool's injector deques ([`Router`]).
 //! - [`run_shard`] — one engine worker: owns its own engine instance
 //!   (its own PJRT runtime for XLA — the wrapper types are not `Send`, and
 //!   independent clients avoid any shared-executable serialization) and its
-//!   own reusable output/scratch buffers, executes batches, and forwards
-//!   completions to the reorder stage.
+//!   own reusable output/scratch buffers. It pops its own deque front; when
+//!   idle (and stealing is on) it pulls whole batches from the tail of the
+//!   most-loaded peer ([`StealPool`]), then forwards completions to the
+//!   reorder stage.
 
 use super::batcher::{Batcher, Router, SeqBatch};
 use super::metrics::Metrics;
 use super::reorder::{ShardDone, ToReorder};
-use super::{Batch, EngineKind, SubmitMsg};
+use super::steal::StealPool;
+use super::{Batch, EngineKind, Submission};
 use crate::runtime::Runtime;
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -99,7 +102,7 @@ pub(crate) struct FusedArgs {
     pub deadline: Duration,
     pub ordered: bool,
     pub metrics: Arc<Metrics>,
-    pub rx_in: Receiver<Vec<SubmitMsg>>,
+    pub rx_in: Receiver<Submission>,
     pub tx_out: Sender<Vec<super::Response>>,
     pub tx_ready: SyncSender<std::result::Result<(), String>>,
 }
@@ -149,15 +152,23 @@ pub(crate) fn run_fused(args: FusedArgs) {
 
     loop {
         match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
-            Ok(burst) => {
-                for msg in burst {
-                    asm.expect(msg.req_id, b.chunks_for(msg.values.len()));
-                    birth.insert(msg.req_id, msg.at);
-                    for full in b.add_request(msg.req_id, &msg.values) {
+            Ok(sub) => {
+                let ok = sub.for_each_set(|req_id, values, at| {
+                    asm.expect(req_id, b.chunks_for(values.len()));
+                    birth.insert(req_id, at);
+                    for full in b.add_request(req_id, values) {
                         if !run_batch(full, &mut asm, &mut birth) {
-                            return;
+                            return false;
                         }
                     }
+                    true
+                });
+                let slab_bytes = sub.slab_bytes();
+                if slab_bytes > 0 {
+                    metrics.slab_bytes_in_flight.fetch_sub(slab_bytes, Ordering::Relaxed);
+                }
+                if !ok {
+                    return;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -180,9 +191,22 @@ pub(crate) fn run_fused(args: FusedArgs) {
 /// Dispatch stage of the sharded pipeline. Announces every request to the
 /// reorder stage (`Expect`) *before* dispatching any batch carrying its
 /// rows — the ordering invariant the shared channel preserves — then
-/// routes sequence-stamped batches across the pool.
+/// routes sequence-stamped batches into the pool's deques. Closes the pool
+/// on every exit path so the shard workers drain and join.
 pub(crate) fn run_batcher(
-    rx_in: Receiver<Vec<SubmitMsg>>,
+    rx_in: Receiver<Submission>,
+    b: Batcher,
+    router: Router,
+    tx_reorder: Sender<ToReorder>,
+    metrics: Arc<Metrics>,
+) {
+    let pool = Arc::clone(router.pool());
+    batcher_loop(rx_in, b, router, tx_reorder, metrics);
+    pool.close();
+}
+
+fn batcher_loop(
+    rx_in: Receiver<Submission>,
     mut b: Batcher,
     mut router: Router,
     tx_reorder: Sender<ToReorder>,
@@ -199,21 +223,29 @@ pub(crate) fn run_batcher(
     };
     loop {
         match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
-            Ok(burst) => {
-                for msg in burst {
+            Ok(sub) => {
+                let ok = sub.for_each_set(|req_id, values, at| {
                     let announce = ToReorder::Expect {
-                        req_id: msg.req_id,
-                        chunks: b.chunks_for(msg.values.len()),
-                        at: msg.at,
+                        req_id,
+                        chunks: b.chunks_for(values.len()),
+                        at,
                     };
                     if tx_reorder.send(announce).is_err() {
-                        return;
+                        return false;
                     }
-                    for full in b.add_request(msg.req_id, &msg.values) {
+                    for full in b.add_request(req_id, values) {
                         if !dispatch(full, &mut router) {
-                            return;
+                            return false;
                         }
                     }
+                    true
+                });
+                let slab_bytes = sub.slab_bytes();
+                if slab_bytes > 0 {
+                    metrics.slab_bytes_in_flight.fetch_sub(slab_bytes, Ordering::Relaxed);
+                }
+                if !ok {
+                    return;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -233,29 +265,58 @@ pub(crate) fn run_batcher(
     }
 }
 
+/// Everything a shard engine worker needs (one struct: the arg list was
+/// past clippy's limit even before stealing).
+pub(crate) struct ShardArgs {
+    pub shard: usize,
+    pub engine: EngineKind,
+    pub n: usize,
+    pub pool: Arc<StealPool>,
+    /// Steal from peers when idle (`ServiceConfig::steal`).
+    pub steal: bool,
+    pub tx_done: Sender<ToReorder>,
+    pub metrics: Arc<Metrics>,
+    /// Test/bench knob: upper bound (µs) on random per-batch jitter.
+    pub jitter_us: u64,
+    /// Test/bench knob: fixed per-batch stall (µs) — the noisy-neighbor /
+    /// slow-engine model the stealing bench and stress tests skew with.
+    pub stall_us: u64,
+    /// Test knob: simulate an engine failure after this many successful
+    /// batches.
+    pub fail_after: Option<u64>,
+    pub dead: Arc<Vec<std::sync::atomic::AtomicBool>>,
+    pub tx_ready: SyncSender<std::result::Result<(), String>>,
+}
+
 /// One engine worker of the shard pool.
 ///
 /// On an engine failure the worker does NOT leave a hole in the sequence
 /// stream (which would park the reorder buffer forever): it flags itself
-/// dead so the router stops choosing it, then reports the failed batch —
-/// and any batch that raced into its queue — with **NaN partial sums** for
-/// its rows, and idles until shutdown. The affected requests therefore
-/// still complete (in order, with an unmistakably-poisoned NaN sum rather
-/// than silence), later responses are not stalled behind them, and the
-/// loss is counted in `engine_failures` while the remaining shards keep
-/// serving.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run_shard(
-    shard: usize,
-    engine: EngineKind,
-    n: usize,
-    rx: Receiver<SeqBatch>,
-    tx_done: Sender<ToReorder>,
-    metrics: Arc<Metrics>,
-    jitter_us: u64,
-    dead: Arc<Vec<std::sync::atomic::AtomicBool>>,
-    tx_ready: SyncSender<std::result::Result<(), String>>,
-) {
+/// dead so the router stops choosing it, stops stealing, and completes the
+/// failed batch — and everything left on its own deque — with **NaN
+/// partial sums** for its rows. The affected requests therefore still
+/// complete (in order, with an unmistakably-poisoned NaN sum rather than
+/// silence), later responses are not stalled behind them, and the loss is
+/// counted in `engine_failures` while the remaining shards keep serving.
+/// With stealing enabled, live peers may rescue batches off the dead
+/// shard's deque before its drain reaches them — the deque lock makes the
+/// two takes mutually exclusive, so each batch resolves exactly once,
+/// either executed properly by a thief or poisoned by the owner.
+pub(crate) fn run_shard(args: ShardArgs) {
+    let ShardArgs {
+        shard,
+        engine,
+        n,
+        pool,
+        steal,
+        tx_done,
+        metrics,
+        jitter_us,
+        stall_us,
+        fail_after,
+        dead,
+        tx_ready,
+    } = args;
     let mut eng = match Engine::create(&engine, n) {
         Ok(e) => e,
         Err(e) => {
@@ -266,52 +327,95 @@ pub(crate) fn run_shard(
     if tx_ready.send(Ok(())).is_err() {
         return;
     }
+    // An abnormal death (panic) must not leave a deque that silently
+    // accepts work no one will ever drain — the batcher would park in
+    // push_blocking forever and ordered delivery would wedge behind the
+    // lost sequence numbers. Flag the shard dead and close the pool so
+    // the teardown is observable, like the old per-shard channel's
+    // Disconnected error was.
+    struct PanicGuard {
+        shard: usize,
+        pool: Arc<StealPool>,
+        dead: Arc<Vec<std::sync::atomic::AtomicBool>>,
+    }
+    impl Drop for PanicGuard {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.dead[self.shard].store(true, Ordering::Relaxed);
+                self.pool.close();
+            }
+        }
+    }
+    let _panic_guard =
+        PanicGuard { shard, pool: Arc::clone(&pool), dead: Arc::clone(&dead) };
     let mut rng = crate::util::Xoshiro256::seeded(0xC0FFEE ^ shard as u64);
-    while let Ok(SeqBatch { seq, batch }) = rx.recv() {
+    let poison = |seq: u64, batch: Batch| ShardDone {
+        seq,
+        shard,
+        sums: vec![f32::NAN; batch.rows.len()],
+        rows: batch.rows,
+    };
+    // A failed completion send means the reorder stage is gone (teardown,
+    // or it died): close the pool before exiting so the batcher can never
+    // park in `push_blocking` on a deque no worker will drain again. (The
+    // old per-shard mpsc design got this for free as a Disconnected error
+    // on the batcher's send.)
+    let send_done = |done: ShardDone| -> bool {
+        if tx_done.send(ToReorder::Done(done)).is_ok() {
+            true
+        } else {
+            pool.close();
+            false
+        }
+    };
+    let mut executed = 0u64;
+    let mut failed = false;
+    while let Some(SeqBatch { seq, batch }) = pool.pop(shard, steal && !failed) {
+        if !failed && fail_after == Some(executed) {
+            eprintln!("shard {shard}: injected engine failure after {executed} batches");
+            dead[shard].store(true, Ordering::Relaxed);
+            failed = true;
+        }
+        if failed {
+            // Drain-and-report: batches already on (or racing into) this
+            // shard's deque must still close their sequence numbers.
+            metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
+            if !send_done(poison(seq, batch)) {
+                return;
+            }
+            continue;
+        }
         let t_exec = Instant::now();
         let sums = match eng.run(&batch) {
             Ok(s) => s[..batch.rows.len()].to_vec(),
             Err(e) => {
                 eprintln!("shard {shard}: execute failed: {e:#}");
                 dead[shard].store(true, Ordering::Relaxed);
-                let poison = |b: Batch| ShardDone {
-                    seq: 0, // caller overwrites
-                    shard,
-                    sums: vec![f32::NAN; b.rows.len()],
-                    rows: b.rows,
-                };
+                failed = true;
                 metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
-                let done = ShardDone { seq, ..poison(batch) };
-                if tx_done.send(ToReorder::Done(done)).is_err() {
+                if !send_done(poison(seq, batch)) {
                     return;
                 }
-                // Drain-and-report until shutdown: batches dispatched
-                // before the dead flag was observed must still close
-                // their sequence numbers (and complete their requests,
-                // poisoned).
-                while let Ok(SeqBatch { seq, batch }) = rx.recv() {
-                    metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
-                    let done = ShardDone { seq, ..poison(batch) };
-                    if tx_done.send(ToReorder::Done(done)).is_err() {
-                        return;
-                    }
-                }
-                return;
+                continue;
             }
         };
+        executed += 1;
         metrics.record_batch(
             shard,
             batch.rows.len() as u64,
             batch_values(&batch),
             t_exec.elapsed().as_nanos() as u64,
         );
+        if stall_us > 0 {
+            // Test/bench knob: model a slow engine / noisy neighbor.
+            std::thread::sleep(Duration::from_micros(stall_us));
+        }
         if jitter_us > 0 {
             // Test/bench knob: skew shard completion times to exercise the
             // reorder buffer.
             std::thread::sleep(Duration::from_micros(rng.next_below(jitter_us)));
         }
-        let done = ShardDone { seq, shard, rows: batch.rows, sums };
-        if tx_done.send(ToReorder::Done(done)).is_err() {
+        if !send_done(ShardDone { seq, shard, rows: batch.rows, sums }) {
             return;
         }
     }

@@ -1,0 +1,201 @@
+//! Zero-copy burst submission: one caller-owned `f32` arena per burst.
+//!
+//! `submit_burst(Vec<Vec<f32>>)` costs one heap allocation **per set** on
+//! the client's hot path (plus one more when the batcher staged rows).
+//! High-throughput clients instead build a [`BurstSlab`] — every set's
+//! values appended into one contiguous arena, described by [`SetView`]
+//! offsets — and submit it with
+//! [`submit_burst_slab`](crate::coordinator::Service::submit_burst_slab):
+//! the service clones an `Arc` (O(1)) and the batcher packs rows straight
+//! from the shared arena into engine batches. Zero per-set allocation from
+//! the CLI/bench down to the shard worker; the only copy left is the one
+//! the engine's padded `[B, N]` layout requires.
+//!
+//! The arena is reusable: once the pipeline has packed the burst it drops
+//! its reference, and [`SlabRef::try_reclaim`] hands the allocation back.
+//!
+//! ```
+//! use jugglepac::coordinator::BurstSlab;
+//! let mut slab = BurstSlab::new();
+//! slab.push_set(&[1.0, 2.0]);
+//! slab.begin_set();
+//! slab.push_value(3.0); // e.g. streamed straight from a generator
+//! slab.end_set();
+//! let shared = slab.share();
+//! assert_eq!(shared.sets(), 2);
+//! assert_eq!(shared.set(1), &[3.0]);
+//! let mut arena = shared.try_reclaim().expect("sole owner");
+//! arena.clear(); // capacity retained for the next burst
+//! assert_eq!(arena.sets(), 0);
+//! ```
+
+use std::sync::Arc;
+
+/// One set inside a slab: `len` values starting at `offset` in the arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SetView {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl SetView {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// A burst of sets packed into one contiguous `f32` arena (builder side).
+#[derive(Clone, Debug, Default)]
+pub struct BurstSlab {
+    data: Vec<f32>,
+    views: Vec<SetView>,
+    /// Arena offset of the set currently being built, if any.
+    open: Option<usize>,
+}
+
+impl BurstSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the arena (`values` total f32s across `sets` sets).
+    pub fn with_capacity(values: usize, sets: usize) -> Self {
+        Self {
+            data: Vec::with_capacity(values),
+            views: Vec::with_capacity(sets),
+            open: None,
+        }
+    }
+
+    /// Drop all sets, retaining both allocations for the next burst.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.views.clear();
+        self.open = None;
+    }
+
+    /// Append a whole set (one `copy_from_slice` into the arena).
+    pub fn push_set(&mut self, values: &[f32]) {
+        debug_assert!(self.open.is_none(), "push_set inside an open begin_set");
+        self.views.push(SetView { offset: self.data.len(), len: values.len() });
+        self.data.extend_from_slice(values);
+    }
+
+    /// Start a set built value-by-value (allocation-free generation: the
+    /// values never exist anywhere but the arena).
+    pub fn begin_set(&mut self) {
+        debug_assert!(self.open.is_none(), "begin_set while a set is open");
+        self.open = Some(self.data.len());
+    }
+
+    /// Append one value to the set opened by [`begin_set`](Self::begin_set).
+    pub fn push_value(&mut self, v: f32) {
+        debug_assert!(self.open.is_some(), "push_value without begin_set");
+        self.data.push(v);
+    }
+
+    /// Close the open set.
+    pub fn end_set(&mut self) {
+        let offset = self.open.take().expect("end_set without begin_set");
+        self.views.push(SetView { offset, len: self.data.len() - offset });
+    }
+
+    pub fn sets(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn total_values(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Seal the burst for submission. The builder is consumed: sharing and
+    /// mutation are mutually exclusive by construction.
+    pub fn share(self) -> SlabRef {
+        assert!(self.open.is_none(), "share with an unclosed set (missing end_set)");
+        SlabRef(Arc::new(self))
+    }
+}
+
+/// A sealed, shared, immutable slab — cheap to clone (`Arc`). The service
+/// holds one clone until the batcher has packed every set.
+#[derive(Clone, Debug)]
+pub struct SlabRef(Arc<BurstSlab>);
+
+impl SlabRef {
+    pub fn sets(&self) -> usize {
+        self.0.views.len()
+    }
+
+    pub fn views(&self) -> &[SetView] {
+        &self.0.views
+    }
+
+    /// The values of set `i`, borrowed straight from the arena.
+    pub fn set(&self, i: usize) -> &[f32] {
+        &self.0.data[self.0.views[i].range()]
+    }
+
+    pub fn total_values(&self) -> usize {
+        self.0.data.len()
+    }
+
+    /// Arena bytes this burst keeps in flight while the pipeline holds it
+    /// (the `slab_bytes_in_flight` metric's unit of account).
+    pub fn bytes(&self) -> u64 {
+        (self.0.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Take the arena back for reuse once every pipeline reference is
+    /// dropped (i.e. the burst has been packed); `Err(self)` while the
+    /// service still holds it.
+    pub fn try_reclaim(self) -> Result<BurstSlab, SlabRef> {
+        Arc::try_unwrap(self.0).map_err(SlabRef)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_index_the_arena() {
+        let mut s = BurstSlab::with_capacity(8, 3);
+        s.push_set(&[1.0, 2.0, 3.0]);
+        s.push_set(&[]);
+        s.begin_set();
+        s.push_value(4.0);
+        s.push_value(5.0);
+        s.end_set();
+        assert_eq!(s.sets(), 3);
+        assert_eq!(s.total_values(), 5);
+        let r = s.share();
+        assert_eq!(r.set(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(r.set(1), &[] as &[f32]);
+        assert_eq!(r.set(2), &[4.0, 5.0]);
+        assert_eq!(r.views()[2], SetView { offset: 3, len: 2 });
+        assert_eq!(r.bytes(), 20);
+    }
+
+    #[test]
+    fn reclaim_returns_the_arena_only_when_sole_owner() {
+        let mut s = BurstSlab::new();
+        s.push_set(&[1.0]);
+        let r = s.share();
+        let r2 = r.clone();
+        let r = r.try_reclaim().expect_err("two owners");
+        drop(r2);
+        let mut back = r.try_reclaim().expect("sole owner again");
+        back.clear();
+        assert_eq!(back.sets(), 0);
+        assert_eq!(back.total_values(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed set")]
+    fn share_rejects_unclosed_set() {
+        let mut s = BurstSlab::new();
+        s.begin_set();
+        s.push_value(1.0);
+        let _ = s.share();
+    }
+}

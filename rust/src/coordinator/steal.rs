@@ -1,0 +1,342 @@
+//! Work-stealing shard queues — the dispatch fabric of the engine pool.
+//!
+//! PR 2's pool fed each shard worker through its own bounded channel:
+//! once a batch landed in a queue it was pinned to that shard, so one slow
+//! shard (GC pause, noisy neighbor, stalled engine) sat on a queue of work
+//! while its peers idled. This module replaces the channels with per-shard
+//! **injector deques** plus a stealing protocol:
+//!
+//! - the batcher pushes to the back of its round-robin target's deque
+//!   (spilling past full queues exactly as before — see
+//!   [`Router`](crate::coordinator::Router));
+//! - a worker pops its **own** deque from the front (FIFO, oldest first);
+//! - an **idle** worker steals a whole packed batch from the **tail** of
+//!   the most-loaded peer — the youngest work, which the victim would have
+//!   reached last, so steals and owner pops almost never contend on the
+//!   same element.
+//!
+//! Stealing moves only *where* a batch executes. Every batch keeps the
+//! sequence number the batcher stamped, completions still merge through
+//! the [`ReorderBuffer`](crate::coordinator::ReorderBuffer), and each
+//! batch's internal reduction tree is untouched — so ordered delivery and
+//! bit-identical sums hold at every shard count, stealing on or off (the
+//! `shard_ordering` and `steal_stress` suites prove it).
+//!
+//! Built on `std` only (the offline crate set has no crossbeam): each
+//! deque is a `Mutex<VecDeque>`; a pool-wide generation counter + condvar
+//! lets an idle worker park without losing a push-wakeup (the counter is
+//! bumped under the lock on every push, so a scan-then-park race re-scans
+//! instead of sleeping through new work).
+
+use super::batcher::SeqBatch;
+use super::metrics::Metrics;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct ShardQueue {
+    q: Mutex<VecDeque<SeqBatch>>,
+    /// Capacity waiters: a pusher blocked on a full queue parks here;
+    /// every pop (owner or thief) and `close` signal it.
+    space: Condvar,
+}
+
+/// The shared per-shard injector deques (see module docs).
+pub struct StealPool {
+    queues: Vec<ShardQueue>,
+    /// Bounded depth per deque — the service's backpressure point.
+    depth: usize,
+    closed: AtomicBool,
+    /// Work-arrival generation: bumped under the lock on every push and on
+    /// close, so `pop` can scan queues unlocked and still park race-free.
+    work: Mutex<u64>,
+    work_cv: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for StealPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StealPool")
+            .field("shards", &self.queues.len())
+            .field("depth", &self.depth)
+            .field("closed", &self.is_closed())
+            .finish()
+    }
+}
+
+impl StealPool {
+    /// A pool of `shards` deques, each bounded to `depth` batches.
+    pub fn new(shards: usize, depth: usize, metrics: Arc<Metrics>) -> Arc<Self> {
+        assert!(shards >= 1 && depth >= 1);
+        Arc::new(Self {
+            queues: (0..shards)
+                .map(|_| ShardQueue { q: Mutex::new(VecDeque::new()), space: Condvar::new() })
+                .collect(),
+            depth,
+            closed: AtomicBool::new(false),
+            work: Mutex::new(0),
+            work_cv: Condvar::new(),
+            metrics,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Batches currently queued on `shard` (racy snapshot; tests/metrics).
+    pub fn len(&self, shard: usize) -> usize {
+        self.queues[shard].q.lock().unwrap().len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    fn bump_work(&self) {
+        let mut generation = self.work.lock().unwrap();
+        *generation = generation.wrapping_add(1);
+        self.work_cv.notify_all();
+    }
+
+    /// Non-blocking push to `shard`'s deque; `Err` returns the batch when
+    /// the queue is full or the pool is closed (the router spills on).
+    pub fn try_push(&self, shard: usize, batch: SeqBatch) -> Result<(), SeqBatch> {
+        if self.is_closed() {
+            return Err(batch);
+        }
+        {
+            let mut q = self.queues[shard].q.lock().unwrap();
+            if q.len() >= self.depth {
+                return Err(batch);
+            }
+            q.push_back(batch);
+        }
+        self.bump_work();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space on `shard`'s deque (backpressure).
+    /// `Err` returns the batch only if the pool closes while waiting.
+    pub fn push_blocking(&self, shard: usize, batch: SeqBatch) -> Result<(), SeqBatch> {
+        let sq = &self.queues[shard];
+        let mut q = sq.q.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return Err(batch);
+            }
+            if q.len() < self.depth {
+                q.push_back(batch);
+                drop(q);
+                self.bump_work();
+                return Ok(());
+            }
+            q = sq.space.wait(q).unwrap();
+        }
+    }
+
+    /// No more pushes: wake every parked worker and pusher. Workers drain
+    /// what remains and [`pop`](Self::pop) then returns `None`.
+    ///
+    /// Unlike the single-pusher shutdown path (the batcher closing after
+    /// its own loop), a *worker* may close the pool concurrently with the
+    /// batcher sitting in [`push_blocking`](Self::push_blocking) — so the
+    /// capacity notify must be sent while holding each queue's lock, or it
+    /// could fire in the window between the pusher's `is_closed` check and
+    /// its `wait`, losing the wakeup forever.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.bump_work();
+        for sq in &self.queues {
+            let _guard = sq.q.lock().unwrap();
+            sq.space.notify_all();
+        }
+    }
+
+    fn pop_own(&self, me: usize) -> Option<SeqBatch> {
+        let mut q = self.queues[me].q.lock().unwrap();
+        let b = q.pop_front();
+        if b.is_some() {
+            drop(q);
+            self.queues[me].space.notify_all();
+        }
+        b
+    }
+
+    /// One steal attempt: victim is the currently most-loaded peer, taken
+    /// from the tail. Counts `steals` on success; a victim emptied by a
+    /// race between the scan and the take counts a `steal_miss`.
+    fn try_steal(&self, me: usize) -> Option<SeqBatch> {
+        let mut victim = None;
+        let mut victim_len = 0usize;
+        for (j, sq) in self.queues.iter().enumerate() {
+            if j == me {
+                continue;
+            }
+            let len = sq.q.lock().unwrap().len();
+            if len > victim_len {
+                victim_len = len;
+                victim = Some(j);
+            }
+        }
+        let j = victim?;
+        let taken = self.queues[j].q.lock().unwrap().pop_back();
+        match taken {
+            Some(b) => {
+                self.queues[j].space.notify_all();
+                self.metrics.steals.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            None => {
+                self.metrics.steal_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn drained(&self, me: usize, steal: bool) -> bool {
+        if steal {
+            self.queues.iter().all(|sq| sq.q.lock().unwrap().is_empty())
+        } else {
+            self.queues[me].q.lock().unwrap().is_empty()
+        }
+    }
+
+    /// Blocking pop for worker `me`: own deque front first, then (when
+    /// `steal`) the tail of the most-loaded peer. Returns `None` once the
+    /// pool is closed and every deque this worker may draw from is empty.
+    ///
+    /// A worker that stopped stealing (dead engine draining its own queue
+    /// poisoned) passes `steal = false` and exits as soon as its own deque
+    /// is done — its remaining batches may meanwhile be rescued by live
+    /// thieves; the deque mutex makes pop and steal mutually exclusive, so
+    /// every batch is taken exactly once either way.
+    pub fn pop(&self, me: usize, steal: bool) -> Option<SeqBatch> {
+        loop {
+            let generation = *self.work.lock().unwrap();
+            if let Some(b) = self.pop_own(me) {
+                return Some(b);
+            }
+            if steal {
+                if let Some(b) = self.try_steal(me) {
+                    return Some(b);
+                }
+            }
+            if self.is_closed() {
+                if self.drained(me, steal) {
+                    return None;
+                }
+                // Another worker holds the last batches mid-pop; re-scan.
+                std::thread::yield_now();
+                continue;
+            }
+            // Park until a push bumps the generation (or a grace timeout —
+            // belt and suspenders; every steal opportunity starts with a
+            // push, and every push bumps the counter).
+            let guard = self.work.lock().unwrap();
+            if *guard != generation {
+                continue;
+            }
+            let _unused = self.work_cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Batch;
+
+    fn pool(shards: usize, depth: usize) -> (Arc<StealPool>, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new(shards));
+        (StealPool::new(shards, depth, Arc::clone(&m)), m)
+    }
+
+    fn b(seq: u64) -> SeqBatch {
+        SeqBatch { seq, batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] } }
+    }
+
+    #[test]
+    fn own_pops_are_fifo() {
+        let (p, _) = pool(2, 4);
+        p.try_push(0, b(0)).unwrap();
+        p.try_push(0, b(1)).unwrap();
+        p.try_push(0, b(2)).unwrap();
+        assert_eq!(p.pop(0, true).unwrap().seq, 0);
+        assert_eq!(p.pop(0, false).unwrap().seq, 1);
+        assert_eq!(p.len(0), 1);
+    }
+
+    #[test]
+    fn try_push_bounds_at_depth() {
+        let (p, _) = pool(1, 2);
+        p.try_push(0, b(0)).unwrap();
+        p.try_push(0, b(1)).unwrap();
+        let back = p.try_push(0, b(2)).unwrap_err();
+        assert_eq!(back.seq, 2);
+        assert_eq!(p.len(0), 2);
+    }
+
+    #[test]
+    fn idle_worker_steals_tail_of_most_loaded_peer() {
+        let (p, m) = pool(3, 8);
+        p.try_push(0, b(0)).unwrap();
+        p.try_push(0, b(1)).unwrap();
+        p.try_push(0, b(2)).unwrap();
+        p.try_push(2, b(3)).unwrap();
+        // Worker 1 is idle: victim is shard 0 (len 3 > 1), taken from the
+        // tail (youngest).
+        assert_eq!(p.pop(1, true).unwrap().seq, 2);
+        assert_eq!(m.snapshot().steals, 1);
+        // Owner still sees its oldest work first.
+        assert_eq!(p.pop(0, true).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn non_stealing_worker_exits_on_close_with_peer_work_left() {
+        let (p, _) = pool(2, 4);
+        p.try_push(0, b(0)).unwrap();
+        p.close();
+        assert!(p.try_push(1, b(1)).is_err(), "closed pool rejects pushes");
+        // Worker 1 (steal off) exits even though shard 0 holds a batch...
+        assert!(p.pop(1, false).is_none());
+        // ...which worker 0 (or a thief) still drains before exiting.
+        assert_eq!(p.pop(0, true).unwrap().seq, 0);
+        assert!(p.pop(0, true).is_none());
+    }
+
+    #[test]
+    fn stealing_worker_drains_everything_before_exit() {
+        let (p, m) = pool(2, 4);
+        p.try_push(0, b(0)).unwrap();
+        p.try_push(0, b(1)).unwrap();
+        p.close();
+        assert_eq!(p.pop(1, true).unwrap().seq, 1);
+        assert_eq!(p.pop(1, true).unwrap().seq, 0);
+        assert!(p.pop(1, true).is_none());
+        assert_eq!(m.snapshot().steals, 2);
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop() {
+        let (p, _) = pool(1, 1);
+        p.try_push(0, b(0)).unwrap();
+        let p2 = Arc::clone(&p);
+        let pusher = std::thread::spawn(move || p2.push_blocking(0, b(1)).is_ok());
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(p.pop(0, false).unwrap().seq, 0);
+        assert!(pusher.join().unwrap(), "blocked push completes after a pop");
+        assert_eq!(p.pop(0, false).unwrap().seq, 1);
+    }
+
+    #[test]
+    fn parked_worker_wakes_on_push() {
+        let (p, _) = pool(2, 4);
+        let p2 = Arc::clone(&p);
+        let worker = std::thread::spawn(move || p2.pop(1, true).map(|s| s.seq));
+        std::thread::sleep(Duration::from_millis(5));
+        p.try_push(0, b(7)).unwrap(); // lands on a peer; thief wakes
+        assert_eq!(worker.join().unwrap(), Some(7));
+    }
+}

@@ -43,7 +43,7 @@ pub mod dag;
 pub mod pis;
 
 pub use dag::{Dag, Node, Operator};
-pub use pis::{ExpiredOutput, Held, PairEntry, Pis, ReceiveOutcome};
+pub use pis::{ExpiredOutput, Held, LabelOutOfRange, PairEntry, Pis, ReceiveOutcome};
 
 use crate::cycle::{Clocked, CycleStats, ShiftRegister, Trace, TraceEvent};
 use crate::fp::{FpFormat, PipelinedOp, F64};
@@ -298,11 +298,19 @@ impl JugglePac {
         let mut received_label = None;
         if tag.in_en {
             let bits = adder_out.expect("inEn set but adder pipeline empty");
-            let paired_with = self.pis.reg(tag.label).copied();
-            let outcome = self.pis.receive(
-                tag.label,
-                Held { bits, node: tag.node, set_id: tag.set_id },
-            );
+            // Labels here come off the shift register, whose width is the
+            // register count — in-range by construction (out-of-range is a
+            // typed error for external PIS drivers, see
+            // [`pis::LabelOutOfRange`]).
+            let paired_with = self
+                .pis
+                .reg(tag.label)
+                .expect("shift-register label within the PIS register file")
+                .copied();
+            let outcome = self
+                .pis
+                .receive(tag.label, Held { bits, node: tag.node, set_id: tag.set_id })
+                .expect("shift-register label within the PIS register file");
             received_label = Some(tag.label);
             if let Some(ev) = ev.as_mut() {
                 ev.adder_out = Some((self.dag.symbol(tag.node), tag.label as u64 + 1));
@@ -418,7 +426,10 @@ impl JugglePac {
         if let Some(mut e) = ev {
             e.cycle = self.cycle;
             e.regs = (0..self.pis.registers())
-                .map(|i| self.pis.reg(i as u8).map(|h| self.dag.symbol(h.node)))
+                .map(|i| {
+                    let held = self.pis.reg(i as u8).expect("register index in range");
+                    held.map(|h| self.dag.symbol(h.node))
+                })
                 .collect();
             self.trace.as_mut().unwrap().record(e);
         }

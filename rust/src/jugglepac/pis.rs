@@ -49,6 +49,29 @@ pub struct ExpiredOutput {
     pub label: u8,
 }
 
+/// A label outside the PIS register file (paper design space: 2–8
+/// registers). The hardware's label bus is sized exactly to the register
+/// count so this cannot happen in-circuit; a software driver handing the
+/// model an arbitrary `u8` used to index out of bounds (panic) — it now
+/// gets a typed error instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LabelOutOfRange {
+    pub label: u8,
+    pub registers: usize,
+}
+
+impl std::fmt::Display for LabelOutOfRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PIS label {} out of range: the register file holds {} labels",
+            self.label, self.registers
+        )
+    }
+}
+
+impl std::error::Error for LabelOutOfRange {}
+
 #[derive(Clone, Debug)]
 pub struct Pis {
     regs: Vec<Option<Held>>,
@@ -93,16 +116,29 @@ impl Pis {
         self.regs.len()
     }
 
-    /// Peek at a register's contents (trace/debug).
-    pub fn reg(&self, label: u8) -> Option<&Held> {
-        self.regs[label as usize].as_ref()
+    fn check_label(&self, label: u8) -> Result<(), LabelOutOfRange> {
+        if (label as usize) < self.regs.len() {
+            Ok(())
+        } else {
+            Err(LabelOutOfRange { label, registers: self.regs.len() })
+        }
+    }
+
+    /// Peek at a register's contents (trace/debug). Labels beyond the
+    /// register file are rejected, not indexed.
+    pub fn reg(&self, label: u8) -> Result<Option<&Held>, LabelOutOfRange> {
+        self.check_label(label)?;
+        Ok(self.regs[label as usize].as_ref())
     }
 
     /// An adder result arrives with its label (from the shift register).
-    /// Combinational phase; the FIFO push commits at `tick`.
-    pub fn receive(&mut self, label: u8, v: Held) -> ReceiveOutcome {
+    /// Combinational phase; the FIFO push commits at `tick`. A label ≥
+    /// `registers` is rejected with a typed error and leaves every
+    /// register, counter, and the FIFO untouched.
+    pub fn receive(&mut self, label: u8, v: Held) -> Result<ReceiveOutcome, LabelOutOfRange> {
+        self.check_label(label)?;
         let slot = &mut self.regs[label as usize];
-        match slot.take() {
+        Ok(match slot.take() {
             Some(prev) => {
                 if prev.set_id != v.set_id {
                     // The hardware pairs on label alone; crossing sets is
@@ -116,7 +152,7 @@ impl Pis {
                 *slot = Some(v);
                 ReceiveOutcome::Stored
             }
-        }
+        })
     }
 
     /// One cycle of Algorithm 2: reset the counter of the label that just
@@ -187,9 +223,9 @@ mod tests {
     #[test]
     fn store_then_pair() {
         let mut p = Pis::new(4, 14, 4);
-        assert_eq!(p.receive(1, held(10, 0)), ReceiveOutcome::Stored);
+        assert_eq!(p.receive(1, held(10, 0)).unwrap(), ReceiveOutcome::Stored);
         assert_eq!(p.occupancy(), 1);
-        assert_eq!(p.receive(1, held(20, 0)), ReceiveOutcome::Paired);
+        assert_eq!(p.receive(1, held(20, 0)).unwrap(), ReceiveOutcome::Paired);
         assert_eq!(p.occupancy(), 0);
         p.tick();
         let pair = p.ready_pair().unwrap();
@@ -203,7 +239,7 @@ mod tests {
         let latency = 2;
         let mut p = Pis::new(2, latency, 4);
         let mut outs = Vec::new();
-        p.receive(0, held(42, 0));
+        p.receive(0, held(42, 0)).unwrap();
         p.step_counters(Some(0), &mut outs);
         assert!(outs.is_empty());
         // window = L+3 = 5: after 5 more counter steps the value flushes.
@@ -224,13 +260,13 @@ mod tests {
     fn receive_resets_counter() {
         let mut p = Pis::new(2, 2, 4);
         let mut outs = Vec::new();
-        p.receive(0, held(1, 0));
+        p.receive(0, held(1, 0)).unwrap();
         p.step_counters(Some(0), &mut outs);
         for _ in 0..3 {
             p.step_counters(None, &mut outs);
         }
         // partner arrives just before expiry: pairs, no output
-        assert_eq!(p.receive(0, held(2, 0)), ReceiveOutcome::Paired);
+        assert_eq!(p.receive(0, held(2, 0)).unwrap(), ReceiveOutcome::Paired);
         p.step_counters(Some(0), &mut outs);
         assert!(outs.is_empty());
         for _ in 0..20 {
@@ -254,8 +290,27 @@ mod tests {
         // Below the minimum set length the hardware mixes sets (paper
         // §IV-B); the model must reproduce that, not abort.
         let mut p = Pis::new(2, 14, 4);
-        p.receive(0, held(1, 0));
-        assert_eq!(p.receive(0, held(2, 99)), ReceiveOutcome::Paired);
+        p.receive(0, held(1, 0)).unwrap();
+        assert_eq!(p.receive(0, held(2, 99)).unwrap(), ReceiveOutcome::Paired);
         assert_eq!(p.collisions, 1);
+    }
+
+    /// Regression: the paper's largest register file is 8; label 8 is the
+    /// first out-of-range value and used to index out of bounds.
+    #[test]
+    fn labels_beyond_the_register_file_are_rejected() {
+        let mut p = Pis::new(8, 14, 4);
+        assert_eq!(p.receive(7, held(1, 0)).unwrap(), ReceiveOutcome::Stored);
+        let err = p.receive(8, held(2, 0)).unwrap_err();
+        assert_eq!(err, LabelOutOfRange { label: 8, registers: 8 });
+        assert_eq!(p.reg(8).unwrap_err(), err);
+        assert_eq!(p.reg(255).unwrap_err().label, 255);
+        assert_eq!(format!("{err}"), "PIS label 8 out of range: the register file holds 8 labels");
+        // The rejected receive must not have disturbed in-range state.
+        assert_eq!(p.occupancy(), 1);
+        assert!(p.reg(7).unwrap().is_some());
+        let mut outs = Vec::new();
+        p.step_counters(None, &mut outs);
+        assert!(outs.is_empty());
     }
 }

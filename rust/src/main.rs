@@ -54,7 +54,8 @@ USAGE: jugglepac <subcommand> [options]
              [--provenance full|off]
   intac      [--sets S] [--len N] [--inputs I] [--fas K]
   serve      [--sets S] [--max-len N] [--engine xla|native|softfp]
-             [--shards K] [--seed X]
+             [--shards K] [--steal on|off] [--stall0 US] [--zipf]
+             [--seed X]
   artifacts  [--dir PATH]";
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -213,11 +214,16 @@ fn cmd_intac(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+    use jugglepac::coordinator::{BurstSlab, EngineKind, Service, ServiceConfig};
     use jugglepac::util::Xoshiro256;
+    use jugglepac::workload::ZipfTable;
     let sets = args.get_usize("sets", 2000)?;
     let max_len = args.get_usize("max-len", 700)?;
     let shards = args.get_usize("shards", 1)?.max(1);
+    let steal = args.get_switch("steal", true)?;
+    // Noisy-neighbor knob: a fixed per-batch stall (µs) on shard 0, the
+    // skewed-load case stealing is built to recover.
+    let stall0 = args.get_u64("stall0", 0)?;
     let engine = match args.get_or("engine", "xla") {
         "xla" => EngineKind::Xla {
             artifacts_dir: jugglepac::runtime::default_artifacts_dir(),
@@ -227,24 +233,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "softfp" => EngineKind::SoftFp { batch: 8, n: 256 },
         other => bail!("--engine must be xla|native|softfp, got {other:?}"),
     };
-    let mut svc = Service::start(ServiceConfig { engine, shards, ..Default::default() })?;
+    // Zipf lengths (skewed-load mix) via a prebuilt weight table: one
+    // O(max) build, O(log max) per draw.
+    let zipf = args.flag("zipf").then(|| ZipfTable::new(max_len, 1.1));
+    let mut svc = Service::start(ServiceConfig {
+        engine,
+        shards,
+        steal,
+        shard_stall_us: if stall0 > 0 { vec![stall0] } else { Vec::new() },
+        ..Default::default()
+    })?;
     let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
     let t0 = std::time::Instant::now();
     let mut want = Vec::with_capacity(sets);
-    // Submit in bursts: one channel wake per 128 sets (see coordinator
-    // docs — per-message wakes dominate on small machines).
-    let mut burst: Vec<Vec<f32>> = Vec::with_capacity(128);
-    for _ in 0..sets {
-        let n = rng.range(1, max_len);
-        let set: Vec<f32> = (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
-        want.push(set.iter().sum::<f32>());
-        burst.push(set);
-        if burst.len() == 128 {
-            svc.submit_burst(std::mem::take(&mut burst))?;
+    // Submit in bursts of 128 through the zero-copy slab path: one arena
+    // per burst, one channel wake, zero per-set allocation (values are
+    // generated straight into the arena; see coordinator::slab).
+    let mut slab = BurstSlab::with_capacity(128 * max_len, 128);
+    // Double-buffer the arenas: while burst k is being generated, the
+    // batcher packs burst k-1, whose arena is then reclaimed for burst
+    // k+1 — steady state runs on two arenas, zero per-set allocation.
+    let mut in_flight: Option<jugglepac::coordinator::SlabRef> = None;
+    let mut submitted = 0usize;
+    while submitted < sets {
+        slab.clear();
+        let burst = 128.min(sets - submitted);
+        for _ in 0..burst {
+            let n = match &zipf {
+                Some(t) => t.sample(&mut rng),
+                None => rng.range(1, max_len),
+            };
+            slab.begin_set();
+            let mut sum = 0.0f32;
+            for _ in 0..n {
+                let v = rng.range_i64(-64, 64) as f32 / 8.0;
+                sum += v;
+                slab.push_value(v);
+            }
+            slab.end_set();
+            want.push(sum);
         }
-    }
-    if !burst.is_empty() {
-        svc.submit_burst(burst)?;
+        submitted += burst;
+        let shared = std::mem::take(&mut slab).share();
+        svc.submit_burst_slab(&shared)?;
+        // Reclaim the PREVIOUS burst's arena (packed by now in all but
+        // deep-backlog cases); fresh allocation is the fallback.
+        slab = match in_flight.take().map(jugglepac::coordinator::SlabRef::try_reclaim) {
+            Some(Ok(mut arena)) => {
+                arena.clear();
+                arena
+            }
+            _ => BurstSlab::with_capacity(128 * max_len, 128),
+        };
+        in_flight = Some(shared);
     }
     if std::env::var("JUGGLEPAC_PHASES").is_ok() {
         eprintln!("phase: submit done at {:?}", t0.elapsed());

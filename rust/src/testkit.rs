@@ -30,6 +30,39 @@ pub fn property<F: FnMut(&mut Xoshiro256)>(name: &str, iters: u64, mut f: F) {
     }
 }
 
+/// Shard counts for coordinator tests. `JUGGLEPAC_TEST_SHARDS` (the CI
+/// matrix knob) pins a single count so each matrix leg exercises one pool
+/// size; unset, tests sweep `default`. Cross-count bit-identity tests
+/// should compare every returned count against an explicit `shards = 1`
+/// baseline rather than assume 1 is in the list.
+pub fn shard_counts(default: &[usize]) -> Vec<usize> {
+    match std::env::var("JUGGLEPAC_TEST_SHARDS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => vec![n],
+            _ => panic!("JUGGLEPAC_TEST_SHARDS must be a positive integer, got {v:?}"),
+        },
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Skewed coordinator workload: Zipf-distributed lengths (s = 1.1 — many
+/// short sets, a heavy tail of long ones) of exact dyadic values (k/8,
+/// |k| ≤ 64). Sums of such values are exact in f32 at any association
+/// order, so tests and benches can assert exact (and cross-configuration
+/// bit-identical) sums while skewing load. This property is load-bearing:
+/// widen the value range past exactness and every bit-assertion built on
+/// this generator silently weakens.
+pub fn zipf_dyadic_sets(seed: u64, count: usize, max_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let dist = crate::workload::ZipfTable::new(max_len, 1.1);
+    (0..count)
+        .map(|_| {
+            let n = dist.sample(&mut rng).max(1);
+            (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+        })
+        .collect()
+}
+
 fn fxhash(s: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for b in s.bytes() {

@@ -13,6 +13,10 @@ pub enum LenDist {
     /// Bimodal mixture: short with probability p, else long — stresses
     /// the PIS label juggling.
     Bimodal { short: usize, long: usize, p_short: f64 },
+    /// Zipf-distributed: P(len = k) ∝ k^(-s) for k ∈ [1, max] — mostly
+    /// short sets with a heavy tail of long ones, the skewed service mix
+    /// the work-stealing dispatcher is measured against.
+    Zipf { max: usize, s: f64 },
 }
 
 impl LenDist {
@@ -27,6 +31,11 @@ impl LenDist {
                     long
                 }
             }
+            LenDist::Zipf { max, s } => {
+                // One-off draw: builds the weight table each call (O(max)).
+                // Bulk generators should hold a [`ZipfTable`] instead.
+                ZipfTable::new(max, s).sample(rng)
+            }
         }
     }
 
@@ -36,7 +45,40 @@ impl LenDist {
             LenDist::Fixed(n) => n,
             LenDist::Uniform(_, hi) => hi,
             LenDist::Bimodal { short, long, .. } => short.max(long),
+            LenDist::Zipf { max, .. } => max,
         }
+    }
+}
+
+/// Precomputed cumulative Zipf weights: `P(k) ∝ k^(-s)` for k ∈ [1, max].
+/// Building the table is O(max); each draw is one uniform + a binary
+/// search (O(log max)) — use this for bulk generation instead of
+/// [`LenDist::Zipf`]'s per-call table. Draws consume one `next_f64` and
+/// produce the same values as the one-off path for the same RNG state.
+#[derive(Clone, Debug)]
+pub struct ZipfTable {
+    /// cum[k-1] = Σ_{j=1..k} j^(-s)
+    cum: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(max: usize, s: f64) -> Self {
+        assert!(max >= 1);
+        let mut cum = Vec::with_capacity(max);
+        let mut acc = 0.0f64;
+        for k in 1..=max {
+            acc += (k as f64).powf(-s);
+            cum.push(acc);
+        }
+        Self { cum }
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let total = *self.cum.last().expect("max >= 1");
+        let u = rng.next_f64() * total;
+        // First k whose cumulative weight reaches u (clamped: fp rounding
+        // can leave u a hair past the final cumulative sum).
+        self.cum.partition_point(|&c| c < u).min(self.cum.len() - 1) + 1
     }
 }
 
@@ -208,6 +250,36 @@ mod tests {
         assert!(ws.sets.iter().all(|s| (30..=50).contains(&s.len())));
         let lens: std::collections::HashSet<usize> = ws.sets.iter().map(|s| s.len()).collect();
         assert!(lens.len() > 5, "should actually vary");
+    }
+
+    #[test]
+    fn zipf_lengths_are_bounded_and_skewed() {
+        let mut rng = Xoshiro256::seeded(0x21F);
+        let d = LenDist::Zipf { max: 100, s: 1.1 };
+        assert_eq!(d.max(), 100);
+        let n = 5_000;
+        let lens: Vec<usize> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        assert!(lens.iter().all(|&l| (1..=100).contains(&l)));
+        // Heavy head: length 1 is the modal draw by a wide margin...
+        let ones = lens.iter().filter(|&&l| l == 1).count();
+        assert!(ones > n / 10, "P(1) should dominate, got {ones}/{n}");
+        // ...but the tail is real: some draws land in the top half.
+        assert!(lens.iter().any(|&l| l > 50), "tail never sampled");
+        let mean = lens.iter().sum::<usize>() as f64 / n as f64;
+        assert!(mean < 25.0, "mean {mean} not skewed toward short sets");
+    }
+
+    #[test]
+    fn zipf_table_matches_one_off_sampling() {
+        // Same RNG stream through both paths must produce identical draws
+        // (the table is the bulk form of the same inverse CDF).
+        let dist = LenDist::Zipf { max: 64, s: 1.3 };
+        let table = ZipfTable::new(64, 1.3);
+        let mut a = Xoshiro256::seeded(0x7AB1E);
+        let mut b = Xoshiro256::seeded(0x7AB1E);
+        for _ in 0..2_000 {
+            assert_eq!(dist.sample(&mut a), table.sample(&mut b));
+        }
     }
 
     #[test]

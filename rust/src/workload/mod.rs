@@ -11,5 +11,5 @@
 pub mod gen;
 pub mod trace;
 
-pub use gen::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig};
+pub use gen::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig, ZipfTable};
 pub use trace::{read_trace, write_trace, TraceFile};

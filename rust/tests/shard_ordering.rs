@@ -1,12 +1,16 @@
 //! Ordered delivery under sharding: the reorder buffer + assembler must
 //! deliver in strict submission order with oracle-exact sums at every
-//! shard count, even when shard completion times are artificially skewed.
+//! shard count — stealing on and off — even when shard completion times
+//! are artificially skewed. `JUGGLEPAC_TEST_SHARDS` (the CI matrix knob)
+//! pins the swept shard counts; every pinned count is still compared
+//! against an explicit `shards = 1` baseline.
 
 use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::testkit::shard_counts;
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
 
-fn cfg(shards: usize, jitter_us: u64) -> ServiceConfig {
+fn cfg(shards: usize, steal: bool, jitter_us: u64) -> ServiceConfig {
     ServiceConfig {
         engine: EngineKind::Native { batch: 8, n: 64 },
         batch_deadline: Duration::from_micros(100),
@@ -14,103 +18,119 @@ fn cfg(shards: usize, jitter_us: u64) -> ServiceConfig {
         queue_depth: 64,
         shards,
         shard_queue_depth: 2, // small on purpose: forces dispatch spill
+        steal,
         shard_jitter_us: jitter_us,
+        shard_stall_us: Vec::new(),
+        shard_fail_after: None,
     }
+}
+
+/// Drive one seeded workload; assert ordering + sums; return result bits.
+fn run_case<G: FnMut(&mut Xoshiro256) -> Vec<f32>>(
+    shards: usize,
+    steal: bool,
+    jitter_us: u64,
+    seed: u64,
+    count: usize,
+    check_exact_sums: bool,
+    mut gen_set: G,
+) -> Vec<u32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut svc = Service::start(cfg(shards, steal, jitter_us)).unwrap();
+    let mut want = Vec::new();
+    let mut submitted = 0usize;
+    // Bursts of random size, sets of random length spanning empty,
+    // sub-row, and multi-chunk (n = 64) shapes.
+    while submitted < count {
+        let burst_len = rng.range(1, 17).min(count - submitted);
+        let burst: Vec<Vec<f32>> = (0..burst_len).map(|_| gen_set(&mut rng)).collect();
+        for set in &burst {
+            want.push(set.iter().sum::<f32>());
+        }
+        submitted += burst.len();
+        svc.submit_burst(burst).unwrap();
+    }
+    let ctx = format!("shards={shards} steal={steal}");
+    let mut bits = Vec::with_capacity(want.len());
+    for (i, w) in want.iter().enumerate() {
+        let r = svc
+            .recv_timeout(Duration::from_secs(20))
+            .unwrap_or_else(|| panic!("{ctx}: response {i} timed out"));
+        assert_eq!(r.req_id, i as u64, "{ctx}: submission order");
+        if check_exact_sums {
+            // Exact dyadic values: chunking/batching must not change the
+            // sum at any shard count.
+            assert_eq!(r.sum, *w, "{ctx} req {i}");
+        }
+        bits.push(r.sum.to_bits());
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, want.len() as u64, "{ctx}");
+    bits
 }
 
 /// Interleaved variable-length bursts across shard counts, with per-shard
 /// latency jitter: responses must arrive in submission order, sums equal
 /// to the serial oracle, and — because the reorder stage feeds batches to
-/// the assembler in dispatch order — bit-identical at every shard count.
+/// the assembler in dispatch order — bit-identical at every shard count,
+/// stealing on and off.
 #[test]
 fn prop_ordered_delivery_across_shard_counts() {
+    let dyadic = |rng: &mut Xoshiro256| -> Vec<f32> {
+        let len = rng.range(0, 200);
+        (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+    };
     for seed in [1u64, 2, 3] {
-        let mut per_shards: Vec<Vec<u32>> = Vec::new();
-        for &shards in &[1usize, 2, 4] {
-            let mut rng = Xoshiro256::seeded(seed);
-            let mut svc = Service::start(cfg(shards, 400)).unwrap();
-            let mut want = Vec::new();
-            let mut submitted = 0usize;
-            // Bursts of random size, sets of random length spanning empty,
-            // sub-row, and multi-chunk (n = 64) shapes.
-            while submitted < 250 {
-                let burst_len = rng.range(1, 17).min(250 - submitted);
-                let burst: Vec<Vec<f32>> = (0..burst_len)
-                    .map(|_| {
-                        let len = rng.range(0, 200);
-                        (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
-                    })
-                    .collect();
-                for set in &burst {
-                    want.push(set.iter().sum::<f32>());
-                }
-                submitted += burst.len();
-                svc.submit_burst(burst).unwrap();
+        let baseline = run_case(1, true, 400, seed, 250, true, dyadic);
+        for &shards in &shard_counts(&[2, 4]) {
+            for steal in [true, false] {
+                let bits = run_case(shards, steal, 400, seed, 250, true, dyadic);
+                assert_eq!(
+                    baseline, bits,
+                    "seed {seed}: shards={shards} steal={steal} diverged from shards=1"
+                );
             }
-            let mut bits = Vec::with_capacity(want.len());
-            for (i, w) in want.iter().enumerate() {
-                let r = svc
-                    .recv_timeout(Duration::from_secs(20))
-                    .unwrap_or_else(|| panic!("shards={shards}: response {i} timed out"));
-                assert_eq!(r.req_id, i as u64, "shards={shards}: submission order");
-                // Exact dyadic values: chunking/batching must not change
-                // the sum at any shard count.
-                assert_eq!(r.sum, *w, "shards={shards} req {i}");
-                bits.push(r.sum.to_bits());
-            }
-            let m = svc.shutdown();
-            assert_eq!(m.completed, want.len() as u64, "shards={shards}");
-            per_shards.push(bits);
         }
-        // Deterministic across shard counts, to the bit.
-        assert_eq!(per_shards[0], per_shards[1], "seed {seed}: shards=2 diverged");
-        assert_eq!(per_shards[0], per_shards[2], "seed {seed}: shards=4 diverged");
     }
 }
 
 /// Same cross-shard bit-identity on *order-sensitive* floats (mixed
 /// magnitudes, inexact sums): any change in chunk tree shape, batch-row
-/// association, or assembler combine order between shard counts shows up
-/// here, where the dyadic test above cannot see it.
+/// association, or assembler combine order between shard counts — or
+/// introduced by stealing — shows up here, where the dyadic test above
+/// cannot see it.
 #[test]
 fn prop_bit_identity_holds_for_inexact_floats() {
+    let inexact = |rng: &mut Xoshiro256| -> Vec<f32> {
+        let len = rng.range(0, 300);
+        (0..len)
+            .map(|_| (rng.next_f64() as f32 - 0.5) * 10f32.powi(rng.range(0, 8) as i32))
+            .collect()
+    };
     for seed in [11u64, 12] {
-        let mut per_shards: Vec<Vec<u32>> = Vec::new();
-        for &shards in &[1usize, 2, 4] {
-            let mut rng = Xoshiro256::seeded(seed);
-            let mut svc = Service::start(cfg(shards, 200)).unwrap();
-            let count = 120usize;
-            for _ in 0..count {
-                let len = rng.range(0, 300);
-                let set: Vec<f32> = (0..len)
-                    .map(|_| (rng.next_f64() as f32 - 0.5) * 10f32.powi(rng.range(0, 8) as i32))
-                    .collect();
-                svc.submit(set).unwrap();
+        let baseline = run_case(1, true, 200, seed, 120, false, inexact);
+        for &shards in &shard_counts(&[2, 4]) {
+            for steal in [true, false] {
+                let bits = run_case(shards, steal, 200, seed, 120, false, inexact);
+                assert_eq!(
+                    baseline, bits,
+                    "seed {seed}: shards={shards} steal={steal} diverged from shards=1"
+                );
             }
-            let bits: Vec<u32> = (0..count)
-                .map(|i| {
-                    let r = svc
-                        .recv_timeout(Duration::from_secs(20))
-                        .unwrap_or_else(|| panic!("shards={shards}: response {i} timed out"));
-                    assert_eq!(r.req_id, i as u64, "shards={shards}: submission order");
-                    r.sum.to_bits()
-                })
-                .collect();
-            svc.shutdown();
-            per_shards.push(bits);
         }
-        assert_eq!(per_shards[0], per_shards[1], "seed {seed}: shards=2 diverged");
-        assert_eq!(per_shards[0], per_shards[2], "seed {seed}: shards=4 diverged");
     }
 }
 
-/// Dropping the service must drain every shard queue and the reorder
+/// Dropping the service must drain every shard deque and the reorder
 /// buffer: all submitted work completes even when the client never polls
 /// before shutdown.
 #[test]
 fn shutdown_drains_all_shards() {
-    let shards = 4;
-    let mut svc = Service::start(cfg(shards, 200)).unwrap();
+    let shards = *shard_counts(&[4]).first().unwrap();
+    // Steal off: with stealing, "every shard executed a batch" is
+    // probabilistic (a thief can win the race for a shard's only batch);
+    // the stealing drain path is covered by steal_stress.
+    let mut svc = Service::start(cfg(shards, false, 200)).unwrap();
     let mut rng = Xoshiro256::seeded(7);
     let count = 200usize;
     let burst: Vec<Vec<f32>> = (0..count)
@@ -126,10 +146,12 @@ fn shutdown_drains_all_shards() {
     assert_eq!(m.completed, count as u64);
     assert_eq!(m.per_shard.len(), shards);
     assert_eq!(m.per_shard.iter().map(|p| p.batches).sum::<u64>(), m.batches);
-    // Round-robin with spill must have exercised every shard on a 200-set
-    // burst (tens of batches).
-    for (s, p) in m.per_shard.iter().enumerate() {
-        assert!(p.batches > 0, "shard {s} never ran a batch: {:?}", m.per_shard);
+    if shards > 1 {
+        // Dispatch + stealing must have exercised every shard on a
+        // 200-set burst (tens of batches).
+        for (s, p) in m.per_shard.iter().enumerate() {
+            assert!(p.batches > 0, "shard {s} never ran a batch: {:?}", m.per_shard);
+        }
     }
 }
 
@@ -137,9 +159,10 @@ fn shutdown_drains_all_shards() {
 /// order is then batch-completion order, not submission order).
 #[test]
 fn unordered_sharded_service_completes_all() {
+    let shards = *shard_counts(&[3]).first().unwrap();
     let mut svc = Service::start(ServiceConfig {
         ordered: false,
-        ..cfg(3, 300)
+        ..cfg(shards, true, 300)
     })
     .unwrap();
     let count = 120usize;

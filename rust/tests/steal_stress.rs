@@ -1,0 +1,134 @@
+//! Work-stealing stress: skewed load, stalled shards, and mid-steal shard
+//! death must never bend the service's contract — ordered delivery, sums
+//! bit-identical to `steal = off` and to `shards = 1`, and every submitted
+//! request completed.
+
+use jugglepac::coordinator::{EngineKind, MetricsSnapshot, Service, ServiceConfig};
+use jugglepac::testkit::{shard_counts, zipf_dyadic_sets};
+use std::time::Duration;
+
+fn cfg(shards: usize, steal: bool, stall0_us: u64) -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineKind::Native { batch: 8, n: 64 },
+        batch_deadline: Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 64,
+        shards,
+        shard_queue_depth: 2, // small on purpose: forces spill + steal races
+        steal,
+        shard_jitter_us: 200,
+        shard_stall_us: if stall0_us > 0 { vec![stall0_us] } else { Vec::new() },
+        shard_fail_after: None,
+    }
+}
+
+/// Skewed workload: Zipf lengths, exact dyadic values (see
+/// [`zipf_dyadic_sets`] for why exactness is load-bearing here).
+fn skewed_sets(seed: u64, count: usize) -> Vec<Vec<f32>> {
+    zipf_dyadic_sets(seed, count, 180)
+}
+
+/// Submit everything in bursts, receive in submission order asserting
+/// exact sums, shut down; returns (per-request bits, final metrics).
+fn drive(config: ServiceConfig, sets: &[Vec<f32>]) -> (Vec<u32>, MetricsSnapshot) {
+    let mut svc = Service::start(config).unwrap();
+    let want: Vec<f32> = sets.iter().map(|s| s.iter().sum()).collect();
+    for chunk in sets.chunks(32) {
+        svc.submit_burst(chunk.to_vec()).unwrap();
+    }
+    let bits: Vec<u32> = (0..sets.len() as u64)
+        .map(|i| {
+            let r = svc
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|| panic!("response {i} timed out"));
+            assert_eq!(r.req_id, i, "submission-order delivery");
+            assert_eq!(r.sum, want[i as usize], "req {i}: exact dyadic sum");
+            r.sum.to_bits()
+        })
+        .collect();
+    let m = svc.shutdown();
+    assert_eq!(m.completed, sets.len() as u64);
+    (bits, m)
+}
+
+/// Stall shard 0 hard (noisy neighbor) under a skewed length mix: stealing
+/// must actually fire, and the result stream must be bit-identical to
+/// stealing off and to the fused single-shard pipeline.
+#[test]
+fn stealing_recovers_skewed_load_and_preserves_bits() {
+    for seed in [3u64, 4] {
+        let sets = skewed_sets(seed, 300);
+        let (baseline, _) = drive(cfg(1, true, 0), &sets);
+        for &shards in shard_counts(&[2, 4]).iter().filter(|&&s| s >= 2) {
+            let (bits_on, m_on) = drive(cfg(shards, true, 1500), &sets);
+            let (bits_off, m_off) = drive(cfg(shards, false, 1500), &sets);
+            assert_eq!(
+                bits_on, baseline,
+                "seed {seed} shards={shards}: steal=on diverged from shards=1"
+            );
+            assert_eq!(
+                bits_off, baseline,
+                "seed {seed} shards={shards}: steal=off diverged from shards=1"
+            );
+            assert!(
+                m_on.steals > 0,
+                "seed {seed} shards={shards}: stalled shard never got stolen from \
+                 (spills {}, batches {:?})",
+                m_on.dispatch_spills,
+                m_on.per_shard.iter().map(|p| p.batches).collect::<Vec<_>>()
+            );
+            assert_eq!(m_off.steals, 0, "steal=off must not steal");
+        }
+    }
+}
+
+/// Kill a shard mid-run while its peers are actively stealing from it: the
+/// dead worker drains its own deque as NaN-poisoned completions, thieves
+/// rescue what they win, and the drain accounts for every request either
+/// way — shutdown must not hang and nothing may be dropped.
+#[test]
+fn shutdown_drains_with_a_shard_killed_mid_steal() {
+    for &shards in shard_counts(&[2, 4]).iter().filter(|&&s| s >= 2) {
+        let sets = skewed_sets(9, 250);
+        let mut config = cfg(shards, true, 0);
+        // Shard 0 is the stalled magnet (its deque stays loaded, so peers
+        // steal from it); shard 1 dies after 3 batches, mid-stealing.
+        config.shard_stall_us = vec![1000];
+        config.shard_fail_after = Some((1, 3));
+        let mut svc = Service::start(config).unwrap();
+        for chunk in sets.chunks(64) {
+            svc.submit_burst(chunk.to_vec()).unwrap();
+        }
+        // No recv: shutdown alone must push everything through the
+        // pipeline, poisoned or not.
+        let m = svc.shutdown();
+        assert_eq!(m.submitted, sets.len() as u64, "shards={shards}");
+        assert_eq!(
+            m.completed,
+            sets.len() as u64,
+            "shards={shards}: a dead shard must not swallow requests"
+        );
+        assert!(m.engine_failures > 0, "shards={shards}: the kill knob fired");
+        assert_eq!(m.per_shard.len(), shards);
+    }
+}
+
+/// Unskewed control: with no stalls, stealing must not churn a healthy
+/// pool — bits still match the fused pipeline, and the per-shard batch
+/// accounting stays consistent with the aggregate (which shard executed a
+/// given batch is race-dependent with thieves around, so per-shard floors
+/// are not asserted here).
+#[test]
+fn healthy_pool_is_not_churned_by_stealing() {
+    let sets = skewed_sets(11, 200);
+    let (baseline, _) = drive(cfg(1, true, 0), &sets);
+    for &shards in shard_counts(&[2, 4]).iter().filter(|&&s| s >= 2) {
+        let (bits, m) = drive(cfg(shards, true, 0), &sets);
+        assert_eq!(bits, baseline, "shards={shards}");
+        assert_eq!(
+            m.per_shard.iter().map(|p| p.batches).sum::<u64>(),
+            m.batches,
+            "shards={shards}: per-shard accounting"
+        );
+    }
+}
