@@ -87,10 +87,10 @@ fn main() {
     println!(" margin — larger margins only add tail latency)");
 
     println!("\n=== Ablation 3: ordered vs unordered delivery (service) ===");
-    use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+    use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
     for ordered in [true, false] {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: 8, n: 256 },
+            engine: EngineConfig::native(8, 256),
             ordered,
             ..Default::default()
         })

@@ -19,7 +19,7 @@
 //! `JUGGLEPAC_BENCH_JSON` (output path override).
 
 use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
-use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
 
@@ -36,7 +36,7 @@ fn workload(count: usize, max_len: usize) -> Vec<Vec<f32>> {
 }
 
 /// One full drive: submit everything in bursts, receive in order, verify.
-fn drive(engine: EngineKind, shards: usize, requests: &[Vec<f32>], want: &[f32]) {
+fn drive(engine: EngineConfig, shards: usize, requests: &[Vec<f32>], want: &[f32]) {
     let mut svc = Service::start(ServiceConfig {
         engine,
         shards,
@@ -68,8 +68,8 @@ fn main() {
     let mut sink = JsonSink::new();
 
     for (label, mk) in [
-        ("softfp 16x256", EngineKind::SoftFp { batch: 16, n: 256 }),
-        ("native 16x256", EngineKind::Native { batch: 16, n: 256 }),
+        ("softfp 16x256", EngineConfig::softfp(16, 256)),
+        ("native 16x256", EngineConfig::native(16, 256)),
     ] {
         let mut per_shard: Vec<(usize, f64)> = Vec::new();
         for shards in [1usize, 2, 4] {

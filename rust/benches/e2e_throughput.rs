@@ -2,7 +2,7 @@
 //! PJRT) vs native engine on the same workload. The system-level analogue
 //! of the paper's frequency claims; archived in EXPERIMENTS.md §E2E.
 
-use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
 use jugglepac::runtime::default_artifacts_dir;
 use jugglepac::util::Xoshiro256;
 use std::time::{Duration, Instant};
@@ -17,7 +17,7 @@ fn workload(count: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
-fn drive(name: &str, engine: EngineKind, requests: &[Vec<f32>]) {
+fn drive(name: &str, engine: EngineConfig, requests: &[Vec<f32>]) {
     let mut svc = Service::start(ServiceConfig { engine, ..Default::default() }).unwrap();
     let t0 = Instant::now();
     for chunk in requests.chunks(128) {
@@ -43,15 +43,12 @@ fn main() {
         for artifact in ["reduce_f32_b8_n256", "reduce_f32_b32_n128", "reduce_f32_b16_n512"] {
             drive(
                 &format!("xla {artifact}"),
-                EngineKind::Xla {
-                    artifacts_dir: default_artifacts_dir(),
-                    artifact: artifact.to_string(),
-                },
+                EngineConfig::xla(default_artifacts_dir(), artifact),
                 &requests,
             );
         }
     } else {
         println!("(artifacts missing — run `make artifacts` for the XLA rows)");
     }
-    drive("native 8x256", EngineKind::Native { batch: 8, n: 256 }, &requests);
+    drive("native 8x256", EngineConfig::native(8, 256), &requests);
 }

@@ -1,0 +1,91 @@
+//! Bench: the engine registry smoke-compared at shards = 4.
+//!
+//! Drives one exact-valued variable-length workload through the service
+//! on **every artifact-free registry engine** at 4 shards (plus `xla`
+//! when AOT artifacts are present) and reports responses/s per engine —
+//! the apples-to-apples cost of each backend behind the identical
+//! pipeline. Results land in `BENCH_4.json` (benchkit::JsonSink) for
+//! PR-over-PR trajectory tracking; CI archives it in the `bench-json`
+//! artifact.
+//!
+//! Expectations, not assertions: `native` is the fast ceiling; `softfp`
+//! and the cycle adapters (`jugglepac`/`treesched`/`intac`) are orders of
+//! magnitude slower by design (bit-accurate software IEEE adds,
+//! cycle-accurate simulation); `exact` sits near `native` (integer limb
+//! adds per value). Correctness *is* asserted: exact dyadic values, so
+//! every engine must return the plain sum in submission order.
+//!
+//! Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{Service, ServiceConfig};
+use jugglepac::engine::{self, EngineConfig};
+use jugglepac::util::Xoshiro256;
+use std::time::Duration;
+
+const SHARDS: usize = 4;
+
+fn workload(count: usize, max_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seeded(0xE4914E);
+    (0..count)
+        .map(|_| {
+            let n = rng.range(8, max_len);
+            (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+        })
+        .collect()
+}
+
+fn drive(engine: EngineConfig, requests: &[Vec<f32>], want: &[f32]) {
+    let mut svc = Service::start(ServiceConfig {
+        engine,
+        shards: SHARDS,
+        batch_deadline: Duration::from_micros(200),
+        ..Default::default()
+    })
+    .expect("service starts");
+    for chunk in requests.chunks(128) {
+        svc.submit_burst(chunk.to_vec()).expect("submit");
+    }
+    for (i, w) in want.iter().enumerate() {
+        let r = svc.recv_timeout(Duration::from_secs(300)).expect("response");
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        assert_eq!(r.sum, *w, "req {i}");
+    }
+    svc.shutdown();
+}
+
+fn main() {
+    let smoke = smoke();
+    // Single-chunk sets (len <= n): every engine's guarantees hold end to
+    // end, and the cycle adapters stay tractable.
+    let (n_sets, max_len, n) = if smoke { (96, 96, 128) } else { (600, 192, 256) };
+    let requests = workload(n_sets, max_len);
+    let want: Vec<f32> = requests.iter().map(|s| s.iter().sum()).collect();
+    let have_artifacts =
+        jugglepac::runtime::default_artifacts_dir().join("manifest.txt").exists();
+    println!("=== engine matrix @ shards={SHARDS}: {n_sets} sets (len 8..{max_len}) ===");
+    let mut sink = JsonSink::new();
+
+    for entry in engine::REGISTRY {
+        let cfg = match entry.name {
+            "xla" if !have_artifacts => {
+                println!("bench engine {:<10} skipped (no AOT artifacts)", entry.name);
+                continue;
+            }
+            "xla" => EngineConfig::xla(
+                jugglepac::runtime::default_artifacts_dir(),
+                engine::DEFAULT_ARTIFACT,
+            ),
+            name => EngineConfig::named(name, 8, n),
+        };
+        let name = format!("engine {} shards={SHARDS}: {n_sets} sets", entry.name);
+        let d = bench(&name, env_iters(3), || drive(cfg.clone(), &requests, &want));
+        report_throughput("responses", n_sets as u64, "resp", d);
+        sink.record_throughput(&name, n_sets as u64, d);
+    }
+
+    if let Err(e) = sink.write(&json_path("BENCH_4.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -15,7 +15,7 @@
 //! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
 
 use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
-use jugglepac::coordinator::{BurstSlab, EngineKind, MetricsSnapshot, Service, ServiceConfig};
+use jugglepac::coordinator::{BurstSlab, EngineConfig, MetricsSnapshot, Service, ServiceConfig};
 use jugglepac::testkit::zipf_dyadic_sets;
 use std::time::Duration;
 
@@ -35,7 +35,7 @@ fn drive(
     want: &[f32],
 ) -> MetricsSnapshot {
     let mut svc = Service::start(ServiceConfig {
-        engine: EngineKind::SoftFp { batch: 16, n: 256 },
+        engine: EngineConfig::softfp(16, 256),
         shards,
         steal,
         shard_stall_us: if stall0_us > 0 { vec![stall0_us] } else { Vec::new() },

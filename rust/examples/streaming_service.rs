@@ -16,7 +16,7 @@
 //! Run: `make artifacts && cargo run --release --example streaming_service`
 //! The measured numbers are archived in EXPERIMENTS.md §E2E.
 
-use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
 use jugglepac::runtime::default_artifacts_dir;
 use jugglepac::util::Xoshiro256;
 use std::time::{Duration, Instant};
@@ -33,7 +33,7 @@ fn gen_requests(seed: u64, count: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
-fn drive(engine: EngineKind, requests: &[Vec<f32>]) -> (Vec<u32>, String) {
+fn drive(engine: EngineConfig, requests: &[Vec<f32>]) -> (Vec<u32>, String) {
     let mut svc = Service::start(ServiceConfig { engine, ..Default::default() })
         .expect("service starts");
     let t0 = Instant::now();
@@ -73,16 +73,13 @@ fn main() {
 
     println!("\n[XLA engine — AOT Pallas kernel via PJRT]");
     let (xla_sums, xla_report) = drive(
-        EngineKind::Xla {
-            artifacts_dir: artifacts.clone(),
-            artifact: "reduce_f32_b32_n128".to_string(),
-        },
+        EngineConfig::xla(artifacts.clone(), "reduce_f32_b32_n128"),
         &requests,
     );
     println!("{xla_report}");
 
     println!("\n[native engine — rust scalar tree-reduction]");
-    let (native_sums, native_report) = drive(EngineKind::Native { batch: 8, n: 256 }, &requests);
+    let (native_sums, native_report) = drive(EngineConfig::native(8, 256), &requests);
     println!("{native_report}");
 
     let agree = xla_sums.iter().zip(&native_sums).filter(|(a, b)| a == b).count();

@@ -13,19 +13,59 @@
 //! the hot path. The only allocation left is one `(x, lengths, rows)`
 //! triple per *batch*, amortized across its B rows.
 
+use super::metrics::Metrics;
 use super::steal::StealPool;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// A padded batch ready for the engine.
-#[derive(Clone, Debug)]
-pub struct Batch {
-    /// Row-major [B, N], zero-padded.
-    pub x: Vec<f32>,
-    pub lengths: Vec<i32>,
-    /// (req_id, chunk_idx) per occupied row.
-    pub rows: Vec<(u64, u32)>,
+pub use crate::engine::Batch;
+
+/// Recycles freed [`Batch`] allocations from the delivery stage back to
+/// the batcher: the reorder thread (or the fused worker) `put`s each
+/// executed batch's buffers here, and the batcher's flush `take`s them
+/// instead of allocating — steady-state serving allocates **zero** batch
+/// buffers. Bounded (extras are dropped), shared across threads, and
+/// counted in the `batches_recycled` metric on every pool hit.
+#[derive(Debug)]
+pub struct BatchPool {
+    free: Mutex<Vec<Batch>>,
+    cap: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl BatchPool {
+    pub fn new(cap: usize, metrics: Arc<Metrics>) -> Arc<Self> {
+        Arc::new(Self { free: Mutex::new(Vec::with_capacity(cap)), cap, metrics })
+    }
+
+    /// Return one batch's buffers to the pool (dropped if the pool is
+    /// full — the bound keeps a burst from pinning memory forever).
+    pub fn put(&self, batch: Batch) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.cap {
+            free.push(batch);
+        }
+    }
+
+    /// Take recycled buffers, if any (counted in `batches_recycled`).
+    /// Contents are stale; the taker scrubs them to its shape.
+    pub fn take(&self) -> Option<Batch> {
+        let batch = self.free.lock().unwrap().pop();
+        if batch.is_some() {
+            self.metrics.batches_recycled.fetch_add(1, Ordering::Relaxed);
+        }
+        batch
+    }
+
+    /// Batches currently parked in the pool.
+    pub fn len(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Splits requests into N-sized chunks and packs chunks into batches.
@@ -39,6 +79,8 @@ pub struct Batcher {
     rows: Vec<(u64, u32)>,
     oldest: Option<Instant>,
     deadline: Duration,
+    /// Recycled-buffer source for [`Self::flush`] (see [`BatchPool`]).
+    pool: Option<Arc<BatchPool>>,
 }
 
 impl Batcher {
@@ -52,6 +94,33 @@ impl Batcher {
             rows: Vec::with_capacity(batch),
             oldest: None,
             deadline,
+            pool: None,
+        }
+    }
+
+    /// Draw replacement buffers from `pool` on flush instead of
+    /// allocating.
+    pub fn with_pool(mut self, pool: Arc<BatchPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Replacement buffers for the next in-progress batch: recycled from
+    /// the pool (scrubbed — zero padding is a packing invariant, see
+    /// `reused_buffer_leaves_no_stale_values`) or freshly allocated.
+    fn fresh_batch(&mut self) -> Batch {
+        if let Some(mut b) = self.pool.as_ref().and_then(|p| p.take()) {
+            b.x.clear();
+            b.x.resize(self.batch * self.n, 0.0);
+            b.lengths.clear();
+            b.lengths.resize(self.batch, 0);
+            b.rows.clear();
+            return b;
+        }
+        Batch {
+            x: vec![0.0; self.batch * self.n],
+            lengths: vec![0; self.batch],
+            rows: Vec::with_capacity(self.batch),
         }
     }
 
@@ -113,10 +182,11 @@ impl Batcher {
             return None;
         }
         self.oldest = None;
-        let x = std::mem::replace(&mut self.x, vec![0.0; self.batch * self.n]);
-        let lengths = std::mem::replace(&mut self.lengths, vec![0; self.batch]);
-        let rows = std::mem::replace(&mut self.rows, Vec::with_capacity(self.batch));
-        Some(Batch { x, lengths, rows })
+        let mut out = self.fresh_batch();
+        std::mem::swap(&mut self.x, &mut out.x);
+        std::mem::swap(&mut self.lengths, &mut out.lengths);
+        std::mem::swap(&mut self.rows, &mut out.rows);
+        Some(out)
     }
 
     pub fn pending_rows(&self) -> usize {
@@ -299,6 +369,41 @@ mod tests {
         assert_eq!(b.chunks_for(8), 1);
         assert_eq!(b.chunks_for(9), 2);
         assert_eq!(b.chunks_for(64), 8);
+    }
+
+    #[test]
+    fn pooled_batcher_recycles_buffers_and_scrubs_them() {
+        let metrics = Arc::new(Metrics::new(1));
+        let pool = BatchPool::new(4, Arc::clone(&metrics));
+        let mut b = Batcher::new(2, 4, Duration::from_millis(5)).with_pool(Arc::clone(&pool));
+        // First flush allocates (pool empty).
+        let first = b.add_request(0, &[9.0; 8]).pop().unwrap();
+        assert_eq!(metrics.snapshot().batches_recycled, 0);
+        // Delivery returns the buffers; the next flush draws its
+        // replacement from the pool instead of allocating.
+        pool.put(first);
+        assert_eq!(pool.len(), 1);
+        b.add_request(1, &[1.0]);
+        let batch1 = b.flush().unwrap();
+        assert_eq!(metrics.snapshot().batches_recycled, 1);
+        assert!(pool.is_empty());
+        assert_eq!(batch1.lengths, vec![1, 0]);
+        assert_eq!(&batch1.x[0..4], &[1.0, 0.0, 0.0, 0.0]);
+        // The in-progress buffer is now the recycled one: the stale 9.0s
+        // must have been scrubbed back to zero padding.
+        b.add_request(2, &[2.0]);
+        let batch2 = b.flush().unwrap();
+        assert_eq!(&batch2.x[0..4], &[2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&batch2.x[4..8], &[0.0; 4]);
+    }
+
+    #[test]
+    fn batch_pool_is_bounded() {
+        let pool = BatchPool::new(2, Arc::new(Metrics::new(1)));
+        for _ in 0..5 {
+            pool.put(tiny_batch());
+        }
+        assert_eq!(pool.len(), 2, "extras beyond the cap are dropped");
     }
 
     fn tiny_batch() -> Batch {

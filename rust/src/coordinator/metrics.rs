@@ -50,6 +50,10 @@ pub struct Metrics {
     /// yet packed into batches (the zero-copy submission path's working
     /// set). Returns to 0 when the pipeline is drained.
     pub slab_bytes_in_flight: AtomicU64,
+    /// Batch buffers the batcher drew from the recycling pool instead of
+    /// allocating (see `coordinator::BatchPool`): steady-state serving
+    /// should recycle nearly every batch.
+    pub batches_recycled: AtomicU64,
     latency_us: Mutex<Histogram>,
     shards: Vec<ShardCounters>,
 }
@@ -71,6 +75,7 @@ impl Metrics {
             steal_misses: AtomicU64::new(0),
             reorder_duplicates: AtomicU64::new(0),
             slab_bytes_in_flight: AtomicU64::new(0),
+            batches_recycled: AtomicU64::new(0),
             latency_us: Mutex::new(Histogram::new()),
             shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
         }
@@ -109,6 +114,7 @@ impl Metrics {
             steal_misses: self.steal_misses.load(Ordering::Relaxed),
             reorder_duplicates: self.reorder_duplicates.load(Ordering::Relaxed),
             slab_bytes_in_flight: self.slab_bytes_in_flight.load(Ordering::Relaxed),
+            batches_recycled: self.batches_recycled.load(Ordering::Relaxed),
             latency_us: self.latency_us.lock().unwrap().clone(),
             per_shard: self
                 .shards
@@ -155,6 +161,7 @@ pub struct MetricsSnapshot {
     pub steal_misses: u64,
     pub reorder_duplicates: u64,
     pub slab_bytes_in_flight: u64,
+    pub batches_recycled: u64,
     pub latency_us: Histogram,
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -187,6 +194,9 @@ impl MetricsSnapshot {
             engine_us_per_batch,
             self.latency_us.summary("us"),
         );
+        if self.batches_recycled > 0 {
+            s.push_str(&format!(" | {} batch buffers recycled", self.batches_recycled));
+        }
         if self.per_shard.len() > 1 {
             let shares: Vec<String> =
                 self.per_shard.iter().map(|p| p.batches.to_string()).collect();

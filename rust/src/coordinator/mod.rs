@@ -48,11 +48,15 @@ pub mod slab;
 pub mod steal;
 
 pub use assembler::{Assembler, Completed};
-pub use batcher::{live_flags, Batch, Batcher, Router, SeqBatch};
+pub use batcher::{live_flags, Batch, BatchPool, Batcher, Router, SeqBatch};
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use reorder::{ReorderBuffer, ShardDone};
 pub use slab::{BurstSlab, SetView, SlabRef};
 pub use steal::StealPool;
+
+// The engine subsystem the coordinator drives: re-exported so service
+// callers configure engines from one import site.
+pub use crate::engine::{EngineCaps, EngineConfig, ReduceEngine, UnknownEngine};
 
 use anyhow::{Context, Result};
 use std::sync::atomic::Ordering;
@@ -60,28 +64,11 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Which compute engine the service drives.
-#[derive(Clone, Debug)]
-pub enum EngineKind {
-    /// AOT XLA artifact via PJRT (the production path). Artifact chosen by
-    /// name; must be a `reduce` variant.
-    Xla { artifacts_dir: std::path::PathBuf, artifact: String },
-    /// Native vectorized tree-reduction in rust (baseline / fallback);
-    /// shape (batch, n) mirrors an artifact so comparisons are
-    /// like-for-like. See [`crate::fp::vreduce`].
-    Native { batch: usize, n: usize },
-    /// Bit-accurate software IEEE adder per tree node — deliberately
-    /// compute-heavy (each add runs the full round/normalize path), the
-    /// stand-in for an expensive FP adder IP when no PJRT plugin is
-    /// available. Same masked tree shape as `Native`, so exact-valued
-    /// workloads agree bit-for-bit.
-    SoftFp { batch: usize, n: usize },
-}
-
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    pub engine: EngineKind,
+    /// Which registry engine the shards drive (see [`crate::engine`]).
+    pub engine: EngineConfig,
     /// Max time a partial batch waits before flushing.
     pub batch_deadline: Duration,
     /// Deliver results in submission order (paper §IV-D).
@@ -117,10 +104,10 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
-            engine: EngineKind::Xla {
-                artifacts_dir: crate::runtime::default_artifacts_dir(),
-                artifact: "reduce_f32_b32_n128".to_string(),
-            },
+            engine: EngineConfig::xla(
+                crate::runtime::default_artifacts_dir(),
+                crate::engine::DEFAULT_ARTIFACT,
+            ),
             batch_deadline: Duration::from_micros(200),
             ordered: true,
             queue_depth: 1024,
@@ -211,18 +198,14 @@ impl Service {
         let shards = cfg.shards.max(1);
         let metrics = Arc::new(Metrics::new(shards));
 
-        // Resolve the engine's shape up front (Xla: read the manifest).
-        let (batch, n) = match &cfg.engine {
-            EngineKind::Xla { artifacts_dir, artifact } => {
-                let specs = crate::runtime::read_manifest(artifacts_dir)?;
-                let spec = specs
-                    .iter()
-                    .find(|s| &s.name == artifact)
-                    .with_context(|| format!("artifact {artifact:?} not in manifest"))?;
-                (spec.batch, spec.n)
-            }
-            EngineKind::Native { batch, n } | EngineKind::SoftFp { batch, n } => (*batch, *n),
-        };
+        // Resolve the engine's shape up front via the registry (reads the
+        // artifact manifest for `xla`; rejects unknown engine names with
+        // the typed `UnknownEngine` error before any thread spawns).
+        let (batch, n) = crate::engine::resolve_shape(&cfg.engine)?;
+        // Batch-buffer recycling pool: the delivery stage returns freed
+        // `Batch` allocations here and the batcher reuses them — zero
+        // batch-buffer allocation at steady state (`batches_recycled`).
+        let batch_pool = BatchPool::new(2 * shards + 4, Arc::clone(&metrics));
 
         // Channels carry BURSTS (Vec of messages): on a single-core box a
         // parked peer is woken per channel send, and that futex handoff —
@@ -252,6 +235,7 @@ impl Service {
                 deadline: cfg.batch_deadline,
                 ordered: cfg.ordered,
                 metrics: Arc::clone(&metrics),
+                pool: batch_pool,
                 rx_in,
                 tx_out,
                 tx_ready,
@@ -270,7 +254,6 @@ impl Service {
                 let args = shard::ShardArgs {
                     shard: s,
                     engine: cfg.engine.clone(),
-                    n,
                     pool: Arc::clone(&pool),
                     steal: cfg.steal,
                     tx_done: tx_done.clone(),
@@ -294,13 +277,14 @@ impl Service {
             {
                 let m = Arc::clone(&metrics);
                 let ordered = cfg.ordered;
+                let bp = Arc::clone(&batch_pool);
                 handles.push(std::thread::Builder::new().name("acc-reorder".into()).spawn(
-                    move || reorder::run_reorder(rx_done, tx_out, ordered, m),
+                    move || reorder::run_reorder(rx_done, tx_out, ordered, m, bp),
                 )?);
             }
             {
                 let m = Arc::clone(&metrics);
-                let b = Batcher::new(batch, n, cfg.batch_deadline);
+                let b = Batcher::new(batch, n, cfg.batch_deadline).with_pool(batch_pool);
                 let router = Router::new(pool, dead);
                 handles.push(std::thread::Builder::new().name("acc-batcher".into()).spawn(
                     move || shard::run_batcher(rx_in, b, router, tx_done, m),
@@ -489,7 +473,7 @@ mod tests {
     #[test]
     fn native_service_end_to_end() {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: 4, n: 16 },
+            engine: EngineConfig::native(4, 16),
             batch_deadline: Duration::from_micros(100),
             ordered: true,
             queue_depth: 64,
@@ -515,12 +499,16 @@ mod tests {
         let m = svc.shutdown();
         assert_eq!(m.completed, 20);
         assert_eq!(m.submitted, 20);
+        // The fused loop recycles every executed batch straight back into
+        // the batcher: all flushes after the first draw from the pool.
+        assert!(m.batches > 1, "workload spans several batches");
+        assert!(m.batches_recycled >= m.batches - 1, "{m:?}");
     }
 
     #[test]
     fn unordered_native_service_completes_all() {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: 2, n: 8 },
+            engine: EngineConfig::native(2, 8),
             batch_deadline: Duration::from_micros(50),
             ordered: false,
             queue_depth: 16,
@@ -543,7 +531,7 @@ mod tests {
     #[test]
     fn sharded_native_service_delivers_in_order() {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: 4, n: 16 },
+            engine: EngineConfig::native(4, 16),
             batch_deadline: Duration::from_micros(100),
             ordered: true,
             queue_depth: 64,
@@ -572,7 +560,7 @@ mod tests {
     fn slab_submission_matches_owned_submission_bit_for_bit() {
         let run = |use_slab: bool, shards: usize| -> Vec<u32> {
             let mut svc = Service::start(ServiceConfig {
-                engine: EngineKind::Native { batch: 4, n: 16 },
+                engine: EngineConfig::native(4, 16),
                 batch_deadline: Duration::from_micros(100),
                 ordered: true,
                 queue_depth: 64,
@@ -618,7 +606,7 @@ mod tests {
     #[test]
     fn slab_arena_reclaims_after_drain() {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: 2, n: 8 },
+            engine: EngineConfig::native(2, 8),
             batch_deadline: Duration::from_micros(50),
             ordered: true,
             queue_depth: 16,
@@ -660,7 +648,7 @@ mod tests {
 
     #[test]
     fn softfp_engine_matches_native_bit_for_bit_on_exact_values() {
-        let run = |engine: EngineKind| -> Vec<u32> {
+        let run = |engine: EngineConfig| -> Vec<u32> {
             let mut svc = Service::start(ServiceConfig {
                 engine,
                 batch_deadline: Duration::from_micros(50),
@@ -680,8 +668,8 @@ mod tests {
                 .map(|_| svc.recv_timeout(Duration::from_secs(5)).unwrap().sum.to_bits())
                 .collect()
         };
-        let native = run(EngineKind::Native { batch: 4, n: 16 });
-        let soft = run(EngineKind::SoftFp { batch: 4, n: 16 });
+        let native = run(EngineConfig::native(4, 16));
+        let soft = run(EngineConfig::softfp(4, 16));
         assert_eq!(native, soft);
     }
 }

@@ -15,22 +15,28 @@
 //! sums (and, in ordered mode, delivery order) are bit-identical at every
 //! shard count.
 
+use super::batcher::BatchPool;
 use super::metrics::Metrics;
-use super::{Assembler, Response};
+use super::{Assembler, Batch, Response};
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-/// One executed batch coming back from a shard.
+/// One executed batch coming back from a shard. Carries the whole
+/// [`Batch`] (not just its row provenance) so the delivery stage can
+/// return the freed buffers to the batcher's [`BatchPool`] after
+/// delivering — the `batch.rows` order is the delivery order, same as
+/// dispatched.
 #[derive(Debug)]
 pub struct ShardDone {
     pub seq: u64,
     pub shard: usize,
-    /// (req_id, chunk_idx) per occupied row, same order as dispatched.
-    pub rows: Vec<(u64, u32)>,
-    /// Per-row partial sums, `rows.len()` entries.
+    /// The executed batch, unchanged since dispatch (recycled after
+    /// delivery).
+    pub batch: Batch,
+    /// Per-row partial sums, `batch.rows.len()` entries.
     pub sums: Vec<f32>,
 }
 
@@ -130,6 +136,7 @@ pub(crate) fn run_reorder(
     tx_out: Sender<Vec<Response>>,
     ordered: bool,
     metrics: Arc<Metrics>,
+    pool: Arc<BatchPool>,
 ) {
     let mut asm = Assembler::new(ordered);
     let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
@@ -138,7 +145,12 @@ pub(crate) fn run_reorder(
     let deliver = |done: ShardDone,
                    asm: &mut Assembler,
                    birth: &mut std::collections::HashMap<u64, Instant>|
-     -> bool { super::deliver_rows(&done.rows, &done.sums, asm, birth, &metrics, &tx_out) };
+     -> bool {
+        let ok = super::deliver_rows(&done.batch.rows, &done.sums, asm, birth, &metrics, &tx_out);
+        // Delivery done with the buffers: hand them back to the batcher.
+        pool.put(done.batch);
+        ok
+    };
 
     loop {
         match rx.recv() {
@@ -174,7 +186,12 @@ mod tests {
     use super::*;
 
     fn done(seq: u64) -> ShardDone {
-        ShardDone { seq, shard: 0, rows: vec![(seq, 0)], sums: vec![seq as f32] }
+        ShardDone {
+            seq,
+            shard: 0,
+            batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] },
+            sums: vec![seq as f32],
+        }
     }
 
     fn seqs(v: &[ShardDone]) -> Vec<u64> {

@@ -11,84 +11,30 @@
 //!   rows into batches, stamps each with a sequence number, announces every
 //!   request to the reorder stage, and routes batches into the shard
 //!   pool's injector deques ([`Router`]).
-//! - [`run_shard`] — one engine worker: owns its own engine instance
-//!   (its own PJRT runtime for XLA — the wrapper types are not `Send`, and
-//!   independent clients avoid any shared-executable serialization) and its
-//!   own reusable output/scratch buffers. It pops its own deque front; when
-//!   idle (and stealing is on) it pulls whole batches from the tail of the
-//!   most-loaded peer ([`StealPool`]), then forwards completions to the
-//!   reorder stage.
+//! - [`run_shard`] — one engine worker: owns its own engine instance,
+//!   built inside the thread from the `Send` [`EngineConfig`] via the
+//!   [`crate::engine`] registry (engines need not be `Send` — the PJRT
+//!   wrappers are not, and independent per-shard instances avoid any
+//!   shared-executable serialization) plus its own reusable output
+//!   buffer. It pops its own deque front; when idle (and stealing is on)
+//!   it pulls whole batches from the tail of the most-loaded peer
+//!   ([`StealPool`]), then forwards completions to the reorder stage.
+//!
+//! Which engine executes is **open**: anything in the
+//! [`crate::engine::REGISTRY`] mounts here unchanged — the classic
+//! kernels, the cycle-accurate circuit adapters, the exact
+//! superaccumulator, or whatever an engine author registers next.
 
-use super::batcher::{Batcher, Router, SeqBatch};
+use super::batcher::{BatchPool, Batcher, Router, SeqBatch};
 use super::metrics::Metrics;
 use super::reorder::{ShardDone, ToReorder};
 use super::steal::StealPool;
-use super::{Batch, EngineKind, Submission};
-use crate::runtime::Runtime;
-use anyhow::Result;
+use super::{Batch, Submission};
+use crate::engine::{self, EngineConfig, ReduceEngine};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-/// A shard's compute engine: one expensive reduction unit plus the
-/// reusable buffers that keep its steady state allocation-free.
-pub(crate) enum Engine {
-    /// AOT XLA artifact via PJRT; the runtime is loaded filtered to the one
-    /// artifact this shard executes.
-    Xla { rt: Runtime, artifact: String, sums: Vec<f32> },
-    /// Vectorized native kernel (see [`crate::fp::vreduce`]).
-    Native { n: usize, sums: Vec<f32>, scratch: Vec<f32> },
-    /// Bit-accurate software IEEE adder per tree node — compute-heavy by
-    /// design, the bench stand-in for an expensive FP adder IP.
-    SoftFp { n: usize, sums: Vec<f32>, scratch: Vec<u64> },
-}
-
-impl Engine {
-    /// Build the engine inside the owning worker thread (PJRT wrappers are
-    /// not `Send`, so creation cannot happen on the caller's side).
-    pub(crate) fn create(kind: &EngineKind, n: usize) -> Result<Self> {
-        Ok(match kind {
-            EngineKind::Xla { artifacts_dir, artifact } => Engine::Xla {
-                rt: Runtime::load_filtered(artifacts_dir, Some(artifact))?,
-                artifact: artifact.clone(),
-                sums: Vec::new(),
-            },
-            EngineKind::Native { .. } => {
-                Engine::Native { n, sums: Vec::new(), scratch: Vec::with_capacity(n) }
-            }
-            EngineKind::SoftFp { .. } => {
-                Engine::SoftFp { n, sums: Vec::new(), scratch: Vec::with_capacity(n) }
-            }
-        })
-    }
-
-    /// Execute one padded batch; returns one sum per row (padding rows
-    /// included, as the artifacts do).
-    pub(crate) fn run(&mut self, batch: &Batch) -> Result<&[f32]> {
-        match self {
-            Engine::Xla { rt, artifact, sums } => {
-                let model = rt.model(artifact)?;
-                *sums = model.run(&batch.x, &batch.lengths)?.sums;
-                Ok(sums)
-            }
-            Engine::Native { n, sums, scratch } => {
-                crate::fp::vreduce::reduce_rows_into(&batch.x, &batch.lengths, *n, sums, scratch);
-                Ok(sums)
-            }
-            Engine::SoftFp { n, sums, scratch } => {
-                crate::fp::vreduce::softfp_reduce_rows_into(
-                    &batch.x,
-                    &batch.lengths,
-                    *n,
-                    sums,
-                    scratch,
-                );
-                Ok(sums)
-            }
-        }
-    }
-}
 
 /// Sum of valid values across a batch's occupied rows (metrics).
 fn batch_values(batch: &Batch) -> u64 {
@@ -96,22 +42,36 @@ fn batch_values(batch: &Batch) -> u64 {
 }
 
 pub(crate) struct FusedArgs {
-    pub engine: EngineKind,
+    pub engine: EngineConfig,
     pub batch: usize,
     pub n: usize,
     pub deadline: Duration,
     pub ordered: bool,
     pub metrics: Arc<Metrics>,
+    pub pool: Arc<BatchPool>,
     pub rx_in: Receiver<Submission>,
     pub tx_out: Sender<Vec<super::Response>>,
     pub tx_ready: SyncSender<std::result::Result<(), String>>,
 }
 
 /// The fused single-shard pipeline: batcher + engine + software PIS in one
-/// thread (see module docs for why `shards = 1` stays fused).
+/// thread (see module docs for why `shards = 1` stays fused). Executed
+/// batches are recycled straight back into the batcher's pool, so the
+/// steady state allocates no batch buffers.
 pub(crate) fn run_fused(args: FusedArgs) {
-    let FusedArgs { engine, batch, n, deadline, ordered, metrics, rx_in, tx_out, tx_ready } = args;
-    let mut eng = match Engine::create(&engine, n) {
+    let FusedArgs {
+        engine,
+        batch,
+        n,
+        deadline,
+        ordered,
+        metrics,
+        pool,
+        rx_in,
+        tx_out,
+        tx_ready,
+    } = args;
+    let mut eng = match engine::build(&engine) {
         Ok(e) => e,
         Err(e) => {
             let _ = tx_ready.send(Err(format!("{e:#}")));
@@ -122,32 +82,34 @@ pub(crate) fn run_fused(args: FusedArgs) {
         return;
     }
 
-    let mut b = Batcher::new(batch, n, deadline);
+    let mut b = Batcher::new(batch, n, deadline).with_pool(Arc::clone(&pool));
     let mut asm = super::Assembler::new(ordered);
     let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
+    // Reusable engine output buffer — the fused hot path stays
+    // allocation-free at steady state.
+    let mut sums: Vec<f32> = Vec::new();
 
-    // Execute one batch and deliver everything it completes.
+    // Execute one batch, deliver everything it completes, and recycle the
+    // batch buffers.
     let mut run_batch = |full: Batch,
                          asm: &mut super::Assembler,
-                         birth: &mut std::collections::HashMap<u64, Instant>|
+                         birth: &mut std::collections::HashMap<u64, Instant>,
+                         sums: &mut Vec<f32>|
      -> bool {
         let t_exec = Instant::now();
-        // Borrow the engine's reusable output buffer directly — the fused
-        // hot path stays allocation-free at steady state.
-        let sums = match eng.run(&full) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("worker: execute failed: {e:#}");
-                return false;
-            }
-        };
+        if let Err(e) = eng.reduce_batch(&full, sums) {
+            eprintln!("worker: execute failed: {e:#}");
+            return false;
+        }
         metrics.record_batch(
             0,
             full.rows.len() as u64,
             batch_values(&full),
             t_exec.elapsed().as_nanos() as u64,
         );
-        super::deliver_rows(&full.rows, sums, asm, birth, &metrics, &tx_out)
+        let ok = super::deliver_rows(&full.rows, sums, asm, birth, &metrics, &tx_out);
+        pool.put(full);
+        ok
     };
 
     loop {
@@ -157,7 +119,7 @@ pub(crate) fn run_fused(args: FusedArgs) {
                     asm.expect(req_id, b.chunks_for(values.len()));
                     birth.insert(req_id, at);
                     for full in b.add_request(req_id, values) {
-                        if !run_batch(full, &mut asm, &mut birth) {
+                        if !run_batch(full, &mut asm, &mut birth, &mut sums) {
                             return false;
                         }
                     }
@@ -173,14 +135,14 @@ pub(crate) fn run_fused(args: FusedArgs) {
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(partial) = b.poll_deadline() {
-                    if !run_batch(partial, &mut asm, &mut birth) {
+                    if !run_batch(partial, &mut asm, &mut birth, &mut sums) {
                         return;
                     }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(rest) = b.flush() {
-                    run_batch(rest, &mut asm, &mut birth);
+                    run_batch(rest, &mut asm, &mut birth, &mut sums);
                 }
                 return;
             }
@@ -269,8 +231,7 @@ fn batcher_loop(
 /// past clippy's limit even before stealing).
 pub(crate) struct ShardArgs {
     pub shard: usize,
-    pub engine: EngineKind,
-    pub n: usize,
+    pub engine: EngineConfig,
     pub pool: Arc<StealPool>,
     /// Steal from peers when idle (`ServiceConfig::steal`).
     pub steal: bool,
@@ -306,7 +267,6 @@ pub(crate) fn run_shard(args: ShardArgs) {
     let ShardArgs {
         shard,
         engine,
-        n,
         pool,
         steal,
         tx_done,
@@ -317,7 +277,7 @@ pub(crate) fn run_shard(args: ShardArgs) {
         dead,
         tx_ready,
     } = args;
-    let mut eng = match Engine::create(&engine, n) {
+    let mut eng: Box<dyn ReduceEngine> = match engine::build(&engine) {
         Ok(e) => e,
         Err(e) => {
             let _ = tx_ready.send(Err(format!("shard {shard}: {e:#}")));
@@ -353,7 +313,7 @@ pub(crate) fn run_shard(args: ShardArgs) {
         seq,
         shard,
         sums: vec![f32::NAN; batch.rows.len()],
-        rows: batch.rows,
+        batch,
     };
     // A failed completion send means the reorder stage is gone (teardown,
     // or it died): close the pool before exiting so the batcher can never
@@ -368,6 +328,9 @@ pub(crate) fn run_shard(args: ShardArgs) {
             false
         }
     };
+    // Reusable engine output buffer (per-row sums land here before the
+    // occupied prefix is copied into the completion message).
+    let mut sums: Vec<f32> = Vec::new();
     let mut executed = 0u64;
     let mut failed = false;
     while let Some(SeqBatch { seq, batch }) = pool.pop(shard, steal && !failed) {
@@ -386,19 +349,16 @@ pub(crate) fn run_shard(args: ShardArgs) {
             continue;
         }
         let t_exec = Instant::now();
-        let sums = match eng.run(&batch) {
-            Ok(s) => s[..batch.rows.len()].to_vec(),
-            Err(e) => {
-                eprintln!("shard {shard}: execute failed: {e:#}");
-                dead[shard].store(true, Ordering::Relaxed);
-                failed = true;
-                metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
-                if !send_done(poison(seq, batch)) {
-                    return;
-                }
-                continue;
+        if let Err(e) = eng.reduce_batch(&batch, &mut sums) {
+            eprintln!("shard {shard}: execute failed: {e:#}");
+            dead[shard].store(true, Ordering::Relaxed);
+            failed = true;
+            metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
+            if !send_done(poison(seq, batch)) {
+                return;
             }
-        };
+            continue;
+        }
         executed += 1;
         metrics.record_batch(
             shard,
@@ -415,7 +375,8 @@ pub(crate) fn run_shard(args: ShardArgs) {
             // reorder buffer.
             std::thread::sleep(Duration::from_micros(rng.next_below(jitter_us)));
         }
-        if !send_done(ShardDone { seq, shard, rows: batch.rows, sums }) {
+        let out = sums[..batch.rows.len()].to_vec();
+        if !send_done(ShardDone { seq, shard, batch, sums: out }) {
             return;
         }
     }

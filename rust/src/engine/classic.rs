@@ -1,0 +1,147 @@
+//! The original coordinator engines, ported from the closed
+//! `Engine`/`EngineKind` enum pair onto [`ReduceEngine`].
+//!
+//! All three reduce by the **shared masked pairwise tree**
+//! ([`crate::fp::vreduce`]), so they are bit-identical to each other on
+//! any workload (`EngineCaps::shared_tree`) — the property the
+//! cross-engine goldens and `tests/differential_engines.rs` pin. The port
+//! is intentionally mechanical: same kernels, same reusable buffers, same
+//! outputs to the bit.
+
+use super::{Batch, EngineConfig, ReduceEngine};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// AOT XLA artifact via PJRT; the runtime is loaded filtered to the one
+/// artifact this engine executes. Not `Send` (PJRT wrappers are
+/// thread-bound) — built inside the owning worker thread.
+pub struct XlaEngine {
+    rt: Runtime,
+    artifact: String,
+}
+
+impl XlaEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self {
+            rt: Runtime::load_filtered(&cfg.artifacts_dir, Some(&cfg.artifact))?,
+            artifact: cfg.artifact.clone(),
+        })
+    }
+}
+
+impl ReduceEngine for XlaEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        let model = self.rt.model(&self.artifact)?;
+        let result = model.run(&batch.x, &batch.lengths)?;
+        sums_out.clear();
+        sums_out.extend_from_slice(&result.sums);
+        Ok(())
+    }
+}
+
+/// Vectorized native kernel (see [`crate::fp::vreduce`]).
+pub struct NativeEngine {
+    n: usize,
+    scratch: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self { n: cfg.n, scratch: Vec::with_capacity(cfg.n) })
+    }
+}
+
+impl ReduceEngine for NativeEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        crate::fp::vreduce::reduce_rows_into(
+            &batch.x,
+            &batch.lengths,
+            self.n,
+            sums_out,
+            &mut self.scratch,
+        );
+        Ok(())
+    }
+}
+
+/// Bit-accurate software IEEE adder per tree node — compute-heavy by
+/// design, the bench stand-in for an expensive FP adder IP.
+pub struct SoftFpEngine {
+    n: usize,
+    scratch: Vec<u64>,
+}
+
+impl SoftFpEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self { n: cfg.n, scratch: Vec::with_capacity(cfg.n) })
+    }
+}
+
+impl ReduceEngine for SoftFpEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        crate::fp::vreduce::softfp_reduce_rows_into(
+            &batch.x,
+            &batch.lengths,
+            self.n,
+            sums_out,
+            &mut self.scratch,
+        );
+        Ok(())
+    }
+}
+
+pub(crate) fn build_xla(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(XlaEngine::create(cfg)?))
+}
+
+pub(crate) fn build_native(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(NativeEngine::create(cfg)?))
+}
+
+pub(crate) fn build_softfp(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(SoftFpEngine::create(cfg)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn random_batch(rows: usize, n: usize, seed: u64) -> Batch {
+        let mut rng = Xoshiro256::seeded(seed);
+        let x: Vec<f32> = (0..rows * n).map(|_| (rng.next_f64() as f32 - 0.5) * 1e4).collect();
+        let lengths: Vec<i32> = (0..rows).map(|_| rng.range(0, n) as i32).collect();
+        let rows_meta = (0..rows as u64).map(|r| (r, 0u32)).collect();
+        Batch { x, lengths, rows: rows_meta }
+    }
+
+    #[test]
+    fn native_matches_the_free_function_kernel() {
+        let n = 32;
+        let batch = random_batch(6, n, 0xFEED);
+        let mut eng = NativeEngine::create(&EngineConfig::native(6, n)).unwrap();
+        let mut sums = Vec::new();
+        eng.reduce_batch(&batch, &mut sums).unwrap();
+        let want = crate::coordinator::native_reduce(&batch.x, &batch.lengths, n);
+        let got: Vec<u32> = sums.iter().map(|s| s.to_bits()).collect();
+        let want: Vec<u32> = want.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn softfp_shares_the_tree_on_exact_values() {
+        let n = 16;
+        let mut rng = Xoshiro256::seeded(3);
+        let x: Vec<f32> = (0..4 * n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect();
+        let lengths = vec![16, 9, 0, 5];
+        let batch = Batch { x, lengths, rows: vec![(0, 0), (1, 0), (2, 0), (3, 0)] };
+        let mut native = NativeEngine::create(&EngineConfig::native(4, n)).unwrap();
+        let mut soft = SoftFpEngine::create(&EngineConfig::softfp(4, n)).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        native.reduce_batch(&batch, &mut a).unwrap();
+        soft.reduce_batch(&batch, &mut b).unwrap();
+        let a: Vec<u32> = a.iter().map(|s| s.to_bits()).collect();
+        let b: Vec<u32> = b.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,455 @@
+//! Cycle-core adapter engines: the paper's circuits mounted behind the
+//! coordinator.
+//!
+//! Before this layer existed the cycle-accurate cores (`jugglepac`,
+//! `intac`, `baselines::treesched`) each exposed a bespoke
+//! `run_sets_into` API and could not serve traffic through the shard pool
+//! at all. Each adapter here owns one simulator instance plus reusable
+//! staging buffers, and maps a padded [`Batch`] onto the core's batched
+//! path: every non-empty row becomes one set, `reset()` +
+//! `run_sets_into()` drives the whole batch through the circuit, and the
+//! emitted bit patterns land back in `sums_out` by row. Zero-length
+//! (padding) rows short-circuit to `0.0`, exactly like the masked kernel.
+//!
+//! Numerics:
+//!
+//! - `jugglepac` / `treesched` run the real IEEE f32 substrate
+//!   ([`crate::fp`]), so their sums are bit-exact circuit outputs. Their
+//!   association order is schedule-dependent (not the shared pairwise
+//!   tree), so cross-engine bit-equality holds on exactly-summable
+//!   workloads only — the same §IV-E methodology the differential suite
+//!   uses. `tests/differential_engines.rs` pins service-through-adapter
+//!   outputs against the standalone `run_sets` entry points.
+//! - `intac` is an integer circuit; the adapter maps values through
+//!   signed 2^-[`INTAC_SCALE_BITS`] fixed point ([`intac_encode`] /
+//!   [`intac_decode`], the paper's fixed-point-ranged methodology).
+//!   Integer addition commutes, so it is `order_invariant`; values
+//!   outside the fixed-point range are a typed engine error (never a
+//!   silent saturation).
+//!
+//! The JugglePAC adapter inserts a conservative inter-set idle gap
+//! between rows so each reduction fully drains before the next row
+//! starts: no PIS label is ever reused while live, so *any* row length —
+//! including 1 — runs collision-free, below the paper's back-to-back
+//! minimum set size. The claim is enforced, not assumed: a non-zero
+//! collision count or an undrained row is an engine error (surfaced as a
+//! poisoned batch by the shard worker, never a silent wrong sum).
+
+use super::{Batch, EngineConfig, ReduceEngine};
+use crate::baselines::treesched::{SchedOutput, TreeScheduler};
+use crate::baselines::{SchedKind, TreeSchedulerConfig};
+use crate::fp::{bits_f32, f32_bits, F32};
+use crate::intac::{FinalAdderKind, Intac, IntacConfig, IntacOutput};
+use crate::jugglepac::{JugglePac, JugglePacConfig, OutputBeat, Provenance};
+use anyhow::{bail, Result};
+
+/// Idle-cycle budget for draining one batch (far beyond any real need;
+/// hitting it means the simulated circuit wedged — an engine error).
+const MAX_DRAIN: usize = 4_000_000;
+
+/// Fixed-point scale of the `intac` engine: values are rounded to
+/// multiples of 2^-16 before entering the integer circuit.
+pub const INTAC_SCALE_BITS: u32 = 16;
+
+fn ceil_log2(n: usize) -> usize {
+    (usize::BITS - n.max(1).next_power_of_two().leading_zeros() - 1) as usize
+}
+
+/// The inter-set idle gap (cycles) the JugglePAC adapter inserts between
+/// rows for a given adder latency and row width — exposed so differential
+/// tests can drive the standalone [`crate::jugglepac::run_sets`] with the
+/// identical schedule. Worst case per set after its last input:
+/// ~ceil(log2 n) merge levels, each bounded by the adder latency plus
+/// FIFO dwell, plus the lone-value expiry window (L + margin). Padded
+/// generously — idle cycles are cheap, collisions are not.
+pub fn jugglepac_gap(adder_latency: usize, n: usize) -> usize {
+    (adder_latency.max(1) + 8) * (ceil_log2(n.max(2)) + 6) + 64
+}
+
+/// The JugglePAC circuit configuration the adapter simulates for the
+/// given service knobs — exposed so differential tests drive the
+/// standalone [`crate::jugglepac::run_sets`] with the identical circuit.
+pub fn jugglepac_sim_config(adder_latency: usize, pis_registers: usize) -> JugglePacConfig {
+    JugglePacConfig {
+        fmt: F32,
+        adder_latency: adder_latency.max(1),
+        pis_registers: pis_registers.max(2),
+        provenance: Provenance::Off,
+        ..Default::default()
+    }
+}
+
+/// The TreeScheduler configuration the adapter simulates (SSA: one adder,
+/// greedy same-set pairing).
+pub fn treesched_sim_config(adder_latency: usize) -> TreeSchedulerConfig {
+    TreeSchedulerConfig { fmt: F32, adder_latency: adder_latency.max(1), kind: SchedKind::Ssa }
+}
+
+/// The INTAC configuration the adapter simulates: 64-bit inputs, 128-bit
+/// accumulator, 2 inputs/cycle, and the §IV-C **pipelined** final adder —
+/// minimum set length 1, so arbitrary row lengths run back-to-back
+/// without stalling.
+pub fn intac_sim_config() -> IntacConfig {
+    IntacConfig {
+        in_width: 64,
+        out_width: 128,
+        inputs_per_cycle: 2,
+        final_adder: FinalAdderKind::Pipelined,
+    }
+}
+
+/// Encode one f32 as the signed 2^-16 fixed-point word the `intac` engine
+/// accumulates (two's complement in u64). Values whose scaled magnitude
+/// leaves the safe integer range are a typed error.
+pub fn intac_encode(v: f32) -> Result<u64> {
+    let scaled = (v as f64) * (1u64 << INTAC_SCALE_BITS) as f64;
+    if !scaled.is_finite() || scaled.abs() >= (1u64 << 62) as f64 {
+        bail!("intac engine: value {v:e} outside the 2^-{INTAC_SCALE_BITS} fixed-point range");
+    }
+    Ok(scaled.round() as i64 as u64)
+}
+
+/// Decode an INTAC accumulator word back to f32. Inputs are 64-bit
+/// two's-complement words, so the true signed sum is the low 64 bits of
+/// the mod-2^128 circuit result (each term's sign-extension error is a
+/// multiple of 2^64) — valid when the row sum fits i64, which
+/// [`IntacEngine`] guards per row before the circuit runs.
+pub fn intac_decode(value: u128) -> f32 {
+    ((value as u64 as i64) as f64 / (1u64 << INTAC_SCALE_BITS) as f64) as f32
+}
+
+/// Shared staging: collect each non-empty row's live prefix as a u64
+/// bit-pattern set (reusing inner buffers), remember which row each set
+/// came from, and zero `sums_out` for all rows. Returns the number of
+/// staged sets.
+fn stage_rows(
+    batch: &Batch,
+    n: usize,
+    encode: impl Fn(f32) -> Result<u64>,
+    sets: &mut Vec<Vec<u64>>,
+    live: &mut Vec<usize>,
+    sums_out: &mut Vec<f32>,
+) -> Result<usize> {
+    let rows = batch.lengths.len();
+    debug_assert_eq!(batch.x.len(), rows * n, "batch shape mismatch");
+    sums_out.clear();
+    sums_out.resize(rows, 0.0);
+    live.clear();
+    let mut used = 0;
+    for (r, &len) in batch.lengths.iter().enumerate() {
+        let len = (len.max(0) as usize).min(n);
+        if len == 0 {
+            continue;
+        }
+        if used == sets.len() {
+            sets.push(Vec::with_capacity(n));
+        }
+        let dst = &mut sets[used];
+        dst.clear();
+        for &v in &batch.x[r * n..r * n + len] {
+            dst.push(encode(v)?);
+        }
+        live.push(r);
+        used += 1;
+    }
+    Ok(used)
+}
+
+/// The cycle-accurate JugglePAC circuit serving as a coordinator engine.
+pub struct JugglePacEngine {
+    jp: JugglePac,
+    n: usize,
+    /// Inter-set idle gap (cycles): long enough that a row's reduction
+    /// fully drains before the next row starts (see module docs).
+    gap: usize,
+    sets: Vec<Vec<u64>>,
+    live: Vec<usize>,
+    outs: Vec<OutputBeat>,
+}
+
+impl JugglePacEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        let sim = jugglepac_sim_config(cfg.adder_latency, cfg.pis_registers);
+        let gap = jugglepac_gap(sim.adder_latency, cfg.n);
+        Ok(Self {
+            jp: JugglePac::new(sim),
+            n: cfg.n,
+            gap,
+            sets: Vec::new(),
+            live: Vec::new(),
+            outs: Vec::new(),
+        })
+    }
+}
+
+impl ReduceEngine for JugglePacEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        let used = stage_rows(
+            batch,
+            self.n,
+            |v| Ok(f32_bits(v)),
+            &mut self.sets,
+            &mut self.live,
+            sums_out,
+        )?;
+        if used == 0 {
+            return Ok(());
+        }
+        self.jp.reset();
+        self.outs.clear();
+        let gap = self.gap;
+        let produced =
+            self.jp.run_sets_into(&mut self.outs, &self.sets[..used], &|_| gap, MAX_DRAIN);
+        if produced != used {
+            bail!("jugglepac engine: {produced}/{used} rows drained");
+        }
+        if self.jp.collisions() != 0 {
+            bail!("jugglepac engine: PIS label collision (inter-set gap too small)");
+        }
+        for o in &self.outs {
+            // Set ids are assigned in arrival order = staging order.
+            sums_out[self.live[o.set_id as usize]] = bits_f32(o.bits);
+        }
+        Ok(())
+    }
+}
+
+/// The multi-adder tree scheduler (SSA discipline) serving as a
+/// coordinator engine.
+pub struct TreeSchedEngine {
+    ts: TreeScheduler,
+    n: usize,
+    sets: Vec<Vec<u64>>,
+    live: Vec<usize>,
+    outs: Vec<SchedOutput>,
+}
+
+impl TreeSchedEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self {
+            ts: TreeScheduler::new(treesched_sim_config(cfg.adder_latency)),
+            n: cfg.n,
+            sets: Vec::new(),
+            live: Vec::new(),
+            outs: Vec::new(),
+        })
+    }
+}
+
+impl ReduceEngine for TreeSchedEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        let used = stage_rows(
+            batch,
+            self.n,
+            |v| Ok(f32_bits(v)),
+            &mut self.sets,
+            &mut self.live,
+            sums_out,
+        )?;
+        if used == 0 {
+            return Ok(());
+        }
+        self.ts.reset();
+        self.outs.clear();
+        let produced = self.ts.run_sets_into(&mut self.outs, &self.sets[..used], MAX_DRAIN);
+        if produced != used {
+            bail!("treesched engine: {produced}/{used} rows drained");
+        }
+        for o in &self.outs {
+            // Emission order is schedule-dependent; `set` keys the row.
+            sums_out[self.live[o.set as usize]] = bits_f32(o.bits);
+        }
+        Ok(())
+    }
+}
+
+/// The carry-save INTAC circuit serving as a fixed-point coordinator
+/// engine.
+pub struct IntacEngine {
+    m: Intac,
+    n: usize,
+    sets: Vec<Vec<u64>>,
+    live: Vec<usize>,
+    outs: Vec<IntacOutput>,
+}
+
+impl IntacEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self {
+            m: Intac::new(intac_sim_config()),
+            n: cfg.n,
+            sets: Vec::new(),
+            live: Vec::new(),
+            outs: Vec::new(),
+        })
+    }
+}
+
+impl ReduceEngine for IntacEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        let used =
+            stage_rows(batch, self.n, intac_encode, &mut self.sets, &mut self.live, sums_out)?;
+        if used == 0 {
+            return Ok(());
+        }
+        // Per-value range checks are not enough: a row of individually
+        // in-range words can still sum past i64, and the low-64-bit
+        // decode would then wrap to a silently wrong (sign-flipped) sum.
+        // Guard the whole row before it enters the circuit.
+        for set in &self.sets[..used] {
+            let sum: i128 = set.iter().map(|&w| w as i64 as i128).sum();
+            if i64::try_from(sum).is_err() {
+                bail!("intac engine: row sum overflows the 64-bit fixed-point accumulator");
+            }
+        }
+        self.m.reset();
+        self.outs.clear();
+        let produced = self.m.run_sets_into(&mut self.outs, &self.sets[..used], MAX_DRAIN);
+        if produced != used {
+            bail!("intac engine: {produced}/{used} rows drained");
+        }
+        if self.m.stalled() {
+            bail!("intac engine: final adder stalled (pipelined adder should never)");
+        }
+        for o in &self.outs {
+            sums_out[self.live[o.set_id as usize]] = intac_decode(o.value);
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn build_jugglepac(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(JugglePacEngine::create(cfg)?))
+}
+
+pub(crate) fn build_treesched(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(TreeSchedEngine::create(cfg)?))
+}
+
+pub(crate) fn build_intac(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(IntacEngine::create(cfg)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    /// Exact dyadic batch: every engine must return the plain sum.
+    fn dyadic_batch(rows: usize, n: usize, seed: u64) -> (Batch, Vec<f32>) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut x = vec![0.0f32; rows * n];
+        let mut lengths = vec![0i32; rows];
+        let mut want = vec![0.0f32; rows];
+        for r in 0..rows {
+            // Mix lengths across 0 (padding), 1 (lone value), and full.
+            let len = match r % 4 {
+                0 => 0,
+                1 => 1,
+                2 => rng.range(2, n),
+                _ => n,
+            };
+            lengths[r] = len as i32;
+            for i in 0..len {
+                let v = rng.range_i64(-64, 64) as f32 / 8.0;
+                x[r * n + i] = v;
+                want[r] += v;
+            }
+        }
+        let rows_meta = (0..rows as u64).map(|r| (r, 0u32)).collect();
+        (Batch { x, lengths, rows: rows_meta }, want)
+    }
+
+    fn engine_for(name: &str, rows: usize, n: usize) -> Box<dyn ReduceEngine> {
+        super::super::build(&EngineConfig::named(name, rows, n)).unwrap()
+    }
+
+    #[test]
+    fn adapters_compute_exact_sums_across_row_shapes() {
+        for name in ["jugglepac", "treesched", "intac"] {
+            for (rows, n, seed) in [(8usize, 16usize, 1u64), (5, 33, 2), (4, 64, 3)] {
+                let (batch, want) = dyadic_batch(rows, n, seed);
+                let mut eng = engine_for(name, rows, n);
+                let mut sums = Vec::new();
+                eng.reduce_batch(&batch, &mut sums).unwrap();
+                assert_eq!(sums.len(), rows, "{name} {rows}x{n}");
+                for (r, (&got, &w)) in sums.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(got, w, "{name} {rows}x{n} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adapters_are_reusable_across_batches() {
+        // Back-to-back reduce_batch calls on one instance (the shard
+        // worker's steady state) must stay correct — reset() discipline.
+        for name in ["jugglepac", "treesched", "intac"] {
+            let mut eng = engine_for(name, 4, 24);
+            for seed in 0..4u64 {
+                let (batch, want) = dyadic_batch(4, 24, 100 + seed);
+                let mut sums = Vec::new();
+                eng.reduce_batch(&batch, &mut sums).unwrap();
+                for (r, (&got, &w)) in sums.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(got, w, "{name} pass {seed} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jugglepac_adapter_handles_all_short_rows_without_collisions() {
+        // Every row below the paper's back-to-back minimum set size: the
+        // inter-set gap must keep the circuit collision-free (a collision
+        // is an Err, not a wrong sum — this asserts Ok + exactness).
+        let n = 16;
+        let rows = 12;
+        let mut x = vec![0.0f32; rows * n];
+        let mut lengths = vec![0i32; rows];
+        let mut want = vec![0.0f32; rows];
+        for r in 0..rows {
+            let len = 1 + r % 3;
+            lengths[r] = len as i32;
+            for i in 0..len {
+                let v = (r * 7 + i) as f32 - 8.0;
+                x[r * n + i] = v;
+                want[r] += v;
+            }
+        }
+        let batch =
+            Batch { x, lengths, rows: (0..rows as u64).map(|r| (r, 0u32)).collect() };
+        let mut eng = engine_for("jugglepac", rows, n);
+        let mut sums = Vec::new();
+        eng.reduce_batch(&batch, &mut sums).unwrap();
+        assert_eq!(sums, want);
+    }
+
+    #[test]
+    fn intac_row_sum_overflow_is_a_typed_error_not_a_wrapped_sum() {
+        // Each value individually passes the per-value range check
+        // (scaled ~3.2e18 < 2^62), but three of them sum past i64::MAX:
+        // must be an engine error, never a silently sign-flipped sum.
+        let v = 4.9e13f32;
+        let n = 4;
+        let mut x = vec![0.0f32; n];
+        x[..3].copy_from_slice(&[v, v, v]);
+        let batch = Batch { x, lengths: vec![3], rows: vec![(0, 0)] };
+        let mut eng = engine_for("intac", 1, n);
+        let mut sums = Vec::new();
+        let err = eng.reduce_batch(&batch, &mut sums).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
+    }
+
+    #[test]
+    fn intac_fixed_point_round_trip_and_range_guard() {
+        assert_eq!(intac_decode(intac_encode(1.5).unwrap() as u128), 1.5);
+        assert_eq!(intac_decode(intac_encode(-0.125).unwrap() as u128), -0.125);
+        // Negative sums decode through the low-64-bit path.
+        let a = intac_encode(-3.0).unwrap();
+        let b = intac_encode(1.0).unwrap();
+        let sum = (a as u128).wrapping_add(b as u128);
+        assert_eq!(intac_decode(sum), -2.0);
+        assert!(intac_encode(f32::MAX).is_err(), "out-of-range is typed, not saturated");
+        assert!(intac_encode(f32::INFINITY).is_err());
+    }
+}

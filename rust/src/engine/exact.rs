@@ -1,0 +1,405 @@
+//! Exact summation: a superaccumulator engine (Neal 2015,
+//! arXiv:1505.05571).
+//!
+//! Every f32 is an integer multiple of 2^-149 with at most 24 significant
+//! bits, so the *exact* sum of any set fits a fixed-point accumulator
+//! spanning the format's full exponent range (277 bits) plus carry
+//! headroom. [`SuperAccumulator`] is Neal's "small superaccumulator"
+//! specialized to f32: eleven signed 64-bit limbs, each owning a 32-bit
+//! window of the scaled value, with carries left pending between limbs so
+//! each `add` touches exactly two limbs (no per-add propagation). Limbs
+//! absorb ~2^30 additions before a renormalization pass is needed — one
+//! pass per batch row in practice, amortized to nothing.
+//!
+//! The final [`SuperAccumulator::round_f32`] performs the *only* rounding
+//! in the whole pipeline (IEEE round-to-nearest-even, subnormals and
+//! overflow-to-infinity included), so the result is **correctly rounded**
+//! and — because integer addition commutes — **permutation invariant**:
+//! `EngineCaps { bit_exact: true, order_invariant: true }`. The classic
+//! counterexample `[1e30, 1.0, -1e30]` sums to exactly `1.0` here, where
+//! every rounding-per-add engine returns `0.0`.
+//!
+//! Specials follow IEEE addition semantics: any NaN input (or opposing
+//! infinities) → NaN, one-signed infinities → that infinity, and `-0.0`
+//! is returned only when every input was `-0.0` (the all-negative-zero
+//! sum), matching the hardware adder bit for bit — property-tested
+//! against `a + b` on random pairs spanning the full f32 range.
+//!
+//! Scope note: the service chunks sets longer than the engine row width
+//! `n` across rows and combines chunk partials in f32 (the assembler's
+//! shared tree), so end-to-end correctly-rounded sums hold for sets that
+//! fit one row (`len <= n`). Size `n` accordingly (e.g. `serve
+//! --engine exact --n 1024 --max-len 1000`).
+
+use super::{Batch, EngineConfig, ReduceEngine};
+use anyhow::Result;
+
+/// Number of 32-bit limb windows: 277 bits of f32 dynamic range plus
+/// ~2^30-addition carry headroom lands at bit 307 < 10·32; the eleventh
+/// limb carries the two's-complement sign.
+const LIMBS: usize = 11;
+
+/// Renormalize after this many pending additions (each add contributes
+/// < 2^32 per limb; i64 limbs hold 2^30 of those with margin).
+const RENORM_EVERY: u32 = 1 << 30;
+
+/// Neal-2015 small superaccumulator for f32: exact fixed-point sum with
+/// one final rounding.
+#[derive(Clone, Debug)]
+pub struct SuperAccumulator {
+    /// Signed limbs; value = Σ limbs\[i\] · 2^(32·i - 149) (before
+    /// specials). After [`Self::renorm`], limbs 0..10 are in \[0, 2^32)
+    /// and limb 10 is 0 (non-negative total) or -1 (negative total).
+    limbs: [i64; LIMBS],
+    /// Additions since the last renormalization.
+    pending: u32,
+    nan: bool,
+    pos_inf: bool,
+    neg_inf: bool,
+    /// True once any value (including specials/zeros) was added.
+    saw_value: bool,
+    /// Still true only while every added value has been literal `-0.0`.
+    only_neg_zero: bool,
+}
+
+impl Default for SuperAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SuperAccumulator {
+    pub fn new() -> Self {
+        Self {
+            limbs: [0; LIMBS],
+            pending: 0,
+            nan: false,
+            pos_inf: false,
+            neg_inf: false,
+            saw_value: false,
+            only_neg_zero: true,
+        }
+    }
+
+    /// Reset to the empty sum (retains nothing; the struct is plain data).
+    pub fn clear(&mut self) {
+        *self = Self::new();
+    }
+
+    /// Add one f32 exactly. O(1): touches two limbs.
+    pub fn add(&mut self, v: f32) {
+        let bits = v.to_bits();
+        let neg = bits >> 31 == 1;
+        let e = (bits >> 23) & 0xFF;
+        let frac = bits & 0x7F_FFFF;
+        self.saw_value = true;
+        if e == 0xFF {
+            if frac != 0 {
+                self.nan = true;
+            } else if neg {
+                self.neg_inf = true;
+            } else {
+                self.pos_inf = true;
+            }
+            self.only_neg_zero = false;
+            return;
+        }
+        let m = (if e == 0 { frac } else { frac | 0x80_0000 }) as i64;
+        if m == 0 {
+            // Signed zero: -0.0 keeps the all-negative-zero flag alive.
+            if !neg {
+                self.only_neg_zero = false;
+            }
+            return;
+        }
+        self.only_neg_zero = false;
+        let m = if neg { -m } else { m };
+        // Uniform scaling: value = m · 2^(shift - 149), shift in [0, 253]
+        // (subnormals share shift 0 with the smallest normals).
+        let shift = (if e == 0 { 0 } else { e - 1 }) as usize;
+        let (li, off) = (shift / 32, shift % 32);
+        let wide = (m as i128) << off; // ≤ 55 significant bits
+        let lo = (wide as u64 & 0xFFFF_FFFF) as i64; // wide mod 2^32, in [0, 2^32)
+        let hi = (wide >> 32) as i64; // floor(wide / 2^32), |hi| < 2^24
+        self.limbs[li] += lo;
+        self.limbs[li + 1] += hi;
+        self.pending += 1;
+        if self.pending >= RENORM_EVERY {
+            self.renorm();
+        }
+    }
+
+    /// Propagate pending carries: limbs 0..10 into \[0, 2^32), sign folded
+    /// into the top limb.
+    fn renorm(&mut self) {
+        let mut carry: i64 = 0;
+        for l in self.limbs[..LIMBS - 1].iter_mut() {
+            let t = *l + carry;
+            let lo = t & 0xFFFF_FFFF; // t mod 2^32, in [0, 2^32)
+            carry = (t - lo) >> 32; // floor(t / 2^32)
+            *l = lo;
+        }
+        self.limbs[LIMBS - 1] += carry;
+        self.pending = 0;
+    }
+
+    /// Round the exact sum to f32 (round-to-nearest-even) — the single
+    /// rounding step of the whole reduction.
+    pub fn round_f32(&mut self) -> f32 {
+        if self.nan || (self.pos_inf && self.neg_inf) {
+            return f32::NAN;
+        }
+        if self.pos_inf {
+            return f32::INFINITY;
+        }
+        if self.neg_inf {
+            return f32::NEG_INFINITY;
+        }
+        self.renorm();
+        let neg = self.limbs[LIMBS - 1] < 0;
+        // Sign-magnitude limbs (two's-complement negate when negative).
+        let mut mag = [0u32; LIMBS];
+        if neg {
+            let mut carry = 1u64;
+            for (dst, &l) in mag.iter_mut().zip(self.limbs.iter()) {
+                let t = (!(l as u32)) as u64 + carry;
+                *dst = t as u32;
+                carry = t >> 32;
+            }
+        } else {
+            for (dst, &l) in mag.iter_mut().zip(self.limbs.iter()) {
+                *dst = l as u32;
+            }
+        }
+        let Some(p) = top_bit(&mag) else {
+            // Exact zero: IEEE sums are +0.0 unless every input was -0.0.
+            return if self.saw_value && self.only_neg_zero { -0.0 } else { 0.0 };
+        };
+        let sign = if neg { 1u32 << 31 } else { 0 };
+        if p <= 23 {
+            // Below 2^24 the scaled integer *is* the f32 bit pattern
+            // (subnormals and the first normal binade) — exact.
+            return f32::from_bits(sign | mag[0]);
+        }
+        let drop = p - 23;
+        let mut mant = window(&mag, drop, 24);
+        let guard = bit(&mag, drop - 1) == 1;
+        let sticky = drop >= 2 && any_below(&mag, drop - 1);
+        if guard && (sticky || mant & 1 == 1) {
+            mant += 1;
+        }
+        let mut e_field = (p - 22) as u32;
+        if mant == 1 << 24 {
+            mant >>= 1;
+            e_field += 1;
+        }
+        if e_field >= 255 {
+            return f32::from_bits(sign | 0x7F80_0000); // overflow → ±inf
+        }
+        f32::from_bits(sign | (e_field << 23) | (mant as u32 & 0x7F_FFFF))
+    }
+}
+
+fn bit(mag: &[u32; LIMBS], i: usize) -> u32 {
+    (mag[i / 32] >> (i % 32)) & 1
+}
+
+fn top_bit(mag: &[u32; LIMBS]) -> Option<usize> {
+    mag.iter()
+        .enumerate()
+        .rev()
+        .find(|(_, &l)| l != 0)
+        .map(|(i, &l)| i * 32 + 31 - l.leading_zeros() as usize)
+}
+
+/// Bits \[lo, lo+width) of the magnitude, LSB-first.
+fn window(mag: &[u32; LIMBS], lo: usize, width: usize) -> u64 {
+    let mut out = 0u64;
+    for k in 0..width {
+        out |= (bit(mag, lo + k) as u64) << k;
+    }
+    out
+}
+
+/// Any bit strictly below position `k` set?
+fn any_below(mag: &[u32; LIMBS], k: usize) -> bool {
+    let (li, off) = (k / 32, k % 32);
+    if mag[..li].iter().any(|&l| l != 0) {
+        return true;
+    }
+    off > 0 && mag[li] & ((1u32 << off) - 1) != 0
+}
+
+/// The `exact` coordinator engine: one superaccumulator reused across
+/// rows, one correctly-rounded sum per row.
+pub struct ExactEngine {
+    n: usize,
+    acc: SuperAccumulator,
+}
+
+impl ExactEngine {
+    pub fn create(cfg: &EngineConfig) -> Result<Self> {
+        Ok(Self { n: cfg.n, acc: SuperAccumulator::new() })
+    }
+}
+
+impl ReduceEngine for ExactEngine {
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()> {
+        sums_out.clear();
+        for (row, &len) in batch.x.chunks_exact(self.n).zip(batch.lengths.iter()) {
+            let live = (len.max(0) as usize).min(self.n);
+            self.acc.clear();
+            for &v in &row[..live] {
+                self.acc.add(v);
+            }
+            sums_out.push(self.acc.round_f32());
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    Ok(Box::new(ExactEngine::create(cfg)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn sum_exact(vals: &[f32]) -> f32 {
+        let mut acc = SuperAccumulator::new();
+        for &v in vals {
+            acc.add(v);
+        }
+        acc.round_f32()
+    }
+
+    /// Same-bits comparison that treats every NaN as equal.
+    fn same(a: f32, b: f32) -> bool {
+        (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+    }
+
+    #[test]
+    fn pair_sums_match_the_hardware_adder_across_the_full_range() {
+        // A single f32 add is itself correctly rounded (RNE), so on pairs
+        // the hardware FPU is an exact oracle — including subnormals,
+        // overflow to infinity, specials, and signed zeros.
+        let mut rng = Xoshiro256::seeded(0xE9AC7);
+        for case in 0..200_000 {
+            let a = f32::from_bits(rng.next_u64() as u32);
+            let b = f32::from_bits(rng.next_u64() as u32);
+            let want = a + b;
+            let got = sum_exact(&[a, b]);
+            assert!(
+                same(got, want),
+                "case {case}: {a:e} + {b:e}: got {got:e} ({:#010x}), want {want:e} ({:#010x})",
+                got.to_bits(),
+                want.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn singletons_and_empty_sum_round_trip() {
+        let mut rng = Xoshiro256::seeded(7);
+        for _ in 0..50_000 {
+            let v = f32::from_bits(rng.next_u64() as u32);
+            assert!(same(sum_exact(&[v]), v), "{v:e} ({:#010x})", v.to_bits());
+        }
+        assert_eq!(sum_exact(&[]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn catastrophic_cancellation_is_exact() {
+        // Sequential f32 summation returns 0.0 here; the exact sum is 1.0.
+        assert_eq!(sum_exact(&[1e30, 1.0, -1e30]), 1.0);
+        assert_eq!(sum_exact(&[f32::MAX, f32::MIN_POSITIVE, -f32::MAX]), f32::MIN_POSITIVE);
+        // Many small values against one large one.
+        let mut vals = vec![16_777_216.0f32]; // 2^24
+        vals.extend([0.25f32; 8]); // exact +2.0
+        vals.push(-16_777_216.0);
+        assert_eq!(sum_exact(&vals), 2.0);
+    }
+
+    #[test]
+    fn rounding_is_nearest_even_at_the_halfway_point() {
+        // 2^24 + 1 is exactly halfway between representable 2^24 and
+        // 2^24 + 2: RNE picks the even mantissa (2^24).
+        assert_eq!(sum_exact(&[16_777_216.0, 1.0]), 16_777_216.0);
+        // 2^24 + 3 rounds up to 2^24 + 4.
+        assert_eq!(sum_exact(&[16_777_216.0, 2.0, 1.0]), 16_777_220.0);
+        // The sticky bit breaks the tie upward: 2^24 + 1 + 2^-10.
+        assert_eq!(sum_exact(&[16_777_216.0, 1.0, 0.0009765625]), 16_777_218.0);
+    }
+
+    #[test]
+    fn specials_follow_ieee_addition() {
+        assert!(sum_exact(&[f32::NAN, 1.0]).is_nan());
+        assert!(sum_exact(&[f32::INFINITY, f32::NEG_INFINITY]).is_nan());
+        assert_eq!(sum_exact(&[f32::INFINITY, -1e30]), f32::INFINITY);
+        assert_eq!(sum_exact(&[f32::NEG_INFINITY, 1e30]), f32::NEG_INFINITY);
+        // Overflow of finite values → infinity.
+        assert_eq!(sum_exact(&[f32::MAX, f32::MAX]), f32::INFINITY);
+        assert_eq!(sum_exact(&[-f32::MAX, -f32::MAX]), f32::NEG_INFINITY);
+        // Near-overflow that rounds back into range stays finite.
+        assert_eq!(sum_exact(&[f32::MAX, f32::MIN_POSITIVE]), f32::MAX);
+        // Signed zeros: -0 only when every input is -0.
+        assert_eq!(sum_exact(&[-0.0, -0.0]).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(sum_exact(&[-0.0, 0.0]).to_bits(), 0.0f32.to_bits());
+        assert_eq!(sum_exact(&[1.5, -1.5]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn sums_are_permutation_invariant() {
+        let mut rng = Xoshiro256::seeded(0x5EED);
+        for _ in 0..2_000 {
+            let len = rng.range(1, 40);
+            let mut vals: Vec<f32> = (0..len)
+                .map(|_| {
+                    // Finite values across a wide exponent spread.
+                    let e = rng.range(1, 250) as u32;
+                    let frac = rng.next_u64() as u32 & 0x7F_FFFF;
+                    let sign = (rng.chance(0.5) as u32) << 31;
+                    f32::from_bits(sign | (e << 23) | frac)
+                })
+                .collect();
+            let want = sum_exact(&vals);
+            for _ in 0..4 {
+                rng.shuffle(&mut vals);
+                assert!(same(sum_exact(&vals), want));
+            }
+        }
+    }
+
+    #[test]
+    fn renormalization_threshold_is_exercised() {
+        // Force mid-stream renorms with a tiny threshold stand-in: add
+        // enough values to trigger the real one at least logically by
+        // calling renorm manually between adds — results must not change.
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 1.25e-3).collect();
+        let plain = sum_exact(&vals);
+        let mut acc = SuperAccumulator::new();
+        for (i, &v) in vals.iter().enumerate() {
+            acc.add(v);
+            if i % 7 == 0 {
+                acc.renorm();
+            }
+        }
+        assert!(same(acc.round_f32(), plain));
+    }
+
+    #[test]
+    fn engine_reduces_rows_with_masking() {
+        let n = 8;
+        let mut eng = ExactEngine::create(&EngineConfig::exact(2, n)).unwrap();
+        let mut x = vec![0.0f32; 2 * n];
+        x[..3].copy_from_slice(&[1e30, 1.0, -1e30]);
+        x[n] = 2.5;
+        x[n + 1] = 7.5; // beyond len=1: masked out
+        let batch = Batch { x, lengths: vec![3, 1], rows: vec![(0, 0), (1, 0)] };
+        let mut sums = Vec::new();
+        eng.reduce_batch(&batch, &mut sums).unwrap();
+        assert_eq!(sums, vec![1.0, 2.5]);
+    }
+}

@@ -1,0 +1,407 @@
+//! Pluggable reduction engines — the open engine platform behind the
+//! coordinator.
+//!
+//! The service layer used to hard-code its adders as a closed
+//! `Engine`/`EngineKind` enum pair; every new reduction backend meant
+//! editing the coordinator. The paper's promise is the opposite: a drop-in
+//! accumulation block that handles back-to-back variable-length sets in
+//! order *regardless of what adder sits inside it*. This module is that
+//! promise at the system layer:
+//!
+//! - [`ReduceEngine`] — the one trait every backend implements: execute a
+//!   padded [`Batch`], one sum per row, reusing internal scratch so steady
+//!   state stays allocation-free;
+//! - [`EngineConfig`] — a `Clone + Send` description of an engine
+//!   (registry name + shape + backend knobs). Engines themselves need not
+//!   be `Send` (the PJRT wrappers are not), so workers build their engine
+//!   *inside* the owning thread from the config;
+//! - [`REGISTRY`] — the name-keyed catalogue: capability flags, shape
+//!   resolution, and a build function per engine. `ServiceConfig`,
+//!   `serve --engine <name>`, the differential suite, and the benches all
+//!   select engines through it;
+//! - [`EngineCaps`] — typed capability flags tests and callers can rely
+//!   on (`bit_exact`, `order_invariant`, `shared_tree`).
+//!
+//! Engines shipped in-tree:
+//!
+//! | name        | backend                                            | caps |
+//! |-------------|----------------------------------------------------|------|
+//! | `xla`       | AOT XLA artifact via PJRT                          | shared_tree |
+//! | `native`    | vectorized masked pairwise tree ([`crate::fp::vreduce`]) | shared_tree |
+//! | `softfp`    | bit-accurate software IEEE adder per tree node     | shared_tree |
+//! | `jugglepac` | cycle-accurate JugglePAC circuit ([`crate::jugglepac`]) | — |
+//! | `treesched` | multi-adder tree scheduler ([`crate::baselines::treesched`]) | — |
+//! | `intac`     | carry-save integer circuit ([`crate::intac`]), fixed-point | order_invariant |
+//! | `exact`     | Neal-2015 superaccumulator ([`exact::SuperAccumulator`]) | bit_exact, order_invariant |
+//!
+//! # Adding an engine
+//!
+//! 1. implement [`ReduceEngine`] in a submodule (reusable scratch in the
+//!    struct, `reduce_batch` fills one sum per row);
+//! 2. add a `build` fn `fn(&EngineConfig) -> Result<Box<dyn ReduceEngine>>`;
+//! 3. append an [`EngineEntry`] to [`REGISTRY`] (keep it sorted by name) —
+//!    the CLI, the coordinator, and the test matrix pick it up from there.
+
+pub mod classic;
+pub mod cycle_adapter;
+pub mod exact;
+
+pub use classic::{NativeEngine, SoftFpEngine, XlaEngine};
+pub use cycle_adapter::{IntacEngine, JugglePacEngine, TreeSchedEngine};
+pub use exact::{ExactEngine, SuperAccumulator};
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// A padded batch ready for an engine: row-major `[B, N]` values,
+/// per-row live lengths, and the `(req_id, chunk_idx)` provenance of each
+/// occupied row. Built by the coordinator's batcher; engines treat the
+/// first `lengths[r]` values of each row as live and the rest as masked.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Row-major [B, N], zero-padded.
+    pub x: Vec<f32>,
+    pub lengths: Vec<i32>,
+    /// (req_id, chunk_idx) per occupied row.
+    pub rows: Vec<(u64, u32)>,
+}
+
+/// One pluggable reduction backend.
+///
+/// `reduce_batch` executes one padded batch and fills `sums_out` with one
+/// sum per row — **all** `batch.lengths.len()` rows, padding rows included
+/// (as the AOT artifacts do); callers slice to `batch.rows.len()`.
+/// Implementations keep their scratch buffers in `self` so steady-state
+/// serving allocates nothing per batch.
+///
+/// Engines are deliberately **not** required to be `Send`: the XLA/PJRT
+/// wrapper types are thread-bound, so a worker builds its engine inside
+/// its own thread via [`build`] from a `Send` [`EngineConfig`].
+pub trait ReduceEngine {
+    /// Execute one padded batch; one sum per row into `sums_out`.
+    fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// Typed capability flags an engine guarantees. Tests select assertions by
+/// these rather than by engine name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// The returned sum is the infinite-precision row sum rounded once
+    /// (IEEE round-to-nearest-even) — correctly rounded, no accumulation
+    /// error.
+    pub bit_exact: bool,
+    /// The sum is invariant under any permutation of a row's live values.
+    pub order_invariant: bool,
+    /// Reduces by the shared masked pairwise tree
+    /// ([`crate::fp::vreduce::tree_reduce_in_place`]) — bit-identical to
+    /// every other `shared_tree` engine on *any* workload, not just
+    /// exactly-summable ones.
+    pub shared_tree: bool,
+}
+
+/// Engine selection + knobs: everything a worker thread needs to build its
+/// engine locally. `Clone + Send` by construction (the engines themselves
+/// need not be).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Registry key (see [`REGISTRY`]); validated by [`lookup`].
+    pub name: String,
+    /// Engine batch shape: rows per batch…
+    pub batch: usize,
+    /// …and values per row. For `xla` both are read from the artifact
+    /// manifest instead.
+    pub n: usize,
+    /// `xla` only: artifact directory and name.
+    pub artifacts_dir: PathBuf,
+    pub artifact: String,
+    /// Cycle adapters (`jugglepac`/`treesched`): simulated adder pipeline
+    /// latency L. Short latencies keep the per-row drain small; raise to
+    /// the paper's 14 to serve through the headline configuration.
+    pub adder_latency: usize,
+    /// `jugglepac` adapter: PIS register count R.
+    pub pis_registers: usize,
+}
+
+/// Default artifact name (the serve path's headline kernel).
+pub const DEFAULT_ARTIFACT: &str = "reduce_f32_b32_n128";
+
+impl EngineConfig {
+    /// Config for registry engine `name` with shape `[batch, n]` and
+    /// default backend knobs. The name is validated at [`build`] /
+    /// [`resolve_shape`] time (typed [`UnknownEngine`] error).
+    pub fn named(name: &str, batch: usize, n: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            batch,
+            n,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            artifact: DEFAULT_ARTIFACT.to_string(),
+            adder_latency: 2,
+            pis_registers: 4,
+        }
+    }
+
+    /// The vectorized native kernel.
+    pub fn native(batch: usize, n: usize) -> Self {
+        Self::named("native", batch, n)
+    }
+
+    /// The bit-accurate software IEEE adder (compute-heavy bench stand-in).
+    pub fn softfp(batch: usize, n: usize) -> Self {
+        Self::named("softfp", batch, n)
+    }
+
+    /// The Neal-2015 superaccumulator (correctly rounded, permutation
+    /// invariant).
+    pub fn exact(batch: usize, n: usize) -> Self {
+        Self::named("exact", batch, n)
+    }
+
+    /// The cycle-accurate JugglePAC circuit mounted as a service engine.
+    pub fn jugglepac(batch: usize, n: usize) -> Self {
+        Self::named("jugglepac", batch, n)
+    }
+
+    /// The multi-adder tree scheduler mounted as a service engine.
+    pub fn treesched(batch: usize, n: usize) -> Self {
+        Self::named("treesched", batch, n)
+    }
+
+    /// The carry-save integer circuit mounted as a fixed-point engine.
+    pub fn intac(batch: usize, n: usize) -> Self {
+        Self::named("intac", batch, n)
+    }
+
+    /// An AOT XLA artifact via PJRT (shape comes from the manifest).
+    pub fn xla(artifacts_dir: PathBuf, artifact: &str) -> Self {
+        let mut cfg = Self::named("xla", 0, 0);
+        cfg.artifacts_dir = artifacts_dir;
+        cfg.artifact = artifact.to_string();
+        cfg
+    }
+}
+
+/// Typed error for an engine name the registry does not know; its display
+/// lists every registered name so `serve --engine <typo>` is self-healing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownEngine {
+    pub name: String,
+}
+
+impl std::fmt::Display for UnknownEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown engine {:?}; available engines: {}",
+            self.name,
+            engine_names().join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownEngine {}
+
+/// One registry row: name, capabilities, and the two functions the
+/// coordinator needs — shape resolution (before workers start) and engine
+/// construction (inside each worker thread).
+pub struct EngineEntry {
+    pub name: &'static str,
+    pub caps: EngineCaps,
+    /// One-line description (usage strings, docs).
+    pub summary: &'static str,
+    /// Resolve the `[batch, n]` shape this config will serve.
+    pub shape: fn(&EngineConfig) -> Result<(usize, usize)>,
+    /// Build the engine (called in the owning worker thread).
+    pub build: fn(&EngineConfig) -> Result<Box<dyn ReduceEngine>>,
+}
+
+/// Shape straight from the config, validated non-degenerate.
+fn config_shape(cfg: &EngineConfig) -> Result<(usize, usize)> {
+    if cfg.batch == 0 || cfg.n == 0 {
+        bail!("engine {:?} needs batch >= 1 and n >= 1, got [{}, {}]", cfg.name, cfg.batch, cfg.n);
+    }
+    Ok((cfg.batch, cfg.n))
+}
+
+/// Shape from the artifact manifest (the `xla` engine).
+fn xla_shape(cfg: &EngineConfig) -> Result<(usize, usize)> {
+    let specs = crate::runtime::read_manifest(&cfg.artifacts_dir)?;
+    let spec = specs
+        .iter()
+        .find(|s| s.name == cfg.artifact)
+        .with_context(|| format!("artifact {:?} not in manifest", cfg.artifact))?;
+    Ok((spec.batch, spec.n))
+}
+
+const SHARED_TREE: EngineCaps =
+    EngineCaps { bit_exact: false, order_invariant: false, shared_tree: true };
+
+/// The engine catalogue, sorted by name. Every selection surface
+/// (`ServiceConfig`, `serve --engine`, tests, benches) goes through here.
+pub const REGISTRY: &[EngineEntry] = &[
+    EngineEntry {
+        name: "exact",
+        caps: EngineCaps { bit_exact: true, order_invariant: true, shared_tree: false },
+        summary: "Neal-2015 superaccumulator: correctly-rounded, permutation-invariant sums",
+        shape: config_shape,
+        build: exact::build,
+    },
+    EngineEntry {
+        name: "intac",
+        caps: EngineCaps { bit_exact: false, order_invariant: true, shared_tree: false },
+        summary: "cycle-accurate INTAC carry-save circuit over 2^-16 fixed point",
+        shape: config_shape,
+        build: cycle_adapter::build_intac,
+    },
+    EngineEntry {
+        name: "jugglepac",
+        caps: EngineCaps { bit_exact: false, order_invariant: false, shared_tree: false },
+        summary: "cycle-accurate JugglePAC circuit (the paper's design) serving real traffic",
+        shape: config_shape,
+        build: cycle_adapter::build_jugglepac,
+    },
+    EngineEntry {
+        name: "native",
+        caps: SHARED_TREE,
+        summary: "vectorized masked pairwise-tree kernel (fast baseline)",
+        shape: config_shape,
+        build: classic::build_native,
+    },
+    EngineEntry {
+        name: "softfp",
+        caps: SHARED_TREE,
+        summary: "bit-accurate software IEEE adder per tree node (compute-heavy stand-in)",
+        shape: config_shape,
+        build: classic::build_softfp,
+    },
+    EngineEntry {
+        name: "treesched",
+        caps: EngineCaps { bit_exact: false, order_invariant: false, shared_tree: false },
+        summary: "multi-adder tree-reduction scheduler (SSA discipline)",
+        shape: config_shape,
+        build: cycle_adapter::build_treesched,
+    },
+    EngineEntry {
+        name: "xla",
+        caps: SHARED_TREE,
+        summary: "AOT XLA artifact via PJRT (the production path)",
+        shape: xla_shape,
+        build: classic::build_xla,
+    },
+];
+
+/// All registered engine names, registry order (sorted).
+pub fn engine_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Find an engine by registry name.
+pub fn lookup(name: &str) -> std::result::Result<&'static EngineEntry, UnknownEngine> {
+    REGISTRY
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| UnknownEngine { name: name.to_string() })
+}
+
+/// Resolve the `[batch, n]` shape `cfg` will serve (reads the artifact
+/// manifest for `xla`). Fails with the typed [`UnknownEngine`] on a name
+/// the registry does not know.
+pub fn resolve_shape(cfg: &EngineConfig) -> Result<(usize, usize)> {
+    let entry = lookup(&cfg.name)?;
+    (entry.shape)(cfg)
+}
+
+/// Build the engine `cfg` describes. Call from the thread that will own
+/// it (engines need not be `Send`).
+pub fn build(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
+    let entry = lookup(&cfg.name)?;
+    (entry.build)(cfg)
+}
+
+/// Resolve `serve`-style CLI options into an [`EngineConfig`] — the one
+/// code path `cmd_serve` and the CLI tests share. Recognized options:
+/// `--engine NAME` (default `xla`), `--batch B`/`--n N` (engine shape,
+/// default 8x256), `--artifact NAME`/`--artifacts-dir PATH` (xla),
+/// `--latency L`/`--registers R` (cycle adapters). An unknown engine name
+/// fails with the typed [`UnknownEngine`] error listing the registry.
+pub fn engine_config_from_args(args: &crate::cli::Args) -> Result<EngineConfig> {
+    let name = args.get_or("engine", "xla");
+    let entry = lookup(name)?;
+    let batch = args.get_usize("batch", 8)?;
+    let n = args.get_usize("n", 256)?;
+    let mut cfg = EngineConfig::named(entry.name, batch, n);
+    cfg.adder_latency = args.get_usize("latency", cfg.adder_latency)?;
+    cfg.pis_registers = args.get_usize("registers", cfg.pis_registers)?;
+    if let Some(dir) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = dir.into();
+    }
+    cfg.artifact = args.get_or("artifact", DEFAULT_ARTIFACT).to_string();
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        let names = engine_names();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(names, sorted, "keep REGISTRY sorted by name, no duplicates");
+    }
+
+    #[test]
+    fn lookup_unknown_engine_lists_every_name() {
+        let err = lookup("warp-drive").unwrap_err();
+        assert_eq!(err.name, "warp-drive");
+        let msg = err.to_string();
+        for name in engine_names() {
+            assert!(msg.contains(name), "error must list {name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn non_xla_engines_build_and_reduce_a_tiny_batch() {
+        // One exact-valued batch through every engine that needs no
+        // artifacts: all must agree with the plain sum.
+        let batch = Batch {
+            x: vec![1.0, 2.0, 3.0, 0.0, 0.5, -0.25, 0.0, 0.0],
+            lengths: vec![3, 2],
+            rows: vec![(0, 0), (1, 0)],
+        };
+        for entry in REGISTRY {
+            if entry.name == "xla" {
+                continue;
+            }
+            let cfg = EngineConfig::named(entry.name, 2, 4);
+            let mut eng = build(&cfg).unwrap_or_else(|e| panic!("{}: {e:#}", entry.name));
+            let mut sums = Vec::new();
+            eng.reduce_batch(&batch, &mut sums).unwrap();
+            assert_eq!(sums.len(), 2, "{}", entry.name);
+            assert_eq!(sums[0], 6.0, "{}", entry.name);
+            assert_eq!(sums[1], 0.25, "{}", entry.name);
+        }
+    }
+
+    #[test]
+    fn degenerate_shape_is_rejected() {
+        assert!(resolve_shape(&EngineConfig::native(0, 16)).is_err());
+        assert!(resolve_shape(&EngineConfig::native(4, 0)).is_err());
+        assert_eq!(resolve_shape(&EngineConfig::native(4, 16)).unwrap(), (4, 16));
+    }
+
+    #[test]
+    fn caps_encode_the_documented_contract() {
+        assert!(lookup("exact").unwrap().caps.bit_exact);
+        assert!(lookup("exact").unwrap().caps.order_invariant);
+        assert!(lookup("intac").unwrap().caps.order_invariant);
+        for name in ["native", "softfp", "xla"] {
+            assert!(lookup(name).unwrap().caps.shared_tree, "{name}");
+        }
+        for name in ["jugglepac", "treesched"] {
+            assert!(!lookup(name).unwrap().caps.shared_tree, "{name}");
+        }
+    }
+}

@@ -14,9 +14,11 @@
 //!   model standing in for ISE synthesis), [`workload`] (set generators and
 //!   traces, including the paper's fixed-point-ranged methodology).
 //! - **System layer** — [`coordinator`] (a streaming accumulation service
-//!   applying JugglePAC's scheduling idea at software scale) and
-//!   [`runtime`] (PJRT loader executing the AOT-compiled JAX/Pallas
-//!   reduction kernels from `artifacts/`).
+//!   applying JugglePAC's scheduling idea at software scale), [`engine`]
+//!   (the pluggable reduction-engine registry the coordinator drives:
+//!   classic kernels, cycle-core adapters, and the exact-summation
+//!   superaccumulator), and [`runtime`] (PJRT loader executing the
+//!   AOT-compiled JAX/Pallas reduction kernels from `artifacts/`).
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -27,6 +29,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod cycle;
+pub mod engine;
 pub mod fp;
 pub mod intac;
 pub mod jugglepac;

@@ -6,7 +6,8 @@
 //!   table        regenerate a paper table: --n 2|3|4|5
 //!   simulate     run a workload through the cycle-accurate JugglePAC
 //!   intac        run a workload through INTAC
-//!   serve        end-to-end streaming service demo (XLA or native engine)
+//!   serve        end-to-end streaming service demo (any registry engine)
+//!   engines      list the reduction-engine registry
 //!   artifacts    list the AOT artifacts the runtime sees
 //!
 //! Every paper table also has a bench (`cargo bench`) printing
@@ -33,6 +34,7 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("intac") => cmd_intac(&args),
         Some("serve") => cmd_serve(&args),
+        Some("engines") => cmd_engines(),
         Some("artifacts") => cmd_artifacts(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -53,9 +55,10 @@ USAGE: jugglepac <subcommand> [options]
   simulate   [--sets S] [--len N] [--registers R] [--latency L] [--seed X]
              [--provenance full|off]
   intac      [--sets S] [--len N] [--inputs I] [--fas K]
-  serve      [--sets S] [--max-len N] [--engine xla|native|softfp]
+  serve      [--sets S] [--max-len N] [--engine NAME] [--batch B] [--n N]
              [--shards K] [--steal on|off] [--stall0 US] [--zipf]
-             [--seed X]
+             [--seed X] [--latency L] [--registers R] [--artifact NAME]
+  engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -214,7 +217,7 @@ fn cmd_intac(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use jugglepac::coordinator::{BurstSlab, EngineKind, Service, ServiceConfig};
+    use jugglepac::coordinator::{BurstSlab, Service, ServiceConfig};
     use jugglepac::util::Xoshiro256;
     use jugglepac::workload::ZipfTable;
     let sets = args.get_usize("sets", 2000)?;
@@ -224,15 +227,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Noisy-neighbor knob: a fixed per-batch stall (µs) on shard 0, the
     // skewed-load case stealing is built to recover.
     let stall0 = args.get_u64("stall0", 0)?;
-    let engine = match args.get_or("engine", "xla") {
-        "xla" => EngineKind::Xla {
-            artifacts_dir: jugglepac::runtime::default_artifacts_dir(),
-            artifact: args.get_or("artifact", "reduce_f32_b32_n128").to_string(),
-        },
-        "native" => EngineKind::Native { batch: 8, n: 256 },
-        "softfp" => EngineKind::SoftFp { batch: 8, n: 256 },
-        other => bail!("--engine must be xla|native|softfp, got {other:?}"),
-    };
+    // Engine selection goes through the registry: any name in
+    // `jugglepac engines` works here, and an unknown one fails with a
+    // typed error listing the registry.
+    let engine = jugglepac::engine::engine_config_from_args(args)?;
     // Zipf lengths (skewed-load mix) via a prebuilt weight table: one
     // O(max) build, O(log max) per draw.
     let zipf = args.flag("zipf").then(|| ZipfTable::new(max_len, 1.1));
@@ -308,6 +306,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = svc.shutdown();
     println!("{}", m.report(wall, cap));
     println!("value check: {exact}/{sets} exact");
+    Ok(())
+}
+
+fn cmd_engines() -> Result<()> {
+    println!("{:<12} {:<32} {}", "name", "capabilities", "summary");
+    for entry in jugglepac::engine::REGISTRY {
+        let mut caps = Vec::new();
+        if entry.caps.bit_exact {
+            caps.push("bit_exact");
+        }
+        if entry.caps.order_invariant {
+            caps.push("order_invariant");
+        }
+        if entry.caps.shared_tree {
+            caps.push("shared_tree");
+        }
+        let caps = if caps.is_empty() { "-".to_string() } else { caps.join(",") };
+        println!("{:<12} {:<32} {}", entry.name, caps, entry.summary);
+    }
     Ok(())
 }
 

@@ -45,6 +45,41 @@ pub fn shard_counts(default: &[usize]) -> Vec<usize> {
     }
 }
 
+/// Engine names for cross-engine differential suites.
+/// `JUGGLEPAC_TEST_ENGINES` (comma-separated registry names — the CI
+/// engine-matrix knob) restricts the sweep to the named engines so each
+/// matrix leg exercises one engine family; unset, tests sweep `default`.
+/// Names are validated against [`crate::engine::REGISTRY`] so a typo in
+/// the workflow fails loudly instead of silently skipping every test.
+pub fn engines_under_test(default: &[&str]) -> Vec<String> {
+    match std::env::var("JUGGLEPAC_TEST_ENGINES") {
+        Ok(v) => {
+            let names: Vec<String> = v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            assert!(!names.is_empty(), "JUGGLEPAC_TEST_ENGINES set but names empty: {v:?}");
+            for name in &names {
+                if let Err(e) = crate::engine::lookup(name) {
+                    panic!("JUGGLEPAC_TEST_ENGINES: {e}");
+                }
+            }
+            names
+        }
+        Err(_) => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// True when `name` is in this run's engine sweep (see
+/// [`engines_under_test`]); `default_on` is the unfiltered default.
+pub fn engine_enabled(name: &str, default_on: bool) -> bool {
+    match std::env::var("JUGGLEPAC_TEST_ENGINES") {
+        Ok(_) => engines_under_test(&[]).iter().any(|n| n == name),
+        Err(_) => default_on,
+    }
+}
+
 /// Skewed coordinator workload: Zipf-distributed lengths (s = 1.1 — many
 /// short sets, a heavy tail of long ones) of exact dyadic values (k/8,
 /// |k| ≤ 64). Sums of such values are exact in f32 at any association

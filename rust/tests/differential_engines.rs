@@ -21,15 +21,31 @@
 //!   workloads the whole service is bit-identical between them at every
 //!   shard count.
 //!
-//! ≥ 1000 randomized cases (900 circuit-level + 150 service-level); each
+//! The engine-registry additions extend the suite:
+//!
+//! - the **`exact` engine** (Neal-2015 superaccumulator) must be
+//!   bit-identical under random permutations of each set and equal to an
+//!   independent 128-bit-integer fixed-point reference, rounded once
+//!   (correctly-rounded RNE) — at 1 and 3 shards;
+//! - the **cycle-core adapter engines** (`jugglepac`/`treesched`/`intac`)
+//!   must match their standalone `run_sets` entry points exactly on
+//!   single-chunk sets (the adapters' own sim configs and fixed-point
+//!   codecs are shared with the tests, so the comparison is the same
+//!   circuit both ways).
+//!
+//! `JUGGLEPAC_TEST_ENGINES` (see `testkit::engines_under_test`) restricts
+//! which engines a run sweeps — the CI engine-matrix knob.
+//!
+//! ≥ 1000 randomized cases (900 circuit-level + 150+ service-level); each
 //! failure prints a `PROPTEST_SEED` reproducer.
 
 use jugglepac::baselines::treesched::run_sets as tree_run_sets;
 use jugglepac::baselines::{SchedKind, TreeSchedulerConfig};
-use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
-use jugglepac::fp::{FpFormat, BF16, F16, F32, F64};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
+use jugglepac::engine::cycle_adapter;
+use jugglepac::fp::{bits_f32, FpFormat, BF16, F16, F32, F64};
 use jugglepac::jugglepac::{run_sets, serial_sum, JugglePacConfig, Provenance};
-use jugglepac::testkit::property;
+use jugglepac::testkit::{engine_enabled, engines_under_test, property};
 use jugglepac::util::Xoshiro256;
 use jugglepac::workload::LenDist;
 
@@ -224,6 +240,10 @@ fn differential_circuit_engines_across_formats_latencies_and_mixes() {
 /// between the two engines — per mix, at 1 and 3 shards.
 #[test]
 fn differential_service_softfp_matches_native_bit_for_bit() {
+    if !engine_enabled("softfp", true) || !engine_enabled("native", true) {
+        eprintln!("skipping: native/softfp not in JUGGLEPAC_TEST_ENGINES");
+        return;
+    }
     property("differential_service", 150, |rng: &mut Xoshiro256| {
         let mix = MIXES[rng.range(0, 2)];
         let shards = if rng.chance(0.5) { 1 } else { 3 };
@@ -233,7 +253,7 @@ fn differential_service_softfp_matches_native_bit_for_bit() {
             .map(|&n| (0..n).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect())
             .collect();
         let want: Vec<f32> = sets.iter().map(|s| s.iter().sum()).collect();
-        let run = |engine: EngineKind| -> Vec<u32> {
+        let run = |engine: EngineConfig| -> Vec<u32> {
             let mut svc = Service::start(ServiceConfig {
                 engine,
                 shards,
@@ -257,8 +277,232 @@ fn differential_service_softfp_matches_native_bit_for_bit() {
             svc.shutdown();
             bits
         };
-        let native = run(EngineKind::Native { batch: 8, n: 64 });
-        let soft = run(EngineKind::SoftFp { batch: 8, n: 64 });
+        let native = run(EngineConfig::native(8, 64));
+        let soft = run(EngineConfig::softfp(8, 64));
         assert_eq!(native, soft, "mix={mix} shards={shards}");
     });
+}
+
+// ---------------------------------------------------------------------------
+// Registry additions: the exact engine and the cycle-core adapters.
+// ---------------------------------------------------------------------------
+
+/// Drive one set list through the service on `engine`, assert ordered
+/// delivery, and return the result bit patterns.
+fn service_bits(engine: EngineConfig, shards: usize, sets: &[Vec<f32>]) -> Vec<u32> {
+    let mut svc = Service::start(ServiceConfig {
+        engine,
+        shards,
+        batch_deadline: std::time::Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    svc.submit_burst(sets.to_vec()).unwrap();
+    let bits = (0..sets.len() as u64)
+        .map(|i| {
+            let r = svc
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("timely response");
+            assert_eq!(r.req_id, i, "ordered delivery");
+            r.sum.to_bits()
+        })
+        .collect();
+    svc.shutdown();
+    bits
+}
+
+/// Round `sum * 2^scale` to the nearest f32 (ties to even) — the
+/// independent 128-bit-integer fixed-point reference the `exact` engine
+/// must match bit for bit. Handles normals, subnormals, and overflow to
+/// infinity; deliberately implemented over `i128`/`u128` words rather
+/// than the engine's limb machinery.
+fn round_i128_scaled(sum: i128, scale: i32) -> f32 {
+    if sum == 0 {
+        return 0.0;
+    }
+    let neg = sum < 0;
+    let mag = sum.unsigned_abs();
+    let p = 127 - mag.leading_zeros() as i32; // top bit of mag
+    let e = p + scale; // floor(log2 |value|)
+    let ulp_exp = if e < -126 { -149 } else { e - 23 };
+    let drop = ulp_exp - scale; // bits to shed from mag
+    let (q, guard, sticky) = if drop <= 0 {
+        ((mag << (-drop) as u32) as u64, false, false) // exact
+    } else {
+        let d = drop as u32;
+        let q = (mag >> d) as u64;
+        let guard = (mag >> (d - 1)) & 1 == 1;
+        let sticky = d >= 2 && mag & ((1u128 << (d - 1)) - 1) != 0;
+        (q, guard, sticky)
+    };
+    let mut q = q;
+    let mut ulp_exp = ulp_exp;
+    if guard && (sticky || q & 1 == 1) {
+        q += 1;
+    }
+    if q == 1 << 24 {
+        q >>= 1;
+        ulp_exp += 1;
+    }
+    let bits = if q >= 1 << 23 {
+        let e_field = (ulp_exp + 23 + 127) as u32;
+        if e_field >= 255 {
+            0x7F80_0000 // overflow -> inf
+        } else {
+            (e_field << 23) | (q as u32 & 0x7F_FFFF)
+        }
+    } else {
+        q as u32 // subnormal (ulp_exp == -149)
+    };
+    f32::from_bits(bits | if neg { 1u32 << 31 } else { 0 })
+}
+
+/// The exact engine: sums must equal the 128-bit-integer reference
+/// rounded once, and be bit-identical under random permutations of each
+/// set — at 1 and 3 shards (single-chunk sets, so the whole pipeline
+/// preserves the engine's guarantees end to end).
+#[test]
+fn differential_exact_engine_correctly_rounded_and_permutation_invariant() {
+    if !engine_enabled("exact", true) {
+        eprintln!("skipping: exact not in JUGGLEPAC_TEST_ENGINES");
+        return;
+    }
+    const N: usize = 64;
+    // Values are m * 2^(e-150) with e in [90, 170]: an 80-binade spread
+    // (far beyond what rounding-per-add survives) whose fixed-point image
+    // at scale 2^-60 stays within i128 for any 64-value set.
+    const SCALE: i32 = -60;
+    let ref_scaled = |v: f32| -> i128 {
+        let bits = v.to_bits();
+        let e = (bits >> 23) & 0xFF;
+        let m = ((bits & 0x7F_FFFF) | 0x80_0000) as i128;
+        let scaled = m << (e - 90); // shift = e-1; exponent vs 2^-60: e-1-89
+        if bits >> 31 == 1 {
+            -scaled
+        } else {
+            scaled
+        }
+    };
+    property("differential_exact", 60, |rng: &mut Xoshiro256| {
+        let shards = if rng.chance(0.5) { 1 } else { 3 };
+        let sets: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let len = rng.range(1, N);
+                (0..len)
+                    .map(|_| {
+                        let e = rng.range(90, 170) as u32;
+                        let frac = rng.next_u64() as u32 & 0x7F_FFFF;
+                        let sign = (rng.chance(0.5) as u32) << 31;
+                        f32::from_bits(sign | (e << 23) | frac)
+                    })
+                    .collect()
+            })
+            .collect();
+        let want: Vec<u32> = sets
+            .iter()
+            .map(|s| {
+                let sum: i128 = s.iter().map(|&v| ref_scaled(v)).sum();
+                round_i128_scaled(sum, SCALE).to_bits()
+            })
+            .collect();
+        let got = service_bits(EngineConfig::exact(8, N), shards, &sets);
+        assert_eq!(got, want, "shards={shards}: exact == i128 reference, rounded once");
+        // Permutation invariance: shuffled sets, identical bits.
+        let mut shuffled = sets.clone();
+        for set in &mut shuffled {
+            rng.shuffle(set);
+        }
+        let got2 = service_bits(EngineConfig::exact(8, N), shards, &shuffled);
+        assert_eq!(got, got2, "shards={shards}: permutation-invariant");
+    });
+}
+
+/// The cycle-core adapter engines: service results must match the
+/// standalone `run_sets` entry points exactly. Sets fit one chunk
+/// (len <= n), so each service row is one whole circuit set and the
+/// assembler's chunk combine is the identity; exact dyadic values keep
+/// the equality independent of how rows pack into batches.
+#[test]
+fn differential_cycle_adapter_engines_match_standalone_run_sets() {
+    const N: usize = 48;
+    const LATENCY: usize = 2;
+    let enabled = engines_under_test(&["jugglepac", "treesched", "intac"]);
+    for name in ["jugglepac", "treesched", "intac"] {
+        if !enabled.iter().any(|n| n == name) {
+            continue;
+        }
+        property(&format!("differential_adapter_{name}"), 20, |rng: &mut Xoshiro256| {
+            let shards = if rng.chance(0.5) { 1 } else { 3 };
+            let sets: Vec<Vec<f32>> = (0..10)
+                .map(|_| {
+                    let len = rng.range(1, N);
+                    (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+                })
+                .collect();
+            let plain: Vec<f32> = sets.iter().map(|s| s.iter().sum()).collect();
+
+            // Standalone circuit runs, per the adapter's own sim configs.
+            let standalone: Vec<u32> = match name {
+                "jugglepac" => {
+                    let bitsets: Vec<Vec<u64>> = sets
+                        .iter()
+                        .map(|s| s.iter().map(|&v| jugglepac::fp::f32_bits(v)).collect())
+                        .collect();
+                    let cfg = cycle_adapter::jugglepac_sim_config(LATENCY, 4);
+                    let gap = cycle_adapter::jugglepac_gap(LATENCY, N);
+                    let (outs, jp) = run_sets(cfg, &bitsets, &|_| gap, 4_000_000);
+                    assert_eq!(outs.len(), sets.len(), "standalone drained");
+                    assert_eq!(jp.collisions(), 0, "standalone collision-free");
+                    let mut by_set = vec![0u32; sets.len()];
+                    for o in &outs {
+                        by_set[o.set_id as usize] = bits_f32(o.bits).to_bits();
+                    }
+                    by_set
+                }
+                "treesched" => {
+                    let bitsets: Vec<Vec<u64>> = sets
+                        .iter()
+                        .map(|s| s.iter().map(|&v| jugglepac::fp::f32_bits(v)).collect())
+                        .collect();
+                    let cfg = cycle_adapter::treesched_sim_config(LATENCY);
+                    let (outs, _ts) = tree_run_sets(cfg, &bitsets, 4_000_000);
+                    assert_eq!(outs.len(), sets.len(), "standalone drained");
+                    let mut by_set = vec![0u32; sets.len()];
+                    for o in &outs {
+                        by_set[o.set as usize] = bits_f32(o.bits).to_bits();
+                    }
+                    by_set
+                }
+                "intac" => {
+                    let bitsets: Vec<Vec<u64>> = sets
+                        .iter()
+                        .map(|s| {
+                            s.iter().map(|&v| cycle_adapter::intac_encode(v).unwrap()).collect()
+                        })
+                        .collect();
+                    let cfg = cycle_adapter::intac_sim_config();
+                    let (outs, m) = jugglepac::intac::run_sets(cfg, &bitsets, 4_000_000);
+                    assert_eq!(outs.len(), sets.len(), "standalone drained");
+                    assert!(!m.stalled(), "pipelined final adder never stalls");
+                    let mut by_set = vec![0u32; sets.len()];
+                    for o in &outs {
+                        by_set[o.set_id as usize] = cycle_adapter::intac_decode(o.value).to_bits();
+                    }
+                    by_set
+                }
+                _ => unreachable!(),
+            };
+
+            let mut cfg = EngineConfig::named(name, 8, N);
+            cfg.adder_latency = LATENCY;
+            let got = service_bits(cfg, shards, &sets);
+            assert_eq!(got, standalone, "{name} shards={shards}: service == standalone");
+            // Exact dyadic values: both must also equal the plain sum.
+            for (i, (&g, &p)) in got.iter().zip(plain.iter()).enumerate() {
+                assert_eq!(g, p.to_bits(), "{name} shards={shards} set {i}: exact sum");
+            }
+        });
+    }
 }

@@ -1,0 +1,152 @@
+//! CLI + registry surface of the engine subsystem: `serve --engine NAME`
+//! resolution (including the typed unknown-name error listing the
+//! registry), capability flags, and end-to-end service runs through the
+//! named engines — the acceptance path for `serve --engine jugglepac` and
+//! `serve --engine exact`.
+
+use jugglepac::cli::Args;
+use jugglepac::coordinator::{Service, ServiceConfig};
+use jugglepac::engine::{self, engine_config_from_args, EngineConfig, UnknownEngine};
+use jugglepac::testkit::engine_enabled;
+use jugglepac::util::Xoshiro256;
+use std::time::Duration;
+
+fn serve_args(cmdline: &str) -> Args {
+    Args::from_iter(cmdline.split_whitespace().map(String::from)).unwrap()
+}
+
+#[test]
+fn unknown_engine_name_is_a_typed_error_listing_the_registry() {
+    // The exact path `cmd_serve` takes: parse argv, resolve the engine.
+    let args = serve_args("serve --engine blorp --shards 2");
+    let err = engine_config_from_args(&args).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown engine \"blorp\""), "{msg}");
+    for name in engine::engine_names() {
+        assert!(msg.contains(name), "error must list {name}: {msg}");
+    }
+    // And the typed form is recoverable from `lookup` directly.
+    let typed: UnknownEngine = engine::lookup("blorp").unwrap_err();
+    assert_eq!(typed.name, "blorp");
+}
+
+#[test]
+fn serve_cli_options_resolve_into_an_engine_config() {
+    let cfg = engine_config_from_args(&serve_args("serve --engine exact --batch 4 --n 32"))
+        .unwrap();
+    assert_eq!(cfg.name, "exact");
+    assert_eq!((cfg.batch, cfg.n), (4, 32));
+
+    let cfg = engine_config_from_args(&serve_args(
+        "serve --engine jugglepac --latency 14 --registers 8",
+    ))
+    .unwrap();
+    assert_eq!(cfg.name, "jugglepac");
+    assert_eq!(cfg.adder_latency, 14);
+    assert_eq!(cfg.pis_registers, 8);
+
+    // Default engine is the production xla path, artifact overridable.
+    let cfg = engine_config_from_args(&serve_args("serve --artifact reduce_f32_b8_n256"))
+        .unwrap();
+    assert_eq!(cfg.name, "xla");
+    assert_eq!(cfg.artifact, "reduce_f32_b8_n256");
+
+    // Every registry name round-trips through the CLI path.
+    for name in engine::engine_names() {
+        let cfg = engine_config_from_args(&serve_args(&format!("serve --engine {name}")))
+            .unwrap();
+        assert_eq!(cfg.name, name);
+    }
+}
+
+#[test]
+fn service_rejects_unknown_engine_before_spawning_threads() {
+    let err = Service::start(ServiceConfig {
+        engine: EngineConfig::named("blorp", 4, 16),
+        ..Default::default()
+    })
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown engine"), "{msg}");
+    assert!(msg.contains("exact"), "lists the registry: {msg}");
+}
+
+/// `serve --engine <name>` end to end: every artifact-free registry
+/// engine serves a burst of exact-valued sets through the full pipeline
+/// (batcher, shards, reorder, assembler) with ordered, exact results.
+#[test]
+fn named_engines_serve_end_to_end() {
+    for name in engine::engine_names() {
+        if name == "xla" {
+            continue; // needs AOT artifacts; covered by integration_coordinator
+        }
+        if !engine_enabled(name, true) {
+            continue; // respect the CI engine-matrix leg (JUGGLEPAC_TEST_ENGINES)
+        }
+        for shards in [1usize, 2] {
+            let mut cfg = EngineConfig::named(name, 4, 32);
+            cfg.adder_latency = 2;
+            let mut svc = Service::start(ServiceConfig {
+                engine: cfg,
+                shards,
+                batch_deadline: Duration::from_micros(100),
+                ordered: true,
+                queue_depth: 64,
+                ..Default::default()
+            })
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            let mut rng = Xoshiro256::seeded(0xD00D ^ shards as u64);
+            let sets: Vec<Vec<f32>> = (0..24)
+                .map(|_| {
+                    let len = rng.range(0, 32); // spans empty and full rows
+                    (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+                })
+                .collect();
+            let want: Vec<f32> = sets.iter().map(|s| s.iter().sum()).collect();
+            svc.submit_burst(sets).unwrap();
+            for (i, w) in want.iter().enumerate() {
+                let r = svc
+                    .recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|| panic!("{name} shards={shards}: response {i}"));
+                assert_eq!(r.req_id, i as u64, "{name} shards={shards}: ordered");
+                assert_eq!(r.sum, *w, "{name} shards={shards}: req {i} exact");
+            }
+            let m = svc.shutdown();
+            assert_eq!(m.completed, 24, "{name} shards={shards}");
+        }
+    }
+}
+
+/// Steady-state serving recycles batch buffers through the pool: after a
+/// sustained burst the recycled count covers nearly every batch.
+#[test]
+fn batch_buffers_are_recycled_in_steady_state() {
+    let mut svc = Service::start(ServiceConfig {
+        engine: EngineConfig::native(4, 16),
+        shards: 1,
+        batch_deadline: Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Xoshiro256::seeded(99);
+    let mut want = Vec::new();
+    for _ in 0..100 {
+        let len = rng.range(1, 40);
+        let set: Vec<f32> = (0..len).map(|_| rng.range_i64(-8, 8) as f32).collect();
+        want.push(set.iter().sum::<f32>());
+        svc.submit(set).unwrap();
+    }
+    for (i, w) in want.iter().enumerate() {
+        let r = svc.recv_timeout(Duration::from_secs(20)).expect("response");
+        assert_eq!(r.req_id, i as u64);
+        assert_eq!(r.sum, *w, "req {i}");
+    }
+    let m = svc.shutdown();
+    assert!(m.batches > 2, "workload spans many batches: {m:?}");
+    assert!(
+        m.batches_recycled >= m.batches - 1,
+        "fused pipeline recycles every batch after the first: {m:?}"
+    );
+}

@@ -2,7 +2,7 @@
 //! (AOT Pallas artifact through PJRT), cross-checked against the native
 //! engine bit-for-bit.
 
-use jugglepac::coordinator::{EngineKind, Response, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, Response, Service, ServiceConfig};
 use jugglepac::runtime::default_artifacts_dir;
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
@@ -17,10 +17,7 @@ fn have_artifacts() -> bool {
 
 fn xla_cfg() -> ServiceConfig {
     ServiceConfig {
-        engine: EngineKind::Xla {
-            artifacts_dir: default_artifacts_dir(),
-            artifact: "reduce_f32_b8_n256".to_string(),
-        },
+        engine: EngineConfig::xla(default_artifacts_dir(), "reduce_f32_b8_n256"),
         batch_deadline: Duration::from_micros(200),
         ordered: true,
         queue_depth: 256,
@@ -75,7 +72,7 @@ fn xla_and_native_engines_agree_bit_exactly() {
         })
         .collect();
 
-    let run = |engine: EngineKind| -> Vec<u32> {
+    let run = |engine: EngineConfig| -> Vec<u32> {
         let mut svc = Service::start(ServiceConfig { engine, ..xla_cfg() }).unwrap();
         for req in &requests {
             svc.submit(req.clone()).unwrap();
@@ -86,7 +83,7 @@ fn xla_and_native_engines_agree_bit_exactly() {
     };
 
     let xla = run(xla_cfg().engine);
-    let native = run(EngineKind::Native { batch: 8, n: 256 });
+    let native = run(EngineConfig::native(8, 256));
     assert_eq!(xla, native);
 }
 

@@ -225,10 +225,10 @@ fn prop_intac_latency_equation() {
 
 #[test]
 fn prop_coordinator_ordered_and_complete() {
-    use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+    use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
     property("coordinator_ordered", 6, |rng| {
         let mut svc = Service::start(ServiceConfig {
-            engine: EngineKind::Native { batch: rng.range(2, 8), n: 1 << rng.range(3, 6) },
+            engine: EngineConfig::native(rng.range(2, 8), 1 << rng.range(3, 6)),
             batch_deadline: std::time::Duration::from_micros(rng.range(20, 300) as u64),
             ordered: true,
             queue_depth: 64,

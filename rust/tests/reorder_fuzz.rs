@@ -16,7 +16,7 @@
 //! 1600 randomized cases across the three properties (≥ 1000 per the
 //! acceptance bar); each failure prints a `PROPTEST_SEED` reproducer.
 
-use jugglepac::coordinator::{ReorderBuffer, ShardDone};
+use jugglepac::coordinator::{Batch, ReorderBuffer, ShardDone};
 use jugglepac::testkit::property;
 use jugglepac::util::Xoshiro256;
 
@@ -26,7 +26,7 @@ fn done(seq: u64, poisoned: bool) -> ShardDone {
     ShardDone {
         seq,
         shard: (seq % 7) as usize,
-        rows: vec![(seq, 0)],
+        batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] },
         sums: vec![if poisoned { f32::NAN } else { seq as f32 }],
     }
 }

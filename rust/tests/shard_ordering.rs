@@ -5,14 +5,14 @@
 //! pins the swept shard counts; every pinned count is still compared
 //! against an explicit `shards = 1` baseline.
 
-use jugglepac::coordinator::{EngineKind, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
 use jugglepac::testkit::shard_counts;
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
 
 fn cfg(shards: usize, steal: bool, jitter_us: u64) -> ServiceConfig {
     ServiceConfig {
-        engine: EngineKind::Native { batch: 8, n: 64 },
+        engine: EngineConfig::native(8, 64),
         batch_deadline: Duration::from_micros(100),
         ordered: true,
         queue_depth: 64,

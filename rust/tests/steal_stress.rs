@@ -3,13 +3,13 @@
 //! bit-identical to `steal = off` and to `shards = 1`, and every submitted
 //! request completed.
 
-use jugglepac::coordinator::{EngineKind, MetricsSnapshot, Service, ServiceConfig};
+use jugglepac::coordinator::{EngineConfig, MetricsSnapshot, Service, ServiceConfig};
 use jugglepac::testkit::{shard_counts, zipf_dyadic_sets};
 use std::time::Duration;
 
 fn cfg(shards: usize, steal: bool, stall0_us: u64) -> ServiceConfig {
     ServiceConfig {
-        engine: EngineKind::Native { batch: 8, n: 64 },
+        engine: EngineConfig::native(8, 64),
         batch_deadline: Duration::from_micros(100),
         ordered: true,
         queue_depth: 64,
