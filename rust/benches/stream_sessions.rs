@@ -1,0 +1,109 @@
+//! Bench: streaming sessions vs one-shot submission — the cost of
+//! open-ended arrival.
+//!
+//! Replays one Zipf-sized, fragment-interleaved streaming mix
+//! ([`StreamMix`]) through the session subsystem, and submits the same
+//! datasets one-shot through the plain service, per engine (`native` =
+//! the fast ceiling, `exact` = the wide-carry engine whose guarantees are
+//! the subsystem's reason to exist) at 4 shards. Reports streams/s and
+//! values/s for both arrival modes — the gap is the session tax
+//! (re-chunking, carry bookkeeping, per-chunk requests). Results land in
+//! `BENCH_5.json` (benchkit::JsonSink) and CI archives them in the
+//! `bench-json` artifact.
+//!
+//! Correctness is asserted while timing: dyadic values, so every stream
+//! sum must be exact and delivered in close order.
+//!
+//! Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{Service, ServiceConfig};
+use jugglepac::engine::EngineConfig;
+use jugglepac::session::{SessionConfig, SessionService};
+use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
+use std::time::Duration;
+
+const SHARDS: usize = 4;
+const N: usize = 128;
+
+fn service_cfg(engine: &str) -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineConfig::named(engine, 8, N),
+        shards: SHARDS,
+        batch_deadline: Duration::from_micros(200),
+        ..Default::default()
+    }
+}
+
+fn drive_streamed(engine: &str, mix: &StreamMix, want: &[f32]) {
+    let mut ss = SessionService::start(SessionConfig {
+        service: service_cfg(engine),
+        table_shards: 8,
+        max_open_streams: 4096,
+        idle_ttl: Duration::from_secs(300),
+    })
+    .expect("session service starts");
+    mix.replay(&mut ss).expect("replay");
+    let results = ss.flush(Duration::from_secs(300));
+    assert_eq!(results.len(), mix.values.len(), "every stream delivers");
+    for (i, (r, w)) in results.iter().zip(want.iter()).enumerate() {
+        assert_eq!(r.sum, *w, "stream {i} exact dyadic sum");
+    }
+    ss.shutdown();
+}
+
+fn drive_oneshot(engine: &str, mix: &StreamMix, want: &[f32]) {
+    let mut svc = Service::start(service_cfg(engine)).expect("service starts");
+    let sets: Vec<Vec<f32>> =
+        mix.close_order.iter().map(|&s| mix.values[s].clone()).collect();
+    for chunk in sets.chunks(128) {
+        svc.submit_burst(chunk.to_vec()).expect("submit");
+    }
+    for (i, w) in want.iter().enumerate() {
+        let r = svc.recv_timeout(Duration::from_secs(300)).expect("response");
+        assert_eq!(r.req_id, i as u64, "ordered delivery");
+        assert_eq!(r.sum, *w, "req {i}");
+    }
+    svc.shutdown();
+}
+
+fn main() {
+    let smoke = smoke();
+    let (streams, max_len) = if smoke { (96, 192) } else { (1000, 700) };
+    let mix = StreamMix::generate(&StreamMixConfig {
+        streams,
+        max_len,
+        max_fragment: 64,
+        concurrent: 16,
+        p_empty: 0.05,
+        values: StreamValueGen::Dyadic,
+        zipf_s: 1.1,
+        seed: 0x5E55_1075,
+    });
+    let want = mix.plain_sums_close_order();
+    let values = mix.total_values() as u64;
+    println!(
+        "=== streaming sessions @ shards={SHARDS}: {streams} streams, {values} values, \
+         {} events ===",
+        mix.events.len()
+    );
+    let mut sink = JsonSink::new();
+
+    for engine in ["native", "exact"] {
+        let name = format!("stream sessions {engine} shards={SHARDS}: {streams} streams");
+        let d = bench(&name, env_iters(3), || drive_streamed(engine, &mix, &want));
+        report_throughput("streams", streams as u64, "streams", d);
+        report_throughput("values", values, "values", d);
+        sink.record_throughput(&name, streams as u64, d);
+
+        let name = format!("one-shot {engine} shards={SHARDS}: {streams} sets");
+        let d = bench(&name, env_iters(3), || drive_oneshot(engine, &mix, &want));
+        report_throughput("sets", streams as u64, "sets", d);
+        sink.record_throughput(&name, streams as u64, d);
+    }
+
+    if let Err(e) = sink.write(&json_path("BENCH_5.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

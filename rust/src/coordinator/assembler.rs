@@ -1,29 +1,43 @@
 //! Partial-result assembly + ordered delivery — the software PIS.
 //!
-//! Long sets arrive back from the engine as per-chunk partial sums,
+//! Long sets arrive back from the engine as per-chunk partial results,
 //! possibly interleaved across many in-flight sets and out of submission
 //! order. Exactly like the circuit's PIS, the assembler holds partials in
 //! per-label state until a set completes, then (optionally) holds finished
 //! results until all earlier sets have finished, so results leave in input
 //! order (paper §IV-D).
+//!
+//! Chunk partials are [`PartialState`], not pre-rounded floats: engines
+//! with a wide carry surface (the `exact` superaccumulator) keep their
+//! guarantees across chunk boundaries, while `F32` partials combine over
+//! the same pairwise tree as always — see [`crate::engine::partial`] for
+//! the shared combine rule. Requests marked *carry* (the streaming-session
+//! subsystem's chunk probes) additionally get their combined state
+//! delivered alongside the rounded sum.
 
+use crate::engine::partial::{combine, PartialState};
 use std::collections::HashMap;
 
 /// A finished set reduction.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Completed {
     pub req_id: u64,
     pub sum: f32,
+    /// The combined carry state — populated only for requests declared
+    /// with `carry = true` (see [`Assembler::expect_carry`]).
+    pub state: Option<PartialState>,
 }
 
-/// Per-request partial-sum tracker.
+/// Per-request partial tracker.
 #[derive(Debug)]
 struct PartialSet {
     expected: u32,
     received: u32,
-    /// chunk_idx -> partial sum; combined in chunk order (a fixed
+    /// chunk_idx -> partial state; combined in chunk order (a fixed
     /// association order, like the kernel's fixed tree).
-    parts: Vec<Option<f32>>,
+    parts: Vec<Option<PartialState>>,
+    /// Deliver the combined [`PartialState`] with the result.
+    carry: bool,
 }
 
 /// Assembles chunk partials into set results, optionally reordering.
@@ -33,7 +47,7 @@ pub struct Assembler {
     ordered: bool,
     next_to_deliver: u64,
     /// Finished but waiting for earlier ids (ordered mode only).
-    held: HashMap<u64, f32>,
+    held: HashMap<u64, Completed>,
 }
 
 impl Assembler {
@@ -43,40 +57,69 @@ impl Assembler {
 
     /// Declare a request and how many chunks it was split into.
     pub fn expect(&mut self, req_id: u64, chunks: u32) {
+        self.expect_carry(req_id, chunks, false);
+    }
+
+    /// Like [`expect`](Self::expect); `carry = true` asks for the combined
+    /// [`PartialState`] to be delivered with the result (the streaming
+    /// sessions' chunk-probe path).
+    pub fn expect_carry(&mut self, req_id: u64, chunks: u32, carry: bool) {
         let prev = self.inflight.insert(
             req_id,
-            PartialSet { expected: chunks, received: 0, parts: vec![None; chunks as usize] },
+            PartialSet {
+                expected: chunks,
+                received: 0,
+                parts: vec![None; chunks as usize],
+                carry,
+            },
         );
         debug_assert!(prev.is_none(), "request {req_id} declared twice");
     }
 
-    /// Feed one partial; returns any results now deliverable (in order if
-    /// `ordered`).
+    /// Feed one rounded-f32 partial (convenience wrapper over
+    /// [`add_partial_state`](Self::add_partial_state)).
     pub fn add_partial(&mut self, req_id: u64, chunk_idx: u32, sum: f32) -> Vec<Completed> {
+        self.add_partial_state(req_id, chunk_idx, PartialState::F32(sum))
+    }
+
+    /// Feed one chunk partial; returns any results now deliverable (in
+    /// order if `ordered`).
+    pub fn add_partial_state(
+        &mut self,
+        req_id: u64,
+        chunk_idx: u32,
+        part: PartialState,
+    ) -> Vec<Completed> {
         let Some(ps) = self.inflight.get_mut(&req_id) else {
             debug_assert!(false, "partial for undeclared request {req_id}");
             return Vec::new();
         };
         debug_assert!(ps.parts[chunk_idx as usize].is_none(), "duplicate chunk");
-        ps.parts[chunk_idx as usize] = Some(sum);
+        ps.parts[chunk_idx as usize] = Some(part);
         ps.received += 1;
         if ps.received < ps.expected {
             return Vec::new();
         }
         let ps = self.inflight.remove(&req_id).unwrap();
-        // Combine partials in chunk order, pairwise tree for determinism —
-        // the same association discipline as the engine kernel
-        // ([`crate::fp::vreduce::tree_reduce_in_place`]).
-        let mut level: Vec<f32> = ps.parts.into_iter().map(|p| p.unwrap()).collect();
-        let total = crate::fp::vreduce::tree_reduce_in_place(&mut level);
+        // Combine partials in chunk order via the shared rule: F32 parts
+        // over the same pairwise tree as the engine kernel
+        // ([`crate::fp::vreduce::tree_reduce_in_place`]), exact limb
+        // states by integer merge with one final rounding.
+        let parts: Vec<PartialState> = ps.parts.into_iter().map(|p| p.unwrap()).collect();
+        let (total, state) = combine(parts);
+        let done = Completed {
+            req_id,
+            sum: total,
+            state: ps.carry.then_some(state),
+        };
 
         if !self.ordered {
-            return vec![Completed { req_id, sum: total }];
+            return vec![done];
         }
-        self.held.insert(req_id, total);
+        self.held.insert(req_id, done);
         let mut out = Vec::new();
-        while let Some(sum) = self.held.remove(&self.next_to_deliver) {
-            out.push(Completed { req_id: self.next_to_deliver, sum });
+        while let Some(done) = self.held.remove(&self.next_to_deliver) {
+            out.push(done);
             self.next_to_deliver += 1;
         }
         out
@@ -92,12 +135,16 @@ impl Assembler {
 mod tests {
     use super::*;
 
+    fn completed(req_id: u64, sum: f32) -> Completed {
+        Completed { req_id, sum, state: None }
+    }
+
     #[test]
     fn single_chunk_completes_immediately() {
         let mut a = Assembler::new(true);
         a.expect(0, 1);
         let out = a.add_partial(0, 0, 5.0);
-        assert_eq!(out, vec![Completed { req_id: 0, sum: 5.0 }]);
+        assert_eq!(out, vec![completed(0, 5.0)]);
     }
 
     #[test]
@@ -108,7 +155,7 @@ mod tests {
         assert!(a.add_partial(0, 0, 1.0).is_empty());
         let out = a.add_partial(0, 1, 2.0);
         // tree: (1+2)+3
-        assert_eq!(out, vec![Completed { req_id: 0, sum: 6.0 }]);
+        assert_eq!(out, vec![completed(0, 6.0)]);
     }
 
     #[test]
@@ -123,11 +170,7 @@ mod tests {
         let out = a.add_partial(0, 0, 5.0);
         assert_eq!(
             out,
-            vec![
-                Completed { req_id: 0, sum: 5.0 },
-                Completed { req_id: 1, sum: 10.0 },
-                Completed { req_id: 2, sum: 20.0 },
-            ]
+            vec![completed(0, 5.0), completed(1, 10.0), completed(2, 20.0)]
         );
         assert_eq!(a.outstanding(), 0);
     }
@@ -138,7 +181,7 @@ mod tests {
         a.expect(0, 1);
         a.expect(1, 1);
         let out = a.add_partial(1, 0, 10.0);
-        assert_eq!(out, vec![Completed { req_id: 1, sum: 10.0 }]);
+        assert_eq!(out, vec![completed(1, 10.0)]);
     }
 
     #[test]
@@ -160,5 +203,35 @@ mod tests {
             sums.push(got.unwrap().to_bits());
         }
         assert!(sums.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn carry_requests_get_their_combined_state() {
+        let mut a = Assembler::new(false);
+        a.expect_carry(0, 1, true);
+        let out = a.add_partial(0, 0, 2.5);
+        assert_eq!(out[0].state, Some(PartialState::F32(2.5)));
+        // Plain requests stay state-free.
+        a.expect(1, 1);
+        assert_eq!(a.add_partial(1, 0, 1.0)[0].state, None);
+    }
+
+    #[test]
+    fn exact_states_cross_chunk_boundaries_unrounded() {
+        // Chunk partials 1e30+1.0 and -1e30: the f32 combine loses the
+        // 1.0, the limb merge keeps it — the exact chunk-combine fix.
+        let exact_of = |vals: &[f32]| {
+            let mut acc = crate::engine::SuperAccumulator::new();
+            for &v in vals {
+                acc.add(v);
+            }
+            PartialState::Exact(Box::new(acc))
+        };
+        let mut a = Assembler::new(true);
+        a.expect(0, 2);
+        assert!(a.add_partial_state(0, 0, exact_of(&[1e30, 1.0])).is_empty());
+        let out = a.add_partial_state(0, 1, exact_of(&[-1e30]));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].sum, 1.0, "correctly rounded across the chunk boundary");
     }
 }

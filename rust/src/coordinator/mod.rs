@@ -56,7 +56,7 @@ pub use steal::StealPool;
 
 // The engine subsystem the coordinator drives: re-exported so service
 // callers configure engines from one import site.
-pub use crate::engine::{EngineCaps, EngineConfig, ReduceEngine, UnknownEngine};
+pub use crate::engine::{EngineCaps, EngineConfig, PartialState, ReduceEngine, UnknownEngine};
 
 use anyhow::{Context, Result};
 use std::sync::atomic::Ordering;
@@ -122,17 +122,23 @@ impl Default for ServiceConfig {
 }
 
 /// A completed reduction delivered to the client.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Response {
     pub req_id: u64,
     pub sum: f32,
     pub latency: Duration,
+    /// Combined engine carry state — populated only for carry-flagged
+    /// submissions (the streaming sessions' chunk probes; see
+    /// [`crate::session`]). Plain submissions pay nothing for it.
+    pub state: Option<PartialState>,
 }
 
 pub(crate) struct SubmitMsg {
     req_id: u64,
     values: Vec<f32>,
     at: Instant,
+    /// Deliver the combined [`PartialState`] with the response.
+    carry: bool,
 }
 
 /// One burst entering the pipeline: either owned per-set vectors
@@ -141,25 +147,28 @@ pub(crate) struct SubmitMsg {
 /// packs rows straight out of the arena).
 pub(crate) enum Submission {
     Owned(Vec<SubmitMsg>),
-    Slab { slab: SlabRef, first_id: u64, at: Instant },
+    Slab { slab: SlabRef, first_id: u64, at: Instant, carry: bool },
 }
 
 impl Submission {
-    /// Visit every set in submission order as `(req_id, values, at)`;
-    /// stops and returns `false` when the visitor does.
-    pub(crate) fn for_each_set<F: FnMut(u64, &[f32], Instant) -> bool>(&self, mut f: F) -> bool {
+    /// Visit every set in submission order as `(req_id, values, at,
+    /// carry)`; stops and returns `false` when the visitor does.
+    pub(crate) fn for_each_set<F: FnMut(u64, &[f32], Instant, bool) -> bool>(
+        &self,
+        mut f: F,
+    ) -> bool {
         match self {
             Submission::Owned(msgs) => {
                 for m in msgs {
-                    if !f(m.req_id, &m.values, m.at) {
+                    if !f(m.req_id, &m.values, m.at, m.carry) {
                         return false;
                     }
                 }
                 true
             }
-            Submission::Slab { slab, first_id, at } => {
+            Submission::Slab { slab, first_id, at, carry } => {
                 for k in 0..slab.sets() {
-                    if !f(*first_id + k as u64, slab.set(k), *at) {
+                    if !f(*first_id + k as u64, slab.set(k), *at, *carry) {
                         return false;
                     }
                 }
@@ -188,6 +197,7 @@ pub struct Service {
     next_id: u64,
     metrics: Arc<Metrics>,
     batch_capacity: usize,
+    row_width: usize,
     started: Instant,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -308,6 +318,7 @@ impl Service {
             next_id: 0,
             metrics,
             batch_capacity: batch,
+            row_width: n,
             started: Instant::now(),
             handles,
         })
@@ -324,6 +335,17 @@ impl Service {
     /// order. Costs one `Vec` per set; the zero-copy path is
     /// [`submit_burst_slab`](Self::submit_burst_slab).
     pub fn submit_burst(&mut self, sets: Vec<Vec<f32>>) -> Result<Vec<u64>> {
+        self.submit_burst_opts(sets, false)
+    }
+
+    /// [`submit_burst`](Self::submit_burst) with every set carry-flagged:
+    /// each response additionally delivers its combined [`PartialState`]
+    /// (the streaming sessions' chunk-probe path).
+    pub(crate) fn submit_burst_carry(&mut self, sets: Vec<Vec<f32>>) -> Result<Vec<u64>> {
+        self.submit_burst_opts(sets, true)
+    }
+
+    fn submit_burst_opts(&mut self, sets: Vec<Vec<f32>>, carry: bool) -> Result<Vec<u64>> {
         let now = Instant::now();
         let mut ids = Vec::with_capacity(sets.len());
         let burst: Vec<SubmitMsg> = sets
@@ -332,7 +354,7 @@ impl Service {
                 let id = self.next_id;
                 self.next_id += 1;
                 ids.push(id);
-                SubmitMsg { req_id: id, values, at: now }
+                SubmitMsg { req_id: id, values, at: now, carry }
             })
             .collect();
         self.metrics.submitted.fetch_add(ids.len() as u64, Ordering::Relaxed);
@@ -354,6 +376,23 @@ impl Service {
     /// Reclaim the arena for the next burst with [`SlabRef::try_reclaim`]
     /// once the pipeline has packed it (e.g. after draining responses).
     pub fn submit_burst_slab(&mut self, slab: &SlabRef) -> Result<std::ops::Range<u64>> {
+        self.submit_burst_slab_opts(slab, false)
+    }
+
+    /// [`submit_burst_slab`](Self::submit_burst_slab) with every set
+    /// carry-flagged (responses deliver their combined [`PartialState`]).
+    pub(crate) fn submit_burst_slab_carry(
+        &mut self,
+        slab: &SlabRef,
+    ) -> Result<std::ops::Range<u64>> {
+        self.submit_burst_slab_opts(slab, true)
+    }
+
+    fn submit_burst_slab_opts(
+        &mut self,
+        slab: &SlabRef,
+        carry: bool,
+    ) -> Result<std::ops::Range<u64>> {
         let now = Instant::now();
         let first_id = self.next_id;
         let count = slab.sets() as u64;
@@ -367,7 +406,7 @@ impl Service {
             .as_ref()
             .context("service shut down")
             .and_then(|tx| {
-                tx.send(Submission::Slab { slab: slab.clone(), first_id, at: now })
+                tx.send(Submission::Slab { slab: slab.clone(), first_id, at: now, carry })
                     .context("service pipeline closed")
             });
         if let Err(e) = sent {
@@ -400,6 +439,13 @@ impl Service {
         self.batch_capacity
     }
 
+    /// Values per engine row (the chunk width long sets are split at).
+    /// The streaming-session subsystem aligns its fragment re-chunking to
+    /// this so streamed and one-shot submissions produce identical chunks.
+    pub fn row_width(&self) -> usize {
+        self.row_width
+    }
+
     pub fn uptime(&self) -> Duration {
         self.started.elapsed()
     }
@@ -421,26 +467,46 @@ impl Service {
 /// Feed one executed batch's rows through the software PIS and ship every
 /// completion it unlocks. Shared by the fused pipeline and the reorder
 /// stage so delivery semantics (assembler feed, latency accounting,
-/// metrics, burst send) cannot diverge between them. Returns `false` when
-/// the client side has hung up.
+/// metrics, burst send) cannot diverge between them. The occupied-row
+/// prefix of `partials` is drained into the assembler (the buffer is left
+/// empty, capacity retained for reuse). Returns `false` when the client
+/// side has hung up.
 pub(crate) fn deliver_rows(
     rows: &[(u64, u32)],
-    sums: &[f32],
+    partials: &mut Vec<PartialState>,
     asm: &mut Assembler,
     birth: &mut std::collections::HashMap<u64, Instant>,
     metrics: &Metrics,
     tx_out: &std::sync::mpsc::Sender<Vec<Response>>,
 ) -> bool {
     let mut burst = Vec::new();
-    for (i, &(req_id, chunk_idx)) in rows.iter().enumerate() {
-        for done in asm.add_partial(req_id, chunk_idx, sums[i]) {
+    if partials.len() < rows.len() {
+        // An engine under-produced (a bug in it): NaN-poison the missing
+        // rows so their requests still complete loudly instead of wedging
+        // ordered delivery behind a permanently-inflight chunk.
+        debug_assert!(
+            false,
+            "engine produced {} partials for {} rows",
+            partials.len(),
+            rows.len()
+        );
+        partials.resize(rows.len(), PartialState::F32(f32::NAN));
+    }
+    for (&(req_id, chunk_idx), part) in rows.iter().zip(partials.drain(..rows.len())) {
+        for done in asm.add_partial_state(req_id, chunk_idx, part) {
             let at = birth.remove(&done.req_id);
             let latency = at.map(|t| t.elapsed()).unwrap_or_default();
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             metrics.record_latency_us(latency.as_micros() as u64);
-            burst.push(Response { req_id: done.req_id, sum: done.sum, latency });
+            burst.push(Response {
+                req_id: done.req_id,
+                sum: done.sum,
+                latency,
+                state: done.state,
+            });
         }
     }
+    partials.clear();
     if !burst.is_empty() && tx_out.send(burst).is_err() {
         return false;
     }

@@ -18,6 +18,7 @@
 use super::batcher::BatchPool;
 use super::metrics::Metrics;
 use super::{Assembler, Batch, Response};
+use crate::engine::PartialState;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
@@ -36,8 +37,11 @@ pub struct ShardDone {
     /// The executed batch, unchanged since dispatch (recycled after
     /// delivery).
     pub batch: Batch,
-    /// Per-row partial sums, `batch.rows.len()` entries.
-    pub sums: Vec<f32>,
+    /// Per-row partial states, `batch.rows.len()` entries — carryable
+    /// engine state, not pre-rounded floats, so wide-state engines
+    /// (`exact`) survive chunk and streaming-fragment boundaries (see
+    /// [`crate::engine::partial`]).
+    pub partials: Vec<PartialState>,
 }
 
 /// Messages flowing into the reorder/delivery thread. The batcher sends
@@ -46,7 +50,7 @@ pub struct ShardDone {
 /// shared channel every `Expect` is observed before the `Done`s it covers.
 #[derive(Debug)]
 pub enum ToReorder {
-    Expect { req_id: u64, chunks: u32, at: Instant },
+    Expect { req_id: u64, chunks: u32, at: Instant, carry: bool },
     Done(ShardDone),
 }
 
@@ -146,16 +150,17 @@ pub(crate) fn run_reorder(
                    asm: &mut Assembler,
                    birth: &mut std::collections::HashMap<u64, Instant>|
      -> bool {
-        let ok = super::deliver_rows(&done.batch.rows, &done.sums, asm, birth, &metrics, &tx_out);
+        let ShardDone { batch, mut partials, .. } = done;
+        let ok = super::deliver_rows(&batch.rows, &mut partials, asm, birth, &metrics, &tx_out);
         // Delivery done with the buffers: hand them back to the batcher.
-        pool.put(done.batch);
+        pool.put(batch);
         ok
     };
 
     loop {
         match rx.recv() {
-            Ok(ToReorder::Expect { req_id, chunks, at }) => {
-                asm.expect(req_id, chunks);
+            Ok(ToReorder::Expect { req_id, chunks, at, carry }) => {
+                asm.expect_carry(req_id, chunks, carry);
                 birth.insert(req_id, at);
             }
             Ok(ToReorder::Done(d)) => {
@@ -190,7 +195,7 @@ mod tests {
             seq,
             shard: 0,
             batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] },
-            sums: vec![seq as f32],
+            partials: vec![PartialState::F32(seq as f32)],
         }
     }
 

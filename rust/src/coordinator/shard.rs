@@ -30,7 +30,7 @@ use super::metrics::Metrics;
 use super::reorder::{ShardDone, ToReorder};
 use super::steal::StealPool;
 use super::{Batch, Submission};
-use crate::engine::{self, EngineConfig, ReduceEngine};
+use crate::engine::{self, EngineConfig, PartialState, ReduceEngine};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -85,19 +85,20 @@ pub(crate) fn run_fused(args: FusedArgs) {
     let mut b = Batcher::new(batch, n, deadline).with_pool(Arc::clone(&pool));
     let mut asm = super::Assembler::new(ordered);
     let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
-    // Reusable engine output buffer — the fused hot path stays
-    // allocation-free at steady state.
-    let mut sums: Vec<f32> = Vec::new();
+    // Reusable engine output buffers — the fused hot path stays
+    // allocation-free at steady state for f32-carry engines.
+    let mut partials: Vec<PartialState> = Vec::new();
+    let mut sums_scratch: Vec<f32> = Vec::new();
 
     // Execute one batch, deliver everything it completes, and recycle the
     // batch buffers.
     let mut run_batch = |full: Batch,
                          asm: &mut super::Assembler,
                          birth: &mut std::collections::HashMap<u64, Instant>,
-                         sums: &mut Vec<f32>|
+                         partials: &mut Vec<PartialState>|
      -> bool {
         let t_exec = Instant::now();
-        if let Err(e) = eng.reduce_batch(&full, sums) {
+        if let Err(e) = eng.reduce_batch_partials(&full, &mut sums_scratch, partials) {
             eprintln!("worker: execute failed: {e:#}");
             return false;
         }
@@ -107,7 +108,7 @@ pub(crate) fn run_fused(args: FusedArgs) {
             batch_values(&full),
             t_exec.elapsed().as_nanos() as u64,
         );
-        let ok = super::deliver_rows(&full.rows, sums, asm, birth, &metrics, &tx_out);
+        let ok = super::deliver_rows(&full.rows, partials, asm, birth, &metrics, &tx_out);
         pool.put(full);
         ok
     };
@@ -115,11 +116,11 @@ pub(crate) fn run_fused(args: FusedArgs) {
     loop {
         match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
             Ok(sub) => {
-                let ok = sub.for_each_set(|req_id, values, at| {
-                    asm.expect(req_id, b.chunks_for(values.len()));
+                let ok = sub.for_each_set(|req_id, values, at, carry| {
+                    asm.expect_carry(req_id, b.chunks_for(values.len()), carry);
                     birth.insert(req_id, at);
                     for full in b.add_request(req_id, values) {
-                        if !run_batch(full, &mut asm, &mut birth, &mut sums) {
+                        if !run_batch(full, &mut asm, &mut birth, &mut partials) {
                             return false;
                         }
                     }
@@ -135,14 +136,14 @@ pub(crate) fn run_fused(args: FusedArgs) {
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(partial) = b.poll_deadline() {
-                    if !run_batch(partial, &mut asm, &mut birth, &mut sums) {
+                    if !run_batch(partial, &mut asm, &mut birth, &mut partials) {
                         return;
                     }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(rest) = b.flush() {
-                    run_batch(rest, &mut asm, &mut birth, &mut sums);
+                    run_batch(rest, &mut asm, &mut birth, &mut partials);
                 }
                 return;
             }
@@ -186,11 +187,12 @@ fn batcher_loop(
     loop {
         match rx_in.recv_timeout(deadline.max(Duration::from_micros(50))) {
             Ok(sub) => {
-                let ok = sub.for_each_set(|req_id, values, at| {
+                let ok = sub.for_each_set(|req_id, values, at, carry| {
                     let announce = ToReorder::Expect {
                         req_id,
                         chunks: b.chunks_for(values.len()),
                         at,
+                        carry,
                     };
                     if tx_reorder.send(announce).is_err() {
                         return false;
@@ -312,7 +314,7 @@ pub(crate) fn run_shard(args: ShardArgs) {
     let poison = |seq: u64, batch: Batch| ShardDone {
         seq,
         shard,
-        sums: vec![f32::NAN; batch.rows.len()],
+        partials: vec![PartialState::F32(f32::NAN); batch.rows.len()],
         batch,
     };
     // A failed completion send means the reorder stage is gone (teardown,
@@ -328,9 +330,11 @@ pub(crate) fn run_shard(args: ShardArgs) {
             false
         }
     };
-    // Reusable engine output buffer (per-row sums land here before the
-    // occupied prefix is copied into the completion message).
-    let mut sums: Vec<f32> = Vec::new();
+    // Reusable engine output buffers (per-row partial states land in
+    // `scratch` before the occupied prefix moves into the completion
+    // message; `sums_scratch` backs the default f32-carry surface).
+    let mut scratch: Vec<PartialState> = Vec::new();
+    let mut sums_scratch: Vec<f32> = Vec::new();
     let mut executed = 0u64;
     let mut failed = false;
     while let Some(SeqBatch { seq, batch }) = pool.pop(shard, steal && !failed) {
@@ -349,7 +353,7 @@ pub(crate) fn run_shard(args: ShardArgs) {
             continue;
         }
         let t_exec = Instant::now();
-        if let Err(e) = eng.reduce_batch(&batch, &mut sums) {
+        if let Err(e) = eng.reduce_batch_partials(&batch, &mut sums_scratch, &mut scratch) {
             eprintln!("shard {shard}: execute failed: {e:#}");
             dead[shard].store(true, Ordering::Relaxed);
             failed = true;
@@ -375,8 +379,11 @@ pub(crate) fn run_shard(args: ShardArgs) {
             // reorder buffer.
             std::thread::sleep(Duration::from_micros(rng.next_below(jitter_us)));
         }
-        let out = sums[..batch.rows.len()].to_vec();
-        if !send_done(ShardDone { seq, shard, batch, sums: out }) {
+        // Occupied-prefix states move into the message; padding-row
+        // entries are discarded (the buffer's capacity is reused).
+        let out: Vec<PartialState> = scratch.drain(..batch.rows.len()).collect();
+        scratch.clear();
+        if !send_done(ShardDone { seq, shard, batch, partials: out }) {
             return;
         }
     }

@@ -25,11 +25,13 @@
 //! sum), matching the hardware adder bit for bit — property-tested
 //! against `a + b` on random pairs spanning the full f32 range.
 //!
-//! Scope note: the service chunks sets longer than the engine row width
-//! `n` across rows and combines chunk partials in f32 (the assembler's
-//! shared tree), so end-to-end correctly-rounded sums hold for sets that
-//! fit one row (`len <= n`). Size `n` accordingly (e.g. `serve
-//! --engine exact --n 1024 --max-len 1000`).
+//! The service chunks sets longer than the engine row width `n` across
+//! rows; the `exact` engine reports each row as full limb state
+//! ([`crate::engine::PartialState::Exact`]) and the assembler merges limbs
+//! ([`SuperAccumulator::merge`]) before the single final rounding — so the
+//! correctly-rounded, permutation-invariant guarantee holds end to end for
+//! **any** set length and for arbitrarily fragmented streaming sessions
+//! ([`crate::session`]), not just single-row sets.
 
 use super::{Batch, EngineConfig, ReduceEngine};
 use anyhow::Result;
@@ -45,7 +47,7 @@ const RENORM_EVERY: u32 = 1 << 30;
 
 /// Neal-2015 small superaccumulator for f32: exact fixed-point sum with
 /// one final rounding.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SuperAccumulator {
     /// Signed limbs; value = Σ limbs\[i\] · 2^(32·i - 149) (before
     /// specials). After [`Self::renorm`], limbs 0..10 are in \[0, 2^32)
@@ -127,6 +129,31 @@ impl SuperAccumulator {
         if self.pending >= RENORM_EVERY {
             self.renorm();
         }
+    }
+
+    /// Fold another accumulator's exact value into this one — integer
+    /// limb addition, so the merge is exact, commutative and associative:
+    /// splitting a set across chunks (or a stream across fragments) and
+    /// merging the per-piece accumulators yields the *same* fixed-point
+    /// total as one accumulator over the whole set, hence the same single
+    /// rounding. Specials and signed-zero flags combine with IEEE-addition
+    /// semantics (any NaN poisons; `-0.0` survives only if every piece was
+    /// all-`-0.0`).
+    pub fn merge(&mut self, other: &SuperAccumulator) {
+        // Renormalize both sides so every limb is in [0, 2^32) before the
+        // add: the sums stay below 2^33, leaving the usual ~2^30-addition
+        // headroom budget intact for subsequent `add`s.
+        self.renorm();
+        let mut o = other.clone();
+        o.renorm();
+        for (l, &ol) in self.limbs.iter_mut().zip(o.limbs.iter()) {
+            *l += ol;
+        }
+        self.nan |= o.nan;
+        self.pos_inf |= o.pos_inf;
+        self.neg_inf |= o.neg_inf;
+        self.saw_value |= o.saw_value;
+        self.only_neg_zero &= o.only_neg_zero;
     }
 
     /// Propagate pending carries: limbs 0..10 into \[0, 2^32), sign folded
@@ -256,10 +283,44 @@ impl ReduceEngine for ExactEngine {
         }
         Ok(())
     }
+
+    /// The partial-state override that makes `exact` chunk-proof: each row
+    /// is reported as its full superaccumulator limbs, so the downstream
+    /// combine (assembler chunk-merge or streaming-session fragment carry)
+    /// adds integers and rounds **once** — correctly rounded and
+    /// permutation invariant across any chunk/fragment boundaries, where
+    /// the default rounded-f32 carry would round per chunk.
+    fn reduce_batch_partials(
+        &mut self,
+        batch: &Batch,
+        _sums_scratch: &mut Vec<f32>,
+        out: &mut Vec<super::PartialState>,
+    ) -> Result<()> {
+        out.clear();
+        for (row, &len) in batch.x.chunks_exact(self.n).zip(batch.lengths.iter()) {
+            let live = (len.max(0) as usize).min(self.n);
+            let mut acc = SuperAccumulator::new();
+            for &v in &row[..live] {
+                acc.add(v);
+            }
+            out.push(super::PartialState::Exact(Box::new(acc)));
+        }
+        Ok(())
+    }
 }
 
 pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {
     Ok(Box::new(ExactEngine::create(cfg)?))
+}
+
+/// Sum a slice through one fresh superaccumulator, rounding once — the
+/// whole-slice convenience entry (tests, references, small callers).
+pub fn exact_sum(vals: &[f32]) -> f32 {
+    let mut acc = SuperAccumulator::new();
+    for &v in vals {
+        acc.add(v);
+    }
+    acc.round_f32()
 }
 
 #[cfg(test)]
@@ -268,11 +329,7 @@ mod tests {
     use crate::util::Xoshiro256;
 
     fn sum_exact(vals: &[f32]) -> f32 {
-        let mut acc = SuperAccumulator::new();
-        for &v in vals {
-            acc.add(v);
-        }
-        acc.round_f32()
+        super::exact_sum(vals)
     }
 
     /// Same-bits comparison that treats every NaN as equal.
@@ -370,6 +427,65 @@ mod tests {
                 assert!(same(sum_exact(&vals), want));
             }
         }
+    }
+
+    #[test]
+    fn merge_equals_one_accumulator_over_the_concatenation() {
+        let mut rng = Xoshiro256::seeded(0x4E41_2015);
+        for _ in 0..2_000 {
+            let len = rng.range(2, 60);
+            let vals: Vec<f32> = (0..len)
+                .map(|_| {
+                    let e = rng.range(1, 250) as u32;
+                    let frac = rng.next_u64() as u32 & 0x7F_FFFF;
+                    let sign = (rng.chance(0.5) as u32) << 31;
+                    f32::from_bits(sign | (e << 23) | frac)
+                })
+                .collect();
+            let want = sum_exact(&vals);
+            let split = rng.range(0, len);
+            let (a, b) = vals.split_at(split);
+            let mut left = SuperAccumulator::new();
+            for &v in a {
+                left.add(v);
+            }
+            let mut right = SuperAccumulator::new();
+            for &v in b {
+                right.add(v);
+            }
+            left.merge(&right);
+            assert!(same(left.round_f32(), want), "split {split} of {len}");
+        }
+    }
+
+    #[test]
+    fn merge_combines_specials_and_signed_zero_flags() {
+        let acc_of = |vals: &[f32]| {
+            let mut a = SuperAccumulator::new();
+            for &v in vals {
+                a.add(v);
+            }
+            a
+        };
+        // NaN poisons across the merge.
+        let mut a = acc_of(&[1.0]);
+        a.merge(&acc_of(&[f32::NAN]));
+        assert!(a.round_f32().is_nan());
+        // Opposing infinities across the boundary -> NaN.
+        let mut a = acc_of(&[f32::INFINITY]);
+        a.merge(&acc_of(&[f32::NEG_INFINITY]));
+        assert!(a.round_f32().is_nan());
+        // -0.0 survives only when every fragment is all -0.0.
+        let mut a = acc_of(&[-0.0]);
+        a.merge(&acc_of(&[-0.0]));
+        assert_eq!(a.round_f32().to_bits(), (-0.0f32).to_bits());
+        let mut a = acc_of(&[-0.0]);
+        a.merge(&acc_of(&[0.0]));
+        assert_eq!(a.round_f32().to_bits(), 0.0f32.to_bits());
+        // Merging an empty fragment is the identity.
+        let mut a = acc_of(&[2.5, -0.5]);
+        a.merge(&SuperAccumulator::new());
+        assert_eq!(a.round_f32(), 2.0);
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! | `jugglepac` | cycle-accurate JugglePAC circuit ([`crate::jugglepac`]) | — |
 //! | `treesched` | multi-adder tree scheduler ([`crate::baselines::treesched`]) | — |
 //! | `intac`     | carry-save integer circuit ([`crate::intac`]), fixed-point | order_invariant |
-//! | `exact`     | Neal-2015 superaccumulator ([`exact::SuperAccumulator`]) | bit_exact, order_invariant |
+//! | `exact`     | Neal-2015 superaccumulator ([`exact::SuperAccumulator`]) | bit_exact, order_invariant, partial_state |
 //!
 //! # Adding an engine
 //!
@@ -45,10 +45,12 @@
 pub mod classic;
 pub mod cycle_adapter;
 pub mod exact;
+pub mod partial;
 
 pub use classic::{NativeEngine, SoftFpEngine, XlaEngine};
 pub use cycle_adapter::{IntacEngine, JugglePacEngine, TreeSchedEngine};
 pub use exact::{ExactEngine, SuperAccumulator};
+pub use partial::PartialState;
 
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
@@ -80,6 +82,34 @@ pub struct Batch {
 pub trait ReduceEngine {
     /// Execute one padded batch; one sum per row into `sums_out`.
     fn reduce_batch(&mut self, batch: &Batch, sums_out: &mut Vec<f32>) -> Result<()>;
+
+    /// Execute one padded batch, reporting each row as carryable
+    /// [`PartialState`] instead of a pre-rounded `f32` — the surface the
+    /// chunk assembler and the streaming-session subsystem combine across
+    /// chunk/fragment boundaries (see [`partial`]).
+    ///
+    /// The default wraps [`reduce_batch`](Self::reduce_batch)'s sums as
+    /// [`PartialState::F32`], which is **lossless** for every engine whose
+    /// one-shot path already combines rounded row partials (all the
+    /// classic and cycle-adapter engines). Engines that can carry wider
+    /// state override it — `exact` reports full superaccumulator limbs so
+    /// its correctly-rounded guarantee survives fragmentation — and
+    /// advertise the override via [`EngineCaps::partial_state`].
+    ///
+    /// `sums_scratch` is a caller-owned reusable buffer the default
+    /// reduces into (keeping the per-batch hot path allocation-free for
+    /// f32-carry engines); overriding engines may ignore it.
+    fn reduce_batch_partials(
+        &mut self,
+        batch: &Batch,
+        sums_scratch: &mut Vec<f32>,
+        out: &mut Vec<PartialState>,
+    ) -> Result<()> {
+        self.reduce_batch(batch, sums_scratch)?;
+        out.clear();
+        out.extend(sums_scratch.drain(..).map(PartialState::F32));
+        Ok(())
+    }
 }
 
 /// Typed capability flags an engine guarantees. Tests select assertions by
@@ -97,6 +127,10 @@ pub struct EngineCaps {
     /// every other `shared_tree` engine on *any* workload, not just
     /// exactly-summable ones.
     pub shared_tree: bool,
+    /// Overrides [`ReduceEngine::reduce_batch_partials`] with carry state
+    /// wider than a rounded f32, so its accuracy guarantees survive chunk
+    /// and streaming-fragment boundaries (see [`partial`]).
+    pub partial_state: bool,
 }
 
 /// Engine selection + knobs: everything a worker thread needs to build its
@@ -233,29 +267,50 @@ fn xla_shape(cfg: &EngineConfig) -> Result<(usize, usize)> {
     Ok((spec.batch, spec.n))
 }
 
-const SHARED_TREE: EngineCaps =
-    EngineCaps { bit_exact: false, order_invariant: false, shared_tree: true };
+const SHARED_TREE: EngineCaps = EngineCaps {
+    bit_exact: false,
+    order_invariant: false,
+    shared_tree: true,
+    partial_state: false,
+};
+
+const CYCLE_CORE: EngineCaps = EngineCaps {
+    bit_exact: false,
+    order_invariant: false,
+    shared_tree: false,
+    partial_state: false,
+};
 
 /// The engine catalogue, sorted by name. Every selection surface
 /// (`ServiceConfig`, `serve --engine`, tests, benches) goes through here.
 pub const REGISTRY: &[EngineEntry] = &[
     EngineEntry {
         name: "exact",
-        caps: EngineCaps { bit_exact: true, order_invariant: true, shared_tree: false },
+        caps: EngineCaps {
+            bit_exact: true,
+            order_invariant: true,
+            shared_tree: false,
+            partial_state: true,
+        },
         summary: "Neal-2015 superaccumulator: correctly-rounded, permutation-invariant sums",
         shape: config_shape,
         build: exact::build,
     },
     EngineEntry {
         name: "intac",
-        caps: EngineCaps { bit_exact: false, order_invariant: true, shared_tree: false },
+        caps: EngineCaps {
+            bit_exact: false,
+            order_invariant: true,
+            shared_tree: false,
+            partial_state: false,
+        },
         summary: "cycle-accurate INTAC carry-save circuit over 2^-16 fixed point",
         shape: config_shape,
         build: cycle_adapter::build_intac,
     },
     EngineEntry {
         name: "jugglepac",
-        caps: EngineCaps { bit_exact: false, order_invariant: false, shared_tree: false },
+        caps: CYCLE_CORE,
         summary: "cycle-accurate JugglePAC circuit (the paper's design) serving real traffic",
         shape: config_shape,
         build: cycle_adapter::build_jugglepac,
@@ -276,7 +331,7 @@ pub const REGISTRY: &[EngineEntry] = &[
     },
     EngineEntry {
         name: "treesched",
-        caps: EngineCaps { bit_exact: false, order_invariant: false, shared_tree: false },
+        caps: CYCLE_CORE,
         summary: "multi-adder tree-reduction scheduler (SSA discipline)",
         shape: config_shape,
         build: cycle_adapter::build_treesched,
@@ -396,12 +451,52 @@ mod tests {
     fn caps_encode_the_documented_contract() {
         assert!(lookup("exact").unwrap().caps.bit_exact);
         assert!(lookup("exact").unwrap().caps.order_invariant);
+        assert!(lookup("exact").unwrap().caps.partial_state);
         assert!(lookup("intac").unwrap().caps.order_invariant);
         for name in ["native", "softfp", "xla"] {
             assert!(lookup(name).unwrap().caps.shared_tree, "{name}");
         }
         for name in ["jugglepac", "treesched"] {
             assert!(!lookup(name).unwrap().caps.shared_tree, "{name}");
+        }
+        for name in ["native", "softfp", "xla", "jugglepac", "treesched", "intac"] {
+            assert!(!lookup(name).unwrap().caps.partial_state, "{name}: f32 carry is lossless");
+        }
+    }
+
+    #[test]
+    fn partial_state_surface_matches_the_caps_flag() {
+        // Default surface: F32 wraps of reduce_batch, bit for bit.
+        // Overriding engines (`exact`): wide state whose rounded view
+        // equals the engine's one-row sums.
+        // Small dyadic values: every engine (including the 2^-16
+        // fixed-point intac adapter) can represent them exactly.
+        let batch = Batch {
+            x: vec![1.0, 2.0, 3.0, 0.0, 0.5, -0.25, 0.0, 0.0],
+            lengths: vec![3, 2],
+            rows: vec![(0, 0), (1, 0)],
+        };
+        for entry in REGISTRY {
+            if entry.name == "xla" {
+                continue;
+            }
+            let cfg = EngineConfig::named(entry.name, 2, 4);
+            let mut eng = build(&cfg).unwrap_or_else(|e| panic!("{}: {e:#}", entry.name));
+            let mut sums = Vec::new();
+            eng.reduce_batch(&batch, &mut sums).unwrap();
+            let mut parts = Vec::new();
+            let mut scratch = Vec::new();
+            eng.reduce_batch_partials(&batch, &mut scratch, &mut parts).unwrap();
+            assert_eq!(parts.len(), sums.len(), "{}", entry.name);
+            for (p, &s) in parts.iter().zip(sums.iter()) {
+                assert_eq!(p.rounded().to_bits(), s.to_bits(), "{}", entry.name);
+                assert_eq!(
+                    matches!(p, PartialState::Exact(_)),
+                    entry.caps.partial_state,
+                    "{}: caps flag advertises the override",
+                    entry.name
+                );
+            }
         }
     }
 }

@@ -1,0 +1,179 @@
+//! Engine partial state — the carry surface that crosses chunk and
+//! fragment boundaries.
+//!
+//! The coordinator splits long sets into row-width chunks, and the
+//! streaming-session subsystem ([`crate::session`]) additionally splits
+//! open-ended streams into fragments that arrive over time. Both need to
+//! carry *something* per chunk until the set (or stream) completes, then
+//! combine the pieces into one final sum. Historically that something was
+//! a rounded `f32` partial — which silently destroys the `exact` engine's
+//! correctly-rounded guarantee the moment a set spans two chunks, because
+//! each chunk rounds once and the combine rounds again (exactly the
+//! failure mode arXiv:2406.05866 §2 describes for block-wise
+//! accumulation).
+//!
+//! [`PartialState`] fixes the interface: engines report each row's result
+//! as whatever state they need carried, not as a pre-rounded float.
+//!
+//! - [`PartialState::F32`] — a rounded `f32` partial. For the classic and
+//!   cycle-adapter engines this is *lossless*: their one-shot path already
+//!   combines rounded row partials over the shared pairwise tree, so an
+//!   `F32` carry is bit-identical to one-shot submission by construction.
+//! - [`PartialState::Exact`] — full superaccumulator limbs
+//!   ([`SuperAccumulator`]). Nothing is rounded until the whole set (or
+//!   stream) is finished, so the combined sum stays correctly rounded and
+//!   permutation invariant across *arbitrary* chunk/fragment boundaries.
+//!
+//! [`combine`] is the one combine rule everyone shares — the assembler's
+//! set-completion path and the session subsystem's stream-close path call
+//! the same function, so one-shot and streaming delivery cannot diverge.
+
+use super::exact::SuperAccumulator;
+
+/// One row's (or one fragment's) reduction result, in the widest form the
+/// producing engine can carry across a chunk boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartialState {
+    /// A rounded f32 partial (the classic engines' only surface; also the
+    /// poison value a dead shard closes its rows with — `NaN`).
+    F32(f32),
+    /// Full superaccumulator limb state: the exact, unrounded fixed-point
+    /// sum of the chunk. Boxed — the limbs are ~100 bytes and most traffic
+    /// is `F32`.
+    Exact(Box<SuperAccumulator>),
+}
+
+impl PartialState {
+    /// The rounded f32 view of this state (rounds a copy; the carried
+    /// state itself is untouched).
+    pub fn rounded(&self) -> f32 {
+        match self {
+            PartialState::F32(v) => *v,
+            PartialState::Exact(acc) => {
+                let mut copy = (**acc).clone();
+                copy.round_f32()
+            }
+        }
+    }
+
+    /// Bytes of carry this state pins while parked (the session
+    /// subsystem's `partial_bytes` gauge unit).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            PartialState::F32(_) => std::mem::size_of::<f32>() as u64,
+            PartialState::Exact(_) => std::mem::size_of::<SuperAccumulator>() as u64,
+        }
+    }
+
+    /// Consume the state into its final rounded sum.
+    pub fn finish(self) -> f32 {
+        match self {
+            PartialState::F32(v) => v,
+            PartialState::Exact(mut acc) => acc.round_f32(),
+        }
+    }
+}
+
+/// Combine chunk states, in chunk order, into the final rounded sum plus
+/// the combined carry state. The single combine rule of the whole stack:
+///
+/// - all-`F32` parts reduce over the shared masked pairwise tree
+///   ([`crate::fp::vreduce::tree_reduce_in_place`]) — **bit-identical** to
+///   the pre-`PartialState` assembler on every workload;
+/// - all-`Exact` parts merge limbs (integer addition — exact, order
+///   invariant) and round **once**;
+/// - a mixed list only arises when a dead shard NaN-poisons some rows of
+///   an `exact` service; every part is finished to f32 and tree-combined,
+///   so the NaN poison dominates the delivered sum as intended.
+pub fn combine(parts: Vec<PartialState>) -> (f32, PartialState) {
+    debug_assert!(!parts.is_empty(), "combine of zero parts");
+    let all_exact = parts.iter().all(|p| matches!(p, PartialState::Exact(_)));
+    if all_exact {
+        let mut acc: Option<Box<SuperAccumulator>> = None;
+        for p in parts {
+            let PartialState::Exact(part) = p else { unreachable!() };
+            acc = Some(match acc.take() {
+                None => part,
+                Some(mut a) => {
+                    a.merge(&part);
+                    a
+                }
+            });
+        }
+        let mut acc = acc.expect("non-empty parts");
+        let sum = acc.round_f32();
+        return (sum, PartialState::Exact(acc));
+    }
+    let mut level: Vec<f32> = parts.into_iter().map(PartialState::finish).collect();
+    let sum = crate::fp::vreduce::tree_reduce_in_place(&mut level);
+    (sum, PartialState::F32(sum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact_of(vals: &[f32]) -> PartialState {
+        let mut acc = SuperAccumulator::new();
+        for &v in vals {
+            acc.add(v);
+        }
+        PartialState::Exact(Box::new(acc))
+    }
+
+    #[test]
+    fn f32_parts_combine_over_the_shared_tree() {
+        let parts = vec![
+            PartialState::F32(0.1),
+            PartialState::F32(0.2),
+            PartialState::F32(0.3),
+        ];
+        let mut level = vec![0.1f32, 0.2, 0.3];
+        let want = crate::fp::vreduce::tree_reduce_in_place(&mut level);
+        let (sum, state) = combine(parts);
+        assert_eq!(sum.to_bits(), want.to_bits());
+        assert_eq!(state, PartialState::F32(want));
+    }
+
+    #[test]
+    fn exact_parts_survive_catastrophic_cancellation_across_the_boundary() {
+        // Chunk partials round to 1e30 and -1e30 individually; the f32
+        // combine would lose the 1.0. The exact carry keeps it.
+        let (sum, state) = combine(vec![exact_of(&[1e30, 1.0]), exact_of(&[-1e30])]);
+        assert_eq!(sum, 1.0);
+        assert_eq!(state.rounded(), 1.0);
+        // The rounded-f32 path this replaces really does lose it.
+        let s0 = 1e30f32 + 1.0;
+        assert_eq!(s0 + -1e30f32, 0.0);
+    }
+
+    #[test]
+    fn exact_combine_is_fragmentation_invariant() {
+        let vals: Vec<f32> = (0..40).map(|i| (i as f32 - 20.0) * 1.5e20).collect();
+        let one = combine(vec![exact_of(&vals)]).0;
+        for split in [1usize, 7, 19, 39] {
+            let (a, b) = vals.split_at(split);
+            let (sum, _) = combine(vec![exact_of(a), exact_of(b)]);
+            assert_eq!(sum.to_bits(), one.to_bits(), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn mixed_parts_let_nan_poison_dominate() {
+        let (sum, state) = combine(vec![exact_of(&[2.0]), PartialState::F32(f32::NAN)]);
+        assert!(sum.is_nan());
+        assert!(state.rounded().is_nan());
+    }
+
+    #[test]
+    fn rounded_view_and_bytes() {
+        assert_eq!(PartialState::F32(2.5).rounded(), 2.5);
+        assert_eq!(PartialState::F32(2.5).bytes(), 4);
+        let e = exact_of(&[1e30, 1.0, -1e30]);
+        assert_eq!(e.rounded(), 1.0);
+        assert!(e.bytes() > 80, "limb state is the heavy carry");
+        // rounded() is non-destructive
+        assert_eq!(e.rounded(), 1.0);
+        assert_eq!(e.finish(), 1.0);
+    }
+}

@@ -43,7 +43,10 @@ pub mod dag;
 pub mod pis;
 
 pub use dag::{Dag, Node, Operator};
-pub use pis::{ExpiredOutput, Held, LabelOutOfRange, PairEntry, Pis, ReceiveOutcome};
+pub use pis::{
+    ExpiredOutput, Held, LabelOutOfRange, PairEntry, Pis, ReceiveOutcome, RegFileKind,
+    RegisterFile,
+};
 
 use crate::cycle::{Clocked, CycleStats, ShiftRegister, Trace, TraceEvent};
 use crate::fp::{FpFormat, PipelinedOp, F64};
@@ -71,7 +74,10 @@ pub struct JugglePacConfig {
     pub fmt: FpFormat,
     /// Operator pipeline latency `L` (the paper's tables use 14).
     pub adder_latency: usize,
-    /// Number of PIS registers `R` — the paper explores 2, 4 and 8.
+    /// Number of PIS registers `R` — the paper explores 2, 4 and 8
+    /// (discrete registers); 9–256 engage the label-addressed BRAM model
+    /// ([`pis::RegisterFile`]), trading a block RAM for far more
+    /// concurrent in-flight sets and a smaller minimum set length.
     pub pis_registers: usize,
     /// PIS ready-pair FIFO depth (4 in the paper).
     pub fifo_capacity: usize,
@@ -266,6 +272,12 @@ impl JugglePac {
         self.pis.collisions
     }
 
+    /// Which hardware the PIS register file models at this capacity
+    /// (discrete registers ≤ 8 labels, label-addressed BRAM beyond).
+    pub fn pis_register_model(&self) -> pis::RegFileKind {
+        self.pis.register_model()
+    }
+
     /// FIFO overflow flag (≠false means the 4-slot FIFO was exceeded).
     pub fn fifo_overflowed(&self) -> bool {
         self.pis.fifo.overflowed
@@ -353,7 +365,10 @@ impl JugglePac {
                 if beat.start {
                     self.cur_label = self.next_label;
                     self.cur_set_id = self.next_set_id;
-                    self.next_label = (self.next_label + 1) % self.cfg.pis_registers as u8;
+                    // usize modulus: `pis_registers as u8` would wrap the
+                    // BRAM model's 256-label ceiling to 0.
+                    self.next_label =
+                        ((self.next_label as usize + 1) % self.cfg.pis_registers) as u8;
                     self.next_set_id += 1;
                     self.elem_idx = 0;
                 }
@@ -811,6 +826,42 @@ mod tests {
         assert_eq!(outs.len(), 2);
         assert_eq!(bits_f64(outs[0].bits), 10.0);
         assert_eq!(bits_f64(outs[1].bits), 26.0);
+    }
+
+    #[test]
+    fn bram_register_file_runs_the_circuit_end_to_end() {
+        // R=32 engages the BRAM model: many short-ish sets in flight at
+        // once, reduced bit-exactly and delivered in input order.
+        let cfg = JugglePacConfig {
+            adder_latency: 14,
+            pis_registers: 32,
+            ..Default::default()
+        };
+        let sets: Vec<Vec<u64>> = (0..48)
+            .map(|k| (0..24).map(|i| f64_bits((k * 31 + i) as f64)).collect())
+            .collect();
+        let (outs, jp) = run_sets(cfg, &sets, &|_| 0, 1_000_000);
+        assert_eq!(outs.len(), sets.len());
+        assert_eq!(jp.pis_register_model(), pis::RegFileKind::Bram);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.set_id, i as u64, "input-order delivery");
+            assert_eq!(o.bits, serial_sum(cfg, &sets[i]), "set {i} bit-exact");
+        }
+        assert_eq!(jp.collisions(), 0, "32 labels cover 48 staggered sets of 24");
+    }
+
+    #[test]
+    fn wider_register_files_shrink_the_minimum_set_length() {
+        // Table II's trend (94/29/18 for R=2/4/8) continues into the BRAM
+        // range: more labels, shorter safe sets.
+        let at = |r: usize| {
+            min_set_size(
+                JugglePacConfig { adder_latency: 2, pis_registers: r, ..Default::default() },
+                4,
+            )
+        };
+        let (r8, r16) = (at(8), at(16));
+        assert!(r16 <= r8, "R=16 min {r16} should not exceed R=8 min {r8}");
     }
 
     #[test]

@@ -8,8 +8,16 @@
 //! partner as the set's final result.
 //!
 //! The registers are label-indexed — "behaving as a BRAM where the address
-//! is the label", but implemented as discrete registers because 2–8 entries
-//! would leave a BRAM severely underutilized (the paper's area argument).
+//! is the label". The paper's design space (2–8 labels) implements them as
+//! discrete registers because so few entries would leave a BRAM severely
+//! underutilized (the paper's area argument); this model additionally
+//! supports register files **beyond 8 labels**, where the BRAM the paper
+//! describes becomes the right implementation — see [`RegisterFile`]. The
+//! storage model never changes behavior (same single-cycle
+//! read-modify-write semantics either way); it changes what hardware the
+//! file would synthesize to, and lets the service layer track many more
+//! concurrent sets per circuit (`JugglePacConfig { pis_registers: 32, .. }`,
+//! `serve --engine jugglepac --registers 32`).
 
 use crate::cycle::{Clocked, SyncFifo};
 
@@ -72,9 +80,98 @@ impl std::fmt::Display for LabelOutOfRange {
 
 impl std::error::Error for LabelOutOfRange {}
 
+/// What hardware the label-indexed register file models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegFileKind {
+    /// Discrete registers + comparators — the paper's 2–8-label design
+    /// points.
+    Discrete,
+    /// A label-addressed BRAM ("behaving as a BRAM where the address is
+    /// the label", §III-A) — the natural implementation past 8 labels,
+    /// where discrete registers stop scaling and a block RAM stops being
+    /// underutilized.
+    Bram,
+}
+
+/// The label-indexed value store behind the PIS: one `Held` slot per
+/// label, single-cycle read-modify-write, typed [`LabelOutOfRange`] at the
+/// boundary. Behavior is identical for both [`RegFileKind`]s — the kind
+/// records which hardware the chosen capacity would synthesize to (and
+/// what the area model should price).
+#[derive(Clone, Debug)]
+pub struct RegisterFile {
+    slots: Vec<Option<Held>>,
+    kind: RegFileKind,
+}
+
+impl RegisterFile {
+    /// Largest register count the paper implements as discrete registers.
+    pub const DISCRETE_MAX: usize = 8;
+    /// The label bus is 8 bits wide: 256 labels is the model's ceiling.
+    pub const MAX_REGISTERS: usize = 256;
+
+    pub fn new(registers: usize) -> Self {
+        assert!(registers >= 1, "at least one register");
+        assert!(
+            registers <= Self::MAX_REGISTERS,
+            "the 8-bit label bus addresses at most {} registers, got {registers}",
+            Self::MAX_REGISTERS
+        );
+        let kind = if registers <= Self::DISCRETE_MAX {
+            RegFileKind::Discrete
+        } else {
+            RegFileKind::Bram
+        };
+        Self { slots: vec![None; registers], kind }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn kind(&self) -> RegFileKind {
+        self.kind
+    }
+
+    fn check(&self, label: u8) -> Result<(), LabelOutOfRange> {
+        if (label as usize) < self.slots.len() {
+            Ok(())
+        } else {
+            Err(LabelOutOfRange { label, registers: self.slots.len() })
+        }
+    }
+
+    /// Read port (trace/debug). Labels beyond the file are rejected, not
+    /// indexed.
+    pub fn read(&self, label: u8) -> Result<Option<&Held>, LabelOutOfRange> {
+        self.check(label)?;
+        Ok(self.slots[label as usize].as_ref())
+    }
+
+    /// In-range slot access (internal: callers have already validated).
+    fn slot_mut(&mut self, idx: usize) -> &mut Option<Held> {
+        &mut self.slots[idx]
+    }
+
+    /// Occupied slots.
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|r| r.is_some()).count()
+    }
+
+    fn clear(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Pis {
-    regs: Vec<Option<Held>>,
+    regs: RegisterFile,
     counters: Vec<u32>,
     /// Expiry threshold: adder latency + 3 (paper Algorithm 2).
     window: u32,
@@ -87,8 +184,9 @@ pub struct Pis {
 }
 
 impl Pis {
-    /// `registers`: 2–8 per the paper's design space. `adder_latency`: L.
-    /// `fifo_capacity`: 4 in the paper.
+    /// `registers`: 2–8 discrete registers per the paper's design space,
+    /// up to 256 via the BRAM model (see [`RegisterFile`]).
+    /// `adder_latency`: L. `fifo_capacity`: 4 in the paper.
     pub fn new(registers: usize, adder_latency: usize, fifo_capacity: usize) -> Self {
         Self::with_margin(registers, adder_latency, fifo_capacity, 3)
     }
@@ -102,9 +200,8 @@ impl Pis {
         fifo_capacity: usize,
         margin: u32,
     ) -> Self {
-        assert!(registers >= 1);
         Self {
-            regs: vec![None; registers],
+            regs: RegisterFile::new(registers),
             counters: vec![0; registers],
             window: adder_latency as u32 + margin,
             fifo: SyncFifo::new(fifo_capacity),
@@ -116,19 +213,20 @@ impl Pis {
         self.regs.len()
     }
 
+    /// Which hardware the register file models at this capacity
+    /// (discrete registers ≤ 8 labels, label-addressed BRAM beyond).
+    pub fn register_model(&self) -> RegFileKind {
+        self.regs.kind()
+    }
+
     fn check_label(&self, label: u8) -> Result<(), LabelOutOfRange> {
-        if (label as usize) < self.regs.len() {
-            Ok(())
-        } else {
-            Err(LabelOutOfRange { label, registers: self.regs.len() })
-        }
+        self.regs.check(label)
     }
 
     /// Peek at a register's contents (trace/debug). Labels beyond the
     /// register file are rejected, not indexed.
     pub fn reg(&self, label: u8) -> Result<Option<&Held>, LabelOutOfRange> {
-        self.check_label(label)?;
-        Ok(self.regs[label as usize].as_ref())
+        self.regs.read(label)
     }
 
     /// An adder result arrives with its label (from the shift register).
@@ -137,7 +235,7 @@ impl Pis {
     /// register, counter, and the FIFO untouched.
     pub fn receive(&mut self, label: u8, v: Held) -> Result<ReceiveOutcome, LabelOutOfRange> {
         self.check_label(label)?;
-        let slot = &mut self.regs[label as usize];
+        let slot = self.regs.slot_mut(label as usize);
         Ok(match slot.take() {
             Some(prev) => {
                 if prev.set_id != v.set_id {
@@ -169,7 +267,7 @@ impl Pis {
         }
         for i in 0..self.regs.len() {
             if self.counters[i] == self.window {
-                if let Some(v) = self.regs[i].take() {
+                if let Some(v) = self.regs.slot_mut(i).take() {
                     outs.push(ExpiredOutput { value: v, label: i as u8 });
                 }
                 self.counters[i] = 0;
@@ -191,7 +289,7 @@ impl Pis {
 
     /// Number of occupied registers (debug/metrics).
     pub fn occupancy(&self) -> usize {
-        self.regs.iter().filter(|r| r.is_some()).count()
+        self.regs.occupancy()
     }
 }
 
@@ -201,9 +299,7 @@ impl Clocked for Pis {
     }
 
     fn reset(&mut self) {
-        for r in &mut self.regs {
-            *r = None;
-        }
+        self.regs.clear();
         for c in &mut self.counters {
             *c = 0;
         }
@@ -293,6 +389,54 @@ mod tests {
         p.receive(0, held(1, 0)).unwrap();
         assert_eq!(p.receive(0, held(2, 99)).unwrap(), ReceiveOutcome::Paired);
         assert_eq!(p.collisions, 1);
+    }
+
+    #[test]
+    fn register_model_flips_to_bram_past_eight_labels() {
+        for r in 1..=8 {
+            assert_eq!(Pis::new(r, 14, 4).register_model(), RegFileKind::Discrete, "{r}");
+        }
+        for r in [9usize, 32, 256] {
+            assert_eq!(Pis::new(r, 14, 4).register_model(), RegFileKind::Bram, "{r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "8-bit label bus")]
+    fn register_file_beyond_the_label_bus_is_rejected() {
+        let _ = RegisterFile::new(257);
+    }
+
+    /// The BRAM model behaves exactly like the discrete file: store, pair,
+    /// expire, and the typed boundary error — at a 32-label capacity the
+    /// discrete design never reached.
+    #[test]
+    fn bram_register_file_pairs_and_rejects_at_its_own_boundary() {
+        let mut p = Pis::new(32, 2, 4);
+        assert_eq!(p.registers(), 32);
+        // Park one value in every label, then pair them all.
+        for label in 0..32u8 {
+            assert_eq!(p.receive(label, held(label as u64, label as u64)).unwrap(),
+                ReceiveOutcome::Stored);
+        }
+        assert_eq!(p.occupancy(), 32);
+        assert_eq!(p.receive(31, held(99, 31)).unwrap(), ReceiveOutcome::Paired);
+        assert_eq!(p.occupancy(), 31);
+        assert_eq!(p.collisions, 0);
+        // The boundary moved with the capacity: 31 is in, 32 is out.
+        let err = p.receive(32, held(1, 0)).unwrap_err();
+        assert_eq!(err, LabelOutOfRange { label: 32, registers: 32 });
+        assert_eq!(p.reg(32).unwrap_err(), err);
+        // Counter expiry still flushes lone values from high labels.
+        let mut outs = Vec::new();
+        p.step_counters(Some(31), &mut outs);
+        for _ in 0..10 {
+            p.step_counters(None, &mut outs);
+            if !outs.is_empty() {
+                break;
+            }
+        }
+        assert!(!outs.is_empty(), "window expiry works at BRAM capacities");
     }
 
     /// Regression: the paper's largest register file is 8; label 8 is the

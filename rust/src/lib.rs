@@ -17,8 +17,11 @@
 //!   applying JugglePAC's scheduling idea at software scale), [`engine`]
 //!   (the pluggable reduction-engine registry the coordinator drives:
 //!   classic kernels, cycle-core adapters, and the exact-summation
-//!   superaccumulator), and [`runtime`] (PJRT loader executing the
-//!   AOT-compiled JAX/Pallas reduction kernels from `artifacts/`).
+//!   superaccumulator, with a carryable partial-state surface), [`session`]
+//!   (streaming accumulation sessions: open-ended datasets appended
+//!   fragment by fragment, with engine-aware partial-state carry), and
+//!   [`runtime`] (PJRT loader executing the AOT-compiled JAX/Pallas
+//!   reduction kernels from `artifacts/`).
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -35,6 +38,7 @@ pub mod intac;
 pub mod jugglepac;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod testkit;
 pub mod util;
 pub mod workload;

@@ -7,6 +7,7 @@
 //!   simulate     run a workload through the cycle-accurate JugglePAC
 //!   intac        run a workload through INTAC
 //!   serve        end-to-end streaming service demo (any registry engine)
+//!   stream       streaming accumulation sessions demo (open/append/close)
 //!   engines      list the reduction-engine registry
 //!   artifacts    list the AOT artifacts the runtime sees
 //!
@@ -34,6 +35,7 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("intac") => cmd_intac(&args),
         Some("serve") => cmd_serve(&args),
+        Some("stream") => cmd_stream(&args),
         Some("engines") => cmd_engines(),
         Some("artifacts") => cmd_artifacts(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -58,6 +60,10 @@ USAGE: jugglepac <subcommand> [options]
   serve      [--sets S] [--max-len N] [--engine NAME] [--batch B] [--n N]
              [--shards K] [--steal on|off] [--stall0 US] [--zipf]
              [--seed X] [--latency L] [--registers R] [--artifact NAME]
+             [--streaming]  (run the session subsystem instead — see stream)
+  stream     [--streams S] [--max-len N] [--fragment F] [--concurrent W]
+             [--engine NAME] [--batch B] [--n N] [--shards K]
+             [--max-open M] [--ttl-ms T] [--seed X]
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
@@ -220,6 +226,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use jugglepac::coordinator::{BurstSlab, Service, ServiceConfig};
     use jugglepac::util::Xoshiro256;
     use jugglepac::workload::ZipfTable;
+    if args.flag("streaming") {
+        // The session subsystem behind the same engine/shard knobs.
+        return cmd_stream(args);
+    }
     let sets = args.get_usize("sets", 2000)?;
     let max_len = args.get_usize("max-len", 700)?;
     let shards = args.get_usize("shards", 1)?.max(1);
@@ -309,8 +319,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_stream(args: &Args) -> Result<()> {
+    use jugglepac::coordinator::ServiceConfig;
+    use jugglepac::session::{SessionConfig, SessionService};
+    use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
+    let streams = args.get_usize("streams", 512)?;
+    let max_len = args.get_usize("max-len", 700)?;
+    let shards = args.get_usize("shards", 1)?.max(1);
+    let engine = jugglepac::engine::engine_config_from_args(args)?;
+    let mix = StreamMix::generate(&StreamMixConfig {
+        streams,
+        max_len: max_len.max(1),
+        max_fragment: args.get_usize("fragment", 64)?.max(1),
+        concurrent: args.get_usize("concurrent", 16)?.max(1),
+        values: StreamValueGen::Dyadic,
+        seed: args.get_u64("seed", 7)?,
+        ..Default::default()
+    });
+    let mut ss = SessionService::start(SessionConfig {
+        service: ServiceConfig {
+            engine,
+            shards,
+            steal: args.get_switch("steal", true)?,
+            ..Default::default()
+        },
+        max_open_streams: args.get_usize("max-open", 1024)?,
+        idle_ttl: std::time::Duration::from_millis(args.get_u64("ttl-ms", 30_000)?),
+        ..Default::default()
+    })?;
+    let t0 = std::time::Instant::now();
+    mix.replay(&mut ss)?;
+    let results = ss.flush(std::time::Duration::from_secs(120));
+    let wall = t0.elapsed();
+    let want = mix.plain_sums_close_order();
+    if results.len() != streams {
+        bail!("timed out: {}/{} stream results", results.len(), streams);
+    }
+    let mut exact = 0usize;
+    for (r, w) in results.iter().zip(want.iter()) {
+        if r.sum == *w {
+            exact += 1;
+        }
+    }
+    let cap = ss.batch_capacity();
+    let (sm, svc_m) = ss.shutdown();
+    println!("{}", sm.report(wall));
+    println!("pipeline: {}", svc_m.report(wall, cap));
+    println!("value check: {exact}/{streams} exact (dyadic values)");
+    Ok(())
+}
+
 fn cmd_engines() -> Result<()> {
-    println!("{:<12} {:<32} {}", "name", "capabilities", "summary");
+    println!("{:<12} {:<44} {}", "name", "capabilities", "summary");
     for entry in jugglepac::engine::REGISTRY {
         let mut caps = Vec::new();
         if entry.caps.bit_exact {
@@ -322,8 +382,11 @@ fn cmd_engines() -> Result<()> {
         if entry.caps.shared_tree {
             caps.push("shared_tree");
         }
+        if entry.caps.partial_state {
+            caps.push("partial_state");
+        }
         let caps = if caps.is_empty() { "-".to_string() } else { caps.join(",") };
-        println!("{:<12} {:<32} {}", entry.name, caps, entry.summary);
+        println!("{:<12} {:<44} {}", entry.name, caps, entry.summary);
     }
     Ok(())
 }

@@ -1,0 +1,133 @@
+//! Streaming-session metrics: stream lifecycle counters and the
+//! partial-state working-set gauge.
+//!
+//! These sit beside (not inside) the coordinator's
+//! [`Metrics`](crate::coordinator::Metrics): the service pipeline keeps
+//! counting batches/chunks as
+//! always, while this struct counts *streams* — the session subsystem's
+//! unit of work.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared session counters, updated by [`crate::session::SessionService`].
+#[derive(Debug, Default)]
+pub struct SessionMetrics {
+    /// Streams ever opened.
+    pub streams_opened: AtomicU64,
+    /// Gauge: streams currently open (admission-controlled).
+    pub streams_open: AtomicU64,
+    /// Streams closed by the client (≤ opened; evictions don't count).
+    pub streams_closed: AtomicU64,
+    /// Streams whose final sum was computed (delivered or deliverable).
+    pub streams_finished: AtomicU64,
+    /// `append` calls accepted (any length, including empty).
+    pub fragments_in: AtomicU64,
+    /// Values accepted across all fragments.
+    pub values_in: AtomicU64,
+    /// Row-width chunks submitted into the coordinator pipeline.
+    pub chunks_submitted: AtomicU64,
+    /// Open streams evicted by the idle TTL.
+    pub evictions: AtomicU64,
+    /// `open` calls refused by max-open-streams admission control.
+    pub admission_rejections: AtomicU64,
+    /// Chunk partials that arrived for an evicted/forgotten stream and
+    /// were dropped.
+    pub late_partials: AtomicU64,
+    /// Gauge: bytes of per-stream carry parked in the session table
+    /// (fragment tails + chunk partial states). The streaming analogue of
+    /// the coordinator's `slab_bytes_in_flight`.
+    pub partial_bytes: AtomicU64,
+}
+
+impl SessionMetrics {
+    pub fn snapshot(&self) -> SessionMetricsSnapshot {
+        SessionMetricsSnapshot {
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            streams_open: self.streams_open.load(Ordering::Relaxed),
+            streams_closed: self.streams_closed.load(Ordering::Relaxed),
+            streams_finished: self.streams_finished.load(Ordering::Relaxed),
+            fragments_in: self.fragments_in.load(Ordering::Relaxed),
+            values_in: self.values_in.load(Ordering::Relaxed),
+            chunks_submitted: self.chunks_submitted.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            admission_rejections: self.admission_rejections.load(Ordering::Relaxed),
+            late_partials: self.late_partials.load(Ordering::Relaxed),
+            partial_bytes: self.partial_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionMetricsSnapshot {
+    pub streams_opened: u64,
+    pub streams_open: u64,
+    pub streams_closed: u64,
+    pub streams_finished: u64,
+    pub fragments_in: u64,
+    pub values_in: u64,
+    pub chunks_submitted: u64,
+    pub evictions: u64,
+    pub admission_rejections: u64,
+    pub late_partials: u64,
+    pub partial_bytes: u64,
+}
+
+impl SessionMetricsSnapshot {
+    pub fn report(&self, wall: std::time::Duration) -> String {
+        let secs = wall.as_secs_f64().max(1e-9);
+        let mut s = format!(
+            "streams: {} opened, {} finished ({:.0} streams/s) | \
+             fragments: {} ({:.1} per stream, {:.2} Mvalues/s) | \
+             chunks: {} | partial bytes: {}",
+            self.streams_opened,
+            self.streams_finished,
+            self.streams_finished as f64 / secs,
+            self.fragments_in,
+            self.fragments_in as f64 / (self.streams_opened.max(1)) as f64,
+            self.values_in as f64 / secs / 1e6,
+            self.chunks_submitted,
+            self.partial_bytes,
+        );
+        if self.evictions > 0 || self.admission_rejections > 0 {
+            s.push_str(&format!(
+                " | {} evicted, {} refused at admission",
+                self.evictions, self.admission_rejections
+            ));
+        }
+        if self.late_partials > 0 {
+            s.push_str(&format!(" | {} late partials dropped", self.late_partials));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = SessionMetrics::default();
+        m.streams_opened.store(5, Ordering::Relaxed);
+        m.partial_bytes.store(128, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.streams_opened, 5);
+        assert_eq!(s.partial_bytes, 128);
+        let line = s.report(std::time::Duration::from_secs(1));
+        assert!(line.contains("5 opened"), "{line}");
+        assert!(!line.contains("evicted"), "quiet when zero: {line}");
+    }
+
+    #[test]
+    fn report_mentions_evictions_and_rejections_when_present() {
+        let m = SessionMetrics::default();
+        m.evictions.store(2, Ordering::Relaxed);
+        m.admission_rejections.store(1, Ordering::Relaxed);
+        m.late_partials.store(3, Ordering::Relaxed);
+        let line = m.snapshot().report(std::time::Duration::from_secs(1));
+        assert!(line.contains("2 evicted"), "{line}");
+        assert!(line.contains("1 refused"), "{line}");
+        assert!(line.contains("3 late"), "{line}");
+    }
+}

@@ -1,0 +1,744 @@
+//! Streaming accumulation sessions — open-ended datasets with
+//! engine-aware partial-state carry.
+//!
+//! The paper's motivating workload is data that "cannot be fully stored in
+//! memory and must be read sequentially": the circuit juggles many
+//! in-flight variable-length sets precisely because whole sets never sit
+//! materialized anywhere. The coordinator's `submit` API broke that
+//! promise at the system layer — every set had to arrive fully built in
+//! one call. This subsystem restores it: clients [`open`] a stream,
+//! [`append`] fragments of any length over time, and [`close`] it to
+//! receive the final sum — delivered in **close order** across streams,
+//! the session analogue of the service's submission-order delivery.
+//!
+//! ```text
+//!   open() ─► [stream id] ──► sharded session table (affinity by id)
+//!                │                    │ tail buffer (< N values)
+//!   append(xs) ──┤  re-chunk at N ────┤
+//!                │  [BurstSlab, zero-copy] ──► coordinator pipeline
+//!                │                                 │ carry-flagged chunks
+//!                │     chunk PartialState ◄────────┘ (engine-aware:
+//!                │          │                         f32 or limbs)
+//!   close() ─────┴──► combine parts ──► StreamResult (close order)
+//! ```
+//!
+//! [`open`]: SessionService::open
+//! [`append`]: SessionService::append
+//! [`close`]: SessionService::close
+//!
+//! # Bit-identity with one-shot submission
+//!
+//! Fragments are **re-chunked at engine row boundaries** (the service's
+//! [`row_width`](crate::coordinator::Service::row_width)), so a streamed
+//! set produces exactly the chunk sequence its one-shot submission would,
+//! each chunk reduced by the same engine row path. Chunk results come back
+//! as [`PartialState`] (carry-flagged submissions), and the stream-close
+//! combine is [`crate::engine::partial::combine`] — the *same* function
+//! the assembler uses for one-shot multi-chunk sets. Hence, for every
+//! registry engine, a stream fed fragment-by-fragment is bit-identical to
+//! submitting the concatenated values at once; and for the `exact` engine
+//! the carried state is full superaccumulator limbs, so sums stay
+//! correctly rounded and permutation invariant across arbitrary
+//! fragmentation (the exponent-indexed-carry argument of arXiv:2406.05866
+//! — carry raw accumulator state, never rounded partials).
+//!
+//! # Resource discipline
+//!
+//! - **Admission control**: at most `max_open_streams` concurrently open
+//!   streams; `open` beyond that returns the typed
+//!   [`SessionError::AtCapacity`].
+//! - **Idle TTL**: open streams untouched for `idle_ttl` are evicted
+//!   (typed [`SessionError::Evicted`] on later touches; in-flight chunk
+//!   results for them are dropped and counted as `late_partials`). Closed
+//!   streams are never evicted — they are owed a result and always finish,
+//!   because the pipeline closes every chunk (NaN-poisoned if a shard
+//!   died), so ordered delivery cannot stall.
+//! - **`partial_bytes` gauge**: every byte of per-stream carry (fragment
+//!   tails + parked chunk states) is accounted, so operators see the
+//!   streaming working set like they see `slab_bytes_in_flight`.
+
+mod table;
+
+pub mod metrics;
+
+pub use metrics::{SessionMetrics, SessionMetricsSnapshot};
+
+use crate::coordinator::{
+    BurstSlab, MetricsSnapshot, Response, Service, ServiceConfig, SlabRef,
+};
+use crate::engine::partial::{combine, PartialState};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+use table::{Phase, SessionTable, StreamState};
+
+/// Streaming-session configuration: the coordinator underneath plus the
+/// session table's knobs.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// The coordinator pipeline the sessions feed (engine, shards,
+    /// stealing, ... — see [`ServiceConfig`]).
+    pub service: ServiceConfig,
+    /// Session-table shards (per-stream affinity routing).
+    pub table_shards: usize,
+    /// Admission control: maximum concurrently open streams.
+    pub max_open_streams: usize,
+    /// Open streams untouched for this long are evicted.
+    pub idle_ttl: Duration,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            service: ServiceConfig::default(),
+            table_shards: 8,
+            max_open_streams: 1024,
+            idle_ttl: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Handle for one open stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamId(pub u64);
+
+impl std::fmt::Display for StreamId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stream#{}", self.0)
+    }
+}
+
+/// Typed session errors — every lifecycle violation is distinguishable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// The stream was never opened, or finished and was forgotten.
+    Unknown(StreamId),
+    /// `append`/`close` on an already-closed stream.
+    Closed(StreamId),
+    /// The stream was evicted by the idle TTL.
+    Evicted(StreamId),
+    /// `open` refused: `max_open_streams` already open.
+    AtCapacity { open: usize, max: usize },
+    /// The coordinator pipeline refused a submission (shutdown/crash).
+    Pipeline(String),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Unknown(id) => write!(f, "{id} is not open (unknown or finished)"),
+            SessionError::Closed(id) => write!(f, "{id} is already closed"),
+            SessionError::Evicted(id) => write!(f, "{id} was evicted by the idle TTL"),
+            SessionError::AtCapacity { open, max } => {
+                write!(f, "admission refused: {open} streams open (max {max})")
+            }
+            SessionError::Pipeline(e) => write!(f, "service pipeline error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// A finished stream's reduction, delivered in close order.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    pub stream: StreamId,
+    pub sum: f32,
+    /// Total values appended across all fragments.
+    pub values: u64,
+    /// Fragments appended.
+    pub fragments: u64,
+    /// Open-to-finish wall time.
+    pub latency: Duration,
+}
+
+/// The streaming-session front end over a [`Service`].
+///
+/// Single ownership like [`Service`] itself: one client drives it with
+/// `&mut self` calls, and the heavy lifting (chunk reduction) runs on the
+/// coordinator's shard pool underneath.
+pub struct SessionService {
+    svc: Service,
+    /// Engine row width — the chunk size fragments are re-aligned to.
+    n: usize,
+    max_open: usize,
+    idle_ttl: Duration,
+    table: SessionTable,
+    /// In-flight chunk requests: req_id -> (stream, chunk index).
+    pending: HashMap<u64, (StreamId, u32)>,
+    /// Finished streams parked until their close_seq is next out.
+    finished: BTreeMap<u64, StreamResult>,
+    next_stream: u64,
+    next_close_seq: u64,
+    next_out: u64,
+    open_count: usize,
+    metrics: SessionMetrics,
+    /// Slab arenas the pipeline may still be packing (reclaim source).
+    in_flight: Vec<SlabRef>,
+    /// Reclaimed arenas ready for the next append (bounded).
+    free: Vec<BurstSlab>,
+    last_sweep: Instant,
+    started: Instant,
+}
+
+impl SessionService {
+    /// Start the coordinator pipeline and an empty session table.
+    pub fn start(cfg: SessionConfig) -> Result<Self> {
+        let (_, n) = crate::engine::resolve_shape(&cfg.service.engine)?;
+        let svc = Service::start(cfg.service)?;
+        Ok(Self {
+            svc,
+            n,
+            max_open: cfg.max_open_streams.max(1),
+            idle_ttl: cfg.idle_ttl,
+            table: SessionTable::new(cfg.table_shards),
+            pending: HashMap::new(),
+            finished: BTreeMap::new(),
+            next_stream: 0,
+            next_close_seq: 0,
+            next_out: 0,
+            open_count: 0,
+            metrics: SessionMetrics::default(),
+            in_flight: Vec::new(),
+            free: Vec::new(),
+            last_sweep: Instant::now(),
+            started: Instant::now(),
+        })
+    }
+
+    /// Open a new stream. Refused (typed [`SessionError::AtCapacity`])
+    /// when `max_open_streams` are already open and an eviction sweep
+    /// frees none.
+    pub fn open(&mut self) -> std::result::Result<StreamId, SessionError> {
+        self.pump_nonblocking();
+        if self.open_count >= self.max_open {
+            self.sweep_idle();
+        }
+        if self.open_count >= self.max_open {
+            self.metrics.admission_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err(SessionError::AtCapacity { open: self.open_count, max: self.max_open });
+        }
+        let id = StreamId(self.next_stream);
+        self.next_stream += 1;
+        self.table.lock(id.0).insert(id.0, StreamState::new(Instant::now()));
+        self.open_count += 1;
+        self.metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
+        self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Append one fragment (any length, zero included) to an open stream.
+    ///
+    /// Values are re-chunked at the engine row width: complete chunks are
+    /// submitted into the pipeline immediately (zero-copy, slab-backed,
+    /// carry-flagged); the sub-row remainder waits in the stream's tail
+    /// for the next fragment or [`close`](Self::close).
+    pub fn append(&mut self, id: StreamId, values: &[f32]) -> std::result::Result<(), SessionError> {
+        self.pump_nonblocking();
+        let n = self.n;
+        let mut arena = self.take_arena();
+        let (first_chunk, chunks) = {
+            let mut shard = self.table.lock(id.0);
+            let state = match shard.get_mut(&id.0) {
+                None => return Err(SessionError::Unknown(id)),
+                Some(s) => s,
+            };
+            match state.phase {
+                Phase::Open => {}
+                Phase::Closed { .. } => return Err(SessionError::Closed(id)),
+                Phase::Evicted => return Err(SessionError::Evicted(id)),
+            }
+            state.last_touch = Instant::now();
+            state.fragments += 1;
+            state.values += values.len() as u64;
+            self.metrics.fragments_in.fetch_add(1, Ordering::Relaxed);
+            self.metrics.values_in.fetch_add(values.len() as u64, Ordering::Relaxed);
+            if state.tail.len() + values.len() < n {
+                // Fully absorbed: no chunk boundary crossed yet.
+                state.tail.extend_from_slice(values);
+                let b = 4 * values.len() as u64;
+                state.carried_bytes += b;
+                self.metrics.partial_bytes.fetch_add(b, Ordering::Relaxed);
+                if self.free.len() < 4 {
+                    self.free.push(arena);
+                }
+                return Ok(());
+            }
+            // Re-chunk at row boundaries: tail + fill first, then full
+            // slices straight from the fragment, remainder to the tail.
+            arena.clear();
+            arena.begin_set();
+            for &v in state.tail.iter() {
+                arena.push_value(v);
+            }
+            let fill = n - state.tail.len();
+            for &v in &values[..fill] {
+                arena.push_value(v);
+            }
+            arena.end_set();
+            let old_tail_bytes = 4 * state.tail.len() as u64;
+            state.tail.clear();
+            let mut consumed = fill;
+            while values.len() - consumed >= n {
+                arena.push_set(&values[consumed..consumed + n]);
+                consumed += n;
+            }
+            state.tail.extend_from_slice(&values[consumed..]);
+            let new_tail_bytes = 4 * state.tail.len() as u64;
+            state.carried_bytes = state.carried_bytes - old_tail_bytes + new_tail_bytes;
+            self.metrics.partial_bytes.fetch_sub(old_tail_bytes, Ordering::Relaxed);
+            self.metrics.partial_bytes.fetch_add(new_tail_bytes, Ordering::Relaxed);
+            let first_chunk = state.chunks_submitted;
+            let chunks = arena.sets() as u32;
+            state.chunks_submitted += chunks;
+            for _ in 0..chunks {
+                state.parts.push(None);
+            }
+            (first_chunk, chunks)
+        };
+        let shared = arena.share();
+        let ids = self
+            .svc
+            .submit_burst_slab_carry(&shared)
+            .map_err(|e| SessionError::Pipeline(format!("{e:#}")))?;
+        for (k, req) in ids.enumerate() {
+            self.pending.insert(req, (id, first_chunk + k as u32));
+        }
+        self.in_flight.push(shared);
+        self.metrics.chunks_submitted.fetch_add(chunks as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Close a stream: the tail (if any — or an empty chunk for an empty
+    /// stream) is flushed into the pipeline, the stream takes the next
+    /// close-order slot, and its [`StreamResult`] becomes receivable once
+    /// every chunk partial has arrived.
+    pub fn close(&mut self, id: StreamId) -> std::result::Result<(), SessionError> {
+        self.pump_nonblocking();
+        let tail_to_submit = {
+            let mut shard = self.table.lock(id.0);
+            let state = match shard.get_mut(&id.0) {
+                None => return Err(SessionError::Unknown(id)),
+                Some(s) => s,
+            };
+            match state.phase {
+                Phase::Open => {}
+                Phase::Closed { .. } => return Err(SessionError::Closed(id)),
+                Phase::Evicted => return Err(SessionError::Evicted(id)),
+            }
+            state.last_touch = Instant::now();
+            let flush = if !state.tail.is_empty() || state.chunks_submitted == 0 {
+                // The remainder chunk — or, for an empty stream, the one
+                // empty chunk its one-shot submission would get.
+                let tail = std::mem::take(&mut state.tail);
+                let b = 4 * tail.len() as u64;
+                state.carried_bytes -= b;
+                self.metrics.partial_bytes.fetch_sub(b, Ordering::Relaxed);
+                let idx = state.chunks_submitted;
+                state.chunks_submitted += 1;
+                state.parts.push(None);
+                Some((tail, idx))
+            } else {
+                None
+            };
+            state.phase = Phase::Closed { close_seq: self.next_close_seq };
+            self.next_close_seq += 1;
+            flush
+        };
+        self.open_count -= 1;
+        self.metrics.streams_closed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+        match tail_to_submit {
+            Some((tail, idx)) => {
+                let req = self
+                    .svc
+                    .submit_burst_carry(vec![tail])
+                    .map_err(|e| SessionError::Pipeline(format!("{e:#}")))?[0];
+                self.pending.insert(req, (id, idx));
+                self.metrics.chunks_submitted.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                // Every chunk may already have arrived.
+                self.try_finish(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the next finished stream, in close order (blocking up to
+    /// `timeout`).
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<StreamResult> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump_nonblocking();
+            if let Some(r) = self.finished.remove(&self.next_out) {
+                self.next_out += 1;
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            if let Some(r) = self.svc.recv_timeout(deadline - now) {
+                self.route_response(r);
+            }
+        }
+    }
+
+    /// Drain every stream closed so far: pump until all their results are
+    /// out (or `timeout` elapses), returning them in close order.
+    pub fn flush(&mut self, timeout: Duration) -> Vec<StreamResult> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::new();
+        loop {
+            self.pump_nonblocking();
+            while let Some(r) = self.finished.remove(&self.next_out) {
+                self.next_out += 1;
+                out.push(r);
+            }
+            if self.next_out >= self.next_close_seq {
+                return out;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return out;
+            }
+            if let Some(r) = self.svc.recv_timeout((deadline - now).min(Duration::from_millis(20)))
+            {
+                self.route_response(r);
+            }
+        }
+    }
+
+    /// Evict open streams idle longer than the TTL (normally runs
+    /// opportunistically; public so callers and tests can force a sweep).
+    /// Closed streams are exempt — they are owed a result.
+    pub fn sweep_idle(&mut self) {
+        self.last_sweep = Instant::now();
+        let ttl = self.idle_ttl;
+        let mut evicted = 0u64;
+        let mut freed_bytes = 0u64;
+        self.table.for_each_shard(|map| {
+            map.retain(|_, state| match state.phase {
+                Phase::Open if state.last_touch.elapsed() > ttl => {
+                    freed_bytes += state.carried_bytes;
+                    state.carried_bytes = 0;
+                    state.tail = Vec::new();
+                    state.parts = Vec::new();
+                    state.phase = Phase::Evicted;
+                    state.last_touch = Instant::now();
+                    evicted += 1;
+                    true
+                }
+                // Tombstones expire after another TTL.
+                Phase::Evicted => state.last_touch.elapsed() <= ttl,
+                _ => true,
+            });
+        });
+        if evicted > 0 {
+            self.open_count -= evicted as usize;
+            self.metrics.evictions.fetch_add(evicted, Ordering::Relaxed);
+            self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+            self.metrics.partial_bytes.fetch_sub(freed_bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Streams currently open.
+    pub fn open_streams(&self) -> usize {
+        self.open_count
+    }
+
+    /// Streams tracked in the session table (open + closed-awaiting-
+    /// results + eviction tombstones).
+    pub fn tracked_streams(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Session-table shards (per-stream affinity routing).
+    pub fn table_shards(&self) -> usize {
+        self.table.shard_count()
+    }
+
+    /// The chunk width fragments are re-aligned to (engine row width).
+    pub fn row_width(&self) -> usize {
+        self.n
+    }
+
+    /// Rows per engine batch (for pipeline reports).
+    pub fn batch_capacity(&self) -> usize {
+        self.svc.batch_capacity()
+    }
+
+    pub fn metrics(&self) -> SessionMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The underlying coordinator's metrics.
+    pub fn service_metrics(&self) -> MetricsSnapshot {
+        self.svc.metrics()
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Shut the pipeline down; returns the session and service metrics.
+    pub fn shutdown(self) -> (SessionMetricsSnapshot, MetricsSnapshot) {
+        let SessionService { svc, metrics, .. } = self;
+        let service = svc.shutdown();
+        (metrics.snapshot(), service)
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Route every already-available service response; opportunistic TTL
+    /// sweep.
+    fn pump_nonblocking(&mut self) {
+        while let Some(r) = self.svc.recv_timeout(Duration::ZERO) {
+            self.route_response(r);
+        }
+        if self.idle_ttl > Duration::ZERO
+            && self.last_sweep.elapsed() > self.idle_ttl / 4
+        {
+            self.sweep_idle();
+        }
+    }
+
+    /// Attach one chunk result to its stream; finish the stream if that
+    /// was the last outstanding chunk of a closed stream.
+    fn route_response(&mut self, r: Response) {
+        let Some((id, chunk_idx)) = self.pending.remove(&r.req_id) else {
+            self.metrics.late_partials.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        // Carry-flagged submissions always deliver state; fall back to the
+        // rounded sum defensively.
+        let part = r.state.unwrap_or_else(|| PartialState::F32(r.sum));
+        let mut finish = false;
+        {
+            let mut shard = self.table.lock(id.0);
+            match shard.get_mut(&id.0) {
+                Some(state) if state.phase != Phase::Evicted => {
+                    let b = part.bytes();
+                    debug_assert!(state.parts[chunk_idx as usize].is_none(), "duplicate chunk");
+                    state.parts[chunk_idx as usize] = Some(part);
+                    state.parts_received += 1;
+                    state.carried_bytes += b;
+                    self.metrics.partial_bytes.fetch_add(b, Ordering::Relaxed);
+                    finish = matches!(state.phase, Phase::Closed { .. })
+                        && state.parts_received as usize == state.parts.len();
+                }
+                _ => {
+                    // Evicted mid-flight (or long gone): drop the partial.
+                    self.metrics.late_partials.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if finish {
+            self.try_finish(id);
+        }
+    }
+
+    /// If `id` is closed and complete, combine its chunk states and park
+    /// the result at its close-order slot.
+    fn try_finish(&mut self, id: StreamId) {
+        let taken = {
+            let mut shard = self.table.lock(id.0);
+            let complete = match shard.get(&id.0) {
+                Some(state) => {
+                    matches!(state.phase, Phase::Closed { .. })
+                        && state.parts_received as usize == state.parts.len()
+                }
+                None => false,
+            };
+            if complete {
+                shard.remove(&id.0)
+            } else {
+                None
+            }
+        };
+        let Some(state) = taken else { return };
+        let Phase::Closed { close_seq } = state.phase else { unreachable!() };
+        self.metrics.partial_bytes.fetch_sub(state.carried_bytes, Ordering::Relaxed);
+        // Combine in chunk order via the shared rule — the same function
+        // the assembler applies to one-shot multi-chunk sets, so streamed
+        // and one-shot sums cannot diverge.
+        let parts: Vec<PartialState> =
+            state.parts.into_iter().map(|p| p.expect("stream complete")).collect();
+        let (sum, _) = combine(parts);
+        let result = StreamResult {
+            stream: id,
+            sum,
+            values: state.values,
+            fragments: state.fragments,
+            latency: state.opened_at.elapsed(),
+        };
+        self.finished.insert(close_seq, result);
+        self.metrics.streams_finished.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An empty arena for the next append: reclaimed from a packed burst
+    /// when possible, freshly allocated otherwise.
+    fn take_arena(&mut self) -> BurstSlab {
+        let pending = std::mem::take(&mut self.in_flight);
+        for r in pending {
+            match r.try_reclaim() {
+                Ok(mut arena) => {
+                    if self.free.len() < 4 {
+                        arena.clear();
+                        self.free.push(arena);
+                    }
+                }
+                Err(still_shared) => self.in_flight.push(still_shared),
+            }
+        }
+        self.free.pop().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineConfig;
+
+    fn cfg(n: usize) -> SessionConfig {
+        SessionConfig {
+            service: ServiceConfig {
+                engine: EngineConfig::native(4, n),
+                batch_deadline: Duration::from_micros(100),
+                ordered: true,
+                queue_depth: 64,
+                ..Default::default()
+            },
+            table_shards: 3,
+            max_open_streams: 64,
+            idle_ttl: Duration::from_secs(30),
+        }
+    }
+
+    #[test]
+    fn one_stream_matches_one_shot_submission() {
+        let vals: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) / 8.0).collect();
+        // One-shot reference through the plain service.
+        let mut svc = Service::start(cfg(8).service).unwrap();
+        svc.submit(vals.clone()).unwrap();
+        let want = svc.recv_timeout(Duration::from_secs(10)).unwrap().sum;
+        svc.shutdown();
+        // Streamed in awkward fragments.
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        assert_eq!(ss.row_width(), 8);
+        assert_eq!(ss.table_shards(), 3);
+        assert_eq!(ss.tracked_streams(), 0);
+        let id = ss.open().unwrap();
+        assert_eq!(ss.tracked_streams(), 1);
+        for frag in vals.chunks(5) {
+            ss.append(id, frag).unwrap();
+        }
+        ss.close(id).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(10)).expect("stream result");
+        assert_eq!(r.stream, id);
+        assert_eq!(r.sum.to_bits(), want.to_bits(), "streamed == one-shot");
+        assert_eq!(r.values, 37);
+        assert_eq!(r.fragments, 8);
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.streams_finished, 1);
+        assert_eq!(sm.partial_bytes, 0, "all carry accounted back to zero");
+    }
+
+    #[test]
+    fn results_deliver_in_close_order_across_interleaved_streams() {
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        let a = ss.open().unwrap();
+        let b = ss.open().unwrap();
+        let c = ss.open().unwrap();
+        ss.append(a, &[1.0; 12]).unwrap();
+        ss.append(b, &[2.0; 3]).unwrap();
+        ss.append(c, &[4.0]).unwrap();
+        ss.append(a, &[1.0; 5]).unwrap();
+        // Close in b, c, a order: results must come back in that order.
+        ss.close(b).unwrap();
+        ss.close(c).unwrap();
+        ss.close(a).unwrap();
+        let results = ss.flush(Duration::from_secs(10));
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].stream, b);
+        assert_eq!(results[0].sum, 6.0);
+        assert_eq!(results[1].stream, c);
+        assert_eq!(results[1].sum, 4.0);
+        assert_eq!(results[2].stream, a);
+        assert_eq!(results[2].sum, 17.0);
+        ss.shutdown();
+    }
+
+    #[test]
+    fn empty_stream_sums_to_zero_like_an_empty_set() {
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        let id = ss.open().unwrap();
+        ss.close(id).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(10)).expect("result");
+        assert_eq!(r.sum.to_bits(), 0.0f32.to_bits());
+        assert_eq!(r.values, 0);
+        ss.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_violations_are_typed() {
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        let id = ss.open().unwrap();
+        ss.close(id).unwrap();
+        match ss.append(id, &[1.0]) {
+            Err(SessionError::Closed(got)) => assert_eq!(got, id),
+            // A fast pipeline may already have finished the stream.
+            Err(SessionError::Unknown(got)) => assert_eq!(got, id),
+            other => panic!("append-after-close: {other:?}"),
+        }
+        match ss.close(id) {
+            Err(SessionError::Closed(got)) | Err(SessionError::Unknown(got)) => {
+                assert_eq!(got, id)
+            }
+            other => panic!("double close: {other:?}"),
+        }
+        assert_eq!(ss.append(StreamId(999), &[1.0]), Err(SessionError::Unknown(StreamId(999))));
+        ss.shutdown();
+    }
+
+    #[test]
+    fn admission_control_refuses_past_the_cap() {
+        let mut c = cfg(8);
+        c.max_open_streams = 2;
+        let mut ss = SessionService::start(c).unwrap();
+        let a = ss.open().unwrap();
+        let _b = ss.open().unwrap();
+        match ss.open() {
+            Err(SessionError::AtCapacity { open: 2, max: 2 }) => {}
+            other => panic!("admission: {other:?}"),
+        }
+        // Closing frees a slot.
+        ss.close(a).unwrap();
+        ss.open().unwrap();
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.admission_rejections, 1);
+    }
+
+    #[test]
+    fn idle_streams_are_evicted_and_get_typed_errors() {
+        let mut c = cfg(8);
+        // Large enough that the eviction tombstone (which lives one more
+        // TTL) comfortably outlasts the assertions below.
+        c.idle_ttl = Duration::from_millis(100);
+        let mut ss = SessionService::start(c).unwrap();
+        let id = ss.open().unwrap();
+        ss.append(id, &[1.0; 20]).unwrap(); // chunks in flight
+        std::thread::sleep(Duration::from_millis(120));
+        ss.sweep_idle();
+        assert_eq!(ss.open_streams(), 0);
+        assert_eq!(ss.append(id, &[1.0]), Err(SessionError::Evicted(id)));
+        assert_eq!(ss.close(id), Err(SessionError::Evicted(id)));
+        // In-flight partials for the evicted stream drain harmlessly.
+        assert!(ss.recv_timeout(Duration::from_millis(50)).is_none());
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.evictions, 1);
+        assert_eq!(sm.partial_bytes, 0, "evicted carry released");
+    }
+}

@@ -1,0 +1,149 @@
+//! The sharded session table: per-stream state with affinity routing.
+//!
+//! Stream state is spread across `S` independently-locked shards; a
+//! stream's id picks its shard once at `open` and every subsequent touch
+//! (append, chunk-partial arrival, close, eviction sweep) goes straight to
+//! that shard — the same per-label affinity the circuit's PIS registers
+//! give each in-flight set. Sharding keeps lock scopes small and the
+//! eviction sweep incremental; nothing about correctness depends on the
+//! shard count. Today's [`SessionService`](crate::session::SessionService)
+//! is single-owner (`&mut self`), so the mutexes are uncontended — the
+//! sharded shape is what lets a future multi-client front end (one
+//! session handle per connection) land without reworking stream state.
+
+use crate::engine::PartialState;
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Lifecycle phase of one stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Accepting fragments.
+    Open,
+    /// Closed by the client; finishes (in close order) once every chunk
+    /// partial has arrived.
+    Closed { close_seq: u64 },
+    /// Evicted by the idle TTL: a tombstone so late touches get the typed
+    /// `Evicted` error instead of `Unknown`; expires after another TTL.
+    Evicted,
+}
+
+/// Per-stream carry state.
+#[derive(Debug)]
+pub(crate) struct StreamState {
+    pub phase: Phase,
+    /// The incomplete last chunk (< row width values): fragments are
+    /// re-chunked at engine row boundaries so a streamed set produces
+    /// exactly the chunks its one-shot submission would.
+    pub tail: Vec<f32>,
+    /// Chunk partial states, by chunk index (see
+    /// [`crate::engine::partial`]); `None` while the chunk is in flight.
+    pub parts: Vec<Option<PartialState>>,
+    pub parts_received: u32,
+    pub chunks_submitted: u32,
+    pub fragments: u64,
+    pub values: u64,
+    pub opened_at: Instant,
+    pub last_touch: Instant,
+    /// Bytes of carry this stream pins (tail + parked partial states) —
+    /// mirrored into the `partial_bytes` gauge in lockstep.
+    pub carried_bytes: u64,
+}
+
+impl StreamState {
+    pub(crate) fn new(now: Instant) -> Self {
+        Self {
+            phase: Phase::Open,
+            tail: Vec::new(),
+            parts: Vec::new(),
+            parts_received: 0,
+            chunks_submitted: 0,
+            fragments: 0,
+            values: 0,
+            opened_at: now,
+            last_touch: now,
+            carried_bytes: 0,
+        }
+    }
+}
+
+/// `S` independently-locked `id -> StreamState` maps.
+#[derive(Debug)]
+pub(crate) struct SessionTable {
+    shards: Vec<Mutex<HashMap<u64, StreamState>>>,
+}
+
+impl SessionTable {
+    pub(crate) fn new(shards: usize) -> Self {
+        Self {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard stream `id` is affine to.
+    pub(crate) fn shard_of(&self, id: u64) -> usize {
+        (id % self.shards.len() as u64) as usize
+    }
+
+    /// Lock stream `id`'s shard.
+    pub(crate) fn lock(&self, id: u64) -> MutexGuard<'_, HashMap<u64, StreamState>> {
+        self.shards[self.shard_of(id)].lock().unwrap()
+    }
+
+    /// Visit every shard in turn (the eviction sweep).
+    pub(crate) fn for_each_shard<F: FnMut(&mut HashMap<u64, StreamState>)>(&self, mut f: F) {
+        for s in &self.shards {
+            f(&mut s.lock().unwrap());
+        }
+    }
+
+    /// Total streams across shards (tombstones included).
+    pub(crate) fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_is_stable_and_spread() {
+        let t = SessionTable::new(4);
+        assert_eq!(t.shard_count(), 4);
+        for id in 0..64u64 {
+            assert_eq!(t.shard_of(id), t.shard_of(id), "stable");
+            assert_eq!(t.shard_of(id), (id % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn insert_and_sweep_across_shards() {
+        let t = SessionTable::new(3);
+        let now = Instant::now();
+        for id in 0..9u64 {
+            t.lock(id).insert(id, StreamState::new(now));
+        }
+        assert_eq!(t.len(), 9);
+        let mut seen = 0;
+        t.for_each_shard(|m| {
+            assert_eq!(m.len(), 3, "ids 0..9 spread evenly over 3 shards");
+            seen += m.len();
+            m.retain(|&id, _| id % 2 == 0);
+        });
+        assert_eq!(seen, 9);
+        assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let t = SessionTable::new(0);
+        assert_eq!(t.shard_count(), 1);
+        assert_eq!(t.shard_of(17), 0);
+    }
+}

@@ -98,6 +98,83 @@ pub fn zipf_dyadic_sets(seed: u64, count: usize, max_len: usize) -> Vec<Vec<f32>
         .collect()
 }
 
+/// Exact 128-bit fixed-point sum of `WideExponent`-range values (biased
+/// f32 exponents in \[90, 170\] — `workload::StreamValueGen::WideExponent`),
+/// rounded once to f32 (RNE): the independent reference the `exact`
+/// engine — and the streaming sessions over it — must match bit for bit.
+/// Deliberately implemented over `i128` words rather than the engine's
+/// limb machinery (the service-level differential suite carries its own
+/// equivalent copy for the same reason: no shared code with the thing
+/// under test).
+pub fn exact_i128_reference(vals: &[f32]) -> f32 {
+    // Values are m · 2^(e-150); anchoring the fixed point at 2^-60 makes
+    // every scaled value an integer ≤ 2^104 — i128-safe for any mix this
+    // harness generates.
+    const SCALE: i32 = -60;
+    let sum: i128 = vals
+        .iter()
+        .map(|&v| {
+            let bits = v.to_bits();
+            let e = (bits >> 23) & 0xFF;
+            assert!(
+                (90..=170).contains(&e),
+                "value {v:e} outside the i128 reference's exponent range"
+            );
+            let m = ((bits & 0x7F_FFFF) | 0x80_0000) as i128;
+            let scaled = m << (e - 90); // exponent vs 2^-60: (e-150) + 60 = e-90
+            if bits >> 31 == 1 {
+                -scaled
+            } else {
+                scaled
+            }
+        })
+        .sum();
+    round_i128_scaled(sum, SCALE)
+}
+
+/// Round `sum * 2^scale` to the nearest f32 (ties to even). Handles
+/// normals, subnormals, and overflow to infinity.
+fn round_i128_scaled(sum: i128, scale: i32) -> f32 {
+    if sum == 0 {
+        return 0.0;
+    }
+    let neg = sum < 0;
+    let mag = sum.unsigned_abs();
+    let p = 127 - mag.leading_zeros() as i32; // top bit of mag
+    let e = p + scale; // floor(log2 |value|)
+    let ulp_exp = if e < -126 { -149 } else { e - 23 };
+    let drop = ulp_exp - scale; // bits to shed from mag
+    let (q, guard, sticky) = if drop <= 0 {
+        ((mag << (-drop) as u32) as u64, false, false) // exact
+    } else {
+        let d = drop as u32;
+        let q = (mag >> d) as u64;
+        let guard = (mag >> (d - 1)) & 1 == 1;
+        let sticky = d >= 2 && mag & ((1u128 << (d - 1)) - 1) != 0;
+        (q, guard, sticky)
+    };
+    let mut q = q;
+    let mut ulp_exp = ulp_exp;
+    if guard && (sticky || q & 1 == 1) {
+        q += 1;
+    }
+    if q == 1 << 24 {
+        q >>= 1;
+        ulp_exp += 1;
+    }
+    let bits = if q >= 1 << 23 {
+        let e_field = (ulp_exp + 23 + 127) as u32;
+        if e_field >= 255 {
+            0x7F80_0000 // overflow -> inf
+        } else {
+            (e_field << 23) | (q as u32 & 0x7F_FFFF)
+        }
+    } else {
+        q as u32 // subnormal (ulp_exp == -149)
+    };
+    f32::from_bits(bits | if neg { 1u32 << 31 } else { 0 })
+}
+
 fn fxhash(s: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for b in s.bytes() {
@@ -129,5 +206,21 @@ mod tests {
     #[test]
     fn seeds_differ_across_names() {
         assert_ne!(fxhash("a"), fxhash("b"));
+    }
+
+    #[test]
+    fn i128_reference_agrees_with_the_superaccumulator() {
+        // Two independent implementations of "exact sum, rounded once"
+        // must agree bit for bit on the WideExponent range.
+        let mut rng = Xoshiro256::seeded(0x1128);
+        for _ in 0..2_000 {
+            let len = rng.range(1, 50);
+            let vals: Vec<f32> = (0..len)
+                .map(|_| crate::workload::StreamValueGen::WideExponent.sample(&mut rng))
+                .collect();
+            let want = crate::engine::exact::exact_sum(&vals);
+            let got = exact_i128_reference(&vals);
+            assert_eq!(got.to_bits(), want.to_bits(), "{vals:?}");
+        }
     }
 }

@@ -9,7 +9,9 @@
 //! verification path (where order *does* matter and the DAG is the spec).
 
 pub mod gen;
+pub mod stream;
 pub mod trace;
 
 pub use gen::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig, ZipfTable};
+pub use stream::{StreamEvent, StreamMix, StreamMixConfig, StreamValueGen};
 pub use trace::{read_trace, write_trace, TraceFile};

@@ -1,0 +1,267 @@
+//! Streaming workload generator: Zipf-sized streams with interleaved
+//! fragment arrival.
+//!
+//! Models the session subsystem's target traffic — many concurrently open
+//! streams whose total lengths follow the same heavy-tailed Zipf mix as
+//! the one-shot service workloads, but whose values dribble in as
+//! variable-size fragments interleaved across streams (the L4 analogue of
+//! Fig. 1's back-to-back variable-length sets). The generator emits a
+//! deterministic event script (`Open`/`Append`/`Close`) that drivers —
+//! the `stream` CLI, `benches/stream_sessions.rs`, and the differential
+//! tests — replay against a [`crate::session::SessionService`], plus the
+//! per-stream full value vectors so the same dataset can be submitted
+//! one-shot for bit-identity comparison.
+
+use crate::session::{SessionService, StreamId};
+use crate::util::rng::Xoshiro256;
+use crate::workload::ZipfTable;
+
+/// How stream values are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamValueGen {
+    /// Exact dyadic values (k/8, |k| ≤ 64): sums are exact in f32 at any
+    /// association order, so drivers can assert exact sums (the §IV-E
+    /// methodology).
+    Dyadic,
+    /// Full-significand values with exponents spread over \[2^-60, 2^20\)
+    /// — far beyond what rounding-per-add survives, but within range of
+    /// the 128-bit fixed-point reference (`testkit::exact_i128_reference`)
+    /// the `exact` engine is verified against.
+    WideExponent,
+}
+
+impl StreamValueGen {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f32 {
+        match self {
+            StreamValueGen::Dyadic => rng.range_i64(-64, 64) as f32 / 8.0,
+            StreamValueGen::WideExponent => {
+                let e = rng.range(90, 170) as u32;
+                let frac = rng.next_u64() as u32 & 0x7F_FFFF;
+                let sign = (rng.chance(0.5) as u32) << 31;
+                f32::from_bits(sign | (e << 23) | frac)
+            }
+        }
+    }
+}
+
+/// Streaming-mix shape.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamMixConfig {
+    /// Streams in the mix.
+    pub streams: usize,
+    /// Zipf ceiling on a stream's total length.
+    pub max_len: usize,
+    /// Zipf skew (1.1 like the service's skewed-load mix).
+    pub zipf_s: f64,
+    /// Largest fragment one append delivers.
+    pub max_fragment: usize,
+    /// Streams concurrently open (the interleave width).
+    pub concurrent: usize,
+    /// Probability a stream is empty (open + close, zero values).
+    pub p_empty: f64,
+    pub values: StreamValueGen,
+    pub seed: u64,
+}
+
+impl Default for StreamMixConfig {
+    fn default() -> Self {
+        Self {
+            streams: 64,
+            max_len: 512,
+            zipf_s: 1.1,
+            max_fragment: 48,
+            concurrent: 8,
+            p_empty: 0.05,
+            values: StreamValueGen::Dyadic,
+            seed: 0x57AE_A301,
+        }
+    }
+}
+
+/// One scripted client action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    Open { stream: usize },
+    /// Append `values[stream][from..to]` (possibly empty).
+    Append { stream: usize, from: usize, to: usize },
+    Close { stream: usize },
+}
+
+/// A generated streaming mix: per-stream full values + the interleaved
+/// event script over them.
+#[derive(Clone, Debug)]
+pub struct StreamMix {
+    /// Full value vector per stream (index = stream number).
+    pub values: Vec<Vec<f32>>,
+    /// The interleaved `Open`/`Append`/`Close` script, in order.
+    pub events: Vec<StreamEvent>,
+    /// Stream numbers in close order — the session's delivery order, and
+    /// the submission order for a bit-identity one-shot comparison run.
+    pub close_order: Vec<usize>,
+}
+
+impl StreamMix {
+    pub fn generate(cfg: &StreamMixConfig) -> Self {
+        let mut rng = Xoshiro256::seeded(cfg.seed);
+        let zipf = ZipfTable::new(cfg.max_len.max(1), cfg.zipf_s);
+        let values: Vec<Vec<f32>> = (0..cfg.streams)
+            .map(|_| {
+                if cfg.p_empty > 0.0 && rng.chance(cfg.p_empty) {
+                    return Vec::new();
+                }
+                let n = zipf.sample(&mut rng);
+                (0..n).map(|_| cfg.values.sample(&mut rng)).collect()
+            })
+            .collect();
+
+        let mut events = Vec::new();
+        let mut close_order = Vec::new();
+        // (stream, cursor) per open stream; keep `concurrent` open while
+        // streams remain, appending to a random open one each step.
+        let mut active: Vec<(usize, usize)> = Vec::new();
+        let mut next = 0usize;
+        loop {
+            while active.len() < cfg.concurrent.max(1) && next < cfg.streams {
+                events.push(StreamEvent::Open { stream: next });
+                active.push((next, 0));
+                next += 1;
+            }
+            if active.is_empty() {
+                break;
+            }
+            let k = rng.range(0, active.len() - 1);
+            let (stream, cursor) = active[k];
+            let total = values[stream].len();
+            if cursor >= total {
+                // Occasionally exercise the zero-length-fragment edge
+                // before closing.
+                if rng.chance(0.1) {
+                    events.push(StreamEvent::Append { stream, from: cursor, to: cursor });
+                }
+                events.push(StreamEvent::Close { stream });
+                close_order.push(stream);
+                active.swap_remove(k);
+                continue;
+            }
+            let frag = rng.range(1, cfg.max_fragment.max(1)).min(total - cursor);
+            events.push(StreamEvent::Append { stream, from: cursor, to: cursor + frag });
+            active[k].1 = cursor + frag;
+        }
+        Self { values, events, close_order }
+    }
+
+    /// Replay the event script against a session service — the one driver
+    /// the CLI, the benches, and the differential tests all share. Returns
+    /// the [`StreamId`] assigned to each stream number (index = stream);
+    /// results are then collected with
+    /// [`SessionService::flush`]/[`recv_timeout`](SessionService::recv_timeout).
+    pub fn replay(
+        &self,
+        ss: &mut SessionService,
+    ) -> Result<Vec<StreamId>, crate::session::SessionError> {
+        let mut ids: Vec<Option<StreamId>> = vec![None; self.values.len()];
+        for ev in &self.events {
+            match *ev {
+                StreamEvent::Open { stream } => ids[stream] = Some(ss.open()?),
+                StreamEvent::Append { stream, from, to } => ss.append(
+                    ids[stream].expect("script opens before appending"),
+                    &self.values[stream][from..to],
+                )?,
+                StreamEvent::Close { stream } => {
+                    ss.close(ids[stream].expect("script opens before closing"))?
+                }
+            }
+        }
+        Ok(ids.into_iter().map(|id| id.expect("script opens every stream")).collect())
+    }
+
+    /// Plain sums per stream, in close order (exact for `Dyadic` values).
+    pub fn plain_sums_close_order(&self) -> Vec<f32> {
+        self.close_order.iter().map(|&s| self.values[s].iter().sum()).collect()
+    }
+
+    /// Total values across every stream.
+    pub fn total_values(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn script_is_complete_and_well_formed() {
+        let cfg = StreamMixConfig { streams: 20, concurrent: 4, seed: 9, ..Default::default() };
+        let mix = StreamMix::generate(&cfg);
+        assert_eq!(mix.values.len(), 20);
+        assert_eq!(mix.close_order.len(), 20, "every stream closes");
+        let mut opened = vec![false; 20];
+        let mut closed = vec![false; 20];
+        let mut cursor = vec![0usize; 20];
+        let mut open_now = 0usize;
+        let mut peak = 0usize;
+        for ev in &mix.events {
+            match *ev {
+                StreamEvent::Open { stream } => {
+                    assert!(!opened[stream]);
+                    opened[stream] = true;
+                    open_now += 1;
+                    peak = peak.max(open_now);
+                }
+                StreamEvent::Append { stream, from, to } => {
+                    assert!(opened[stream] && !closed[stream]);
+                    assert_eq!(from, cursor[stream], "fragments are contiguous");
+                    assert!(to <= mix.values[stream].len());
+                    cursor[stream] = to;
+                }
+                StreamEvent::Close { stream } => {
+                    assert!(opened[stream] && !closed[stream]);
+                    assert_eq!(cursor[stream], mix.values[stream].len(), "fully appended");
+                    closed[stream] = true;
+                    open_now -= 1;
+                }
+            }
+        }
+        assert!(closed.iter().all(|&c| c));
+        assert!(peak <= 4, "interleave width respected, got {peak}");
+        assert!(peak >= 2, "streams actually interleave");
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_seed_sensitive() {
+        let cfg = StreamMixConfig::default();
+        let a = StreamMix::generate(&cfg);
+        let b = StreamMix::generate(&cfg);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.values, b.values);
+        let c = StreamMix::generate(&StreamMixConfig { seed: 1, ..cfg });
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn zipf_lengths_skew_short_with_a_tail() {
+        let cfg = StreamMixConfig {
+            streams: 400,
+            max_len: 256,
+            p_empty: 0.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let mix = StreamMix::generate(&cfg);
+        let lens: Vec<usize> = mix.values.iter().map(|v| v.len()).collect();
+        let short = lens.iter().filter(|&&l| l <= 8).count();
+        assert!(short > 100, "zipf head dominates: {short}/400");
+        assert!(lens.iter().any(|&l| l > 64), "tail sampled");
+    }
+
+    #[test]
+    fn wide_exponent_values_span_many_binades() {
+        let mut rng = Xoshiro256::seeded(5);
+        let vals: Vec<f32> = (0..500).map(|_| StreamValueGen::WideExponent.sample(&mut rng)).collect();
+        let max = vals.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let min = vals.iter().map(|v| v.abs()).filter(|&m| m > 0.0).fold(f32::MAX, f32::min);
+        assert!(max / min > 1e9, "spread {max:e}/{min:e}");
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+}

@@ -16,18 +16,18 @@
 //! 1600 randomized cases across the three properties (≥ 1000 per the
 //! acceptance bar); each failure prints a `PROPTEST_SEED` reproducer.
 
-use jugglepac::coordinator::{Batch, ReorderBuffer, ShardDone};
+use jugglepac::coordinator::{Batch, PartialState, ReorderBuffer, ShardDone};
 use jugglepac::testkit::property;
 use jugglepac::util::Xoshiro256;
 
 /// A one-row completion for sequence `seq`; `poisoned` models a dead
-/// shard closing the sequence number with NaN partial sums.
+/// shard closing the sequence number with NaN partial state.
 fn done(seq: u64, poisoned: bool) -> ShardDone {
     ShardDone {
         seq,
         shard: (seq % 7) as usize,
         batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] },
-        sums: vec![if poisoned { f32::NAN } else { seq as f32 }],
+        partials: vec![PartialState::F32(if poisoned { f32::NAN } else { seq as f32 })],
     }
 }
 
@@ -83,7 +83,7 @@ fn fuzz_duplicates_and_late_replays_never_double_deliver() {
         let mut release = |released: &mut Vec<u64>, out: Vec<ShardDone>| {
             for d in out {
                 assert_eq!(d.seq, released.len() as u64, "prefix violated");
-                assert!(!d.sums[0].is_nan(), "a replayed copy was delivered");
+                assert!(!d.partials[0].rounded().is_nan(), "a replayed copy was delivered");
                 released.push(d.seq);
             }
         };

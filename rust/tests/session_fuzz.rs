@@ -1,0 +1,223 @@
+//! Session lifecycle fuzz: the edges that must never corrupt live
+//! streams or stall ordered delivery.
+//!
+//! - **double-close / append-after-close / unknown ids** — typed errors,
+//!   sprinkled randomly through an otherwise-healthy workload; every live
+//!   stream must still sum exactly and deliver in close order;
+//! - **eviction while in flight** — an idle-TTL eviction with chunk
+//!   results still outstanding: the late partials drain harmlessly
+//!   (counted), later touches get the typed `Evicted` error, and closed
+//!   streams still deliver;
+//! - **shard death mid-stream** — a shard engine failure NaN-completes
+//!   the affected chunks; every stream still delivers in close order
+//!   (NaN-poisoned, never silent, never stalled).
+//!
+//! Runs under the `JUGGLEPAC_TEST_SHARDS` ∈ {1,2,4} CI matrix like the
+//! other coordinator suites.
+
+use jugglepac::coordinator::{EngineConfig, ServiceConfig};
+use jugglepac::session::{SessionConfig, SessionError, SessionService, StreamId};
+use jugglepac::testkit::{property, shard_counts};
+use jugglepac::util::Xoshiro256;
+use std::time::Duration;
+
+fn base_cfg(shards: usize) -> SessionConfig {
+    SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::native(4, 8),
+            batch_deadline: Duration::from_micros(100),
+            ordered: true,
+            queue_depth: 64,
+            shards,
+            ..Default::default()
+        },
+        table_shards: 4,
+        max_open_streams: 64,
+        idle_ttl: Duration::from_secs(120),
+    }
+}
+
+fn dyadic_frag(rng: &mut Xoshiro256, max: usize) -> Vec<f32> {
+    (0..rng.range(0, max)).map(|_| rng.range_i64(-64, 64) as f32 / 8.0).collect()
+}
+
+#[test]
+fn fuzz_lifecycle_violations_never_corrupt_live_streams() {
+    for shards in shard_counts(&[1, 2, 4]) {
+        property(&format!("session_lifecycle_{shards}"), 15, |rng: &mut Xoshiro256| {
+            let mut ss = SessionService::start(base_cfg(shards)).unwrap();
+            let mut live: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            let mut closed: Vec<(StreamId, Vec<f32>)> = Vec::new(); // close order
+            for _ in 0..rng.range(30, 80) {
+                match rng.range(0, 5) {
+                    0 => {
+                        if live.len() < 10 {
+                            live.push((ss.open().unwrap(), Vec::new()));
+                        }
+                    }
+                    1 | 2 => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let frag = dyadic_frag(rng, 20);
+                            ss.append(live[k].0, &frag).unwrap();
+                            live[k].1.extend_from_slice(&frag);
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let (id, vals) = live.swap_remove(k);
+                            ss.close(id).unwrap();
+                            closed.push((id, vals));
+                        }
+                    }
+                    _ => {
+                        // Deliberate violations; typed errors, no damage.
+                        if let Some((id, _)) = closed.last() {
+                            let id = *id;
+                            match ss.close(id) {
+                                Err(SessionError::Closed(got))
+                                | Err(SessionError::Unknown(got)) => assert_eq!(got, id),
+                                other => panic!("double close: {other:?}"),
+                            }
+                            match ss.append(id, &[1.0]) {
+                                Err(SessionError::Closed(got))
+                                | Err(SessionError::Unknown(got)) => assert_eq!(got, id),
+                                other => panic!("append-after-close: {other:?}"),
+                            }
+                        }
+                        let bogus = StreamId(u64::MAX - rng.range_u64(0, 7));
+                        assert_eq!(
+                            ss.append(bogus, &[1.0]),
+                            Err(SessionError::Unknown(bogus))
+                        );
+                    }
+                }
+            }
+            for (id, vals) in live.drain(..) {
+                ss.close(id).unwrap();
+                closed.push((id, vals));
+            }
+            let results = ss.flush(Duration::from_secs(30));
+            assert_eq!(results.len(), closed.len(), "every closed stream delivers");
+            for (r, (id, vals)) in results.iter().zip(closed.iter()) {
+                assert_eq!(r.stream, *id, "close-order delivery");
+                let want: f32 = vals.iter().sum();
+                assert_eq!(r.sum, want, "{id}: exact dyadic sum");
+                assert_eq!(r.values, vals.len() as u64);
+            }
+            let (sm, _) = ss.shutdown();
+            assert_eq!(sm.partial_bytes, 0, "carry gauge returns to zero");
+            assert_eq!(sm.streams_finished as usize, closed.len());
+        });
+    }
+}
+
+#[test]
+fn fuzz_eviction_while_in_flight_never_stalls_closed_streams() {
+    for shards in shard_counts(&[1, 2, 4]) {
+        property(&format!("session_eviction_{shards}"), 8, |rng: &mut Xoshiro256| {
+            let mut cfg = base_cfg(shards);
+            cfg.idle_ttl = Duration::from_millis(40);
+            let mut ss = SessionService::start(cfg).unwrap();
+            // Victims: left open with chunks in flight, then idled out.
+            let victims: Vec<StreamId> = (0..rng.range(1, 4))
+                .map(|_| {
+                    let id = ss.open().unwrap();
+                    let frag = dyadic_frag(rng, 30);
+                    ss.append(id, &frag).unwrap();
+                    id
+                })
+                .collect();
+            // Survivors: closed before the TTL fires — owed results.
+            let mut closed: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            for _ in 0..rng.range(1, 4) {
+                let id = ss.open().unwrap();
+                let frag = dyadic_frag(rng, 30);
+                ss.append(id, &frag).unwrap();
+                ss.close(id).unwrap();
+                closed.push((id, frag));
+            }
+            std::thread::sleep(Duration::from_millis(60));
+            ss.sweep_idle();
+            assert_eq!(ss.open_streams(), 0, "victims evicted, survivors closed");
+            for &v in &victims {
+                // Fresh tombstones give the typed Evicted error; on a slow
+                // box a tombstone may already have expired (one more TTL)
+                // to Unknown — either way, never a silent success.
+                match ss.append(v, &[1.0]) {
+                    Err(SessionError::Evicted(got)) | Err(SessionError::Unknown(got)) => {
+                        assert_eq!(got, v)
+                    }
+                    other => panic!("evicted append: {other:?}"),
+                }
+                match ss.close(v) {
+                    Err(SessionError::Evicted(got)) | Err(SessionError::Unknown(got)) => {
+                        assert_eq!(got, v)
+                    }
+                    other => panic!("evicted close: {other:?}"),
+                }
+            }
+            // Closed streams still deliver, in close order, exact sums.
+            let results = ss.flush(Duration::from_secs(30));
+            assert_eq!(results.len(), closed.len());
+            for (r, (id, vals)) in results.iter().zip(closed.iter()) {
+                assert_eq!(r.stream, *id);
+                assert_eq!(r.sum, vals.iter().sum::<f32>());
+            }
+            let (sm, _) = ss.shutdown();
+            assert_eq!(sm.evictions, victims.len() as u64);
+            assert_eq!(sm.partial_bytes, 0, "evicted carry fully released");
+        });
+    }
+}
+
+#[test]
+fn fuzz_shard_death_mid_stream_nan_completes_in_close_order() {
+    for shards in shard_counts(&[1, 2, 4]) {
+        property(&format!("session_shard_death_{shards}"), 8, |rng: &mut Xoshiro256| {
+            let mut cfg = base_cfg(shards);
+            // Shard 0's engine dies after one successful batch (the knob
+            // is a no-op on the fused shards=1 pipeline, which cannot
+            // lose an engine without losing the service).
+            cfg.service.shard_fail_after = Some((0, 1));
+            let mut ss = SessionService::start(cfg).unwrap();
+            let mut closed: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            let mut live: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            for _ in 0..rng.range(10, 30) {
+                if live.len() < 8 && rng.chance(0.4) {
+                    live.push((ss.open().unwrap(), Vec::new()));
+                } else if !live.is_empty() {
+                    let k = rng.range(0, live.len() - 1);
+                    if rng.chance(0.3) {
+                        let (id, vals) = live.swap_remove(k);
+                        ss.close(id).unwrap();
+                        closed.push((id, vals));
+                    } else {
+                        let frag = dyadic_frag(rng, 24);
+                        ss.append(live[k].0, &frag).unwrap();
+                        live[k].1.extend_from_slice(&frag);
+                    }
+                }
+            }
+            for (id, vals) in live.drain(..) {
+                ss.close(id).unwrap();
+                closed.push((id, vals));
+            }
+            // Every stream must deliver in close order, even with a dead
+            // shard NaN-poisoning whatever landed on it.
+            let results = ss.flush(Duration::from_secs(30));
+            assert_eq!(results.len(), closed.len(), "no stream stalls behind the dead shard");
+            for (r, (id, vals)) in results.iter().zip(closed.iter()) {
+                assert_eq!(r.stream, *id, "close-order delivery survives poison");
+                let want: f32 = vals.iter().sum();
+                assert!(
+                    r.sum == want || r.sum.is_nan(),
+                    "{id}: exact sum or unmistakable NaN poison, got {} want {want}",
+                    r.sum
+                );
+            }
+            ss.shutdown();
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! Differential: streaming sessions vs one-shot submission.
+//!
+//! The session subsystem's core contract is that *how* a dataset arrives
+//! must not change its sum: a stream fed fragment-by-fragment (random
+//! fragment sizes, interleaved across ≥ 8 concurrent streams) yields
+//! **bit-identical** results to submitting the concatenated values in one
+//! `submit` call — for every engine under test, at every shard count. For
+//! the `exact` engine the bar is higher: sums must equal the independent
+//! 128-bit-integer fixed-point reference (rounded once) and stay
+//! permutation invariant across arbitrary fragment boundaries, which only
+//! holds because superaccumulator limb state — not rounded f32 partials —
+//! is carried through `ShardDone` and the session table.
+//!
+//! `JUGGLEPAC_TEST_ENGINES` / `JUGGLEPAC_TEST_SHARDS` (the CI matrix
+//! knobs) pin the sweep per leg, as in the other coordinator suites.
+
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
+use jugglepac::session::{SessionConfig, SessionService, StreamId};
+use jugglepac::testkit::{
+    engine_enabled, engines_under_test, exact_i128_reference, property, shard_counts,
+};
+use jugglepac::util::Xoshiro256;
+use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
+use std::time::Duration;
+
+/// Engine row width: small, so streams span many chunks and fragments
+/// routinely straddle chunk boundaries.
+const N: usize = 16;
+
+fn service_cfg(engine: &str, shards: usize) -> ServiceConfig {
+    let mut engine = EngineConfig::named(engine, 4, N);
+    engine.adder_latency = 2; // keeps the cycle adapters tractable
+    ServiceConfig {
+        engine,
+        shards,
+        batch_deadline: Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 64,
+        ..Default::default()
+    }
+}
+
+fn session_cfg(engine: &str, shards: usize) -> SessionConfig {
+    SessionConfig {
+        service: service_cfg(engine, shards),
+        table_shards: 4,
+        max_open_streams: 1024,
+        idle_ttl: Duration::from_secs(120),
+    }
+}
+
+/// Replay a generated mix against a fresh `SessionService`; returns the
+/// stream sums (bit patterns) in close order.
+fn stream_bits(engine: &str, shards: usize, mix: &StreamMix) -> Vec<u32> {
+    let mut ss = SessionService::start(session_cfg(engine, shards)).unwrap();
+    let ids: Vec<StreamId> = mix.replay(&mut ss).unwrap();
+    let results = ss.flush(Duration::from_secs(60));
+    assert_eq!(results.len(), mix.values.len(), "every stream delivers");
+    for (r, &s) in results.iter().zip(mix.close_order.iter()) {
+        assert_eq!(r.stream, ids[s], "close-order delivery");
+        assert_eq!(r.values, mix.values[s].len() as u64);
+    }
+    let bits = results.iter().map(|r| r.sum.to_bits()).collect();
+    let (sm, _service) = ss.shutdown();
+    assert_eq!(sm.streams_finished as usize, mix.values.len());
+    assert_eq!(sm.partial_bytes, 0, "all carry accounted back to zero");
+    assert_eq!(sm.evictions, 0, "nothing idled out under test");
+    bits
+}
+
+/// One-shot reference: the same datasets, concatenated, submitted whole —
+/// in the mix's close order so delivery orders line up.
+fn oneshot_bits(engine: &str, shards: usize, mix: &StreamMix) -> Vec<u32> {
+    let mut svc = Service::start(service_cfg(engine, shards)).unwrap();
+    let sets: Vec<Vec<f32>> =
+        mix.close_order.iter().map(|&s| mix.values[s].clone()).collect();
+    svc.submit_burst(sets).unwrap();
+    let bits = (0..mix.values.len() as u64)
+        .map(|i| {
+            let r = svc.recv_timeout(Duration::from_secs(60)).expect("timely response");
+            assert_eq!(r.req_id, i, "ordered delivery");
+            r.sum.to_bits()
+        })
+        .collect();
+    svc.shutdown();
+    bits
+}
+
+fn mix_for(engine: &str, seed: u64) -> StreamMix {
+    StreamMix::generate(&StreamMixConfig {
+        streams: 24,
+        max_len: 120,
+        max_fragment: 13, // deliberately coprime-ish with N=16
+        concurrent: 8,    // ≥ 8 concurrent streams per the acceptance bar
+        p_empty: 0.1,
+        values: if engine == "exact" {
+            StreamValueGen::WideExponent
+        } else {
+            StreamValueGen::Dyadic
+        },
+        zipf_s: 1.1,
+        seed,
+    })
+}
+
+/// The acceptance property: streamed == one-shot, bit for bit, per engine
+/// per shard count; plus the i128 reference for `exact`.
+#[test]
+fn streamed_fragments_are_bit_identical_to_one_shot_per_engine_and_shards() {
+    for engine in engines_under_test(&["native", "softfp", "exact"]) {
+        for shards in shard_counts(&[1, 2, 4]) {
+            property(&format!("stream_vs_oneshot_{engine}_{shards}"), 4, |rng: &mut Xoshiro256| {
+                let mix = mix_for(&engine, rng.next_u64());
+                let streamed = stream_bits(&engine, shards, &mix);
+                let oneshot = oneshot_bits(&engine, shards, &mix);
+                assert_eq!(streamed, oneshot, "engine={engine} shards={shards}");
+                if engine == "exact" {
+                    let want: Vec<u32> = mix
+                        .close_order
+                        .iter()
+                        .map(|&s| exact_i128_reference(&mix.values[s]).to_bits())
+                        .collect();
+                    assert_eq!(
+                        streamed, want,
+                        "exact == i128 reference across fragmentation (shards={shards})"
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// `exact` permutation invariance across fragment boundaries: shuffling
+/// every stream's values (which lands them in entirely different
+/// fragments AND different chunks) must not change a single bit.
+#[test]
+fn exact_streams_are_permutation_invariant_across_fragmentation() {
+    if !engine_enabled("exact", true) {
+        eprintln!("skipping: exact not in JUGGLEPAC_TEST_ENGINES");
+        return;
+    }
+    for shards in shard_counts(&[1, 3]) {
+        property(&format!("stream_exact_perm_{shards}"), 4, |rng: &mut Xoshiro256| {
+            let mut mix = mix_for("exact", rng.next_u64());
+            let base = stream_bits("exact", shards, &mix);
+            for vals in &mut mix.values {
+                rng.shuffle(vals);
+            }
+            let shuffled = stream_bits("exact", shards, &mix);
+            assert_eq!(base, shuffled, "shards={shards}");
+        });
+    }
+}
+
+/// Satellite regression (exact chunk-combine bugfix): catastrophic
+/// cancellation split across a fragment/chunk boundary. The retired
+/// rounded-f32 chunk carry returns 0.0 here; limb-state carry returns the
+/// correctly-rounded 1.0 — streamed and one-shot alike.
+#[test]
+fn exact_cancellation_across_the_fragment_boundary_is_correctly_rounded() {
+    if !engine_enabled("exact", true) {
+        eprintln!("skipping: exact not in JUGGLEPAC_TEST_ENGINES");
+        return;
+    }
+    let n = 8usize;
+    // Chunk 0 (8 values): [1e30, 1.0, 0 x 6]; chunk 1: [-1e30].
+    let mut vals = vec![1e30f32, 1.0];
+    vals.extend([0.0f32; 6]);
+    vals.push(-1e30);
+    assert_eq!(vals.len(), n + 1, "spans exactly two chunks");
+
+    // The f32-partial path this PR retires really does get it wrong:
+    // chunk 0's correctly-rounded sum alone already loses the 1.0.
+    let chunk0_rounded: f32 = jugglepac::engine::exact::exact_sum(&vals[..n]);
+    let old_path = chunk0_rounded + jugglepac::engine::exact::exact_sum(&vals[n..]);
+    assert_eq!(old_path, 0.0, "rounded chunk partials cancel to zero");
+
+    for shards in shard_counts(&[1, 2]) {
+        let mut engine = EngineConfig::exact(4, n);
+        engine.adder_latency = 2;
+        let scfg = ServiceConfig {
+            engine,
+            shards,
+            batch_deadline: Duration::from_micros(100),
+            ordered: true,
+            queue_depth: 64,
+            ..Default::default()
+        };
+        // One-shot multi-chunk set through the plain service.
+        let mut svc = Service::start(scfg.clone()).unwrap();
+        svc.submit(vals.clone()).unwrap();
+        let oneshot = svc.recv_timeout(Duration::from_secs(20)).expect("response").sum;
+        svc.shutdown();
+        assert_eq!(oneshot, 1.0, "one-shot multi-chunk exact (shards={shards})");
+
+        // The same values streamed with the cancellation straddling the
+        // fragment boundary.
+        let mut ss = SessionService::start(SessionConfig {
+            service: scfg,
+            table_shards: 2,
+            max_open_streams: 8,
+            idle_ttl: Duration::from_secs(60),
+        })
+        .unwrap();
+        let id = ss.open().unwrap();
+        ss.append(id, &vals[..2]).unwrap(); // [1e30, 1.0]
+        ss.append(id, &vals[2..n]).unwrap(); // zeros — completes chunk 0
+        ss.append(id, &vals[n..]).unwrap(); // [-1e30]
+        ss.close(id).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(20)).expect("stream result");
+        assert_eq!(r.sum, 1.0, "streamed exact survives the boundary (shards={shards})");
+        ss.shutdown();
+    }
+}
+
+/// Cycle-adapter engines stream bit-identically too (their f32 carry is
+/// lossless by construction). Kept lighter than the classic sweep — the
+/// simulators are orders of magnitude slower.
+#[test]
+fn cycle_adapter_streams_match_one_shot() {
+    let enabled = engines_under_test(&["treesched"]);
+    for engine in ["jugglepac", "treesched", "intac"] {
+        if !enabled.iter().any(|n| n == engine) {
+            continue;
+        }
+        for shards in shard_counts(&[1, 2]) {
+            property(&format!("stream_adapter_{engine}_{shards}"), 2, |rng: &mut Xoshiro256| {
+                let mix = StreamMix::generate(&StreamMixConfig {
+                    streams: 10,
+                    max_len: 60,
+                    max_fragment: 11,
+                    concurrent: 8,
+                    p_empty: 0.1,
+                    values: StreamValueGen::Dyadic,
+                    zipf_s: 1.1,
+                    seed: rng.next_u64(),
+                });
+                let streamed = stream_bits(engine, shards, &mix);
+                let oneshot = oneshot_bits(engine, shards, &mix);
+                assert_eq!(streamed, oneshot, "engine={engine} shards={shards}");
+                // Dyadic values: both must equal the plain sum exactly.
+                for (got, want) in streamed.iter().zip(mix.plain_sums_close_order()) {
+                    assert_eq!(*got, want.to_bits(), "{engine} exact dyadic sum");
+                }
+            });
+        }
+    }
+}
