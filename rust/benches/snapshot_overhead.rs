@@ -1,0 +1,113 @@
+//! Bench: what the write-ahead snapshot log costs the streaming path.
+//!
+//! Replays one Zipf-sized, fragment-interleaved streaming mix through the
+//! session subsystem three times, varying only the durability knobs:
+//!
+//!   - **off** — `durability: None`, the PR-5 baseline;
+//!   - **100ms fsync=never** — periodic checkpoints, OS page cache
+//!     absorbs the writes (durable to process crash, not power loss);
+//!   - **100ms fsync=always** — every checkpoint fsynced before the
+//!     append is acknowledged (the default policy).
+//!
+//! The streams/s gap between the legs is the snapshot tax: payload
+//! encoding under the table locks plus the append/fsync. Results land in
+//! `BENCH_6.json` (benchkit::JsonSink); CI archives them in the
+//! `bench-json` artifact — the container this repo grows in has no Rust
+//! toolchain, so those artifacts are where the numbers come from.
+//!
+//! Correctness is asserted while timing: dyadic values, exact sums in
+//! close order, and zero `snapshot_failures` on the durable legs.
+//!
+//! Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::ServiceConfig;
+use jugglepac::engine::EngineConfig;
+use jugglepac::session::{
+    DurabilityConfig, Faults, FsyncPolicy, SessionConfig, SessionService,
+};
+use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
+use std::path::Path;
+use std::time::Duration;
+
+const SHARDS: usize = 4;
+const N: usize = 128;
+
+fn durable(dir: &Path, fsync: FsyncPolicy) -> DurabilityConfig {
+    let mut d = DurabilityConfig::at(dir);
+    d.snapshot_interval = Duration::from_millis(100);
+    d.fsync = fsync;
+    d.faults = Faults::default(); // benches never inherit env kill points
+    d
+}
+
+fn drive(mix: &StreamMix, want: &[f32], durability: Option<DurabilityConfig>) {
+    let durable_leg = durability.is_some();
+    let mut ss = SessionService::start(SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::native(8, N),
+            shards: SHARDS,
+            batch_deadline: Duration::from_micros(200),
+            ..Default::default()
+        },
+        table_shards: 8,
+        max_open_streams: 4096,
+        idle_ttl: Duration::from_secs(300),
+        durability,
+    })
+    .expect("session service starts");
+    mix.replay(&mut ss).expect("replay");
+    let results = ss.flush(Duration::from_secs(300));
+    assert_eq!(results.len(), mix.values.len(), "every stream delivers");
+    for (i, (r, w)) in results.iter().zip(want.iter()).enumerate() {
+        assert_eq!(r.sum, *w, "stream {i} exact dyadic sum");
+    }
+    let (sm, _) = ss.shutdown();
+    if durable_leg {
+        // Shutdown writes a final checkpoint, so ≥ 1 even in smoke runs.
+        assert!(sm.snapshots_written > 0, "the log actually checkpointed");
+        assert_eq!(sm.snapshot_failures, 0, "no degraded iterations");
+    }
+}
+
+fn main() {
+    let smoke = smoke();
+    let (streams, max_len) = if smoke { (96, 192) } else { (1000, 700) };
+    let mix = StreamMix::generate(&StreamMixConfig {
+        streams,
+        max_len,
+        max_fragment: 64,
+        concurrent: 16,
+        p_empty: 0.05,
+        values: StreamValueGen::Dyadic,
+        zipf_s: 1.1,
+        seed: 0x5E55_1076,
+    });
+    let want = mix.plain_sums_close_order();
+    let values = mix.total_values() as u64;
+    let dir = std::env::temp_dir()
+        .join(format!("jugglepac-bench-snapshot-{}", std::process::id()));
+    println!(
+        "=== snapshot overhead @ shards={SHARDS}: {streams} streams, {values} values ===",
+    );
+    let mut sink = JsonSink::new();
+
+    let legs: [(&str, Option<DurabilityConfig>); 3] = [
+        ("off", None),
+        ("100ms fsync=never", Some(durable(&dir, FsyncPolicy::Never))),
+        ("100ms fsync=always", Some(durable(&dir, FsyncPolicy::Always))),
+    ];
+    for (label, durability) in legs {
+        let name = format!("stream sessions snapshots={label} shards={SHARDS}: {streams} streams");
+        let d = bench(&name, env_iters(3), || drive(&mix, &want, durability.clone()));
+        report_throughput("streams", streams as u64, "streams", d);
+        report_throughput("values", values, "values", d);
+        sink.record_throughput(&name, streams as u64, d);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if let Err(e) = sink.write(&json_path("BENCH_6.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

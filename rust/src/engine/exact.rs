@@ -38,8 +38,37 @@ use anyhow::Result;
 
 /// Number of 32-bit limb windows: 277 bits of f32 dynamic range plus
 /// ~2^30-addition carry headroom lands at bit 307 < 10·32; the eleventh
-/// limb carries the two's-complement sign.
-const LIMBS: usize = 11;
+/// limb carries the two's-complement sign. Public because the wire codec
+/// ([`crate::wire`]) serializes exactly this many limbs.
+pub const LIMBS: usize = 11;
+
+/// Wire flag bits for [`SuperAccumulator::to_wire`] /
+/// [`SuperAccumulator::from_wire`] — the special/zero-tracking state that
+/// rides alongside the limbs.
+pub const WIRE_FLAG_NAN: u8 = 1 << 0;
+pub const WIRE_FLAG_POS_INF: u8 = 1 << 1;
+pub const WIRE_FLAG_NEG_INF: u8 = 1 << 2;
+pub const WIRE_FLAG_SAW_VALUE: u8 = 1 << 3;
+pub const WIRE_FLAG_ONLY_NEG_ZERO: u8 = 1 << 4;
+const WIRE_FLAGS_ALL: u8 = 0b1_1111;
+
+/// A deserialized limb state that violates the superaccumulator's
+/// canonical-form invariants. Constructing such an accumulator would make
+/// `round_f32`/`merge` silently wrong, so [`SuperAccumulator::from_wire`]
+/// rejects it with this typed error instead (surfaced to callers as
+/// `wire::CodecError::InvalidState`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InvalidAccumulator {
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for InvalidAccumulator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid superaccumulator state: {}", self.reason)
+    }
+}
+
+impl std::error::Error for InvalidAccumulator {}
 
 /// Renormalize after this many pending additions (each add contributes
 /// < 2^32 per limb; i64 limbs hold 2^30 of those with margin).
@@ -224,6 +253,79 @@ impl SuperAccumulator {
             return f32::from_bits(sign | 0x7F80_0000); // overflow → ±inf
         }
         f32::from_bits(sign | (e_field << 23) | (mant as u32 & 0x7F_FFFF))
+    }
+
+    /// Propagate pending carries into canonical form: limbs 0..10 in
+    /// \[0, 2^32), limb 10 the two's-complement sign word (0 or -1). The
+    /// public entry for callers that need stable limb state — equality
+    /// checks, long-term parking, wire encoding.
+    pub fn renormalize(&mut self) {
+        self.renorm();
+    }
+
+    /// The canonical wire image: renormalized limbs plus `WIRE_FLAG_*`
+    /// bits. Renormalizes a copy, so the live accumulator keeps its
+    /// pending-carry budget untouched.
+    pub fn to_wire(&self) -> ([i64; LIMBS], u8) {
+        let mut c = self.clone();
+        c.renorm();
+        let mut flags = 0u8;
+        if c.nan {
+            flags |= WIRE_FLAG_NAN;
+        }
+        if c.pos_inf {
+            flags |= WIRE_FLAG_POS_INF;
+        }
+        if c.neg_inf {
+            flags |= WIRE_FLAG_NEG_INF;
+        }
+        if c.saw_value {
+            flags |= WIRE_FLAG_SAW_VALUE;
+        }
+        if c.only_neg_zero {
+            flags |= WIRE_FLAG_ONLY_NEG_ZERO;
+        }
+        (c.limbs, flags)
+    }
+
+    /// Rebuild an accumulator from its wire image, **validating** the
+    /// canonical-form invariants first (the deserialize half of the
+    /// durability codec must never construct a corrupt accumulator — a
+    /// CRC-valid frame can still carry garbage written by a buggy or
+    /// hostile peer). Pending carries are zero by construction: `to_wire`
+    /// only emits renormalized limbs, so a nonzero-pending image is
+    /// unrepresentable.
+    pub fn from_wire(limbs: [i64; LIMBS], flags: u8) -> Result<Self, InvalidAccumulator> {
+        if flags & !WIRE_FLAGS_ALL != 0 {
+            return Err(InvalidAccumulator { reason: "unknown flag bits set" });
+        }
+        for &l in &limbs[..LIMBS - 1] {
+            if !(0..1i64 << 32).contains(&l) {
+                return Err(InvalidAccumulator {
+                    reason: "limb outside its renormalized 32-bit window",
+                });
+            }
+        }
+        if limbs[LIMBS - 1] != 0 && limbs[LIMBS - 1] != -1 {
+            return Err(InvalidAccumulator { reason: "sign limb is neither 0 nor -1" });
+        }
+        let nan = flags & WIRE_FLAG_NAN != 0;
+        let pos_inf = flags & WIRE_FLAG_POS_INF != 0;
+        let neg_inf = flags & WIRE_FLAG_NEG_INF != 0;
+        let saw_value = flags & WIRE_FLAG_SAW_VALUE != 0;
+        let only_neg_zero = flags & WIRE_FLAG_ONLY_NEG_ZERO != 0;
+        let any_limb = limbs.iter().any(|&l| l != 0);
+        if only_neg_zero && (any_limb || nan || pos_inf || neg_inf) {
+            return Err(InvalidAccumulator {
+                reason: "all-negative-zero flag alongside a nonzero sum or specials",
+            });
+        }
+        if !saw_value && (any_limb || nan || pos_inf || neg_inf || !only_neg_zero) {
+            return Err(InvalidAccumulator {
+                reason: "empty accumulator carrying limb or special state",
+            });
+        }
+        Ok(Self { limbs, pending: 0, nan, pos_inf, neg_inf, saw_value, only_neg_zero })
     }
 }
 
@@ -503,6 +605,59 @@ mod tests {
             }
         }
         assert!(same(acc.round_f32(), plain));
+    }
+
+    #[test]
+    fn wire_image_round_trips_bit_for_bit() {
+        let mut rng = Xoshiro256::seeded(0x317E);
+        for _ in 0..2_000 {
+            let len = rng.range(0, 40);
+            let mut acc = SuperAccumulator::new();
+            for _ in 0..len {
+                // Full-range values, specials included.
+                acc.add(f32::from_bits(rng.next_u64() as u32));
+            }
+            let (limbs, flags) = acc.to_wire();
+            let mut back = SuperAccumulator::from_wire(limbs, flags).expect("canonical image");
+            assert!(same(back.round_f32(), acc.clone().round_f32()));
+            // The image is a fixed point: re-encoding is identical.
+            assert_eq!(back.to_wire(), (limbs, flags));
+            // And merge semantics survive the trip.
+            let mut a = acc.clone();
+            a.merge(&SuperAccumulator::from_wire(limbs, flags).unwrap());
+            let mut b = acc.clone();
+            b.merge(&acc.clone());
+            assert!(same(a.round_f32(), b.round_f32()));
+        }
+    }
+
+    #[test]
+    fn from_wire_rejects_invariant_violations() {
+        let fresh = SuperAccumulator::new().to_wire();
+        // Canonical empty state is accepted.
+        assert!(SuperAccumulator::from_wire(fresh.0, fresh.1).is_ok());
+        let reason = |limbs: [i64; LIMBS], flags: u8| {
+            SuperAccumulator::from_wire(limbs, flags).expect_err("must reject").reason
+        };
+        // A limb outside its renormalized 32-bit window.
+        let mut limbs = [0i64; LIMBS];
+        limbs[3] = 1i64 << 32;
+        assert!(reason(limbs, WIRE_FLAG_SAW_VALUE).contains("window"));
+        limbs[3] = -1;
+        assert!(reason(limbs, WIRE_FLAG_SAW_VALUE).contains("window"));
+        // Sign limb must be a pure sign word.
+        let mut limbs = [0i64; LIMBS];
+        limbs[LIMBS - 1] = 7;
+        assert!(reason(limbs, WIRE_FLAG_SAW_VALUE).contains("sign limb"));
+        // Unknown flag bits (a future-version or corrupt image).
+        assert!(reason([0; LIMBS], 0x80).contains("flag bits"));
+        // -0.0-only alongside a nonzero sum.
+        let mut limbs = [0i64; LIMBS];
+        limbs[0] = 42;
+        assert!(reason(limbs, WIRE_FLAG_SAW_VALUE | WIRE_FLAG_ONLY_NEG_ZERO)
+            .contains("negative-zero"));
+        // "Never saw a value" yet carries limb state.
+        assert!(reason(limbs, WIRE_FLAG_ONLY_NEG_ZERO).contains("empty"));
     }
 
     #[test]

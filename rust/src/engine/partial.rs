@@ -72,6 +72,18 @@ impl PartialState {
             PartialState::Exact(mut acc) => acc.round_f32(),
         }
     }
+
+    /// Canonicalize in place: renormalize `Exact` limb state so the
+    /// in-memory representation matches its wire image (`F32` is already
+    /// canonical). The durability codec ([`crate::wire`]) encodes through
+    /// the canonical form, so snapshot bytes are a pure function of the
+    /// accumulated *value*, not of the pending-carry schedule that
+    /// happened to produce it.
+    pub fn canonicalize(&mut self) {
+        if let PartialState::Exact(acc) = self {
+            acc.renormalize();
+        }
+    }
 }
 
 /// Combine chunk states, in chunk order, into the final rounded sum plus

@@ -19,7 +19,8 @@
 //!   classic kernels, cycle-core adapters, and the exact-summation
 //!   superaccumulator, with a carryable partial-state surface), [`session`]
 //!   (streaming accumulation sessions: open-ended datasets appended
-//!   fragment by fragment, with engine-aware partial-state carry), and
+//!   fragment by fragment, with engine-aware partial-state carry, durable
+//!   via the [`wire`] codec + snapshot log in [`session::durable`]), and
 //!   [`runtime`] (PJRT loader executing the AOT-compiled JAX/Pallas
 //!   reduction kernels from `artifacts/`).
 //!
@@ -41,4 +42,5 @@ pub mod runtime;
 pub mod session;
 pub mod testkit;
 pub mod util;
+pub mod wire;
 pub mod workload;

@@ -64,6 +64,8 @@ USAGE: jugglepac <subcommand> [options]
   stream     [--streams S] [--max-len N] [--fragment F] [--concurrent W]
              [--engine NAME] [--batch B] [--n N] [--shards K]
              [--max-open M] [--ttl-ms T] [--seed X]
+             [--durable-dir PATH] [--snapshot-ms T] [--fsync always|never]
+             [--resume]  (replay the snapshot log in PATH and resume)
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
@@ -321,7 +323,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_stream(args: &Args) -> Result<()> {
     use jugglepac::coordinator::ServiceConfig;
-    use jugglepac::session::{SessionConfig, SessionService};
+    use jugglepac::session::{DurabilityConfig, FsyncPolicy, SessionConfig, SessionService};
     use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
     let streams = args.get_usize("streams", 512)?;
     let max_len = args.get_usize("max-len", 700)?;
@@ -336,7 +338,24 @@ fn cmd_stream(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 7)?,
         ..Default::default()
     });
-    let mut ss = SessionService::start(SessionConfig {
+    // Durability: any --durable-dir turns on the write-ahead snapshot log
+    // (see session::durable); --resume replays it instead of starting
+    // fresh and drains whatever the last checkpoint made durable.
+    let durability = match args.get("durable-dir") {
+        Some(dir) => {
+            let mut d = DurabilityConfig::at(dir);
+            d.snapshot_interval =
+                std::time::Duration::from_millis(args.get_u64("snapshot-ms", 100)?);
+            d.fsync = match args.get_or("fsync", "always") {
+                "always" => FsyncPolicy::Always,
+                "never" => FsyncPolicy::Never,
+                other => bail!("--fsync must be always|never, got {other:?}"),
+            };
+            Some(d)
+        }
+        None => None,
+    };
+    let cfg = SessionConfig {
         service: ServiceConfig {
             engine,
             shards,
@@ -345,8 +364,16 @@ fn cmd_stream(args: &Args) -> Result<()> {
         },
         max_open_streams: args.get_usize("max-open", 1024)?,
         idle_ttl: std::time::Duration::from_millis(args.get_u64("ttl-ms", 30_000)?),
+        durability,
         ..Default::default()
-    })?;
+    };
+    if args.flag("resume") {
+        if cfg.durability.is_none() {
+            bail!("--resume requires --durable-dir");
+        }
+        return stream_resume(cfg);
+    }
+    let mut ss = SessionService::start(cfg)?;
     let t0 = std::time::Instant::now();
     mix.replay(&mut ss)?;
     let results = ss.flush(std::time::Duration::from_secs(120));
@@ -366,6 +393,49 @@ fn cmd_stream(args: &Args) -> Result<()> {
     println!("{}", sm.report(wall));
     println!("pipeline: {}", svc_m.report(wall, cap));
     println!("value check: {exact}/{streams} exact (dyadic values)");
+    Ok(())
+}
+
+/// `stream --resume`: replay the snapshot log, resume every surviving
+/// stream, and drain the durable portion of each. A real client would
+/// replay its own values from `token.values` onward before closing; the
+/// demo has no source to replay from, so it closes at the durable horizon
+/// and reports what survived the crash.
+fn stream_resume(cfg: jugglepac::session::SessionConfig) -> Result<()> {
+    use jugglepac::session::SessionService;
+    let t0 = std::time::Instant::now();
+    let (mut ss, report) = SessionService::recover_from(cfg)?;
+    println!(
+        "recovered: {} resumable stream(s), {} tombstone(s), {} snapshot(s) replayed \
+         (generation {:?}{}{})",
+        report.tokens.len(),
+        report.tombstones,
+        report.snapshots_replayed,
+        report.generation,
+        if report.torn_tail { ", torn tail dropped" } else { "" },
+        if report.corrupt { ", corrupt frames skipped" } else { "" },
+    );
+    let mut resumed = 0usize;
+    for t in &report.tokens {
+        println!(
+            "  stream {}: {} durable value(s) in {} chunk(s){}",
+            t.stream.0,
+            t.values,
+            t.chunks,
+            if t.was_closed { " (was closed)" } else { "" }
+        );
+        let id = ss.open_resume(t)?;
+        ss.close(id)?;
+        resumed += 1;
+    }
+    let results = ss.flush(std::time::Duration::from_secs(120));
+    let wall = t0.elapsed();
+    for r in &results {
+        println!("  stream {} drained: sum {} over {} value(s)", r.stream.0, r.sum, r.values);
+    }
+    let (sm, _) = ss.shutdown();
+    println!("{}", sm.report(wall));
+    println!("resumed {resumed}/{} stream(s)", report.tokens.len());
     Ok(())
 }
 

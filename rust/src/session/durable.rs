@@ -1,0 +1,1109 @@
+//! Durable sessions: an append-only snapshot log with crash recovery and
+//! fault injection.
+//!
+//! # Model
+//!
+//! The [`SessionService`](super::SessionService) periodically appends a
+//! **self-contained snapshot** of its session table to a log file — one
+//! [`crate::wire`] CRC frame per snapshot, capturing every stream's
+//! *durable prefix*: the contiguous run of chunk [`PartialState`]s whose
+//! results have arrived, plus the sub-row tail when no chunk is in
+//! flight. Chunks still in the pipeline are deliberately **not** durable
+//! (their results die with the process), so each stream record carries a
+//! `values` horizon: the number of leading values fully captured. After a
+//! crash, [`replay`] finds the last complete snapshot, the client resumes
+//! each stream with [`SessionService::open_resume`](super::SessionService::open_resume)
+//! and re-appends everything past the horizon — and because fragments are
+//! re-chunked deterministically at the engine row width, the resumed
+//! stream reproduces the exact chunk sequence of an uninterrupted run:
+//! **bit-identical sums**, for every engine.
+//!
+//! # Log discipline
+//!
+//! - *Append-only, torn-tail tolerant*: a crash mid-append leaves a
+//!   truncated final frame; replay stops at it ([`CodecError::Truncated`])
+//!   and uses the previous complete snapshot. Mid-file damage (a CRC or
+//!   magic failure before the tail) is corruption: replay falls back to
+//!   the newest intact snapshot and reports it — or, when nothing is
+//!   recoverable, fails with the typed error rather than guessing.
+//! - *Rotation = compaction*: snapshots are self-contained, so when the
+//!   log exceeds `max_log_bytes` the next snapshot starts generation
+//!   `g+1` and older `snap-*.log` files are deleted. A crash mid-rotation
+//!   leaves a torn new generation beside the intact old one; replay walks
+//!   generations newest-first and falls back.
+//! - *Degradation over panic*: snapshot IO errors are retried with
+//!   exponential backoff (`io_retries`, `retry_backoff`); when retries
+//!   are exhausted the log goes dead and the service continues
+//!   **in-memory** — `snapshot_failures` counts it, nothing panics.
+//!
+//! # Fault injection
+//!
+//! [`Faults`] threads kill points and injected IO errors through the
+//! layer: [`KillPoint`] names the four crash sites the recovery suite
+//! exercises, armable per test ([`Faults::kill_at`]) or via the
+//! `JUGGLEPAC_KILL_POINT=<point>[:<nth>]` env knob (the CI crash-matrix
+//! hook); [`Faults::fail_io`] makes the next *n* IO attempts fail to
+//! drive the retry/degradation path.
+
+use super::table::{Phase, SessionTable, StreamState};
+use super::StreamId;
+use crate::engine::partial::PartialState;
+use crate::wire::{self, ByteReader, ByteWriter, CodecError};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::{self, File};
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// When snapshot appends reach the disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fdatasync` after every snapshot append: a completed append
+    /// survives power loss, not just process death.
+    Always,
+    /// Leave flushing to the OS: cheapest, survives process crashes
+    /// (the write hit the page cache) but not power loss.
+    Never,
+}
+
+/// Durability knobs for a [`super::SessionConfig`].
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Directory holding the `snap-<generation>.log` files.
+    pub dir: PathBuf,
+    /// Snapshot cadence, enforced opportunistically from the service's
+    /// pump loop. `Duration::ZERO` disables the timer — snapshots then
+    /// happen only on [`super::SessionService::snapshot_now`] and at
+    /// shutdown.
+    pub snapshot_interval: Duration,
+    pub fsync: FsyncPolicy,
+    /// Rotate (compact to a fresh generation) when the log would exceed
+    /// this size.
+    pub max_log_bytes: u64,
+    /// IO retries per snapshot before degrading to in-memory mode.
+    pub io_retries: u32,
+    /// Base backoff between retries (doubles per attempt).
+    pub retry_backoff: Duration,
+    /// Fault-injection handle (defaults honor `JUGGLEPAC_KILL_POINT`).
+    pub faults: Faults,
+}
+
+impl DurabilityConfig {
+    /// Defaults at `dir`: 100 ms snapshots, fsync-always, 8 MiB rotation,
+    /// 3 retries with 1 ms base backoff.
+    pub fn at(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            snapshot_interval: Duration::from_millis(100),
+            fsync: FsyncPolicy::Always,
+            max_log_bytes: 8 << 20,
+            io_retries: 3,
+            retry_backoff: Duration::from_millis(1),
+            faults: Faults::from_env(),
+        }
+    }
+}
+
+/// The crash sites the recovery test matrix exercises. Each names a
+/// moment in [`SnapshotLog::append_snapshot`] where the process dies
+/// (simulated: the log marks itself killed and writes exactly what a
+/// crash at that instant would leave on disk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPoint {
+    /// Die before any bytes of the nth snapshot are written: disk state
+    /// is the (n-1)th snapshot's.
+    BeforeAppend,
+    /// Die halfway through the frame write: a torn tail replay must drop.
+    MidSnapshot,
+    /// Die right after a completed (and synced) append: the freshest
+    /// possible disk state.
+    AfterAppend,
+    /// Die mid-rotation: the new generation is torn, the old generation
+    /// still intact — replay must fall back across generations.
+    MidRotation,
+}
+
+impl KillPoint {
+    pub const ALL: [KillPoint; 4] = [
+        KillPoint::BeforeAppend,
+        KillPoint::MidSnapshot,
+        KillPoint::AfterAppend,
+        KillPoint::MidRotation,
+    ];
+
+    /// Parse the kebab-case name used by `JUGGLEPAC_KILL_POINT`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "before-append" => Some(KillPoint::BeforeAppend),
+            "mid-snapshot" => Some(KillPoint::MidSnapshot),
+            "after-append" => Some(KillPoint::AfterAppend),
+            "mid-rotation" => Some(KillPoint::MidRotation),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for KillPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KillPoint::BeforeAppend => "before-append",
+            KillPoint::MidSnapshot => "mid-snapshot",
+            KillPoint::AfterAppend => "after-append",
+            KillPoint::MidRotation => "mid-rotation",
+        })
+    }
+}
+
+/// Shared fault-injection state: cloneable, thread-safe, armed by tests
+/// or the `JUGGLEPAC_KILL_POINT` env knob.
+#[derive(Clone, Debug, Default)]
+pub struct Faults {
+    inner: Arc<FaultState>,
+}
+
+#[derive(Debug, Default)]
+struct FaultState {
+    /// Armed kill: die at this point of the nth snapshot append.
+    kill: Mutex<Option<(KillPoint, u64)>>,
+    killed: AtomicBool,
+    /// Injected IO errors remaining: each IO attempt consumes one.
+    io_failures: AtomicU64,
+}
+
+impl Faults {
+    /// Fresh faults, armed from `JUGGLEPAC_KILL_POINT=<point>[:<nth>]`
+    /// when set (e.g. `mid-snapshot:2` — die halfway through the second
+    /// snapshot append). Unset or unparsable → no faults.
+    pub fn from_env() -> Self {
+        let f = Self::default();
+        if let Ok(v) = std::env::var("JUGGLEPAC_KILL_POINT") {
+            let (name, nth) = match v.split_once(':') {
+                Some((name, nth)) => (name.to_string(), nth.parse().unwrap_or(1)),
+                None => (v, 1),
+            };
+            if let Some(p) = KillPoint::parse(&name) {
+                f.kill_at(p, nth);
+            }
+        }
+        f
+    }
+
+    /// Arm a kill at `point` of the `nth` (1-based) snapshot append.
+    pub fn kill_at(&self, point: KillPoint, nth: u64) {
+        *self.inner.kill.lock().unwrap() = Some((point, nth.max(1)));
+    }
+
+    /// Inject `n` IO failures: the next `n` snapshot IO attempts error.
+    pub fn fail_io(&self, n: u64) {
+        self.inner.io_failures.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Has an armed kill point fired? After this the simulated process is
+    /// dead: the log stops writing and the test drops the service.
+    pub fn killed(&self) -> bool {
+        self.inner.killed.load(Ordering::SeqCst)
+    }
+
+    fn mark_killed(&self) {
+        self.inner.killed.store(true, Ordering::SeqCst);
+    }
+
+    fn should_kill(&self, point: KillPoint, append_no: u64) -> bool {
+        matches!(
+            *self.inner.kill.lock().unwrap(),
+            Some((p, nth)) if p == point && nth == append_no
+        )
+    }
+
+    /// Consume one injected IO failure if any remain.
+    fn take_io_failure(&self) -> bool {
+        self.inner
+            .io_failures
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok()
+    }
+}
+
+/// What one [`SnapshotLog::append_snapshot`] call did.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct AppendOutcome {
+    /// A complete snapshot reached the log (false when killed, degraded,
+    /// or already dead).
+    pub wrote: bool,
+    /// Retries exhausted: the log degraded to dead/in-memory mode.
+    pub failed: bool,
+    /// This append rotated to a fresh generation (compaction).
+    pub rotated: bool,
+    /// IO attempts retried (with backoff) before the outcome.
+    pub retries: u32,
+    /// Frame bytes appended (0 unless `wrote`).
+    pub bytes: u64,
+}
+
+/// The append-only snapshot log: one open generation file, rotated when
+/// it outgrows `max_log_bytes`.
+pub(crate) struct SnapshotLog {
+    cfg: DurabilityConfig,
+    generation: u64,
+    file: File,
+    /// Bytes of *complete* frames in the current generation — also the
+    /// truncation point when a failed write needs undoing.
+    bytes: u64,
+    /// Snapshot appends attempted (the kill-point counter).
+    appends: u64,
+    /// False once IO retries were exhausted: in-memory mode, all appends
+    /// become no-ops.
+    pub alive: bool,
+}
+
+impl SnapshotLog {
+    /// Open a fresh generation (one past the highest on disk). With
+    /// `wipe_history`, older generations are deleted first — a plain
+    /// `start` begins a new history, while `recover_from` keeps the old
+    /// files it just replayed until rotation compacts them away.
+    pub(crate) fn create(cfg: DurabilityConfig, wipe_history: bool) -> Result<Self> {
+        fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating durability dir {}", cfg.dir.display()))?;
+        let gens = list_generations(&cfg.dir);
+        let generation = gens.last().map_or(0, |g| g + 1);
+        if wipe_history {
+            for g in gens {
+                let _ = fs::remove_file(gen_path(&cfg.dir, g));
+            }
+        }
+        let path = gen_path(&cfg.dir, generation);
+        let file = File::create(&path)
+            .with_context(|| format!("creating snapshot log {}", path.display()))?;
+        Ok(Self { cfg, generation, file, bytes: 0, appends: 0, alive: true })
+    }
+
+    pub(crate) fn faults(&self) -> &Faults {
+        &self.cfg.faults
+    }
+
+    pub(crate) fn config(&self) -> &DurabilityConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Append one snapshot payload as a CRC frame, honoring kill points,
+    /// injected IO errors (bounded retry + exponential backoff), and
+    /// rotation. Never panics; never returns an error — a lost snapshot
+    /// degrades durability, not the service.
+    pub(crate) fn append_snapshot(&mut self, payload: &[u8]) -> AppendOutcome {
+        let mut out = AppendOutcome::default();
+        if !self.alive || self.cfg.faults.killed() {
+            return out;
+        }
+        self.appends += 1;
+        let no = self.appends;
+        let faults = self.cfg.faults.clone();
+        if faults.should_kill(KillPoint::BeforeAppend, no) {
+            faults.mark_killed();
+            return out;
+        }
+        let mut frame = Vec::with_capacity(payload.len() + wire::FRAME_OVERHEAD);
+        wire::write_frame(&mut frame, wire::TAG_SNAPSHOT, payload);
+        let must_rotate =
+            self.bytes > 0 && self.bytes + frame.len() as u64 > self.cfg.max_log_bytes;
+        if must_rotate || faults.should_kill(KillPoint::MidRotation, no) {
+            self.rotate_into(&frame, no, &faults, &mut out);
+            return out;
+        }
+        if faults.should_kill(KillPoint::MidSnapshot, no) {
+            // Crash mid-write: exactly the torn half-frame a real crash
+            // leaves at the tail.
+            let _ = self.file.write_all(&frame[..frame.len() / 2]);
+            let _ = self.file.flush();
+            faults.mark_killed();
+            return out;
+        }
+        match self.write_with_retries(&frame, &mut out.retries) {
+            Ok(()) => {
+                self.bytes += frame.len() as u64;
+                out.bytes = frame.len() as u64;
+                out.wrote = true;
+                if faults.should_kill(KillPoint::AfterAppend, no) {
+                    faults.mark_killed();
+                }
+            }
+            Err(_) => {
+                self.alive = false;
+                out.failed = true;
+            }
+        }
+        out
+    }
+
+    fn write_with_retries(&mut self, frame: &[u8], retries: &mut u32) -> io::Result<()> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_append(frame) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt >= self.cfg.io_retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    *retries += 1;
+                    // Exponential backoff, capped so worst-case waits stay
+                    // bounded even with generous retry counts.
+                    std::thread::sleep(self.cfg.retry_backoff * (1u32 << (attempt - 1).min(6)));
+                }
+            }
+        }
+    }
+
+    fn try_append(&mut self, frame: &[u8]) -> io::Result<()> {
+        if self.cfg.faults.take_io_failure() {
+            return Err(io::Error::other("injected snapshot IO failure"));
+        }
+        // A failed earlier attempt may have left partial bytes: truncate
+        // back to the last complete frame before (re)writing.
+        self.file.set_len(self.bytes)?;
+        self.file.seek(SeekFrom::Start(self.bytes))?;
+        self.file.write_all(frame)?;
+        if self.cfg.fsync == FsyncPolicy::Always {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+
+    /// Start generation `g+1` with `frame` as its first snapshot, then
+    /// delete older generations (the snapshot is self-contained, so they
+    /// are dead history). A kill mid-rotation leaves the torn new file
+    /// beside the intact old one.
+    fn rotate_into(&mut self, frame: &[u8], no: u64, faults: &Faults, out: &mut AppendOutcome) {
+        let new_gen = self.generation + 1;
+        let path = gen_path(&self.cfg.dir, new_gen);
+        if faults.should_kill(KillPoint::MidRotation, no) {
+            if let Ok(mut f) = File::create(&path) {
+                let _ = f.write_all(&frame[..frame.len() / 2]);
+                let _ = f.flush();
+            }
+            faults.mark_killed();
+            return;
+        }
+        let mut attempt = 0u32;
+        let file = loop {
+            match self.try_rotate(&path, frame) {
+                Ok(f) => break Some(f),
+                Err(_) if attempt < self.cfg.io_retries => {
+                    attempt += 1;
+                    out.retries += 1;
+                    std::thread::sleep(self.cfg.retry_backoff * (1u32 << (attempt - 1).min(6)));
+                }
+                Err(_) => break None,
+            }
+        };
+        match file {
+            Some(f) => {
+                self.file = f;
+                self.generation = new_gen;
+                self.bytes = frame.len() as u64;
+                out.bytes = frame.len() as u64;
+                out.wrote = true;
+                out.rotated = true;
+                for g in list_generations(&self.cfg.dir) {
+                    if g < new_gen {
+                        let _ = fs::remove_file(gen_path(&self.cfg.dir, g));
+                    }
+                }
+            }
+            None => {
+                self.alive = false;
+                out.failed = true;
+            }
+        }
+    }
+
+    fn try_rotate(&mut self, path: &Path, frame: &[u8]) -> io::Result<File> {
+        if self.cfg.faults.take_io_failure() {
+            return Err(io::Error::other("injected rotation IO failure"));
+        }
+        let mut f = File::create(path)?;
+        f.write_all(frame)?;
+        if self.cfg.fsync == FsyncPolicy::Always {
+            f.sync_data()?;
+        }
+        Ok(f)
+    }
+}
+
+fn gen_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snap-{generation:06}.log"))
+}
+
+/// Generations present in `dir`, ascending. Missing dir → empty.
+fn list_generations(dir: &Path) -> Vec<u64> {
+    let mut gens = Vec::new();
+    if let Ok(entries) = fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(num) = name.strip_prefix("snap-").and_then(|r| r.strip_suffix(".log")) {
+                if let Ok(g) = num.parse::<u64>() {
+                    gens.push(g);
+                }
+            }
+        }
+    }
+    gens.sort_unstable();
+    gens
+}
+
+// ── Snapshot payload codec ──────────────────────────────────────────────
+
+/// A recovered stream waiting for [`open_resume`]: its durable chunk
+/// prefix, tail, and horizon.
+///
+/// [`open_resume`]: super::SessionService::open_resume
+#[derive(Clone, Debug)]
+pub(crate) struct StagedStream {
+    pub id: u64,
+    pub was_closed: bool,
+    pub parts: Vec<PartialState>,
+    pub tail: Vec<f32>,
+    /// Durable values horizon: the leading `values` values of the stream
+    /// are captured by `parts` + `tail`.
+    pub values: u64,
+    pub fragments: u64,
+}
+
+impl StagedStream {
+    pub(crate) fn token(&self) -> ResumeToken {
+        ResumeToken {
+            stream: StreamId(self.id),
+            values: self.values,
+            fragments: self.fragments,
+            chunks: self.parts.len() as u32,
+            was_closed: self.was_closed,
+        }
+    }
+}
+
+/// The client-facing resume handle for one recovered stream: feed it to
+/// [`SessionService::open_resume`](super::SessionService::open_resume),
+/// then re-append every value from index `values` onward (the crash
+/// destroyed whatever was in flight past that horizon) and close as
+/// usual — the delivered sum is bit-identical to an uninterrupted run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResumeToken {
+    pub stream: StreamId,
+    /// Durable values horizon (leading values already captured).
+    pub values: u64,
+    /// Fragments appended before the snapshot (informational).
+    pub fragments: u64,
+    /// Durable chunk partials restored with the stream (informational).
+    pub chunks: u32,
+    /// The stream was closed (but unfinished) at snapshot time; the
+    /// client should re-close after replaying past the horizon.
+    pub was_closed: bool,
+}
+
+/// What [`SessionService::recover_from`](super::SessionService::recover_from)
+/// found in the log.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    /// One token per recoverable stream, ascending by id.
+    pub tokens: Vec<ResumeToken>,
+    /// Eviction tombstones restored (late touches still get `Evicted`).
+    pub tombstones: usize,
+    /// Complete snapshots scanned in the chosen generation.
+    pub snapshots_replayed: u64,
+    /// The generation the state came from (`None`: empty/fresh log).
+    pub generation: Option<u64>,
+    /// The chosen generation ended in a torn (crash-truncated) frame,
+    /// which replay dropped.
+    pub torn_tail: bool,
+    /// Mid-file corruption was detected somewhere; recovery fell back to
+    /// the newest intact snapshot before it.
+    pub corrupt: bool,
+}
+
+/// A decoded snapshot: service header + staged streams + tombstones.
+#[derive(Clone, Debug)]
+pub(crate) struct DecodedSnapshot {
+    pub next_stream: u64,
+    pub engine: String,
+    pub n: u32,
+    pub counters: Vec<u64>,
+    pub staged: Vec<StagedStream>,
+    pub tombstones: Vec<u64>,
+}
+
+/// Encode the service's current durable state as one snapshot payload.
+/// Live streams contribute their contiguous received-chunk prefix (the
+/// pairwise-tree combine depends on the chunk list, so parts are stored
+/// individually, never pre-merged) plus the tail when no chunk is in
+/// flight; staged (recovered-but-not-resumed) streams re-encode as they
+/// are, so they survive a second crash.
+pub(crate) fn encode_snapshot_payload(
+    engine: &str,
+    n: usize,
+    next_stream: u64,
+    counters: &[u64],
+    table: &SessionTable,
+    staged: &HashMap<u64, StagedStream>,
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(next_stream);
+    w.put_str(engine);
+    w.put_u32(n as u32);
+    w.put_u8(counters.len() as u8);
+    for &c in counters {
+        w.put_u64(c);
+    }
+    let mut rec = ByteWriter::new();
+    let mut count: u32 = 0;
+    table.for_each_shard(|map| {
+        for (&id, state) in map.iter() {
+            put_live_stream(&mut rec, id, state, n);
+            count += 1;
+        }
+    });
+    for st in staged.values() {
+        put_staged_stream(&mut rec, st);
+        count += 1;
+    }
+    w.put_u32(count);
+    w.put_bytes(&rec.into_inner());
+    w.into_inner()
+}
+
+const PHASE_OPEN: u8 = 0;
+const PHASE_CLOSED: u8 = 1;
+const PHASE_EVICTED: u8 = 2;
+
+fn put_live_stream(w: &mut ByteWriter, id: u64, s: &StreamState, n: usize) {
+    w.put_u64(id);
+    if s.phase == Phase::Evicted {
+        w.put_u8(PHASE_EVICTED);
+        return;
+    }
+    let closed = matches!(s.phase, Phase::Closed { .. });
+    w.put_u8(if closed { PHASE_CLOSED } else { PHASE_OPEN });
+    // The durable prefix: contiguous received chunks from index 0. Parts
+    // past a gap are dropped deliberately — the client replays values
+    // past the horizon, and keeping out-of-prefix parts would double
+    // count those chunks.
+    let p = s.parts.iter().take_while(|part| part.is_some()).count();
+    w.put_u32(p as u32);
+    for part in &s.parts[..p] {
+        wire::put_partial(w, part.as_ref().expect("prefix part present"));
+    }
+    // The tail is durable only when no chunk is in flight: otherwise the
+    // horizon ends at the prefix and the tail's values replay with the
+    // rest.
+    let has_tail = p == s.parts.len();
+    w.put_u8(has_tail as u8);
+    if has_tail {
+        w.put_u32(s.tail.len() as u32);
+        for &v in &s.tail {
+            w.put_f32(v);
+        }
+    }
+    // Every prefix chunk holds exactly `n` values: append-submitted
+    // chunks are full rows, and the short close-flush chunk is always the
+    // *last* chunk, which a live (unfinished) stream's prefix never
+    // covers together with all others.
+    let horizon = p as u64 * n as u64 + if has_tail { s.tail.len() as u64 } else { 0 };
+    w.put_u64(horizon);
+    w.put_u64(s.fragments);
+}
+
+fn put_staged_stream(w: &mut ByteWriter, s: &StagedStream) {
+    w.put_u64(s.id);
+    w.put_u8(if s.was_closed { PHASE_CLOSED } else { PHASE_OPEN });
+    w.put_u32(s.parts.len() as u32);
+    for part in &s.parts {
+        wire::put_partial(w, part);
+    }
+    w.put_u8(u8::from(!s.tail.is_empty()));
+    if !s.tail.is_empty() {
+        w.put_u32(s.tail.len() as u32);
+        for &v in &s.tail {
+            w.put_f32(v);
+        }
+    }
+    w.put_u64(s.values);
+    w.put_u64(s.fragments);
+}
+
+pub(crate) fn decode_snapshot_payload(buf: &[u8]) -> Result<DecodedSnapshot, CodecError> {
+    let mut r = ByteReader::new(buf);
+    let next_stream = r.u64()?;
+    let engine = r.str()?.to_string();
+    let n = r.u32()?;
+    let nc = r.u8()? as usize;
+    let mut counters = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        counters.push(r.u64()?);
+    }
+    let count = r.u32()?;
+    if count > 1 << 22 {
+        return Err(CodecError::Malformed { what: "implausible stream count" });
+    }
+    let mut staged = Vec::new();
+    let mut tombstones = Vec::new();
+    for _ in 0..count {
+        let id = r.u64()?;
+        let phase = r.u8()?;
+        if phase == PHASE_EVICTED {
+            tombstones.push(id);
+            continue;
+        }
+        if phase != PHASE_OPEN && phase != PHASE_CLOSED {
+            return Err(CodecError::Malformed { what: "unknown stream phase tag" });
+        }
+        let p = r.u32()? as usize;
+        if p > 1 << 20 {
+            return Err(CodecError::Malformed { what: "implausible chunk count" });
+        }
+        let mut parts = Vec::with_capacity(p.min(1024));
+        for _ in 0..p {
+            parts.push(wire::get_partial(&mut r)?);
+        }
+        let tail = match r.u8()? {
+            0 => Vec::new(),
+            1 => {
+                let len = r.u32()? as usize;
+                if len > 1 << 20 {
+                    return Err(CodecError::Malformed { what: "implausible tail length" });
+                }
+                let mut tail = Vec::with_capacity(len.min(4096));
+                for _ in 0..len {
+                    tail.push(r.f32()?);
+                }
+                tail
+            }
+            _ => return Err(CodecError::Malformed { what: "bad tail marker" }),
+        };
+        let values = r.u64()?;
+        let fragments = r.u64()?;
+        staged.push(StagedStream {
+            id,
+            was_closed: phase == PHASE_CLOSED,
+            parts,
+            tail,
+            values,
+            fragments,
+        });
+    }
+    r.done()?;
+    Ok(DecodedSnapshot { next_stream, engine, n, counters, staged, tombstones })
+}
+
+// ── Replay ──────────────────────────────────────────────────────────────
+
+/// Replay result: the newest recoverable snapshot, plus what the scan
+/// saw on the way.
+pub(crate) struct Replayed {
+    pub snapshot: Option<DecodedSnapshot>,
+    pub generation: Option<u64>,
+    pub snapshots_seen: u64,
+    pub torn_tail: bool,
+    pub corrupt: bool,
+}
+
+/// Walk generations newest-first; within each, scan frames front to back
+/// and keep the last complete snapshot. A torn tail ends a scan quietly
+/// (normal crash debris); mid-file corruption ends it loudly but still
+/// falls back to the newest intact snapshot — only when *nothing* is
+/// recoverable does the typed error surface.
+pub(crate) fn replay(dir: &Path) -> Result<Replayed> {
+    let gens = list_generations(dir);
+    let mut saw_corrupt = false;
+    let mut saw_torn = false;
+    let mut last_err: Option<CodecError> = None;
+    for &g in gens.iter().rev() {
+        let bytes = fs::read(gen_path(dir, g))
+            .with_context(|| format!("reading snapshot log generation {g}"))?;
+        let scan = scan_frames(&bytes);
+        saw_corrupt |= scan.corrupt;
+        saw_torn |= scan.torn;
+        if scan.err.is_some() {
+            last_err = scan.err;
+        }
+        if scan.last.is_some() {
+            return Ok(Replayed {
+                snapshot: scan.last,
+                generation: Some(g),
+                snapshots_seen: scan.seen,
+                torn_tail: scan.torn,
+                corrupt: saw_corrupt,
+            });
+        }
+    }
+    if saw_corrupt {
+        let err = last_err.expect("corrupt scan records its error");
+        return Err(anyhow::Error::new(err)
+            .context("snapshot log corrupt with no recoverable snapshot"));
+    }
+    Ok(Replayed {
+        snapshot: None,
+        generation: None,
+        snapshots_seen: 0,
+        torn_tail: saw_torn,
+        corrupt: false,
+    })
+}
+
+struct Scan {
+    last: Option<DecodedSnapshot>,
+    seen: u64,
+    torn: bool,
+    corrupt: bool,
+    err: Option<CodecError>,
+}
+
+fn scan_frames(buf: &[u8]) -> Scan {
+    let mut s = Scan { last: None, seen: 0, torn: false, corrupt: false, err: None };
+    let mut pos = 0;
+    while pos < buf.len() {
+        match wire::read_frame(&buf[pos..]) {
+            Ok((frame, used)) => {
+                if frame.tag == wire::TAG_SNAPSHOT {
+                    match decode_snapshot_payload(frame.payload) {
+                        Ok(snap) => {
+                            s.last = Some(snap);
+                            s.seen += 1;
+                        }
+                        Err(e) => {
+                            // CRC-valid but semantically bad: corruption
+                            // (or a hostile writer) — stop, keep the last
+                            // good snapshot.
+                            s.corrupt = true;
+                            s.err = Some(e);
+                            return s;
+                        }
+                    }
+                }
+                // Unknown tags skip cleanly (forward compatibility).
+                pos += used;
+            }
+            Err(CodecError::Truncated { .. }) => {
+                // Torn tail: normal crash debris, drop it.
+                s.torn = true;
+                return s;
+            }
+            Err(e) => {
+                s.corrupt = true;
+                s.err = Some(e);
+                return s;
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "jugglepac-durable-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cfg_at(dir: &Path) -> DurabilityConfig {
+        let mut c = DurabilityConfig::at(dir);
+        c.faults = Faults::default(); // tests arm faults explicitly
+        c.retry_backoff = Duration::from_micros(50);
+        c
+    }
+
+    /// A payload with one live stream (1 of 2 chunks received), one
+    /// tombstone, and `marker` as the next-stream id.
+    fn sample_payload(marker: u64) -> Vec<u8> {
+        let table = SessionTable::new(2);
+        let now = Instant::now();
+        let mut st = StreamState::new(now);
+        st.parts = vec![Some(PartialState::F32(1.5)), None];
+        st.parts_received = 1;
+        st.chunks_submitted = 2;
+        st.fragments = 3;
+        st.values = 20;
+        table.lock(7).insert(7, st);
+        table.lock(8).insert(8, StreamState::tombstone(now));
+        encode_snapshot_payload("exact", 8, marker, &[marker, 2, 3], &table, &HashMap::new())
+    }
+
+    #[test]
+    fn kill_point_names_round_trip() {
+        for p in KillPoint::ALL {
+            assert_eq!(KillPoint::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(KillPoint::parse("nope"), None);
+        // The env-knob syntax ("point:nth") arms via from_env; here we
+        // exercise the manual arm + counter match directly.
+        let f = Faults::default();
+        f.kill_at(KillPoint::MidSnapshot, 2);
+        assert!(!f.should_kill(KillPoint::MidSnapshot, 1));
+        assert!(f.should_kill(KillPoint::MidSnapshot, 2));
+        assert!(!f.should_kill(KillPoint::AfterAppend, 2));
+        assert!(!f.killed());
+        f.mark_killed();
+        assert!(f.killed());
+    }
+
+    #[test]
+    fn snapshot_payload_round_trips() {
+        let snap = decode_snapshot_payload(&sample_payload(42)).expect("decodes");
+        assert_eq!(snap.next_stream, 42);
+        assert_eq!(snap.engine, "exact");
+        assert_eq!(snap.n, 8);
+        assert_eq!(snap.counters, vec![42, 2, 3]);
+        assert_eq!(snap.tombstones, vec![8]);
+        assert_eq!(snap.staged.len(), 1);
+        let s = &snap.staged[0];
+        assert_eq!(s.id, 7);
+        assert!(!s.was_closed);
+        // Only the contiguous received prefix (1 chunk) is durable; the
+        // in-flight chunk's values replay, so the horizon is 1 × n = 8.
+        assert_eq!(s.parts.len(), 1);
+        assert_eq!(s.values, 8);
+        assert_eq!(s.fragments, 3);
+        assert!(s.tail.is_empty(), "tail not durable while a chunk is in flight");
+        let t = s.token();
+        assert_eq!(t.stream, StreamId(7));
+        assert_eq!((t.values, t.chunks, t.was_closed), (8, 1, false));
+    }
+
+    #[test]
+    fn fully_received_stream_captures_tail_and_staged_reencodes() {
+        let table = SessionTable::new(1);
+        let now = Instant::now();
+        let mut st = StreamState::new(now);
+        st.parts = vec![Some(PartialState::F32(4.0))];
+        st.parts_received = 1;
+        st.chunks_submitted = 1;
+        st.tail = vec![0.25, 0.5];
+        st.phase = Phase::Closed { close_seq: 0 };
+        table.lock(3).insert(3, st);
+        let mut staged_in = HashMap::new();
+        staged_in.insert(
+            9u64,
+            StagedStream {
+                id: 9,
+                was_closed: true,
+                parts: vec![PartialState::F32(2.0)],
+                tail: vec![1.0],
+                values: 5,
+                fragments: 2,
+            },
+        );
+        let payload = encode_snapshot_payload("native", 4, 10, &[1], &table, &staged_in);
+        let snap = decode_snapshot_payload(&payload).expect("decodes");
+        assert_eq!(snap.staged.len(), 2);
+        let by_id =
+            |id: u64| snap.staged.iter().find(|s| s.id == id).expect("stream present");
+        let live = by_id(3);
+        assert!(live.was_closed);
+        assert_eq!(live.tail, vec![0.25, 0.5], "no chunk in flight → tail durable");
+        assert_eq!(live.values, 4 + 2, "horizon covers the tail");
+        let re = by_id(9);
+        assert_eq!((re.values, re.fragments, re.was_closed), (5, 2, true));
+        assert_eq!(re.tail, vec![1.0]);
+    }
+
+    #[test]
+    fn append_replay_round_trip_keeps_last_snapshot() {
+        let dir = tmp_dir("roundtrip");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        for marker in 1..=3u64 {
+            let out = log.append_snapshot(&sample_payload(marker));
+            assert!(out.wrote && !out.failed, "{out:?}");
+        }
+        let r = replay(&dir).expect("replays");
+        assert_eq!(r.snapshots_seen, 3);
+        assert!(!r.torn_tail && !r.corrupt);
+        assert_eq!(r.generation, Some(log.generation()));
+        assert_eq!(r.snapshot.expect("snapshot").next_stream, 3, "last snapshot wins");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_quietly() {
+        let dir = tmp_dir("torn");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.append_snapshot(&sample_payload(1));
+        log.append_snapshot(&sample_payload(2));
+        // Crash debris: half a frame at the tail.
+        let mut frame = Vec::new();
+        wire::write_frame(&mut frame, wire::TAG_SNAPSHOT, &sample_payload(3));
+        let path = gen_path(&dir, log.generation());
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&frame[..frame.len() / 2]).unwrap();
+        drop(f);
+        let r = replay(&dir).expect("torn tail is not fatal");
+        assert!(r.torn_tail && !r.corrupt);
+        assert_eq!(r.snapshot.expect("snapshot").next_stream, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mid_file_corruption_falls_back_then_errors_when_nothing_left() {
+        let dir = tmp_dir("corrupt");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.append_snapshot(&sample_payload(1));
+        let first_len = fs::metadata(gen_path(&dir, log.generation())).unwrap().len();
+        log.append_snapshot(&sample_payload(2));
+        let path = gen_path(&dir, log.generation());
+        // Corrupt the *second* frame's payload interior (not the length
+        // field — damaged lengths read as a torn tail, which is the other
+        // test): first snapshot recovers.
+        let mut bytes = fs::read(&path).unwrap();
+        let idx = first_len as usize + wire::FRAME_OVERHEAD + 6;
+        bytes[idx] ^= 0xA5;
+        fs::write(&path, &bytes).unwrap();
+        let r = replay(&dir).expect("falls back to intact snapshot");
+        assert!(r.corrupt);
+        assert_eq!(r.snapshot.expect("snapshot").next_stream, 1);
+        // Corrupt the first frame too: nothing recoverable → typed error.
+        bytes[wire::FRAME_OVERHEAD + 6] ^= 0xA5;
+        fs::write(&path, &bytes).unwrap();
+        let err = replay(&dir).expect_err("no recoverable snapshot");
+        assert!(
+            err.chain().any(|c| c.downcast_ref::<CodecError>().is_some()),
+            "typed codec error in chain: {err:#}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_compacts_to_a_single_generation() {
+        let dir = tmp_dir("rotate");
+        let mut cfg = cfg_at(&dir);
+        cfg.max_log_bytes = 1; // every append after the first rotates
+        cfg.fsync = FsyncPolicy::Never;
+        let mut log = SnapshotLog::create(cfg, true).expect("create");
+        let mut rotations = 0;
+        for marker in 1..=4u64 {
+            let out = log.append_snapshot(&sample_payload(marker));
+            assert!(out.wrote, "{out:?}");
+            rotations += u64::from(out.rotated);
+        }
+        assert_eq!(rotations, 3, "first append fits (empty log), rest rotate");
+        assert_eq!(list_generations(&dir), vec![log.generation()], "older gens deleted");
+        let r = replay(&dir).expect("replays");
+        assert_eq!(r.snapshot.expect("snapshot").next_stream, 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_io_errors_retry_then_degrade() {
+        let dir = tmp_dir("iofail");
+        let mut cfg = cfg_at(&dir);
+        cfg.io_retries = 2;
+        // Transient: one failure, retries absorb it.
+        let mut log = SnapshotLog::create(cfg.clone(), true).expect("create");
+        log.config().faults.fail_io(1);
+        let out = log.append_snapshot(&sample_payload(1));
+        assert!(out.wrote && !out.failed);
+        assert_eq!(out.retries, 1);
+        assert!(log.alive);
+        // Exhausted: every attempt fails → dead log, later appends no-op.
+        log.faults().fail_io(1000);
+        let out = log.append_snapshot(&sample_payload(2));
+        assert!(!out.wrote && out.failed);
+        assert_eq!(out.retries, cfg.io_retries);
+        assert!(!log.alive);
+        let out = log.append_snapshot(&sample_payload(3));
+        assert!(!out.wrote && !out.failed, "dead log is a quiet no-op");
+        let r = replay(&dir).expect("first snapshot survived");
+        assert_eq!(r.snapshot.expect("snapshot").next_stream, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kill_points_leave_the_promised_disk_state() {
+        // BeforeAppend: nothing new on disk.
+        let dir = tmp_dir("kill-before");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.append_snapshot(&sample_payload(1));
+        log.faults().kill_at(KillPoint::BeforeAppend, 2);
+        let out = log.append_snapshot(&sample_payload(2));
+        assert!(!out.wrote && log.faults().killed());
+        assert!(!log.append_snapshot(&sample_payload(3)).wrote, "dead after kill");
+        let r = replay(&dir).expect("replays");
+        assert_eq!(r.snapshot.expect("snap").next_stream, 1);
+        assert!(!r.torn_tail);
+        let _ = fs::remove_dir_all(&dir);
+
+        // MidSnapshot: torn tail, previous snapshot recovers.
+        let dir = tmp_dir("kill-mid");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.append_snapshot(&sample_payload(1));
+        log.faults().kill_at(KillPoint::MidSnapshot, 2);
+        log.append_snapshot(&sample_payload(2));
+        assert!(log.faults().killed());
+        let r = replay(&dir).expect("replays");
+        assert!(r.torn_tail, "half-written frame at the tail");
+        assert_eq!(r.snapshot.expect("snap").next_stream, 1);
+        let _ = fs::remove_dir_all(&dir);
+
+        // AfterAppend: the killed append is fully durable.
+        let dir = tmp_dir("kill-after");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.faults().kill_at(KillPoint::AfterAppend, 1);
+        let out = log.append_snapshot(&sample_payload(7));
+        assert!(out.wrote && log.faults().killed());
+        let r = replay(&dir).expect("replays");
+        assert!(!r.torn_tail);
+        assert_eq!(r.snapshot.expect("snap").next_stream, 7);
+        let _ = fs::remove_dir_all(&dir);
+
+        // MidRotation: torn new generation, old generation recovers.
+        let dir = tmp_dir("kill-rot");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        let old_gen = log.generation();
+        log.append_snapshot(&sample_payload(1));
+        log.faults().kill_at(KillPoint::MidRotation, 2);
+        log.append_snapshot(&sample_payload(2));
+        assert!(log.faults().killed());
+        assert_eq!(
+            list_generations(&dir),
+            vec![old_gen, old_gen + 1],
+            "torn new gen beside intact old gen"
+        );
+        let r = replay(&dir).expect("falls back across generations");
+        assert_eq!(r.generation, Some(old_gen));
+        assert_eq!(r.snapshot.expect("snap").next_stream, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_wipe_semantics() {
+        let dir = tmp_dir("wipe");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        log.append_snapshot(&sample_payload(1));
+        let g0 = log.generation();
+        drop(log);
+        // recover path keeps history: new generation beside the old.
+        let log = SnapshotLog::create(cfg_at(&dir), false).expect("recreate");
+        assert_eq!(log.generation(), g0 + 1);
+        assert_eq!(list_generations(&dir), vec![g0, g0 + 1]);
+        drop(log);
+        let r = replay(&dir).expect("old snapshot still replayable");
+        assert_eq!(r.snapshot.expect("snap").next_stream, 1);
+        // fresh-start path wipes: only the new generation remains.
+        let log = SnapshotLog::create(cfg_at(&dir), true).expect("fresh");
+        assert_eq!(list_generations(&dir), vec![log.generation()]);
+        assert!(replay(&dir).expect("empty history").snapshot.is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -37,7 +37,28 @@ pub struct SessionMetrics {
     /// (fragment tails + chunk partial states). The streaming analogue of
     /// the coordinator's `slab_bytes_in_flight`.
     pub partial_bytes: AtomicU64,
+    /// Streams resumed from a recovered snapshot
+    /// (`SessionService::open_resume`).
+    pub streams_resumed: AtomicU64,
+    /// Complete snapshots appended to the durability log.
+    pub snapshots_written: AtomicU64,
+    /// Bytes of snapshot frames appended (framing overhead included).
+    pub snapshot_bytes: AtomicU64,
+    /// Snapshot IO attempts retried after an error (backoff applied).
+    pub snapshot_retries: AtomicU64,
+    /// Snapshots abandoned after exhausting retries — each one marks the
+    /// service's degradation to in-memory mode (durability off, service
+    /// up).
+    pub snapshot_failures: AtomicU64,
+    /// Log rotations (each compacts history to the latest snapshot).
+    pub log_rotations: AtomicU64,
 }
+
+/// Counters that survive a crash: serialized into every snapshot (in this
+/// order) and restored by `SessionService::recover_from`, so lifecycle
+/// totals span restarts. Gauges and durability-IO counters are excluded —
+/// they describe the live process.
+pub const PERSISTED_COUNTERS: usize = 10;
 
 impl SessionMetrics {
     pub fn snapshot(&self) -> SessionMetricsSnapshot {
@@ -53,6 +74,50 @@ impl SessionMetrics {
             admission_rejections: self.admission_rejections.load(Ordering::Relaxed),
             late_partials: self.late_partials.load(Ordering::Relaxed),
             partial_bytes: self.partial_bytes.load(Ordering::Relaxed),
+            streams_resumed: self.streams_resumed.load(Ordering::Relaxed),
+            snapshots_written: self.snapshots_written.load(Ordering::Relaxed),
+            snapshot_bytes: self.snapshot_bytes.load(Ordering::Relaxed),
+            snapshot_retries: self.snapshot_retries.load(Ordering::Relaxed),
+            snapshot_failures: self.snapshot_failures.load(Ordering::Relaxed),
+            log_rotations: self.log_rotations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The crash-surviving counters, in wire order (see
+    /// [`PERSISTED_COUNTERS`]).
+    pub fn persisted(&self) -> [u64; PERSISTED_COUNTERS] {
+        [
+            self.streams_opened.load(Ordering::Relaxed),
+            self.streams_closed.load(Ordering::Relaxed),
+            self.streams_finished.load(Ordering::Relaxed),
+            self.fragments_in.load(Ordering::Relaxed),
+            self.values_in.load(Ordering::Relaxed),
+            self.chunks_submitted.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+            self.admission_rejections.load(Ordering::Relaxed),
+            self.late_partials.load(Ordering::Relaxed),
+            self.streams_resumed.load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Restore persisted counters from a recovered snapshot. Tolerates a
+    /// shorter slice (an older snapshot with fewer counters): missing
+    /// tail counters keep their current value.
+    pub fn restore(&self, counters: &[u64]) {
+        let dst = [
+            &self.streams_opened,
+            &self.streams_closed,
+            &self.streams_finished,
+            &self.fragments_in,
+            &self.values_in,
+            &self.chunks_submitted,
+            &self.evictions,
+            &self.admission_rejections,
+            &self.late_partials,
+            &self.streams_resumed,
+        ];
+        for (d, &v) in dst.iter().zip(counters.iter()) {
+            d.store(v, Ordering::Relaxed);
         }
     }
 }
@@ -71,6 +136,12 @@ pub struct SessionMetricsSnapshot {
     pub admission_rejections: u64,
     pub late_partials: u64,
     pub partial_bytes: u64,
+    pub streams_resumed: u64,
+    pub snapshots_written: u64,
+    pub snapshot_bytes: u64,
+    pub snapshot_retries: u64,
+    pub snapshot_failures: u64,
+    pub log_rotations: u64,
 }
 
 impl SessionMetricsSnapshot {
@@ -97,6 +168,26 @@ impl SessionMetricsSnapshot {
         }
         if self.late_partials > 0 {
             s.push_str(&format!(" | {} late partials dropped", self.late_partials));
+        }
+        if self.snapshots_written > 0 || self.snapshot_failures > 0 {
+            s.push_str(&format!(
+                " | durability: {} snapshots ({:.1} KB), {} rotations",
+                self.snapshots_written,
+                self.snapshot_bytes as f64 / 1024.0,
+                self.log_rotations,
+            ));
+            if self.snapshot_retries > 0 {
+                s.push_str(&format!(", {} retries", self.snapshot_retries));
+            }
+            if self.snapshot_failures > 0 {
+                s.push_str(&format!(
+                    ", {} failures (degraded to in-memory)",
+                    self.snapshot_failures
+                ));
+            }
+        }
+        if self.streams_resumed > 0 {
+            s.push_str(&format!(" | {} streams resumed", self.streams_resumed));
         }
         s
     }
@@ -129,5 +220,38 @@ mod tests {
         assert!(line.contains("2 evicted"), "{line}");
         assert!(line.contains("1 refused"), "{line}");
         assert!(line.contains("3 late"), "{line}");
+        assert!(!line.contains("durability"), "quiet without snapshots: {line}");
+    }
+
+    #[test]
+    fn report_mentions_durability_when_active() {
+        let m = SessionMetrics::default();
+        m.snapshots_written.store(4, Ordering::Relaxed);
+        m.snapshot_bytes.store(2048, Ordering::Relaxed);
+        m.snapshot_failures.store(1, Ordering::Relaxed);
+        m.streams_resumed.store(2, Ordering::Relaxed);
+        let line = m.snapshot().report(std::time::Duration::from_secs(1));
+        assert!(line.contains("4 snapshots"), "{line}");
+        assert!(line.contains("degraded"), "{line}");
+        assert!(line.contains("2 streams resumed"), "{line}");
+    }
+
+    #[test]
+    fn persisted_counters_round_trip_and_tolerate_short_slices() {
+        let m = SessionMetrics::default();
+        m.streams_opened.store(7, Ordering::Relaxed);
+        m.late_partials.store(3, Ordering::Relaxed);
+        m.streams_resumed.store(1, Ordering::Relaxed);
+        let saved = m.persisted();
+        assert_eq!(saved.len(), PERSISTED_COUNTERS);
+        let back = SessionMetrics::default();
+        back.restore(&saved);
+        assert_eq!(back.persisted(), saved);
+        // An older, shorter snapshot leaves the missing tail untouched.
+        let partial = SessionMetrics::default();
+        partial.streams_resumed.store(9, Ordering::Relaxed);
+        partial.restore(&saved[..3]);
+        assert_eq!(partial.streams_opened.load(Ordering::Relaxed), 7);
+        assert_eq!(partial.streams_resumed.load(Ordering::Relaxed), 9);
     }
 }

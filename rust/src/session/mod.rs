@@ -56,11 +56,25 @@
 //! - **`partial_bytes` gauge**: every byte of per-stream carry (fragment
 //!   tails + parked chunk states) is accounted, so operators see the
 //!   streaming working set like they see `slab_bytes_in_flight`.
+//!
+//! # Durability
+//!
+//! With a [`DurabilityConfig`] set, the service periodically checkpoints
+//! the session table to an append-only snapshot log (see [`durable`]).
+//! After a crash, [`SessionService::recover_from`] replays the log and
+//! hands back [`ResumeToken`]s; [`SessionService::open_resume`] restores
+//! each stream's partial state, and the client re-appends everything past
+//! the token's `values` horizon — the resumed sum is bit-identical to an
+//! uninterrupted run, for every engine.
 
 mod table;
 
+pub mod durable;
 pub mod metrics;
 
+pub use durable::{
+    DurabilityConfig, Faults, FsyncPolicy, KillPoint, RecoveryReport, ResumeToken,
+};
 pub use metrics::{SessionMetrics, SessionMetricsSnapshot};
 
 use crate::coordinator::{
@@ -68,6 +82,7 @@ use crate::coordinator::{
 };
 use crate::engine::partial::{combine, PartialState};
 use anyhow::Result;
+use durable::{SnapshotLog, StagedStream};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
@@ -86,6 +101,8 @@ pub struct SessionConfig {
     pub max_open_streams: usize,
     /// Open streams untouched for this long are evicted.
     pub idle_ttl: Duration,
+    /// Snapshot-log durability; `None` (default) runs purely in memory.
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl Default for SessionConfig {
@@ -95,6 +112,7 @@ impl Default for SessionConfig {
             table_shards: 8,
             max_open_streams: 1024,
             idle_ttl: Duration::from_secs(30),
+            durability: None,
         }
     }
 }
@@ -180,12 +198,37 @@ pub struct SessionService {
     free: Vec<BurstSlab>,
     last_sweep: Instant,
     started: Instant,
+    /// The snapshot log when durability is configured.
+    log: Option<SnapshotLog>,
+    /// Recovered streams awaiting [`open_resume`](Self::open_resume);
+    /// still included in snapshots, so they survive a second crash.
+    staged: HashMap<u64, StagedStream>,
+    /// Engine name, recorded in snapshots and checked on recovery.
+    engine_name: String,
+    /// Snapshot cadence (`ZERO`: manual/shutdown snapshots only).
+    snapshot_every: Duration,
+    last_snapshot: Instant,
 }
 
 impl SessionService {
-    /// Start the coordinator pipeline and an empty session table.
+    /// Start the coordinator pipeline and an empty session table. With
+    /// durability configured, this begins a **new** history (older
+    /// snapshot generations are wiped) — to continue an existing one, use
+    /// [`recover_from`](Self::recover_from).
     pub fn start(cfg: SessionConfig) -> Result<Self> {
+        Self::start_inner(cfg, true)
+    }
+
+    fn start_inner(cfg: SessionConfig, wipe_history: bool) -> Result<Self> {
         let (_, n) = crate::engine::resolve_shape(&cfg.service.engine)?;
+        let engine_name = cfg.service.engine.name.clone();
+        let (log, snapshot_every) = match cfg.durability {
+            Some(d) => {
+                let every = d.snapshot_interval;
+                (Some(SnapshotLog::create(d, wipe_history)?), every)
+            }
+            None => (None, Duration::ZERO),
+        };
         let svc = Service::start(cfg.service)?;
         Ok(Self {
             svc,
@@ -204,7 +247,82 @@ impl SessionService {
             free: Vec::new(),
             last_sweep: Instant::now(),
             started: Instant::now(),
+            log,
+            staged: HashMap::new(),
+            engine_name,
+            snapshot_every,
+            last_snapshot: Instant::now(),
         })
+    }
+
+    /// Recover a crashed session history: replay the snapshot log in
+    /// `cfg.durability.dir`, restore tombstones, persisted counters and
+    /// the stream-id space, and stage every recoverable stream. The
+    /// returned [`RecoveryReport`] carries one [`ResumeToken`] per staged
+    /// stream — feed each to [`open_resume`](Self::open_resume), then
+    /// re-append values from the token's horizon onward.
+    ///
+    /// Fails (typed, never panics) on mid-log corruption with nothing
+    /// recoverable, and on engine/row-width mismatch between the snapshot
+    /// and `cfg` — resuming limb state under a different engine would
+    /// silently change sums.
+    ///
+    /// Close-order delivery restarts at zero: streams closed-but-
+    /// unfinished at crash time come back as re-openable (their token has
+    /// `was_closed`), so the client re-closes them to give them a slot in
+    /// the new order.
+    pub fn recover_from(cfg: SessionConfig) -> Result<(Self, RecoveryReport)> {
+        let d = cfg
+            .durability
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("recover_from requires a durability config"))?;
+        let replayed = durable::replay(&d.dir)?;
+        let mut svc = Self::start_inner(cfg, false)?;
+        let mut report = RecoveryReport {
+            tokens: Vec::new(),
+            tombstones: 0,
+            snapshots_replayed: replayed.snapshots_seen,
+            generation: replayed.generation,
+            torn_tail: replayed.torn_tail,
+            corrupt: replayed.corrupt,
+        };
+        if let Some(snap) = replayed.snapshot {
+            if snap.engine != svc.engine_name {
+                anyhow::bail!(
+                    "snapshot was written by engine {:?}, configured engine is {:?}: \
+                     partial state is not portable across engines",
+                    snap.engine,
+                    svc.engine_name
+                );
+            }
+            if snap.n as usize != svc.n {
+                anyhow::bail!(
+                    "snapshot row width {} != configured engine row width {}: \
+                     re-chunking would diverge",
+                    snap.n,
+                    svc.n
+                );
+            }
+            svc.metrics.restore(&snap.counters);
+            let now = Instant::now();
+            let mut next_stream = snap.next_stream;
+            for id in snap.tombstones {
+                svc.table.lock(id).insert(id, StreamState::tombstone(now));
+                report.tombstones += 1;
+                next_stream = next_stream.max(id + 1);
+            }
+            for st in snap.staged {
+                next_stream = next_stream.max(st.id + 1);
+                report.tokens.push(st.token());
+                svc.staged.insert(st.id, st);
+            }
+            svc.next_stream = next_stream;
+            report.tokens.sort_by_key(|t| t.stream);
+        }
+        // Checkpoint immediately: recovery itself becomes durable, so a
+        // second crash before any resume replays this same state.
+        svc.snapshot_now();
+        Ok((svc, report))
     }
 
     /// Open a new stream. Refused (typed [`SessionError::AtCapacity`])
@@ -225,6 +343,45 @@ impl SessionService {
         self.open_count += 1;
         self.metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
         self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Resume a recovered stream under its original id: its durable chunk
+    /// partials and tail are restored into the session table and the
+    /// stream reopens for appends. The caller re-appends every value from
+    /// the token's `values` horizon onward (and re-closes if the token
+    /// says `was_closed`); the final sum is then bit-identical to the
+    /// uninterrupted run.
+    ///
+    /// Counts toward admission control like any open stream (the token
+    /// stays staged and resumable when refused `AtCapacity`), bumps
+    /// `streams_resumed` — not `streams_opened`, the stream's open was
+    /// already counted in its first life.
+    pub fn open_resume(
+        &mut self,
+        token: &ResumeToken,
+    ) -> std::result::Result<StreamId, SessionError> {
+        self.pump_nonblocking();
+        let Some(st) = self.staged.remove(&token.stream.0) else {
+            return Err(SessionError::Unknown(token.stream));
+        };
+        if self.open_count >= self.max_open {
+            self.sweep_idle();
+        }
+        if self.open_count >= self.max_open {
+            self.staged.insert(st.id, st);
+            self.metrics.admission_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err(SessionError::AtCapacity { open: self.open_count, max: self.max_open });
+        }
+        let id = StreamId(st.id);
+        let state =
+            StreamState::recovered(Instant::now(), st.parts, st.tail, st.values, st.fragments);
+        let carried = state.carried_bytes;
+        self.table.lock(id.0).insert(id.0, state);
+        self.metrics.partial_bytes.fetch_add(carried, Ordering::Relaxed);
+        self.open_count += 1;
+        self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+        self.metrics.streams_resumed.fetch_add(1, Ordering::Relaxed);
         Ok(id)
     }
 
@@ -368,6 +525,13 @@ impl SessionService {
 
     /// Receive the next finished stream, in close order (blocking up to
     /// `timeout`).
+    ///
+    /// One monotonic deadline is computed up front and every wait is
+    /// measured against it with saturating arithmetic — a slow drip of
+    /// responses (each arrival resetting a naive per-wait timeout) cannot
+    /// push the total block past `timeout`. Waits happen in bounded
+    /// slices so TTL sweeps and the snapshot cadence keep running while
+    /// blocked.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<StreamResult> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -376,11 +540,11 @@ impl SessionService {
                 self.next_out += 1;
                 return Some(r);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 return None;
             }
-            if let Some(r) = self.svc.recv_timeout(deadline - now) {
+            if let Some(r) = self.svc.recv_timeout(remaining.min(Duration::from_millis(20))) {
                 self.route_response(r);
             }
         }
@@ -400,12 +564,12 @@ impl SessionService {
             if self.next_out >= self.next_close_seq {
                 return out;
             }
-            let now = Instant::now();
-            if now >= deadline {
+            // Same single-deadline discipline as `recv_timeout`.
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 return out;
             }
-            if let Some(r) = self.svc.recv_timeout((deadline - now).min(Duration::from_millis(20)))
-            {
+            if let Some(r) = self.svc.recv_timeout(remaining.min(Duration::from_millis(20))) {
                 self.route_response(r);
             }
         }
@@ -470,6 +634,56 @@ impl SessionService {
         self.svc.batch_capacity()
     }
 
+    /// Write a snapshot to the durability log right now. Returns whether
+    /// a complete snapshot reached the log — `false` with durability off,
+    /// after degradation to in-memory mode, or when a kill point fired.
+    /// Updates the durability metrics either way; an IO failure (after
+    /// `io_retries` attempts with backoff) bumps `snapshot_failures` and
+    /// degrades — it never panics and never blocks the session API.
+    pub fn snapshot_now(&mut self) -> bool {
+        self.last_snapshot = Instant::now();
+        let Some(log) = self.log.as_mut() else { return false };
+        if !log.alive || log.faults().killed() {
+            return false;
+        }
+        let payload = durable::encode_snapshot_payload(
+            &self.engine_name,
+            self.n,
+            self.next_stream,
+            &self.metrics.persisted(),
+            &self.table,
+            &self.staged,
+        );
+        let out = log.append_snapshot(&payload);
+        if out.retries > 0 {
+            self.metrics.snapshot_retries.fetch_add(out.retries as u64, Ordering::Relaxed);
+        }
+        if out.rotated {
+            self.metrics.log_rotations.fetch_add(1, Ordering::Relaxed);
+        }
+        if out.failed {
+            self.metrics.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        if out.wrote {
+            self.metrics.snapshots_written.fetch_add(1, Ordering::Relaxed);
+            self.metrics.snapshot_bytes.fetch_add(out.bytes, Ordering::Relaxed);
+        }
+        out.wrote
+    }
+
+    /// Has an armed kill point fired? (Fault injection: the simulated
+    /// process is dead; tests drop the service to complete the crash.)
+    pub fn killed(&self) -> bool {
+        self.log.as_ref().is_some_and(|l| l.faults().killed())
+    }
+
+    /// Durability is configured and the log is still writable (not
+    /// degraded to in-memory mode by exhausted IO retries).
+    pub fn durability_alive(&self) -> bool {
+        self.log.as_ref().is_some_and(|l| l.alive)
+    }
+
     pub fn metrics(&self) -> SessionMetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -484,7 +698,12 @@ impl SessionService {
     }
 
     /// Shut the pipeline down; returns the session and service metrics.
-    pub fn shutdown(self) -> (SessionMetricsSnapshot, MetricsSnapshot) {
+    /// With durability on, a final snapshot is written first, so a clean
+    /// shutdown leaves the freshest possible recovery point.
+    pub fn shutdown(mut self) -> (SessionMetricsSnapshot, MetricsSnapshot) {
+        if self.log.is_some() {
+            self.snapshot_now();
+        }
         let SessionService { svc, metrics, .. } = self;
         let service = svc.shutdown();
         (metrics.snapshot(), service)
@@ -493,7 +712,7 @@ impl SessionService {
     // ------------------------------------------------------------ internals
 
     /// Route every already-available service response; opportunistic TTL
-    /// sweep.
+    /// sweep and snapshot cadence.
     fn pump_nonblocking(&mut self) {
         while let Some(r) = self.svc.recv_timeout(Duration::ZERO) {
             self.route_response(r);
@@ -502,6 +721,12 @@ impl SessionService {
             && self.last_sweep.elapsed() > self.idle_ttl / 4
         {
             self.sweep_idle();
+        }
+        if self.log.is_some()
+            && !self.snapshot_every.is_zero()
+            && self.last_snapshot.elapsed() >= self.snapshot_every
+        {
+            self.snapshot_now();
         }
     }
 
@@ -614,6 +839,7 @@ mod tests {
             table_shards: 3,
             max_open_streams: 64,
             idle_ttl: Duration::from_secs(30),
+            durability: None,
         }
     }
 
@@ -719,6 +945,44 @@ mod tests {
         ss.open().unwrap();
         let (sm, _) = ss.shutdown();
         assert_eq!(sm.admission_rejections, 1);
+    }
+
+    #[test]
+    fn recv_timeout_respects_a_single_deadline() {
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        // Nothing closed: the call must give up ≈ at the deadline, not
+        // after it (bounded wait slices, saturating remaining time).
+        let t0 = Instant::now();
+        assert!(ss.recv_timeout(Duration::from_millis(60)).is_none());
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(55), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500), "overshoot: {waited:?}");
+        // Zero timeout returns immediately.
+        let t0 = Instant::now();
+        assert!(ss.recv_timeout(Duration::ZERO).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        ss.shutdown();
+    }
+
+    #[test]
+    fn resume_of_unknown_token_is_typed_and_snapshot_is_noop_without_durability() {
+        let mut ss = SessionService::start(cfg(8)).unwrap();
+        let token = ResumeToken {
+            stream: StreamId(77),
+            values: 0,
+            fragments: 0,
+            chunks: 0,
+            was_closed: false,
+        };
+        assert_eq!(ss.open_resume(&token), Err(SessionError::Unknown(StreamId(77))));
+        assert!(!ss.snapshot_now(), "no log configured");
+        assert!(!ss.killed());
+        assert!(!ss.durability_alive());
+        assert!(
+            SessionService::recover_from(cfg(8)).is_err(),
+            "recover_from requires a durability config"
+        );
+        ss.shutdown();
     }
 
     #[test]

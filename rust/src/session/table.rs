@@ -66,6 +66,45 @@ impl StreamState {
             carried_bytes: 0,
         }
     }
+
+    /// Rebuild a stream from recovered snapshot state (see
+    /// [`crate::session::durable`]): the durable prefix of chunk partials
+    /// is parked as already-received chunks, the tail refills the
+    /// sub-row buffer, and the stream reopens for further appends.
+    /// `carried_bytes` is recomputed here; the caller mirrors it into the
+    /// `partial_bytes` gauge.
+    pub(crate) fn recovered(
+        now: Instant,
+        parts: Vec<PartialState>,
+        tail: Vec<f32>,
+        values: u64,
+        fragments: u64,
+    ) -> Self {
+        let carried_bytes =
+            4 * tail.len() as u64 + parts.iter().map(PartialState::bytes).sum::<u64>();
+        let p = parts.len() as u32;
+        Self {
+            phase: Phase::Open,
+            tail,
+            parts: parts.into_iter().map(Some).collect(),
+            parts_received: p,
+            chunks_submitted: p,
+            fragments,
+            values,
+            opened_at: now,
+            last_touch: now,
+            carried_bytes,
+        }
+    }
+
+    /// An eviction tombstone restored from a snapshot: late touches keep
+    /// getting the typed `Evicted` error after a restart, exactly as they
+    /// would have without the crash.
+    pub(crate) fn tombstone(now: Instant) -> Self {
+        let mut s = Self::new(now);
+        s.phase = Phase::Evicted;
+        s
+    }
 }
 
 /// `S` independently-locked `id -> StreamState` maps.
@@ -138,6 +177,22 @@ mod tests {
         });
         assert_eq!(seen, 9);
         assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn recovered_state_parks_parts_and_accounts_carry() {
+        let now = Instant::now();
+        let parts = vec![PartialState::F32(1.0), PartialState::F32(2.0)];
+        let s = StreamState::recovered(now, parts, vec![0.5; 3], 35, 4);
+        assert_eq!(s.parts_received, 2);
+        assert_eq!(s.chunks_submitted, 2);
+        assert_eq!(s.parts.len(), 2);
+        assert!(s.parts.iter().all(Option::is_some));
+        assert_eq!(s.carried_bytes, 4 * 3 + 4 + 4);
+        assert_eq!(s.values, 35);
+        assert_eq!(s.fragments, 4);
+        assert_eq!(s.phase, Phase::Open);
+        assert_eq!(StreamState::tombstone(now).phase, Phase::Evicted);
     }
 
     #[test]

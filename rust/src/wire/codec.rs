@@ -1,0 +1,527 @@
+//! Framing and value codecs: little-endian primitives, typed decode
+//! errors, and the versioned CRC32 frame that wraps every durable (or
+//! wire-transported) record.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! ┌────────┬─────────┬─────┬──────────┬───────────┬─────────┐
+//! │ "JPWC" │ version │ tag │ len: u32 │  payload  │ crc: u32│
+//! │ 4 bytes│   u8    │ u8  │          │ len bytes │         │
+//! └────────┴─────────┴─────┴──────────┴───────────┴─────────┘
+//!                 └────────── CRC32 coverage ─────┘
+//! ```
+//!
+//! The CRC covers version, tag, length and payload, so a flipped bit
+//! anywhere but the magic surfaces as [`CodecError::BadCrc`] (and a
+//! flipped magic as [`CodecError::BadMagic`]). A frame cut short at any
+//! byte — the torn tail a crash leaves in an append-only log — decodes to
+//! [`CodecError::Truncated`], which replay treats as "end of durable
+//! history", never as data.
+
+use crate::engine::exact::{self, SuperAccumulator};
+use crate::engine::partial::PartialState;
+use crate::wire::crc32::crc32;
+
+/// Frame magic: `b"JPWC"` — **J**uggle**P**AC **W**ire **C**odec.
+pub const MAGIC: [u8; 4] = *b"JPWC";
+/// Current (and only) codec version. Decoders reject newer versions
+/// loudly rather than misparse them.
+pub const VERSION: u8 = 1;
+/// Upper bound on a frame payload; anything larger is corruption (a
+/// snapshot of the whole session table is ~100 bytes/stream).
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+/// Fixed bytes around a payload: magic + version + tag + len + crc.
+pub const FRAME_OVERHEAD: usize = 4 + 1 + 1 + 4 + 4;
+
+/// Frame tag: a standalone [`PartialState`] (the distributed-tier unit of
+/// exchange — a partial sum crossing a host boundary).
+pub const TAG_PARTIAL: u8 = 0x01;
+/// Frame tag: a full session-table snapshot (see
+/// [`crate::session::durable`]).
+pub const TAG_SNAPSHOT: u8 = 0x10;
+
+/// Typed decode failure. Every way a byte stream can be wrong maps to a
+/// variant — decoding never panics and never fabricates values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ends before the frame (or field) does. At the tail of
+    /// an append-only log this is a torn write, not corruption.
+    Truncated { need: usize, have: usize },
+    /// The four magic bytes are wrong — not a frame boundary.
+    BadMagic { got: [u8; 4] },
+    /// Version from a future codec; refusing to guess at its layout.
+    BadVersion { got: u8, max: u8 },
+    /// Checksum mismatch: the frame was damaged after it was written.
+    BadCrc { want: u32, got: u32 },
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize { len: u32 },
+    /// A value tag no decoder of this version knows.
+    BadTag { tag: u8 },
+    /// CRC-valid bytes that violate a semantic invariant (e.g.
+    /// superaccumulator limb-range/pending-carry rules).
+    InvalidState { reason: &'static str },
+    /// Structurally wrong payload (bad count, trailing bytes, …).
+    Malformed { what: &'static str },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated: need {need} bytes, have {have}")
+            }
+            CodecError::BadMagic { got } => write!(f, "bad frame magic {got:02x?}"),
+            CodecError::BadVersion { got, max } => {
+                write!(f, "unsupported codec version {got} (max {max})")
+            }
+            CodecError::BadCrc { want, got } => {
+                write!(f, "crc mismatch: stored {want:#010x}, computed {got:#010x}")
+            }
+            CodecError::Oversize { len } => {
+                write!(f, "payload length {len} exceeds {MAX_PAYLOAD}")
+            }
+            CodecError::BadTag { tag } => write!(f, "unknown value tag {tag:#04x}"),
+            CodecError::InvalidState { reason } => write!(f, "invalid state: {reason}"),
+            CodecError::Malformed { what } => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Little-endian byte sink for payload construction.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        // Bit pattern, not value: NaN payloads and -0.0 must survive.
+        self.put_u32(v.to_bits());
+    }
+
+    /// Length-prefixed (u16) UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        debug_assert!(s.len() <= u16::MAX as usize);
+        self.buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Little-endian cursor over a decoded payload. Every read is
+/// bounds-checked and returns [`CodecError::Truncated`] past the end.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, CodecError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn str(&mut self) -> Result<&'a str, CodecError> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        std::str::from_utf8(self.take(len)?)
+            .map_err(|_| CodecError::Malformed { what: "non-UTF-8 string" })
+    }
+
+    /// Assert the payload is fully consumed — trailing bytes mean the
+    /// writer and reader disagree about the layout.
+    pub fn done(&self) -> Result<(), CodecError> {
+        if self.remaining() != 0 {
+            return Err(CodecError::Malformed { what: "trailing bytes after payload" });
+        }
+        Ok(())
+    }
+}
+
+/// Append one complete frame wrapping `payload` to `out`.
+pub fn write_frame(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    debug_assert!(payload.len() as u32 <= MAX_PAYLOAD);
+    out.extend_from_slice(&MAGIC);
+    let body_start = out.len();
+    out.push(VERSION);
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[body_start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// One decoded frame, borrowing its payload from the input buffer.
+pub struct Frame<'a> {
+    pub tag: u8,
+    pub payload: &'a [u8],
+}
+
+/// Decode the frame at the start of `buf`; returns it plus the number of
+/// bytes it occupied (so callers can iterate a log of frames).
+pub fn read_frame(buf: &[u8]) -> Result<(Frame<'_>, usize), CodecError> {
+    const HEADER: usize = 4 + 1 + 1 + 4;
+    if buf.len() < HEADER {
+        return Err(CodecError::Truncated { need: HEADER, have: buf.len() });
+    }
+    if buf[..4] != MAGIC {
+        return Err(CodecError::BadMagic { got: buf[..4].try_into().unwrap() });
+    }
+    let version = buf[4];
+    if version == 0 || version > VERSION {
+        return Err(CodecError::BadVersion { got: version, max: VERSION });
+    }
+    let tag = buf[5];
+    let len = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(CodecError::Oversize { len });
+    }
+    let total = HEADER + len as usize + 4;
+    if buf.len() < total {
+        return Err(CodecError::Truncated { need: total, have: buf.len() });
+    }
+    let want = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
+    let got = crc32(&buf[4..total - 4]);
+    if want != got {
+        return Err(CodecError::BadCrc { want, got });
+    }
+    Ok((Frame { tag, payload: &buf[HEADER..total - 4] }, total))
+}
+
+// ── PartialState value codec ────────────────────────────────────────────
+
+/// In-payload value tag: a rounded f32 partial (4 bytes).
+const VAL_F32: u8 = 1;
+/// In-payload value tag: exact superaccumulator limbs (11 × i64 + flags).
+const VAL_EXACT: u8 = 2;
+
+/// Encode one [`PartialState`] into `w`. `Exact` states are written in
+/// canonical (renormalized) form, so the encoding depends only on the
+/// accumulated value.
+pub fn put_partial(w: &mut ByteWriter, p: &PartialState) {
+    match p {
+        PartialState::F32(v) => {
+            w.put_u8(VAL_F32);
+            w.put_f32(*v);
+        }
+        PartialState::Exact(acc) => {
+            w.put_u8(VAL_EXACT);
+            let (limbs, flags) = acc.to_wire();
+            for l in limbs {
+                w.put_i64(l);
+            }
+            w.put_u8(flags);
+        }
+    }
+}
+
+/// Decode one [`PartialState`], validating `Exact` limb invariants
+/// ([`SuperAccumulator::from_wire`]) — a CRC-valid frame can still carry
+/// a state no honest encoder produces.
+pub fn get_partial(r: &mut ByteReader<'_>) -> Result<PartialState, CodecError> {
+    match r.u8()? {
+        VAL_F32 => Ok(PartialState::F32(r.f32()?)),
+        VAL_EXACT => {
+            let mut limbs = [0i64; exact::LIMBS];
+            for l in limbs.iter_mut() {
+                *l = r.i64()?;
+            }
+            let flags = r.u8()?;
+            let acc = SuperAccumulator::from_wire(limbs, flags)
+                .map_err(|e| CodecError::InvalidState { reason: e.reason })?;
+            Ok(PartialState::Exact(Box::new(acc)))
+        }
+        tag => Err(CodecError::BadTag { tag }),
+    }
+}
+
+/// One `PartialState` as a standalone frame — the distributed-tier
+/// exchange unit (a partial sum crossing hosts; arXiv 2209.10056 merges
+/// exactly such partials in-network).
+pub fn encode_partial_frame(p: &PartialState) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    put_partial(&mut w, p);
+    let payload = w.into_inner();
+    let mut out = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
+    write_frame(&mut out, TAG_PARTIAL, &payload);
+    out
+}
+
+/// Decode a standalone `PartialState` frame; returns the state and the
+/// frame's size in bytes.
+pub fn decode_partial_frame(buf: &[u8]) -> Result<(PartialState, usize), CodecError> {
+    let (frame, used) = read_frame(buf)?;
+    if frame.tag != TAG_PARTIAL {
+        return Err(CodecError::BadTag { tag: frame.tag });
+    }
+    let mut r = ByteReader::new(frame.payload);
+    let p = get_partial(&mut r)?;
+    r.done()?;
+    Ok((p, used))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn exact_of(vals: &[f32]) -> PartialState {
+        let mut acc = SuperAccumulator::new();
+        for &v in vals {
+            acc.add(v);
+        }
+        PartialState::Exact(Box::new(acc))
+    }
+
+    fn sample_states(rng: &mut Xoshiro256) -> Vec<PartialState> {
+        let mut states = vec![
+            PartialState::F32(0.0),
+            PartialState::F32(-0.0),
+            PartialState::F32(f32::NAN),
+            PartialState::F32(f32::INFINITY),
+            PartialState::F32(f32::NEG_INFINITY),
+            PartialState::F32(f32::MIN_POSITIVE / 2.0), // subnormal
+            exact_of(&[]),
+            exact_of(&[-0.0, -0.0]),
+            exact_of(&[1e30, 1.0, -1e30]),
+            exact_of(&[f32::NAN]),
+            exact_of(&[f32::INFINITY, f32::NEG_INFINITY]),
+        ];
+        for _ in 0..40 {
+            states.push(PartialState::F32(f32::from_bits(rng.next_u64() as u32)));
+            let len = rng.range(0, 30);
+            let vals: Vec<f32> =
+                (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            states.push(exact_of(&vals));
+        }
+        states
+    }
+
+    /// Bit-level equality across the round trip: same variant, same
+    /// rounded bits, and for Exact the same canonical limb image.
+    fn assert_same_state(a: &PartialState, b: &PartialState) {
+        match (a, b) {
+            (PartialState::F32(x), PartialState::F32(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits())
+            }
+            (PartialState::Exact(x), PartialState::Exact(y)) => {
+                assert_eq!(x.to_wire(), y.to_wire())
+            }
+            _ => panic!("variant changed across the round trip"),
+        }
+    }
+
+    #[test]
+    fn partial_state_round_trips_exhaustively() {
+        let mut rng = Xoshiro256::seeded(0xC0DEC);
+        for p in sample_states(&mut rng) {
+            let frame = encode_partial_frame(&p);
+            let (back, used) = decode_partial_frame(&frame).expect("round trip");
+            assert_eq!(used, frame.len(), "frame self-describes its length");
+            assert_same_state(&p, &back);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_truncated_error() {
+        let frame = encode_partial_frame(&exact_of(&[1.5, 2.5, -1e20]));
+        for cut in 0..frame.len() {
+            match decode_partial_frame(&frame[..cut]) {
+                Err(CodecError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let mut rng = Xoshiro256::seeded(0xBADF);
+        for p in [exact_of(&[1e30, 1.0, -1e30]), PartialState::F32(3.75)] {
+            let frame = encode_partial_frame(&p);
+            for i in 0..frame.len() {
+                for _ in 0..4 {
+                    let mut m = frame.clone();
+                    let flip = 1u8 << rng.range(0, 7);
+                    m[i] ^= flip;
+                    // Any typed error is acceptable; silence (a "successful"
+                    // decode of damaged bytes) is not. A longer-than-real
+                    // length field may also ask for more bytes (Truncated)
+                    // — still a rejection.
+                    assert!(
+                        decode_partial_frame(&m).is_err(),
+                        "flip {flip:#04x} at byte {i} decoded silently"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_taxonomy_is_precise() {
+        let frame = encode_partial_frame(&PartialState::F32(1.0));
+        // Magic damage.
+        let mut m = frame.clone();
+        m[0] ^= 0xFF;
+        assert!(matches!(decode_partial_frame(&m), Err(CodecError::BadMagic { .. })));
+        // Future version.
+        let mut m = frame.clone();
+        m[4] = VERSION + 1;
+        assert!(matches!(decode_partial_frame(&m), Err(CodecError::BadVersion { .. })));
+        // Payload damage -> CRC.
+        let mut m = frame.clone();
+        m[11] ^= 0x01;
+        assert!(matches!(decode_partial_frame(&m), Err(CodecError::BadCrc { .. })));
+        // Oversize length field.
+        let mut m = frame.clone();
+        m[6..10].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(decode_partial_frame(&m), Err(CodecError::Oversize { .. })));
+    }
+
+    #[test]
+    fn invalid_exact_state_is_rejected_not_constructed() {
+        // Hand-build a CRC-valid frame whose limbs violate the
+        // renormalized-window invariant: the CRC passes, the semantic
+        // validation must still refuse.
+        let mut w = ByteWriter::new();
+        w.put_u8(2); // VAL_EXACT
+        for i in 0..crate::engine::exact::LIMBS {
+            w.put_i64(if i == 2 { 1i64 << 40 } else { 0 });
+        }
+        w.put_u8(crate::engine::exact::WIRE_FLAG_SAW_VALUE);
+        let mut frame = Vec::new();
+        write_frame(&mut frame, TAG_PARTIAL, &w.into_inner());
+        match decode_partial_frame(&frame) {
+            Err(CodecError::InvalidState { reason }) => {
+                assert!(reason.contains("window"), "{reason}")
+            }
+            other => panic!("corrupt limbs: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_rejects_trailing_bytes_and_unknown_tags() {
+        let mut w = ByteWriter::new();
+        put_partial(&mut w, &PartialState::F32(1.0));
+        w.put_u8(0xEE); // trailing garbage
+        let mut frame = Vec::new();
+        write_frame(&mut frame, TAG_PARTIAL, &w.into_inner());
+        assert!(matches!(
+            decode_partial_frame(&frame),
+            Err(CodecError::Malformed { .. })
+        ));
+
+        let mut w = ByteWriter::new();
+        w.put_u8(99); // unknown value tag
+        let mut frame = Vec::new();
+        write_frame(&mut frame, TAG_PARTIAL, &w.into_inner());
+        assert!(matches!(decode_partial_frame(&frame), Err(CodecError::BadTag { tag: 99 })));
+    }
+
+    #[test]
+    fn frames_concatenate_and_iterate() {
+        let states = [PartialState::F32(1.0), exact_of(&[2.0, 4.0]), PartialState::F32(-7.5)];
+        let mut log = Vec::new();
+        for p in &states {
+            log.extend_from_slice(&encode_partial_frame(p));
+        }
+        let mut pos = 0;
+        let mut seen = 0;
+        while pos < log.len() {
+            let (p, used) = decode_partial_frame(&log[pos..]).unwrap();
+            assert_same_state(&p, &states[seen]);
+            pos += used;
+            seen += 1;
+        }
+        assert_eq!(seen, states.len());
+    }
+
+    #[test]
+    fn writer_reader_primitives_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_i64(i64::MIN);
+        w.put_f32(-0.0);
+        w.put_str("exact");
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.i64().unwrap(), i64::MIN);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.str().unwrap(), "exact");
+        r.done().unwrap();
+        assert!(matches!(r.u8(), Err(CodecError::Truncated { .. })));
+    }
+}

@@ -1,0 +1,35 @@
+//! Versioned, CRC32-framed binary codec for carry state and session
+//! metadata — the serialization layer under both durability and
+//! distribution.
+//!
+//! Two consumers share one format:
+//!
+//! - **Durability** ([`crate::session::durable`]): session-table
+//!   snapshots are written to an append-only log as [`codec`] frames, so
+//!   a crashed `SessionService` can be recovered with bit-identical sums.
+//! - **Distribution** (ROADMAP's scale-out tier): a
+//!   [`crate::engine::PartialState`] frame is the unit a partial sum
+//!   travels in between hosts — In-Network Accumulation (arXiv
+//!   2209.10056) merges exactly such partials hop by hop, and because
+//!   `Exact` frames carry full superaccumulator limbs, merging them
+//!   en route preserves the correctly-rounded, order-invariant
+//!   guarantee across the network.
+//!
+//! Design rules, in order: (1) never panic on untrusted bytes — every
+//! failure is a typed [`CodecError`]; (2) never *construct* invalid
+//! state — CRC-valid limb images are semantically validated
+//! ([`crate::engine::exact::SuperAccumulator::from_wire`]) before an
+//! accumulator exists; (3) a truncated tail is data loss, not corruption
+//! — [`CodecError::Truncated`] is distinguishable from [`CodecError::BadCrc`]
+//! so log replay can drop a torn final record without masking damage
+//! elsewhere.
+
+pub mod codec;
+pub mod crc32;
+
+pub use codec::{
+    decode_partial_frame, encode_partial_frame, get_partial, put_partial, read_frame,
+    write_frame, ByteReader, ByteWriter, CodecError, Frame, FRAME_OVERHEAD, MAX_PAYLOAD,
+    TAG_PARTIAL, TAG_SNAPSHOT, VERSION,
+};
+pub use crc32::crc32;

@@ -16,7 +16,9 @@
 //! other coordinator suites.
 
 use jugglepac::coordinator::{EngineConfig, ServiceConfig};
-use jugglepac::session::{SessionConfig, SessionError, SessionService, StreamId};
+use jugglepac::session::{
+    DurabilityConfig, Faults, SessionConfig, SessionError, SessionService, StreamId,
+};
 use jugglepac::testkit::{property, shard_counts};
 use jugglepac::util::Xoshiro256;
 use std::time::Duration;
@@ -34,6 +36,7 @@ fn base_cfg(shards: usize) -> SessionConfig {
         table_shards: 4,
         max_open_streams: 64,
         idle_ttl: Duration::from_secs(120),
+        durability: None,
     }
 }
 
@@ -109,6 +112,76 @@ fn fuzz_lifecycle_violations_never_corrupt_live_streams() {
             let (sm, _) = ss.shutdown();
             assert_eq!(sm.partial_bytes, 0, "carry gauge returns to zero");
             assert_eq!(sm.streams_finished as usize, closed.len());
+        });
+    }
+}
+
+/// The lifecycle fuzz again, with the snapshot cadence running hot
+/// underneath (5 ms interval, fired from the pump): snapshotting under
+/// random churn must never change a sum, stall delivery, or leak carry.
+#[test]
+fn fuzz_lifecycle_with_snapshotting_underneath_is_unchanged() {
+    for shards in shard_counts(&[1, 2, 4]) {
+        let mut case = 0u64;
+        property(&format!("session_durable_{shards}"), 6, |rng: &mut Xoshiro256| {
+            case += 1;
+            let dir = std::env::temp_dir().join(format!(
+                "jugglepac-fuzz-durable-{shards}-{case}-{}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut cfg = base_cfg(shards);
+            let mut d = DurabilityConfig::at(&dir);
+            d.snapshot_interval = Duration::from_millis(5);
+            d.faults = Faults::default(); // no kills in this leg
+            cfg.durability = Some(d);
+            let mut ss = SessionService::start(cfg).unwrap();
+            let mut live: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            let mut closed: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            for _ in 0..rng.range(30, 60) {
+                match rng.range(0, 3) {
+                    0 => {
+                        if live.len() < 10 {
+                            live.push((ss.open().unwrap(), Vec::new()));
+                        }
+                    }
+                    1 | 2 => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let frag = dyadic_frag(rng, 20);
+                            ss.append(live[k].0, &frag).unwrap();
+                            live[k].1.extend_from_slice(&frag);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let (id, vals) = live.swap_remove(k);
+                            ss.close(id).unwrap();
+                            closed.push((id, vals));
+                        }
+                        // Let the 5 ms cadence actually fire sometimes.
+                        if rng.chance(0.3) {
+                            std::thread::sleep(Duration::from_millis(6));
+                        }
+                    }
+                }
+            }
+            for (id, vals) in live.drain(..) {
+                ss.close(id).unwrap();
+                closed.push((id, vals));
+            }
+            let results = ss.flush(Duration::from_secs(30));
+            assert_eq!(results.len(), closed.len(), "every closed stream delivers");
+            for (r, (id, vals)) in results.iter().zip(closed.iter()) {
+                assert_eq!(r.stream, *id, "close-order delivery under snapshotting");
+                assert_eq!(r.sum, vals.iter().sum::<f32>(), "{id}: exact dyadic sum");
+            }
+            let (sm, _) = ss.shutdown();
+            assert_eq!(sm.partial_bytes, 0, "carry gauge returns to zero");
+            assert!(sm.snapshots_written > 0, "the cadence actually snapshotted");
+            assert_eq!(sm.snapshot_failures, 0);
+            let _ = std::fs::remove_dir_all(&dir);
         });
     }
 }

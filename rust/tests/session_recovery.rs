@@ -1,0 +1,471 @@
+//! Crash–recovery differential suite: durable sessions under fault
+//! injection.
+//!
+//! The durability contract is that a crash must not change a sum. Each
+//! headline case arms one [`KillPoint`], streams a dataset while
+//! snapshotting, lets the kill fire mid-append / mid-snapshot /
+//! mid-rotation, drops the service (the crash), recovers from the log,
+//! resumes the stream, and replays every value past the token's horizon
+//! — the final sum must be **bit-identical** to an uninterrupted one-shot
+//! run, for every engine under test at every shard count (and equal to
+//! the independent i128 reference for `exact`).
+//!
+//! `JUGGLEPAC_TEST_ENGINES` / `JUGGLEPAC_TEST_SHARDS` pin the sweep per
+//! CI matrix leg as in the other session suites; `JUGGLEPAC_KILL_POINT`
+//! (the crash-matrix knob) pins the kill point — unset, all four are
+//! exercised.
+
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
+use jugglepac::session::{
+    DurabilityConfig, Faults, KillPoint, SessionConfig, SessionError, SessionService,
+};
+use jugglepac::testkit::{engines_under_test, exact_i128_reference, shard_counts};
+use jugglepac::util::Xoshiro256;
+use jugglepac::wire::CodecError;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Engine row width: small, so streams span chunks and the durable
+/// prefix/horizon logic is exercised for real.
+const N: usize = 16;
+
+fn service_cfg(engine: &str, shards: usize) -> ServiceConfig {
+    let mut engine = EngineConfig::named(engine, 4, N);
+    engine.adder_latency = 2;
+    ServiceConfig {
+        engine,
+        shards,
+        batch_deadline: Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 64,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "jugglepac-recovery-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Durable session config: manual snapshots (tests control cadence) and
+/// explicit faults — `JUGGLEPAC_KILL_POINT` selects *which* kill the
+/// headline test arms (see [`kill_points`]) rather than arming every log
+/// in the suite.
+fn durable_cfg(engine: &str, shards: usize, dir: &Path) -> SessionConfig {
+    let mut d = DurabilityConfig::at(dir);
+    d.snapshot_interval = Duration::ZERO;
+    d.retry_backoff = Duration::from_micros(50);
+    d.faults = Faults::default();
+    SessionConfig {
+        service: service_cfg(engine, shards),
+        table_shards: 4,
+        max_open_streams: 64,
+        idle_ttl: Duration::from_secs(120),
+        durability: Some(d),
+    }
+}
+
+/// The kill points this run sweeps: all four, or the one the
+/// `JUGGLEPAC_KILL_POINT` matrix leg names.
+fn kill_points() -> Vec<KillPoint> {
+    match std::env::var("JUGGLEPAC_KILL_POINT") {
+        Ok(v) => {
+            let name = v.split(':').next().unwrap_or("");
+            vec![KillPoint::parse(name)
+                .unwrap_or_else(|| panic!("JUGGLEPAC_KILL_POINT: unknown kill point {v:?}"))]
+        }
+        Err(_) => KillPoint::ALL.to_vec(),
+    }
+}
+
+fn values_for(engine: &str, rng: &mut Xoshiro256, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if engine == "exact" {
+                // Wide-exponent values (inside the i128 reference's
+                // range): catastrophic for naive f32 summation, so a
+                // wrong or double-counted chunk cannot cancel out.
+                let sign = (rng.range(0, 1) as u32) << 31;
+                let e = rng.range(100, 160) as u32;
+                let mant = (rng.next_u64() & 0x7F_FFFF) as u32;
+                f32::from_bits(sign | (e << 23) | mant)
+            } else {
+                // Exact dyadic values: bit-assertable under any engine.
+                rng.range_i64(-64, 64) as f32 / 8.0
+            }
+        })
+        .collect()
+}
+
+fn oneshot_sum(engine: &str, shards: usize, vals: &[f32]) -> f32 {
+    let mut svc = Service::start(service_cfg(engine, shards)).unwrap();
+    svc.submit(vals.to_vec()).unwrap();
+    let want = svc.recv_timeout(Duration::from_secs(60)).expect("reference sum").sum;
+    svc.shutdown();
+    want
+}
+
+/// Resume from a recovery report (or start over when nothing was durable
+/// yet), replay everything past the horizon, and return the final sum.
+fn resume_and_finish(
+    ss: &mut SessionService,
+    tokens: &[jugglepac::session::ResumeToken],
+    vals: &[f32],
+) -> (f32, u64) {
+    let (rid, from) = match tokens.first() {
+        Some(token) => {
+            assert!(
+                token.values as usize <= vals.len(),
+                "horizon within the dataset: {token:?}"
+            );
+            (ss.open_resume(token).unwrap(), token.values as usize)
+        }
+        None => (ss.open().unwrap(), 0),
+    };
+    ss.append(rid, &vals[from..]).unwrap();
+    ss.close(rid).unwrap();
+    let r = ss.recv_timeout(Duration::from_secs(60)).expect("resumed stream finishes");
+    assert_eq!(r.stream, rid);
+    (r.sum, r.values)
+}
+
+fn run_crash_resume(engine: &str, shards: usize, kill: KillPoint) {
+    let dir = tmp_dir(&format!("kill-{kill}-{engine}-{shards}"));
+    let mut rng = Xoshiro256::seeded(0xD00D ^ ((shards as u64) << 8) ^ (kill as u64));
+    let vals = values_for(engine, &mut rng, 150);
+    let want = oneshot_sum(engine, shards, &vals);
+
+    // First life: stream in fragments, snapshotting every third fragment;
+    // the armed kill fires on the second snapshot append. The rotation
+    // leg shrinks the log budget so that second append must rotate.
+    let mut cfg = durable_cfg(engine, shards, &dir);
+    if kill == KillPoint::MidRotation {
+        cfg.durability.as_mut().unwrap().max_log_bytes = 1;
+    }
+    let faults = cfg.durability.as_ref().unwrap().faults.clone();
+    faults.kill_at(kill, 2);
+    let mut ss = SessionService::start(cfg).unwrap();
+    let id = ss.open().unwrap();
+    for (i, frag) in vals.chunks(7).enumerate() {
+        ss.append(id, frag).unwrap();
+        if i % 3 == 2 {
+            ss.snapshot_now();
+        }
+        if ss.killed() {
+            break;
+        }
+    }
+    while !ss.killed() {
+        ss.snapshot_now();
+    }
+    drop(ss); // the crash: everything in flight dies with the process
+
+    // Second life: recover, resume, replay past the horizon.
+    let (mut ss, report) =
+        SessionService::recover_from(durable_cfg(engine, shards, &dir)).unwrap();
+    assert!(!report.corrupt, "crash debris is never corruption ({kill})");
+    if kill == KillPoint::MidSnapshot {
+        assert!(report.torn_tail, "mid-snapshot kill leaves a torn tail");
+    }
+    let (sum, values) = resume_and_finish(&mut ss, &report.tokens, &vals);
+    assert_eq!(
+        sum.to_bits(),
+        want.to_bits(),
+        "resumed sum == uninterrupted ({engine}, {shards} shards, {kill})"
+    );
+    assert_eq!(values, vals.len() as u64, "horizon + replay covers every value once");
+    if engine == "exact" {
+        assert_eq!(
+            sum.to_bits(),
+            exact_i128_reference(&vals).to_bits(),
+            "exact stays correctly rounded across the crash ({shards} shards, {kill})"
+        );
+    }
+    let (sm, _) = ss.shutdown();
+    assert_eq!(sm.partial_bytes, 0, "all carry accounted to zero after resume");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The acceptance matrix: kill point × engine × shard count, each case
+/// bit-identical to its uninterrupted run.
+#[test]
+fn killed_and_resumed_streams_are_bit_identical_to_uninterrupted() {
+    for engine in engines_under_test(&["native", "exact"]) {
+        for shards in shard_counts(&[1, 2, 4]) {
+            for kill in kill_points() {
+                run_crash_resume(&engine, shards, kill);
+            }
+        }
+    }
+}
+
+/// The resumed stream really carries restored partial state (not just a
+/// replay-from-zero): chunk partials land before the snapshot, the token
+/// horizon covers them, and the resumed sum still matches.
+#[test]
+fn resumed_partial_state_is_actually_restored() {
+    for engine in engines_under_test(&["native", "exact"]) {
+        let dir = tmp_dir(&format!("restore-{engine}"));
+        let mut rng = Xoshiro256::seeded(42);
+        let vals = values_for(&engine, &mut rng, 96); // 6 full chunks, no tail
+        let want = oneshot_sum(&engine, 1, &vals);
+        let cfg = durable_cfg(&engine, 1, &dir);
+        let faults = cfg.durability.as_ref().unwrap().faults.clone();
+        faults.kill_at(KillPoint::AfterAppend, 1);
+        let mut ss = SessionService::start(cfg).unwrap();
+        let id = ss.open().unwrap();
+        ss.append(id, &vals[..80]).unwrap(); // 5 full chunks in flight
+        // Wait for chunk partials to land (empty appends pump responses).
+        let t0 = Instant::now();
+        while ss.metrics().partial_bytes == 0 && t0.elapsed() < Duration::from_secs(30) {
+            ss.append(id, &[]).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(ss.metrics().partial_bytes > 0, "a chunk partial landed ({engine})");
+        assert!(ss.snapshot_now(), "the killed append is still fully durable");
+        assert!(ss.killed());
+        drop(ss);
+
+        let (mut ss, report) =
+            SessionService::recover_from(durable_cfg(&engine, 1, &dir)).unwrap();
+        let token = report.tokens.first().expect("one resumable stream").clone();
+        assert!(token.values >= N as u64, "at least one chunk durable: {token:?}");
+        assert!(token.chunks >= 1);
+        let rid = ss.open_resume(&token).unwrap();
+        assert_eq!(rid, token.stream, "resumed under its original id");
+        let m = ss.metrics();
+        assert!(m.partial_bytes > 0, "restored carry hits the gauge immediately");
+        assert_eq!(m.streams_resumed, 1);
+        ss.append(rid, &vals[token.values as usize..]).unwrap();
+        ss.close(rid).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(60)).expect("finishes");
+        assert_eq!(r.sum.to_bits(), want.to_bits(), "{engine}: restored state sums right");
+        assert_eq!(r.values, vals.len() as u64);
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.partial_bytes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+/// Newest `snap-*.log` in a durability dir.
+fn newest_log(dir: &Path) -> PathBuf {
+    let mut logs: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "log"))
+        .collect();
+    logs.sort();
+    logs.pop().expect("a snapshot log exists")
+}
+
+/// A torn final frame (crash debris) is dropped quietly; recovery lands
+/// on the previous complete snapshot.
+#[test]
+fn torn_log_tail_recovers_to_the_previous_snapshot() {
+    let dir = tmp_dir("torn");
+    let mut ss = SessionService::start(durable_cfg("native", 1, &dir)).unwrap();
+    let id = ss.open().unwrap();
+    ss.append(id, &[1.0; 4]).unwrap();
+    assert!(ss.snapshot_now());
+    drop(ss);
+    // Crash debris: a frame header cut off mid-way.
+    let mut f = fs::OpenOptions::new().append(true).open(newest_log(&dir)).unwrap();
+    f.write_all(b"JPWC\x01\x10\xff\xff").unwrap();
+    drop(f);
+    let (mut ss, report) = SessionService::recover_from(durable_cfg("native", 1, &dir)).unwrap();
+    assert!(report.torn_tail, "torn tail reported");
+    assert!(!report.corrupt, "...but not as corruption");
+    let token = report.tokens.first().expect("stream recovered").clone();
+    assert_eq!(token.values, 4, "the 4-value tail was durable");
+    let (sum, values) = resume_and_finish(&mut ss, &report.tokens, &[1.0; 4]);
+    assert_eq!(sum, 4.0);
+    assert_eq!(values, 4);
+    ss.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Mid-log corruption falls back to the newest intact snapshot; when
+/// nothing at all is recoverable, recovery fails with a typed codec
+/// error — never a panic, never a wrong sum.
+#[test]
+fn corruption_falls_back_or_fails_typed_never_wrong() {
+    // Two snapshots, second one corrupted → fall back to the first.
+    let dir = tmp_dir("corrupt-fallback");
+    let mut ss = SessionService::start(durable_cfg("native", 1, &dir)).unwrap();
+    let id = ss.open().unwrap();
+    ss.append(id, &[2.0; 4]).unwrap();
+    assert!(ss.snapshot_now());
+    ss.append(id, &[3.0; 4]).unwrap();
+    assert!(ss.snapshot_now());
+    drop(ss);
+    let path = newest_log(&dir);
+    let mut bytes = fs::read(&path).unwrap();
+    let len0 = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let second = 14 + len0; // second frame's offset (header is 10 + crc 4)
+    bytes[second + 20] ^= 0x5A; // payload interior: CRC must catch it
+    fs::write(&path, &bytes).unwrap();
+    let (mut ss, report) = SessionService::recover_from(durable_cfg("native", 1, &dir)).unwrap();
+    assert!(report.corrupt, "mid-log damage is reported loudly");
+    let token = report.tokens.first().expect("fallback snapshot").clone();
+    assert_eq!(token.values, 4, "recovered the *first* snapshot's horizon");
+    // Replaying from the fallback horizon still reaches the right sum.
+    let full: Vec<f32> = [[2.0f32; 4], [3.0; 4]].concat();
+    let (sum, values) = resume_and_finish(&mut ss, &report.tokens, &full);
+    assert_eq!(sum, 20.0);
+    assert_eq!(values, 8);
+    ss.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+
+    // A history whose only snapshot is corrupt → typed error.
+    let dir = tmp_dir("corrupt-all");
+    let mut ss = SessionService::start(durable_cfg("native", 1, &dir)).unwrap();
+    let id = ss.open().unwrap();
+    ss.append(id, &[1.0; 4]).unwrap();
+    assert!(ss.snapshot_now());
+    drop(ss);
+    let path = newest_log(&dir);
+    let mut bytes = fs::read(&path).unwrap();
+    bytes[20] ^= 0x5A;
+    fs::write(&path, &bytes).unwrap();
+    let err = SessionService::recover_from(durable_cfg("native", 1, &dir))
+        .expect_err("nothing recoverable");
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<CodecError>().is_some()),
+        "typed codec error in the chain: {err:#}"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Injected IO errors: bounded retries absorb transient faults;
+/// exhaustion degrades to in-memory mode (counted, not panicked) and the
+/// session API keeps working.
+#[test]
+fn io_errors_degrade_to_in_memory_without_losing_the_stream() {
+    let dir = tmp_dir("degrade");
+    let mut cfg = durable_cfg("native", 1, &dir);
+    cfg.durability.as_mut().unwrap().io_retries = 2;
+    let faults = cfg.durability.as_ref().unwrap().faults.clone();
+    let mut ss = SessionService::start(cfg).unwrap();
+    let id = ss.open().unwrap();
+    ss.append(id, &[1.0; 10]).unwrap();
+    // Transient: one injected failure, absorbed with one retry.
+    faults.fail_io(1);
+    assert!(ss.snapshot_now());
+    let m = ss.metrics();
+    assert_eq!((m.snapshot_retries, m.snapshots_written), (1, 1));
+    assert!(ss.durability_alive());
+    // Persistent: retries exhaust → degraded, never panics.
+    faults.fail_io(1_000);
+    assert!(!ss.snapshot_now());
+    let m = ss.metrics();
+    assert_eq!(m.snapshot_failures, 1);
+    assert_eq!(m.snapshot_retries, 1 + 2, "io_retries attempts with backoff");
+    assert!(!ss.durability_alive());
+    assert!(!ss.snapshot_now(), "stays degraded");
+    assert_eq!(ss.metrics().snapshot_failures, 1, "no repeated failure spam");
+    // The session API is unaffected by the degradation.
+    ss.append(id, &[1.0; 6]).unwrap();
+    ss.close(id).unwrap();
+    let r = ss.recv_timeout(Duration::from_secs(60)).expect("finishes in-memory");
+    assert_eq!(r.sum, 16.0);
+    let (sm, _) = ss.shutdown();
+    assert_eq!(sm.partial_bytes, 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Rotation compacts history to a single generation and the compacted
+/// log stays recoverable.
+#[test]
+fn rotation_compacts_history_and_stays_recoverable() {
+    let dir = tmp_dir("rotate-svc");
+    let mut cfg = durable_cfg("native", 1, &dir);
+    cfg.durability.as_mut().unwrap().max_log_bytes = 1; // rotate per append
+    let mut ss = SessionService::start(cfg).unwrap();
+    let id = ss.open().unwrap();
+    let all = vec![1.0f32; 24];
+    for frag in all.chunks(4) {
+        ss.append(id, frag).unwrap();
+        assert!(ss.snapshot_now());
+    }
+    assert!(ss.metrics().log_rotations >= 5, "{:?}", ss.metrics().log_rotations);
+    drop(ss);
+    let files = fs::read_dir(&dir).unwrap().flatten().count();
+    assert_eq!(files, 1, "older generations compacted away");
+    let (mut ss, report) = SessionService::recover_from(durable_cfg("native", 1, &dir)).unwrap();
+    let (sum, values) = resume_and_finish(&mut ss, &report.tokens, &all);
+    assert_eq!(sum, 24.0);
+    assert_eq!(values, 24);
+    ss.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Eviction racing recovery: an evicted stream replays as a tombstone
+/// (typed `Evicted` survives the restart), a live stream resumes, and
+/// post-restart TTL churn — evictions with chunks in flight, late
+/// partials draining — works exactly as it does without a crash.
+#[test]
+fn evicted_streams_replay_as_tombstones_and_ttl_churn_survives_restart() {
+    let dir = tmp_dir("tombstone");
+    let ttl = Duration::from_millis(300);
+    let mut cfg = durable_cfg("native", 2, &dir);
+    cfg.idle_ttl = ttl;
+    let mut ss = SessionService::start(cfg).unwrap();
+    let victim = ss.open().unwrap();
+    ss.append(victim, &[1.0; 40]).unwrap(); // chunks in flight
+    let live = ss.open().unwrap();
+    ss.append(live, &[2.0; 8]).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    ss.append(live, &[3.0]).unwrap(); // keep `live` fresh
+    std::thread::sleep(Duration::from_millis(200));
+    ss.sweep_idle(); // victim: 400 ms idle > TTL; live: 200 ms — alive
+    assert_eq!(ss.append(victim, &[1.0]), Err(SessionError::Evicted(victim)));
+    assert_eq!(ss.open_streams(), 1);
+    assert!(ss.snapshot_now(), "snapshot carries the tombstone + the live stream");
+    drop(ss);
+
+    let mut cfg = durable_cfg("native", 2, &dir);
+    cfg.idle_ttl = ttl;
+    let (mut ss, report) = SessionService::recover_from(cfg).unwrap();
+    assert_eq!(report.tombstones, 1);
+    assert_eq!(report.tokens.len(), 1, "only the live stream is resumable");
+    // The eviction stays typed across the restart (a slow box may have
+    // aged the tombstone out through its second TTL — Unknown then).
+    match ss.append(victim, &[1.0]) {
+        Err(SessionError::Evicted(got)) => assert_eq!(got, victim),
+        Err(SessionError::Unknown(got)) => assert_eq!(got, victim),
+        other => panic!("touch after tombstone replay: {other:?}"),
+    }
+    let token = &report.tokens[0];
+    assert_eq!(token.stream, live);
+    assert_eq!(token.values, 9, "live tail (8 + 1 values) was durable");
+    let rid = ss.open_resume(token).unwrap();
+    ss.append(rid, &[4.0; 4]).unwrap();
+    ss.close(rid).unwrap();
+    let r = ss.recv_timeout(Duration::from_secs(60)).expect("live stream finishes");
+    assert_eq!(r.stream, live);
+    assert_eq!(r.sum, 2.0 * 8.0 + 3.0 + 4.0 * 4.0);
+    assert_eq!(r.values, 13);
+    // Post-restart churn: evict with chunks in flight, drain late
+    // partials, and the books still balance.
+    let churn = ss.open().unwrap();
+    ss.append(churn, &[1.0; 40]).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    ss.sweep_idle();
+    assert_eq!(ss.close(churn), Err(SessionError::Evicted(churn)));
+    assert!(ss.recv_timeout(Duration::from_millis(100)).is_none());
+    let (sm, _) = ss.shutdown();
+    assert!(sm.evictions >= 2, "pre-crash eviction persisted + post-restart one");
+    assert_eq!(sm.streams_resumed, 1);
+    assert_eq!(sm.partial_bytes, 0, "carry fully released through crash + churn");
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -46,6 +46,7 @@ fn session_cfg(engine: &str, shards: usize) -> SessionConfig {
         table_shards: 4,
         max_open_streams: 1024,
         idle_ttl: Duration::from_secs(120),
+        durability: None,
     }
 }
 
@@ -200,6 +201,7 @@ fn exact_cancellation_across_the_fragment_boundary_is_correctly_rounded() {
             table_shards: 2,
             max_open_streams: 8,
             idle_ttl: Duration::from_secs(60),
+            durability: None,
         })
         .unwrap();
         let id = ss.open().unwrap();
