@@ -1,0 +1,116 @@
+//! Bench: distributed-tier scale-out — one accumulation tree per
+//! iteration (root + L leaves over real loopback TCP), timing the full
+//! life cycle: serve, stream every leaf's values, push aggregates up,
+//! and read the root's coverage report. Leaves ∈ {1, 2, 4} with the
+//! `exact` engine, so doubling leaves should (setup aside) scale values/s
+//! until the root merge serializes — the gap is the network tax relative
+//! to `stream_sessions`' in-process numbers.
+//!
+//! Correctness asserted while timing: full coverage and the bit-identical
+//! i128 reference sum at the root, every iteration. Results land in
+//! `BENCH_7.json` (benchkit::JsonSink); CI archives them in `bench-json`.
+//!
+//! Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::ServiceConfig;
+use jugglepac::engine::EngineConfig;
+use jugglepac::net::{
+    leaf_values, ClientConfig, Dialer, NetClient, NetServer, NetServerConfig, TcpDialer,
+    TreeConfig,
+};
+use jugglepac::session::SessionConfig;
+use jugglepac::testkit::exact_i128_reference;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn session() -> SessionConfig {
+    SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::named("exact", 8, 64),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// One full tree life cycle; returns nothing, asserts exactness.
+fn run_tree(leaves: usize, per_leaf: usize, want_bits: u32) {
+    let root = NetServer::start(NetServerConfig {
+        session: session(),
+        tree: Some(TreeConfig {
+            node_id: 1000,
+            expected_children: leaves as u32,
+            expected_leaves: leaves as u32,
+            ..TreeConfig::default()
+        }),
+        ..NetServerConfig::default()
+    })
+    .expect("root starts");
+    let root_addr = root.local_addr().to_string();
+
+    let mut nodes = Vec::new();
+    for id in 1..=leaves as u64 {
+        let leaf = NetServer::start(NetServerConfig {
+            session: session(),
+            tree: Some(TreeConfig {
+                parent: Some(Arc::new(TcpDialer::new(
+                    root_addr.clone(),
+                    Duration::from_secs(2),
+                )) as Arc<dyn Dialer>),
+                ..TreeConfig::leaf(id)
+            }),
+            ..NetServerConfig::default()
+        })
+        .expect("leaf starts");
+        nodes.push(leaf);
+    }
+
+    for (i, leaf) in nodes.iter().enumerate() {
+        let vals = leaf_values(i as u64 + 1, per_leaf);
+        let mut client =
+            NetClient::connect_tcp(leaf.local_addr().to_string(), ClientConfig::default());
+        let key = client.open().expect("open");
+        for chunk in vals.chunks(64) {
+            client.append(key, chunk).expect("append");
+        }
+        let r = client.close(key).expect("close");
+        assert_eq!(r.values, vals.len() as u64);
+        client.flush_up().expect("flush");
+    }
+
+    let mut oracle = NetClient::connect_tcp(root_addr, ClientConfig::default());
+    let report = oracle.report(Duration::from_secs(30)).expect("report");
+    assert!(!report.degraded, "full coverage while timing: {report:?}");
+    assert_eq!(report.values, (leaves * per_leaf) as u64);
+    assert_eq!(report.sum.to_bits(), want_bits, "root sum must stay exact");
+
+    for leaf in nodes {
+        leaf.shutdown();
+    }
+    root.shutdown();
+}
+
+fn main() {
+    let per_leaf = if smoke() { 400 } else { 4000 };
+    let mut sink = JsonSink::new();
+    println!("=== net tree scale-out: exact engine, {per_leaf} values/leaf ===");
+
+    for leaves in [1usize, 2, 4] {
+        let mut all = Vec::new();
+        for id in 1..=leaves as u64 {
+            all.extend_from_slice(&leaf_values(id, per_leaf));
+        }
+        let want_bits = exact_i128_reference(&all).to_bits();
+        let values = (leaves * per_leaf) as u64;
+        let name = format!("net tree exact leaves={leaves}: {values} values");
+        let d = bench(&name, env_iters(3), || run_tree(leaves, per_leaf, want_bits));
+        report_throughput("values", values, "values", d);
+        sink.record_throughput(&name, values, d);
+    }
+
+    if let Err(e) = sink.write(&json_path("BENCH_7.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -20,9 +20,11 @@
 //!   superaccumulator, with a carryable partial-state surface), [`session`]
 //!   (streaming accumulation sessions: open-ended datasets appended
 //!   fragment by fragment, with engine-aware partial-state carry, durable
-//!   via the [`wire`] codec + snapshot log in [`session::durable`]), and
-//!   [`runtime`] (PJRT loader executing the AOT-compiled JAX/Pallas
-//!   reduction kernels from `artifacts/`).
+//!   via the [`wire`] codec + snapshot log in [`session::durable`]), [`net`]
+//!   (the distributed tier: a wire-framed TCP front end over sessions, a
+//!   tree topology merging un-rounded partials at every hop, and a network
+//!   chaos harness), and [`runtime`] (PJRT loader executing the
+//!   AOT-compiled JAX/Pallas reduction kernels from `artifacts/`).
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -37,6 +39,7 @@ pub mod engine;
 pub mod fp;
 pub mod intac;
 pub mod jugglepac;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod session;

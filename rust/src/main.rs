@@ -61,11 +61,18 @@ USAGE: jugglepac <subcommand> [options]
              [--shards K] [--steal on|off] [--stall0 US] [--zipf]
              [--seed X] [--latency L] [--registers R] [--artifact NAME]
              [--streaming]  (run the session subsystem instead — see stream)
+             [--listen ADDR]  (network mode: serve the wire protocol; with)
+             [--parent ADDR] [--node-id N] [--fan-in K] [--expected-leaves L]
+             [--leaf-values N] [--report-wait-ms W] [--run-ms T]
+             [--durable-dir PATH]  (tree nodes push un-rounded partials up;
+             JUGGLEPAC_NET_FAULT=<kind>[:<p>] injects network chaos)
   stream     [--streams S] [--max-len N] [--fragment F] [--concurrent W]
              [--engine NAME] [--batch B] [--n N] [--shards K]
              [--max-open M] [--ttl-ms T] [--seed X]
              [--durable-dir PATH] [--snapshot-ms T] [--fsync always|never]
              [--resume]  (replay the snapshot log in PATH and resume)
+             [--exit-after-ms T]  (SIGINT-ish: stop mid-script, drain +
+             checkpoint, exit — acknowledged appends survive)
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
@@ -228,6 +235,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use jugglepac::coordinator::{BurstSlab, Service, ServiceConfig};
     use jugglepac::util::Xoshiro256;
     use jugglepac::workload::ZipfTable;
+    if args.get("listen").is_some() {
+        // Network mode: serve the wire protocol (optionally as a tree
+        // node) instead of the in-process burst demo.
+        return cmd_serve_net(args);
+    }
     if args.flag("streaming") {
         // The session subsystem behind the same engine/shard knobs.
         return cmd_stream(args);
@@ -321,10 +333,166 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --listen ADDR`: the distributed tier. Serves the wire protocol
+/// over TCP; with `--parent` the node pushes its un-rounded aggregate up
+/// the tree, with `--fan-in` it expects that many children to push into
+/// it. `--leaf-values N` drives N generated values through a loopback
+/// client (printing a `LEAF_RESULT` line); `--report-wait-ms W` asks the
+/// node for its tree report, waiting up to W ms for full coverage
+/// (printing a `TREE_RESULT` line). `JUGGLEPAC_NET_FAULT=<kind>[:<p>]`
+/// wraps the data-path dialers in the chaos harness.
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    use jugglepac::coordinator::ServiceConfig;
+    use jugglepac::net::{
+        ChaosConfig, ChaosDialer, ClientConfig, Dialer, NetClient, NetServer, NetServerConfig,
+        TcpDialer, TreeConfig,
+    };
+    use jugglepac::session::{DurabilityConfig, FsyncPolicy, SessionConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let listen = args.get("listen").expect("caller checked --listen").to_string();
+    let engine = jugglepac::engine::engine_config_from_args(args)?;
+    let shards = args.get_usize("shards", 1)?.max(1);
+    let node_id = args.get_u64("node-id", 1)?;
+    let fan_in = args.get_usize("fan-in", 0)? as u32;
+    let expected_leaves = args.get_usize("expected-leaves", fan_in.max(1) as usize)? as u32;
+    let chaos = ChaosConfig::from_env();
+    let wrap = |d: Arc<dyn Dialer>| -> Arc<dyn Dialer> {
+        if chaos.kind.is_some() {
+            Arc::new(ChaosDialer::new(d, chaos.clone()))
+        } else {
+            d
+        }
+    };
+    let client_cfg = ClientConfig {
+        retries: 12,
+        request_deadline: Duration::from_secs(8),
+        ..ClientConfig::default()
+    };
+    let parent: Option<Arc<dyn Dialer>> = args.get("parent").map(|addr| {
+        wrap(Arc::new(TcpDialer::new(addr.to_string(), Duration::from_secs(2))) as Arc<dyn Dialer>)
+    });
+    let durability = match args.get("durable-dir") {
+        Some(dir) => {
+            let mut d = DurabilityConfig::at(dir);
+            d.snapshot_interval = Duration::from_millis(args.get_u64("snapshot-ms", 100)?);
+            d.fsync = match args.get_or("fsync", "always") {
+                "always" => FsyncPolicy::Always,
+                "never" => FsyncPolicy::Never,
+                other => bail!("--fsync must be always|never, got {other:?}"),
+            };
+            Some(d)
+        }
+        None => None,
+    };
+    let cfg = NetServerConfig {
+        listen,
+        session: SessionConfig {
+            service: ServiceConfig {
+                engine,
+                shards,
+                ..Default::default()
+            },
+            max_open_streams: args.get_usize("max-open", 1024)?,
+            durability,
+            ..Default::default()
+        },
+        tree: Some(TreeConfig {
+            node_id,
+            parent,
+            client: client_cfg.clone(),
+            expected_children: fan_in,
+            expected_leaves,
+        }),
+        ..Default::default()
+    };
+    let server = NetServer::start(cfg)?;
+    // Line parsed by the multi-process harness — keep the format stable.
+    println!("listening on {}", server.local_addr());
+
+    let leaf_n = args.get_usize("leaf-values", 0)?;
+    if leaf_n > 0 {
+        let seed = args.get_u64("seed", node_id)?;
+        let vals = jugglepac::net::leaf_values(seed, leaf_n);
+        let dialer = wrap(Arc::new(TcpDialer::new(
+            server.local_addr().to_string(),
+            Duration::from_secs(2),
+        )) as Arc<dyn Dialer>);
+        let mut client = NetClient::new(
+            dialer,
+            ClientConfig {
+                seed: seed ^ 0x50C1_A1ED,
+                ..client_cfg.clone()
+            },
+        );
+        let drive = |client: &mut NetClient| -> Result<
+            jugglepac::net::RemoteResult,
+            jugglepac::net::NetError,
+        > {
+            let key = client.open()?;
+            for chunk in vals.chunks(113) {
+                client.append(key, chunk)?;
+            }
+            let r = client.close(key)?;
+            if let Err(e) = client.flush_up() {
+                // The uplink pump keeps retrying in the background; an
+                // explicit flush failure is reported, not fatal.
+                eprintln!("flush: {e}");
+            }
+            Ok(r)
+        };
+        match drive(&mut client) {
+            Ok(r) => println!(
+                "LEAF_RESULT node={node_id} values={} sum_bits=0x{:08x}",
+                r.values,
+                r.sum.to_bits()
+            ),
+            Err(e) => println!("LEAF_ERROR node={node_id} {e}"),
+        }
+    }
+
+    let report_wait = args.get_u64("report-wait-ms", 0)?;
+    if report_wait > 0 {
+        // The report client is the harness's oracle: keep it on a plain
+        // (un-chaosed) dialer so fault injection exercises the data path
+        // without blinding the observer.
+        let mut client = NetClient::connect_tcp(
+            server.local_addr().to_string(),
+            ClientConfig {
+                request_deadline: Duration::from_millis(report_wait) + Duration::from_secs(5),
+                ..ClientConfig::default()
+            },
+        );
+        match client.report(Duration::from_millis(report_wait)) {
+            Ok(r) => println!(
+                "TREE_RESULT children={}/{} leaves={}/{} values={} degraded={} sum_bits=0x{:08x}",
+                r.contributed_children,
+                r.expected_children,
+                r.leaves,
+                r.expected_leaves,
+                r.values,
+                u8::from(r.degraded),
+                r.sum.to_bits()
+            ),
+            Err(e) => println!("TREE_ERROR {e}"),
+        }
+    }
+
+    let run_ms = args.get_u64("run-ms", 0)?;
+    if run_ms > 0 {
+        std::thread::sleep(Duration::from_millis(run_ms));
+    }
+    let summary = server.shutdown();
+    println!("{}", summary.net.report());
+    println!("drained: {}", summary.drained);
+    Ok(())
+}
+
 fn cmd_stream(args: &Args) -> Result<()> {
     use jugglepac::coordinator::ServiceConfig;
-    use jugglepac::session::{DurabilityConfig, FsyncPolicy, SessionConfig, SessionService};
-    use jugglepac::workload::{StreamMix, StreamMixConfig, StreamValueGen};
+    use jugglepac::session::{DurabilityConfig, FsyncPolicy, SessionConfig, SessionService, StreamId};
+    use jugglepac::workload::{StreamEvent, StreamMix, StreamMixConfig, StreamValueGen};
     let streams = args.get_usize("streams", 512)?;
     let max_len = args.get_usize("max-len", 700)?;
     let shards = args.get_usize("shards", 1)?.max(1);
@@ -375,6 +543,46 @@ fn cmd_stream(args: &Args) -> Result<()> {
     }
     let mut ss = SessionService::start(cfg)?;
     let t0 = std::time::Instant::now();
+    let exit_after = args.get_u64("exit-after-ms", 0)?;
+    if exit_after > 0 {
+        // SIGINT-ish exit: stop mid-script at the deadline, then drain
+        // in-flight chunks and write a final checkpoint so everything
+        // the session acknowledged survives the process ending.
+        let deadline = t0 + std::time::Duration::from_millis(exit_after);
+        let mut ids: Vec<Option<StreamId>> = vec![None; mix.values.len()];
+        let mut executed = 0usize;
+        for ev in &mix.events {
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+            match *ev {
+                StreamEvent::Open { stream } => ids[stream] = Some(ss.open()?),
+                StreamEvent::Append { stream, from, to } => {
+                    let id = ids[stream].expect("append before open in script");
+                    ss.append(id, &mix.values[stream][from..to])?;
+                }
+                StreamEvent::Close { stream } => {
+                    let id = ids[stream].expect("close before open in script");
+                    ss.close(id)?;
+                }
+            }
+            executed += 1;
+        }
+        let drained = ss.drain_and_checkpoint(std::time::Duration::from_secs(30));
+        let mut delivered = 0usize;
+        while ss.recv_timeout(std::time::Duration::ZERO).is_some() {
+            delivered += 1;
+        }
+        let wall = t0.elapsed();
+        let (sm, _) = ss.shutdown();
+        println!(
+            "interrupted after {executed}/{} events: checkpoint={}, {delivered} result(s) delivered",
+            mix.events.len(),
+            if drained { "written" } else { "skipped" },
+        );
+        println!("{}", sm.report(wall));
+        return Ok(());
+    }
     mix.replay(&mut ss)?;
     let results = ss.flush(std::time::Duration::from_secs(120));
     let wall = t0.elapsed();

@@ -1,0 +1,323 @@
+//! `ChaosTransport`: deterministic network fault injection at the
+//! [`Conn`]/[`Dialer`] seam — the PR 6 `KillPoint` idea applied to the
+//! wire.
+//!
+//! Faults are injected on the *send* side, frame-granular, because that
+//! is where real networks hurt a request/reply protocol: a request that
+//! never arrives ([`FaultKind::Drop`]), arrives late
+//! ([`FaultKind::Delay`]), arrives twice ([`FaultKind::Duplicate`]),
+//! arrives torn ([`FaultKind::Truncate`]), arrives damaged
+//! ([`FaultKind::Corrupt`]), or — the nastiest — **arrives fine while the
+//! reply is lost** ([`FaultKind::Stall`]: the send succeeds, then the
+//! wrapper severs the connection before the reply can be read). `Stall`
+//! is the case the idempotent-seq design exists for: the server applied
+//! the APPEND, the client never saw the ACK, and the retry must not
+//! double-count.
+//!
+//! Determinism: each connection derives its RNG from `seed ^ connection
+//! index`, so a failing chaos test reproduces from its printed seed alone
+//! — same discipline as the session crash harness.
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::frame::{Conn, Dialer};
+use crate::util::rng::Xoshiro256;
+
+/// One injectable network failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The frame silently never arrives.
+    Drop,
+    /// The frame arrives after an extra delay.
+    Delay,
+    /// The frame arrives twice back to back.
+    Duplicate,
+    /// Half the frame arrives, then the connection is severed.
+    Truncate,
+    /// One random byte of the frame is flipped in flight.
+    Corrupt,
+    /// The frame arrives intact, but the connection stalls before the
+    /// reply — the dropped-ACK case.
+    Stall,
+}
+
+/// Every fault kind, for test matrices.
+pub const ALL_FAULTS: [FaultKind; 6] = [
+    FaultKind::Drop,
+    FaultKind::Delay,
+    FaultKind::Duplicate,
+    FaultKind::Truncate,
+    FaultKind::Corrupt,
+    FaultKind::Stall,
+];
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Duplicate => "duplicate",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Stall => "stall",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::str::FromStr for FaultKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "drop" => Ok(FaultKind::Drop),
+            "delay" => Ok(FaultKind::Delay),
+            "duplicate" => Ok(FaultKind::Duplicate),
+            "truncate" => Ok(FaultKind::Truncate),
+            "corrupt" => Ok(FaultKind::Corrupt),
+            "stall" => Ok(FaultKind::Stall),
+            other => Err(format!(
+                "unknown fault kind {other:?} (want drop|delay|duplicate|truncate|corrupt|stall)"
+            )),
+        }
+    }
+}
+
+/// Chaos configuration: which fault, how often, how hard.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// The fault to inject; `None` makes the wrapper a pure pass-through.
+    pub kind: Option<FaultKind>,
+    /// Per-frame injection probability in `[0, 1]`.
+    pub p: f64,
+    /// Extra latency for [`FaultKind::Delay`].
+    pub delay: Duration,
+    /// RNG seed; printed by tests for reproduction.
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            kind: None,
+            p: 0.25,
+            delay: Duration::from_millis(20),
+            seed: 0xC4A0_5,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Read `JUGGLEPAC_NET_FAULT=<kind>[:<p>]` (e.g. `drop`, `stall:0.4`)
+    /// and `JUGGLEPAC_NET_FAULT_SEED` — the CI chaos matrix's knobs.
+    /// Unset/empty → no chaos.
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Ok(spec) = std::env::var("JUGGLEPAC_NET_FAULT") {
+            let spec = spec.trim();
+            if !spec.is_empty() && spec != "none" {
+                let (kind, p) = match spec.split_once(':') {
+                    Some((k, p)) => (k, p.parse::<f64>().ok()),
+                    None => (spec, None),
+                };
+                match kind.parse::<FaultKind>() {
+                    Ok(k) => {
+                        cfg.kind = Some(k);
+                        if let Some(p) = p {
+                            cfg.p = p.clamp(0.0, 1.0);
+                        }
+                    }
+                    Err(e) => panic!("JUGGLEPAC_NET_FAULT: {e}"),
+                }
+            }
+        }
+        if let Ok(seed) = std::env::var("JUGGLEPAC_NET_FAULT_SEED") {
+            if let Ok(seed) = seed.trim().parse::<u64>() {
+                cfg.seed = seed;
+            }
+        }
+        cfg
+    }
+}
+
+/// Counters a chaos run reports — tests assert faults actually fired
+/// (a chaos test that injected nothing proves nothing).
+#[derive(Default)]
+pub struct ChaosStats {
+    injected: AtomicU64,
+    conns: AtomicU64,
+}
+
+impl ChaosStats {
+    /// Frames a fault was injected into.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Connections dialed through the chaos wrapper.
+    pub fn conns(&self) -> u64 {
+        self.conns.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`Dialer`] that wraps every dialed connection in fault injection.
+pub struct ChaosDialer {
+    inner: Arc<dyn Dialer>,
+    cfg: ChaosConfig,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosDialer {
+    pub fn new(inner: Arc<dyn Dialer>, cfg: ChaosConfig) -> Self {
+        Self {
+            inner,
+            cfg,
+            stats: Arc::new(ChaosStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ChaosStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl Dialer for ChaosDialer {
+    fn dial(&self) -> io::Result<Box<dyn Conn>> {
+        let conn = self.inner.dial()?;
+        let idx = self.stats.conns.fetch_add(1, Ordering::Relaxed);
+        Ok(Box::new(ChaosConn {
+            inner: conn,
+            cfg: self.cfg.clone(),
+            rng: Xoshiro256::seeded(self.cfg.seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            stats: Arc::clone(&self.stats),
+            severed: false,
+        }))
+    }
+
+    fn addr(&self) -> String {
+        self.inner.addr()
+    }
+}
+
+struct ChaosConn {
+    inner: Box<dyn Conn>,
+    cfg: ChaosConfig,
+    rng: Xoshiro256,
+    stats: Arc<ChaosStats>,
+    /// A Truncate/Stall leaves the byte stream unusable; refuse further
+    /// traffic so the client is forced down its reconnect path.
+    severed: bool,
+}
+
+impl ChaosConn {
+    fn sever(&mut self, detail: &'static str) -> io::Error {
+        self.severed = true;
+        self.inner.shutdown();
+        io::Error::new(io::ErrorKind::ConnectionReset, detail)
+    }
+}
+
+impl Conn for ChaosConn {
+    fn send(&mut self, frame: &[u8]) -> io::Result<()> {
+        if self.severed {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "chaos: connection previously severed",
+            ));
+        }
+        let inject = match self.cfg.kind {
+            Some(_) => self.rng.chance(self.cfg.p),
+            None => false,
+        };
+        if !inject {
+            return self.inner.send(frame);
+        }
+        self.stats.injected.fetch_add(1, Ordering::Relaxed);
+        match self.cfg.kind.expect("inject implies kind") {
+            FaultKind::Drop => Ok(()), // swallowed: peer never sees it
+            FaultKind::Delay => {
+                std::thread::sleep(self.cfg.delay);
+                self.inner.send(frame)
+            }
+            FaultKind::Duplicate => {
+                self.inner.send(frame)?;
+                self.inner.send(frame)
+            }
+            FaultKind::Truncate => {
+                let cut = frame.len() / 2;
+                let _ = self.inner.send(&frame[..cut]);
+                Err(self.sever("chaos: frame truncated mid-flight"))
+            }
+            FaultKind::Corrupt => {
+                let mut damaged = frame.to_vec();
+                let i = self.rng.next_below(damaged.len() as u64) as usize;
+                let bit = 1u8 << self.rng.next_below(8);
+                damaged[i] ^= bit;
+                self.inner.send(&damaged)
+            }
+            FaultKind::Stall => {
+                // Deliver the request intact, then sever before the reply
+                // can be read — the server applies it, the client times
+                // out: a dropped ACK.
+                self.inner.send(frame)?;
+                Err(self.sever("chaos: stalled after delivery (reply lost)"))
+            }
+        }
+    }
+
+    fn recv_some(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.severed {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "chaos: connection previously severed",
+            ));
+        }
+        self.inner.recv_some(buf)
+    }
+
+    fn set_read_deadline(&mut self, d: Duration) -> io::Result<()> {
+        self.inner.set_read_deadline(d)
+    }
+
+    fn set_write_deadline(&mut self, d: Duration) -> io::Result<()> {
+        self.inner.set_write_deadline(d)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+
+    fn peer(&self) -> String {
+        format!("chaos({})", self.inner.peer())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn fault_kinds_parse_and_display_round_trip() {
+        for kind in ALL_FAULTS {
+            assert_eq!(FaultKind::from_str(&kind.to_string()).unwrap(), kind);
+        }
+        assert!(FaultKind::from_str("explode").is_err());
+    }
+
+    #[test]
+    fn env_spec_parses_kind_and_probability() {
+        // Parse the spec format directly (env vars are process-global;
+        // tests must not set them).
+        let mut cfg = ChaosConfig::default();
+        let spec = "stall:0.4";
+        let (kind, p) = spec.split_once(':').unwrap();
+        cfg.kind = Some(kind.parse().unwrap());
+        cfg.p = p.parse::<f64>().unwrap();
+        assert_eq!(cfg.kind, Some(FaultKind::Stall));
+        assert!((cfg.p - 0.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,507 @@
+//! The network client: bounded retries with jittered exponential
+//! backoff, per-request deadlines, and idempotent resubmission.
+//!
+//! The contract that makes retries safe is sequencing: every APPEND
+//! carries a per-stream `seq` that only advances when its ACK has been
+//! *seen by the client*. If the ACK is lost (the [`FaultKind::Stall`]
+//! case — server applied the append, reply vanished), the retry re-sends
+//! the same `seq` and the server re-acks without re-applying. A client
+//! crash between apply and ack therefore costs a retry, never a
+//! double-count. OPEN and CLOSE are idempotent by the same key (CLOSE
+//! replays its cached RESULT), so *every* request here may be resent
+//! blindly.
+//!
+//! Failure policy: transport errors and `ERR_BUSY` retry (with backoff +
+//! full jitter to decorrelate a thundering herd of leaves); every other
+//! server refusal is a semantic answer and surfaces immediately as
+//! [`NetError::Remote`]. Retries are bounded by both an attempt count
+//! and a wall-clock deadline — the client *always* returns within
+//! `request_deadline + request_timeout`, it never hangs on a dead server.
+//!
+//! [`FaultKind::Stall`]: crate::net::chaos::FaultKind::Stall
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::frame::{recv_frame, Conn, Dialer};
+use super::proto::{
+    Ack, Append, Close, Hello, Msg, Open, Push, ReportReq, TreeReport, DEFAULT_MAX_FRAME,
+    ERR_BUSY, ERR_MALFORMED, ERR_OVERSIZE, MIN_MAX_FRAME, NET_VERSION,
+};
+use crate::engine::PartialState;
+use crate::util::rng::Xoshiro256;
+use crate::wire::{CodecError, FrameReadError, FRAME_OVERHEAD};
+
+/// Typed client-side failure.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport-level failure (connect, send, recv, deadline).
+    Io { kind: io::ErrorKind, detail: String },
+    /// The server answered with a typed `ERROR` frame.
+    Remote { code: u8, detail: String },
+    /// The reply failed to decode.
+    Codec(CodecError),
+    /// Bounded retries ran out; `last` is the final attempt's failure.
+    RetriesExhausted { attempts: u32, last: Box<NetError> },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io { kind, detail } => write!(f, "transport error ({kind:?}): {detail}"),
+            NetError::Remote { code, detail } => {
+                write!(
+                    f,
+                    "server refused ({}): {detail}",
+                    super::proto::err_name(*code)
+                )
+            }
+            NetError::Codec(e) => write!(f, "reply decode failed: {e}"),
+            NetError::RetriesExhausted { attempts, last } => {
+                write!(f, "gave up after {attempts} attempts; last error: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl NetError {
+    fn io(e: io::Error) -> Self {
+        NetError::Io {
+            kind: e.kind(),
+            detail: e.to_string(),
+        }
+    }
+
+    /// The `ERROR` code if this is a typed server refusal (unwrapping
+    /// a retry wrapper if present).
+    pub fn remote_code(&self) -> Option<u8> {
+        match self {
+            NetError::Remote { code, .. } => Some(*code),
+            NetError::RetriesExhausted { last, .. } => last.remote_code(),
+            _ => None,
+        }
+    }
+
+    fn retryable(&self) -> bool {
+        match self {
+            NetError::Io { .. } => true,
+            // BUSY is explicit backpressure: the server asked us to come
+            // back later. MALFORMED/OVERSIZE can mean the *request
+            // envelope* was damaged in flight (chaos, bit rot — a flipped
+            // length bit reads as oversize) — resubmission is idempotent,
+            // so a bounded retry is safe either way.
+            NetError::Remote { code, .. } => {
+                matches!(*code, ERR_BUSY | ERR_MALFORMED | ERR_OVERSIZE)
+            }
+            // A damaged reply (chaos, bit rot) — reconnect and retry; the
+            // request itself is idempotent.
+            NetError::Codec(_) => true,
+            NetError::RetriesExhausted { .. } => false,
+        }
+    }
+}
+
+impl From<FrameReadError> for NetError {
+    fn from(e: FrameReadError) -> Self {
+        match e {
+            FrameReadError::Io(e) => NetError::io(e),
+            FrameReadError::Codec(e) => NetError::Codec(e),
+        }
+    }
+}
+
+/// Client knobs. Defaults suit a LAN tree; chaos tests crank `retries`.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Per-attempt I/O deadline (send + await reply).
+    pub request_timeout: Duration,
+    /// Overall wall-clock budget for one request including retries.
+    pub request_deadline: Duration,
+    /// Max retry attempts after the first (0 = try once).
+    pub retries: u32,
+    /// Backoff before retry 1; doubles per retry.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Jitter RNG seed (full jitter: each sleep uniform in [b/2, b]).
+    pub seed: u64,
+    /// Frame cap advertised in HELLO; effective cap is min of both sides.
+    pub max_frame: u32,
+    /// Version advertised in HELLO. Only tests change this — it is how
+    /// the version-negotiation reject path is exercised.
+    pub advertise_version: u8,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(2),
+            request_timeout: Duration::from_secs(2),
+            request_deadline: Duration::from_secs(10),
+            retries: 8,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(300),
+            seed: 0x0C11_E57,
+            max_frame: DEFAULT_MAX_FRAME,
+            advertise_version: NET_VERSION,
+        }
+    }
+}
+
+/// A finished stream as the server reported it.
+#[derive(Clone, Debug)]
+pub struct RemoteResult {
+    pub sum: f32,
+    pub values: u64,
+    pub fragments: u64,
+    /// The un-rounded carry state (exact limbs for the `exact` engine).
+    pub state: PartialState,
+}
+
+/// What reply frame a request is waiting for.
+enum Expect {
+    Ack { stream: u64, seq: u64 },
+    Result { stream: u64 },
+    Report,
+}
+
+enum Classified {
+    Match(Msg),
+    Stale,
+    Refused(NetError),
+}
+
+/// One logical connection to a server, with retry/backoff/idempotency
+/// built in. Single-owner (`&mut self`), like every driver in this
+/// stack.
+pub struct NetClient {
+    dialer: Arc<dyn Dialer>,
+    cfg: ClientConfig,
+    conn: Option<Box<dyn Conn>>,
+    /// Negotiated payload cap (min of both HELLOs), once connected.
+    negotiated: u32,
+    rng: Xoshiro256,
+    /// Per-stream next unacknowledged sequence number.
+    streams: HashMap<u64, u64>,
+}
+
+impl NetClient {
+    /// Lazy constructor — the first request dials and handshakes.
+    pub fn new(dialer: Arc<dyn Dialer>, cfg: ClientConfig) -> Self {
+        let rng = Xoshiro256::seeded(cfg.seed);
+        Self {
+            dialer,
+            cfg,
+            conn: None,
+            negotiated: 0,
+            rng,
+            streams: HashMap::new(),
+        }
+    }
+
+    /// Convenience: plain TCP to `addr`.
+    pub fn connect_tcp(addr: impl Into<String>, cfg: ClientConfig) -> Self {
+        let dialer = super::frame::TcpDialer::new(addr, cfg.connect_timeout);
+        Self::new(Arc::new(dialer), cfg)
+    }
+
+    /// Open a stream under a fresh client-chosen key.
+    pub fn open(&mut self) -> Result<u64, NetError> {
+        let key = self.rng.next_u64() | 1;
+        self.open_key(key)?;
+        Ok(key)
+    }
+
+    /// Open a stream under an explicit key (idempotent: re-opening an
+    /// already-open key just re-acks).
+    pub fn open_key(&mut self, key: u64) -> Result<(), NetError> {
+        let frame = Msg::Open(Open { stream: key }).encode_frame();
+        self.request(&frame, &Expect::Ack { stream: key, seq: 0 }, Duration::ZERO)?;
+        self.streams.entry(key).or_insert(0);
+        Ok(())
+    }
+
+    /// Append values, splitting into cap-sized fragments. Each fragment's
+    /// seq advances only once its ACK is seen, so a retry after a lost
+    /// ACK resends the same seq and the server deduplicates it.
+    pub fn append(&mut self, key: u64, values: &[f32]) -> Result<(), NetError> {
+        if !self.streams.contains_key(&key) {
+            self.open_key(key)?;
+        }
+        // APPEND payload overhead: stream u64 + seq u64 + count u32.
+        let cap = self.frame_cap().saturating_sub(FRAME_OVERHEAD as u32 + 20) as usize / 4;
+        let cap = cap.max(1);
+        let mut chunks: Vec<&[f32]> = values.chunks(cap).collect();
+        if chunks.is_empty() {
+            chunks.push(&[]); // an explicitly empty fragment still counts
+        }
+        for chunk in chunks {
+            let seq = *self.streams.get(&key).expect("opened above");
+            let frame = Msg::Append(Append {
+                stream: key,
+                seq,
+                values: chunk.to_vec(),
+            })
+            .encode_frame();
+            self.request(&frame, &Expect::Ack { stream: key, seq }, Duration::ZERO)?;
+            *self.streams.get_mut(&key).expect("opened above") = seq + 1;
+        }
+        Ok(())
+    }
+
+    /// Close the stream and fetch its result (idempotent: the server
+    /// replays a cached RESULT for a re-sent CLOSE).
+    pub fn close(&mut self, key: u64) -> Result<RemoteResult, NetError> {
+        let frame = Msg::Close(Close { stream: key }).encode_frame();
+        let msg = self.request(&frame, &Expect::Result { stream: key }, Duration::ZERO)?;
+        self.streams.remove(&key);
+        match msg {
+            Msg::Result(r) => Ok(RemoteResult {
+                sum: r.sum,
+                values: r.values,
+                fragments: r.fragments,
+                state: r.state,
+            }),
+            _ => unreachable!("Expect::Result only matches RESULT"),
+        }
+    }
+
+    /// Ask a tree node to aggregate its finished streams and push them to
+    /// its parent.
+    pub fn flush_up(&mut self) -> Result<(), NetError> {
+        let frame = Msg::Flush.encode_frame();
+        self.request(&frame, &Expect::Ack { stream: 0, seq: 0 }, Duration::ZERO)?;
+        Ok(())
+    }
+
+    /// Push an aggregate to a parent node (what a child's uplink sends;
+    /// deduplicated by `push.node` at the receiver).
+    pub fn push(&mut self, push: &Push) -> Result<(), NetError> {
+        let frame = Msg::Push(push.clone()).encode_frame();
+        self.request(
+            &frame,
+            &Expect::Ack {
+                stream: push.node,
+                seq: 0,
+            },
+            Duration::ZERO,
+        )?;
+        Ok(())
+    }
+
+    /// Fetch the node's coverage report, letting the server wait up to
+    /// `wait` for the tree to complete before answering.
+    pub fn report(&mut self, wait: Duration) -> Result<TreeReport, NetError> {
+        let wait_ms = wait.as_millis().min(u32::MAX as u128) as u32;
+        let frame = Msg::ReportReq(ReportReq { wait_ms }).encode_frame();
+        let msg = self.request(&frame, &Expect::Report, wait)?;
+        match msg {
+            Msg::Report(r) => Ok(r),
+            _ => unreachable!("Expect::Report only matches REPORT"),
+        }
+    }
+
+    /// Drop the connection (the next request redials). Used by tests to
+    /// force the reconnect path.
+    pub fn disconnect(&mut self) {
+        if let Some(mut c) = self.conn.take() {
+            c.shutdown();
+        }
+    }
+
+    fn frame_cap(&self) -> u32 {
+        if self.negotiated != 0 {
+            self.negotiated
+        } else {
+            self.cfg.max_frame
+        }
+    }
+
+    /// The retry loop: bounded attempts, jittered exponential backoff,
+    /// overall wall-clock deadline. `read_extra` widens the per-attempt
+    /// read deadline (REPORT waits server-side).
+    fn request(
+        &mut self,
+        frame: &[u8],
+        expect: &Expect,
+        read_extra: Duration,
+    ) -> Result<Msg, NetError> {
+        let deadline = Instant::now() + self.cfg.request_deadline;
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            match self.attempt(frame, expect, read_extra) {
+                Ok(msg) => return Ok(msg),
+                Err(e) if !e.retryable() => return Err(e),
+                Err(e) => {
+                    // The connection's reply stream is suspect; redial.
+                    self.disconnect();
+                    if attempts > self.cfg.retries || Instant::now() >= deadline {
+                        return Err(NetError::RetriesExhausted {
+                            attempts,
+                            last: Box::new(e),
+                        });
+                    }
+                    let shift = (attempts - 1).min(16);
+                    let base = self
+                        .cfg
+                        .backoff
+                        .saturating_mul(1u32 << shift)
+                        .min(self.cfg.max_backoff);
+                    // Full jitter in [base/2, base].
+                    let nanos = base.as_nanos().min(u64::MAX as u128) as u64;
+                    let jittered = nanos / 2 + self.rng.next_below(nanos / 2 + 1);
+                    let sleep = Duration::from_nanos(jittered)
+                        .min(deadline.saturating_duration_since(Instant::now()));
+                    std::thread::sleep(sleep);
+                }
+            }
+        }
+    }
+
+    fn attempt(
+        &mut self,
+        frame: &[u8],
+        expect: &Expect,
+        read_extra: Duration,
+    ) -> Result<Msg, NetError> {
+        self.ensure_conn()?;
+        let conn = self.conn.as_mut().expect("ensure_conn sets conn");
+        if !read_extra.is_zero() {
+            conn.set_read_deadline(self.cfg.request_timeout + read_extra)
+                .map_err(NetError::io)?;
+        }
+        let cap = self.negotiated;
+        let result = (|| {
+            conn.send(frame).map_err(NetError::io)?;
+            // Read until the matching reply; bounded skip of stale frames
+            // (a duplicated request produces a duplicated ACK).
+            let mut skipped = 0u32;
+            loop {
+                let (tag, payload) = recv_frame(conn.as_mut(), cap)?;
+                let msg = Msg::decode(tag, &payload).map_err(NetError::Codec)?;
+                match classify(msg, expect) {
+                    Classified::Match(m) => return Ok(m),
+                    Classified::Refused(e) => return Err(e),
+                    Classified::Stale => {
+                        skipped += 1;
+                        if skipped > 32 {
+                            return Err(NetError::Codec(CodecError::Malformed {
+                                what: "too many stale reply frames",
+                            }));
+                        }
+                    }
+                }
+            }
+        })();
+        if !read_extra.is_zero() {
+            if let Some(conn) = self.conn.as_mut() {
+                let _ = conn.set_read_deadline(self.cfg.request_timeout);
+            }
+        }
+        result
+    }
+
+    fn ensure_conn(&mut self) -> Result<(), NetError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut conn = self.dialer.dial().map_err(NetError::io)?;
+        conn.set_read_deadline(self.cfg.request_timeout)
+            .map_err(NetError::io)?;
+        conn.set_write_deadline(self.cfg.request_timeout)
+            .map_err(NetError::io)?;
+        let hello = Msg::Hello(Hello {
+            version: self.cfg.advertise_version,
+            max_frame: self.cfg.max_frame,
+        });
+        conn.send(&hello.encode_frame()).map_err(NetError::io)?;
+        let (tag, payload) = recv_frame(conn.as_mut(), self.cfg.max_frame)?;
+        match Msg::decode(tag, &payload).map_err(NetError::Codec)? {
+            Msg::Hello(h) => {
+                self.negotiated = h.max_frame.min(self.cfg.max_frame).max(MIN_MAX_FRAME);
+                self.conn = Some(conn);
+                Ok(())
+            }
+            Msg::Error(e) => Err(NetError::Remote {
+                code: e.code,
+                detail: e.detail,
+            }),
+            _ => Err(NetError::Codec(CodecError::Malformed {
+                what: "handshake reply was neither HELLO nor ERROR",
+            })),
+        }
+    }
+}
+
+fn classify(msg: Msg, expect: &Expect) -> Classified {
+    match (msg, expect) {
+        (Msg::Ack(Ack { stream, seq }), Expect::Ack { stream: s, seq: q }) => {
+            if stream == *s && seq == *q {
+                Classified::Match(Msg::Ack(Ack { stream, seq }))
+            } else {
+                Classified::Stale
+            }
+        }
+        (Msg::Result(r), Expect::Result { stream }) => {
+            if r.stream == *stream {
+                Classified::Match(Msg::Result(r))
+            } else {
+                Classified::Stale
+            }
+        }
+        (Msg::Report(r), Expect::Report) => Classified::Match(Msg::Report(r)),
+        (Msg::Error(e), _) => Classified::Refused(NetError::Remote {
+            code: e.code,
+            detail: e.detail,
+        }),
+        // An ACK while waiting for a RESULT (or vice versa) is a stale
+        // leftover of a duplicated earlier request — skip it.
+        _ => Classified::Stale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let cfg = ClientConfig::default();
+        // The shift arithmetic must not overflow for huge attempt counts.
+        let shift = (10_000u32 - 1).min(16);
+        let b = cfg.backoff.saturating_mul(1u32 << shift).min(cfg.max_backoff);
+        assert!(b <= cfg.max_backoff);
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(NetError::Io {
+            kind: io::ErrorKind::TimedOut,
+            detail: String::new()
+        }
+        .retryable());
+        assert!(NetError::Remote {
+            code: ERR_BUSY,
+            detail: String::new()
+        }
+        .retryable());
+        assert!(!NetError::Remote {
+            code: super::super::proto::ERR_AT_CAPACITY,
+            detail: String::new()
+        }
+        .retryable());
+        assert!(NetError::Codec(CodecError::Malformed { what: "x" }).retryable());
+        assert!(!NetError::RetriesExhausted {
+            attempts: 3,
+            last: Box::new(NetError::Codec(CodecError::Malformed { what: "x" }))
+        }
+        .retryable());
+    }
+}

@@ -1,0 +1,152 @@
+//! Network-tier observability counters — the numbers that distinguish
+//! "the tree is healthy" from every failure mode the chaos harness
+//! injects.
+//!
+//! Same discipline as [`crate::session::metrics`]: lock-free atomics
+//! bumped on the hot path, read via a coherent-enough [`snapshot`]
+//! (relaxed loads — counters, not invariants). A fault with no counter is
+//! a fault you can't see in production, so every refusal, duplicate, and
+//! damaged frame increments something here.
+//!
+//! [`snapshot`]: NetMetrics::snapshot
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one [`crate::net::NetServer`].
+#[derive(Default)]
+pub struct NetMetrics {
+    /// Connections accepted (post-handshake failures still count here).
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at the accept gate (connection cap).
+    pub conns_refused: AtomicU64,
+    /// HELLOs refused for a version this server does not speak.
+    pub bad_version: AtomicU64,
+    /// Frames received and decoded.
+    pub frames_in: AtomicU64,
+    /// Frames sent.
+    pub frames_out: AtomicU64,
+    /// Frames that failed envelope or payload decode (BadCrc, BadMagic,
+    /// Oversize, Malformed, …) — the corrupt/truncate chaos signature.
+    pub bad_frames: AtomicU64,
+    /// APPENDs re-acked without applying (seq already seen) — the
+    /// duplicate/stall chaos signature; every one of these is a
+    /// double-count that didn't happen.
+    pub dup_appends: AtomicU64,
+    /// PUSHes that replaced an earlier aggregate from the same node.
+    pub dup_pushes: AtomicU64,
+    /// OPENs refused by `max_open_streams` admission control.
+    pub at_capacity: AtomicU64,
+    /// Requests refused because the core queue was full (bounded
+    /// backpressure, never an unbounded queue).
+    pub busy_rejections: AtomicU64,
+    /// ERROR frames sent, all causes.
+    pub errors_out: AtomicU64,
+    /// PUSH frames accepted into the tree state.
+    pub pushes_in: AtomicU64,
+}
+
+macro_rules! bump {
+    ($($name:ident),+ $(,)?) => {
+        $(
+            #[doc = concat!("Increment `", stringify!($name), "`.")]
+            pub fn $name(&self) {
+                self.$name.fetch_add(1, Ordering::Relaxed);
+            }
+        )+
+    };
+}
+
+/// Increment helpers, one per counter (named after the field).
+impl NetMetrics {
+    bump!(
+        conns_accepted,
+        conns_refused,
+        bad_version,
+        frames_in,
+        frames_out,
+        bad_frames,
+        dup_appends,
+        dup_pushes,
+        at_capacity,
+        busy_rejections,
+        errors_out,
+        pushes_in,
+    );
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> NetMetricsSnapshot {
+        NetMetricsSnapshot {
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            bad_version: self.bad_version.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            dup_appends: self.dup_appends.load(Ordering::Relaxed),
+            dup_pushes: self.dup_pushes.load(Ordering::Relaxed),
+            at_capacity: self.at_capacity.load(Ordering::Relaxed),
+            busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
+            errors_out: self.errors_out.load(Ordering::Relaxed),
+            pushes_in: self.pushes_in.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value view of [`NetMetrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetMetricsSnapshot {
+    pub conns_accepted: u64,
+    pub conns_refused: u64,
+    pub bad_version: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub bad_frames: u64,
+    pub dup_appends: u64,
+    pub dup_pushes: u64,
+    pub at_capacity: u64,
+    pub busy_rejections: u64,
+    pub errors_out: u64,
+    pub pushes_in: u64,
+}
+
+impl NetMetricsSnapshot {
+    /// One-line human report (`serve` prints this at shutdown).
+    pub fn report(&self) -> String {
+        format!(
+            "net: conns {}/{} refused, frames {} in / {} out ({} bad), \
+             dup appends {}, dup pushes {}, at-capacity {}, busy {}, \
+             errors {}, pushes {}",
+            self.conns_accepted,
+            self.conns_refused,
+            self.frames_in,
+            self.frames_out,
+            self.bad_frames,
+            self.dup_appends,
+            self.dup_pushes,
+            self.at_capacity,
+            self.busy_rejections,
+            self.errors_out,
+            self.pushes_in,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bumps_show_in_snapshot() {
+        let m = NetMetrics::default();
+        m.conns_accepted();
+        m.dup_appends();
+        m.dup_appends();
+        m.bad_frames();
+        let s = m.snapshot();
+        assert_eq!(s.conns_accepted, 1);
+        assert_eq!(s.dup_appends, 2);
+        assert_eq!(s.bad_frames, 1);
+        assert_eq!(s.frames_in, 0);
+        assert!(s.report().contains("dup appends 2"));
+    }
+}

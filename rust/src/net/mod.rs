@@ -1,0 +1,52 @@
+//! The distributed accumulation tier: a fault-tolerant network front end
+//! over the streaming session subsystem, and a tree topology that merges
+//! un-rounded partial sums at every hop.
+//!
+//! This is the ROADMAP's scale-out step made production-shaped. The
+//! reduction math was already distribution-ready — PR 5's
+//! [`PartialState`] merges `Exact` superaccumulator limbs by integer
+//! addition (exact, order-invariant, round-once), which is precisely the
+//! property In-Network Accumulation (arXiv 2209.10056) exploits to reduce
+//! at every switch hop. What this module adds is the part networks make
+//! hard: staying **correct and live** when peers are slow, dead,
+//! partitioned, or feeding garbage.
+//!
+//! Layers, bottom up:
+//!
+//! - [`frame`]: the [`Conn`]/[`Dialer`] transport seam (std-only TCP,
+//!   per-connection read/write deadlines, pre-buffer frame-size caps).
+//! - [`proto`]: the request/reply messages in [`crate::wire`] envelopes —
+//!   HELLO version negotiation, OPEN/APPEND/CLOSE/RESULT streaming,
+//!   PUSH/FLUSH/REPORT tree traffic, typed ERROR codes for every refusal.
+//! - [`client`]: bounded retries, jittered exponential backoff,
+//!   per-request deadlines, and idempotent resubmission (per-stream seq)
+//!   so a retried APPEND after a dropped ACK never double-counts.
+//! - [`server`]: accept/handler/core thread set over a
+//!   [`crate::session::SessionService`]; everything bounded, every
+//!   refusal typed, orderly drain + checkpoint on shutdown.
+//! - [`tree`]: the topology state — leaves reduce locally and push
+//!   un-rounded aggregates up; merge nodes combine by the PR 5 rule and
+//!   contain dead children as *reported degraded coverage*, never a hang.
+//! - [`chaos`]: `ChaosTransport` fault injection (drop, delay, duplicate,
+//!   truncate, corrupt, stall) at the transport seam — the network
+//!   sibling of the durability tier's `KillPoint` harness.
+//!
+//! [`Conn`]: frame::Conn
+//! [`Dialer`]: frame::Dialer
+//! [`PartialState`]: crate::engine::PartialState
+
+pub mod chaos;
+pub mod client;
+pub mod frame;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+pub mod tree;
+
+pub use chaos::{ChaosConfig, ChaosDialer, ChaosStats, FaultKind, ALL_FAULTS};
+pub use client::{ClientConfig, NetClient, NetError, RemoteResult};
+pub use frame::{recv_frame, Conn, Dialer, TcpConn, TcpDialer};
+pub use metrics::{NetMetrics, NetMetricsSnapshot};
+pub use proto::{Msg, TreeReport, DEFAULT_MAX_FRAME, NET_VERSION};
+pub use server::{NetServer, NetServerConfig, NetSummary};
+pub use tree::{leaf_values, TreeConfig, TreeState};

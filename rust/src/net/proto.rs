@@ -1,0 +1,553 @@
+//! The JPWC-over-TCP request/reply protocol: message tags, typed error
+//! codes, and the payload codecs for every frame the distributed tier
+//! exchanges.
+//!
+//! Every message travels inside the [`crate::wire`] envelope
+//! (`JPWC | version | tag | len | payload | crc32`), so the network path
+//! inherits the codec's guarantees wholesale: corruption is a
+//! [`CodecError::BadCrc`], a foreign peer is a `BadMagic`, a future codec
+//! is a `BadVersion` — never a panic, never a fabricated value. The tags
+//! here live in the `0x20`–`0x2F` block, disjoint from the durability
+//! tags (`TAG_PARTIAL` = 0x01, `TAG_SNAPSHOT` = 0x10), so a snapshot log
+//! and a network capture can never be confused for each other.
+//!
+//! The conversation is strictly request → reply on one connection:
+//!
+//! ```text
+//! client                                server
+//!   HELLO{version, max_frame}  ─────▶
+//!                              ◀─────  HELLO{version, max_frame}   (or ERROR BadVersion)
+//!   OPEN{stream}               ─────▶
+//!                              ◀─────  ACK{stream, 0}              (or ERROR AtCapacity)
+//!   APPEND{stream, seq, vals}  ─────▶
+//!                              ◀─────  ACK{stream, seq}            (idempotent by seq)
+//!   CLOSE{stream}              ─────▶
+//!                              ◀─────  RESULT{stream, …, state}
+//!   FLUSH                      ─────▶                              (leaf → parent push)
+//!                              ◀─────  ACK{0, 0}
+//!   REPORT_REQ{wait_ms}        ─────▶
+//!                              ◀─────  REPORT{coverage…, state}
+//! ```
+//!
+//! `PUSH` is the inter-node frame: a child's whole un-rounded
+//! [`PartialState`] aggregate, deduplicated by `node` id at the parent so
+//! a retried push (dropped ACK, flapping link) can never double-count.
+
+use crate::engine::PartialState;
+use crate::wire::{get_partial, put_partial, write_frame, ByteReader, ByteWriter, CodecError};
+
+/// Network protocol version carried in `HELLO` (independent of the wire
+/// envelope's codec version — the envelope frames bytes, this versions the
+/// conversation on top of them).
+pub const NET_VERSION: u8 = 1;
+
+/// Default per-connection frame cap (payload bytes) both sides advertise
+/// in `HELLO`; the effective cap is the min of the two. Deliberately far
+/// below [`crate::wire::MAX_PAYLOAD`]: a network peer is untrusted.
+pub const DEFAULT_MAX_FRAME: u32 = 1 << 20;
+
+/// Floor for a negotiated frame cap — below this even a `RESULT` carrying
+/// exact limbs would not fit, so negotiation clamps here.
+pub const MIN_MAX_FRAME: u32 = 4096;
+
+/// Version negotiation; must be the first frame in each direction.
+pub const TAG_HELLO: u8 = 0x20;
+/// Open a stream, keyed by a client-chosen u64.
+pub const TAG_OPEN: u8 = 0x21;
+/// Append a value fragment to an open stream (idempotent by `seq`).
+pub const TAG_APPEND: u8 = 0x22;
+/// Close a stream and request its `RESULT`.
+pub const TAG_CLOSE: u8 = 0x23;
+/// A finished stream's sum + un-rounded carry state.
+pub const TAG_RESULT: u8 = 0x24;
+/// Typed refusal/failure reply.
+pub const TAG_ERROR: u8 = 0x25;
+/// Positive acknowledgement of OPEN/APPEND/FLUSH/PUSH.
+pub const TAG_ACK: u8 = 0x26;
+/// A child node's aggregated un-rounded state, pushed to its parent.
+pub const TAG_PUSH: u8 = 0x27;
+/// Ask the node for its (sub)tree coverage report.
+pub const TAG_REPORT_REQ: u8 = 0x28;
+/// The coverage report: aggregate + how much of the tree it covers.
+pub const TAG_REPORT: u8 = 0x29;
+/// Aggregate all locally finished streams and push them to the parent.
+pub const TAG_FLUSH: u8 = 0x2A;
+
+/// `ERROR` codes — every refusal the server can issue is distinguishable.
+pub const ERR_BAD_VERSION: u8 = 1;
+/// `open` refused: `max_open_streams` already open (admission control —
+/// the bounded-everything rule, never an unbounded queue).
+pub const ERR_AT_CAPACITY: u8 = 2;
+pub const ERR_UNKNOWN_STREAM: u8 = 3;
+pub const ERR_CLOSED: u8 = 4;
+pub const ERR_EVICTED: u8 = 5;
+/// An APPEND arrived from the future (seq gap) — the client lost a frame
+/// it believes was acked; refusing keeps counts exact.
+pub const ERR_BAD_SEQ: u8 = 6;
+pub const ERR_MALFORMED: u8 = 7;
+pub const ERR_OVERSIZE: u8 = 8;
+/// The server's core queue is momentarily full — retry with backoff.
+pub const ERR_BUSY: u8 = 9;
+pub const ERR_SHUTDOWN: u8 = 10;
+pub const ERR_INTERNAL: u8 = 11;
+/// FLUSH/PUSH/REPORT on a server not configured as a tree node.
+pub const ERR_NOT_TREE: u8 = 12;
+/// A PUSH whose engine disagrees with this node's engine — merging would
+/// silently change semantics, so it is refused.
+pub const ERR_ENGINE_MISMATCH: u8 = 13;
+/// A leaf's upward push failed after bounded retries.
+pub const ERR_UPLINK: u8 = 14;
+
+/// Human-readable name for an `ERROR` code (metrics/logs).
+pub fn err_name(code: u8) -> &'static str {
+    match code {
+        ERR_BAD_VERSION => "bad-version",
+        ERR_AT_CAPACITY => "at-capacity",
+        ERR_UNKNOWN_STREAM => "unknown-stream",
+        ERR_CLOSED => "closed",
+        ERR_EVICTED => "evicted",
+        ERR_BAD_SEQ => "bad-seq",
+        ERR_MALFORMED => "malformed",
+        ERR_OVERSIZE => "oversize",
+        ERR_BUSY => "busy",
+        ERR_SHUTDOWN => "shutdown",
+        ERR_INTERNAL => "internal",
+        ERR_NOT_TREE => "not-tree",
+        ERR_ENGINE_MISMATCH => "engine-mismatch",
+        ERR_UPLINK => "uplink",
+        _ => "unknown",
+    }
+}
+
+/// First frame in each direction: protocol version + the sender's frame
+/// cap. The effective cap is `min` of the two (clamped to
+/// [`MIN_MAX_FRAME`]); a version the server does not speak is refused
+/// with `ERROR{ERR_BAD_VERSION}` and a clean close.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u8,
+    pub max_frame: u32,
+}
+
+/// Open a stream. `stream` is a client-chosen key — the client owns the
+/// namespace so a retried OPEN (or a resubmission after reconnect) names
+/// the same stream instead of leaking a new one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Open {
+    pub stream: u64,
+}
+
+/// One value fragment. `seq` starts at 0 per stream and increments per
+/// *acknowledged* fragment; the server applies exactly-once semantics by
+/// seq (`seq < next` → duplicate, re-ack without applying; `seq > next` →
+/// `ERR_BAD_SEQ`), so a retried APPEND after a dropped ACK never
+/// double-counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Append {
+    pub stream: u64,
+    pub seq: u64,
+    pub values: Vec<f32>,
+}
+
+/// Close `stream`; the reply is its `RESULT` (idempotent — a re-sent
+/// CLOSE after a lost RESULT replays the cached result).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Close {
+    pub stream: u64,
+}
+
+/// Positive acknowledgement of OPEN (`seq` = 0), APPEND (its seq),
+/// FLUSH/PUSH (`stream` = node id, `seq` = 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ack {
+    pub stream: u64,
+    pub seq: u64,
+}
+
+/// A finished stream: rounded sum, counts, and the full un-rounded carry
+/// state (exact limbs for the `exact` engine) for upward merging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultMsg {
+    pub stream: u64,
+    pub values: u64,
+    pub fragments: u64,
+    pub sum: f32,
+    pub state: PartialState,
+}
+
+/// Typed refusal. `stream` names the stream it refuses (0 when the error
+/// is connection-scoped, e.g. `ERR_BAD_VERSION`/`ERR_BUSY`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorMsg {
+    pub code: u8,
+    pub stream: u64,
+    pub detail: String,
+}
+
+/// A child's whole aggregate, pushed upward. Deduplicated by `node` at
+/// the parent (latest push wins), so retries and re-flushes are safe.
+/// `leaves`/`expected_leaves` carry subtree coverage so the root can
+/// report exactly how much of the tree its sum represents.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Push {
+    /// The pushing node's id — the dedupe key.
+    pub node: u64,
+    /// Engine registry name; a mismatch with the receiver is refused.
+    pub engine: String,
+    /// Leaf nodes actually covered by this aggregate.
+    pub leaves: u32,
+    /// Leaf nodes this subtree should cover when healthy.
+    pub expected_leaves: u32,
+    /// Total values accumulated under this aggregate.
+    pub values: u64,
+    pub state: PartialState,
+}
+
+/// Ask for the node's coverage report, waiting up to `wait_ms` for the
+/// tree to complete before answering with whatever arrived (degraded
+/// coverage is a *typed result*, not an error — the root never hangs on a
+/// dead leaf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReportReq {
+    pub wait_ms: u32,
+}
+
+/// The coverage report: the aggregate plus exactly how much of the tree
+/// contributed to it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeReport {
+    /// Direct children this node is configured to expect.
+    pub expected_children: u32,
+    /// Direct children that have pushed.
+    pub contributed_children: u32,
+    /// Leaves the whole subtree should cover when healthy.
+    pub expected_leaves: u32,
+    /// Leaves actually covered.
+    pub leaves: u32,
+    /// Values accumulated under the aggregate.
+    pub values: u64,
+    /// The aggregate, rounded once.
+    pub sum: f32,
+    /// `leaves < expected_leaves || contributed < expected_children`:
+    /// the typed degraded-coverage signal.
+    pub degraded: bool,
+    pub state: PartialState,
+}
+
+impl TreeReport {
+    /// Full coverage: every expected child and leaf contributed.
+    pub fn complete(&self) -> bool {
+        !self.degraded
+    }
+}
+
+/// One decoded protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Hello(Hello),
+    Open(Open),
+    Append(Append),
+    Close(Close),
+    Ack(Ack),
+    Result(ResultMsg),
+    Error(ErrorMsg),
+    Push(Push),
+    Flush,
+    ReportReq(ReportReq),
+    Report(TreeReport),
+}
+
+impl Msg {
+    /// The wire tag this message travels under.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello(_) => TAG_HELLO,
+            Msg::Open(_) => TAG_OPEN,
+            Msg::Append(_) => TAG_APPEND,
+            Msg::Close(_) => TAG_CLOSE,
+            Msg::Ack(_) => TAG_ACK,
+            Msg::Result(_) => TAG_RESULT,
+            Msg::Error(_) => TAG_ERROR,
+            Msg::Push(_) => TAG_PUSH,
+            Msg::Flush => TAG_FLUSH,
+            Msg::ReportReq(_) => TAG_REPORT_REQ,
+            Msg::Report(_) => TAG_REPORT,
+        }
+    }
+
+    /// Encode into one complete wire frame (envelope included).
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Hello(m) => {
+                w.put_u8(m.version);
+                w.put_u32(m.max_frame);
+            }
+            Msg::Open(m) => w.put_u64(m.stream),
+            Msg::Append(m) => {
+                w.put_u64(m.stream);
+                w.put_u64(m.seq);
+                w.put_u32(m.values.len() as u32);
+                for &v in &m.values {
+                    w.put_f32(v);
+                }
+            }
+            Msg::Close(m) => w.put_u64(m.stream),
+            Msg::Ack(m) => {
+                w.put_u64(m.stream);
+                w.put_u64(m.seq);
+            }
+            Msg::Result(m) => {
+                w.put_u64(m.stream);
+                w.put_u64(m.values);
+                w.put_u64(m.fragments);
+                w.put_f32(m.sum);
+                put_partial(&mut w, &m.state);
+            }
+            Msg::Error(m) => {
+                w.put_u8(m.code);
+                w.put_u64(m.stream);
+                w.put_str(&m.detail);
+            }
+            Msg::Push(m) => {
+                w.put_u64(m.node);
+                w.put_str(&m.engine);
+                w.put_u32(m.leaves);
+                w.put_u32(m.expected_leaves);
+                w.put_u64(m.values);
+                put_partial(&mut w, &m.state);
+            }
+            Msg::Flush => {}
+            Msg::ReportReq(m) => w.put_u32(m.wait_ms),
+            Msg::Report(m) => {
+                w.put_u32(m.expected_children);
+                w.put_u32(m.contributed_children);
+                w.put_u32(m.expected_leaves);
+                w.put_u32(m.leaves);
+                w.put_u64(m.values);
+                w.put_f32(m.sum);
+                w.put_u8(m.degraded as u8);
+                put_partial(&mut w, &m.state);
+            }
+        }
+        let payload = w.into_inner();
+        let mut out = Vec::with_capacity(payload.len() + crate::wire::FRAME_OVERHEAD);
+        write_frame(&mut out, self.tag(), &payload);
+        out
+    }
+
+    /// Decode a payload under its envelope tag. Every failure is a typed
+    /// [`CodecError`]; trailing bytes are refused (`Malformed`).
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<Msg, CodecError> {
+        let mut r = ByteReader::new(payload);
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello(Hello {
+                version: r.u8()?,
+                max_frame: r.u32()?,
+            }),
+            TAG_OPEN => Msg::Open(Open { stream: r.u64()? }),
+            TAG_APPEND => {
+                let stream = r.u64()?;
+                let seq = r.u64()?;
+                let n = r.u32()? as usize;
+                // The count must be exactly what the payload holds —
+                // checked *before* allocating, so a forged count can
+                // neither memory-bomb nor smuggle trailing bytes.
+                if n.checked_mul(4) != Some(r.remaining()) {
+                    return Err(CodecError::Malformed {
+                        what: "append value count disagrees with payload length",
+                    });
+                }
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    values.push(r.f32()?);
+                }
+                Msg::Append(Append {
+                    stream,
+                    seq,
+                    values,
+                })
+            }
+            TAG_CLOSE => Msg::Close(Close { stream: r.u64()? }),
+            TAG_ACK => Msg::Ack(Ack {
+                stream: r.u64()?,
+                seq: r.u64()?,
+            }),
+            TAG_RESULT => Msg::Result(ResultMsg {
+                stream: r.u64()?,
+                values: r.u64()?,
+                fragments: r.u64()?,
+                sum: r.f32()?,
+                state: get_partial(&mut r)?,
+            }),
+            TAG_ERROR => Msg::Error(ErrorMsg {
+                code: r.u8()?,
+                stream: r.u64()?,
+                detail: r.str()?.to_string(),
+            }),
+            TAG_PUSH => Msg::Push(Push {
+                node: r.u64()?,
+                engine: r.str()?.to_string(),
+                leaves: r.u32()?,
+                expected_leaves: r.u32()?,
+                values: r.u64()?,
+                state: get_partial(&mut r)?,
+            }),
+            TAG_FLUSH => Msg::Flush,
+            TAG_REPORT_REQ => Msg::ReportReq(ReportReq { wait_ms: r.u32()? }),
+            TAG_REPORT => Msg::Report(TreeReport {
+                expected_children: r.u32()?,
+                contributed_children: r.u32()?,
+                expected_leaves: r.u32()?,
+                leaves: r.u32()?,
+                values: r.u64()?,
+                sum: r.f32()?,
+                degraded: r.u8()? != 0,
+                state: get_partial(&mut r)?,
+            }),
+            other => return Err(CodecError::BadTag { tag: other }),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// Shorthand for building an `ERROR` reply.
+pub fn error_msg(code: u8, stream: u64, detail: impl Into<String>) -> Msg {
+    Msg::Error(ErrorMsg {
+        code,
+        stream,
+        detail: detail.into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::exact::SuperAccumulator;
+    use crate::wire::read_frame;
+
+    fn round_trip(msg: Msg) {
+        let frame = msg.encode_frame();
+        let (f, used) = read_frame(&frame).expect("frame decodes");
+        assert_eq!(used, frame.len());
+        assert_eq!(f.tag, msg.tag());
+        let back = Msg::decode(f.tag, f.payload).expect("payload decodes");
+        assert_eq!(back, msg);
+    }
+
+    fn exact_state(vals: &[f32]) -> PartialState {
+        let mut acc = SuperAccumulator::new();
+        for &v in vals {
+            acc.add(v);
+        }
+        PartialState::Exact(Box::new(acc))
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        round_trip(Msg::Hello(Hello {
+            version: NET_VERSION,
+            max_frame: DEFAULT_MAX_FRAME,
+        }));
+        round_trip(Msg::Open(Open { stream: 7 }));
+        round_trip(Msg::Append(Append {
+            stream: 7,
+            seq: 3,
+            values: vec![1.5, -0.25, 1024.0],
+        }));
+        round_trip(Msg::Append(Append {
+            stream: 9,
+            seq: 0,
+            values: vec![],
+        }));
+        round_trip(Msg::Close(Close { stream: 7 }));
+        round_trip(Msg::Ack(Ack { stream: 7, seq: 3 }));
+        round_trip(Msg::Result(ResultMsg {
+            stream: 7,
+            values: 10,
+            fragments: 2,
+            sum: 2.25,
+            state: PartialState::F32(2.25),
+        }));
+        round_trip(Msg::Result(ResultMsg {
+            stream: 8,
+            values: 3,
+            fragments: 1,
+            sum: 2.25,
+            state: exact_state(&[1.0, 1.0, 0.25]),
+        }));
+        round_trip(Msg::Error(ErrorMsg {
+            code: ERR_AT_CAPACITY,
+            stream: 7,
+            detail: "admission refused: 64 streams open (max 64)".into(),
+        }));
+        round_trip(Msg::Push(Push {
+            node: 2,
+            engine: "exact".into(),
+            leaves: 1,
+            expected_leaves: 1,
+            values: 100,
+            state: exact_state(&[0.125; 8]),
+        }));
+        round_trip(Msg::Flush);
+        round_trip(Msg::ReportReq(ReportReq { wait_ms: 500 }));
+        round_trip(Msg::Report(TreeReport {
+            expected_children: 4,
+            contributed_children: 3,
+            expected_leaves: 4,
+            leaves: 3,
+            values: 300,
+            sum: 3.0,
+            degraded: true,
+            state: exact_state(&[1.0, 1.0, 1.0]),
+        }));
+    }
+
+    #[test]
+    fn append_count_mismatch_is_malformed_not_a_panic() {
+        let good = Msg::Append(Append {
+            stream: 1,
+            seq: 0,
+            values: vec![1.0, 2.0],
+        })
+        .encode_frame();
+        let (f, _) = read_frame(&good).unwrap();
+        // Forge the value count upward: decode must refuse before
+        // trusting the count for allocation.
+        let mut payload = f.payload.to_vec();
+        payload[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Msg::decode(TAG_APPEND, &payload),
+            Err(CodecError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_tag_is_typed() {
+        assert!(matches!(
+            Msg::decode(0x7F, &[]),
+            Err(CodecError::BadTag { tag: 0x7F })
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_refused() {
+        let frame = Msg::Open(Open { stream: 1 }).encode_frame();
+        let (f, _) = read_frame(&frame).unwrap();
+        let mut payload = f.payload.to_vec();
+        payload.push(0);
+        assert!(matches!(
+            Msg::decode(TAG_OPEN, &payload),
+            Err(CodecError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn error_codes_have_names() {
+        for code in 1..=ERR_UPLINK {
+            assert_ne!(err_name(code), "unknown", "code {code}");
+        }
+        assert_eq!(err_name(0xEE), "unknown");
+    }
+}

@@ -1,0 +1,991 @@
+//! The network front end over a [`SessionService`]: accept loop, per
+//! connection handler threads, and one core thread that owns the session
+//! engine — the single-writer discipline of the whole stack, kept.
+//!
+//! ## Thread shape
+//!
+//! ```text
+//!  accept thread ──spawns──▶ handler thread (per connection)
+//!                                 │   strict request → reply, framed
+//!                                 ▼
+//!                    bounded sync_channel (try_send: full ⇒ ERR_BUSY)
+//!                                 │
+//!                                 ▼
+//!                  core thread: owns SessionService + TreeState
+//!                                 │
+//!                  uplink pump thread (tree nodes with a parent):
+//!                  re-pushes the changed aggregate upward via NetClient
+//! ```
+//!
+//! Everything is bounded: connections (`max_conns`, refused with a typed
+//! `AtCapacity`-class error, never queued), the core queue (`queue_depth`,
+//! refused with `ERR_BUSY`), frame size (negotiated cap enforced *before*
+//! the body is buffered), per-connection read/write deadlines, and the
+//! replayed-RESULT cache (`done_cache`, oldest evicted). A slow, dead, or
+//! malicious peer can cost this server one connection slot and nothing
+//! else.
+//!
+//! ## Idempotency (the double-count defense)
+//!
+//! The core keeps, per client stream key, the next expected APPEND `seq`.
+//! A duplicate (`seq < next`) is **re-acked without re-applying** — that
+//! is the entire server half of the retried-APPEND-never-double-counts
+//! guarantee, and `dup_appends` counts every time it mattered. CLOSE is
+//! idempotent through the done-cache: a re-sent CLOSE (lost RESULT)
+//! replays the cached result bit-identically.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::client::{ClientConfig, NetClient};
+use super::frame::{Conn, Dialer, TcpConn};
+use super::metrics::{NetMetrics, NetMetricsSnapshot};
+use super::proto::{
+    error_msg, Ack, Msg, Push, ResultMsg, DEFAULT_MAX_FRAME, ERR_AT_CAPACITY,
+    ERR_BAD_SEQ, ERR_BAD_VERSION, ERR_BUSY, ERR_CLOSED, ERR_ENGINE_MISMATCH, ERR_EVICTED,
+    ERR_INTERNAL, ERR_MALFORMED, ERR_NOT_TREE, ERR_OVERSIZE, ERR_SHUTDOWN, ERR_UNKNOWN_STREAM,
+    ERR_UPLINK, MIN_MAX_FRAME, NET_VERSION,
+};
+use super::tree::{TreeConfig, TreeState};
+use crate::coordinator::MetricsSnapshot;
+use crate::session::{SessionConfig, SessionError, SessionMetricsSnapshot, SessionService, StreamId};
+use crate::wire::{CodecError, FrameReadError};
+use anyhow::Result;
+
+/// Server knobs. Defaults favor containment over patience.
+#[derive(Clone)]
+pub struct NetServerConfig {
+    /// Bind address (`127.0.0.1:0` picks a free port).
+    pub listen: String,
+    /// The session tier underneath (engine, shards, durability, …).
+    pub session: SessionConfig,
+    /// Tree role; `None` serves streams but refuses FLUSH/PUSH/REPORT
+    /// with `ERR_NOT_TREE`.
+    pub tree: Option<TreeConfig>,
+    /// Payload cap advertised in HELLO (min of both sides applies).
+    pub max_frame: u32,
+    /// Mid-frame read deadline: a peer that starts a frame must finish it
+    /// within this (slow-loris guard). Idle time between requests is
+    /// unlimited — idleness is cheap, half-frames are not.
+    pub read_timeout: Duration,
+    /// Per-reply write deadline.
+    pub write_timeout: Duration,
+    /// How long a handler waits for the core to answer one request.
+    pub core_wait: Duration,
+    /// Shutdown budget for draining in-flight chunks + final checkpoint.
+    pub drain_timeout: Duration,
+    /// Connection cap; beyond it, accepts are refused with a typed error.
+    pub max_conns: usize,
+    /// Core request queue depth (full ⇒ `ERR_BUSY`).
+    pub queue_depth: usize,
+    /// Finished-stream RESULT replay cache entries.
+    pub done_cache: usize,
+    /// Uplink pump interval for tree nodes with a parent.
+    pub push_interval: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".to_string(),
+            session: SessionConfig::default(),
+            tree: None,
+            max_frame: DEFAULT_MAX_FRAME,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            core_wait: Duration::from_secs(10),
+            drain_timeout: Duration::from_secs(10),
+            max_conns: 64,
+            queue_depth: 256,
+            done_cache: 1024,
+            push_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Everything a stopped server can tell you about its life.
+pub struct NetSummary {
+    pub net: NetMetricsSnapshot,
+    pub session: SessionMetricsSnapshot,
+    pub service: MetricsSnapshot,
+    /// Whether the shutdown drain completed and the final checkpoint (if
+    /// durable) was written.
+    pub drained: bool,
+}
+
+enum CoreMsg {
+    Req { msg: Msg, reply: SyncSender<Msg> },
+    Shutdown,
+}
+
+struct CoreSummary {
+    session: SessionMetricsSnapshot,
+    service: MetricsSnapshot,
+    drained: bool,
+}
+
+struct Ctx {
+    stop: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+    core_tx: SyncSender<CoreMsg>,
+    max_frame: u32,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    core_wait: Duration,
+    /// `Some` when this node pushes to a parent on explicit FLUSH.
+    uplink: Option<(Arc<dyn Dialer>, ClientConfig)>,
+}
+
+/// A running network server. Dropping it without [`shutdown`] leaves the
+/// threads running; call shutdown for an orderly drain.
+///
+/// [`shutdown`]: NetServer::shutdown
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+    core_tx: SyncSender<CoreMsg>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+    core: Option<JoinHandle<CoreSummary>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind, spawn the thread set, and return once the listener is live.
+    pub fn start(cfg: NetServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let ss = SessionService::start(cfg.session.clone())?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(NetMetrics::default());
+        let (core_tx, core_rx) = mpsc::sync_channel::<CoreMsg>(cfg.queue_depth);
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let uplink = cfg.tree.as_ref().and_then(|t| {
+            t.parent
+                .as_ref()
+                .map(|d| (Arc::clone(d), t.client.clone()))
+        });
+        let ctx = Arc::new(Ctx {
+            stop: Arc::clone(&stop),
+            metrics: Arc::clone(&metrics),
+            core_tx: core_tx.clone(),
+            max_frame: cfg.max_frame,
+            read_timeout: cfg.read_timeout,
+            write_timeout: cfg.write_timeout,
+            core_wait: cfg.core_wait,
+            uplink: uplink.clone(),
+        });
+
+        let core = {
+            let tree = cfg.tree.clone().map(TreeState::new);
+            let done_cache = cfg.done_cache;
+            let drain_timeout = cfg.drain_timeout;
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("net-core".into())
+                .spawn(move || core_loop(ss, tree, core_rx, metrics, done_cache, drain_timeout))?
+        };
+
+        let accept = {
+            let ctx = Arc::clone(&ctx);
+            let handlers = Arc::clone(&handlers);
+            let max_conns = cfg.max_conns;
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, ctx, handlers, max_conns))?
+        };
+
+        let pump = match (&uplink, &cfg.tree) {
+            (Some((dialer, ccfg)), Some(_)) => {
+                let stop = Arc::clone(&stop);
+                let core_tx = core_tx.clone();
+                let dialer = Arc::clone(dialer);
+                let ccfg = ccfg.clone();
+                let interval = cfg.push_interval;
+                let wait = cfg.core_wait;
+                Some(
+                    std::thread::Builder::new()
+                        .name("net-uplink".into())
+                        .spawn(move || uplink_pump(stop, core_tx, dialer, ccfg, interval, wait))?,
+                )
+            }
+            _ => None,
+        };
+
+        Ok(Self {
+            addr,
+            stop,
+            metrics,
+            core_tx,
+            accept: Some(accept),
+            pump,
+            core: Some(core),
+            handlers,
+        })
+    }
+
+    /// The bound address (useful with `listen = 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting, drain handlers, drain + checkpoint the session
+    /// tier, and report the server's whole life.
+    pub fn shutdown(mut self) -> NetSummary {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = self.handlers.lock().expect("handler list lock");
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = self.core_tx.send(CoreMsg::Shutdown);
+        let core = self
+            .core
+            .take()
+            .expect("core joined once")
+            .join()
+            .expect("core thread never panics");
+        NetSummary {
+            net: self.metrics.snapshot(),
+            session: core.session,
+            service: core.service,
+            drained: core.drained,
+        }
+    }
+}
+
+// --------------------------------------------------------------- accept
+
+fn accept_loop(
+    listener: TcpListener,
+    ctx: Arc<Ctx>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    max_conns: usize,
+) {
+    let live = Arc::new(AtomicUsize::new(0));
+    while !ctx.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let mut conn: Box<dyn Conn> = match TcpConn::new(stream) {
+                    Ok(c) => Box::new(c),
+                    Err(_) => continue,
+                };
+                if live.load(Ordering::SeqCst) >= max_conns {
+                    // Typed refusal, bounded cost: one error frame, close.
+                    ctx.metrics.conns_refused();
+                    let _ = conn.set_write_deadline(ctx.write_timeout);
+                    let _ = conn.send(
+                        &error_msg(ERR_AT_CAPACITY, 0, "connection limit reached").encode_frame(),
+                    );
+                    conn.shutdown();
+                    continue;
+                }
+                live.fetch_add(1, Ordering::SeqCst);
+                let ctx = Arc::clone(&ctx);
+                let live = Arc::clone(&live);
+                let handle = std::thread::Builder::new()
+                    .name("net-conn".into())
+                    .spawn(move || {
+                        handle_conn(conn, &ctx);
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    });
+                match handle {
+                    Ok(h) => handlers.lock().expect("handler list lock").push(h),
+                    Err(_) => {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+// -------------------------------------------------------------- handler
+
+/// Idle-tolerant framed read: probe for the first byte with a short
+/// deadline (so the stop flag is honored while idle), then read the rest
+/// of the frame under the real mid-frame deadline. `Ok(None)` = clean
+/// close or stop; `Err` = the connection is unusable.
+fn read_request(
+    conn: &mut dyn Conn,
+    ctx: &Ctx,
+    cap: u32,
+) -> Result<Option<(u8, Vec<u8>)>, FrameReadError> {
+    let mut first = [0u8; 1];
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        conn.set_read_deadline(Duration::from_millis(100))
+            .map_err(FrameReadError::Io)?;
+        match conn.recv_some(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(FrameReadError::Io(e)),
+        }
+    }
+    conn.set_read_deadline(ctx.read_timeout)
+        .map_err(FrameReadError::Io)?;
+    let mut reader = PrependRead {
+        first: Some(first[0]),
+        conn,
+    };
+    crate::wire::read_frame_streaming(&mut reader, cap).map(Some)
+}
+
+struct PrependRead<'a> {
+    first: Option<u8>,
+    conn: &'a mut dyn Conn,
+}
+
+impl Read for PrependRead<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(b) = self.first.take() {
+            if buf.is_empty() {
+                self.first = Some(b);
+                return Ok(0);
+            }
+            buf[0] = b;
+            return Ok(1);
+        }
+        self.conn.recv_some(buf)
+    }
+}
+
+fn send_reply(conn: &mut dyn Conn, ctx: &Ctx, msg: &Msg) -> bool {
+    let frame = msg.encode_frame();
+    if matches!(msg, Msg::Error(_)) {
+        ctx.metrics.errors_out();
+    }
+    match conn.send(&frame) {
+        Ok(()) => {
+            ctx.metrics.frames_out();
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+fn handle_conn(mut conn: Box<dyn Conn>, ctx: &Ctx) {
+    ctx.metrics.conns_accepted();
+    let _ = conn.set_write_deadline(ctx.write_timeout);
+
+    // Handshake: the first frame must be HELLO with a version we speak.
+    let cap = match handshake(conn.as_mut(), ctx) {
+        Some(cap) => cap,
+        None => {
+            conn.shutdown();
+            return;
+        }
+    };
+
+    loop {
+        let (tag, payload) = match read_request(conn.as_mut(), ctx, cap) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(FrameReadError::Codec(e)) => {
+                // The envelope itself is damaged — reply typed, then
+                // close: a byte stream that lied about its framing
+                // cannot be resynchronized safely.
+                ctx.metrics.bad_frames();
+                let code = match e {
+                    CodecError::Oversize { .. } => ERR_OVERSIZE,
+                    _ => ERR_MALFORMED,
+                };
+                send_reply(conn.as_mut(), ctx, &error_msg(code, 0, e.to_string()));
+                break;
+            }
+            Err(FrameReadError::Io(_)) => break,
+        };
+        ctx.metrics.frames_in();
+
+        let msg = match Msg::decode(tag, &payload) {
+            Ok(m) => m,
+            Err(e) => {
+                // Frame boundary was valid; only the payload is wrong.
+                // Reply typed and keep the connection.
+                ctx.metrics.bad_frames();
+                if !send_reply(conn.as_mut(), ctx, &error_msg(ERR_MALFORMED, 0, e.to_string())) {
+                    break;
+                }
+                continue;
+            }
+        };
+
+        let reply = dispatch(ctx, msg);
+        if !send_reply(conn.as_mut(), ctx, &reply) {
+            break;
+        }
+    }
+    conn.shutdown();
+}
+
+fn handshake(conn: &mut dyn Conn, ctx: &Ctx) -> Option<u32> {
+    let (tag, payload) = match read_request(conn, ctx, ctx.max_frame) {
+        Ok(Some(f)) => f,
+        Ok(None) => return None,
+        Err(_) => {
+            ctx.metrics.bad_frames();
+            return None;
+        }
+    };
+    ctx.metrics.frames_in();
+    match Msg::decode(tag, &payload) {
+        Ok(Msg::Hello(h)) => {
+            if h.version == 0 || h.version > NET_VERSION {
+                ctx.metrics.bad_version();
+                send_reply(
+                    conn,
+                    ctx,
+                    &error_msg(
+                        ERR_BAD_VERSION,
+                        0,
+                        format!("peer speaks v{}, this server speaks v{NET_VERSION}", h.version),
+                    ),
+                );
+                return None;
+            }
+            let cap = h.max_frame.min(ctx.max_frame).max(MIN_MAX_FRAME);
+            let hello = Msg::Hello(super::proto::Hello {
+                version: NET_VERSION,
+                max_frame: ctx.max_frame,
+            });
+            if !send_reply(conn, ctx, &hello) {
+                return None;
+            }
+            Some(cap)
+        }
+        Ok(_) => {
+            send_reply(
+                conn,
+                ctx,
+                &error_msg(ERR_MALFORMED, 0, "first frame must be HELLO"),
+            );
+            None
+        }
+        Err(e) => {
+            ctx.metrics.bad_frames();
+            send_reply(conn, ctx, &error_msg(ERR_MALFORMED, 0, e.to_string()));
+            None
+        }
+    }
+}
+
+/// Route one decoded request through the core (and, for FLUSH/REPORT,
+/// run the handler-side half: uplink push, completion wait).
+fn dispatch(ctx: &Ctx, msg: Msg) -> Msg {
+    match msg {
+        Msg::ReportReq(req) => {
+            // Poll the core until the tree completes or the wait budget
+            // runs out; degraded coverage is then a *result*, not an
+            // error — the root never hangs on a dead leaf.
+            let deadline = Instant::now() + Duration::from_millis(u64::from(req.wait_ms));
+            loop {
+                let reply = core_round_trip(ctx, Msg::ReportReq(super::proto::ReportReq {
+                    wait_ms: 0,
+                }));
+                match reply {
+                    Msg::Report(r) => {
+                        if r.complete() || Instant::now() >= deadline {
+                            return Msg::Report(r);
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    other => return other,
+                }
+            }
+        }
+        Msg::Flush => {
+            // The core hands back this node's aggregate; the handler
+            // carries it upward (network work never blocks the core).
+            match core_round_trip(ctx, Msg::Flush) {
+                Msg::Push(p) => match &ctx.uplink {
+                    None => Msg::Ack(Ack {
+                        stream: p.node,
+                        seq: 0,
+                    }),
+                    Some((dialer, ccfg)) => {
+                        let mut client = NetClient::new(Arc::clone(dialer), ccfg.clone());
+                        match client.push(&p) {
+                            Ok(()) => Msg::Ack(Ack {
+                                stream: p.node,
+                                seq: 0,
+                            }),
+                            Err(e) => error_msg(ERR_UPLINK, 0, e.to_string()),
+                        }
+                    }
+                },
+                other => other,
+            }
+        }
+        other => core_round_trip(ctx, other),
+    }
+}
+
+fn core_round_trip(ctx: &Ctx, msg: Msg) -> Msg {
+    let (tx, rx) = mpsc::sync_channel::<Msg>(2);
+    match ctx.core_tx.try_send(CoreMsg::Req { msg, reply: tx }) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            ctx.metrics.busy_rejections();
+            return error_msg(ERR_BUSY, 0, "server core queue full, retry with backoff");
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            return error_msg(ERR_SHUTDOWN, 0, "server is shutting down");
+        }
+    }
+    match rx.recv_timeout(ctx.core_wait) {
+        Ok(m) => m,
+        Err(_) => error_msg(ERR_INTERNAL, 0, "core did not answer within its wait budget"),
+    }
+}
+
+// --------------------------------------------------------------- uplink
+
+/// Tree nodes with a parent re-push their aggregate whenever it changes,
+/// so partial sums propagate upward without anyone asking — a mid node
+/// whose children are done forwards on its own, and a late child's
+/// contribution still flows up (the parent deduplicates by node id).
+fn uplink_pump(
+    stop: Arc<AtomicBool>,
+    core_tx: SyncSender<CoreMsg>,
+    dialer: Arc<dyn Dialer>,
+    ccfg: ClientConfig,
+    interval: Duration,
+    wait: Duration,
+) {
+    let mut client = NetClient::new(dialer, ccfg);
+    let mut last_pushed: Option<(u32, u64, u32)> = None;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        let (tx, rx) = mpsc::sync_channel::<Msg>(2);
+        if core_tx
+            .try_send(CoreMsg::Req {
+                msg: Msg::Flush,
+                reply: tx,
+            })
+            .is_err()
+        {
+            continue;
+        }
+        let push = match rx.recv_timeout(wait) {
+            Ok(Msg::Push(p)) => p,
+            _ => continue,
+        };
+        if push.leaves == 0 && push.values == 0 {
+            continue; // nothing to say yet
+        }
+        let fingerprint = (push.leaves, push.values, push.state.rounded().to_bits());
+        if last_pushed == Some(fingerprint) {
+            continue; // unchanged since the last successful push
+        }
+        if client.push(&push).is_ok() {
+            last_pushed = Some(fingerprint);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- core
+
+struct StreamEntry {
+    sid: StreamId,
+    next_seq: u64,
+}
+
+struct CoreState {
+    ss: SessionService,
+    tree: Option<TreeState>,
+    metrics: Arc<NetMetrics>,
+    /// Client stream key → live session stream.
+    streams: HashMap<u64, StreamEntry>,
+    sid_to_key: HashMap<StreamId, u64>,
+    /// CLOSE replies waiting on their StreamResult.
+    waiters: HashMap<StreamId, Vec<SyncSender<Msg>>>,
+    /// Finished-stream replay cache (idempotent CLOSE), bounded.
+    done: HashMap<u64, Msg>,
+    done_order: VecDeque<u64>,
+    done_cache: usize,
+}
+
+fn core_loop(
+    ss: SessionService,
+    tree: Option<TreeState>,
+    rx: Receiver<CoreMsg>,
+    metrics: Arc<NetMetrics>,
+    done_cache: usize,
+    drain_timeout: Duration,
+) -> CoreSummary {
+    let mut core = CoreState {
+        ss,
+        tree,
+        metrics,
+        streams: HashMap::new(),
+        sid_to_key: HashMap::new(),
+        waiters: HashMap::new(),
+        done: HashMap::new(),
+        done_order: VecDeque::new(),
+        done_cache,
+    };
+    let mut ticks: u32 = 0;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(CoreMsg::Shutdown) => break,
+            Ok(CoreMsg::Req { msg, reply }) => {
+                if let Some(resp) = core.handle(msg, &reply) {
+                    let _ = reply.try_send(resp);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        core.pump_results();
+        ticks = ticks.wrapping_add(1);
+        if ticks % 512 == 0 {
+            core.ss.sweep_idle();
+        }
+    }
+    // Orderly exit: drain in-flight chunks, write the final checkpoint
+    // (the PR 6 shutdown guarantee: acknowledged appends survive), then
+    // stop the pipeline.
+    let drained = core.ss.drain_and_checkpoint(drain_timeout);
+    core.pump_results();
+    let (session, service) = core.ss.shutdown();
+    CoreSummary {
+        session,
+        service,
+        drained,
+    }
+}
+
+impl CoreState {
+    /// Handle one request; `None` means the reply is deferred (CLOSE
+    /// waiting for its result).
+    fn handle(&mut self, msg: Msg, reply: &SyncSender<Msg>) -> Option<Msg> {
+        match msg {
+            Msg::Open(o) => Some(self.handle_open(o.stream)),
+            Msg::Append(a) => Some(self.handle_append(a.stream, a.seq, &a.values)),
+            Msg::Close(c) => self.handle_close(c.stream, reply),
+            Msg::Push(p) => Some(self.handle_push(p)),
+            Msg::Flush => Some(self.handle_flush()),
+            Msg::ReportReq(_) => Some(self.handle_report()),
+            // Reply-kind frames are not requests.
+            _ => Some(error_msg(ERR_MALFORMED, 0, "not a request frame")),
+        }
+    }
+
+    fn handle_open(&mut self, key: u64) -> Msg {
+        if self.streams.contains_key(&key) {
+            // Idempotent re-OPEN (retry after a lost ACK).
+            return Msg::Ack(Ack { stream: key, seq: 0 });
+        }
+        if self.done.contains_key(&key) {
+            return error_msg(ERR_CLOSED, key, "stream already finished");
+        }
+        match self.ss.open() {
+            Ok(sid) => {
+                self.streams.insert(key, StreamEntry { sid, next_seq: 0 });
+                self.sid_to_key.insert(sid, key);
+                Msg::Ack(Ack { stream: key, seq: 0 })
+            }
+            Err(e) => {
+                if matches!(e, SessionError::AtCapacity { .. }) {
+                    self.metrics.at_capacity();
+                }
+                session_error(key, e)
+            }
+        }
+    }
+
+    fn handle_append(&mut self, key: u64, seq: u64, values: &[f32]) -> Msg {
+        let entry = match self.streams.get_mut(&key) {
+            Some(e) => e,
+            None => {
+                return if self.done.contains_key(&key) {
+                    error_msg(ERR_CLOSED, key, "stream already finished")
+                } else {
+                    error_msg(ERR_UNKNOWN_STREAM, key, "stream was never opened here")
+                };
+            }
+        };
+        if seq < entry.next_seq {
+            // Already applied; the ACK was lost in flight. Re-ack
+            // WITHOUT re-applying — this is the no-double-count rule.
+            self.metrics.dup_appends();
+            return Msg::Ack(Ack { stream: key, seq });
+        }
+        if seq > entry.next_seq {
+            return error_msg(
+                ERR_BAD_SEQ,
+                key,
+                format!("seq {seq} from the future (expected {})", entry.next_seq),
+            );
+        }
+        let sid = entry.sid;
+        match self.ss.append(sid, values) {
+            Ok(()) => {
+                self.streams
+                    .get_mut(&key)
+                    .expect("entry exists")
+                    .next_seq = seq + 1;
+                Msg::Ack(Ack { stream: key, seq })
+            }
+            Err(e) => {
+                if matches!(e, SessionError::Evicted(_)) {
+                    self.forget(key);
+                }
+                session_error(key, e)
+            }
+        }
+    }
+
+    fn handle_close(&mut self, key: u64, reply: &SyncSender<Msg>) -> Option<Msg> {
+        if let Some(done) = self.done.get(&key) {
+            // Idempotent CLOSE: replay the cached RESULT bit-identically.
+            return Some(done.clone());
+        }
+        let sid = match self.streams.get(&key) {
+            Some(e) => e.sid,
+            None => {
+                return Some(error_msg(
+                    ERR_UNKNOWN_STREAM,
+                    key,
+                    "stream was never opened here",
+                ))
+            }
+        };
+        match self.ss.close(sid) {
+            // A re-sent CLOSE before the result arrived lands here too:
+            // both callers wait on the same result.
+            Ok(()) | Err(SessionError::Closed(_)) => {
+                self.waiters.entry(sid).or_default().push(reply.clone());
+                None
+            }
+            Err(e) => {
+                if matches!(e, SessionError::Evicted(_)) {
+                    self.forget(key);
+                }
+                Some(session_error(key, e))
+            }
+        }
+    }
+
+    fn handle_push(&mut self, p: Push) -> Msg {
+        let engine = self.ss.engine_name().to_string();
+        match self.tree.as_mut() {
+            None => error_msg(ERR_NOT_TREE, 0, "this server is not a tree node"),
+            Some(tree) => {
+                if p.engine != engine {
+                    return error_msg(
+                        ERR_ENGINE_MISMATCH,
+                        p.node,
+                        format!("push from engine {:?}, this node runs {engine:?}", p.engine),
+                    );
+                }
+                let node = p.node;
+                if tree.add_push(p) {
+                    self.metrics.dup_pushes();
+                } else {
+                    self.metrics.pushes_in();
+                }
+                Msg::Ack(Ack {
+                    stream: node,
+                    seq: 0,
+                })
+            }
+        }
+    }
+
+    fn handle_flush(&mut self) -> Msg {
+        let engine = self.ss.engine_name().to_string();
+        match self.tree.as_ref() {
+            None => error_msg(ERR_NOT_TREE, 0, "this server is not a tree node"),
+            Some(tree) => Msg::Push(tree.as_push(&engine)),
+        }
+    }
+
+    fn handle_report(&mut self) -> Msg {
+        match self.tree.as_ref() {
+            None => error_msg(ERR_NOT_TREE, 0, "this server is not a tree node"),
+            Some(tree) => Msg::Report(tree.report()),
+        }
+    }
+
+    /// Route every finished stream: cache its RESULT, wake CLOSE waiters,
+    /// fold its un-rounded state into the tree aggregate.
+    fn pump_results(&mut self) {
+        while let Some(r) = self.ss.recv_timeout(Duration::ZERO) {
+            let key = match self.sid_to_key.remove(&r.stream) {
+                Some(k) => k,
+                None => continue, // evicted/unknown bookkeeping already gone
+            };
+            self.streams.remove(&key);
+            let msg = Msg::Result(ResultMsg {
+                stream: key,
+                values: r.values,
+                fragments: r.fragments,
+                sum: r.sum,
+                state: r.state.clone(),
+            });
+            if let Some(tree) = self.tree.as_mut() {
+                tree.add_local(r.state, r.values);
+            }
+            self.done.insert(key, msg.clone());
+            self.done_order.push_back(key);
+            while self.done_order.len() > self.done_cache {
+                if let Some(old) = self.done_order.pop_front() {
+                    self.done.remove(&old);
+                }
+            }
+            if let Some(waiters) = self.waiters.remove(&r.stream) {
+                for w in waiters {
+                    let _ = w.try_send(msg.clone());
+                }
+            }
+        }
+    }
+
+    fn forget(&mut self, key: u64) {
+        if let Some(e) = self.streams.remove(&key) {
+            self.sid_to_key.remove(&e.sid);
+            self.waiters.remove(&e.sid);
+        }
+    }
+}
+
+fn session_error(key: u64, e: SessionError) -> Msg {
+    let code = match &e {
+        SessionError::Unknown(_) => ERR_UNKNOWN_STREAM,
+        SessionError::Closed(_) => ERR_CLOSED,
+        SessionError::Evicted(_) => ERR_EVICTED,
+        SessionError::AtCapacity { .. } => ERR_AT_CAPACITY,
+        SessionError::Pipeline(_) => ERR_INTERNAL,
+    };
+    error_msg(code, key, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::{ClientConfig, NetClient};
+    use crate::net::tree::leaf_values;
+    use crate::testkit::exact_i128_reference;
+
+    fn exact_session() -> SessionConfig {
+        SessionConfig {
+            service: crate::coordinator::ServiceConfig {
+                engine: crate::engine::EngineConfig::named("exact", 4, 16),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn open_append_close_round_trip_over_tcp() {
+        let server = NetServer::start(NetServerConfig {
+            session: exact_session(),
+            ..NetServerConfig::default()
+        })
+        .expect("server starts");
+        let addr = server.local_addr().to_string();
+
+        let mut client = NetClient::connect_tcp(&addr, ClientConfig::default());
+        let vals = leaf_values(0xA11CE, 300);
+        let key = client.open().expect("open");
+        client.append(key, &vals[..100]).expect("append 1");
+        client.append(key, &vals[100..]).expect("append 2");
+        let r = client.close(key).expect("close");
+        assert_eq!(r.values, 300);
+        assert_eq!(r.sum.to_bits(), exact_i128_reference(&vals).to_bits());
+
+        // Idempotent CLOSE: a retry replays the cached result.
+        client.open_key(key).expect_err("reopen finished stream");
+        let summary = server.shutdown();
+        assert!(summary.drained);
+        assert!(summary.net.frames_in > 0);
+        assert_eq!(summary.net.dup_appends, 0);
+    }
+
+    #[test]
+    fn version_mismatch_is_refused_cleanly() {
+        let server = NetServer::start(NetServerConfig::default()).expect("server starts");
+        let addr = server.local_addr().to_string();
+        let cfg = ClientConfig {
+            advertise_version: NET_VERSION + 1,
+            ..ClientConfig::default()
+        };
+        let mut client = NetClient::connect_tcp(&addr, cfg);
+        let err = client.open().expect_err("future version must be refused");
+        assert_eq!(err.remote_code(), Some(ERR_BAD_VERSION));
+        let summary = server.shutdown();
+        assert!(summary.net.bad_version >= 1);
+    }
+
+    #[test]
+    fn non_tree_server_refuses_tree_requests() {
+        let server = NetServer::start(NetServerConfig::default()).expect("server starts");
+        let addr = server.local_addr().to_string();
+        let mut client = NetClient::connect_tcp(&addr, ClientConfig::default());
+        let err = client.flush_up().expect_err("flush on non-tree");
+        assert_eq!(err.remote_code(), Some(ERR_NOT_TREE));
+        let err = client.report(Duration::ZERO).expect_err("report on non-tree");
+        assert_eq!(err.remote_code(), Some(ERR_NOT_TREE));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stream_admission_cap_maps_to_typed_at_capacity() {
+        let session = SessionConfig {
+            max_open_streams: 2,
+            ..SessionConfig::default()
+        };
+        let server = NetServer::start(NetServerConfig {
+            session,
+            ..NetServerConfig::default()
+        })
+        .expect("server starts");
+        let addr = server.local_addr().to_string();
+        let mut client = NetClient::connect_tcp(&addr, ClientConfig::default());
+        client.open().expect("first");
+        client.open().expect("second");
+        let err = client.open().expect_err("third must be refused");
+        assert_eq!(err.remote_code(), Some(ERR_AT_CAPACITY));
+        let summary = server.shutdown();
+        assert!(summary.net.at_capacity >= 1);
+    }
+}

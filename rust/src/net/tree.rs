@@ -1,0 +1,324 @@
+//! Tree-topology state: how a node aggregates its own finished streams
+//! with its children's pushed partials, and how it reports coverage.
+//!
+//! The reduction rule is the PR 5 rule, unchanged
+//! ([`crate::engine::partial::combine`]): all-`Exact` contributions merge
+//! limbs by integer addition — exact, order-invariant — and round *once*
+//! at the reader, so the correctly-rounded guarantee survives arbitrary
+//! fan-in and arbitrary push arrival order (In-Network Accumulation,
+//! arXiv 2209.10056, realized in software). `F32` contributions
+//! tree-reduce deterministically in contribution order.
+//!
+//! Failure containment is structural: a child that never pushes cannot
+//! block anything — the aggregate is computed from whatever arrived, and
+//! the gap is *reported* (`leaves < expected_leaves`) rather than waited
+//! on forever. Duplicate pushes (retries after a lost ACK, flapping
+//! links) are deduplicated by node id: the latest push from a node
+//! *replaces* its predecessor, so re-pushing an updated aggregate is both
+//! safe and the intended refresh mechanism.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::client::ClientConfig;
+use super::frame::Dialer;
+use super::proto::{Push, TreeReport};
+use crate::engine::partial::{combine, PartialState};
+use crate::util::rng::Xoshiro256;
+
+/// One node's place in the tree.
+#[derive(Clone)]
+pub struct TreeConfig {
+    /// This node's id — the dedupe key its pushes carry upward. Must be
+    /// unique among siblings.
+    pub node_id: u64,
+    /// Where to push aggregates; `None` makes this node the root.
+    pub parent: Option<Arc<dyn Dialer>>,
+    /// Client knobs (retries, backoff, deadlines) for the upward push.
+    pub client: ClientConfig,
+    /// Direct children expected to push (0 for a leaf).
+    pub expected_children: u32,
+    /// Leaves this node's whole subtree should cover when healthy. For a
+    /// leaf this is 1; for a merge node, the sum over its children.
+    pub expected_leaves: u32,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        Self {
+            node_id: 0,
+            parent: None,
+            client: ClientConfig::default(),
+            expected_children: 0,
+            expected_leaves: 1,
+        }
+    }
+}
+
+impl TreeConfig {
+    /// A leaf: no children, covers itself.
+    pub fn leaf(node_id: u64) -> Self {
+        Self {
+            node_id,
+            ..Self::default()
+        }
+    }
+
+    /// Is this node a leaf (reduces its own streams, expects no pushes)?
+    pub fn is_leaf(&self) -> bool {
+        self.expected_children == 0
+    }
+}
+
+/// The live aggregate a tree node carries: its own finished streams plus
+/// every child push, keyed for dedupe.
+pub struct TreeState {
+    cfg: TreeConfig,
+    /// Un-rounded states of locally finished streams, in close order.
+    local: Vec<PartialState>,
+    local_values: u64,
+    /// Latest push per child node id (BTreeMap: deterministic iteration
+    /// order, so `F32` tree-reduction is reproducible).
+    children: BTreeMap<u64, Push>,
+}
+
+impl TreeState {
+    pub fn new(cfg: TreeConfig) -> Self {
+        Self {
+            cfg,
+            local: Vec::new(),
+            local_values: 0,
+            children: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &TreeConfig {
+        &self.cfg
+    }
+
+    /// Record a locally finished stream's un-rounded state.
+    pub fn add_local(&mut self, state: PartialState, values: u64) {
+        self.local.push(state);
+        self.local_values += values;
+    }
+
+    /// Record a child's push. Returns `true` if this *replaced* an
+    /// earlier push from the same node (a deduplicated retry/refresh).
+    pub fn add_push(&mut self, push: Push) -> bool {
+        self.children.insert(push.node, push).is_some()
+    }
+
+    /// Direct children that have pushed so far.
+    pub fn contributed_children(&self) -> u32 {
+        self.children.len() as u32
+    }
+
+    /// Everything this node knows, combined once. Local streams
+    /// contribute in close order, then children in node-id order.
+    /// Empty state sums to `0.0` with zero coverage.
+    pub fn report(&self) -> TreeReport {
+        let mut parts: Vec<PartialState> =
+            Vec::with_capacity(self.local.len() + self.children.len());
+        parts.extend(self.local.iter().cloned());
+        let mut leaves: u32 = 0;
+        let mut expected_from_children: u32 = 0;
+        let mut values = self.local_values;
+        for push in self.children.values() {
+            parts.push(push.state.clone());
+            leaves += push.leaves;
+            expected_from_children += push.expected_leaves;
+            values += push.values;
+        }
+        // A node with local streams covers itself as a leaf of the wider
+        // tree; a pure merge node covers only what its children report.
+        if !self.local.is_empty() {
+            leaves += 1;
+        }
+        let (sum, state) = if parts.is_empty() {
+            (0.0, PartialState::F32(0.0))
+        } else {
+            combine(parts)
+        };
+        // Children that haven't pushed are presumed to each cover at
+        // least the leaves the config says the subtree is missing.
+        let expected_leaves = self.cfg.expected_leaves.max(expected_from_children);
+        let contributed = self.contributed_children();
+        let degraded =
+            contributed < self.cfg.expected_children || leaves < expected_leaves;
+        TreeReport {
+            expected_children: self.cfg.expected_children,
+            contributed_children: contributed,
+            expected_leaves,
+            leaves,
+            values,
+            sum,
+            degraded,
+            state,
+        }
+    }
+
+    /// This node's aggregate as the `PUSH` it sends to its parent.
+    pub fn as_push(&self, engine: &str) -> Push {
+        let r = self.report();
+        Push {
+            node: self.cfg.node_id,
+            engine: engine.to_string(),
+            leaves: r.leaves,
+            expected_leaves: r.expected_leaves,
+            values: r.values,
+            state: r.state,
+        }
+    }
+}
+
+/// Deterministic per-leaf workload for topology tests, benches, and the
+/// CLI's `--leaf-values` mode: dyadic values (`k/8`, `k ∈ [-64, 64)`,
+/// never 0) whose sums are **exact in f32 at any association order** —
+/// so a distributed sum can be asserted bit-identical against
+/// `testkit::exact_i128_reference` no matter how the tree reassociated
+/// it. (Zero is excluded because the i128 reference rejects exponents
+/// outside its window; widen the range and every bit-assertion built on
+/// this silently weakens.)
+pub fn leaf_values(seed: u64, count: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed ^ 0x1EAF_5EED);
+    (0..count)
+        .map(|_| {
+            let mut k = rng.range_i64(-64, 64);
+            if k == 0 {
+                k = 1;
+            }
+            k as f32 / 8.0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::exact::SuperAccumulator;
+    use crate::testkit::exact_i128_reference;
+
+    fn exact_state(vals: &[f32]) -> PartialState {
+        let mut acc = SuperAccumulator::new();
+        for &v in vals {
+            acc.add(v);
+        }
+        PartialState::Exact(Box::new(acc))
+    }
+
+    fn push(node: u64, vals: &[f32]) -> Push {
+        Push {
+            node,
+            engine: "exact".into(),
+            leaves: 1,
+            expected_leaves: 1,
+            values: vals.len() as u64,
+            state: exact_state(vals),
+        }
+    }
+
+    #[test]
+    fn full_coverage_merge_is_bit_identical_to_the_reference() {
+        let mut tree = TreeState::new(TreeConfig {
+            expected_children: 3,
+            expected_leaves: 3,
+            ..TreeConfig::default()
+        });
+        let a = leaf_values(1, 100);
+        let b = leaf_values(2, 57);
+        let c = leaf_values(3, 211);
+        tree.add_push(push(1, &a));
+        tree.add_push(push(2, &b));
+        tree.add_push(push(3, &c));
+        let r = tree.report();
+        assert!(!r.degraded);
+        assert_eq!(r.leaves, 3);
+        assert_eq!(r.values, (a.len() + b.len() + c.len()) as u64);
+        let all: Vec<f32> = a.into_iter().chain(b).chain(c).collect();
+        assert_eq!(r.sum.to_bits(), exact_i128_reference(&all).to_bits());
+    }
+
+    #[test]
+    fn duplicate_pushes_replace_and_never_double_count() {
+        let mut tree = TreeState::new(TreeConfig {
+            expected_children: 2,
+            expected_leaves: 2,
+            ..TreeConfig::default()
+        });
+        let a = leaf_values(10, 64);
+        let b = leaf_values(11, 64);
+        assert!(!tree.add_push(push(1, &a)));
+        // The same node pushes again (retry after a lost ACK): replaced,
+        // not added.
+        assert!(tree.add_push(push(1, &a)));
+        assert!(tree.add_push(push(1, &a)));
+        assert!(!tree.add_push(push(2, &b)));
+        let r = tree.report();
+        assert_eq!(r.values, (a.len() + b.len()) as u64);
+        let all: Vec<f32> = a.into_iter().chain(b).collect();
+        assert_eq!(r.sum.to_bits(), exact_i128_reference(&all).to_bits());
+    }
+
+    #[test]
+    fn missing_child_degrades_instead_of_blocking() {
+        let mut tree = TreeState::new(TreeConfig {
+            expected_children: 4,
+            expected_leaves: 4,
+            ..TreeConfig::default()
+        });
+        let a = leaf_values(20, 32);
+        tree.add_push(push(1, &a));
+        let r = tree.report();
+        assert!(r.degraded);
+        assert_eq!(r.contributed_children, 1);
+        assert_eq!(r.expected_children, 4);
+        assert_eq!(r.leaves, 1);
+        assert_eq!(r.expected_leaves, 4);
+        // The partial sum is still exact over what arrived.
+        assert_eq!(r.sum.to_bits(), exact_i128_reference(&a).to_bits());
+    }
+
+    #[test]
+    fn empty_tree_reports_zero_coverage() {
+        let tree = TreeState::new(TreeConfig {
+            expected_children: 2,
+            expected_leaves: 2,
+            ..TreeConfig::default()
+        });
+        let r = tree.report();
+        assert!(r.degraded);
+        assert_eq!(r.leaves, 0);
+        assert_eq!(r.values, 0);
+        assert_eq!(r.sum, 0.0);
+    }
+
+    #[test]
+    fn local_streams_count_as_one_leaf() {
+        let mut tree = TreeState::new(TreeConfig::leaf(7));
+        let vals = leaf_values(30, 16);
+        tree.add_local(exact_state(&vals[..8]), 8);
+        tree.add_local(exact_state(&vals[8..]), 8);
+        let r = tree.report();
+        assert!(!r.degraded);
+        assert_eq!(r.leaves, 1);
+        assert_eq!(r.values, 16);
+        assert_eq!(r.sum.to_bits(), exact_i128_reference(&vals).to_bits());
+        let p = tree.as_push("exact");
+        assert_eq!(p.node, 7);
+        assert_eq!(p.leaves, 1);
+        assert_eq!(p.values, 16);
+    }
+
+    #[test]
+    fn leaf_values_are_dyadic_and_nonzero() {
+        let vals = leaf_values(42, 1000);
+        for &v in &vals {
+            assert_ne!(v, 0.0);
+            assert_eq!(v * 8.0, (v * 8.0).trunc());
+            assert!((-8.0..8.0).contains(&v));
+        }
+        // Deterministic by seed.
+        assert_eq!(leaf_values(42, 1000), vals);
+        assert_ne!(leaf_values(43, 1000), vals);
+    }
+}

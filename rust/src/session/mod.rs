@@ -169,6 +169,12 @@ pub struct StreamResult {
     pub fragments: u64,
     /// Open-to-finish wall time.
     pub latency: Duration,
+    /// The combined, **un-rounded** carry state of the whole stream — what
+    /// the distributed tier forwards up the tree ([`crate::net`]). For the
+    /// `exact` engine these are full superaccumulator limbs, so a parent
+    /// node can merge results from many leaves and still round exactly
+    /// once; `sum` above is `state.rounded()`.
+    pub state: PartialState,
 }
 
 /// The streaming-session front end over a [`Service`].
@@ -634,6 +640,47 @@ impl SessionService {
         self.svc.batch_capacity()
     }
 
+    /// The configured engine's registry name. Partial state is not
+    /// portable across engines, so anything that ships it elsewhere — the
+    /// snapshot log, the network tier's tree pushes — records this name
+    /// and refuses a mismatch instead of silently merging foreign limbs.
+    pub fn engine_name(&self) -> &str {
+        &self.engine_name
+    }
+
+    /// Chunk requests submitted to the pipeline whose partials have not
+    /// come back yet (the in-flight work a graceful shutdown drains).
+    pub fn pending_chunks(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The graceful-shutdown half of durability: pump the pipeline until
+    /// every in-flight chunk partial has landed in the session table (or
+    /// `timeout` elapses), then write a final checkpoint. After this
+    /// returns `true`, **every acknowledged append is in the snapshot log**
+    /// — either still in a stream's tail or as a parked chunk partial — so
+    /// a SIGINT-ish exit (Ctrl-C on the `serve`/`stream` CLI, a drained
+    /// `net` server) loses nothing that was accepted. Returns the final
+    /// [`snapshot_now`](Self::snapshot_now) verdict: `false` with
+    /// durability off, degraded, or a kill point fired.
+    pub fn drain_and_checkpoint(&mut self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while !self.pending.is_empty() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            if let Some(r) = self.svc.recv_timeout(remaining.min(Duration::from_millis(20))) {
+                self.route_response(r);
+            }
+            // Route anything else already queued without waiting again.
+            while let Some(r) = self.svc.recv_timeout(Duration::ZERO) {
+                self.route_response(r);
+            }
+        }
+        self.snapshot_now()
+    }
+
     /// Write a snapshot to the durability log right now. Returns whether
     /// a complete snapshot reached the log — `false` with durability off,
     /// after degradation to in-memory mode, or when a kill point fired.
@@ -791,13 +838,14 @@ impl SessionService {
         // and one-shot sums cannot diverge.
         let parts: Vec<PartialState> =
             state.parts.into_iter().map(|p| p.expect("stream complete")).collect();
-        let (sum, _) = combine(parts);
+        let (sum, combined) = combine(parts);
         let result = StreamResult {
             stream: id,
             sum,
             values: state.values,
             fragments: state.fragments,
             latency: state.opened_at.elapsed(),
+            state: combined,
         };
         self.finished.insert(close_seq, result);
         self.metrics.streams_finished.fetch_add(1, Ordering::Relaxed);

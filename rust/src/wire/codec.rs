@@ -21,7 +21,7 @@
 
 use crate::engine::exact::{self, SuperAccumulator};
 use crate::engine::partial::PartialState;
-use crate::wire::crc32::crc32;
+use crate::wire::crc32::{crc32, crc32_finish, crc32_update, CRC32_INIT};
 
 /// Frame magic: `b"JPWC"` — **J**uggle**P**AC **W**ire **C**odec.
 pub const MAGIC: [u8; 4] = *b"JPWC";
@@ -33,6 +33,10 @@ pub const VERSION: u8 = 1;
 pub const MAX_PAYLOAD: u32 = 64 << 20;
 /// Fixed bytes around a payload: magic + version + tag + len + crc.
 pub const FRAME_OVERHEAD: usize = 4 + 1 + 1 + 4 + 4;
+/// Bytes before the payload: magic + version + tag + len. A streaming
+/// reader fetches exactly this much first, validates the declared length
+/// against its cap, and only then buffers the body.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4;
 
 /// Frame tag: a standalone [`PartialState`] (the distributed-tier unit of
 /// exchange — a partial sum crossing a host boundary).
@@ -226,12 +230,24 @@ pub struct Frame<'a> {
     pub payload: &'a [u8],
 }
 
-/// Decode the frame at the start of `buf`; returns it plus the number of
-/// bytes it occupied (so callers can iterate a log of frames).
-pub fn read_frame(buf: &[u8]) -> Result<(Frame<'_>, usize), CodecError> {
-    const HEADER: usize = 4 + 1 + 1 + 4;
-    if buf.len() < HEADER {
-        return Err(CodecError::Truncated { need: HEADER, have: buf.len() });
+/// A validated frame header — everything known before the body arrives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub version: u8,
+    pub tag: u8,
+    /// Declared payload length, already checked against the caller's cap.
+    pub len: u32,
+}
+
+/// Parse and validate the fixed-size frame prefix, enforcing `cap`
+/// (clamped to [`MAX_PAYLOAD`]) on the declared payload length **before**
+/// the caller buffers a single body byte. This is the slow-loris /
+/// memory-bomb guard of the network path: a peer declaring a huge length
+/// is refused at byte 10 with [`CodecError::Oversize`], not after an
+/// allocation sized by attacker-controlled input.
+pub fn decode_header(buf: &[u8], cap: u32) -> Result<FrameHeader, CodecError> {
+    if buf.len() < HEADER_LEN {
+        return Err(CodecError::Truncated { need: HEADER_LEN, have: buf.len() });
     }
     if buf[..4] != MAGIC {
         return Err(CodecError::BadMagic { got: buf[..4].try_into().unwrap() });
@@ -242,10 +258,17 @@ pub fn read_frame(buf: &[u8]) -> Result<(Frame<'_>, usize), CodecError> {
     }
     let tag = buf[5];
     let len = u32::from_le_bytes(buf[6..10].try_into().unwrap());
-    if len > MAX_PAYLOAD {
+    if len > cap.min(MAX_PAYLOAD) {
         return Err(CodecError::Oversize { len });
     }
-    let total = HEADER + len as usize + 4;
+    Ok(FrameHeader { version, tag, len })
+}
+
+/// Decode the frame at the start of `buf`; returns it plus the number of
+/// bytes it occupied (so callers can iterate a log of frames).
+pub fn read_frame(buf: &[u8]) -> Result<(Frame<'_>, usize), CodecError> {
+    let h = decode_header(buf, MAX_PAYLOAD)?;
+    let total = HEADER_LEN + h.len as usize + 4;
     if buf.len() < total {
         return Err(CodecError::Truncated { need: total, have: buf.len() });
     }
@@ -254,7 +277,55 @@ pub fn read_frame(buf: &[u8]) -> Result<(Frame<'_>, usize), CodecError> {
     if want != got {
         return Err(CodecError::BadCrc { want, got });
     }
-    Ok((Frame { tag, payload: &buf[HEADER..total - 4] }, total))
+    Ok((Frame { tag: h.tag, payload: &buf[HEADER_LEN..total - 4] }, total))
+}
+
+/// Failure reading a frame from a byte stream: either the transport broke
+/// (timeout, reset, EOF) or the bytes themselves are wrong.
+#[derive(Debug)]
+pub enum FrameReadError {
+    Io(std::io::Error),
+    Codec(CodecError),
+}
+
+impl std::fmt::Display for FrameReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameReadError::Io(e) => write!(f, "transport error: {e}"),
+            FrameReadError::Codec(e) => write!(f, "frame error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameReadError {}
+
+/// Read one complete frame from a byte stream (a socket, a pipe).
+///
+/// The oversize cap is enforced at the header — **before** the body is
+/// buffered — so a hostile or corrupt peer declaring a multi-gigabyte
+/// payload costs this process 10 bytes of reads and zero allocation, and
+/// a slow-drip peer is bounded by the transport's read deadline, never by
+/// how long we are willing to grow a buffer. Returns the tag and the
+/// payload (CRC already verified and stripped).
+pub fn read_frame_streaming<R: std::io::Read>(
+    r: &mut R,
+    cap: u32,
+) -> Result<(u8, Vec<u8>), FrameReadError> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(FrameReadError::Io)?;
+    let h = decode_header(&header, cap).map_err(FrameReadError::Codec)?;
+    let mut body = vec![0u8; h.len as usize + 4];
+    r.read_exact(&mut body).map_err(FrameReadError::Io)?;
+    let want = u32::from_le_bytes(body[h.len as usize..].try_into().unwrap());
+    let mut c = CRC32_INIT;
+    c = crc32_update(c, &header[4..]);
+    c = crc32_update(c, &body[..h.len as usize]);
+    let got = crc32_finish(c);
+    if want != got {
+        return Err(FrameReadError::Codec(CodecError::BadCrc { want, got }));
+    }
+    body.truncate(h.len as usize);
+    Ok((h.tag, body))
 }
 
 // ── PartialState value codec ────────────────────────────────────────────
@@ -502,6 +573,91 @@ mod tests {
             seen += 1;
         }
         assert_eq!(seen, states.len());
+    }
+
+    /// A reader that serves a fixed prefix and panics if anything tries
+    /// to read past it — proof the streaming decoder stopped at the
+    /// header instead of buffering a declared-huge body.
+    struct PrefixOnly {
+        bytes: Vec<u8>,
+        pos: usize,
+    }
+
+    impl std::io::Read for PrefixOnly {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            assert!(
+                self.pos < self.bytes.len(),
+                "read past the header: the oversize check must fire before \
+                 the body is buffered"
+            );
+            let n = buf.len().min(self.bytes.len() - self.pos);
+            buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn streaming_read_rejects_declared_huge_length_before_buffering() {
+        // Header declaring a ~4 GiB payload; no body follows — and none
+        // must ever be asked for.
+        let mut header = Vec::new();
+        header.extend_from_slice(&MAGIC);
+        header.push(VERSION);
+        header.push(TAG_PARTIAL);
+        header.extend_from_slice(&(u32::MAX - 7).to_le_bytes());
+        let mut r = PrefixOnly { bytes: header, pos: 0 };
+        match read_frame_streaming(&mut r, MAX_PAYLOAD) {
+            Err(FrameReadError::Codec(CodecError::Oversize { len })) => {
+                assert_eq!(len, u32::MAX - 7)
+            }
+            other => panic!("declared-huge length: {other:?}"),
+        }
+        // Same guard against a length that is legal for the codec but
+        // over the caller's (smaller, network-configured) cap.
+        let mut header = Vec::new();
+        header.extend_from_slice(&MAGIC);
+        header.push(VERSION);
+        header.push(TAG_PARTIAL);
+        header.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        let mut r = PrefixOnly { bytes: header, pos: 0 };
+        assert!(matches!(
+            read_frame_streaming(&mut r, 64 << 10),
+            Err(FrameReadError::Codec(CodecError::Oversize { .. }))
+        ));
+        // decode_header agrees with the buffer-level reader byte for byte.
+        assert!(matches!(
+            decode_header(&[0u8; 4], MAX_PAYLOAD),
+            Err(CodecError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn streaming_read_round_trips_and_types_its_failures() {
+        let p = exact_of(&[1e30, 1.0, -1e30]);
+        let frame = encode_partial_frame(&p);
+        let mut cur = std::io::Cursor::new(frame.clone());
+        let (tag, payload) = read_frame_streaming(&mut cur, MAX_PAYLOAD).unwrap();
+        assert_eq!(tag, TAG_PARTIAL);
+        let mut r = ByteReader::new(&payload);
+        assert_same_state(&p, &get_partial(&mut r).unwrap());
+        r.done().unwrap();
+        // A frame cut mid-body is a transport error (the socket analogue
+        // of a torn tail), not a codec lie.
+        let mut cur = std::io::Cursor::new(frame[..frame.len() - 3].to_vec());
+        assert!(matches!(
+            read_frame_streaming(&mut cur, MAX_PAYLOAD),
+            Err(FrameReadError::Io(_))
+        ));
+        // A flipped payload byte is BadCrc across the split reads.
+        let mut m = frame.clone();
+        let mid = HEADER_LEN + 1;
+        m[mid] ^= 0x40;
+        let mut cur = std::io::Cursor::new(m);
+        assert!(matches!(
+            read_frame_streaming(&mut cur, MAX_PAYLOAD),
+            Err(FrameReadError::Codec(CodecError::BadCrc { .. }))
+        ));
     }
 
     #[test]

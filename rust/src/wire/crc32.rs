@@ -24,14 +24,31 @@ const fn build_table() -> [u32; 256] {
 
 static TABLE: [u32; 256] = build_table();
 
+/// Initial raw state for the incremental API ([`crc32_update`] /
+/// [`crc32_finish`]).
+pub const CRC32_INIT: u32 = 0xFFFF_FFFF;
+
+/// Fold `data` into a raw CRC state. The network read path checksums a
+/// frame it received as two reads (header, then body) without gluing them
+/// back into one buffer — start from [`CRC32_INIT`], update per chunk,
+/// and [`crc32_finish`] at the end.
+pub fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// Final xor: raw state → the CRC-32 value [`crc32`] would have produced
+/// over the concatenated chunks.
+pub fn crc32_finish(state: u32) -> u32 {
+    state ^ 0xFFFF_FFFF
+}
+
 /// CRC-32 of `data` (init `0xFFFFFFFF`, final xor `0xFFFFFFFF` — the
 /// standard "CRC-32/ISO-HDLC" parameters zlib and Ethernet use).
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
+    crc32_finish(crc32_update(CRC32_INIT, data))
 }
 
 #[cfg(test)]
@@ -44,6 +61,18 @@ mod tests {
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn incremental_updates_match_one_shot() {
+        let data = b"split me anywhere and the crc must not change";
+        let want = crc32(data);
+        for cut in 0..=data.len() {
+            let mut c = CRC32_INIT;
+            c = crc32_update(c, &data[..cut]);
+            c = crc32_update(c, &data[cut..]);
+            assert_eq!(crc32_finish(c), want, "cut at {cut}");
+        }
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Tree topology integration: in-process 2- and 3-level trees over real
+//! TCP, a dead-leaf containment check (typed degraded coverage within the
+//! deadline, never a hang), and a multi-process run of the actual
+//! `jugglepac serve --listen/--parent` binary wired into a star.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jugglepac::coordinator::ServiceConfig;
+use jugglepac::engine::EngineConfig;
+use jugglepac::net::{
+    leaf_values, ClientConfig, Dialer, NetClient, NetServer, NetServerConfig, TcpDialer,
+    TreeConfig,
+};
+use jugglepac::session::SessionConfig;
+use jugglepac::testkit::exact_i128_reference;
+
+fn exact_session() -> SessionConfig {
+    SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::named("exact", 4, 16),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn dial(addr: &str) -> Arc<dyn Dialer> {
+    Arc::new(TcpDialer::new(addr.to_string(), Duration::from_secs(2)))
+}
+
+fn tree_server(tree: TreeConfig) -> NetServer {
+    NetServer::start(NetServerConfig {
+        session: exact_session(),
+        tree: Some(tree),
+        push_interval: Duration::from_millis(20),
+        ..NetServerConfig::default()
+    })
+    .expect("server starts")
+}
+
+/// Drive `vals` through the node at `addr` and flush the aggregate up.
+fn drive_leaf(addr: &str, vals: &[f32]) {
+    let mut client = NetClient::connect_tcp(addr, ClientConfig::default());
+    let key = client.open().expect("open");
+    for chunk in vals.chunks(32) {
+        client.append(key, chunk).expect("append");
+    }
+    let r = client.close(key).expect("close");
+    assert_eq!(r.values, vals.len() as u64);
+    client.flush_up().expect("flush");
+}
+
+#[test]
+fn three_level_tree_merges_to_the_exact_sum() {
+    // root ← mid ← {leaf 1, leaf 2}
+    let root = tree_server(TreeConfig {
+        node_id: 100,
+        expected_children: 1,
+        expected_leaves: 2,
+        ..TreeConfig::default()
+    });
+    let mid = tree_server(TreeConfig {
+        node_id: 10,
+        parent: Some(dial(&root.local_addr().to_string())),
+        expected_children: 2,
+        expected_leaves: 2,
+        ..TreeConfig::default()
+    });
+    let mut leaves = Vec::new();
+    let mut all = Vec::new();
+    for id in 1..=2u64 {
+        let leaf = tree_server(TreeConfig {
+            parent: Some(dial(&mid.local_addr().to_string())),
+            ..TreeConfig::leaf(id)
+        });
+        let vals = leaf_values(id, 150);
+        drive_leaf(&leaf.local_addr().to_string(), &vals);
+        all.extend_from_slice(&vals);
+        leaves.push(leaf);
+    }
+    // The mid node's uplink pump forwards its (changed) aggregate to the
+    // root on its own; an explicit flush just makes it prompt.
+    let mut mid_client = NetClient::connect_tcp(
+        &mid.local_addr().to_string(),
+        ClientConfig::default(),
+    );
+    mid_client.flush_up().expect("mid flush");
+
+    let mut oracle = NetClient::connect_tcp(
+        &root.local_addr().to_string(),
+        ClientConfig::default(),
+    );
+    let report = oracle.report(Duration::from_secs(10)).expect("report");
+    assert!(!report.degraded, "full coverage expected: {report:?}");
+    assert_eq!(report.leaves, 2);
+    assert_eq!(report.expected_leaves, 2);
+    assert_eq!(report.values, all.len() as u64);
+    assert_eq!(
+        report.sum.to_bits(),
+        exact_i128_reference(&all).to_bits(),
+        "un-rounded partials must merge to the exact sum"
+    );
+    for leaf in leaves {
+        leaf.shutdown();
+    }
+    mid.shutdown();
+    root.shutdown();
+}
+
+#[test]
+fn dead_leaf_is_contained_as_typed_degraded_coverage() {
+    // The root expects two children; only one ever exists. The report
+    // must come back degraded within the deadline — not hang, not panic,
+    // and not silently claim full coverage.
+    let root = tree_server(TreeConfig {
+        node_id: 100,
+        expected_children: 2,
+        expected_leaves: 2,
+        ..TreeConfig::default()
+    });
+    let leaf = tree_server(TreeConfig {
+        parent: Some(dial(&root.local_addr().to_string())),
+        ..TreeConfig::leaf(1)
+    });
+    let vals = leaf_values(7, 100);
+    drive_leaf(&leaf.local_addr().to_string(), &vals);
+
+    let mut oracle = NetClient::connect_tcp(
+        &root.local_addr().to_string(),
+        ClientConfig::default(),
+    );
+    let t0 = Instant::now();
+    let report = oracle
+        .report(Duration::from_millis(400))
+        .expect("degraded report is a reply, not an error");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "degraded report must respect the deadline"
+    );
+    assert!(report.degraded, "missing child must surface: {report:?}");
+    assert_eq!(report.contributed_children, 1);
+    assert_eq!(report.expected_children, 2);
+    assert_eq!(report.leaves, 1);
+    // The surviving leaf's contribution is still delivered, exactly.
+    assert_eq!(report.values, vals.len() as u64);
+    assert_eq!(
+        report.sum.to_bits(),
+        exact_i128_reference(&vals).to_bits()
+    );
+    leaf.shutdown();
+    root.shutdown();
+}
+
+/// Read the child's stdout until the `listening on ADDR` banner appears;
+/// returns the address and the reader for the remaining output.
+fn await_listen_banner(child: &mut Child) -> (String, std::io::BufReader<std::process::ChildStdout>) {
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read child stdout");
+        assert!(n > 0, "child exited before printing the listen banner");
+        if let Some(addr) = line.trim().strip_prefix("listening on ") {
+            return (addr.to_string(), reader);
+        }
+    }
+}
+
+#[test]
+fn multi_process_star_reaches_the_exact_sum() {
+    let bin = env!("CARGO_BIN_EXE_jugglepac");
+    let per_leaf = 120usize;
+
+    let mut root = Command::new(bin)
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--engine",
+            "exact",
+            "--node-id",
+            "100",
+            "--fan-in",
+            "2",
+            "--expected-leaves",
+            "2",
+            "--report-wait-ms",
+            "20000",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn root");
+    let (root_addr, mut root_out) = await_listen_banner(&mut root);
+
+    let mut leaves = Vec::new();
+    for id in 1..=2u64 {
+        let leaf = Command::new(bin)
+            .args([
+                "serve",
+                "--listen",
+                "127.0.0.1:0",
+                "--engine",
+                "exact",
+                "--parent",
+                &root_addr,
+                "--node-id",
+                &id.to_string(),
+                "--leaf-values",
+                &per_leaf.to_string(),
+                "--seed",
+                &id.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn leaf");
+        leaves.push(leaf);
+    }
+    for mut leaf in leaves {
+        let status = leaf.wait().expect("leaf exits");
+        assert!(status.success(), "leaf process failed");
+    }
+
+    // The root prints TREE_RESULT once coverage is full (or its 20 s
+    // report window lapses), then exits.
+    let mut tree_line = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = root_out.read_line(&mut line).expect("read root stdout");
+        if n == 0 {
+            break;
+        }
+        if line.starts_with("TREE_RESULT") {
+            tree_line = line.trim().to_string();
+        }
+    }
+    let status = root.wait().expect("root exits");
+    assert!(status.success(), "root process failed");
+    assert!(!tree_line.is_empty(), "root never printed TREE_RESULT");
+
+    // The CLI derives each leaf's values from its seed; recompute the
+    // reference the same way.
+    let mut all = leaf_values(1, per_leaf);
+    all.extend_from_slice(&leaf_values(2, per_leaf));
+    let want_bits = exact_i128_reference(&all).to_bits();
+    assert!(
+        tree_line.contains("degraded=0"),
+        "expected full coverage: {tree_line}"
+    );
+    assert!(
+        tree_line.contains(&format!("values={}", all.len())),
+        "wrong value count: {tree_line}"
+    );
+    assert!(
+        tree_line.contains(&format!("sum_bits=0x{want_bits:08x}")),
+        "wrong sum: {tree_line} (want 0x{want_bits:08x})"
+    );
+}

@@ -1,0 +1,187 @@
+//! The SIGINT-ish exit path (satellite of the distributed tier): a
+//! session that stops mid-script must drain in-flight chunks and write a
+//! final checkpoint, so every *acknowledged* append survives the process
+//! ending — and when a kill point has already murdered the log, the drain
+//! reports `false` instead of pretending.
+//!
+//! Also covers the CLI wiring end-to-end: `stream --exit-after-ms`
+//! interrupts a real run, then `stream --resume` recovers it in a second
+//! process.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use jugglepac::coordinator::ServiceConfig;
+use jugglepac::engine::EngineConfig;
+use jugglepac::session::{
+    DurabilityConfig, Faults, FsyncPolicy, KillPoint, SessionConfig, SessionService,
+};
+use jugglepac::testkit::exact_i128_reference;
+use jugglepac::util::Xoshiro256;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "jugglepac-shutdown-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn durable_cfg(dir: &Path, faults: Faults) -> SessionConfig {
+    let mut d = DurabilityConfig::at(dir);
+    // Timer off: the only checkpoint is the one drain_and_checkpoint
+    // writes, so the test observes exactly the exit path's work.
+    d.snapshot_interval = Duration::ZERO;
+    d.fsync = FsyncPolicy::Never;
+    d.faults = faults;
+    SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::named("exact", 4, 16),
+            ..Default::default()
+        },
+        durability: Some(d),
+        ..Default::default()
+    }
+}
+
+fn dyadic(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut k = rng.range_i64(-64, 64);
+            if k == 0 {
+                k = 1;
+            }
+            k as f32 / 8.0
+        })
+        .collect()
+}
+
+#[test]
+fn drain_and_checkpoint_preserves_every_acknowledged_append() {
+    let dir = tmp_dir("graceful");
+    let mut ss = SessionService::start(durable_cfg(&dir, Faults::default())).expect("start");
+    let mut vals = Vec::new();
+    let mut ids = Vec::new();
+    for s in 0..6u64 {
+        let v = dyadic(0xD1A1 + s, 90);
+        let id = ss.open().expect("open");
+        for chunk in v.chunks(17) {
+            ss.append(id, chunk).expect("append");
+        }
+        ids.push(id);
+        vals.push(v);
+    }
+    // The interrupt arrives here: chunks are still in flight.
+    let drained = ss.drain_and_checkpoint(Duration::from_secs(30));
+    assert!(drained, "healthy log must take the final checkpoint");
+    drop(ss); // the process "exits" — no orderly close of the streams
+
+    let (mut ss, report) =
+        SessionService::recover_from(durable_cfg(&dir, Faults::default())).expect("recover");
+    assert_eq!(report.tokens.len(), ids.len(), "every open stream staged");
+    let mut sums = Vec::new();
+    for token in &report.tokens {
+        let idx = ids.iter().position(|id| *id == token.stream).expect("known stream");
+        assert_eq!(
+            token.values,
+            vals[idx].len() as u64,
+            "acknowledged appends must all be inside the final checkpoint"
+        );
+        // Nothing to replay past the horizon — close and check the sum.
+        let id = ss.open_resume(token).expect("resume");
+        ss.close(id).expect("close");
+        sums.push((idx, id));
+    }
+    let results = ss.flush(Duration::from_secs(30));
+    assert_eq!(results.len(), sums.len());
+    for r in &results {
+        let idx = sums.iter().find(|(_, id)| *id == r.stream).expect("resumed").0;
+        assert_eq!(
+            r.sum.to_bits(),
+            exact_i128_reference(&vals[idx]).to_bits(),
+            "stream {idx}: recovered sum must be bit-identical"
+        );
+    }
+    ss.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_reports_false_when_the_log_is_already_dead() {
+    let dir = tmp_dir("killed");
+    let faults = Faults::default();
+    // The log dies on its very first append — nothing ever becomes
+    // durable, and the exit path must say so rather than claim success.
+    faults.kill_at(KillPoint::BeforeAppend, 1);
+    let mut ss = SessionService::start(durable_cfg(&dir, faults.clone())).expect("start");
+    let v = dyadic(0xDEAD, 60);
+    let id = ss.open().expect("open");
+    for chunk in v.chunks(11) {
+        ss.append(id, chunk).expect("append");
+    }
+    let drained = ss.drain_and_checkpoint(Duration::from_secs(30));
+    assert!(!drained, "a killed log cannot have taken the checkpoint");
+    assert!(faults.killed());
+    // The session itself still answers — containment, not collapse.
+    ss.close(id).expect("close");
+    let results = ss.flush(Duration::from_secs(30));
+    assert_eq!(results.len(), 1);
+    assert_eq!(
+        results[0].sum.to_bits(),
+        exact_i128_reference(&v).to_bits(),
+        "the in-memory run is still exact even though durability died"
+    );
+    ss.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_exit_after_ms_then_resume_round_trips() {
+    let bin = env!("CARGO_BIN_EXE_jugglepac");
+    let dir = tmp_dir("cli");
+    let dir_s = dir.to_string_lossy().to_string();
+
+    let out = Command::new(bin)
+        .args([
+            "stream",
+            "--streams",
+            "64",
+            "--max-len",
+            "200",
+            "--durable-dir",
+            &dir_s,
+            "--snapshot-ms",
+            "5",
+            "--fsync",
+            "never",
+            "--exit-after-ms",
+            "120",
+        ])
+        .output()
+        .expect("run stream --exit-after-ms");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "interrupted run failed: {stdout}");
+    assert!(
+        stdout.contains("interrupted after"),
+        "missing interrupt banner: {stdout}"
+    );
+    assert!(
+        stdout.contains("checkpoint=written"),
+        "exit path must land the final checkpoint: {stdout}"
+    );
+
+    let out = Command::new(bin)
+        .args(["stream", "--durable-dir", &dir_s, "--fsync", "never", "--resume"])
+        .output()
+        .expect("run stream --resume");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "resume failed: {stdout}");
+    assert!(stdout.contains("recovered:"), "missing recovery report: {stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
