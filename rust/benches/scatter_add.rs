@@ -1,0 +1,80 @@
+//! Bench: keyed scatter-add — per-key accumulators under uniform vs
+//! Zipf-skewed key traffic.
+//!
+//! Drives a fixed budget of `(key, value)` pairs through the
+//! [`ScatterService`] at 4 shards, per engine (`native` = the fast
+//! ceiling, `exact` = correctly-rounded per-key sums) and per key
+//! distribution: uniform keys spread evenly over the key-hash shards,
+//! Zipf(1.1) keys concentrate on a hot head — the embedding-gradient /
+//! per-user-counter shape, where one shard's table takes most of the
+//! traffic. Reports pairs/s; the uniform-vs-Zipf gap is the skew tax.
+//! Results land in `BENCH_8.json` (benchkit::JsonSink) and CI archives
+//! them in the `bench-json` artifact.
+//!
+//! Correctness is asserted while timing: dyadic values (k/8, |k| ≤ 64),
+//! so every pair must be applied (zero refusals at this cardinality) and
+//! the drained key count must match the keys actually touched.
+//!
+//! Env knobs as elsewhere: `JUGGLEPAC_BENCH_ITERS`,
+//! `JUGGLEPAC_BENCH_SMOKE`, `JUGGLEPAC_BENCH_JSON`.
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{ScatterConfig, ScatterService};
+use jugglepac::engine::EngineConfig;
+use jugglepac::util::Xoshiro256;
+use jugglepac::workload::{scatter_pairs, KeyGen};
+use std::time::Duration;
+
+const SHARDS: usize = 4;
+const SUBMIT: usize = 4096;
+
+fn drive(engine: &str, bursts: &[Vec<(u64, f32)>], pairs: u64) {
+    let mut svc = ScatterService::start(ScatterConfig {
+        engine: EngineConfig::named(engine, 8, 256),
+        shards: SHARDS,
+        ..Default::default()
+    })
+    .expect("scatter service starts");
+    for burst in bursts {
+        svc.submit(burst).expect("submit");
+    }
+    let acks = svc.settle(Duration::from_secs(300)).expect("settle");
+    let applied: u64 = acks.iter().map(|a| a.applied).sum();
+    let refused: u64 = acks.iter().map(|a| a.refused).sum();
+    assert_eq!((applied, refused), (pairs, 0), "every pair applied, none refused");
+    let drained = svc.drain(Duration::from_secs(60)).expect("drain");
+    assert!(!drained.is_empty() && drained.len() as u64 <= pairs);
+    svc.shutdown();
+}
+
+fn main() {
+    let smoke = smoke();
+    let (pairs, key_space) = if smoke { (40_000, 8_192) } else { (400_000, 65_536) };
+    println!("=== scatter-add @ shards={SHARDS}: {pairs} pairs over ≤{key_space} keys ===");
+    let mut sink = JsonSink::new();
+
+    for (dist, keygen) in [
+        ("uniform", KeyGen::uniform(key_space as u64)),
+        ("zipf1.1", KeyGen::zipf(key_space, 1.1)),
+    ] {
+        // One pre-generated burst list per distribution, shared across
+        // engines and iterations: the timed region is the service, not
+        // the RNG.
+        let mut rng = Xoshiro256::seeded(0x5CA7_7E2A);
+        let bursts: Vec<Vec<(u64, f32)>> = (0..pairs / SUBMIT)
+            .map(|_| scatter_pairs(&keygen, SUBMIT, &mut rng))
+            .collect();
+        let total: u64 = bursts.iter().map(|b| b.len() as u64).sum();
+
+        for engine in ["native", "exact"] {
+            let name = format!("scatter {engine} {dist} shards={SHARDS}: {total} pairs");
+            let d = bench(&name, env_iters(3), || drive(engine, &bursts, total));
+            report_throughput("pairs", total, "pairs", d);
+            sink.record_throughput(&name, total, d);
+        }
+    }
+
+    if let Err(e) = sink.write(&json_path("BENCH_8.json")) {
+        eprintln!("could not write bench json: {e}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Hash-indexed per-key accumulator table — the scatter-add mode's state
+//! store (one per keyed shard; see [`crate::coordinator::scatter`]).
+//!
+//! The shape is SNIPPETS.md Snippet 1's BRAM accumulator in software: an
+//! address-indexed bank of accumulators with SET (first touch installs
+//! fresh engine state) and ADD (every later touch folds into it). Layout
+//! is a sparse→dense index: open-addressing linear probing over a
+//! power-of-two slot array that maps each key to a *dense* slot in
+//! parallel `keys`/`states` vectors. Dense state keeps the engine's
+//! [`scatter_batch`](crate::engine::ReduceEngine::scatter_batch) hot loop
+//! on a contiguous `&mut [PartialState]`, makes drain/snapshot a linear
+//! walk of exactly the live keys, and needs no tombstones — keys only
+//! leave via [`KeyTable::drain`], which resets the whole index.
+//!
+//! Capacity is a hard cap ([`KeyTable::max_keys`]): at the cap, a new key
+//! is refused with the typed [`AtCapacity`] error and **no state or index
+//! change** — the caller surfaces the refusal (and rolls back whatever it
+//! charged) instead of the table silently evicting someone else's sum.
+
+use crate::engine::PartialState;
+
+/// Typed at-capacity refusal: the table already holds `max` live keys, so
+/// a *new* key cannot be admitted (existing keys always accept adds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AtCapacity {
+    pub live: usize,
+    pub max: usize,
+}
+
+impl std::fmt::Display for AtCapacity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "key table at capacity ({}/{} keys live)", self.live, self.max)
+    }
+}
+
+impl std::error::Error for AtCapacity {}
+
+/// Probe-start hash: the splitmix64 finalizer. The keyed router
+/// ([`crate::coordinator::scatter::shard_for_key`]) consumes the *high*
+/// 32 bits of the same hash, so the low bits this table masks stay
+/// unbiased within a shard even though every key on that shard agreed on
+/// the high bits' residue.
+pub(crate) fn hash_key(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Sentinel in the sparse index: slot empty (dense indices are stored
+/// +1, so 0 never collides with dense slot 0).
+const EMPTY: u32 = 0;
+
+/// Open-addressing key → dense-slot table with a hard key cap.
+#[derive(Debug)]
+pub struct KeyTable {
+    /// Sparse index: `dense slot + 1`, or [`EMPTY`]. Power-of-two length,
+    /// grown by rehash at 7/8 load until `max_keys` fits at ≤ 1/2 load.
+    sparse: Vec<u32>,
+    /// Live keys, dense, insertion order.
+    keys: Vec<u64>,
+    /// Live per-key accumulator state, parallel to `keys`.
+    states: Vec<PartialState>,
+    max_keys: usize,
+}
+
+impl KeyTable {
+    /// A table admitting at most `max_keys` live keys (clamped to ≥ 1).
+    /// The sparse index starts small and grows by rehashing — a
+    /// million-key cap costs nothing until keys actually arrive.
+    pub fn new(max_keys: usize) -> Self {
+        let max_keys = max_keys.max(1);
+        Self {
+            sparse: vec![EMPTY; 64],
+            keys: Vec::new(),
+            states: Vec::new(),
+            max_keys,
+        }
+    }
+
+    /// Live keys.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The hard cap new keys are refused beyond.
+    pub fn max_keys(&self) -> usize {
+        self.max_keys
+    }
+
+    /// Dense slot of `key`, if live.
+    pub fn slot(&self, key: u64) -> Option<usize> {
+        let mask = self.sparse.len() - 1;
+        let mut i = hash_key(key) as usize & mask;
+        loop {
+            match self.sparse[i] {
+                EMPTY => return None,
+                d => {
+                    let dense = (d - 1) as usize;
+                    if self.keys[dense] == key {
+                        return Some(dense);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Dense slot of `key`, installing `fresh()` state on first touch —
+    /// the SET/ADD resolution step. Refuses a *new* key at the cap with
+    /// the typed [`AtCapacity`] error, touching nothing.
+    pub fn slot_or_insert(
+        &mut self,
+        key: u64,
+        fresh: impl FnOnce() -> PartialState,
+    ) -> Result<usize, AtCapacity> {
+        if let Some(slot) = self.slot(key) {
+            return Ok(slot);
+        }
+        if self.keys.len() >= self.max_keys {
+            return Err(AtCapacity { live: self.keys.len(), max: self.max_keys });
+        }
+        self.maybe_grow();
+        let dense = self.keys.len();
+        self.keys.push(key);
+        self.states.push(fresh());
+        self.index_insert(key, dense);
+        Ok(dense)
+    }
+
+    /// Seed one key's state directly (recovery replay). Replaces the
+    /// state if the key is already live; same [`AtCapacity`] refusal for
+    /// a new key at the cap.
+    pub fn insert_state(&mut self, key: u64, state: PartialState) -> Result<usize, AtCapacity> {
+        let slot = self.slot_or_insert(key, || PartialState::F32(0.0))?;
+        self.states[slot] = state;
+        Ok(slot)
+    }
+
+    /// The dense per-key state bank — what
+    /// [`scatter_batch`](crate::engine::ReduceEngine::scatter_batch)
+    /// accumulates into, indexed by resolved slot.
+    pub fn states_mut(&mut self) -> &mut [PartialState] {
+        &mut self.states
+    }
+
+    /// Key occupying dense `slot`.
+    pub fn key_at(&self, slot: usize) -> u64 {
+        self.keys[slot]
+    }
+
+    /// Remove and return every live `(key, state)` — the eviction path:
+    /// drained state belongs to the caller, and the table is empty (and
+    /// fully re-admittable) afterwards.
+    pub fn drain(&mut self) -> Vec<(u64, PartialState)> {
+        self.sparse.iter_mut().for_each(|s| *s = EMPTY);
+        std::mem::take(&mut self.keys)
+            .into_iter()
+            .zip(std::mem::take(&mut self.states))
+            .collect()
+    }
+
+    /// Clone every live `(key, state)`, canonicalized (renormalized limb
+    /// state; see [`PartialState::canonicalize`]) so snapshot bytes are a
+    /// pure function of each key's accumulated value. The table itself is
+    /// untouched.
+    pub fn snapshot(&self) -> Vec<(u64, PartialState)> {
+        self.keys
+            .iter()
+            .zip(self.states.iter())
+            .map(|(&k, s)| {
+                let mut s = s.clone();
+                s.canonicalize();
+                (k, s)
+            })
+            .collect()
+    }
+
+    /// Grow the sparse index when the next insert would cross 7/8 load.
+    fn maybe_grow(&mut self) {
+        if (self.keys.len() + 1) * 8 <= self.sparse.len() * 7 {
+            return;
+        }
+        let new_len = (self.sparse.len() * 2).max(64);
+        self.sparse = vec![EMPTY; new_len];
+        for dense in 0..self.keys.len() {
+            let key = self.keys[dense];
+            self.index_insert(key, dense);
+        }
+    }
+
+    /// Install `key → dense` into the sparse index (caller guarantees
+    /// the key is not present and a free slot exists).
+    fn index_insert(&mut self, key: u64, dense: usize) {
+        let mask = self.sparse.len() - 1;
+        let mut i = hash_key(key) as usize & mask;
+        while self.sparse[i] != EMPTY {
+            i = (i + 1) & mask;
+        }
+        self.sparse[i] = dense as u32 + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_then_add_accumulates_per_key() {
+        let mut t = KeyTable::new(16);
+        let a = t.slot_or_insert(0xA, || PartialState::F32(0.0)).unwrap();
+        let b = t.slot_or_insert(0xB, || PartialState::F32(0.0)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(t.slot_or_insert(0xA, || unreachable!()).unwrap(), a);
+        t.states_mut()[a].accumulate(1.5);
+        t.states_mut()[a].accumulate(2.0);
+        t.states_mut()[b].accumulate(-4.0);
+        assert_eq!(t.len(), 2);
+        let mut drained = t.drain();
+        drained.sort_by_key(|&(k, _)| k);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, 0xA);
+        assert_eq!(drained[0].1.rounded(), 3.5);
+        assert_eq!(drained[1].1.rounded(), -4.0);
+        assert!(t.is_empty());
+        // Fully re-admittable after the drain.
+        t.slot_or_insert(0xC, || PartialState::F32(0.0)).unwrap();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn at_capacity_refusal_is_typed_and_touches_nothing() {
+        let mut t = KeyTable::new(2);
+        t.slot_or_insert(1, || PartialState::F32(0.0)).unwrap();
+        t.slot_or_insert(2, || PartialState::F32(0.0)).unwrap();
+        let err = t.slot_or_insert(3, || PartialState::F32(0.0)).unwrap_err();
+        assert_eq!(err, AtCapacity { live: 2, max: 2 });
+        assert!(err.to_string().contains("2/2"));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.slot(3), None, "refused key left no trace");
+        // Existing keys still accept adds at the cap.
+        let s = t.slot_or_insert(1, || unreachable!()).unwrap();
+        t.states_mut()[s].accumulate(1.0);
+        assert_eq!(t.states_mut()[s].rounded(), 1.0);
+    }
+
+    #[test]
+    fn survives_growth_across_many_keys() {
+        let mut t = KeyTable::new(10_000);
+        for k in 0..5_000u64 {
+            let slot = t.slot_or_insert(k * 0x9E37_79B9, || PartialState::F32(0.0)).unwrap();
+            t.states_mut()[slot].accumulate(k as f32);
+        }
+        assert_eq!(t.len(), 5_000);
+        for k in 0..5_000u64 {
+            let slot = t.slot(k * 0x9E37_79B9).expect("key survived growth");
+            assert_eq!(t.key_at(slot), k * 0x9E37_79B9);
+            assert_eq!(t.states_mut()[slot].rounded(), k as f32);
+        }
+    }
+
+    #[test]
+    fn snapshot_clones_without_disturbing_live_state() {
+        let mut t = KeyTable::new(8);
+        let s = t.slot_or_insert(7, || PartialState::F32(0.0)).unwrap();
+        t.states_mut()[s].accumulate(2.5);
+        let snap = t.snapshot();
+        assert_eq!(snap, vec![(7, PartialState::F32(2.5))]);
+        t.states_mut()[s].accumulate(0.5);
+        assert_eq!(t.snapshot()[0].1.rounded(), 3.0);
+        assert_eq!(snap[0].1.rounded(), 2.5, "snapshot is a point-in-time copy");
+    }
+
+    #[test]
+    fn insert_state_seeds_and_replaces() {
+        let mut t = KeyTable::new(2);
+        t.insert_state(9, PartialState::F32(4.0)).unwrap();
+        t.insert_state(9, PartialState::F32(6.0)).unwrap();
+        assert_eq!(t.len(), 1);
+        let s = t.slot(9).unwrap();
+        assert_eq!(t.states_mut()[s].rounded(), 6.0);
+        t.insert_state(10, PartialState::F32(1.0)).unwrap();
+        assert!(t.insert_state(11, PartialState::F32(1.0)).is_err());
+    }
+}

@@ -54,6 +54,24 @@ pub struct Metrics {
     /// allocating (see `coordinator::BatchPool`): steady-state serving
     /// should recycle nearly every batch.
     pub batches_recycled: AtomicU64,
+    /// Gauge: keys currently holding live state across every keyed
+    /// shard's table (scatter-add mode; see `coordinator::scatter`).
+    /// Falls back to 0 when the tables are drained.
+    pub keys_live: AtomicU64,
+    /// `(key, value)` pairs applied to per-key accumulators (scatter-add
+    /// mode's `values_reduced` analogue).
+    pub scatter_adds: AtomicU64,
+    /// Keys whose state left a live table via `drain` (the scatter-add
+    /// eviction path: drained state is handed back to the caller).
+    pub key_evictions: AtomicU64,
+    /// Pairs refused because the owning shard's key table was at
+    /// capacity (typed at-capacity refusal; no state or gauge changes).
+    pub scatter_refusals: AtomicU64,
+    /// Gauge: pairs submitted to the keyed pipeline but not yet
+    /// acknowledged. Charged before dispatch, discharged (in full) by the
+    /// ack — including for refused pairs — so it returns to 0 when the
+    /// pipeline is drained.
+    pub scatter_pairs_in_flight: AtomicU64,
     latency_us: Mutex<Histogram>,
     shards: Vec<ShardCounters>,
 }
@@ -76,6 +94,11 @@ impl Metrics {
             reorder_duplicates: AtomicU64::new(0),
             slab_bytes_in_flight: AtomicU64::new(0),
             batches_recycled: AtomicU64::new(0),
+            keys_live: AtomicU64::new(0),
+            scatter_adds: AtomicU64::new(0),
+            key_evictions: AtomicU64::new(0),
+            scatter_refusals: AtomicU64::new(0),
+            scatter_pairs_in_flight: AtomicU64::new(0),
             latency_us: Mutex::new(Histogram::new()),
             shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
         }
@@ -115,6 +138,11 @@ impl Metrics {
             reorder_duplicates: self.reorder_duplicates.load(Ordering::Relaxed),
             slab_bytes_in_flight: self.slab_bytes_in_flight.load(Ordering::Relaxed),
             batches_recycled: self.batches_recycled.load(Ordering::Relaxed),
+            keys_live: self.keys_live.load(Ordering::Relaxed),
+            scatter_adds: self.scatter_adds.load(Ordering::Relaxed),
+            key_evictions: self.key_evictions.load(Ordering::Relaxed),
+            scatter_refusals: self.scatter_refusals.load(Ordering::Relaxed),
+            scatter_pairs_in_flight: self.scatter_pairs_in_flight.load(Ordering::Relaxed),
             latency_us: self.latency_us.lock().unwrap().clone(),
             per_shard: self
                 .shards
@@ -162,6 +190,11 @@ pub struct MetricsSnapshot {
     pub reorder_duplicates: u64,
     pub slab_bytes_in_flight: u64,
     pub batches_recycled: u64,
+    pub keys_live: u64,
+    pub scatter_adds: u64,
+    pub key_evictions: u64,
+    pub scatter_refusals: u64,
+    pub scatter_pairs_in_flight: u64,
     pub latency_us: Histogram,
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -212,6 +245,26 @@ impl MetricsSnapshot {
         }
         if self.engine_failures > 0 {
             s.push_str(&format!(" | ENGINE FAILURES: {} batches lost", self.engine_failures));
+        }
+        s
+    }
+
+    /// Scatter-add-mode report line (the keyed pipeline's analogue of
+    /// [`report`](Self::report); batching/reorder fields do not apply).
+    pub fn scatter_report(&self, wall: std::time::Duration) -> String {
+        let secs = wall.as_secs_f64().max(1e-9);
+        let mut s = format!(
+            "scatter: {} adds ({:.2} Madds/s) | {} keys live | latency: {}",
+            self.scatter_adds,
+            self.scatter_adds as f64 / secs / 1e6,
+            self.keys_live,
+            self.latency_us.summary("us"),
+        );
+        if self.key_evictions > 0 {
+            s.push_str(&format!(" | {} keys drained", self.key_evictions));
+        }
+        if self.scatter_refusals > 0 {
+            s.push_str(&format!(" | {} pairs REFUSED at capacity", self.scatter_refusals));
         }
         s
     }

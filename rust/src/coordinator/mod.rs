@@ -41,16 +41,22 @@
 
 pub mod assembler;
 pub mod batcher;
+pub mod keytable;
 pub mod metrics;
 pub mod reorder;
+pub mod scatter;
 mod shard;
 pub mod slab;
 pub mod steal;
 
 pub use assembler::{Assembler, Completed};
 pub use batcher::{live_flags, Batch, BatchPool, Batcher, Router, SeqBatch};
+pub use keytable::KeyTable;
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use reorder::{ReorderBuffer, ShardDone};
+pub use scatter::{
+    shard_for_key, ScatterAck, ScatterConfig, ScatterRecovery, ScatterService,
+};
 pub use slab::{BurstSlab, SetView, SlabRef};
 pub use steal::StealPool;
 

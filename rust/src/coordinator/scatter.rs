@@ -1,0 +1,769 @@
+//! Keyed scatter-add service mode: per-key accumulators at
+//! millions-of-keys cardinality.
+//!
+//! Where the plain [`Service`](super::Service) reduces each submitted
+//! *set* to one sum, this mode accumulates `(key, value)` pairs into one
+//! running sum **per key** — the gradient-aggregation / feature-count
+//! shape where a submission touches a sparse slice of a huge key space.
+//! The paper's pipelined-accumulation discipline carries over with one
+//! structural change to the router:
+//!
+//! - **Sharding is by key hash, not round-robin.** A key's state lives on
+//!   exactly one shard ([`shard_for_key`]), so the `exact` engine's
+//!   correctly-rounded, order-invariant guarantee holds *per key*: every
+//!   add for a key folds into the same superaccumulator, and no
+//!   cross-shard merge of a key's state ever happens. Round-robin (and
+//!   its spill/steal machinery) would scatter one key's adds across
+//!   shards and force a merge point; key affinity removes it. The cost is
+//!   accepted skew: a hot key serializes on its owning shard.
+//! - **State is a capped per-shard [`KeyTable`].** At the cap, pairs for
+//!   *new* keys are refused — counted, acked, and reported typed — never
+//!   silently dropped or evicted. Existing keys always accept adds.
+//! - **Ticketed acks, delivered in submission order.** Each submission
+//!   fans out to its owning shards and completes when every shard acks;
+//!   [`ScatterService::recv_timeout`] releases completions in ticket
+//!   order (the same software-PIS reordering idea as the set pipeline,
+//!   one level up).
+//!
+//! Durability rides the session tier's snapshot log
+//! ([`crate::session::durable`]): the whole key table is periodically
+//! written as one self-contained [`wire::TAG_SCATTER`] frame (engine
+//! name + per-key canonicalized [`PartialState`]), so a crashed service
+//! recovers every key's exact limb state; replay keyed on the scatter
+//! tag skips session frames (and vice versa — old decoders skip scatter
+//! frames cleanly).
+
+use super::keytable::{hash_key, KeyTable};
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::engine::{self, EngineConfig, PartialState, ReduceEngine};
+use crate::session::durable::{self, DurabilityConfig, SnapshotLog};
+use crate::wire::{self, ByteReader, ByteWriter, CodecError};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The owning shard of `key`: high hash bits, so the low bits the
+/// [`KeyTable`] probe masks stay unbiased within a shard. Every add for
+/// a key is pinned here — no spill, no steal — because moving a keyed
+/// add would either split the key's state or force a merge point.
+pub fn shard_for_key(key: u64, shards: usize) -> usize {
+    ((hash_key(key) >> 32) as usize) % shards.max(1)
+}
+
+/// Scatter-mode configuration.
+#[derive(Clone, Debug)]
+pub struct ScatterConfig {
+    /// Engine per shard. Must be scatter-capable
+    /// ([`EngineCaps::scatter`](crate::engine::EngineCaps)): the cycle
+    /// adapters reduce whole sets through the simulated circuit and have
+    /// no per-key surface, so `start` refuses them up front.
+    pub engine: EngineConfig,
+    pub shards: usize,
+    /// Per-shard submission queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Hard cap on live keys per shard; pairs for new keys beyond it are
+    /// refused (typed in the ack), never silently dropped.
+    pub max_keys_per_shard: usize,
+    /// When set, the key tables snapshot to this log and
+    /// [`ScatterService::recover_from`] can resume them after a crash.
+    pub durability: Option<DurabilityConfig>,
+}
+
+impl Default for ScatterConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::native(8, 256),
+            shards: 2,
+            queue_depth: 64,
+            max_keys_per_shard: 1 << 20,
+            durability: None,
+        }
+    }
+}
+
+/// Completion of one [`ScatterService::submit`]: how many of its pairs
+/// were applied and how many were refused at capacity. `applied +
+/// refused` always equals the submitted pair count — refusal is a
+/// reported outcome, not a lost message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScatterAck {
+    pub ticket: u64,
+    pub applied: u64,
+    pub refused: u64,
+}
+
+/// What recovery found in the scatter log.
+#[derive(Clone, Debug)]
+pub struct ScatterRecovery {
+    /// Keys restored into the live tables.
+    pub keys: usize,
+    /// Generation the state came from (`None`: empty/fresh log).
+    pub generation: Option<u64>,
+    /// Complete scatter snapshots scanned in the chosen generation.
+    pub snapshots_replayed: u64,
+    /// The chosen generation ended in a torn frame replay dropped.
+    pub torn_tail: bool,
+    /// Mid-file corruption was detected; recovery fell back.
+    pub corrupt: bool,
+}
+
+enum ToKeyed {
+    Pairs { ticket: u64, pairs: Vec<(u64, f32)> },
+    /// Collect the shard's table: `drain` takes ownership (eviction),
+    /// otherwise canonicalized clones (snapshot). FIFO per shard, so a
+    /// collect observes every pair submitted before it.
+    Collect { drain: bool, reply: Sender<Vec<(u64, PartialState)>> },
+}
+
+struct ShardAck {
+    ticket: u64,
+    applied: u64,
+    refused: u64,
+}
+
+struct Pending {
+    /// Shards yet to ack this ticket.
+    remaining: usize,
+    applied: u64,
+    refused: u64,
+    submitted_at: Instant,
+}
+
+/// The keyed scatter-add front end: owns the shard workers, the ticket
+/// ledger, and (optionally) the durable snapshot log.
+pub struct ScatterService {
+    txs: Vec<SyncSender<ToKeyed>>,
+    rx_ack: Receiver<ShardAck>,
+    pending: BTreeMap<u64, Pending>,
+    /// Completed tickets not yet released (completion can run ahead of
+    /// ticket order when shards drain at different speeds).
+    done: BTreeMap<u64, ScatterAck>,
+    next_ticket: u64,
+    next_out: u64,
+    metrics: Arc<Metrics>,
+    engine_name: String,
+    shards: usize,
+    log: Option<SnapshotLog>,
+    last_snapshot: Instant,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ScatterService {
+    /// Start a fresh scatter service (any prior durable history at the
+    /// configured dir is wiped — use [`Self::recover_from`] to resume).
+    pub fn start(cfg: ScatterConfig) -> Result<Self> {
+        let shards = cfg.shards.max(1);
+        Self::start_inner(cfg, vec![Vec::new(); shards], true, Vec::new())
+    }
+
+    /// Recover from the durable scatter log: replay the newest complete
+    /// [`wire::TAG_SCATTER`] snapshot, seed the key tables (repartitioned
+    /// by the *current* shard count — the hash router makes the layout a
+    /// pure function of `shards`), and resume accumulating. Refuses to
+    /// resume under a different engine: per-key state is engine-typed,
+    /// and folding new adds into another engine's state would silently
+    /// change every key's semantics.
+    pub fn recover_from(cfg: ScatterConfig) -> Result<(Self, ScatterRecovery)> {
+        let d = cfg
+            .durability
+            .clone()
+            .ok_or_else(|| anyhow!("scatter recovery requires a durability config"))?;
+        let r = durable::replay_tagged(&d.dir, wire::TAG_SCATTER, decode_scatter_payload)
+            .context("replaying scatter snapshot log")?;
+        let shards = cfg.shards.max(1);
+        let mut seed: Vec<Vec<(u64, PartialState)>> = vec![Vec::new(); shards];
+        let mut counters = Vec::new();
+        let mut keys = 0;
+        if let Some(snap) = r.snapshot {
+            if snap.engine != cfg.engine.name {
+                bail!(
+                    "scatter log was written by engine '{}'; resuming with '{}' would change \
+                     per-key accumulation semantics",
+                    snap.engine,
+                    cfg.engine.name
+                );
+            }
+            counters = snap.counters;
+            keys = snap.entries.len();
+            for (k, s) in snap.entries {
+                seed[shard_for_key(k, shards)].push((k, s));
+            }
+        }
+        let svc = Self::start_inner(cfg, seed, false, counters)?;
+        Ok((
+            svc,
+            ScatterRecovery {
+                keys,
+                generation: r.generation,
+                snapshots_replayed: r.snapshots_seen,
+                torn_tail: r.torn_tail,
+                corrupt: r.corrupt,
+            },
+        ))
+    }
+
+    fn start_inner(
+        cfg: ScatterConfig,
+        seed: Vec<Vec<(u64, PartialState)>>,
+        wipe_history: bool,
+        counters: Vec<u64>,
+    ) -> Result<Self> {
+        let entry = engine::lookup(&cfg.engine.name)?;
+        if !entry.caps.scatter {
+            bail!(
+                "engine '{}' does not support keyed scatter-add (cycle adapters reduce whole \
+                 sets through the simulated circuit; pick native, softfp, or exact)",
+                entry.name
+            );
+        }
+        let shards = cfg.shards.max(1);
+        let metrics = Arc::new(Metrics::new(shards));
+        let seeded: u64 = seed.iter().map(|s| s.len() as u64).sum();
+        metrics.keys_live.store(seeded, Ordering::Relaxed);
+        if let [adds, evictions, refusals] = counters[..] {
+            metrics.scatter_adds.store(adds, Ordering::Relaxed);
+            metrics.key_evictions.store(evictions, Ordering::Relaxed);
+            metrics.scatter_refusals.store(refusals, Ordering::Relaxed);
+        }
+        let log = match cfg.durability.clone() {
+            Some(d) => Some(SnapshotLog::create(d, wipe_history)?),
+            None => None,
+        };
+        let (tx_ack, rx_ack) = channel::<ShardAck>();
+        // Same readiness handshake as the set service: `start` must not
+        // return until every shard's engine is built and its seed state
+        // restored, or a worker's failure is surfaced as the error.
+        let (tx_ready, rx_ready) = sync_channel::<std::result::Result<(), String>>(shards);
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for (shard, seed) in seed.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<ToKeyed>(cfg.queue_depth.max(1));
+            let args = KeyedArgs {
+                shard,
+                engine: cfg.engine.clone(),
+                max_keys: cfg.max_keys_per_shard,
+                seed,
+                rx,
+                tx_ack: tx_ack.clone(),
+                metrics: Arc::clone(&metrics),
+                tx_ready: tx_ready.clone(),
+            };
+            let h = std::thread::Builder::new()
+                .name(format!("scatter-shard-{shard}"))
+                .spawn(move || run_keyed_shard(args))
+                .context("spawning scatter shard worker")?;
+            txs.push(tx);
+            handles.push(h);
+        }
+        drop(tx_ready);
+        for _ in 0..shards {
+            match rx_ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => bail!("scatter shard failed to start: {e}"),
+                Err(_) => bail!("scatter shard died during startup"),
+            }
+        }
+        Ok(Self {
+            txs,
+            rx_ack,
+            pending: BTreeMap::new(),
+            done: BTreeMap::new(),
+            next_ticket: 0,
+            next_out: 0,
+            metrics,
+            engine_name: cfg.engine.name,
+            shards,
+            log,
+            last_snapshot: Instant::now(),
+            handles,
+        })
+    }
+
+    /// Submit a batch of `(key, value)` pairs; returns the ticket its
+    /// [`ScatterAck`] will carry. Pairs are routed to their owning shards
+    /// and applied in submission order per key (key affinity + FIFO shard
+    /// queues). The in-flight gauge is charged for the whole submission
+    /// up front and discharged ack by ack — applied and refused alike —
+    /// with the undeliverable remainder rolled back if the pipeline is
+    /// dead, so the gauge always returns to zero.
+    pub fn submit(&mut self, pairs: &[(u64, f32)]) -> Result<u64> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        if pairs.is_empty() {
+            self.done.insert(ticket, ScatterAck { ticket, applied: 0, refused: 0 });
+            self.maybe_snapshot();
+            return Ok(ticket);
+        }
+        let mut per_shard: Vec<Vec<(u64, f32)>> = vec![Vec::new(); self.shards];
+        for &(k, v) in pairs {
+            per_shard[shard_for_key(k, self.shards)].push((k, v));
+        }
+        self.metrics.scatter_pairs_in_flight.fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        let mut sent = 0usize;
+        let mut undelivered = 0u64;
+        for (shard, chunk) in per_shard.into_iter().enumerate() {
+            if chunk.is_empty() {
+                continue;
+            }
+            if undelivered > 0 {
+                // Pipeline already found dead: roll back, don't send.
+                undelivered += chunk.len() as u64;
+                continue;
+            }
+            let n = chunk.len() as u64;
+            match self.txs[shard].send(ToKeyed::Pairs { ticket, pairs: chunk }) {
+                Ok(()) => sent += 1,
+                Err(_) => undelivered += n,
+            }
+        }
+        if sent > 0 {
+            self.pending.insert(
+                ticket,
+                Pending { remaining: sent, applied: 0, refused: 0, submitted_at: Instant::now() },
+            );
+        }
+        if undelivered > 0 {
+            self.metrics.scatter_pairs_in_flight.fetch_sub(undelivered, Ordering::Relaxed);
+            bail!("scatter pipeline shut down: shard worker exited");
+        }
+        self.maybe_snapshot();
+        Ok(ticket)
+    }
+
+    /// Receive the next completed submission, in ticket order.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<ScatterAck> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(ack) = self.done.remove(&self.next_out) {
+                self.next_out += 1;
+                return Some(ack);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            match self.rx_ack.recv_timeout(deadline - now) {
+                Ok(a) => self.absorb(a),
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Block until every outstanding ticket has completed; returns the
+    /// acks in ticket order.
+    pub fn settle(&mut self, timeout: Duration) -> Result<Vec<ScatterAck>> {
+        let deadline = Instant::now() + timeout;
+        let mut acks = Vec::new();
+        while !(self.pending.is_empty() && self.done.is_empty()) {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("timed out settling scatter acks ({} pending)", self.pending.len());
+            }
+            match self.recv_timeout(deadline - now) {
+                Some(a) => acks.push(a),
+                None => bail!("timed out settling scatter acks ({} pending)", self.pending.len()),
+            }
+        }
+        Ok(acks)
+    }
+
+    fn absorb(&mut self, a: ShardAck) {
+        // Refused pairs discharge the gauge too: refusal is an outcome,
+        // not a leak.
+        self.metrics.scatter_pairs_in_flight.fetch_sub(a.applied + a.refused, Ordering::Relaxed);
+        let Some(p) = self.pending.get_mut(&a.ticket) else { return };
+        p.applied += a.applied;
+        p.refused += a.refused;
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            let p = self.pending.remove(&a.ticket).expect("pending entry present");
+            let us = p.submitted_at.elapsed().as_micros() as u64;
+            self.metrics.record_latency_us(us);
+            self.done.insert(
+                a.ticket,
+                ScatterAck { ticket: a.ticket, applied: p.applied, refused: p.refused },
+            );
+        }
+    }
+
+    /// Drain every live key: the per-key states leave the tables (the
+    /// eviction path — `keys_live` falls to zero, `key_evictions` counts
+    /// them) and are returned sorted by key. Pairs submitted before the
+    /// drain are included (FIFO shard queues); the service keeps running
+    /// and re-admits keys afterwards.
+    pub fn drain(&mut self, timeout: Duration) -> Result<Vec<(u64, PartialState)>> {
+        self.collect(true, timeout)
+    }
+
+    /// Clone every live key's canonicalized state, sorted by key,
+    /// without disturbing the tables.
+    pub fn snapshot_keys(&mut self, timeout: Duration) -> Result<Vec<(u64, PartialState)>> {
+        self.collect(false, timeout)
+    }
+
+    fn collect(&mut self, drain: bool, timeout: Duration) -> Result<Vec<(u64, PartialState)>> {
+        let (tx, rx) = channel();
+        let mut expect = 0;
+        for t in &self.txs {
+            if t.send(ToKeyed::Collect { drain, reply: tx.clone() }).is_err() {
+                bail!("scatter pipeline shut down: shard worker exited");
+            }
+            expect += 1;
+        }
+        drop(tx);
+        let mut out = Vec::new();
+        let deadline = Instant::now() + timeout;
+        for _ in 0..expect {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let entries = rx.recv_timeout(left).context("collecting scatter shard state")?;
+            out.extend(entries);
+        }
+        // Keys are disjoint across shards (hash affinity), so a sort is
+        // the whole merge.
+        out.sort_unstable_by_key(|&(k, _)| k);
+        Ok(out)
+    }
+
+    /// Write one durable snapshot of the full key table now. Returns
+    /// whether a complete frame reached the log (false with no log, a
+    /// dead/killed log, or an IO-degraded append).
+    pub fn snapshot_now(&mut self) -> bool {
+        if self.log.is_none() {
+            return false;
+        }
+        self.last_snapshot = Instant::now();
+        {
+            let log = self.log.as_ref().expect("checked above");
+            if !log.alive || log.faults().killed() {
+                return false;
+            }
+        }
+        let entries = match self.collect(false, Duration::from_secs(30)) {
+            Ok(e) => e,
+            Err(_) => return false,
+        };
+        let counters = [
+            self.metrics.scatter_adds.load(Ordering::Relaxed),
+            self.metrics.key_evictions.load(Ordering::Relaxed),
+            self.metrics.scatter_refusals.load(Ordering::Relaxed),
+        ];
+        let payload = encode_scatter_payload(&self.engine_name, &counters, &entries);
+        let log = self.log.as_mut().expect("checked above");
+        log.append_tagged(wire::TAG_SCATTER, &payload).wrote
+    }
+
+    /// Opportunistic snapshot timer, checked on the submit path (the
+    /// same cadence discipline as the session service's pump loop).
+    fn maybe_snapshot(&mut self) {
+        let Some(log) = self.log.as_ref() else { return };
+        let interval = log.config().snapshot_interval;
+        if interval.is_zero() || self.last_snapshot.elapsed() < interval {
+            return;
+        }
+        self.snapshot_now();
+    }
+
+    /// Fault-injection handle of the durable log, when one is configured.
+    pub fn faults(&self) -> Option<durable::Faults> {
+        self.log.as_ref().map(|l| l.faults().clone())
+    }
+
+    /// Point-in-time metrics (gauges included).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Final durable snapshot, stop the shard workers, settle the
+    /// in-flight gauge, and return final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.snapshot_now();
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // Workers have exited: every ack they ever sent is in the
+        // channel. Drain them so the in-flight gauge settles to zero.
+        while let Ok(a) = self.rx_ack.try_recv() {
+            self.absorb(a);
+        }
+        self.metrics.snapshot()
+    }
+}
+
+struct KeyedArgs {
+    shard: usize,
+    engine: EngineConfig,
+    max_keys: usize,
+    seed: Vec<(u64, PartialState)>,
+    rx: Receiver<ToKeyed>,
+    tx_ack: Sender<ShardAck>,
+    metrics: Arc<Metrics>,
+    tx_ready: SyncSender<std::result::Result<(), String>>,
+}
+
+/// One keyed shard: owns its engine and its [`KeyTable`]; resolves each
+/// pair to a dense slot (SET on first touch, via the engine's fresh key
+/// state) and hands the whole batch to
+/// [`ReduceEngine::scatter_batch`](crate::engine::ReduceEngine::scatter_batch).
+fn run_keyed_shard(a: KeyedArgs) {
+    let mut eng: Box<dyn ReduceEngine> = match engine::build(&a.engine) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = a.tx_ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut table = KeyTable::new(a.max_keys);
+    for (k, s) in a.seed {
+        if let Err(e) = table.insert_state(k, s) {
+            let _ = a.tx_ready.send(Err(format!("seeding recovered keys: {e}")));
+            return;
+        }
+    }
+    if a.tx_ready.send(Ok(())).is_err() {
+        return;
+    }
+    let mut values: Vec<f32> = Vec::new();
+    let mut slots: Vec<usize> = Vec::new();
+    while let Ok(msg) = a.rx.recv() {
+        match msg {
+            ToKeyed::Pairs { ticket, pairs } => {
+                values.clear();
+                slots.clear();
+                let mut refused = 0u64;
+                let before = table.len() as u64;
+                for &(key, v) in &pairs {
+                    match table.slot_or_insert(key, || eng.new_key_state()) {
+                        Ok(slot) => {
+                            values.push(v);
+                            slots.push(slot);
+                        }
+                        Err(_) => refused += 1,
+                    }
+                }
+                let inserted = table.len() as u64 - before;
+                let t0 = Instant::now();
+                if eng.scatter_batch(&values, &slots, table.states_mut()).is_err() {
+                    a.metrics.engine_failures.fetch_add(1, Ordering::Relaxed);
+                }
+                let ns = t0.elapsed().as_nanos() as u64;
+                let applied = values.len() as u64;
+                if inserted > 0 {
+                    a.metrics.keys_live.fetch_add(inserted, Ordering::Relaxed);
+                }
+                if refused > 0 {
+                    a.metrics.scatter_refusals.fetch_add(refused, Ordering::Relaxed);
+                }
+                a.metrics.scatter_adds.fetch_add(applied, Ordering::Relaxed);
+                a.metrics.record_batch(a.shard, 1, applied, ns);
+                if a.tx_ack.send(ShardAck { ticket, applied, refused }).is_err() {
+                    return;
+                }
+            }
+            ToKeyed::Collect { drain, reply } => {
+                let entries = if drain {
+                    let e = table.drain();
+                    let n = e.len() as u64;
+                    if n > 0 {
+                        a.metrics.keys_live.fetch_sub(n, Ordering::Relaxed);
+                        a.metrics.key_evictions.fetch_add(n, Ordering::Relaxed);
+                    }
+                    e
+                } else {
+                    table.snapshot()
+                };
+                let _ = reply.send(entries);
+            }
+        }
+    }
+}
+
+// ── Durable payload codec (TAG_SCATTER frames) ──────────────────────────
+
+/// Encode the full key table as one self-contained snapshot payload:
+/// owning engine name, service counters, then sorted `(key, state)`
+/// records (states pre-canonicalized by [`KeyTable::snapshot`], so the
+/// bytes are a pure function of each key's accumulated value).
+fn encode_scatter_payload(
+    engine: &str,
+    counters: &[u64],
+    entries: &[(u64, PartialState)],
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_str(engine);
+    w.put_u8(counters.len() as u8);
+    for &c in counters {
+        w.put_u64(c);
+    }
+    w.put_u64(entries.len() as u64);
+    for (k, s) in entries {
+        w.put_u64(*k);
+        wire::put_partial(&mut w, s);
+    }
+    w.into_inner()
+}
+
+struct DecodedScatter {
+    engine: String,
+    counters: Vec<u64>,
+    entries: Vec<(u64, PartialState)>,
+}
+
+fn decode_scatter_payload(buf: &[u8]) -> Result<DecodedScatter, CodecError> {
+    let mut r = ByteReader::new(buf);
+    let engine = r.str()?.to_string();
+    let nc = r.u8()? as usize;
+    let mut counters = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        counters.push(r.u64()?);
+    }
+    let n = r.u64()?;
+    if n > 1 << 28 {
+        return Err(CodecError::Malformed { what: "implausible key count" });
+    }
+    let mut entries = Vec::with_capacity((n as usize).min(1 << 16));
+    for _ in 0..n {
+        let k = r.u64()?;
+        let s = wire::get_partial(&mut r)?;
+        entries.push((k, s));
+    }
+    r.done()?;
+    Ok(DecodedScatter { engine, counters, entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs_sum(svc: &mut ScatterService, pairs: &[(u64, f32)]) -> ScatterAck {
+        svc.submit(pairs).expect("submit");
+        svc.recv_timeout(Duration::from_secs(5)).expect("timely ack")
+    }
+
+    #[test]
+    fn keyed_sums_land_on_their_keys_across_shards() {
+        for shards in [1usize, 3] {
+            let mut svc = ScatterService::start(ScatterConfig {
+                engine: EngineConfig::native(4, 8),
+                shards,
+                ..ScatterConfig::default()
+            })
+            .expect("start");
+            let ack =
+                pairs_sum(&mut svc, &[(10, 1.0), (20, 2.0), (10, 0.5), (30, -1.0), (20, 2.0)]);
+            assert_eq!(ack, ScatterAck { ticket: 0, applied: 5, refused: 0 });
+            let drained = svc.drain(Duration::from_secs(5)).expect("drain");
+            let sums: Vec<(u64, f32)> =
+                drained.into_iter().map(|(k, s)| (k, s.rounded())).collect();
+            assert_eq!(sums, vec![(10, 1.5), (20, 4.0), (30, -1.0)], "shards={shards}");
+            let m = svc.shutdown();
+            assert_eq!(m.scatter_adds, 5);
+            assert_eq!(m.keys_live, 0, "drain evicted everything");
+            assert_eq!(m.key_evictions, 3);
+            assert_eq!(m.scatter_pairs_in_flight, 0);
+        }
+    }
+
+    #[test]
+    fn acks_release_in_ticket_order() {
+        let mut svc = ScatterService::start(ScatterConfig {
+            engine: EngineConfig::native(4, 8),
+            shards: 4,
+            ..ScatterConfig::default()
+        })
+        .expect("start");
+        for i in 0..20u64 {
+            let pairs: Vec<(u64, f32)> = (0..8).map(|j| (i * 8 + j, 1.0)).collect();
+            assert_eq!(svc.submit(&pairs).expect("submit"), i);
+        }
+        let acks = svc.settle(Duration::from_secs(10)).expect("settle");
+        let tickets: Vec<u64> = acks.iter().map(|a| a.ticket).collect();
+        assert_eq!(tickets, (0..20).collect::<Vec<_>>());
+        assert!(acks.iter().all(|a| a.applied == 8 && a.refused == 0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn at_capacity_refuses_new_keys_but_keeps_serving_old_ones() {
+        let mut svc = ScatterService::start(ScatterConfig {
+            engine: EngineConfig::native(4, 8),
+            shards: 1,
+            max_keys_per_shard: 2,
+            ..ScatterConfig::default()
+        })
+        .expect("start");
+        let ack = pairs_sum(&mut svc, &[(1, 1.0), (2, 1.0)]);
+        assert_eq!((ack.applied, ack.refused), (2, 0));
+        // Table full: adds to live keys apply, the new key is refused.
+        let ack = pairs_sum(&mut svc, &[(1, 1.0), (3, 9.0), (2, 1.0)]);
+        assert_eq!((ack.applied, ack.refused), (2, 1));
+        let m = svc.metrics();
+        assert_eq!(m.scatter_refusals, 1);
+        assert_eq!(m.keys_live, 2);
+        assert_eq!(m.scatter_pairs_in_flight, 0, "refused pairs discharge the gauge");
+        let drained = svc.drain(Duration::from_secs(5)).expect("drain");
+        assert_eq!(drained.len(), 2, "refused key left no state behind");
+        // The drain freed the table: the refused key is admissible now.
+        let ack = pairs_sum(&mut svc, &[(3, 9.0)]);
+        assert_eq!((ack.applied, ack.refused), (1, 0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_submission_completes_immediately() {
+        let mut svc = ScatterService::start(ScatterConfig {
+            engine: EngineConfig::native(4, 8),
+            shards: 2,
+            ..ScatterConfig::default()
+        })
+        .expect("start");
+        let t = svc.submit(&[]).expect("submit");
+        let ack = svc.recv_timeout(Duration::from_secs(1)).expect("immediate");
+        assert_eq!(ack, ScatterAck { ticket: t, applied: 0, refused: 0 });
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cycle_adapters_are_refused_up_front() {
+        let err = ScatterService::start(ScatterConfig {
+            engine: EngineConfig::jugglepac(4, 8),
+            shards: 1,
+            ..ScatterConfig::default()
+        })
+        .expect_err("no per-key surface on the circuit adapters");
+        assert!(err.to_string().contains("scatter"), "{err:#}");
+    }
+
+    #[test]
+    fn scatter_payload_round_trips() {
+        let entries = vec![
+            (3u64, PartialState::F32(1.25)),
+            (9u64, PartialState::F32(-0.5)),
+        ];
+        let payload = encode_scatter_payload("native", &[10, 2, 1], &entries);
+        let d = decode_scatter_payload(&payload).expect("decodes");
+        assert_eq!(d.engine, "native");
+        assert_eq!(d.counters, vec![10, 2, 1]);
+        assert_eq!(d.entries, entries);
+        // Truncation is typed, not a panic.
+        assert!(decode_scatter_payload(&payload[..payload.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn shard_for_key_is_stable_and_in_range() {
+        for shards in [1usize, 2, 3, 8] {
+            let mut hit = vec![false; shards];
+            for k in 0..256u64 {
+                let s = shard_for_key(k, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for_key(k, shards), "pure function of (key, shards)");
+                hit[s] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "all {shards} shards own some key");
+        }
+    }
+}

@@ -409,6 +409,13 @@ impl ReduceEngine for ExactEngine {
         }
         Ok(())
     }
+
+    /// Per-key scatter state is full limb state: every key's running sum
+    /// stays exact (and therefore permutation invariant) no matter how
+    /// its arrivals interleave with other keys' across submissions.
+    fn new_key_state(&self) -> super::PartialState {
+        super::PartialState::Exact(Box::new(SuperAccumulator::new()))
+    }
 }
 
 pub(crate) fn build(cfg: &EngineConfig) -> Result<Box<dyn ReduceEngine>> {

@@ -26,13 +26,13 @@
 //!
 //! | name        | backend                                            | caps |
 //! |-------------|----------------------------------------------------|------|
-//! | `xla`       | AOT XLA artifact via PJRT                          | shared_tree |
-//! | `native`    | vectorized masked pairwise tree ([`crate::fp::vreduce`]) | shared_tree |
-//! | `softfp`    | bit-accurate software IEEE adder per tree node     | shared_tree |
+//! | `xla`       | AOT XLA artifact via PJRT                          | shared_tree, scatter |
+//! | `native`    | vectorized masked pairwise tree ([`crate::fp::vreduce`]) | shared_tree, scatter |
+//! | `softfp`    | bit-accurate software IEEE adder per tree node     | shared_tree, scatter |
 //! | `jugglepac` | cycle-accurate JugglePAC circuit ([`crate::jugglepac`]) | — |
 //! | `treesched` | multi-adder tree scheduler ([`crate::baselines::treesched`]) | — |
 //! | `intac`     | carry-save integer circuit ([`crate::intac`]), fixed-point | order_invariant |
-//! | `exact`     | Neal-2015 superaccumulator ([`exact::SuperAccumulator`]) | bit_exact, order_invariant, partial_state |
+//! | `exact`     | Neal-2015 superaccumulator ([`exact::SuperAccumulator`]) | bit_exact, order_invariant, partial_state, scatter |
 //!
 //! # Adding an engine
 //!
@@ -110,6 +110,37 @@ pub trait ReduceEngine {
         out.extend(sums_scratch.drain(..).map(PartialState::F32));
         Ok(())
     }
+
+    /// Fresh per-key accumulator state for the scatter-add service mode
+    /// (`state[key] += v`). The default is a rounded-f32 cell seeded at
+    /// +0.0 — sequential adds in arrival order, the SET/ADD semantic of a
+    /// hardware address-indexed BRAM accumulator. Engines that carry wider
+    /// state override it — `exact` hands out fresh superaccumulator limbs
+    /// so every key's sum stays correctly rounded and permutation
+    /// invariant — and advertise support via [`EngineCaps::scatter`].
+    fn new_key_state(&self) -> PartialState {
+        PartialState::F32(0.0)
+    }
+
+    /// Fold one resolved scatter batch into per-key states:
+    /// `states[slots[i]].accumulate(values[i])` for each `i`, in order.
+    /// The keyed shard worker has already resolved every pair's key to a
+    /// table slot — admission control and at-capacity refusal happen
+    /// *before* the engine runs, so this is the pure accumulate hot loop
+    /// (no allocation, no hashing, no fallibility beyond the engine's
+    /// own).
+    fn scatter_batch(
+        &mut self,
+        values: &[f32],
+        slots: &[usize],
+        states: &mut [PartialState],
+    ) -> Result<()> {
+        debug_assert_eq!(values.len(), slots.len());
+        for (&v, &slot) in values.iter().zip(slots.iter()) {
+            states[slot].accumulate(v);
+        }
+        Ok(())
+    }
 }
 
 /// Typed capability flags an engine guarantees. Tests select assertions by
@@ -131,6 +162,12 @@ pub struct EngineCaps {
     /// wider than a rounded f32, so its accuracy guarantees survive chunk
     /// and streaming-fragment boundaries (see [`partial`]).
     pub partial_state: bool,
+    /// Serves the keyed scatter-add mode ([`ReduceEngine::scatter_batch`]):
+    /// per-key accumulation into a hash-indexed table of
+    /// [`PartialState`]. False for the cycle adapters, whose semantic is
+    /// the simulated circuit itself — random-access per-key state has no
+    /// meaning there.
+    pub scatter: bool,
 }
 
 /// Engine selection + knobs: everything a worker thread needs to build its
@@ -272,6 +309,7 @@ const SHARED_TREE: EngineCaps = EngineCaps {
     order_invariant: false,
     shared_tree: true,
     partial_state: false,
+    scatter: true,
 };
 
 const CYCLE_CORE: EngineCaps = EngineCaps {
@@ -279,6 +317,7 @@ const CYCLE_CORE: EngineCaps = EngineCaps {
     order_invariant: false,
     shared_tree: false,
     partial_state: false,
+    scatter: false,
 };
 
 /// The engine catalogue, sorted by name. Every selection surface
@@ -291,6 +330,7 @@ pub const REGISTRY: &[EngineEntry] = &[
             order_invariant: true,
             shared_tree: false,
             partial_state: true,
+            scatter: true,
         },
         summary: "Neal-2015 superaccumulator: correctly-rounded, permutation-invariant sums",
         shape: config_shape,
@@ -303,6 +343,7 @@ pub const REGISTRY: &[EngineEntry] = &[
             order_invariant: true,
             shared_tree: false,
             partial_state: false,
+            scatter: false,
         },
         summary: "cycle-accurate INTAC carry-save circuit over 2^-16 fixed point",
         shape: config_shape,
@@ -461,6 +502,37 @@ mod tests {
         }
         for name in ["native", "softfp", "xla", "jugglepac", "treesched", "intac"] {
             assert!(!lookup(name).unwrap().caps.partial_state, "{name}: f32 carry is lossless");
+        }
+        for name in ["native", "softfp", "xla", "exact"] {
+            assert!(lookup(name).unwrap().caps.scatter, "{name} serves scatter-add");
+        }
+        for name in ["jugglepac", "treesched", "intac"] {
+            assert!(!lookup(name).unwrap().caps.scatter, "{name}: circuit semantics only");
+        }
+    }
+
+    #[test]
+    fn scatter_surface_matches_the_caps_flag() {
+        // Every scatter-capable engine accumulates per-slot states in
+        // order; the key-state kind follows partial_state (exact hands
+        // out limbs, everyone else a rounded f32 cell).
+        for entry in REGISTRY {
+            if entry.name == "xla" || !entry.caps.scatter {
+                continue;
+            }
+            let cfg = EngineConfig::named(entry.name, 2, 4);
+            let mut eng = build(&cfg).unwrap_or_else(|e| panic!("{}: {e:#}", entry.name));
+            let mut states = vec![eng.new_key_state(), eng.new_key_state()];
+            assert_eq!(
+                matches!(states[0], PartialState::Exact(_)),
+                entry.caps.partial_state,
+                "{}: key-state kind follows partial_state",
+                entry.name
+            );
+            // slot 0 gets 1.0 + 2.0, slot 1 gets 0.5 — interleaved.
+            eng.scatter_batch(&[1.0, 0.5, 2.0], &[0, 1, 0], &mut states).unwrap();
+            assert_eq!(states[0].rounded(), 3.0, "{}", entry.name);
+            assert_eq!(states[1].rounded(), 0.5, "{}", entry.name);
         }
     }
 

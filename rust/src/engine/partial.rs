@@ -65,6 +65,19 @@ impl PartialState {
         }
     }
 
+    /// Fold one more value into this state in place — the scatter-add
+    /// hot path (`state[key] += v`). For `F32` this is a plain rounded
+    /// add (sequential, order-sensitive, same as the classic engines'
+    /// one-shot semantics); for `Exact` it is an exact limb add, so
+    /// per-key sums stay correctly rounded and permutation invariant no
+    /// matter how arrivals interleave across submissions.
+    pub fn accumulate(&mut self, v: f32) {
+        match self {
+            PartialState::F32(s) => *s += v,
+            PartialState::Exact(acc) => acc.add(v),
+        }
+    }
+
     /// Consume the state into its final rounded sum.
     pub fn finish(self) -> f32 {
         match self {
@@ -175,6 +188,30 @@ mod tests {
         let (sum, state) = combine(vec![exact_of(&[2.0]), PartialState::F32(f32::NAN)]);
         assert!(sum.is_nan());
         assert!(state.rounded().is_nan());
+    }
+
+    #[test]
+    fn accumulate_matches_the_engines_native_semantics() {
+        // F32: sequential rounded adds, bit for bit.
+        let mut st = PartialState::F32(0.0);
+        let mut want = 0.0f32;
+        for v in [0.1f32, 2.5, -0.7, 1e-3] {
+            st.accumulate(v);
+            want += v;
+        }
+        assert_eq!(st.rounded().to_bits(), want.to_bits());
+        // Exact: order invariant and exact across cancellation.
+        let mut a = PartialState::Exact(Box::new(SuperAccumulator::new()));
+        let mut b = PartialState::Exact(Box::new(SuperAccumulator::new()));
+        let vals = [1e30f32, 1.0, -1e30, 0.25];
+        for &v in &vals {
+            a.accumulate(v);
+        }
+        for &v in vals.iter().rev() {
+            b.accumulate(v);
+        }
+        assert_eq!(a.rounded(), 1.25);
+        assert_eq!(a.rounded().to_bits(), b.rounded().to_bits());
     }
 
     #[test]

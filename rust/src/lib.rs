@@ -14,7 +14,10 @@
 //!   model standing in for ISE synthesis), [`workload`] (set generators and
 //!   traces, including the paper's fixed-point-ranged methodology).
 //! - **System layer** — [`coordinator`] (a streaming accumulation service
-//!   applying JugglePAC's scheduling idea at software scale), [`engine`]
+//!   applying JugglePAC's scheduling idea at software scale, plus the
+//!   keyed scatter-add mode in [`coordinator::scatter`]: key-hash-sharded
+//!   per-key accumulators — exact per key — behind capped hash tables
+//!   with typed at-capacity refusal), [`engine`]
 //!   (the pluggable reduction-engine registry the coordinator drives:
 //!   classic kernels, cycle-core adapters, and the exact-summation
 //!   superaccumulator, with a carryable partial-state surface), [`session`]

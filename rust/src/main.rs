@@ -8,6 +8,7 @@
 //!   intac        run a workload through INTAC
 //!   serve        end-to-end streaming service demo (any registry engine)
 //!   stream       streaming accumulation sessions demo (open/append/close)
+//!   scatter      keyed scatter-add demo (per-key accumulators, sharded)
 //!   engines      list the reduction-engine registry
 //!   artifacts    list the AOT artifacts the runtime sees
 //!
@@ -36,6 +37,7 @@ fn run() -> Result<()> {
         Some("intac") => cmd_intac(&args),
         Some("serve") => cmd_serve(&args),
         Some("stream") => cmd_stream(&args),
+        Some("scatter") => cmd_scatter(&args),
         Some("engines") => cmd_engines(),
         Some("artifacts") => cmd_artifacts(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -61,6 +63,7 @@ USAGE: jugglepac <subcommand> [options]
              [--shards K] [--steal on|off] [--stall0 US] [--zipf]
              [--seed X] [--latency L] [--registers R] [--artifact NAME]
              [--streaming]  (run the session subsystem instead — see stream)
+             [--scatter]  (run the keyed scatter-add mode — see scatter)
              [--listen ADDR]  (network mode: serve the wire protocol; with)
              [--parent ADDR] [--node-id N] [--fan-in K] [--expected-leaves L]
              [--leaf-values N] [--report-wait-ms W] [--run-ms T]
@@ -73,6 +76,11 @@ USAGE: jugglepac <subcommand> [options]
              [--resume]  (replay the snapshot log in PATH and resume)
              [--exit-after-ms T]  (SIGINT-ish: stop mid-script, drain +
              checkpoint, exit — acknowledged appends survive)
+  scatter    [--pairs P] [--keys K] [--submit B] [--engine NAME]
+             [--batch B] [--n N] [--shards S] [--max-keys M] [--zipf]
+             [--seed X] [--durable-dir PATH] [--snapshot-ms T]
+             [--fsync always|never]
+             [--resume]  (replay the scatter log in PATH and resume)
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
@@ -243,6 +251,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("streaming") {
         // The session subsystem behind the same engine/shard knobs.
         return cmd_stream(args);
+    }
+    if args.flag("scatter") {
+        // The keyed scatter-add mode behind the same engine/shard knobs.
+        return cmd_scatter(args);
     }
     let sets = args.get_usize("sets", 2000)?;
     let max_len = args.get_usize("max-len", 700)?;
@@ -647,6 +659,100 @@ fn stream_resume(cfg: jugglepac::session::SessionConfig) -> Result<()> {
     Ok(())
 }
 
+/// `scatter`: the keyed scatter-add mode. Drives `--pairs` generated
+/// `(key, value)` pairs — uniform or Zipf(1.1) over `--keys` distinct
+/// keys — through a [`ScatterService`], settles every ack, and reports
+/// per-key throughput plus any at-capacity refusals. With `--durable-dir`
+/// the key tables checkpoint to the scatter log; `--resume` replays it
+/// and keeps accumulating on top of the recovered state.
+fn cmd_scatter(args: &Args) -> Result<()> {
+    use jugglepac::coordinator::{ScatterConfig, ScatterService};
+    use jugglepac::session::{DurabilityConfig, FsyncPolicy};
+    use jugglepac::util::Xoshiro256;
+    use jugglepac::workload::{scatter_pairs, KeyGen};
+    use std::time::Duration;
+
+    let pairs = args.get_usize("pairs", 200_000)?;
+    let key_space = args.get_usize("keys", 65_536)?.max(1);
+    // `--submit` is the pairs-per-submission burst; `--batch`/`--n` stay
+    // the engine's own batching knobs (shared with serve/stream).
+    let submit = args.get_usize("submit", 4096)?.max(1);
+    let engine = jugglepac::engine::engine_config_from_args(args)?;
+    let durability = match args.get("durable-dir") {
+        Some(dir) => {
+            let mut d = DurabilityConfig::at(dir);
+            d.snapshot_interval = Duration::from_millis(args.get_u64("snapshot-ms", 100)?);
+            d.fsync = match args.get_or("fsync", "always") {
+                "always" => FsyncPolicy::Always,
+                "never" => FsyncPolicy::Never,
+                other => bail!("--fsync must be always|never, got {other:?}"),
+            };
+            Some(d)
+        }
+        None => None,
+    };
+    let durable = durability.is_some();
+    let cfg = ScatterConfig {
+        engine,
+        shards: args.get_usize("shards", 2)?.max(1),
+        max_keys_per_shard: args.get_usize("max-keys", 1 << 20)?.max(1),
+        durability,
+        ..Default::default()
+    };
+    let mut svc = if args.flag("resume") {
+        if !durable {
+            bail!("--resume requires --durable-dir");
+        }
+        let (svc, r) = ScatterService::recover_from(cfg)?;
+        println!(
+            "recovered: {} key(s), {} snapshot(s) replayed (generation {:?}{}{})",
+            r.keys,
+            r.snapshots_replayed,
+            r.generation,
+            if r.torn_tail { ", torn tail dropped" } else { "" },
+            if r.corrupt { ", corrupt frames skipped" } else { "" },
+        );
+        svc
+    } else {
+        ScatterService::start(cfg)?
+    };
+    let keygen = if args.flag("zipf") {
+        KeyGen::zipf(key_space, 1.1)
+    } else {
+        KeyGen::uniform(key_space as u64)
+    };
+    let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < pairs {
+        let n = submit.min(pairs - submitted);
+        let burst = scatter_pairs(&keygen, n, &mut rng);
+        svc.submit(&burst)?;
+        submitted += n;
+    }
+    let acks = svc.settle(Duration::from_secs(120))?;
+    let (applied, refused) = acks
+        .iter()
+        .fold((0u64, 0u64), |(a, r), ack| (a + ack.applied, r + ack.refused));
+    // Durable runs keep the tables live so `--resume` has state to
+    // replay; ephemeral runs drain them (and verify the eviction path).
+    let collected = if durable {
+        svc.snapshot_keys(Duration::from_secs(30))?
+    } else {
+        svc.drain(Duration::from_secs(30))?
+    };
+    let wall = t0.elapsed();
+    let m = svc.shutdown();
+    println!("{}", m.scatter_report(wall));
+    println!(
+        "pairs: {applied} applied + {refused} refused = {} submitted | {} distinct key(s) {}",
+        applied + refused,
+        collected.len(),
+        if durable { "checkpointed" } else { "drained" },
+    );
+    Ok(())
+}
+
 fn cmd_engines() -> Result<()> {
     println!("{:<12} {:<44} {}", "name", "capabilities", "summary");
     for entry in jugglepac::engine::REGISTRY {
@@ -662,6 +768,9 @@ fn cmd_engines() -> Result<()> {
         }
         if entry.caps.partial_state {
             caps.push("partial_state");
+        }
+        if entry.caps.scatter {
+            caps.push("scatter");
         }
         let caps = if caps.is_empty() { "-".to_string() } else { caps.join(",") };
         println!("{:<12} {:<44} {}", entry.name, caps, entry.summary);

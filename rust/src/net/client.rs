@@ -348,17 +348,12 @@ impl NetClient {
                             last: Box::new(e),
                         });
                     }
-                    let shift = (attempts - 1).min(16);
-                    let base = self
-                        .cfg
-                        .backoff
-                        .saturating_mul(1u32 << shift)
-                        .min(self.cfg.max_backoff);
-                    // Full jitter in [base/2, base].
-                    let nanos = base.as_nanos().min(u64::MAX as u128) as u64;
-                    let jittered = nanos / 2 + self.rng.next_below(nanos / 2 + 1);
-                    let sleep = Duration::from_nanos(jittered)
-                        .min(deadline.saturating_duration_since(Instant::now()));
+                    let sleep = backoff_before_retry(
+                        &self.cfg,
+                        attempts,
+                        &mut self.rng,
+                        deadline.saturating_duration_since(Instant::now()),
+                    );
                     std::thread::sleep(sleep);
                 }
             }
@@ -440,6 +435,37 @@ impl NetClient {
     }
 }
 
+/// The sleep before retry number `attempts` — extracted pure so its three
+/// guarantees are unit-testable in isolation:
+///
+/// 1. **Saturating growth.** The exponent is capped and the multiply
+///    saturates, so huge attempt counts (or an `attempts == 0` caller
+///    bug) never overflow or panic.
+/// 2. **Ceiling before jitter.** The base clamps to `max_backoff` *first*
+///    and jitter only shrinks it (full jitter in `[base/2, base]`), so no
+///    jittered sleep can exceed the configured ceiling.
+/// 3. **Deadline dominance.** The result never exceeds `remaining` (time
+///    left until the request deadline) — a retry loop with a generous
+///    backoff and a tiny deadline must not sleep past the point where it
+///    is obliged to give up.
+fn backoff_before_retry(
+    cfg: &ClientConfig,
+    attempts: u32,
+    rng: &mut Xoshiro256,
+    remaining: Duration,
+) -> Duration {
+    let shift = attempts.saturating_sub(1).min(16);
+    let base = cfg
+        .backoff
+        .saturating_mul(1u32 << shift)
+        .min(cfg.max_backoff);
+    // Full jitter in [base/2, base] decorrelates a thundering herd of
+    // leaves retrying against one recovering parent.
+    let nanos = base.as_nanos().min(u64::MAX as u128) as u64;
+    let jittered = nanos / 2 + rng.next_below(nanos / 2 + 1);
+    Duration::from_nanos(jittered).min(remaining)
+}
+
 fn classify(msg: Msg, expect: &Expect) -> Classified {
     match (msg, expect) {
         (Msg::Ack(Ack { stream, seq }), Expect::Ack { stream: s, seq: q }) => {
@@ -474,10 +500,86 @@ mod tests {
     #[test]
     fn backoff_is_bounded_and_jittered() {
         let cfg = ClientConfig::default();
-        // The shift arithmetic must not overflow for huge attempt counts.
-        let shift = (10_000u32 - 1).min(16);
-        let b = cfg.backoff.saturating_mul(1u32 << shift).min(cfg.max_backoff);
-        assert!(b <= cfg.max_backoff);
+        let mut rng = Xoshiro256::seeded(7);
+        let far = Duration::from_secs(3600);
+        // Ceiling holds for every attempt count, including the degenerate
+        // and absurd ones (0 must not underflow, u32::MAX must not
+        // overflow the shift or the multiply).
+        for attempts in [0u32, 1, 2, 5, 16, 17, 10_000, u32::MAX] {
+            for _ in 0..50 {
+                let s = backoff_before_retry(&cfg, attempts, &mut rng, far);
+                assert!(s <= cfg.max_backoff, "attempt {attempts}: {s:?}");
+            }
+        }
+        // Jitter stays in [base/2, base] once the exponential curve has
+        // hit the ceiling.
+        for _ in 0..200 {
+            let s = backoff_before_retry(&cfg, 16, &mut rng, far);
+            assert!(s >= cfg.max_backoff / 2, "full jitter lower bound: {s:?}");
+        }
+        // A saturating-huge base still respects the ceiling.
+        let mut huge = cfg.clone();
+        huge.backoff = Duration::MAX;
+        let s = backoff_before_retry(&huge, u32::MAX, &mut rng, far);
+        assert!(s <= huge.max_backoff);
+    }
+
+    #[test]
+    fn backoff_never_sleeps_past_the_deadline() {
+        // Generous backoff, tiny remaining budget: the deadline wins.
+        let mut cfg = ClientConfig::default();
+        cfg.backoff = Duration::from_secs(5);
+        cfg.max_backoff = Duration::from_secs(60);
+        let mut rng = Xoshiro256::seeded(9);
+        for remaining_us in [0u64, 1, 500, 2_000] {
+            let remaining = Duration::from_micros(remaining_us);
+            for attempts in 1..10u32 {
+                let s = backoff_before_retry(&cfg, attempts, &mut rng, remaining);
+                assert!(s <= remaining, "attempt {attempts}: slept {s:?} > {remaining:?}");
+            }
+        }
+    }
+
+    /// A dialer that always refuses — every attempt fails fast, so the
+    /// retry loop's timing is governed purely by its backoff sleeps.
+    struct DeadDialer;
+
+    impl Dialer for DeadDialer {
+        fn dial(&self) -> io::Result<Box<dyn Conn>> {
+            Err(io::Error::new(io::ErrorKind::ConnectionRefused, "down"))
+        }
+
+        fn addr(&self) -> String {
+            "dead:0".into()
+        }
+    }
+
+    #[test]
+    fn tiny_deadline_with_many_retries_returns_promptly() {
+        // Regression: with retries and backoff generous enough to sleep
+        // for minutes, a ~100ms request deadline must still bound the
+        // call — the backoff clamps to the remaining budget and the loop
+        // exits at the deadline with the typed exhaustion error.
+        let mut cfg = ClientConfig::default();
+        cfg.retries = 1_000;
+        cfg.backoff = Duration::from_millis(50);
+        cfg.max_backoff = Duration::from_secs(30);
+        cfg.request_deadline = Duration::from_millis(100);
+        let mut client = NetClient::new(Arc::new(DeadDialer), cfg);
+        let t0 = Instant::now();
+        let err = client.open_key(1).expect_err("server is down");
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "retry loop overslept its 100ms deadline: {elapsed:?}"
+        );
+        match err {
+            NetError::RetriesExhausted { attempts, last } => {
+                assert!(attempts >= 2, "deadline allowed at least one retry");
+                assert!(matches!(*last, NetError::Io { .. }), "last failure: {last}");
+            }
+            other => panic!("expected RetriesExhausted, got {other}"),
+        }
     }
 
     #[test]

@@ -292,11 +292,21 @@ impl SnapshotLog {
         self.generation
     }
 
-    /// Append one snapshot payload as a CRC frame, honoring kill points,
-    /// injected IO errors (bounded retry + exponential backoff), and
-    /// rotation. Never panics; never returns an error — a lost snapshot
-    /// degrades durability, not the service.
+    /// Append one session-table snapshot payload (a
+    /// [`wire::TAG_SNAPSHOT`] frame). See [`Self::append_tagged`].
     pub(crate) fn append_snapshot(&mut self, payload: &[u8]) -> AppendOutcome {
+        self.append_tagged(wire::TAG_SNAPSHOT, payload)
+    }
+
+    /// Append one snapshot payload as a CRC frame under `tag`, honoring
+    /// kill points, injected IO errors (bounded retry + exponential
+    /// backoff), and rotation. The session service writes
+    /// [`wire::TAG_SNAPSHOT`] frames, the keyed scatter service
+    /// ([`crate::coordinator::scatter`]) [`wire::TAG_SCATTER`] ones —
+    /// both share this log discipline, and replay keyed on one tag skips
+    /// the other cleanly. Never panics; never returns an error — a lost
+    /// snapshot degrades durability, not the service.
+    pub(crate) fn append_tagged(&mut self, tag: u8, payload: &[u8]) -> AppendOutcome {
         let mut out = AppendOutcome::default();
         if !self.alive || self.cfg.faults.killed() {
             return out;
@@ -309,7 +319,7 @@ impl SnapshotLog {
             return out;
         }
         let mut frame = Vec::with_capacity(payload.len() + wire::FRAME_OVERHEAD);
-        wire::write_frame(&mut frame, wire::TAG_SNAPSHOT, payload);
+        wire::write_frame(&mut frame, tag, payload);
         let must_rotate =
             self.bytes > 0 && self.bytes + frame.len() as u64 > self.cfg.max_log_bytes;
         if must_rotate || faults.should_kill(KillPoint::MidRotation, no) {
@@ -703,21 +713,35 @@ pub(crate) fn decode_snapshot_payload(buf: &[u8]) -> Result<DecodedSnapshot, Cod
 // ── Replay ──────────────────────────────────────────────────────────────
 
 /// Replay result: the newest recoverable snapshot, plus what the scan
-/// saw on the way.
-pub(crate) struct Replayed {
-    pub snapshot: Option<DecodedSnapshot>,
+/// saw on the way. `T` is the decoded payload type — the session table's
+/// [`DecodedSnapshot`] by default, the scatter service's key-table image
+/// via [`replay_tagged`].
+pub(crate) struct Replayed<T = DecodedSnapshot> {
+    pub snapshot: Option<T>,
     pub generation: Option<u64>,
     pub snapshots_seen: u64,
     pub torn_tail: bool,
     pub corrupt: bool,
 }
 
-/// Walk generations newest-first; within each, scan frames front to back
-/// and keep the last complete snapshot. A torn tail ends a scan quietly
-/// (normal crash debris); mid-file corruption ends it loudly but still
-/// falls back to the newest intact snapshot — only when *nothing* is
-/// recoverable does the typed error surface.
+/// Replay the session-table log: [`wire::TAG_SNAPSHOT`] frames decoded
+/// with [`decode_snapshot_payload`]. See [`replay_tagged`].
 pub(crate) fn replay(dir: &Path) -> Result<Replayed> {
+    replay_tagged(dir, wire::TAG_SNAPSHOT, decode_snapshot_payload)
+}
+
+/// Walk generations newest-first; within each, scan frames front to back
+/// and keep the last complete snapshot under `tag` (frames under any
+/// other tag skip cleanly, so session and scatter histories never read
+/// each other's state). A torn tail ends a scan quietly (normal crash
+/// debris); mid-file corruption ends it loudly but still falls back to
+/// the newest intact snapshot — only when *nothing* is recoverable does
+/// the typed error surface.
+pub(crate) fn replay_tagged<T>(
+    dir: &Path,
+    tag: u8,
+    decode: impl Fn(&[u8]) -> Result<T, CodecError>,
+) -> Result<Replayed<T>> {
     let gens = list_generations(dir);
     let mut saw_corrupt = false;
     let mut saw_torn = false;
@@ -725,7 +749,7 @@ pub(crate) fn replay(dir: &Path) -> Result<Replayed> {
     for &g in gens.iter().rev() {
         let bytes = fs::read(gen_path(dir, g))
             .with_context(|| format!("reading snapshot log generation {g}"))?;
-        let scan = scan_frames(&bytes);
+        let scan = scan_frames(&bytes, tag, &decode);
         saw_corrupt |= scan.corrupt;
         saw_torn |= scan.torn;
         if scan.err.is_some() {
@@ -755,22 +779,26 @@ pub(crate) fn replay(dir: &Path) -> Result<Replayed> {
     })
 }
 
-struct Scan {
-    last: Option<DecodedSnapshot>,
+struct Scan<T> {
+    last: Option<T>,
     seen: u64,
     torn: bool,
     corrupt: bool,
     err: Option<CodecError>,
 }
 
-fn scan_frames(buf: &[u8]) -> Scan {
+fn scan_frames<T>(
+    buf: &[u8],
+    tag: u8,
+    decode: &impl Fn(&[u8]) -> Result<T, CodecError>,
+) -> Scan<T> {
     let mut s = Scan { last: None, seen: 0, torn: false, corrupt: false, err: None };
     let mut pos = 0;
     while pos < buf.len() {
         match wire::read_frame(&buf[pos..]) {
             Ok((frame, used)) => {
-                if frame.tag == wire::TAG_SNAPSHOT {
-                    match decode_snapshot_payload(frame.payload) {
+                if frame.tag == tag {
+                    match decode(frame.payload) {
                         Ok(snap) => {
                             s.last = Some(snap);
                             s.seen += 1;
@@ -1083,6 +1111,24 @@ mod tests {
         let r = replay(&dir).expect("falls back across generations");
         assert_eq!(r.generation, Some(old_gen));
         assert_eq!(r.snapshot.expect("snap").next_stream, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tagged_frames_replay_independently() {
+        let dir = tmp_dir("tags");
+        let mut log = SnapshotLog::create(cfg_at(&dir), true).expect("create");
+        assert!(log.append_snapshot(&sample_payload(1)).wrote);
+        assert!(log.append_tagged(wire::TAG_SCATTER, b"keyed-bytes").wrote);
+        assert!(log.append_snapshot(&sample_payload(2)).wrote);
+        let r = replay(&dir).expect("session replay skips scatter frames");
+        assert_eq!(r.snapshots_seen, 2);
+        assert_eq!(r.snapshot.expect("snap").next_stream, 2);
+        let r = replay_tagged(&dir, wire::TAG_SCATTER, |b| Ok::<_, CodecError>(b.to_vec()))
+            .expect("scatter replay skips session frames");
+        assert_eq!(r.snapshots_seen, 1);
+        assert_eq!(r.snapshot.expect("payload"), b"keyed-bytes".to_vec());
+        assert!(!r.torn_tail && !r.corrupt);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -44,6 +44,12 @@ pub const TAG_PARTIAL: u8 = 0x01;
 /// Frame tag: a full session-table snapshot (see
 /// [`crate::session::durable`]).
 pub const TAG_SNAPSHOT: u8 = 0x10;
+/// Frame tag: a keyed scatter-add table snapshot — per-key
+/// `(u64, PartialState)` records plus the owning engine's name (see
+/// [`crate::coordinator::scatter`]). Shares the snapshot log's envelope
+/// and rotation machinery with [`TAG_SNAPSHOT`]; decoders that predate
+/// this tag skip it cleanly (unknown-tag forward compatibility).
+pub const TAG_SCATTER: u8 = 0x11;
 
 /// Typed decode failure. Every way a byte stream can be wrong maps to a
 /// variant — decoding never panics and never fabricates values.

@@ -31,6 +31,6 @@ pub use codec::{
     decode_header, decode_partial_frame, encode_partial_frame, get_partial, put_partial,
     read_frame, read_frame_streaming, write_frame, ByteReader, ByteWriter, CodecError,
     Frame, FrameHeader, FrameReadError, FRAME_OVERHEAD, HEADER_LEN, MAX_PAYLOAD,
-    TAG_PARTIAL, TAG_SNAPSHOT, VERSION,
+    TAG_PARTIAL, TAG_SCATTER, TAG_SNAPSHOT, VERSION,
 };
 pub use crc32::{crc32, crc32_finish, crc32_update, CRC32_INIT};

@@ -62,8 +62,14 @@ pub struct ZipfTable {
 }
 
 impl ZipfTable {
+    /// Degenerate parameters are clamped rather than rejected: `max = 0`
+    /// yields a 1-element table (every draw is 1) and a non-finite `s`
+    /// is treated as 0 (uniform). Large finite `s` needs no special
+    /// case — the k = 1 term is `1^-s = 1.0`, so the CDF total stays
+    /// ≥ 1 even when every other weight underflows to zero.
     pub fn new(max: usize, s: f64) -> Self {
-        assert!(max >= 1);
+        let max = max.max(1);
+        let s = if s.is_finite() { s } else { 0.0 };
         let mut cum = Vec::with_capacity(max);
         let mut acc = 0.0f64;
         for k in 1..=max {
@@ -74,12 +80,95 @@ impl ZipfTable {
     }
 
     pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
-        let total = *self.cum.last().expect("max >= 1");
+        let total = *self.cum.last().expect("table is never empty");
+        if !total.is_finite() || total <= 0.0 {
+            // Pathological CDF (|s| large enough that weights overflow):
+            // no mass assignment is meaningful — pin to the head.
+            return 1;
+        }
         let u = rng.next_f64() * total;
         // First k whose cumulative weight reaches u (clamped: fp rounding
         // can leave u a hair past the final cumulative sum).
         self.cum.partition_point(|&c| c < u).min(self.cum.len() - 1) + 1
     }
+
+    /// Number of distinct outcomes (`max`, after clamping).
+    pub fn len(&self) -> usize {
+        self.cum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // clamped construction guarantees at least one outcome
+    }
+}
+
+/// Generator of `u64` keys for the scatter-add workload. Keys identify
+/// per-key accumulators, so the two axes that matter are cardinality
+/// (`space`: how many distinct keys exist) and skew: uniform keys spread
+/// load evenly across the key-hash shards, while Zipf keys concentrate
+/// traffic on a hot head — the embedding-gradient / per-user-counter
+/// shape. Ranks are passed through a bijective mix so the keyed tables
+/// see realistic scattered 64-bit keys instead of dense small integers.
+#[derive(Clone, Debug)]
+pub struct KeyGen {
+    kind: KeyKind,
+}
+
+#[derive(Clone, Debug)]
+enum KeyKind {
+    Uniform { space: u64 },
+    Zipf { table: ZipfTable },
+}
+
+impl KeyGen {
+    /// Uniform over `space` distinct keys (`space = 0` clamps to 1).
+    pub fn uniform(space: u64) -> Self {
+        Self { kind: KeyKind::Uniform { space: space.max(1) } }
+    }
+
+    /// Zipf(s) over `space` distinct keys: rank r is drawn with
+    /// probability ∝ r^(-s) (one O(space) table build, O(log space) per
+    /// draw — the same [`ZipfTable`] the length distributions use).
+    pub fn zipf(space: usize, s: f64) -> Self {
+        Self { kind: KeyKind::Zipf { table: ZipfTable::new(space, s) } }
+    }
+
+    /// Number of distinct keys this generator can produce.
+    pub fn space(&self) -> u64 {
+        match &self.kind {
+            KeyKind::Uniform { space } => *space,
+            KeyKind::Zipf { table } => table.len() as u64,
+        }
+    }
+
+    /// Draw one key (consumes one RNG value).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        let rank = match &self.kind {
+            KeyKind::Uniform { space } => rng.next_u64() % space,
+            KeyKind::Zipf { table } => table.sample(rng) as u64 - 1,
+        };
+        mix64(rank)
+    }
+}
+
+/// splitmix64 finalizer: a bijection on u64, used to turn dense ranks
+/// into scattered keys (and invertible, so distinct ranks stay distinct
+/// keys — the oracle in the differential suite relies on that).
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Generate `count` `(key, value)` scatter pairs: keys from `keys`,
+/// dyadic values (k/8, |k| ≤ 64) so per-key sums are exact in f32 at any
+/// association order — the same property `testkit::zipf_dyadic_sets`
+/// leans on, letting scatter tests and benches assert exact per-key sums
+/// under any sharding.
+pub fn scatter_pairs(keys: &KeyGen, count: usize, rng: &mut Xoshiro256) -> Vec<(u64, f32)> {
+    (0..count).map(|_| (keys.sample(rng), rng.range_i64(-64, 64) as f32 / 8.0)).collect()
 }
 
 /// Distribution of gaps (idle cycles) between consecutive sets.
@@ -280,6 +369,71 @@ mod tests {
         for _ in 0..2_000 {
             assert_eq!(dist.sample(&mut a), table.sample(&mut b));
         }
+    }
+
+    #[test]
+    fn zipf_table_degenerate_params_do_not_panic() {
+        let mut rng = Xoshiro256::seeded(0xDE6E);
+        // max = 0 clamps to a 1-element table: every draw is 1. (This
+        // used to assert-panic; LenDist::Zipf { max: 0 } now also works.)
+        let t = ZipfTable::new(0, 1.1);
+        assert_eq!(t.len(), 1);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 1);
+        }
+        assert_eq!(LenDist::Zipf { max: 0, s: 1.1 }.sample(&mut rng), 1);
+        // max = 1: one outcome regardless of s.
+        let t = ZipfTable::new(1, 0.0);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 1);
+        }
+        // s = 0: uniform weights; draws cover the range.
+        let t = ZipfTable::new(8, 0.0);
+        let draws: std::collections::HashSet<usize> =
+            (0..500).map(|_| t.sample(&mut rng)).collect();
+        assert!(draws.iter().all(|&k| (1..=8).contains(&k)));
+        assert!(draws.len() >= 6, "s=0 should cover most of [1,8], got {draws:?}");
+        // s = 50: every weight beyond k = 1 underflows toward zero — the
+        // head absorbs the mass, and nothing panics or divides by zero.
+        let t = ZipfTable::new(64, 50.0);
+        let ones = (0..100).filter(|_| t.sample(&mut rng) == 1).count();
+        assert!(ones >= 95, "head should dominate at s=50, got {ones}/100");
+        // Non-finite s is treated as 0 rather than poisoning the CDF.
+        let t = ZipfTable::new(4, f64::NAN);
+        for _ in 0..100 {
+            assert!((1..=4).contains(&t.sample(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn key_gen_covers_uniformly_and_skews_under_zipf() {
+        let mut rng = Xoshiro256::seeded(0x5CA7);
+        let uni = KeyGen::uniform(32);
+        assert_eq!(uni.space(), 32);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..2_000 {
+            *counts.entry(uni.sample(&mut rng)).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 32, "uniform draw should hit every key");
+        // Zipf: the hot key (rank 0 → mix64(0)) dominates.
+        let zipf = KeyGen::zipf(32, 1.1);
+        assert_eq!(zipf.space(), 32);
+        let mut zcounts = std::collections::HashMap::new();
+        for _ in 0..2_000 {
+            *zcounts.entry(zipf.sample(&mut rng)).or_insert(0usize) += 1;
+        }
+        let hot = zcounts.get(&mix64(0)).copied().unwrap_or(0);
+        assert!(hot > 400, "rank-0 key should be hot under Zipf, got {hot}/2000");
+        // mix64 is a bijection: distinct ranks give distinct keys.
+        let keys: std::collections::HashSet<u64> = (0..1000).map(mix64).collect();
+        assert_eq!(keys.len(), 1000);
+        // Degenerate spaces clamp instead of panicking.
+        assert_eq!(KeyGen::uniform(0).space(), 1);
+        assert_eq!(KeyGen::zipf(0, 1.1).space(), 1);
+        // scatter_pairs: dyadic values within the documented range.
+        let pairs = scatter_pairs(&uni, 64, &mut rng);
+        assert_eq!(pairs.len(), 64);
+        assert!(pairs.iter().all(|&(_, v)| (-8.0..=8.0).contains(&v) && (v * 8.0).fract() == 0.0));
     }
 
     #[test]

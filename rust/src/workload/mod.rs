@@ -12,6 +12,8 @@ pub mod gen;
 pub mod stream;
 pub mod trace;
 
-pub use gen::{GapDist, LenDist, SetStream, ValueGen, WorkloadConfig, ZipfTable};
+pub use gen::{
+    mix64, scatter_pairs, GapDist, KeyGen, LenDist, SetStream, ValueGen, WorkloadConfig, ZipfTable,
+};
 pub use stream::{StreamEvent, StreamMix, StreamMixConfig, StreamValueGen};
 pub use trace::{read_trace, write_trace, TraceFile};

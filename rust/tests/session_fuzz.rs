@@ -186,6 +186,73 @@ fn fuzz_lifecycle_with_snapshotting_underneath_is_unchanged() {
     }
 }
 
+/// Gauge-rollback audit leg: hammer admission control (a tiny
+/// `max_open_streams`) so a steady stream of opens is refused with the
+/// typed `AtCapacity` error, interleaved with appends and closes. A
+/// refused admission must charge *nothing*: after the churn settles,
+/// `partial_bytes` and `slab_bytes_in_flight` are exactly zero, the
+/// refusal count matches the ledger, and every admitted stream still
+/// sums exactly.
+#[test]
+fn fuzz_admission_refusals_charge_no_gauges() {
+    for shards in shard_counts(&[1, 2, 4]) {
+        property(&format!("session_admission_{shards}"), 10, |rng: &mut Xoshiro256| {
+            let mut cfg = base_cfg(shards);
+            cfg.max_open_streams = 4;
+            let mut ss = SessionService::start(cfg).unwrap();
+            let mut live: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            let mut closed: Vec<(StreamId, Vec<f32>)> = Vec::new();
+            let mut refusals = 0u64;
+            for _ in 0..rng.range(40, 80) {
+                match rng.range(0, 4) {
+                    0 | 1 => match ss.open() {
+                        Ok(id) => {
+                            assert!(live.len() < 4, "admission held the cap");
+                            live.push((id, Vec::new()));
+                        }
+                        Err(SessionError::AtCapacity { open, max }) => {
+                            assert_eq!((open, max), (4, 4));
+                            refusals += 1;
+                        }
+                        Err(other) => panic!("open: {other:?}"),
+                    },
+                    2 => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let frag = dyadic_frag(rng, 24);
+                            ss.append(live[k].0, &frag).unwrap();
+                            live[k].1.extend_from_slice(&frag);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let k = rng.range(0, live.len() - 1);
+                            let (id, vals) = live.swap_remove(k);
+                            ss.close(id).unwrap();
+                            closed.push((id, vals));
+                        }
+                    }
+                }
+            }
+            for (id, vals) in live.drain(..) {
+                ss.close(id).unwrap();
+                closed.push((id, vals));
+            }
+            let results = ss.flush(Duration::from_secs(30));
+            assert_eq!(results.len(), closed.len(), "refusals never eat a stream");
+            for (r, (id, vals)) in results.iter().zip(closed.iter()) {
+                assert_eq!(r.stream, *id, "close-order delivery");
+                assert_eq!(r.sum, vals.iter().sum::<f32>(), "{id}: exact dyadic sum");
+            }
+            let (sm, cm) = ss.shutdown();
+            assert_eq!(sm.admission_rejections, refusals, "refusal ledger");
+            assert_eq!(sm.partial_bytes, 0, "refused opens charged no carry");
+            assert_eq!(cm.slab_bytes_in_flight, 0, "slab gauge settled");
+            assert_eq!(sm.streams_finished as usize, closed.len());
+        });
+    }
+}
+
 #[test]
 fn fuzz_eviction_while_in_flight_never_stalls_closed_streams() {
     for shards in shard_counts(&[1, 2, 4]) {
