@@ -1,0 +1,222 @@
+//! Raw-speed bench for the explicit-SIMD kernel, the completion ring, and
+//! worker placement — the before/after evidence for each layer of the
+//! raw-speed push, in one binary:
+//!
+//! - **kernel micro**: the width-8 blocked pass per explicit level
+//!   (scalar / sse2 / avx2, whatever the host supports) over identical
+//!   rows — the pure SIMD speedup, bit-identity already proven by
+//!   `tests/simd_diff.rs`;
+//! - **ring vs channel**: the preallocated completion ring raced against
+//!   the seed's response path shape (`mpsc::channel::<Vec<Response>>`,
+//!   one `Vec` per delivery) on the same push/pop stimulus;
+//! - **e2e service**: submit-all/receive-all responses/s at shards {1, 4},
+//!   pinning off and on, under whatever kernel `JUGGLEPAC_SIMD` resolved —
+//!   the CI smoke runs this twice (auto and `off`) so BENCH_9.json and its
+//!   scalar twin give the end-to-end simd delta;
+//! - **session coalescing**: tiny-fragment append throughput with
+//!   coalescing off vs on (`coalesce_bytes`), same total values.
+//!
+//! Writes `BENCH_9.json` (override with `JUGGLEPAC_BENCH_JSON`).
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{
+    completion_ring, EngineConfig, Response, Service, ServiceConfig,
+};
+use jugglepac::fp::simd::{self, SimdLevel};
+use jugglepac::fp::vreduce::tree_reduce_in_place_with;
+use jugglepac::session::{SessionConfig, SessionService};
+use jugglepac::util::Xoshiro256;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    let mut sink = JsonSink::new();
+    kernel_micro(&mut sink);
+    ring_vs_channel(&mut sink);
+    e2e_service(&mut sink);
+    session_coalescing(&mut sink);
+    sink.write(&json_path("BENCH_9.json")).unwrap();
+}
+
+/// The blocked reduce per kernel level on identical rows.
+fn kernel_micro(sink: &mut JsonSink) {
+    let n = 256usize;
+    let rows = if smoke() { 512 } else { 4096 };
+    let iters = env_iters(15);
+    let mut rng = Xoshiro256::seeded(0x5EED);
+    let data: Vec<f32> = (0..rows * n).map(|_| (rng.next_f64() as f32 - 0.5) * 1e4).collect();
+    println!("=== explicit-SIMD kernel micro: {rows} rows of n={n} ===");
+    let mut levels: Vec<(Option<SimdLevel>, &str)> = vec![(None, "scalar")];
+    for l in [SimdLevel::Sse2, SimdLevel::Avx2] {
+        if simd::supported(l) {
+            levels.push((Some(l), l.name()));
+        }
+    }
+    let mut scratch: Vec<f32> = Vec::with_capacity(n);
+    for (level, name) in levels {
+        let median = bench(&format!("reduce n={n} kernel={name}"), iters, || {
+            let mut acc = 0.0f32;
+            for row in data.chunks_exact(n) {
+                scratch.clear();
+                scratch.extend_from_slice(row);
+                acc += tree_reduce_in_place_with(level, &mut scratch);
+            }
+            black_box(acc);
+        });
+        let values = (rows * n) as u64;
+        report_throughput("values", values, "values", median);
+        sink.record_throughput(&format!("raw_speed/kernel/{name}"), values, median);
+    }
+}
+
+/// The completion ring vs the seed response path's shape: an unbounded
+/// channel carrying one freshly-allocated `Vec<Response>` per delivery.
+fn ring_vs_channel(sink: &mut JsonSink) {
+    let total: u64 = if smoke() { 20_000 } else { 200_000 };
+    let burst = 256u64;
+    let iters = env_iters(9);
+    let resp = |i: u64| Response {
+        req_id: i,
+        sum: i as f32,
+        latency: Duration::ZERO,
+        state: None,
+    };
+    println!("=== completion path primitive: {total} responses, bursts of {burst} ===");
+
+    let median = bench("completion ring push+pop", iters, || {
+        let (tx, rx) = completion_ring(1024);
+        let mut popped = 0u64;
+        let mut i = 0u64;
+        while i < total {
+            for _ in 0..burst.min(total - i) {
+                tx.push(resp(i)).unwrap();
+                i += 1;
+            }
+            while let Some(r) = rx.try_recv() {
+                black_box(r.req_id);
+                popped += 1;
+            }
+        }
+        assert_eq!(popped, total);
+    });
+    report_throughput("responses", total, "resp", median);
+    sink.record_throughput("raw_speed/completion/ring", total, median);
+
+    let median = bench("channel<Vec<Response>> (seed shape)", iters, || {
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<Response>>();
+        let mut popped = 0u64;
+        let mut i = 0u64;
+        while i < total {
+            for _ in 0..burst.min(total - i) {
+                tx.send(vec![resp(i)]).unwrap();
+                i += 1;
+            }
+            while let Ok(v) = rx.try_recv() {
+                for r in v {
+                    black_box(r.req_id);
+                    popped += 1;
+                }
+            }
+        }
+        assert_eq!(popped, total);
+    });
+    report_throughput("responses", total, "resp", median);
+    sink.record_throughput("raw_speed/completion/channel_vec", total, median);
+}
+
+/// End-to-end responses/s: shards {1, 4} × pinning {off, on}, native
+/// engine, under the process-wide kernel selection (run the whole binary
+/// with `JUGGLEPAC_SIMD=off` for the scalar twin).
+fn e2e_service(sink: &mut JsonSink) {
+    let sets = if smoke() { 300 } else { 3000 };
+    let iters = env_iters(3);
+    let mut rng = Xoshiro256::seeded(0xE2E9);
+    let requests: Vec<Vec<f32>> = (0..sets)
+        .map(|_| {
+            let n = rng.range(8, 512);
+            (0..n).map(|_| rng.range_i64(-512, 512) as f32 / 32.0).collect()
+        })
+        .collect();
+    let kernel = simd::active().map(SimdLevel::name).unwrap_or("scalar");
+    println!("=== e2e service: {sets} sets, native 8x256, kernel={kernel} ===");
+    for shards in [1usize, 4] {
+        for pin in [false, true] {
+            let name = format!("e2e shards={shards} pin={} simd={kernel}", if pin { "on" } else { "off" });
+            let median = bench(&name, iters, || {
+                let mut svc = Service::start(ServiceConfig {
+                    engine: EngineConfig::native(8, 256),
+                    shards,
+                    pin,
+                    ..Default::default()
+                })
+                .unwrap();
+                for chunk in requests.chunks(128) {
+                    svc.submit_burst(chunk.to_vec()).unwrap();
+                }
+                for i in 0..requests.len() {
+                    let r = svc.recv_timeout(Duration::from_secs(60)).expect("response");
+                    assert_eq!(r.req_id, i as u64);
+                }
+                svc.shutdown();
+            });
+            report_throughput("responses", sets as u64, "resp", median);
+            sink.record_throughput(
+                &format!("raw_speed/e2e/shards{shards}/pin_{}", if pin { "on" } else { "off" }),
+                sets as u64,
+                median,
+            );
+        }
+    }
+}
+
+/// Tiny-fragment session appends, coalescing off vs on — same values,
+/// same chunk sequence (bit-identity is the coalescer's contract), fewer
+/// pipeline wakes.
+fn session_coalescing(sink: &mut JsonSink) {
+    let streams = 8usize;
+    let frags_per_stream = if smoke() { 250 } else { 2500 };
+    let frag = 4usize; // deliberately far below the row width
+    let total_values = (streams * frags_per_stream * frag) as u64;
+    let iters = env_iters(3);
+    println!(
+        "=== session append coalescing: {streams} streams x {frags_per_stream} fragments of {frag} ==="
+    );
+    for coalesce_bytes in [0usize, 16 * 1024] {
+        let label = if coalesce_bytes == 0 {
+            "off".to_string()
+        } else {
+            format!("{}KiB", coalesce_bytes / 1024)
+        };
+        let median = bench(&format!("append frag={frag} coalesce={label}"), iters, || {
+            let mut ss = SessionService::start(SessionConfig {
+                service: ServiceConfig {
+                    engine: EngineConfig::native(8, 64),
+                    ..Default::default()
+                },
+                coalesce_bytes,
+                coalesce_us: 500,
+                ..Default::default()
+            })
+            .unwrap();
+            let ids: Vec<_> = (0..streams).map(|_| ss.open().unwrap()).collect();
+            let values = vec![0.5f32; frag];
+            for _ in 0..frags_per_stream {
+                for &id in &ids {
+                    ss.append(id, &values).unwrap();
+                }
+            }
+            for &id in &ids {
+                ss.close(id).unwrap();
+            }
+            let results = ss.flush(Duration::from_secs(60));
+            assert_eq!(results.len(), streams);
+            ss.shutdown();
+        });
+        report_throughput("values", total_values, "values", median);
+        sink.record_throughput(
+            &format!("raw_speed/session/coalesce_{label}"),
+            total_values,
+            median,
+        );
+    }
+}

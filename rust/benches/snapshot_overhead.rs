@@ -55,6 +55,7 @@ fn drive(mix: &StreamMix, want: &[f32], durability: Option<DurabilityConfig>) {
         max_open_streams: 4096,
         idle_ttl: Duration::from_secs(300),
         durability,
+        ..Default::default()
     })
     .expect("session service starts");
     mix.replay(&mut ss).expect("replay");

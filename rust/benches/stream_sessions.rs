@@ -43,6 +43,7 @@ fn drive_streamed(engine: &str, mix: &StreamMix, want: &[f32]) {
         max_open_streams: 4096,
         idle_ttl: Duration::from_secs(300),
         durability: None,
+        ..Default::default()
     })
     .expect("session service starts");
     mix.replay(&mut ss).expect("replay");

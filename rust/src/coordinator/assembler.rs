@@ -15,8 +15,11 @@
 //! subsystem's chunk probes) additionally get their combined state
 //! delivered alongside the rounded sum.
 
-use crate::engine::partial::{combine, PartialState};
+use crate::engine::partial::{combine_into, PartialState};
 use std::collections::HashMap;
+
+/// Recycled chunk-slot buffers kept per assembler (see `free_parts`).
+const FREE_PARTS_CAP: usize = 32;
 
 /// A finished set reduction.
 #[derive(Clone, Debug, PartialEq)]
@@ -41,6 +44,12 @@ struct PartialSet {
 }
 
 /// Assembles chunk partials into set results, optionally reordering.
+///
+/// The completion path is allocation-free at steady state: the chunk-slot
+/// buffers (`parts`), the combine inputs, and the tree-combine scratch are
+/// all recycled across requests, and delivery appends into a caller-owned
+/// output buffer ([`add_partial_state_into`](Self::add_partial_state_into))
+/// instead of returning a fresh `Vec` per call.
 #[derive(Debug)]
 pub struct Assembler {
     inflight: HashMap<u64, PartialSet>,
@@ -48,11 +57,26 @@ pub struct Assembler {
     next_to_deliver: u64,
     /// Finished but waiting for earlier ids (ordered mode only).
     held: HashMap<u64, Completed>,
+    /// Combine-input scratch: a finished request's parts drain here, then
+    /// [`combine_into`] drains this (capacity retained both times).
+    combine_parts: Vec<PartialState>,
+    /// Tree-combine scratch for [`combine_into`]'s f32 path.
+    combine_level: Vec<f32>,
+    /// Recycled `parts` buffers from finished requests (bounded).
+    free_parts: Vec<Vec<Option<PartialState>>>,
 }
 
 impl Assembler {
     pub fn new(ordered: bool) -> Self {
-        Self { inflight: HashMap::new(), ordered, next_to_deliver: 0, held: HashMap::new() }
+        Self {
+            inflight: HashMap::new(),
+            ordered,
+            next_to_deliver: 0,
+            held: HashMap::new(),
+            combine_parts: Vec::new(),
+            combine_level: Vec::new(),
+            free_parts: Vec::new(),
+        }
     }
 
     /// Declare a request and how many chunks it was split into.
@@ -64,14 +88,12 @@ impl Assembler {
     /// [`PartialState`] to be delivered with the result (the streaming
     /// sessions' chunk-probe path).
     pub fn expect_carry(&mut self, req_id: u64, chunks: u32, carry: bool) {
+        let mut parts = self.free_parts.pop().unwrap_or_default();
+        parts.clear();
+        parts.resize(chunks as usize, None);
         let prev = self.inflight.insert(
             req_id,
-            PartialSet {
-                expected: chunks,
-                received: 0,
-                parts: vec![None; chunks as usize],
-                carry,
-            },
+            PartialSet { expected: chunks, received: 0, parts, carry },
         );
         debug_assert!(prev.is_none(), "request {req_id} declared twice");
     }
@@ -83,30 +105,54 @@ impl Assembler {
     }
 
     /// Feed one chunk partial; returns any results now deliverable (in
-    /// order if `ordered`).
+    /// order if `ordered`). Allocates the returned `Vec` — the pipeline
+    /// hot path uses [`add_partial_state_into`](Self::add_partial_state_into).
     pub fn add_partial_state(
         &mut self,
         req_id: u64,
         chunk_idx: u32,
         part: PartialState,
     ) -> Vec<Completed> {
+        let mut out = Vec::new();
+        self.add_partial_state_into(req_id, chunk_idx, part, &mut out);
+        out
+    }
+
+    /// Feed one chunk partial, **appending** any results now deliverable
+    /// (in order if `ordered`) to the caller-owned `out` — the delivery
+    /// stages keep one buffer each and drain it after every call, so the
+    /// steady state allocates nothing here.
+    pub fn add_partial_state_into(
+        &mut self,
+        req_id: u64,
+        chunk_idx: u32,
+        part: PartialState,
+        out: &mut Vec<Completed>,
+    ) {
         let Some(ps) = self.inflight.get_mut(&req_id) else {
             debug_assert!(false, "partial for undeclared request {req_id}");
-            return Vec::new();
+            return;
         };
         debug_assert!(ps.parts[chunk_idx as usize].is_none(), "duplicate chunk");
         ps.parts[chunk_idx as usize] = Some(part);
         ps.received += 1;
         if ps.received < ps.expected {
-            return Vec::new();
+            return;
         }
-        let ps = self.inflight.remove(&req_id).unwrap();
+        let mut ps = self.inflight.remove(&req_id).unwrap();
         // Combine partials in chunk order via the shared rule: F32 parts
         // over the same pairwise tree as the engine kernel
         // ([`crate::fp::vreduce::tree_reduce_in_place`]), exact limb
-        // states by integer merge with one final rounding.
-        let parts: Vec<PartialState> = ps.parts.into_iter().map(|p| p.unwrap()).collect();
-        let (total, state) = combine(parts);
+        // states by integer merge with one final rounding. Buffers are
+        // recycled: parts drain into `combine_parts`, the emptied slot
+        // buffer goes back to `free_parts` for the next `expect`.
+        self.combine_parts.clear();
+        self.combine_parts
+            .extend(ps.parts.drain(..).map(|p| p.expect("all chunks received")));
+        if self.free_parts.len() < FREE_PARTS_CAP {
+            self.free_parts.push(ps.parts);
+        }
+        let (total, state) = combine_into(&mut self.combine_parts, &mut self.combine_level);
         let done = Completed {
             req_id,
             sum: total,
@@ -114,15 +160,14 @@ impl Assembler {
         };
 
         if !self.ordered {
-            return vec![done];
+            out.push(done);
+            return;
         }
         self.held.insert(req_id, done);
-        let mut out = Vec::new();
         while let Some(done) = self.held.remove(&self.next_to_deliver) {
             out.push(done);
             self.next_to_deliver += 1;
         }
-        out
     }
 
     /// Requests still in flight (undelivered or incomplete).
@@ -214,6 +259,29 @@ mod tests {
         // Plain requests stay state-free.
         a.expect(1, 1);
         assert_eq!(a.add_partial(1, 0, 1.0)[0].state, None);
+    }
+
+    #[test]
+    fn into_variant_appends_to_caller_buffer_across_calls() {
+        // Two requests through one reused output buffer: results append
+        // (the delivery loop drains between calls), and the recycled
+        // chunk-slot buffers don't leak state between requests.
+        let mut a = Assembler::new(true);
+        let mut out = Vec::new();
+        for round in 0..3u64 {
+            let (r0, r1) = (2 * round, 2 * round + 1);
+            a.expect(r0, 2);
+            a.expect(r1, 1);
+            a.add_partial_state_into(r1, 0, PartialState::F32(10.0), &mut out);
+            assert!(out.is_empty(), "r1 held behind r0");
+            a.add_partial_state_into(r0, 1, PartialState::F32(2.0), &mut out);
+            a.add_partial_state_into(r0, 0, PartialState::F32(1.0), &mut out);
+            assert_eq!(out.len(), 2, "round {round}");
+            assert_eq!((out[0].req_id, out[0].sum), (r0, 3.0));
+            assert_eq!((out[1].req_id, out[1].sum), (r1, 10.0));
+            out.clear();
+        }
+        assert_eq!(a.outstanding(), 0);
     }
 
     #[test]

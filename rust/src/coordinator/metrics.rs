@@ -54,6 +54,15 @@ pub struct Metrics {
     /// allocating (see `coordinator::BatchPool`): steady-state serving
     /// should recycle nearly every batch.
     pub batches_recycled: AtomicU64,
+    /// Responses the completion ring accepted into recycled slot capacity
+    /// (see `coordinator::ring`): steady-state serving should recycle
+    /// nearly every response; the difference vs `completed` is ring
+    /// overrun (the ring grew instead of blocking).
+    pub responses_recycled: AtomicU64,
+    /// Pipeline threads successfully pinned to a CPU (`--pin`; see
+    /// `coordinator::affinity`). Best-effort: 0 means pinning was off or
+    /// the platform refused it.
+    pub threads_pinned: AtomicU64,
     /// Gauge: keys currently holding live state across every keyed
     /// shard's table (scatter-add mode; see `coordinator::scatter`).
     /// Falls back to 0 when the tables are drained.
@@ -94,6 +103,8 @@ impl Metrics {
             reorder_duplicates: AtomicU64::new(0),
             slab_bytes_in_flight: AtomicU64::new(0),
             batches_recycled: AtomicU64::new(0),
+            responses_recycled: AtomicU64::new(0),
+            threads_pinned: AtomicU64::new(0),
             keys_live: AtomicU64::new(0),
             scatter_adds: AtomicU64::new(0),
             key_evictions: AtomicU64::new(0),
@@ -138,6 +149,8 @@ impl Metrics {
             reorder_duplicates: self.reorder_duplicates.load(Ordering::Relaxed),
             slab_bytes_in_flight: self.slab_bytes_in_flight.load(Ordering::Relaxed),
             batches_recycled: self.batches_recycled.load(Ordering::Relaxed),
+            responses_recycled: self.responses_recycled.load(Ordering::Relaxed),
+            threads_pinned: self.threads_pinned.load(Ordering::Relaxed),
             keys_live: self.keys_live.load(Ordering::Relaxed),
             scatter_adds: self.scatter_adds.load(Ordering::Relaxed),
             key_evictions: self.key_evictions.load(Ordering::Relaxed),
@@ -190,6 +203,8 @@ pub struct MetricsSnapshot {
     pub reorder_duplicates: u64,
     pub slab_bytes_in_flight: u64,
     pub batches_recycled: u64,
+    pub responses_recycled: u64,
+    pub threads_pinned: u64,
     pub keys_live: u64,
     pub scatter_adds: u64,
     pub key_evictions: u64,
@@ -229,6 +244,12 @@ impl MetricsSnapshot {
         );
         if self.batches_recycled > 0 {
             s.push_str(&format!(" | {} batch buffers recycled", self.batches_recycled));
+        }
+        if self.responses_recycled > 0 {
+            s.push_str(&format!(" | {} response slots recycled", self.responses_recycled));
+        }
+        if self.threads_pinned > 0 {
+            s.push_str(&format!(" | {} threads pinned", self.threads_pinned));
         }
         if self.per_shard.len() > 1 {
             let shares: Vec<String> =

@@ -39,11 +39,13 @@
 //! hops cost ~10x the engine execute itself (EXPERIMENTS.md §Perf), so the
 //! pool only pays when extra cores and an expensive engine exist.
 
+pub mod affinity;
 pub mod assembler;
 pub mod batcher;
 pub mod keytable;
 pub mod metrics;
 pub mod reorder;
+pub mod ring;
 pub mod scatter;
 mod shard;
 pub mod slab;
@@ -54,6 +56,7 @@ pub use batcher::{live_flags, Batch, BatchPool, Batcher, Router, SeqBatch};
 pub use keytable::KeyTable;
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use reorder::{ReorderBuffer, ShardDone};
+pub use ring::{completion_ring, CompletionRing, RingProducer};
 pub use scatter::{
     shard_for_key, ScatterAck, ScatterConfig, ScatterRecovery, ScatterService,
 };
@@ -63,10 +66,13 @@ pub use steal::StealPool;
 // The engine subsystem the coordinator drives: re-exported so service
 // callers configure engines from one import site.
 pub use crate::engine::{EngineCaps, EngineConfig, PartialState, ReduceEngine, UnknownEngine};
+// The explicit-SIMD kernel policy lives in `fp::simd`; re-exported so
+// service callers configure it alongside everything else.
+pub use crate::fp::{SimdLevel, SimdPolicy};
 
 use anyhow::{Context, Result};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -105,6 +111,17 @@ pub struct ServiceConfig {
     /// Test knob: shard `.0`'s engine reports a failure after `.1`
     /// successful batches (exercises the dead-shard drain/steal races).
     pub shard_fail_after: Option<(usize, u64)>,
+    /// Explicit-SIMD kernel policy for the native reduce path (see
+    /// [`crate::fp::simd`]). Selection is process-wide and happens once —
+    /// the first service to start wins; `JUGGLEPAC_SIMD` overrides.
+    /// Every level is bit-identical, so this only moves throughput.
+    pub simd: SimdPolicy,
+    /// Pin pipeline threads to CPUs (best-effort, Linux only; see
+    /// [`affinity`]). `--pin`.
+    pub pin: bool,
+    /// Preallocated response slots in the completion ring (see [`ring`]).
+    /// Overruns grow the ring (counted) rather than blocking producers.
+    pub completion_slots: usize,
 }
 
 impl Default for ServiceConfig {
@@ -123,6 +140,9 @@ impl Default for ServiceConfig {
             shard_jitter_us: 0,
             shard_stall_us: Vec::new(),
             shard_fail_after: None,
+            simd: SimdPolicy::Auto,
+            pin: false,
+            completion_slots: 1024,
         }
     }
 }
@@ -196,10 +216,12 @@ impl Submission {
 /// The running service (threads + channels).
 pub struct Service {
     tx: Option<SyncSender<Submission>>,
-    rx_out: Receiver<Vec<Response>>,
-    /// Responses received but not yet handed to the caller (bursts are
-    /// delivered whole; `recv_timeout` pops one at a time).
-    rx_buf: std::cell::RefCell<std::collections::VecDeque<Response>>,
+    /// Completion path: a ring of preallocated response slots (see
+    /// [`ring`]) — the delivery stage pushes responses one by one into
+    /// recycled capacity, `recv_timeout` pops them. Replaces the old
+    /// `channel::<Vec<Response>>` + re-buffer path: zero steady-state
+    /// allocation on both sides.
+    rx_out: CompletionRing,
     next_id: u64,
     metrics: Arc<Metrics>,
     batch_capacity: usize,
@@ -213,6 +235,13 @@ impl Service {
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         let shards = cfg.shards.max(1);
         let metrics = Arc::new(Metrics::new(shards));
+        // Reduce-kernel selection is process-wide and happens before any
+        // worker spawns (first service wins; `JUGGLEPAC_SIMD` overrides).
+        crate::fp::simd::install(cfg.simd);
+        // Best-effort CPU placement (`--pin`): shard s on CPU s, the
+        // reorder and batcher stages on the next CPUs after the shards.
+        let ncpus = affinity::ncpus();
+        let cpu_for = |slot: usize| cfg.pin.then_some(slot % ncpus);
 
         // Resolve the engine's shape up front via the registry (reads the
         // artifact manifest for `xla`; rejects unknown engine names with
@@ -229,11 +258,15 @@ impl Service {
         // per message vs ~50us per engine batch, EXPERIMENTS.md §Perf).
         // One wake per burst amortizes it away.
         let (tx_in, rx_in) = sync_channel::<Submission>(cfg.queue_depth);
-        // Responses are UNBOUNDED on purpose: backpressure is applied at
-        // the submit side only. A bounded response channel would deadlock
-        // a submit-all-then-receive client (worker blocks on send → submit
-        // blocks). Memory stays bounded by in-flight sets.
-        let (tx_out, rx_out) = channel::<Vec<Response>>();
+        // Responses ride a preallocated ring ([`ring`]). The ring never
+        // blocks producers: backpressure is applied at the submit side
+        // only (a response path that blocked would deadlock a
+        // submit-all-then-receive client — worker blocks on push → submit
+        // blocks), so on overrun it grows (counted) instead. Memory stays
+        // bounded by in-flight sets, exactly as with the old unbounded
+        // channel, but the steady state recycles slots and allocates
+        // nothing (`responses_recycled`).
+        let (tx_out, rx_out) = completion_ring(cfg.completion_slots);
 
         let mut handles = Vec::new();
         // Readiness handshake: PJRT client creation + artifact compilation
@@ -255,6 +288,7 @@ impl Service {
                 rx_in,
                 tx_out,
                 tx_ready,
+                pin_cpu: cpu_for(0),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -282,6 +316,7 @@ impl Service {
                     },
                     dead: Arc::clone(&dead),
                     tx_ready: tx_ready.clone(),
+                    pin_cpu: cpu_for(s),
                 };
                 handles.push(
                     std::thread::Builder::new()
@@ -294,16 +329,18 @@ impl Service {
                 let m = Arc::clone(&metrics);
                 let ordered = cfg.ordered;
                 let bp = Arc::clone(&batch_pool);
+                let pin_cpu = cpu_for(shards);
                 handles.push(std::thread::Builder::new().name("acc-reorder".into()).spawn(
-                    move || reorder::run_reorder(rx_done, tx_out, ordered, m, bp),
+                    move || reorder::run_reorder(rx_done, tx_out, ordered, m, bp, pin_cpu),
                 )?);
             }
             {
                 let m = Arc::clone(&metrics);
                 let b = Batcher::new(batch, n, cfg.batch_deadline).with_pool(batch_pool);
                 let router = Router::new(pool, dead);
+                let pin_cpu = cpu_for(shards + 1);
                 handles.push(std::thread::Builder::new().name("acc-batcher".into()).spawn(
-                    move || shard::run_batcher(rx_in, b, router, tx_done, m),
+                    move || shard::run_batcher(rx_in, b, router, tx_done, m, pin_cpu),
                 )?);
             }
         }
@@ -320,7 +357,6 @@ impl Service {
         Ok(Self {
             tx: Some(tx_in),
             rx_out,
-            rx_buf: Default::default(),
             next_id: 0,
             metrics,
             batch_capacity: batch,
@@ -424,17 +460,7 @@ impl Service {
 
     /// Receive the next completed reduction (blocking with timeout).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
-        let mut buf = self.rx_buf.borrow_mut();
-        if let Some(r) = buf.pop_front() {
-            return Some(r);
-        }
-        match self.rx_out.recv_timeout(timeout) {
-            Ok(burst) => {
-                buf.extend(burst);
-                buf.pop_front()
-            }
-            Err(_) => None,
-        }
+        self.rx_out.recv_timeout(timeout)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -473,19 +499,21 @@ impl Service {
 /// Feed one executed batch's rows through the software PIS and ship every
 /// completion it unlocks. Shared by the fused pipeline and the reorder
 /// stage so delivery semantics (assembler feed, latency accounting,
-/// metrics, burst send) cannot diverge between them. The occupied-row
+/// metrics, ring push) cannot diverge between them. The occupied-row
 /// prefix of `partials` is drained into the assembler (the buffer is left
-/// empty, capacity retained for reuse). Returns `false` when the client
-/// side has hung up.
+/// empty, capacity retained for reuse); `completed` is the caller's
+/// delivery scratch, drained every call — with the assembler's recycled
+/// buffers and the ring's preallocated slots this path allocates nothing
+/// at steady state. Returns `false` when the client side has hung up.
 pub(crate) fn deliver_rows(
     rows: &[(u64, u32)],
     partials: &mut Vec<PartialState>,
     asm: &mut Assembler,
     birth: &mut std::collections::HashMap<u64, Instant>,
     metrics: &Metrics,
-    tx_out: &std::sync::mpsc::Sender<Vec<Response>>,
+    completed: &mut Vec<Completed>,
+    tx_out: &RingProducer,
 ) -> bool {
-    let mut burst = Vec::new();
     if partials.len() < rows.len() {
         // An engine under-produced (a bug in it): NaN-poison the missing
         // rows so their requests still complete loudly instead of wedging
@@ -498,23 +526,28 @@ pub(crate) fn deliver_rows(
         );
         partials.resize(rows.len(), PartialState::F32(f32::NAN));
     }
+    completed.clear();
     for (&(req_id, chunk_idx), part) in rows.iter().zip(partials.drain(..rows.len())) {
-        for done in asm.add_partial_state(req_id, chunk_idx, part) {
-            let at = birth.remove(&done.req_id);
-            let latency = at.map(|t| t.elapsed()).unwrap_or_default();
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
-            metrics.record_latency_us(latency.as_micros() as u64);
-            burst.push(Response {
-                req_id: done.req_id,
-                sum: done.sum,
-                latency,
-                state: done.state,
-            });
-        }
+        asm.add_partial_state_into(req_id, chunk_idx, part, completed);
     }
     partials.clear();
-    if !burst.is_empty() && tx_out.send(burst).is_err() {
-        return false;
+    for done in completed.drain(..) {
+        let at = birth.remove(&done.req_id);
+        let latency = at.map(|t| t.elapsed()).unwrap_or_default();
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        metrics.record_latency_us(latency.as_micros() as u64);
+        match tx_out.push(Response {
+            req_id: done.req_id,
+            sum: done.sum,
+            latency,
+            state: done.state,
+        }) {
+            Ok(true) => {
+                metrics.responses_recycled.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(false) => {}
+            Err(_) => return false,
+        }
     }
     true
 }
@@ -575,6 +608,9 @@ mod tests {
         // the batcher: all flushes after the first draw from the pool.
         assert!(m.batches > 1, "workload spans several batches");
         assert!(m.batches_recycled >= m.batches - 1, "{m:?}");
+        // Every response fit the ring's preallocated slots: the whole
+        // completion path ran allocation-free.
+        assert_eq!(m.responses_recycled, 20, "{m:?}");
     }
 
     #[test]

@@ -17,11 +17,12 @@
 
 use super::batcher::BatchPool;
 use super::metrics::Metrics;
-use super::{Assembler, Batch, Response};
+use super::ring::RingProducer;
+use super::{Assembler, Batch, Completed};
 use crate::engine::PartialState;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -134,24 +135,40 @@ impl ReorderBuffer {
 
 /// The reorder/delivery thread: merges per-shard completions back into
 /// dispatch order, feeds them through the software PIS ([`Assembler`]),
-/// and ships finished responses to the client channel.
+/// and ships finished responses into the client's completion ring.
 pub(crate) fn run_reorder(
     rx: Receiver<ToReorder>,
-    tx_out: Sender<Vec<Response>>,
+    tx_out: RingProducer,
     ordered: bool,
     metrics: Arc<Metrics>,
     pool: Arc<BatchPool>,
+    pin_cpu: Option<usize>,
 ) {
+    if let Some(cpu) = pin_cpu {
+        if super::affinity::pin_current_thread(cpu) {
+            metrics.threads_pinned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
     let mut asm = Assembler::new(ordered);
     let mut birth: std::collections::HashMap<u64, Instant> = Default::default();
     let mut rob = ReorderBuffer::new();
+    // Delivery scratch for `deliver_rows` — drained every call.
+    let mut completed: Vec<Completed> = Vec::new();
 
-    let deliver = |done: ShardDone,
-                   asm: &mut Assembler,
-                   birth: &mut std::collections::HashMap<u64, Instant>|
+    let mut deliver = |done: ShardDone,
+                       asm: &mut Assembler,
+                       birth: &mut std::collections::HashMap<u64, Instant>|
      -> bool {
         let ShardDone { batch, mut partials, .. } = done;
-        let ok = super::deliver_rows(&batch.rows, &mut partials, asm, birth, &metrics, &tx_out);
+        let ok = super::deliver_rows(
+            &batch.rows,
+            &mut partials,
+            asm,
+            birth,
+            &metrics,
+            &mut completed,
+            &tx_out,
+        );
         // Delivery done with the buffers: hand them back to the batcher.
         pool.put(batch);
         ok

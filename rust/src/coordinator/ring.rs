@@ -1,0 +1,247 @@
+//! Caller-owned completion ring — the zero-allocation response path.
+//!
+//! PR 3 made *submission* zero-copy (slab arenas), but every completion
+//! still round-tripped through `channel::<Vec<Response>>`: one `Vec` per
+//! delivery burst plus the channel's own per-send node allocation. This
+//! module replaces that path with a bounded MPSC ring of preallocated
+//! [`Response`] slots, recycled the way [`BatchPool`](super::BatchPool)
+//! recycles batch buffers:
+//!
+//! - the ring preallocates `slots` entries of `VecDeque` capacity up
+//!   front; a steady-state push moves a `Response` into recycled capacity
+//!   (audited by the `responses_recycled` metric) and allocates nothing;
+//! - the consumer parks on a condvar with a single monotonic deadline —
+//!   the `recv_timeout` semantics of the old channel are preserved
+//!   exactly (pop what's buffered first, then wait);
+//! - producers never block and never allocate per push **unless** the
+//!   ring overruns its preallocated capacity, in which case it *grows*
+//!   instead of blocking. This keeps the one invariant the old channel
+//!   was unbounded for: a bounded response path that blocked producers
+//!   would deadlock a submit-all-then-receive client (worker blocks on
+//!   push → submit blocks behind the full input queue). Backpressure
+//!   stays on the submit side only; memory stays bounded by in-flight
+//!   sets, as before.
+//!
+//! Hang-up mirrors the channel too: when every [`RingProducer`] is gone
+//! the consumer drains what's buffered and then gets `None`; when the
+//! consumer is gone a push returns the `Response` back so pipeline
+//! threads cascade out.
+
+use super::Response;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct RingState {
+    buf: VecDeque<Response>,
+    /// Live [`RingProducer`] handles; 0 + empty buffer ⇒ `recv` hangs up.
+    producers: usize,
+    /// Parked consumers — lets producers skip the notify syscall when
+    /// nobody is waiting (the common case under a busy consumer).
+    waiting: usize,
+    consumer_alive: bool,
+    high_water: usize,
+}
+
+struct Shared {
+    state: Mutex<RingState>,
+    avail: Condvar,
+}
+
+/// Consumer half: owned by the [`Service`](super::Service), popped by
+/// `recv_timeout`. Dropping it hangs up the producers.
+pub struct CompletionRing {
+    shared: Arc<Shared>,
+}
+
+/// Producer half: cloned into every pipeline thread that delivers
+/// responses. Dropping the last one hangs up the consumer.
+pub struct RingProducer {
+    shared: Arc<Shared>,
+}
+
+/// Build a ring with `slots` preallocated response slots (floored at 1).
+/// Returns the producer and consumer halves, `mpsc::channel`-style.
+pub fn completion_ring(slots: usize) -> (RingProducer, CompletionRing) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(RingState {
+            buf: VecDeque::with_capacity(slots.max(1)),
+            producers: 1,
+            waiting: 0,
+            consumer_alive: true,
+            high_water: 0,
+        }),
+        avail: Condvar::new(),
+    });
+    (RingProducer { shared: Arc::clone(&shared) }, CompletionRing { shared })
+}
+
+impl RingProducer {
+    /// Move one response into the ring. `Ok(true)` means the push reused
+    /// preallocated/recycled capacity (the zero-allocation steady state);
+    /// `Ok(false)` means the ring grew past its slot count (an overrun —
+    /// deliberate: growing beats the submit-all-then-receive deadlock a
+    /// blocking bounded ring would reintroduce). `Err` hands the response
+    /// back when the consumer is gone.
+    pub fn push(&self, r: Response) -> Result<bool, Response> {
+        let recycled;
+        let notify;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.consumer_alive {
+                return Err(r);
+            }
+            recycled = st.buf.len() < st.buf.capacity();
+            st.buf.push_back(r);
+            st.high_water = st.high_water.max(st.buf.len());
+            notify = st.waiting > 0;
+        }
+        if notify {
+            self.shared.avail.notify_one();
+        }
+        Ok(recycled)
+    }
+}
+
+impl Clone for RingProducer {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().producers += 1;
+        Self { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for RingProducer {
+    fn drop(&mut self) {
+        let last = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.producers -= 1;
+            st.producers == 0
+        };
+        if last {
+            // Wake every parked consumer so it can observe the hang-up.
+            self.shared.avail.notify_all();
+        }
+    }
+}
+
+impl CompletionRing {
+    /// Pop the next response, parking up to `timeout` (one monotonic
+    /// deadline; spurious wakeups re-wait the remainder). `None` on
+    /// timeout, or once every producer is gone and the ring is drained —
+    /// the same surface the old `Receiver::recv_timeout` gave `recv`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.buf.pop_front() {
+                return Some(r);
+            }
+            if st.producers == 0 {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st.waiting += 1;
+            let (g, _) = self.shared.avail.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            st.waiting -= 1;
+        }
+    }
+
+    /// Non-blocking pop (benches and drain loops).
+    pub fn try_recv(&self) -> Option<Response> {
+        self.shared.state.lock().unwrap().buf.pop_front()
+    }
+
+    /// Responses currently buffered (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deepest the ring has been — `> slots` means it overran its
+    /// preallocation at least once.
+    pub fn high_water(&self) -> usize {
+        self.shared.state.lock().unwrap().high_water
+    }
+}
+
+impl Drop for CompletionRing {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().consumer_alive = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(req_id: u64) -> Response {
+        Response { req_id, sum: req_id as f32, latency: Duration::ZERO, state: None }
+    }
+
+    #[test]
+    fn fifo_and_timeout_semantics() {
+        let (tx, rx) = completion_ring(4);
+        assert!(rx.recv_timeout(Duration::from_millis(1)).is_none(), "empty → timeout");
+        assert!(tx.push(resp(0)).unwrap());
+        assert!(tx.push(resp(1)).unwrap());
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap().req_id, 0);
+        assert_eq!(rx.try_recv().unwrap().req_id, 1);
+        assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn overrun_grows_instead_of_blocking() {
+        let (tx, rx) = completion_ring(2);
+        let mut recycled = 0;
+        for i in 0..10 {
+            if tx.push(resp(i)).unwrap() {
+                recycled += 1;
+            }
+        }
+        // At least the preallocated slots recycled; the rest grew.
+        assert!(recycled >= 2, "recycled={recycled}");
+        assert!(rx.high_water() >= 10);
+        for i in 0..10 {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap().req_id, i);
+        }
+        // Drained capacity is recycled: the next push reuses it.
+        assert!(tx.push(resp(99)).unwrap(), "post-drain push recycles grown capacity");
+    }
+
+    #[test]
+    fn consumer_sees_hangup_after_last_producer_drops() {
+        let (tx, rx) = completion_ring(4);
+        let tx2 = tx.clone();
+        tx.push(resp(7)).unwrap();
+        drop(tx);
+        // One producer still alive: buffered item first, then park/timeout.
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap().req_id, 7);
+        assert!(rx.recv_timeout(Duration::from_millis(1)).is_none());
+        drop(tx2);
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_none(), "hang-up → None");
+    }
+
+    #[test]
+    fn producer_gets_response_back_when_consumer_gone() {
+        let (tx, rx) = completion_ring(4);
+        drop(rx);
+        let back = tx.push(resp(3)).unwrap_err();
+        assert_eq!(back.req_id, 3);
+    }
+
+    #[test]
+    fn parked_consumer_wakes_on_push() {
+        let (tx, rx) = completion_ring(4);
+        let h = std::thread::spawn(move || rx.recv_timeout(Duration::from_secs(5)).map(|r| r.req_id));
+        std::thread::sleep(Duration::from_millis(10));
+        tx.push(resp(42)).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+}

@@ -28,13 +28,24 @@
 use super::batcher::{BatchPool, Batcher, Router, SeqBatch};
 use super::metrics::Metrics;
 use super::reorder::{ShardDone, ToReorder};
+use super::ring::RingProducer;
 use super::steal::StealPool;
-use super::{Batch, Submission};
+use super::{affinity, Batch, Submission};
 use crate::engine::{self, EngineConfig, PartialState, ReduceEngine};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Apply the worker's CPU placement (`--pin`), counting successes so a
+/// bench run can verify placement took (`threads_pinned`).
+fn maybe_pin(pin_cpu: Option<usize>, metrics: &Metrics) {
+    if let Some(cpu) = pin_cpu {
+        if affinity::pin_current_thread(cpu) {
+            metrics.threads_pinned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
 
 /// Sum of valid values across a batch's occupied rows (metrics).
 fn batch_values(batch: &Batch) -> u64 {
@@ -50,8 +61,10 @@ pub(crate) struct FusedArgs {
     pub metrics: Arc<Metrics>,
     pub pool: Arc<BatchPool>,
     pub rx_in: Receiver<Submission>,
-    pub tx_out: Sender<Vec<super::Response>>,
+    pub tx_out: RingProducer,
     pub tx_ready: SyncSender<std::result::Result<(), String>>,
+    /// Best-effort CPU placement (`--pin`).
+    pub pin_cpu: Option<usize>,
 }
 
 /// The fused single-shard pipeline: batcher + engine + software PIS in one
@@ -70,7 +83,9 @@ pub(crate) fn run_fused(args: FusedArgs) {
         rx_in,
         tx_out,
         tx_ready,
+        pin_cpu,
     } = args;
+    maybe_pin(pin_cpu, &metrics);
     let mut eng = match engine::build(&engine) {
         Ok(e) => e,
         Err(e) => {
@@ -89,6 +104,7 @@ pub(crate) fn run_fused(args: FusedArgs) {
     // allocation-free at steady state for f32-carry engines.
     let mut partials: Vec<PartialState> = Vec::new();
     let mut sums_scratch: Vec<f32> = Vec::new();
+    let mut completed: Vec<super::Completed> = Vec::new();
 
     // Execute one batch, deliver everything it completes, and recycle the
     // batch buffers.
@@ -108,7 +124,15 @@ pub(crate) fn run_fused(args: FusedArgs) {
             batch_values(&full),
             t_exec.elapsed().as_nanos() as u64,
         );
-        let ok = super::deliver_rows(&full.rows, partials, asm, birth, &metrics, &tx_out);
+        let ok = super::deliver_rows(
+            &full.rows,
+            partials,
+            asm,
+            birth,
+            &metrics,
+            &mut completed,
+            &tx_out,
+        );
         pool.put(full);
         ok
     };
@@ -162,7 +186,9 @@ pub(crate) fn run_batcher(
     router: Router,
     tx_reorder: Sender<ToReorder>,
     metrics: Arc<Metrics>,
+    pin_cpu: Option<usize>,
 ) {
+    maybe_pin(pin_cpu, &metrics);
     let pool = Arc::clone(router.pool());
     batcher_loop(rx_in, b, router, tx_reorder, metrics);
     pool.close();
@@ -249,6 +275,8 @@ pub(crate) struct ShardArgs {
     pub fail_after: Option<u64>,
     pub dead: Arc<Vec<std::sync::atomic::AtomicBool>>,
     pub tx_ready: SyncSender<std::result::Result<(), String>>,
+    /// Best-effort CPU placement (`--pin`).
+    pub pin_cpu: Option<usize>,
 }
 
 /// One engine worker of the shard pool.
@@ -278,7 +306,9 @@ pub(crate) fn run_shard(args: ShardArgs) {
         fail_after,
         dead,
         tx_ready,
+        pin_cpu,
     } = args;
+    maybe_pin(pin_cpu, &metrics);
     let mut eng: Box<dyn ReduceEngine> = match engine::build(&engine) {
         Ok(e) => e,
         Err(e) => {

@@ -110,12 +110,23 @@ impl PartialState {
 /// - a mixed list only arises when a dead shard NaN-poisons some rows of
 ///   an `exact` service; every part is finished to f32 and tree-combined,
 ///   so the NaN poison dominates the delivered sum as intended.
-pub fn combine(parts: Vec<PartialState>) -> (f32, PartialState) {
+pub fn combine(mut parts: Vec<PartialState>) -> (f32, PartialState) {
+    let mut level = Vec::new();
+    combine_into(&mut parts, &mut level)
+}
+
+/// [`combine`] over caller-owned buffers: drains `parts` (capacity
+/// retained) and reuses `level` as the tree-combine scratch — the
+/// assembler's allocation-free completion path. Identical numerics.
+pub fn combine_into(
+    parts: &mut Vec<PartialState>,
+    level: &mut Vec<f32>,
+) -> (f32, PartialState) {
     debug_assert!(!parts.is_empty(), "combine of zero parts");
     let all_exact = parts.iter().all(|p| matches!(p, PartialState::Exact(_)));
     if all_exact {
         let mut acc: Option<Box<SuperAccumulator>> = None;
-        for p in parts {
+        for p in parts.drain(..) {
             let PartialState::Exact(part) = p else { unreachable!() };
             acc = Some(match acc.take() {
                 None => part,
@@ -129,8 +140,9 @@ pub fn combine(parts: Vec<PartialState>) -> (f32, PartialState) {
         let sum = acc.round_f32();
         return (sum, PartialState::Exact(acc));
     }
-    let mut level: Vec<f32> = parts.into_iter().map(PartialState::finish).collect();
-    let sum = crate::fp::vreduce::tree_reduce_in_place(&mut level);
+    level.clear();
+    level.extend(parts.drain(..).map(PartialState::finish));
+    let sum = crate::fp::vreduce::tree_reduce_in_place(level);
     (sum, PartialState::F32(sum))
 }
 

@@ -8,8 +8,10 @@
 pub mod arith;
 pub mod format;
 pub mod pipeline;
+pub mod simd;
 pub mod vreduce;
 
 pub use arith::{fp_add, fp_max, fp_mul, fp_sub};
 pub use format::{bits_f32, bits_f64, f32_bits, f64_bits, FpFormat, BF16, F16, F32, F64};
 pub use pipeline::{OpFn, PipelinedOp};
+pub use simd::{SimdLevel, SimdPolicy};

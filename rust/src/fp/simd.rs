@@ -1,0 +1,347 @@
+//! Explicit SIMD kernels for the width-8 blocked reduction pass.
+//!
+//! [`vreduce::tree_reduce_in_place`](crate::fp::vreduce::tree_reduce_in_place)
+//! was written so the SLP vectorizer *could* turn its blocked pass into
+//! shuffles + vertical adds — but only under `-C target-cpu` flags the
+//! default build doesn't get. This module makes the vector form explicit
+//! with `core::arch::x86_64` intrinsics, selected once per process:
+//!
+//! - **SSE2** (x86_64 baseline, always available): one width-8 block per
+//!   iteration through two 128-bit shuffle/add levels plus a scalar-lane
+//!   finish;
+//! - **AVX2**: two width-8 blocks per iteration — a `permute2f128` gathers
+//!   the low/high halves of both blocks so the same shuffle constants run
+//!   per 128-bit lane.
+//!
+//! **Bit identity is the contract.** Every vector add is a *vertical* IEEE
+//! add whose lanes pair exactly the operands the scalar kernel pairs, in
+//! the same order: level 1 adds `x[2i] + x[2i+1]`, level 2 adds
+//! `t0 + t1` / `t2 + t3`, level 3 adds `(t0+t1) + (t2+t3)`. No horizontal
+//! adds (`haddps` re-associates), no FMA, no reordering — so the SIMD
+//! kernels reproduce `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))` bit-for-bit,
+//! subnormals and signed zeros included (Rust never enables FTZ/DAZ), and
+//! every cross-engine bit-equality golden holds unchanged. The only IEEE
+//! freedom left is *which* NaN payload propagates when both operands are
+//! distinct NaNs — real reductions only manufacture the canonical quiet
+//! NaN (e.g. `∞ + -∞`), and the differential suite pins that case.
+//!
+//! Selection happens once (`OnceLock`): the first call to [`active`] or
+//! [`install`] resolves a [`SimdPolicy`] against `is_x86_feature_detected!`,
+//! with the `JUGGLEPAC_SIMD` env var (`auto` / `off` / `sse2` / `avx2`)
+//! overriding for tests and CI matrix legs. Forcing a level the host lacks
+//! falls back to the best supported level rather than faulting. Non-x86_64
+//! targets always run the portable blocked-scalar pass.
+
+use std::sync::OnceLock;
+
+/// An explicit-SIMD implementation level for the blocked pass.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    /// 128-bit kernel, x86_64 baseline — always available there.
+    Sse2,
+    /// 256-bit kernel, two blocks per iteration; needs AVX2.
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// How the service picks the reduce kernel (on `ServiceConfig`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SimdPolicy {
+    /// Best level the host supports (scalar when none).
+    #[default]
+    Auto,
+    /// Force one level; falls back to `Auto` if the host lacks it.
+    Forced(SimdLevel),
+    /// Blocked-scalar only (the portable fallback / differential baseline).
+    Off,
+}
+
+impl SimdPolicy {
+    /// Parse the `JUGGLEPAC_SIMD` / `--simd` spelling. Unknown → `None`.
+    pub fn parse(s: &str) -> Option<SimdPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(SimdPolicy::Auto),
+            "off" | "scalar" | "0" => Some(SimdPolicy::Off),
+            "sse2" => Some(SimdPolicy::Forced(SimdLevel::Sse2)),
+            "avx2" => Some(SimdPolicy::Forced(SimdLevel::Avx2)),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Off => "off",
+            SimdPolicy::Forced(l) => l.name(),
+        }
+    }
+}
+
+/// Does this host support `level`? (Runtime detection; `false` off x86_64.)
+pub fn supported(level: SimdLevel) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match level {
+            SimdLevel::Sse2 => true, // x86_64 baseline
+            SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = level;
+        false
+    }
+}
+
+/// Best level this host supports (`None` → blocked scalar).
+pub fn best_supported() -> Option<SimdLevel> {
+    if supported(SimdLevel::Avx2) {
+        Some(SimdLevel::Avx2)
+    } else if supported(SimdLevel::Sse2) {
+        Some(SimdLevel::Sse2)
+    } else {
+        None
+    }
+}
+
+/// Pure resolution of a policy (plus an optional env override) to the
+/// level that will actually run. Unparsable env spellings are ignored.
+pub fn resolve(policy: SimdPolicy, env_override: Option<&str>) -> Option<SimdLevel> {
+    let effective = env_override.and_then(SimdPolicy::parse).unwrap_or(policy);
+    match effective {
+        SimdPolicy::Off => None,
+        SimdPolicy::Auto => best_supported(),
+        SimdPolicy::Forced(l) => {
+            if supported(l) {
+                Some(l)
+            } else {
+                best_supported()
+            }
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Option<SimdLevel>> = OnceLock::new();
+
+/// Install the process-wide kernel selection (first caller wins — the
+/// `OnceLock` keeps later services from flipping kernels mid-flight) and
+/// return what is active. `JUGGLEPAC_SIMD` overrides `policy`.
+pub fn install(policy: SimdPolicy) -> Option<SimdLevel> {
+    *ACTIVE.get_or_init(|| resolve(policy, std::env::var("JUGGLEPAC_SIMD").ok().as_deref()))
+}
+
+/// The process-wide active level, resolving [`SimdPolicy::Auto`] if no
+/// service installed a policy yet.
+pub fn active() -> Option<SimdLevel> {
+    install(SimdPolicy::Auto)
+}
+
+/// One width-8 blocked pass over the first `m` lanes of `buf`
+/// (`m % 8 == 0`): block `j` collapses lanes `8j..8j+8` into `buf[j]`
+/// through the fixed `((x0+x1)+(x2+x3)) + ((x4+x5)+(x6+x7))` tree.
+/// Returns the new live length `m / 8`.
+///
+/// `level = None` (or an unsupported level — defensive, [`resolve`]
+/// should already have filtered it) runs the portable blocked scalar.
+pub fn blocked_pass(level: Option<SimdLevel>, buf: &mut [f32], m: usize) -> usize {
+    debug_assert!(m % 8 == 0 && m <= buf.len());
+    #[cfg(target_arch = "x86_64")]
+    if let Some(l) = level {
+        if supported(l) {
+            // SAFETY: the required target feature was runtime-detected.
+            unsafe {
+                match l {
+                    SimdLevel::Sse2 => x86::pass_sse2(buf, m),
+                    SimdLevel::Avx2 => x86::pass_avx2(buf, m),
+                }
+            }
+            return m / 8;
+        }
+    }
+    let _ = level;
+    scalar_pass(buf, m);
+    m / 8
+}
+
+/// The portable blocked pass (also the differential baseline the SIMD
+/// kernels must match bit-for-bit).
+fn scalar_pass(buf: &mut [f32], m: usize) {
+    let blocks = m / 8;
+    for j in 0..blocks {
+        let s = 8 * j;
+        let t0 = buf[s] + buf[s + 1];
+        let t1 = buf[s + 2] + buf[s + 3];
+        let t2 = buf[s + 4] + buf[s + 5];
+        let t3 = buf[s + 6] + buf[s + 7];
+        buf[j] = (t0 + t1) + (t2 + t3);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    // `_mm_shuffle_ps(a, b, EVENS)` → [a0, a2, b0, b2]; with a = x[0..4],
+    // b = x[4..8] that is [x0, x2, x4, x6]. `ODDS` picks [x1, x3, x5, x7].
+    // Reused at level 2 (t against itself) to pick [t0, t2, ·, ·] and
+    // [t1, t3, ·, ·].
+    const EVENS: i32 = 0b10_00_10_00;
+    const ODDS: i32 = 0b11_01_11_01;
+    /// Broadcast lane 1 (per 128-bit lane) — the level-3 right operand.
+    const LANE1: i32 = 0b01_01_01_01;
+
+    /// Collapse the 8 floats at `p` through the fixed tree. Every `addps`
+    /// lane pairs exactly the scalar kernel's operands, left-to-right.
+    ///
+    /// # Safety
+    /// `p` must be readable for 8 `f32`s; SSE2 must be available (x86_64
+    /// baseline, so trivially true).
+    #[inline]
+    #[target_feature(enable = "sse2")]
+    unsafe fn block8_sse2(p: *const f32) -> f32 {
+        let a = _mm_loadu_ps(p); // [x0 x1 x2 x3]
+        let b = _mm_loadu_ps(p.add(4)); // [x4 x5 x6 x7]
+        let t = _mm_add_ps(_mm_shuffle_ps::<EVENS>(a, b), _mm_shuffle_ps::<ODDS>(a, b));
+        // t = [x0+x1, x2+x3, x4+x5, x6+x7]
+        let u = _mm_add_ps(_mm_shuffle_ps::<EVENS>(t, t), _mm_shuffle_ps::<ODDS>(t, t));
+        // u = [t0+t1, t2+t3, t0+t1, t2+t3] (upper lanes redundant)
+        _mm_cvtss_f32(_mm_add_ss(u, _mm_shuffle_ps::<LANE1>(u, u)))
+    }
+
+    /// # Safety
+    /// Caller guarantees `m % 8 == 0 && m <= buf.len()` (SSE2 is baseline).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn pass_sse2(buf: &mut [f32], m: usize) {
+        let blocks = m / 8;
+        let src = buf.as_ptr();
+        let dst = buf.as_mut_ptr();
+        // Block j reads lanes 8j.. and writes lane j — never overlapping
+        // a lane a later block still reads (j < 8(j+1)).
+        for j in 0..blocks {
+            *dst.add(j) = block8_sse2(src.add(8 * j));
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees `m % 8 == 0 && m <= buf.len()` and that AVX2 was
+    /// runtime-detected.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pass_avx2(buf: &mut [f32], m: usize) {
+        let blocks = m / 8;
+        let src = buf.as_ptr();
+        let dst = buf.as_mut_ptr();
+        let mut j = 0;
+        // Two blocks per iteration: gather both blocks' low halves into
+        // one register and both high halves into another, then the SSE2
+        // shuffle constants apply per 128-bit lane.
+        while j + 2 <= blocks {
+            let x = _mm256_loadu_ps(src.add(8 * j)); // block j
+            let y = _mm256_loadu_ps(src.add(8 * (j + 1))); // block j+1
+            let lo = _mm256_permute2f128_ps::<0x20>(x, y); // [x0..x3 | y0..y3]
+            let hi = _mm256_permute2f128_ps::<0x31>(x, y); // [x4..x7 | y4..y7]
+            let t = _mm256_add_ps(
+                _mm256_shuffle_ps::<EVENS>(lo, hi),
+                _mm256_shuffle_ps::<ODDS>(lo, hi),
+            );
+            let u = _mm256_add_ps(
+                _mm256_shuffle_ps::<EVENS>(t, t),
+                _mm256_shuffle_ps::<ODDS>(t, t),
+            );
+            let w = _mm256_add_ps(u, _mm256_shuffle_ps::<LANE1>(u, u));
+            *dst.add(j) = _mm_cvtss_f32(_mm256_castps256_ps128(w));
+            *dst.add(j + 1) = _mm_cvtss_f32(_mm256_extractf128_ps::<1>(w));
+            j += 2;
+        }
+        if j < blocks {
+            *dst.add(j) = block8_sse2(src.add(8 * j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_every_spelling() {
+        assert_eq!(SimdPolicy::parse("auto"), Some(SimdPolicy::Auto));
+        assert_eq!(SimdPolicy::parse("OFF"), Some(SimdPolicy::Off));
+        assert_eq!(SimdPolicy::parse("scalar"), Some(SimdPolicy::Off));
+        assert_eq!(SimdPolicy::parse("sse2"), Some(SimdPolicy::Forced(SimdLevel::Sse2)));
+        assert_eq!(SimdPolicy::parse(" avx2 "), Some(SimdPolicy::Forced(SimdLevel::Avx2)));
+        assert_eq!(SimdPolicy::parse("avx512"), None);
+        assert_eq!(SimdPolicy::parse(""), None);
+    }
+
+    #[test]
+    fn resolve_honors_off_and_env_override() {
+        assert_eq!(resolve(SimdPolicy::Off, None), None);
+        // Env wins over the installed policy...
+        assert_eq!(resolve(SimdPolicy::Auto, Some("off")), None);
+        // ...but an unparsable env spelling is ignored.
+        assert_eq!(resolve(SimdPolicy::Off, Some("bogus")), None);
+        assert_eq!(resolve(SimdPolicy::Auto, None), best_supported());
+    }
+
+    #[test]
+    fn resolve_forced_falls_back_when_unsupported() {
+        for l in [SimdLevel::Sse2, SimdLevel::Avx2] {
+            let r = resolve(SimdPolicy::Forced(l), None);
+            if supported(l) {
+                assert_eq!(r, Some(l));
+            } else {
+                assert_eq!(r, best_supported());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_pass_matches_scalar_on_every_supported_level() {
+        let vals: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 1.7e-3).collect();
+        let mut want = vals.clone();
+        let wm = blocked_pass(None, &mut want, 64);
+        assert_eq!(wm, 8);
+        for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
+            if !supported(level) {
+                continue;
+            }
+            let mut got = vals.clone();
+            let gm = blocked_pass(Some(level), &mut got, 64);
+            assert_eq!(gm, 8);
+            assert_eq!(
+                got[..8].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want[..8].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{level:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn odd_block_count_exercises_the_avx2_tail() {
+        // 24 lanes = 3 blocks: the AVX2 kernel does one paired iteration
+        // plus the single-block SSE2 tail.
+        let vals: Vec<f32> = (0..24).map(|i| 1.0 + (i as f32) * 0.125).collect();
+        let mut want = vals.clone();
+        blocked_pass(None, &mut want, 24);
+        for level in [SimdLevel::Sse2, SimdLevel::Avx2] {
+            if !supported(level) {
+                continue;
+            }
+            let mut got = vals.clone();
+            blocked_pass(Some(level), &mut got, 24);
+            assert_eq!(
+                got[..3].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want[..3].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{level:?}"
+            );
+        }
+    }
+}

@@ -20,6 +20,7 @@
 //! level-by-level reduction (and to the AOT Pallas kernel's masked pairwise
 //! tree) — the cross-engine bit-equality goldens hold unchanged.
 
+use crate::fp::simd::{self, SimdLevel};
 use crate::fp::{bits_f32, f32_bits, fp_add, F32};
 
 /// Collapse `buf` by the fixed adjacent-pairwise tree (odd stragglers carry
@@ -28,23 +29,25 @@ use crate::fp::{bits_f32, f32_bits, fp_add, F32};
 /// This is the one association discipline shared by the native kernel, the
 /// [`crate::coordinator::Assembler`]'s chunk combine, and the AOT kernel —
 /// keeping every layer bit-compatible.
+///
+/// The width-8 blocked pass runs through the process-wide explicit-SIMD
+/// kernel selection ([`simd::active`]); every kernel reproduces the same
+/// association tree bit-for-bit, so the choice is invisible to results.
 pub fn tree_reduce_in_place(buf: &mut [f32]) -> f32 {
+    tree_reduce_in_place_with(simd::active(), buf)
+}
+
+/// [`tree_reduce_in_place`] with an explicit kernel level (`None` = the
+/// portable blocked scalar) — the differential suite drives every level
+/// through this in one process.
+pub fn tree_reduce_in_place_with(level: Option<SimdLevel>, buf: &mut [f32]) -> f32 {
     let mut m = buf.len();
     if m == 0 {
         return 0.0;
     }
     // Width-8 blocked passes: each pass is three pairwise levels fused.
     while m >= 8 && m % 8 == 0 {
-        let blocks = m / 8;
-        for j in 0..blocks {
-            let s = 8 * j;
-            let t0 = buf[s] + buf[s + 1];
-            let t1 = buf[s + 2] + buf[s + 3];
-            let t2 = buf[s + 4] + buf[s + 5];
-            let t3 = buf[s + 6] + buf[s + 7];
-            buf[j] = (t0 + t1) + (t2 + t3);
-        }
-        m = blocks;
+        m = simd::blocked_pass(level, buf, m);
     }
     // Pairwise finish on the short remainder.
     while m > 1 {
@@ -67,7 +70,13 @@ pub fn tree_reduce_in_place(buf: &mut [f32]) -> f32 {
 /// `scratch` is reused across calls; no allocation after warm-up.
 pub fn reduce_row_into_scratch(row: &[f32], len: usize, scratch: &mut Vec<f32>) -> f32 {
     scratch.clear();
-    scratch.extend(row.iter().enumerate().map(|(i, &v)| if i < len { v } else { 0.0 }));
+    if len >= row.len() {
+        // Fully-live row: a straight memcpy beats the per-lane mask select.
+        scratch.extend_from_slice(row);
+    } else {
+        scratch.extend_from_slice(&row[..len]);
+        scratch.resize(row.len(), 0.0);
+    }
     tree_reduce_in_place(scratch)
 }
 

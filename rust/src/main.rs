@@ -62,6 +62,8 @@ USAGE: jugglepac <subcommand> [options]
   serve      [--sets S] [--max-len N] [--engine NAME] [--batch B] [--n N]
              [--shards K] [--steal on|off] [--stall0 US] [--zipf]
              [--seed X] [--latency L] [--registers R] [--artifact NAME]
+             [--simd auto|off|sse2|avx2]  (explicit-SIMD reduce kernel;
+             JUGGLEPAC_SIMD overrides)  [--pin]  (pin pipeline threads)
              [--streaming]  (run the session subsystem instead — see stream)
              [--scatter]  (run the keyed scatter-add mode — see scatter)
              [--listen ADDR]  (network mode: serve the wire protocol; with)
@@ -72,6 +74,8 @@ USAGE: jugglepac <subcommand> [options]
   stream     [--streams S] [--max-len N] [--fragment F] [--concurrent W]
              [--engine NAME] [--batch B] [--n N] [--shards K]
              [--max-open M] [--ttl-ms T] [--seed X]
+             [--coalesce-bytes B] [--coalesce-us T]  (append coalescing)
+             [--simd auto|off|sse2|avx2] [--pin]
              [--durable-dir PATH] [--snapshot-ms T] [--fsync always|never]
              [--resume]  (replay the snapshot log in PATH and resume)
              [--exit-after-ms T]  (SIGINT-ish: stop mid-script, drain +
@@ -83,6 +87,18 @@ USAGE: jugglepac <subcommand> [options]
              [--resume]  (replay the scatter log in PATH and resume)
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
+
+/// The raw-speed knobs shared by the service-backed subcommands:
+/// `--simd auto|off|sse2|avx2` (explicit-SIMD reduce kernel policy,
+/// `JUGGLEPAC_SIMD` overrides) and `--pin` (best-effort thread pinning).
+fn perf_opts(args: &Args) -> Result<(jugglepac::fp::SimdPolicy, bool)> {
+    let simd = match args.get("simd") {
+        None => jugglepac::fp::SimdPolicy::Auto,
+        Some(s) => jugglepac::fp::SimdPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--simd expects auto|off|sse2|avx2, got {s:?}"))?,
+    };
+    Ok((simd, args.flag("pin")))
+}
 
 fn cmd_trace(args: &Args) -> Result<()> {
     use jugglepac::fp::f64_bits;
@@ -270,11 +286,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Zipf lengths (skewed-load mix) via a prebuilt weight table: one
     // O(max) build, O(log max) per draw.
     let zipf = args.flag("zipf").then(|| ZipfTable::new(max_len, 1.1));
+    let (simd, pin) = perf_opts(args)?;
     let mut svc = Service::start(ServiceConfig {
         engine,
         shards,
         steal,
         shard_stall_us: if stall0 > 0 { vec![stall0] } else { Vec::new() },
+        simd,
+        pin,
         ..Default::default()
     })?;
     let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
@@ -398,16 +417,21 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let (simd, pin) = perf_opts(args)?;
     let cfg = NetServerConfig {
         listen,
         session: SessionConfig {
             service: ServiceConfig {
                 engine,
                 shards,
+                simd,
+                pin,
                 ..Default::default()
             },
             max_open_streams: args.get_usize("max-open", 1024)?,
             durability,
+            coalesce_bytes: args.get_usize("coalesce-bytes", 0)?,
+            coalesce_us: args.get_u64("coalesce-us", 200)?,
             ..Default::default()
         },
         tree: Some(TreeConfig {
@@ -535,16 +559,21 @@ fn cmd_stream(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let (simd, pin) = perf_opts(args)?;
     let cfg = SessionConfig {
         service: ServiceConfig {
             engine,
             shards,
             steal: args.get_switch("steal", true)?,
+            simd,
+            pin,
             ..Default::default()
         },
         max_open_streams: args.get_usize("max-open", 1024)?,
         idle_ttl: std::time::Duration::from_millis(args.get_u64("ttl-ms", 30_000)?),
         durability,
+        coalesce_bytes: args.get_usize("coalesce-bytes", 0)?,
+        coalesce_us: args.get_u64("coalesce-us", 200)?,
         ..Default::default()
     };
     if args.flag("resume") {

@@ -52,6 +52,13 @@ pub struct SessionMetrics {
     pub snapshot_failures: AtomicU64,
     /// Log rotations (each compacts history to the latest snapshot).
     pub log_rotations: AtomicU64,
+    /// Coalesced-row flushes: submissions of complete rows that append
+    /// coalescing had held back (size trigger, deadline trigger, or
+    /// close). Zero with coalescing off.
+    pub coalesce_flushes: AtomicU64,
+    /// The subset of `coalesce_flushes` fired by the `coalesce_us`
+    /// deadline (held rows that aged out before the size trigger).
+    pub coalesce_deadline_flushes: AtomicU64,
 }
 
 /// Counters that survive a crash: serialized into every snapshot (in this
@@ -80,6 +87,10 @@ impl SessionMetrics {
             snapshot_retries: self.snapshot_retries.load(Ordering::Relaxed),
             snapshot_failures: self.snapshot_failures.load(Ordering::Relaxed),
             log_rotations: self.log_rotations.load(Ordering::Relaxed),
+            coalesce_flushes: self.coalesce_flushes.load(Ordering::Relaxed),
+            coalesce_deadline_flushes: self
+                .coalesce_deadline_flushes
+                .load(Ordering::Relaxed),
         }
     }
 
@@ -142,6 +153,8 @@ pub struct SessionMetricsSnapshot {
     pub snapshot_retries: u64,
     pub snapshot_failures: u64,
     pub log_rotations: u64,
+    pub coalesce_flushes: u64,
+    pub coalesce_deadline_flushes: u64,
 }
 
 impl SessionMetricsSnapshot {
@@ -188,6 +201,12 @@ impl SessionMetricsSnapshot {
         }
         if self.streams_resumed > 0 {
             s.push_str(&format!(" | {} streams resumed", self.streams_resumed));
+        }
+        if self.coalesce_flushes > 0 {
+            s.push_str(&format!(
+                " | coalescing: {} flushes ({} by deadline)",
+                self.coalesce_flushes, self.coalesce_deadline_flushes
+            ));
         }
         s
     }

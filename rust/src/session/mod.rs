@@ -103,6 +103,19 @@ pub struct SessionConfig {
     pub idle_ttl: Duration,
     /// Snapshot-log durability; `None` (default) runs purely in memory.
     pub durability: Option<DurabilityConfig>,
+    /// Append coalescing (`0` = off, the default): complete rows are held
+    /// in the stream's tail until it carries at least this many bytes
+    /// (4 per value), then submitted as one slab burst — many tiny
+    /// fragments cost one pipeline wake instead of one each. Chunk
+    /// boundaries are a pure function of the cumulative value count, so
+    /// sums stay bit-identical to the uncoalesced (and one-shot) path.
+    /// `--coalesce-bytes`.
+    pub coalesce_bytes: usize,
+    /// Deadline (µs) for coalesced rows: held rows older than this are
+    /// flushed by the next session-API call even if the size trigger
+    /// hasn't fired — bounds the latency coalescing can add.
+    /// `--coalesce-us`.
+    pub coalesce_us: u64,
 }
 
 impl Default for SessionConfig {
@@ -113,6 +126,8 @@ impl Default for SessionConfig {
             max_open_streams: 1024,
             idle_ttl: Duration::from_secs(30),
             durability: None,
+            coalesce_bytes: 0,
+            coalesce_us: 200,
         }
     }
 }
@@ -188,6 +203,12 @@ pub struct SessionService {
     n: usize,
     max_open: usize,
     idle_ttl: Duration,
+    /// Append coalescing knobs (see [`SessionConfig`]); `coalesce_bytes`
+    /// of 0 disables and keeps the classic immediate-submit append path.
+    coalesce_bytes: usize,
+    coalesce_us: u64,
+    /// Streams currently holding coalesced rows (deadline-scan worklist).
+    coalesce_armed: Vec<u64>,
     table: SessionTable,
     /// In-flight chunk requests: req_id -> (stream, chunk index).
     pending: HashMap<u64, (StreamId, u32)>,
@@ -241,6 +262,9 @@ impl SessionService {
             n,
             max_open: cfg.max_open_streams.max(1),
             idle_ttl: cfg.idle_ttl,
+            coalesce_bytes: cfg.coalesce_bytes,
+            coalesce_us: cfg.coalesce_us,
+            coalesce_armed: Vec::new(),
             table: SessionTable::new(cfg.table_shards),
             pending: HashMap::new(),
             finished: BTreeMap::new(),
@@ -417,7 +441,43 @@ impl SessionService {
             state.values += values.len() as u64;
             self.metrics.fragments_in.fetch_add(1, Ordering::Relaxed);
             self.metrics.values_in.fetch_add(values.len() as u64, Ordering::Relaxed);
-            if state.tail.len() + values.len() < n {
+            if self.coalesce_bytes > 0 || state.tail.len() >= n {
+                // Coalescing: absorb the whole fragment into the tail and
+                // hold complete rows until the size trigger (here), the
+                // deadline trigger (`pump_nonblocking`), or `close`
+                // flushes them. Chunk boundaries depend only on the
+                // cumulative value count, so sums are unchanged. (The
+                // `tail >= n` arm also catches a stream resumed from a
+                // mid-coalesce snapshot after coalescing was turned off:
+                // with `coalesce_bytes == 0` the size trigger fires
+                // immediately, flushing the held rows.)
+                state.tail.extend_from_slice(values);
+                let b = 4 * values.len() as u64;
+                state.carried_bytes += b;
+                self.metrics.partial_bytes.fetch_add(b, Ordering::Relaxed);
+                let armed = if state.tail.len() >= n && state.coalesce_since.is_none() {
+                    state.coalesce_since = Some(Instant::now());
+                    true
+                } else {
+                    false
+                };
+                if 4 * state.tail.len() < self.coalesce_bytes {
+                    drop(shard);
+                    if armed {
+                        self.coalesce_armed.push(id.0);
+                    }
+                    if self.free.len() < 4 {
+                        self.free.push(arena);
+                    }
+                    return Ok(());
+                }
+                let (first_chunk, chunks) =
+                    Self::flush_complete_rows(n, state, &mut arena, &self.metrics);
+                if chunks > 0 {
+                    self.metrics.coalesce_flushes.fetch_add(1, Ordering::Relaxed);
+                }
+                (first_chunk, chunks)
+            } else if state.tail.len() + values.len() < n {
                 // Fully absorbed: no chunk boundary crossed yet.
                 state.tail.extend_from_slice(values);
                 let b = 4 * values.len() as u64;
@@ -427,50 +487,48 @@ impl SessionService {
                     self.free.push(arena);
                 }
                 return Ok(());
+            } else {
+                // Re-chunk at row boundaries: tail + fill first, then full
+                // slices straight from the fragment, remainder to the tail.
+                arena.clear();
+                arena.begin_set();
+                for &v in state.tail.iter() {
+                    arena.push_value(v);
+                }
+                let fill = n - state.tail.len();
+                for &v in &values[..fill] {
+                    arena.push_value(v);
+                }
+                arena.end_set();
+                let old_tail_bytes = 4 * state.tail.len() as u64;
+                state.tail.clear();
+                let mut consumed = fill;
+                while values.len() - consumed >= n {
+                    arena.push_set(&values[consumed..consumed + n]);
+                    consumed += n;
+                }
+                state.tail.extend_from_slice(&values[consumed..]);
+                let new_tail_bytes = 4 * state.tail.len() as u64;
+                state.carried_bytes = state.carried_bytes - old_tail_bytes + new_tail_bytes;
+                self.metrics.partial_bytes.fetch_sub(old_tail_bytes, Ordering::Relaxed);
+                self.metrics.partial_bytes.fetch_add(new_tail_bytes, Ordering::Relaxed);
+                let first_chunk = state.chunks_submitted;
+                let chunks = arena.sets() as u32;
+                state.chunks_submitted += chunks;
+                for _ in 0..chunks {
+                    state.parts.push(None);
+                }
+                (first_chunk, chunks)
             }
-            // Re-chunk at row boundaries: tail + fill first, then full
-            // slices straight from the fragment, remainder to the tail.
-            arena.clear();
-            arena.begin_set();
-            for &v in state.tail.iter() {
-                arena.push_value(v);
-            }
-            let fill = n - state.tail.len();
-            for &v in &values[..fill] {
-                arena.push_value(v);
-            }
-            arena.end_set();
-            let old_tail_bytes = 4 * state.tail.len() as u64;
-            state.tail.clear();
-            let mut consumed = fill;
-            while values.len() - consumed >= n {
-                arena.push_set(&values[consumed..consumed + n]);
-                consumed += n;
-            }
-            state.tail.extend_from_slice(&values[consumed..]);
-            let new_tail_bytes = 4 * state.tail.len() as u64;
-            state.carried_bytes = state.carried_bytes - old_tail_bytes + new_tail_bytes;
-            self.metrics.partial_bytes.fetch_sub(old_tail_bytes, Ordering::Relaxed);
-            self.metrics.partial_bytes.fetch_add(new_tail_bytes, Ordering::Relaxed);
-            let first_chunk = state.chunks_submitted;
-            let chunks = arena.sets() as u32;
-            state.chunks_submitted += chunks;
-            for _ in 0..chunks {
-                state.parts.push(None);
-            }
-            (first_chunk, chunks)
         };
-        let shared = arena.share();
-        let ids = self
-            .svc
-            .submit_burst_slab_carry(&shared)
-            .map_err(|e| SessionError::Pipeline(format!("{e:#}")))?;
-        for (k, req) in ids.enumerate() {
-            self.pending.insert(req, (id, first_chunk + k as u32));
+        if chunks == 0 {
+            // A size-triggered flush with nothing row-complete yet.
+            if self.free.len() < 4 {
+                self.free.push(arena);
+            }
+            return Ok(());
         }
-        self.in_flight.push(shared);
-        self.metrics.chunks_submitted.fetch_add(chunks as u64, Ordering::Relaxed);
-        Ok(())
+        self.submit_arena(id, arena, first_chunk, chunks)
     }
 
     /// Close a stream: the tail (if any — or an empty chunk for an empty
@@ -479,6 +537,11 @@ impl SessionService {
     /// every chunk partial has arrived.
     pub fn close(&mut self, id: StreamId) -> std::result::Result<(), SessionError> {
         self.pump_nonblocking();
+        // The tail may hold complete rows (coalescing, or a stream resumed
+        // from a mid-coalesce snapshot): flush them as their own chunks
+        // first, so the close chunk stays sub-row and the chunk sequence
+        // matches one-shot submission exactly.
+        self.flush_coalesced(id)?;
         let tail_to_submit = {
             let mut shard = self.table.lock(id.0);
             let state = match shard.get_mut(&id.0) {
@@ -758,12 +821,13 @@ impl SessionService {
 
     // ------------------------------------------------------------ internals
 
-    /// Route every already-available service response; opportunistic TTL
-    /// sweep and snapshot cadence.
+    /// Route every already-available service response; opportunistic
+    /// coalesce-deadline flush, TTL sweep and snapshot cadence.
     fn pump_nonblocking(&mut self) {
         while let Some(r) = self.svc.recv_timeout(Duration::ZERO) {
             self.route_response(r);
         }
+        self.pump_coalesce_deadlines();
         if self.idle_ttl > Duration::ZERO
             && self.last_sweep.elapsed() > self.idle_ttl / 4
         {
@@ -851,6 +915,124 @@ impl SessionService {
         self.metrics.streams_finished.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Move every complete row held in `state.tail` into `arena` (one
+    /// row-width set each, in order), keeping the sub-row remainder —
+    /// the coalescing flush. Disarms the stream's deadline. Returns
+    /// `(first_chunk, rows_flushed)`.
+    fn flush_complete_rows(
+        n: usize,
+        state: &mut StreamState,
+        arena: &mut BurstSlab,
+        metrics: &SessionMetrics,
+    ) -> (u32, u32) {
+        state.coalesce_since = None;
+        let rows = state.tail.len() / n;
+        let first = state.chunks_submitted;
+        if rows == 0 {
+            return (first, 0);
+        }
+        arena.clear();
+        for r in 0..rows {
+            arena.push_set(&state.tail[r * n..(r + 1) * n]);
+        }
+        let keep = state.tail.len() - rows * n;
+        state.tail.copy_within(rows * n.., 0);
+        state.tail.truncate(keep);
+        let freed = 4 * (rows * n) as u64;
+        state.carried_bytes -= freed;
+        metrics.partial_bytes.fetch_sub(freed, Ordering::Relaxed);
+        state.chunks_submitted += rows as u32;
+        for _ in 0..rows {
+            state.parts.push(None);
+        }
+        (first, rows as u32)
+    }
+
+    /// Share a packed arena into the pipeline and register its chunk
+    /// requests — the common back half of `append` and the coalescing
+    /// flush paths. `chunks` must match `arena.sets()`.
+    fn submit_arena(
+        &mut self,
+        id: StreamId,
+        arena: BurstSlab,
+        first_chunk: u32,
+        chunks: u32,
+    ) -> std::result::Result<(), SessionError> {
+        let shared = arena.share();
+        let ids = self
+            .svc
+            .submit_burst_slab_carry(&shared)
+            .map_err(|e| SessionError::Pipeline(format!("{e:#}")))?;
+        for (k, req) in ids.enumerate() {
+            self.pending.insert(req, (id, first_chunk + k as u32));
+        }
+        self.in_flight.push(shared);
+        self.metrics.chunks_submitted.fetch_add(chunks as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Flush any complete rows coalescing is holding for `id` (no-op when
+    /// the stream isn't open or holds none). Returns whether a flush was
+    /// submitted.
+    fn flush_coalesced(&mut self, id: StreamId) -> std::result::Result<bool, SessionError> {
+        let n = self.n;
+        let mut arena = self.take_arena();
+        let (first_chunk, chunks) = {
+            let mut shard = self.table.lock(id.0);
+            match shard.get_mut(&id.0) {
+                Some(state) if state.phase == Phase::Open && state.tail.len() >= n => {
+                    Self::flush_complete_rows(n, state, &mut arena, &self.metrics)
+                }
+                _ => (0, 0),
+            }
+        };
+        if chunks == 0 {
+            if self.free.len() < 4 {
+                self.free.push(arena);
+            }
+            return Ok(false);
+        }
+        self.metrics.coalesce_flushes.fetch_add(1, Ordering::Relaxed);
+        self.submit_arena(id, arena, first_chunk, chunks)?;
+        Ok(true)
+    }
+
+    /// Deadline half of append coalescing: flush streams whose held rows
+    /// have outlived `coalesce_us` (bounds the latency coalescing adds).
+    fn pump_coalesce_deadlines(&mut self) {
+        if self.coalesce_bytes == 0 || self.coalesce_armed.is_empty() {
+            return;
+        }
+        let deadline = Duration::from_micros(self.coalesce_us);
+        let armed = std::mem::take(&mut self.coalesce_armed);
+        for sid in armed {
+            let expired = {
+                let shard = self.table.lock(sid);
+                match shard.get(&sid) {
+                    Some(st) if st.phase == Phase::Open => {
+                        st.coalesce_since.map(|t0| t0.elapsed() >= deadline)
+                    }
+                    // Closed/evicted/finished (or already flushed by the
+                    // size trigger): drop off the worklist.
+                    _ => None,
+                }
+            };
+            match expired {
+                None => {}
+                Some(false) => self.coalesce_armed.push(sid),
+                Some(true) => {
+                    // Pipeline errors are terminal for the service; the
+                    // opportunistic pump cannot surface them, so drop.
+                    if self.flush_coalesced(StreamId(sid)).unwrap_or(false) {
+                        self.metrics
+                            .coalesce_deadline_flushes
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
     /// An empty arena for the next append: reclaimed from a packed burst
     /// when possible, freshly allocated otherwise.
     fn take_arena(&mut self) -> BurstSlab {
@@ -888,6 +1070,7 @@ mod tests {
             max_open_streams: 64,
             idle_ttl: Duration::from_secs(30),
             durability: None,
+            ..Default::default()
         }
     }
 
@@ -1052,5 +1235,64 @@ mod tests {
         let (sm, _) = ss.shutdown();
         assert_eq!(sm.evictions, 1);
         assert_eq!(sm.partial_bytes, 0, "evicted carry released");
+    }
+
+    #[test]
+    fn coalesced_appends_match_one_shot_bit_for_bit() {
+        let vals: Vec<f32> = (0..103).map(|i| (i as f32 - 51.0) / 16.0).collect();
+        // One-shot reference through the plain service.
+        let mut svc = Service::start(cfg(8).service).unwrap();
+        svc.submit(vals.clone()).unwrap();
+        let want = svc.recv_timeout(Duration::from_secs(10)).unwrap().sum;
+        svc.shutdown();
+        // Streamed with coalescing: hold until 24 values (3 rows) are
+        // buffered; a long deadline so only the size trigger (and close)
+        // fire. Chunk boundaries depend only on the cumulative value
+        // count, so the sum must be bit-identical anyway.
+        let mut c = cfg(8);
+        c.coalesce_bytes = 24 * 4;
+        c.coalesce_us = 1_000_000;
+        let mut ss = SessionService::start(c).unwrap();
+        let id = ss.open().unwrap();
+        for frag in vals.chunks(3) {
+            ss.append(id, frag).unwrap();
+        }
+        ss.close(id).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(10)).expect("stream result");
+        assert_eq!(r.sum.to_bits(), want.to_bits(), "coalesced == one-shot");
+        assert_eq!(r.values, 103);
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.chunks_submitted, 13, "12 full rows of 8 plus the 7-value close chunk");
+        assert!(sm.coalesce_flushes > 0, "size trigger fired: {sm:?}");
+        assert_eq!(sm.partial_bytes, 0, "all carry accounted back to zero");
+    }
+
+    #[test]
+    fn coalesce_deadline_flushes_held_rows() {
+        let mut c = cfg(8);
+        // Size trigger effectively unreachable; only the deadline (or
+        // close) can flush.
+        c.coalesce_bytes = 1 << 20;
+        c.coalesce_us = 10_000;
+        let mut ss = SessionService::start(c).unwrap();
+        let id = ss.open().unwrap();
+        ss.append(id, &[1.0; 16]).unwrap();
+        assert_eq!(
+            ss.metrics().chunks_submitted,
+            0,
+            "two complete rows held by coalescing"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        // Any session API call pumps deadlines; recv_timeout is the
+        // natural idle one.
+        assert!(ss.recv_timeout(Duration::from_millis(50)).is_none());
+        let sm = ss.metrics();
+        assert_eq!(sm.chunks_submitted, 2, "deadline flushed the held rows");
+        assert!(sm.coalesce_deadline_flushes >= 1, "{sm:?}");
+        ss.close(id).unwrap();
+        let r = ss.recv_timeout(Duration::from_secs(10)).expect("result");
+        assert_eq!(r.sum, 16.0);
+        let (sm, _) = ss.shutdown();
+        assert_eq!(sm.partial_bytes, 0);
     }
 }

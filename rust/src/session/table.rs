@@ -33,10 +33,19 @@ pub(crate) enum Phase {
 #[derive(Debug)]
 pub(crate) struct StreamState {
     pub phase: Phase,
-    /// The incomplete last chunk (< row width values): fragments are
-    /// re-chunked at engine row boundaries so a streamed set produces
-    /// exactly the chunks its one-shot submission would.
+    /// The incomplete last chunk: fragments are re-chunked at engine row
+    /// boundaries so a streamed set produces exactly the chunks its
+    /// one-shot submission would. Normally < row width values; with
+    /// append coalescing on (`SessionConfig::coalesce_bytes`) complete
+    /// rows are held here too, until the size or deadline trigger flushes
+    /// them — chunk boundaries are a pure function of the cumulative
+    /// value count, so held rows change *when* chunks are submitted,
+    /// never *what* they contain.
     pub tail: Vec<f32>,
+    /// When the tail first started holding a complete coalesced row
+    /// (`None`: nothing held). The deadline trigger flushes streams whose
+    /// hold has outlived `coalesce_us`.
+    pub coalesce_since: Option<Instant>,
     /// Chunk partial states, by chunk index (see
     /// [`crate::engine::partial`]); `None` while the chunk is in flight.
     pub parts: Vec<Option<PartialState>>,
@@ -56,6 +65,7 @@ impl StreamState {
         Self {
             phase: Phase::Open,
             tail: Vec::new(),
+            coalesce_since: None,
             parts: Vec::new(),
             parts_received: 0,
             chunks_submitted: 0,
@@ -86,6 +96,7 @@ impl StreamState {
         Self {
             phase: Phase::Open,
             tail,
+            coalesce_since: None,
             parts: parts.into_iter().map(Some).collect(),
             parts_received: p,
             chunks_submitted: p,

@@ -1,0 +1,198 @@
+//! Stress suite for the caller-owned completion ring (`coordinator::ring`):
+//! the response path must deliver every submission exactly once, in order,
+//! under a slow consumer, under burst overrun of a tiny ring, and with a
+//! shard dying mid-delivery — and the steady-state consumer loop must not
+//! allocate at all (the point of replacing `channel::<Vec<Response>>`).
+//!
+//! The allocation audit uses a counting `#[global_allocator]` armed via a
+//! thread-local, so only the consumer thread's allocations are counted —
+//! pipeline threads (which have their own recycling discipline, audited by
+//! the `responses_recycled` metric) don't pollute the count, and parallel
+//! test threads don't race it.
+
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::Duration;
+
+struct CountingAlloc;
+
+thread_local! {
+    // const-initialized (no lazy init, no destructor): safe to touch from
+    // inside the allocator without recursing.
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation tracking armed on this thread; returns
+/// (allocations made by this thread during `f`, f's result).
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    ALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    let r = f();
+    TRACKING.with(|t| t.set(false));
+    (ALLOCS.with(|c| c.get()), r)
+}
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineConfig::native(4, 16),
+        batch_deadline: Duration::from_micros(100),
+        ordered: true,
+        queue_depth: 1024,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn steady_state_recv_loop_is_allocation_free() {
+    let mut svc = Service::start(cfg()).unwrap();
+    let wave = 50u64;
+    // Warm-up wave: fills the batch pool, the ring's preallocated slots,
+    // and every lazy path (first condvar park, first batch flush).
+    for k in 0..wave {
+        svc.submit(vec![1.0; (k as usize % 12) + 1]).unwrap();
+    }
+    for i in 0..wave {
+        let r = svc.recv_timeout(Duration::from_secs(10)).expect("warm-up response");
+        assert_eq!(r.req_id, i);
+    }
+    // Steady state: the submit side allocates (it owns the request Vecs),
+    // the recv side must not — popping a preallocated slot and dropping a
+    // state-less Response touches no allocator.
+    for k in 0..wave {
+        svc.submit(vec![2.0; (k as usize % 12) + 1]).unwrap();
+    }
+    let (allocs, ()) = count_allocs(|| {
+        for i in 0..wave {
+            let r = svc.recv_timeout(Duration::from_secs(10)).expect("steady-state response");
+            assert_eq!(r.req_id, wave + i, "ordered delivery");
+            assert!(r.state.is_none(), "plain submissions carry no state");
+        }
+    });
+    assert_eq!(allocs, 0, "consumer recv loop allocated {allocs} times at steady state");
+    let m = svc.shutdown();
+    assert_eq!(m.completed, 2 * wave);
+    // Producer side of the same audit: every response reused ring capacity.
+    assert_eq!(m.responses_recycled, 2 * wave, "{m:?}");
+}
+
+#[test]
+fn burst_overrun_of_a_tiny_ring_delivers_everything_in_order() {
+    // Two preallocated slots, three hundred responses, and a consumer that
+    // doesn't pop until everything is submitted: the ring must grow past
+    // its slots (never block — a blocking bounded ring would deadlock this
+    // exact submit-all-then-receive pattern) and still deliver in order.
+    let mut svc = Service::start(ServiceConfig { completion_slots: 2, ..cfg() }).unwrap();
+    let count = 300u64;
+    let mut want = Vec::new();
+    for k in 0..count {
+        let len = (k as usize % 40) + 1;
+        want.push(len as f32);
+        svc.submit(vec![1.0; len]).unwrap();
+    }
+    // Let the pipeline finish while nobody is receiving, so the backlog
+    // actually piles up in the ring rather than draining as it forms.
+    std::thread::sleep(Duration::from_millis(100));
+    for i in 0..count {
+        let r = svc.recv_timeout(Duration::from_secs(10)).expect("backlogged response");
+        assert_eq!(r.req_id, i, "order survives overrun growth");
+        assert_eq!(r.sum, want[i as usize]);
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed, count);
+}
+
+#[test]
+fn slow_consumer_gets_exactly_once_ordered_delivery() {
+    // Sharded pipeline with completion jitter (so shards finish out of
+    // order) against a consumer that keeps falling behind: every request
+    // must arrive exactly once, in submission order, no matter how deep
+    // the ring backlog gets between pops.
+    let mut svc = Service::start(ServiceConfig {
+        shards: 3,
+        shard_jitter_us: 200,
+        ..cfg()
+    })
+    .unwrap();
+    let count = 150u64;
+    for k in 0..count {
+        svc.submit(vec![0.5; (k as usize % 30) + 2]).unwrap();
+    }
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..count {
+        if i % 10 == 0 {
+            std::thread::sleep(Duration::from_millis(2)); // fall behind
+        }
+        let r = svc.recv_timeout(Duration::from_secs(10)).expect("response despite backlog");
+        assert_eq!(r.req_id, i, "ordered");
+        assert!(seen.insert(r.req_id), "exactly once");
+    }
+    assert_eq!(seen.len(), count as usize);
+    let m = svc.shutdown();
+    assert_eq!(m.completed, count);
+}
+
+#[test]
+fn shard_death_mid_delivery_does_not_stall_the_ring() {
+    // Shard 1 dies after two batches while deliveries are in flight. The
+    // drain path NaN-poisons the dead shard's rows instead of dropping
+    // them, so the ring still sees every request exactly once, in order —
+    // a lost producer must never leave the consumer parked forever.
+    let mut svc = Service::start(ServiceConfig {
+        shards: 3,
+        steal: true,
+        shard_fail_after: Some((1, 2)),
+        ..cfg()
+    })
+    .unwrap();
+    let count = 200u64;
+    for k in 0..count {
+        svc.submit(vec![1.0; (k as usize % 25) + 1]).unwrap();
+    }
+    let mut exact = 0u64;
+    let mut poisoned = 0u64;
+    for i in 0..count {
+        let r = svc
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|| panic!("response {i} never arrived after shard death"));
+        assert_eq!(r.req_id, i, "ordered delivery across the dead shard");
+        if r.sum.is_nan() {
+            poisoned += 1;
+        } else {
+            assert_eq!(r.sum, ((i as usize % 25) + 1) as f32);
+            exact += 1;
+        }
+    }
+    assert_eq!(exact + poisoned, count, "every request delivered exactly once");
+    let m = svc.shutdown();
+    assert_eq!(m.completed, count);
+    assert!(m.engine_failures > 0, "the kill knob fired: {m:?}");
+}

@@ -37,6 +37,7 @@ fn base_cfg(shards: usize) -> SessionConfig {
         max_open_streams: 64,
         idle_ttl: Duration::from_secs(120),
         durability: None,
+        ..Default::default()
     }
 }
 

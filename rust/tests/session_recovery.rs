@@ -71,6 +71,7 @@ fn durable_cfg(engine: &str, shards: usize, dir: &Path) -> SessionConfig {
         max_open_streams: 64,
         idle_ttl: Duration::from_secs(120),
         durability: Some(d),
+        ..Default::default()
     }
 }
 

@@ -47,6 +47,7 @@ fn session_cfg(engine: &str, shards: usize) -> SessionConfig {
         max_open_streams: 1024,
         idle_ttl: Duration::from_secs(120),
         durability: None,
+        ..Default::default()
     }
 }
 
@@ -202,6 +203,7 @@ fn exact_cancellation_across_the_fragment_boundary_is_correctly_rounded() {
             max_open_streams: 8,
             idle_ttl: Duration::from_secs(60),
             durability: None,
+            ..Default::default()
         })
         .unwrap();
         let id = ss.open().unwrap();

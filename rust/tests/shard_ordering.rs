@@ -22,6 +22,7 @@ fn cfg(shards: usize, steal: bool, jitter_us: u64) -> ServiceConfig {
         shard_jitter_us: jitter_us,
         shard_stall_us: Vec::new(),
         shard_fail_after: None,
+        ..Default::default()
     }
 }
 

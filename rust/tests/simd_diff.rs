@@ -1,0 +1,184 @@
+//! Differential suite for the explicit-SIMD reduce kernels: every level
+//! the host supports must reproduce the blocked-scalar pass **bit for
+//! bit** — across widths (blocked pass + pairwise finish in every mix),
+//! across the whole IEEE zoo (subnormals, signed zeros, infinities,
+//! NaNs), and under every `SimdPolicy` spelling. The CI `isa-matrix` job
+//! re-runs this file with `JUGGLEPAC_SIMD` forced to each level so the
+//! env-override path is exercised end to end too.
+//!
+//! The kernels' contract (see `fp::simd`) is that every vector add is a
+//! vertical IEEE add pairing exactly the operands the scalar kernel
+//! pairs, in the same order — so the tests compare raw bit patterns, not
+//! float equality, and NaN results must match bitwise as well.
+
+use jugglepac::fp::simd::{self, SimdLevel, SimdPolicy};
+use jugglepac::fp::vreduce::tree_reduce_in_place_with;
+use jugglepac::util::Xoshiro256;
+
+/// Every kernel level this host can actually run.
+fn supported_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Sse2, SimdLevel::Avx2]
+        .into_iter()
+        .filter(|&l| simd::supported(l))
+        .collect()
+}
+
+/// Reduce `vals` with the given kernel level and return the root's bits.
+fn reduce_bits(level: Option<SimdLevel>, vals: &[f32]) -> u32 {
+    let mut buf = vals.to_vec();
+    tree_reduce_in_place_with(level, &mut buf).to_bits()
+}
+
+/// Assert every supported level agrees with blocked-scalar on `vals`.
+fn assert_all_levels_match(vals: &[f32], what: &str) {
+    let want = reduce_bits(None, vals);
+    for level in supported_levels() {
+        let got = reduce_bits(Some(level), vals);
+        assert_eq!(
+            got, want,
+            "{what}: {level:?} diverged from scalar (n={}, got 0x{got:08x}, want 0x{want:08x})",
+            vals.len()
+        );
+    }
+}
+
+#[test]
+fn every_level_matches_scalar_across_widths() {
+    // Widths straddling every code path: pure pairwise finish (< 8), one
+    // blocked pass (8), repeated blocked passes (64 → 8 → 1), blocked
+    // pass + finish (16, 24, 128, 256), odd AVX2 tail blocks (24, 40),
+    // and non-multiples of 8 that skip the blocked pass entirely (100).
+    let widths: Vec<usize> =
+        (1..=8).chain([16, 24, 40, 100, 128, 256]).collect();
+    let mut rng = Xoshiro256::seeded(0x51D1FF);
+    for n in widths {
+        for round in 0..4 {
+            // Mixed magnitudes force real rounding at every tree node, so
+            // an association slip can't hide behind exact arithmetic.
+            let vals: Vec<f32> = (0..n)
+                .map(|_| {
+                    let mag = 10f64.powi(rng.range(0, 12) as i32 - 6);
+                    ((rng.next_f64() - 0.5) * mag) as f32
+                })
+                .collect();
+            assert_all_levels_match(&vals, &format!("width sweep round {round}"));
+        }
+    }
+}
+
+#[test]
+fn subnormal_lanes_are_not_flushed() {
+    // Rust never enables FTZ/DAZ; the kernels must honor that. Sums of
+    // pure subnormals stay subnormal and exact — any flush-to-zero in a
+    // kernel would zero the result and break bit-identity loudly.
+    let tiny = f32::from_bits(1); // smallest positive subnormal
+    for n in [8usize, 16, 24, 64] {
+        let vals: Vec<f32> = (0..n).map(|i| tiny * (1 + (i % 3)) as f32).collect();
+        assert_all_levels_match(&vals, "subnormal lanes");
+        let root = f32::from_bits(reduce_bits(None, &vals));
+        assert!(root > 0.0 && !root.is_normal(), "stayed subnormal: {root:e}");
+    }
+}
+
+#[test]
+fn signed_zeros_keep_their_sign() {
+    // IEEE: (-0) + (-0) = -0 but (-0) + (+0) = +0. An all-negative-zero
+    // vector must therefore reduce to -0.0 on every kernel — sign bit
+    // included — while a single +0 lane anywhere flips the root to +0.0.
+    for n in [2usize, 8, 16, 64] {
+        let vals = vec![-0.0f32; n];
+        assert_all_levels_match(&vals, "all -0.0");
+        assert_eq!(reduce_bits(None, &vals), (-0.0f32).to_bits(), "n={n}");
+        let mut mixed = vals;
+        mixed[n / 2] = 0.0;
+        assert_all_levels_match(&mixed, "-0.0 with one +0.0");
+        assert_eq!(reduce_bits(None, &mixed), 0.0f32.to_bits(), "n={n}");
+    }
+}
+
+#[test]
+fn infinities_and_manufactured_nan_match_bitwise() {
+    // Same-signed infinities propagate; ∞ + -∞ manufactures the canonical
+    // quiet NaN. Both must come out bit-identical across kernels — the
+    // NaN case pins the one IEEE freedom the kernels could differ in.
+    let inf = f32::INFINITY;
+    let all_pos: Vec<f32> = vec![inf, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+    assert_all_levels_match(&all_pos, "one +inf lane");
+    assert_eq!(reduce_bits(None, &all_pos), inf.to_bits());
+
+    let cancel: Vec<f32> = vec![inf, -inf, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+    assert_all_levels_match(&cancel, "inf cancellation NaN");
+    assert!(f32::from_bits(reduce_bits(None, &cancel)).is_nan());
+
+    // The cancellation in the pairwise-finish path too (width 4 < 8).
+    let short = vec![inf, -inf, 1.0, 2.0];
+    assert_all_levels_match(&short, "short inf cancellation");
+
+    // And across repeated blocked passes (64 lanes, NaN born mid-tree).
+    let mut wide = vec![1.0f32; 64];
+    wide[17] = inf;
+    wide[44] = -inf;
+    assert_all_levels_match(&wide, "wide inf lanes");
+}
+
+#[test]
+fn nan_input_lanes_propagate_bit_identically() {
+    // A quiet-NaN input lane must reach the root with the same bits on
+    // every kernel, wherever it sits in the block.
+    let nan = f32::NAN;
+    for n in [8usize, 16, 24, 40, 256] {
+        for pos in [0, n / 2, n - 1] {
+            let mut vals: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 3.0).collect();
+            vals[pos] = nan;
+            assert_all_levels_match(&vals, &format!("NaN lane at {pos}"));
+            assert!(f32::from_bits(reduce_bits(None, &vals)).is_nan());
+        }
+    }
+}
+
+#[test]
+fn policy_resolution_covers_forced_off_and_env_override() {
+    // Pure resolution (no process-global OnceLock involved): `Off` always
+    // means scalar; `Auto` means the best the host has; forcing a level
+    // the host supports selects it, forcing one it lacks falls back.
+    assert_eq!(simd::resolve(SimdPolicy::Off, None), None);
+    assert_eq!(simd::resolve(SimdPolicy::Auto, None), simd::best_supported());
+    for l in [SimdLevel::Sse2, SimdLevel::Avx2] {
+        let r = simd::resolve(SimdPolicy::Forced(l), None);
+        if simd::supported(l) {
+            assert_eq!(r, Some(l), "forced supported level selects it");
+        } else {
+            assert_eq!(r, simd::best_supported(), "unsupported force falls back");
+        }
+    }
+    // The env override (the CI matrix lever) beats the installed policy,
+    // in every accepted spelling; garbage spellings are ignored.
+    assert_eq!(simd::resolve(SimdPolicy::Auto, Some("off")), None);
+    assert_eq!(simd::resolve(SimdPolicy::Auto, Some("scalar")), None);
+    assert_eq!(simd::resolve(SimdPolicy::Off, Some("bogus")), None);
+    if simd::supported(SimdLevel::Sse2) {
+        assert_eq!(
+            simd::resolve(SimdPolicy::Off, Some("sse2")),
+            Some(SimdLevel::Sse2)
+        );
+    }
+}
+
+#[test]
+fn whatever_the_env_forces_still_matches_scalar() {
+    // Under the CI matrix this process runs with JUGGLEPAC_SIMD forced to
+    // some level; `active()` is whatever won. The end-to-end claim is that
+    // the *installed* kernel — not just each level in isolation — is
+    // bit-identical to scalar.
+    let active = simd::active();
+    let mut rng = Xoshiro256::seeded(0xAC71);
+    for n in [7usize, 8, 24, 100, 256] {
+        let vals: Vec<f32> =
+            (0..n).map(|_| ((rng.next_f64() - 0.5) * 1e4) as f32).collect();
+        assert_eq!(
+            reduce_bits(active, &vals),
+            reduce_bits(None, &vals),
+            "installed kernel {active:?} at n={n}"
+        );
+    }
+}

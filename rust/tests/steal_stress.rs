@@ -19,6 +19,7 @@ fn cfg(shards: usize, steal: bool, stall0_us: u64) -> ServiceConfig {
         shard_jitter_us: 200,
         shard_stall_us: if stall0_us > 0 { vec![stall0_us] } else { Vec::new() },
         shard_fail_after: None,
+        ..Default::default()
     }
 }
 
