@@ -1,0 +1,137 @@
+//! Observability overhead bench — the evidence for the `TracePolicy::Off`
+//! zero-cost claim and the sampled/full tracing price, plus what a
+//! metrics scrape costs the scraped node:
+//!
+//! - **gate micro**: the bare hook (`maybe_now`) under Off / Sampled(64)
+//!   / Full — Off must reduce to one relaxed load, indistinguishable
+//!   from free at loop scale;
+//! - **e2e tracing tax**: submit-all/receive-all responses/s at shards
+//!   {1, 4} under Off vs Sampled(64) vs Full — the end-to-end price of
+//!   turning tracing on;
+//! - **scrape cost**: one full registry gather plus text render on a
+//!   warm traced service — what answering `jugglepac stats` once costs.
+//!
+//! Writes `BENCH_10.json` (override with `JUGGLEPAC_BENCH_JSON`).
+
+use jugglepac::benchkit::{bench, env_iters, json_path, report_throughput, smoke, JsonSink};
+use jugglepac::coordinator::{EngineConfig, Service, ServiceConfig};
+use jugglepac::obs::{render_text, Registry, StageTrace, TracePolicy};
+use jugglepac::util::Xoshiro256;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    let mut sink = JsonSink::new();
+    gate_micro(&mut sink);
+    e2e_tracing_tax(&mut sink);
+    scrape_cost(&mut sink);
+    sink.write(&json_path("BENCH_10.json")).unwrap();
+}
+
+/// The bare hook under each policy. Off is the number that matters: it
+/// is the cost every request pays when nobody is tracing.
+fn gate_micro(sink: &mut JsonSink) {
+    let calls: u64 = if smoke() { 1_000_000 } else { 10_000_000 };
+    let iters = env_iters(9);
+    println!("=== trace gate micro: {calls} hook calls ===");
+    let trace = StageTrace::new();
+    for (policy, label) in [
+        (TracePolicy::Off, "off"),
+        (TracePolicy::Sampled(64), "sampled64"),
+        (TracePolicy::Full, "full"),
+    ] {
+        trace.configure(policy, 0);
+        let median = bench(&format!("maybe_now policy={label}"), iters, || {
+            let mut admitted = 0u64;
+            for _ in 0..calls {
+                if let Some(t) = trace.maybe_now() {
+                    black_box(t);
+                    admitted += 1;
+                }
+            }
+            black_box(admitted);
+        });
+        report_throughput("calls", calls, "calls", median);
+        sink.record_throughput(&format!("obs_overhead/gate/{label}"), calls, median);
+    }
+}
+
+/// End-to-end responses/s with the whole pipeline instrumented: Off must
+/// match the untraced PR 9 numbers; Sampled(64) is the production
+/// setting; Full is the ceiling.
+fn e2e_tracing_tax(sink: &mut JsonSink) {
+    let sets = if smoke() { 300 } else { 3000 };
+    let iters = env_iters(3);
+    let mut rng = Xoshiro256::seeded(0x0B5E);
+    let requests: Vec<Vec<f32>> = (0..sets)
+        .map(|_| {
+            let n = rng.range(8, 512);
+            (0..n).map(|_| rng.range_i64(-512, 512) as f32 / 32.0).collect()
+        })
+        .collect();
+    println!("=== e2e tracing tax: {sets} sets, native 8x256 ===");
+    for shards in [1usize, 4] {
+        for (policy, label) in [
+            (TracePolicy::Off, "off"),
+            (TracePolicy::Sampled(64), "sampled64"),
+            (TracePolicy::Full, "full"),
+        ] {
+            let name = format!("e2e shards={shards} trace={label}");
+            let median = bench(&name, iters, || {
+                let mut svc = Service::start(ServiceConfig {
+                    engine: EngineConfig::native(8, 256),
+                    shards,
+                    trace: policy,
+                    ..Default::default()
+                })
+                .unwrap();
+                for chunk in requests.chunks(128) {
+                    svc.submit_burst(chunk.to_vec()).unwrap();
+                }
+                for i in 0..requests.len() {
+                    let r = svc.recv_timeout(Duration::from_secs(60)).expect("response");
+                    assert_eq!(r.req_id, i as u64);
+                }
+                svc.shutdown();
+            });
+            report_throughput("responses", sets as u64, "resp", median);
+            sink.record_throughput(
+                &format!("obs_overhead/e2e/shards{shards}/trace_{label}"),
+                sets as u64,
+                median,
+            );
+        }
+    }
+}
+
+/// One full gather + text render on a warm, traced service — the cost a
+/// node pays to answer one `jugglepac stats` / METRICS_REQ scrape.
+fn scrape_cost(sink: &mut JsonSink) {
+    let scrapes: u64 = if smoke() { 200 } else { 2000 };
+    let iters = env_iters(9);
+    let mut svc = Service::start(ServiceConfig {
+        engine: EngineConfig::native(8, 64),
+        trace: TracePolicy::Sampled(8),
+        ..Default::default()
+    })
+    .unwrap();
+    for i in 0..512u64 {
+        svc.submit(vec![1.0; (i as usize % 40) + 1]).unwrap();
+    }
+    for _ in 0..512 {
+        svc.recv_timeout(Duration::from_secs(30)).expect("warm-up response");
+    }
+    let metrics = svc.metrics_handle();
+    let registry = Registry::new();
+    registry.register(move |out| metrics.samples_into(out));
+    println!("=== metrics scrape: gather + render_text x {scrapes} ===");
+    let median = bench("gather+render_text", iters, || {
+        for _ in 0..scrapes {
+            let samples = registry.gather();
+            black_box(render_text(&samples).len());
+        }
+    });
+    report_throughput("scrapes", scrapes, "scrapes", median);
+    sink.record_throughput("obs_overhead/scrape/gather_render", scrapes, median);
+    svc.shutdown();
+}

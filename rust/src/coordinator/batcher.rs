@@ -78,6 +78,10 @@ pub struct Batcher {
     lengths: Vec<i32>,
     rows: Vec<(u64, u32)>,
     oldest: Option<Instant>,
+    /// `oldest` of the batch the last [`Self::flush`] produced — moved,
+    /// not re-read from the clock, so keeping it costs nothing. The
+    /// dispatch-hold trace leg reads it when sampling admits.
+    last_flush_oldest: Option<Instant>,
     deadline: Duration,
     /// Recycled-buffer source for [`Self::flush`] (see [`BatchPool`]).
     pool: Option<Arc<BatchPool>>,
@@ -93,6 +97,7 @@ impl Batcher {
             lengths: vec![0; batch],
             rows: Vec::with_capacity(batch),
             oldest: None,
+            last_flush_oldest: None,
             deadline,
             pool: None,
         }
@@ -181,7 +186,7 @@ impl Batcher {
         if self.rows.is_empty() {
             return None;
         }
-        self.oldest = None;
+        self.last_flush_oldest = self.oldest.take();
         let mut out = self.fresh_batch();
         std::mem::swap(&mut self.x, &mut out.x);
         std::mem::swap(&mut self.lengths, &mut out.lengths);
@@ -191,6 +196,12 @@ impl Batcher {
 
     pub fn pending_rows(&self) -> usize {
         self.rows.len()
+    }
+
+    /// When the batch the last [`Self::flush`] produced received its
+    /// first row (the dispatch-hold trace leg's start stamp).
+    pub fn last_flush_oldest(&self) -> Option<Instant> {
+        self.last_flush_oldest
     }
 }
 
@@ -203,6 +214,10 @@ impl Batcher {
 pub struct SeqBatch {
     pub seq: u64,
     pub batch: Batch,
+    /// Dispatch stamp: when the batch entered a shard deque. The
+    /// queue-wait trace leg measures pop time against it (one clock read
+    /// per *batch*, same cadence as the batcher's own `oldest` stamp).
+    pub at: Instant,
 }
 
 /// Queue-depth-aware round-robin dispatch into the shard pool's injector
@@ -248,7 +263,7 @@ impl Router {
         let n = self.pool.shards();
         let start = self.rr;
         self.rr = (self.rr + 1) % n;
-        let mut msg = SeqBatch { seq, batch };
+        let mut msg = SeqBatch { seq, batch, at: Instant::now() };
         // Pass 1: non-blocking, spilling past full (or dead) deques.
         for k in 0..n {
             let i = (start + k) % n;

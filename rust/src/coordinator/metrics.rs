@@ -2,6 +2,7 @@
 //! engine counters (the sharded pipeline reports both the aggregate and
 //! each shard's share, so load imbalance is visible).
 
+use crate::obs::{Sample, SampleValue, StageTrace};
 use crate::util::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -81,6 +82,10 @@ pub struct Metrics {
     /// ack — including for refused pairs — so it returns to 0 when the
     /// pipeline is drained.
     pub scatter_pairs_in_flight: AtomicU64,
+    /// Stage-latency trace sink (see [`crate::obs::trace`]). Off by
+    /// default — every pipeline hook guards on its one-relaxed-load
+    /// gate, so untraced serving pays nothing.
+    pub trace: StageTrace,
     latency_us: Mutex<Histogram>,
     shards: Vec<ShardCounters>,
 }
@@ -110,6 +115,7 @@ impl Metrics {
             key_evictions: AtomicU64::new(0),
             scatter_refusals: AtomicU64::new(0),
             scatter_pairs_in_flight: AtomicU64::new(0),
+            trace: StageTrace::new(),
             latency_us: Mutex::new(Histogram::new()),
             shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
         }
@@ -127,10 +133,50 @@ impl Metrics {
             s.values_reduced.fetch_add(values, Ordering::Relaxed);
             s.engine_ns.fetch_add(engine_ns, Ordering::Relaxed);
         }
+        // Engine-stage trace leg, derived from the already-measured
+        // execute time: no extra clock read on this path, ever.
+        if self.trace.should_sample() {
+            self.trace.record_us(crate::obs::Stage::Engine, engine_ns / 1_000);
+        }
     }
 
     pub fn record_latency_us(&self, us: u64) {
         self.latency_us.lock().unwrap().record(us);
+    }
+
+    /// Append every coordinator and scatter metric as named registry
+    /// samples (see [`crate::obs::Registry`]). Reads the same atomics
+    /// [`snapshot`](Self::snapshot) does — gather-time only, the hot
+    /// paths are untouched.
+    pub fn samples_into(&self, out: &mut Vec<Sample>) {
+        let c = |name: &str, v: &AtomicU64| Sample::counter(name, v.load(Ordering::Relaxed));
+        let g = |name: &str, v: &AtomicU64| Sample::gauge(name, v.load(Ordering::Relaxed));
+        out.push(c("coordinator_submitted", &self.submitted));
+        out.push(c("coordinator_completed", &self.completed));
+        out.push(c("coordinator_batches", &self.batches));
+        out.push(c("coordinator_batched_rows", &self.batched_rows));
+        out.push(c("coordinator_values_reduced", &self.values_reduced));
+        out.push(c("coordinator_engine_ns", &self.engine_ns));
+        out.push(c("coordinator_dispatch_spills", &self.dispatch_spills));
+        out.push(c("coordinator_reorder_held_max", &self.reorder_held_max));
+        out.push(c("coordinator_engine_failures", &self.engine_failures));
+        out.push(c("coordinator_steals", &self.steals));
+        out.push(c("coordinator_steal_misses", &self.steal_misses));
+        out.push(c("coordinator_reorder_duplicates", &self.reorder_duplicates));
+        out.push(g("coordinator_slab_bytes_in_flight", &self.slab_bytes_in_flight));
+        out.push(c("coordinator_batches_recycled", &self.batches_recycled));
+        out.push(c("coordinator_responses_recycled", &self.responses_recycled));
+        out.push(c("coordinator_threads_pinned", &self.threads_pinned));
+        out.push(g("scatter_keys_live", &self.keys_live));
+        out.push(c("scatter_adds", &self.scatter_adds));
+        out.push(c("scatter_key_evictions", &self.key_evictions));
+        out.push(c("scatter_refusals", &self.scatter_refusals));
+        out.push(g("scatter_pairs_in_flight", &self.scatter_pairs_in_flight));
+        out.push(Sample {
+            name: "coordinator_latency_us".into(),
+            value: SampleValue::Hist(self.latency_us.lock().unwrap().clone()),
+        });
+        self.trace.samples_into("trace_", out);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -312,6 +358,26 @@ mod tests {
         m.batches.store(10, Ordering::Relaxed);
         m.batched_rows.store(60, Ordering::Relaxed);
         assert!((m.snapshot().batch_fill(8) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_are_unique_and_subsystem_prefixed() {
+        let m = Metrics::default();
+        let mut out = Vec::new();
+        m.samples_into(&mut out);
+        let mut names: Vec<&str> = out.iter().map(|s| s.name.as_str()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate sample names");
+        for n in names {
+            assert!(
+                n.starts_with("coordinator_")
+                    || n.starts_with("scatter_")
+                    || n.starts_with("trace_"),
+                "unprefixed sample {n}"
+            );
+        }
     }
 
     #[test]

@@ -122,6 +122,13 @@ pub struct ServiceConfig {
     /// Preallocated response slots in the completion ring (see [`ring`]).
     /// Overruns grow the ring (counted) rather than blocking producers.
     pub completion_slots: usize,
+    /// Stage-latency tracing policy (see [`crate::obs::trace`]). `Off`
+    /// (the default) keeps every trace hook at one relaxed atomic load.
+    /// The `JUGGLEPAC_TRACE` env var overrides at start. `serve --trace`.
+    pub trace: crate::obs::TracePolicy,
+    /// Slow-request threshold in µs for sampled requests (0 disables the
+    /// slow log). `serve --slow-us`.
+    pub slow_us: u64,
 }
 
 impl Default for ServiceConfig {
@@ -143,6 +150,8 @@ impl Default for ServiceConfig {
             simd: SimdPolicy::Auto,
             pin: false,
             completion_slots: 1024,
+            trace: crate::obs::TracePolicy::Off,
+            slow_us: 0,
         }
     }
 }
@@ -235,6 +244,11 @@ impl Service {
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         let shards = cfg.shards.max(1);
         let metrics = Arc::new(Metrics::new(shards));
+        // Tracing is installed before any pipeline thread spawns; the env
+        // var wins over the config so a deployment can be traced without
+        // plumbing a flag through every harness.
+        let trace_policy = crate::obs::TracePolicy::from_env().unwrap_or(cfg.trace);
+        metrics.trace.configure(trace_policy, cfg.slow_us);
         // Reduce-kernel selection is process-wide and happens before any
         // worker spawns (first service wins; `JUGGLEPAC_SIMD` overrides).
         crate::fp::simd::install(cfg.simd);
@@ -452,7 +466,7 @@ impl Service {
                     .context("service pipeline closed")
             });
         if let Err(e) = sent {
-            self.metrics.slab_bytes_in_flight.fetch_sub(slab.bytes(), Ordering::Relaxed);
+            crate::obs::gauge_discharge(&self.metrics.slab_bytes_in_flight, slab.bytes());
             return Err(e);
         }
         Ok(first_id..first_id + count)
@@ -465,6 +479,12 @@ impl Service {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared handle to the live metrics struct — what observability
+    /// gather sources close over (see [`crate::obs::Registry`]).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
     }
 
     pub fn batch_capacity(&self) -> usize {
@@ -535,7 +555,13 @@ pub(crate) fn deliver_rows(
         let at = birth.remove(&done.req_id);
         let latency = at.map(|t| t.elapsed()).unwrap_or_default();
         metrics.completed.fetch_add(1, Ordering::Relaxed);
-        metrics.record_latency_us(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        metrics.record_latency_us(us);
+        // Whole-request trace leg: Total histogram + recent ring + slow
+        // log, reusing the latency already computed above.
+        if metrics.trace.should_sample() {
+            metrics.trace.record_total(done.req_id, us);
+        }
         match tx_out.push(Response {
             req_id: done.req_id,
             sum: done.sum,

@@ -154,6 +154,12 @@ pub(crate) fn run_reorder(
     let mut rob = ReorderBuffer::new();
     // Delivery scratch for `deliver_rows` — drained every call.
     let mut completed: Vec<Completed> = Vec::new();
+    // Reorder-hold trace leg: arrival stamps per sequence number, kept
+    // only while tracing is on (one relaxed load per completion when
+    // off, no clock reads). A duplicate/late-replay seq can strand its
+    // stamp here, but those are counted as an upstream bug
+    // (`reorder_duplicates`) and ~0 in a healthy pipeline.
+    let mut parked_at: std::collections::HashMap<u64, Instant> = Default::default();
 
     let mut deliver = |done: ShardDone,
                        asm: &mut Assembler,
@@ -181,7 +187,18 @@ pub(crate) fn run_reorder(
                 birth.insert(req_id, at);
             }
             Ok(ToReorder::Done(d)) => {
+                let tracing = metrics.trace.enabled();
+                if tracing {
+                    parked_at.insert(d.seq, Instant::now());
+                }
                 for ready in rob.push(d) {
+                    if tracing {
+                        if let Some(t) = parked_at.remove(&ready.seq) {
+                            metrics
+                                .trace
+                                .record_us(crate::obs::Stage::ReorderHold, t.elapsed().as_micros() as u64);
+                        }
+                    }
                     if !deliver(ready, &mut asm, &mut birth) {
                         return;
                     }

@@ -327,7 +327,7 @@ impl ScatterService {
             );
         }
         if undelivered > 0 {
-            self.metrics.scatter_pairs_in_flight.fetch_sub(undelivered, Ordering::Relaxed);
+            crate::obs::gauge_discharge(&self.metrics.scatter_pairs_in_flight, undelivered);
             bail!("scatter pipeline shut down: shard worker exited");
         }
         self.maybe_snapshot();
@@ -374,7 +374,7 @@ impl ScatterService {
     fn absorb(&mut self, a: ShardAck) {
         // Refused pairs discharge the gauge too: refusal is an outcome,
         // not a leak.
-        self.metrics.scatter_pairs_in_flight.fetch_sub(a.applied + a.refused, Ordering::Relaxed);
+        crate::obs::gauge_discharge(&self.metrics.scatter_pairs_in_flight, a.applied + a.refused);
         let Some(p) = self.pending.get_mut(&a.ticket) else { return };
         p.applied += a.applied;
         p.refused += a.refused;
@@ -477,6 +477,13 @@ impl ScatterService {
         self.metrics.snapshot()
     }
 
+    /// Shared handle to the live metric atomics, for registering this
+    /// service into a [`crate::obs::Registry`] (same contract as
+    /// [`super::Service::metrics_handle`]).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Final durable snapshot, stop the shard workers, settle the
     /// in-flight gauge, and return final metrics.
     pub fn shutdown(mut self) -> MetricsSnapshot {
@@ -569,7 +576,7 @@ fn run_keyed_shard(a: KeyedArgs) {
                     let e = table.drain();
                     let n = e.len() as u64;
                     if n > 0 {
-                        a.metrics.keys_live.fetch_sub(n, Ordering::Relaxed);
+                        crate::obs::gauge_discharge(&a.metrics.keys_live, n);
                         a.metrics.key_evictions.fetch_add(n, Ordering::Relaxed);
                     }
                     e

@@ -32,6 +32,7 @@ use super::ring::RingProducer;
 use super::steal::StealPool;
 use super::{affinity, Batch, Submission};
 use crate::engine::{self, EngineConfig, PartialState, ReduceEngine};
+use crate::obs::{gauge_discharge, Stage};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -50,6 +51,18 @@ fn maybe_pin(pin_cpu: Option<usize>, metrics: &Metrics) {
 /// Sum of valid values across a batch's occupied rows (metrics).
 fn batch_values(batch: &Batch) -> u64 {
     batch.lengths[..batch.rows.len()].iter().map(|&l| l.max(0) as u64).sum()
+}
+
+/// Record the dispatch-hold trace leg (first row into the batcher →
+/// flush) for the batch the batcher just flushed. The start stamp is a
+/// move of the batcher's existing `oldest` field; when tracing is off
+/// this is one relaxed load, no clock read.
+fn trace_dispatch_hold(metrics: &Metrics, b: &Batcher) {
+    if metrics.trace.should_sample() {
+        if let Some(t) = b.last_flush_oldest() {
+            metrics.trace.record_us(Stage::DispatchHold, t.elapsed().as_micros() as u64);
+        }
+    }
 }
 
 pub(crate) struct FusedArgs {
@@ -144,22 +157,21 @@ pub(crate) fn run_fused(args: FusedArgs) {
                     asm.expect_carry(req_id, b.chunks_for(values.len()), carry);
                     birth.insert(req_id, at);
                     for full in b.add_request(req_id, values) {
+                        trace_dispatch_hold(&metrics, &b);
                         if !run_batch(full, &mut asm, &mut birth, &mut partials) {
                             return false;
                         }
                     }
                     true
                 });
-                let slab_bytes = sub.slab_bytes();
-                if slab_bytes > 0 {
-                    metrics.slab_bytes_in_flight.fetch_sub(slab_bytes, Ordering::Relaxed);
-                }
+                gauge_discharge(&metrics.slab_bytes_in_flight, sub.slab_bytes());
                 if !ok {
                     return;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(partial) = b.poll_deadline() {
+                    trace_dispatch_hold(&metrics, &b);
                     if !run_batch(partial, &mut asm, &mut birth, &mut partials) {
                         return;
                     }
@@ -167,6 +179,7 @@ pub(crate) fn run_fused(args: FusedArgs) {
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(rest) = b.flush() {
+                    trace_dispatch_hold(&metrics, &b);
                     run_batch(rest, &mut asm, &mut birth, &mut partials);
                 }
                 return;
@@ -224,22 +237,21 @@ fn batcher_loop(
                         return false;
                     }
                     for full in b.add_request(req_id, values) {
+                        trace_dispatch_hold(&metrics, &b);
                         if !dispatch(full, &mut router) {
                             return false;
                         }
                     }
                     true
                 });
-                let slab_bytes = sub.slab_bytes();
-                if slab_bytes > 0 {
-                    metrics.slab_bytes_in_flight.fetch_sub(slab_bytes, Ordering::Relaxed);
-                }
+                gauge_discharge(&metrics.slab_bytes_in_flight, sub.slab_bytes());
                 if !ok {
                     return;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(partial) = b.poll_deadline() {
+                    trace_dispatch_hold(&metrics, &b);
                     if !dispatch(partial, &mut router) {
                         return;
                     }
@@ -247,6 +259,7 @@ fn batcher_loop(
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if let Some(rest) = b.flush() {
+                    trace_dispatch_hold(&metrics, &b);
                     dispatch(rest, &mut router);
                 }
                 return;
@@ -367,7 +380,12 @@ pub(crate) fn run_shard(args: ShardArgs) {
     let mut sums_scratch: Vec<f32> = Vec::new();
     let mut executed = 0u64;
     let mut failed = false;
-    while let Some(SeqBatch { seq, batch }) = pool.pop(shard, steal && !failed) {
+    while let Some(SeqBatch { seq, batch, at }) = pool.pop(shard, steal && !failed) {
+        // Queue-wait trace leg: dispatch stamp → this pop (time on the
+        // injector deque, owner pop or steal alike).
+        if metrics.trace.should_sample() {
+            metrics.trace.record_us(Stage::QueueWait, at.elapsed().as_micros() as u64);
+        }
         if !failed && fail_after == Some(executed) {
             eprintln!("shard {shard}: injected engine failure after {executed} batches");
             dead[shard].store(true, Ordering::Relaxed);

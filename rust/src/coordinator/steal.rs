@@ -254,7 +254,11 @@ mod tests {
     }
 
     fn b(seq: u64) -> SeqBatch {
-        SeqBatch { seq, batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] } }
+        SeqBatch {
+            seq,
+            batch: Batch { x: vec![0.0], lengths: vec![1], rows: vec![(seq, 0)] },
+            at: std::time::Instant::now(),
+        }
     }
 
     #[test]

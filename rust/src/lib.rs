@@ -43,6 +43,7 @@ pub mod fp;
 pub mod intac;
 pub mod jugglepac;
 pub mod net;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod session;

@@ -9,6 +9,7 @@
 //!   serve        end-to-end streaming service demo (any registry engine)
 //!   stream       streaming accumulation sessions demo (open/append/close)
 //!   scatter      keyed scatter-add demo (per-key accumulators, sharded)
+//!   stats        dial a serving node and print its metrics roll-up
 //!   engines      list the reduction-engine registry
 //!   artifacts    list the AOT artifacts the runtime sees
 //!
@@ -38,6 +39,7 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("stream") => cmd_stream(&args),
         Some("scatter") => cmd_scatter(&args),
+        Some("stats") => cmd_stats(&args),
         Some("engines") => cmd_engines(),
         Some("artifacts") => cmd_artifacts(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -71,6 +73,10 @@ USAGE: jugglepac <subcommand> [options]
              [--leaf-values N] [--report-wait-ms W] [--run-ms T]
              [--durable-dir PATH]  (tree nodes push un-rounded partials up;
              JUGGLEPAC_NET_FAULT=<kind>[:<p>] injects network chaos)
+             [--metrics-json FILE] [--metrics-interval-ms T]  (write
+             JSON-lines metric snapshots for CI; network mode only)
+             [--trace off|full|sampled[:N]] [--slow-us T]  (stage-latency
+             tracing; JUGGLEPAC_TRACE overrides)
   stream     [--streams S] [--max-len N] [--fragment F] [--concurrent W]
              [--engine NAME] [--batch B] [--n N] [--shards K]
              [--max-open M] [--ttl-ms T] [--seed X]
@@ -80,11 +86,15 @@ USAGE: jugglepac <subcommand> [options]
              [--resume]  (replay the snapshot log in PATH and resume)
              [--exit-after-ms T]  (SIGINT-ish: stop mid-script, drain +
              checkpoint, exit — acknowledged appends survive)
+             [--trace off|full|sampled[:N]] [--slow-us T]
   scatter    [--pairs P] [--keys K] [--submit B] [--engine NAME]
              [--batch B] [--n N] [--shards S] [--max-keys M] [--zipf]
              [--seed X] [--durable-dir PATH] [--snapshot-ms T]
              [--fsync always|never]
              [--resume]  (replay the scatter log in PATH and resume)
+  stats      --addr HOST:PORT [--watch] [--interval-ms T]  (dial a serving
+             node and print every metric; on a tree node the roll-up shows
+             one section per live node — a dead leaf's id is absent)
   engines    list the reduction-engine registry (names + capabilities)
   artifacts  [--dir PATH]";
 
@@ -98,6 +108,20 @@ fn perf_opts(args: &Args) -> Result<(jugglepac::fp::SimdPolicy, bool)> {
             .ok_or_else(|| anyhow::anyhow!("--simd expects auto|off|sse2|avx2, got {s:?}"))?,
     };
     Ok((simd, args.flag("pin")))
+}
+
+/// The observability knobs shared by the service-backed subcommands:
+/// `--trace off|full|sampled[:N]` (stage-latency tracing policy,
+/// `JUGGLEPAC_TRACE` overrides) and `--slow-us N` (slow-request log
+/// threshold for sampled requests; 0 disables the slow log).
+fn obs_opts(args: &Args) -> Result<(jugglepac::obs::TracePolicy, u64)> {
+    let trace = match args.get("trace") {
+        None => jugglepac::obs::TracePolicy::Off,
+        Some(s) => jugglepac::obs::TracePolicy::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--trace expects off|full|sampled[:N], got {s:?}")
+        })?,
+    };
+    Ok((trace, args.get_u64("slow-us", 0)?))
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -287,6 +311,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // O(max) build, O(log max) per draw.
     let zipf = args.flag("zipf").then(|| ZipfTable::new(max_len, 1.1));
     let (simd, pin) = perf_opts(args)?;
+    let (trace, slow_us) = obs_opts(args)?;
     let mut svc = Service::start(ServiceConfig {
         engine,
         shards,
@@ -294,6 +319,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shard_stall_us: if stall0 > 0 { vec![stall0] } else { Vec::new() },
         simd,
         pin,
+        trace,
+        slow_us,
         ..Default::default()
     })?;
     let mut rng = Xoshiro256::seeded(args.get_u64("seed", 7)?);
@@ -418,6 +445,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         None => None,
     };
     let (simd, pin) = perf_opts(args)?;
+    let (trace, slow_us) = obs_opts(args)?;
     let cfg = NetServerConfig {
         listen,
         session: SessionConfig {
@@ -426,6 +454,8 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
                 shards,
                 simd,
                 pin,
+                trace,
+                slow_us,
                 ..Default::default()
             },
             max_open_streams: args.get_usize("max-open", 1024)?,
@@ -446,6 +476,39 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let server = NetServer::start(cfg)?;
     // Line parsed by the multi-process harness — keep the format stable.
     println!("listening on {}", server.local_addr());
+
+    // `--metrics-json FILE`: a sampler thread writes one JSON-lines
+    // snapshot of the whole registry per interval — the CI-friendly
+    // exposition (every line parses standalone; `seq` is monotone).
+    let mut sampler: Option<(Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>)> =
+        None;
+    if let Some(path) = args.get("metrics-json") {
+        let path = path.to_string();
+        let every = Duration::from_millis(args.get_u64("metrics-interval-ms", 100)?.max(1));
+        let registry = server.registry();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            use std::io::Write;
+            let mut file = match std::fs::File::create(&path) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("metrics-json: cannot create {path}: {e}");
+                    return;
+                }
+            };
+            let mut seq = 0u64;
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                let line = jugglepac::obs::render_json_line(seq, &registry.gather());
+                if writeln!(file, "{line}").and_then(|()| file.flush()).is_err() {
+                    return;
+                }
+                seq += 1;
+                std::thread::sleep(every);
+            }
+        });
+        sampler = Some((stop, handle));
+    }
 
     let leaf_n = args.get_usize("leaf-values", 0)?;
     if leaf_n > 0 {
@@ -519,6 +582,10 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     if run_ms > 0 {
         std::thread::sleep(Duration::from_millis(run_ms));
     }
+    if let Some((stop, handle)) = sampler {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = handle.join();
+    }
     let summary = server.shutdown();
     println!("{}", summary.net.report());
     println!("drained: {}", summary.drained);
@@ -560,6 +627,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         None => None,
     };
     let (simd, pin) = perf_opts(args)?;
+    let (trace, slow_us) = obs_opts(args)?;
     let cfg = SessionConfig {
         service: ServiceConfig {
             engine,
@@ -567,6 +635,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
             steal: args.get_switch("steal", true)?,
             simd,
             pin,
+            trace,
+            slow_us,
             ..Default::default()
         },
         max_open_streams: args.get_usize("max-open", 1024)?,
@@ -780,6 +850,39 @@ fn cmd_scatter(args: &Args) -> Result<()> {
         if durable { "checkpointed" } else { "drained" },
     );
     Ok(())
+}
+
+/// `stats --addr HOST:PORT`: dial a serving node, request its METRICS
+/// dump, and print every sample in the text exposition format — one
+/// `== node N ==` section per tree node in the roll-up (children push
+/// their metrics up on the uplink tick; a dead leaf's id is simply
+/// absent). `--watch` refreshes every `--interval-ms` like `top`.
+fn cmd_stats(args: &Args) -> Result<()> {
+    use jugglepac::net::{ClientConfig, NetClient};
+    use std::time::Duration;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("stats requires --addr HOST:PORT"))?
+        .to_string();
+    let watch = args.flag("watch");
+    let interval = Duration::from_millis(args.get_u64("interval-ms", 1000)?.max(10));
+    let mut client = NetClient::connect_tcp(addr, ClientConfig::default());
+    loop {
+        let dump = client.fetch_metrics().map_err(|e| anyhow::anyhow!("fetch metrics: {e}"))?;
+        if watch {
+            // Clear-and-home between refreshes so the watch reads in place.
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("node {} — {} node(s) in roll-up", dump.node, dump.nodes.len());
+        for n in &dump.nodes {
+            println!("\n== node {} ==", n.node);
+            print!("{}", jugglepac::obs::render_text(&n.samples));
+        }
+        if !watch {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 fn cmd_engines() -> Result<()> {

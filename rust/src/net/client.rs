@@ -27,8 +27,8 @@ use std::time::{Duration, Instant};
 
 use super::frame::{recv_frame, Conn, Dialer};
 use super::proto::{
-    Ack, Append, Close, Hello, Msg, Open, Push, ReportReq, TreeReport, DEFAULT_MAX_FRAME,
-    ERR_BUSY, ERR_MALFORMED, ERR_OVERSIZE, MIN_MAX_FRAME, NET_VERSION,
+    Ack, Append, Close, Hello, MetricsDump, Msg, Open, Push, ReportReq, TreeReport,
+    DEFAULT_MAX_FRAME, ERR_BUSY, ERR_MALFORMED, ERR_OVERSIZE, MIN_MAX_FRAME, NET_VERSION,
 };
 use crate::engine::PartialState;
 use crate::util::rng::Xoshiro256;
@@ -169,6 +169,7 @@ enum Expect {
     Ack { stream: u64, seq: u64 },
     Result { stream: u64 },
     Report,
+    Metrics,
 }
 
 enum Classified {
@@ -288,6 +289,32 @@ impl NetClient {
             &frame,
             &Expect::Ack {
                 stream: push.node,
+                seq: 0,
+            },
+            Duration::ZERO,
+        )?;
+        Ok(())
+    }
+
+    /// Fetch the node's metrics dump: its own observability samples plus
+    /// every node entry its children have rolled up to it.
+    pub fn fetch_metrics(&mut self) -> Result<MetricsDump, NetError> {
+        let frame = Msg::MetricsReq.encode_frame();
+        let msg = self.request(&frame, &Expect::Metrics, Duration::ZERO)?;
+        match msg {
+            Msg::Metrics(d) => Ok(d),
+            _ => unreachable!("Expect::Metrics only matches METRICS"),
+        }
+    }
+
+    /// Push a metrics dump to a parent node (the uplink's metric roll-up;
+    /// replaces the receiver's previous dump from `dump.node`).
+    pub fn push_metrics(&mut self, dump: &MetricsDump) -> Result<(), NetError> {
+        let frame = Msg::Metrics(dump.clone()).encode_frame();
+        self.request(
+            &frame,
+            &Expect::Ack {
+                stream: dump.node,
                 seq: 0,
             },
             Duration::ZERO,
@@ -483,6 +510,7 @@ fn classify(msg: Msg, expect: &Expect) -> Classified {
             }
         }
         (Msg::Report(r), Expect::Report) => Classified::Match(Msg::Report(r)),
+        (Msg::Metrics(d), Expect::Metrics) => Classified::Match(Msg::Metrics(d)),
         (Msg::Error(e), _) => Classified::Refused(NetError::Remote {
             code: e.code,
             detail: e.detail,

@@ -73,6 +73,26 @@ impl NetMetrics {
         pushes_in,
     );
 
+    /// Append every network counter to `out` as observability samples,
+    /// `net_`-prefixed (see [`crate::obs::Registry`]).
+    pub fn samples_into(&self, out: &mut Vec<crate::obs::Sample>) {
+        use crate::obs::Sample;
+        let s = self.snapshot();
+        let c = |name: &str, v: u64| Sample::counter(name, v);
+        out.push(c("net_conns_accepted", s.conns_accepted));
+        out.push(c("net_conns_refused", s.conns_refused));
+        out.push(c("net_bad_version", s.bad_version));
+        out.push(c("net_frames_in", s.frames_in));
+        out.push(c("net_frames_out", s.frames_out));
+        out.push(c("net_bad_frames", s.bad_frames));
+        out.push(c("net_dup_appends", s.dup_appends));
+        out.push(c("net_dup_pushes", s.dup_pushes));
+        out.push(c("net_at_capacity", s.at_capacity));
+        out.push(c("net_busy_rejections", s.busy_rejections));
+        out.push(c("net_errors_out", s.errors_out));
+        out.push(c("net_pushes_in", s.pushes_in));
+    }
+
     /// Point-in-time copy of every counter.
     pub fn snapshot(&self) -> NetMetricsSnapshot {
         NetMetricsSnapshot {
@@ -148,5 +168,18 @@ mod tests {
         assert_eq!(s.bad_frames, 1);
         assert_eq!(s.frames_in, 0);
         assert!(s.report().contains("dup appends 2"));
+    }
+
+    #[test]
+    fn samples_cover_every_counter_with_net_prefix() {
+        let m = NetMetrics::default();
+        m.pushes_in();
+        let mut out = Vec::new();
+        m.samples_into(&mut out);
+        assert_eq!(out.len(), 12, "one sample per counter");
+        assert!(out.iter().all(|s| s.name.starts_with("net_")));
+        assert!(out
+            .iter()
+            .any(|s| s.name == "net_pushes_in" && s.value == crate::obs::SampleValue::Counter(1)));
     }
 }

@@ -47,6 +47,6 @@ pub use chaos::{ChaosConfig, ChaosDialer, ChaosStats, FaultKind, ALL_FAULTS};
 pub use client::{ClientConfig, NetClient, NetError, RemoteResult};
 pub use frame::{recv_frame, Conn, Dialer, TcpConn, TcpDialer};
 pub use metrics::{NetMetrics, NetMetricsSnapshot};
-pub use proto::{Msg, TreeReport, DEFAULT_MAX_FRAME, NET_VERSION};
+pub use proto::{MetricsDump, Msg, NodeMetrics, TreeReport, DEFAULT_MAX_FRAME, NET_VERSION};
 pub use server::{NetServer, NetServerConfig, NetSummary};
 pub use tree::{leaf_values, TreeConfig, TreeState};

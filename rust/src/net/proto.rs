@@ -72,6 +72,11 @@ pub const TAG_REPORT_REQ: u8 = 0x28;
 pub const TAG_REPORT: u8 = 0x29;
 /// Aggregate all locally finished streams and push them to the parent.
 pub const TAG_FLUSH: u8 = 0x2A;
+/// Ask the node for its metrics dump (own + rolled-up children).
+pub const TAG_METRICS_REQ: u8 = 0x2B;
+/// The metrics dump: per-node observability samples. Also pushed upward
+/// (child → parent) alongside `PUSH` so a root's dump covers the tree.
+pub const TAG_METRICS: u8 = 0x2C;
 
 /// `ERROR` codes — every refusal the server can issue is distinguishable.
 pub const ERR_BAD_VERSION: u8 = 1;
@@ -241,6 +246,27 @@ impl TreeReport {
     }
 }
 
+/// One node's observability samples inside a [`MetricsDump`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeMetrics {
+    /// The node these samples describe.
+    pub node: u64,
+    /// Name-sorted samples from that node's registry gather.
+    pub samples: Vec<crate::obs::Sample>,
+}
+
+/// A metrics dump: the answering/pushing node's id plus one entry per
+/// covered node (itself and any children whose dumps it holds). Like
+/// `PUSH`, deduplicated by node id at the receiver — latest wins — so a
+/// dead leaf is visible as an *absent* node id, never stale-but-present
+/// forever at the root.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsDump {
+    /// The node that sent this dump (dedupe key for pushes).
+    pub node: u64,
+    pub nodes: Vec<NodeMetrics>,
+}
+
 /// One decoded protocol message.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -255,6 +281,8 @@ pub enum Msg {
     Flush,
     ReportReq(ReportReq),
     Report(TreeReport),
+    MetricsReq,
+    Metrics(MetricsDump),
 }
 
 impl Msg {
@@ -272,6 +300,8 @@ impl Msg {
             Msg::Flush => TAG_FLUSH,
             Msg::ReportReq(_) => TAG_REPORT_REQ,
             Msg::Report(_) => TAG_REPORT,
+            Msg::MetricsReq => TAG_METRICS_REQ,
+            Msg::Metrics(_) => TAG_METRICS,
         }
     }
 
@@ -318,6 +348,15 @@ impl Msg {
                 put_partial(&mut w, &m.state);
             }
             Msg::Flush => {}
+            Msg::MetricsReq => {}
+            Msg::Metrics(m) => {
+                w.put_u64(m.node);
+                w.put_u32(m.nodes.len() as u32);
+                for n in &m.nodes {
+                    w.put_u64(n.node);
+                    crate::obs::put_samples(&mut w, &n.samples);
+                }
+            }
             Msg::ReportReq(m) => w.put_u32(m.wait_ms),
             Msg::Report(m) => {
                 w.put_u32(m.expected_children);
@@ -394,6 +433,28 @@ impl Msg {
                 state: get_partial(&mut r)?,
             }),
             TAG_FLUSH => Msg::Flush,
+            TAG_METRICS_REQ => Msg::MetricsReq,
+            TAG_METRICS => {
+                let node = r.u64()?;
+                let n = r.u32()? as usize;
+                // A node entry is at least 12 bytes (id + sample count);
+                // a forged node count is refused before any allocation.
+                match n.checked_mul(12) {
+                    Some(need) if need <= r.remaining() => {}
+                    _ => {
+                        return Err(CodecError::Malformed {
+                            what: "metrics node count disagrees with payload length",
+                        })
+                    }
+                }
+                let mut nodes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let id = r.u64()?;
+                    let samples = crate::obs::get_samples(&mut r)?;
+                    nodes.push(NodeMetrics { node: id, samples });
+                }
+                Msg::Metrics(MetricsDump { node, nodes })
+            }
             TAG_REPORT_REQ => Msg::ReportReq(ReportReq { wait_ms: r.u32()? }),
             TAG_REPORT => Msg::Report(TreeReport {
                 expected_children: r.u32()?,
@@ -502,6 +563,59 @@ mod tests {
             degraded: true,
             state: exact_state(&[1.0, 1.0, 1.0]),
         }));
+    }
+
+    #[test]
+    fn metrics_frames_round_trip() {
+        use crate::obs::Sample;
+        use crate::util::hist::Histogram;
+        round_trip(Msg::MetricsReq);
+        let mut h = Histogram::new();
+        h.record(5);
+        h.record(900);
+        round_trip(Msg::Metrics(MetricsDump {
+            node: 1,
+            nodes: vec![
+                NodeMetrics {
+                    node: 1,
+                    samples: vec![
+                        Sample::counter("coordinator_submitted", 42),
+                        Sample::gauge("session_streams_open", 3),
+                        Sample { name: "coordinator_latency_us".into(), value: crate::obs::SampleValue::Hist(h) },
+                    ],
+                },
+                NodeMetrics { node: 2, samples: vec![] },
+            ],
+        }));
+        // An empty dump (node knows only itself, gathered nothing yet).
+        round_trip(Msg::Metrics(MetricsDump { node: 9, nodes: vec![] }));
+    }
+
+    #[test]
+    fn forged_metrics_node_count_is_malformed_not_a_panic() {
+        let good = Msg::Metrics(MetricsDump {
+            node: 1,
+            nodes: vec![NodeMetrics {
+                node: 1,
+                samples: vec![crate::obs::Sample::counter("net_frames_in", 7)],
+            }],
+        })
+        .encode_frame();
+        let (f, _) = read_frame(&good).unwrap();
+        let mut payload = f.payload.to_vec();
+        // Forge the node count upward: refused before allocating.
+        payload[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Msg::decode(TAG_METRICS, &payload),
+            Err(CodecError::Malformed { .. })
+        ));
+        // Trailing garbage after a well-formed dump is refused too.
+        let mut trailing = f.payload.to_vec();
+        trailing.push(0xFF);
+        assert!(matches!(
+            Msg::decode(TAG_METRICS, &trailing),
+            Err(CodecError::Malformed { .. })
+        ));
     }
 
     #[test]

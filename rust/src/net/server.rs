@@ -34,7 +34,7 @@
 //! idempotent through the done-cache: a re-sent CLOSE (lost RESULT)
 //! replays the cached result bit-identically.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -47,13 +47,14 @@ use super::client::{ClientConfig, NetClient};
 use super::frame::{Conn, Dialer, TcpConn};
 use super::metrics::{NetMetrics, NetMetricsSnapshot};
 use super::proto::{
-    error_msg, Ack, Msg, Push, ResultMsg, DEFAULT_MAX_FRAME, ERR_AT_CAPACITY,
-    ERR_BAD_SEQ, ERR_BAD_VERSION, ERR_BUSY, ERR_CLOSED, ERR_ENGINE_MISMATCH, ERR_EVICTED,
-    ERR_INTERNAL, ERR_MALFORMED, ERR_NOT_TREE, ERR_OVERSIZE, ERR_SHUTDOWN, ERR_UNKNOWN_STREAM,
-    ERR_UPLINK, MIN_MAX_FRAME, NET_VERSION,
+    error_msg, Ack, MetricsDump, Msg, NodeMetrics, Push, ResultMsg, DEFAULT_MAX_FRAME,
+    ERR_AT_CAPACITY, ERR_BAD_SEQ, ERR_BAD_VERSION, ERR_BUSY, ERR_CLOSED, ERR_ENGINE_MISMATCH,
+    ERR_EVICTED, ERR_INTERNAL, ERR_MALFORMED, ERR_NOT_TREE, ERR_OVERSIZE, ERR_SHUTDOWN,
+    ERR_UNKNOWN_STREAM, ERR_UPLINK, MIN_MAX_FRAME, NET_VERSION,
 };
 use super::tree::{TreeConfig, TreeState};
 use crate::coordinator::MetricsSnapshot;
+use crate::obs::Registry;
 use crate::session::{SessionConfig, SessionError, SessionMetricsSnapshot, SessionService, StreamId};
 use crate::wire::{CodecError, FrameReadError};
 use anyhow::Result;
@@ -130,6 +131,14 @@ struct CoreSummary {
     drained: bool,
 }
 
+/// Metric dumps received from direct children, keyed by the pushing
+/// child's node id and stamped with arrival time. Each push **replaces**
+/// that child's whole entry (latest wins, like sum pushes), and entries
+/// not refreshed within the metrics TTL are pruned at gather — so a dead
+/// leaf is visible at the root as an *absent* node id rather than a
+/// forever-stale one.
+type ChildMetrics = Arc<Mutex<BTreeMap<u64, (Instant, Vec<NodeMetrics>)>>>;
+
 struct Ctx {
     stop: Arc<AtomicBool>,
     metrics: Arc<NetMetrics>,
@@ -140,6 +149,14 @@ struct Ctx {
     core_wait: Duration,
     /// `Some` when this node pushes to a parent on explicit FLUSH.
     uplink: Option<(Arc<dyn Dialer>, ClientConfig)>,
+    /// Observability sources for this node (session + coordinator + net).
+    registry: Arc<Registry>,
+    /// This node's id in metric dumps (tree node id, 0 standalone).
+    node_id: u64,
+    is_tree: bool,
+    children_metrics: ChildMetrics,
+    /// A child entry older than this is pruned from roll-ups (dead leaf).
+    metrics_ttl: Duration,
 }
 
 /// A running network server. Dropping it without [`shutdown`] leaves the
@@ -150,6 +167,7 @@ pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     metrics: Arc<NetMetrics>,
+    registry: Arc<Registry>,
     core_tx: SyncSender<CoreMsg>,
     accept: Option<JoinHandle<()>>,
     pump: Option<JoinHandle<()>>,
@@ -170,6 +188,22 @@ impl NetServer {
         let (core_tx, core_rx) = mpsc::sync_channel::<CoreMsg>(cfg.queue_depth);
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
+        // One registry per node: sources hold `Arc`s to the live metric
+        // structs (grabbed here, before `ss` moves into the core thread)
+        // and read them only at gather time.
+        let registry = Arc::new(Registry::new());
+        {
+            let m = ss.metrics_arc();
+            registry.register(move |out| m.samples_into(out));
+            let m = ss.service_metrics_arc();
+            registry.register(move |out| m.samples_into(out));
+            let m = Arc::clone(&metrics);
+            registry.register(move |out| m.samples_into(out));
+        }
+        let node_id = cfg.tree.as_ref().map_or(0, |t| t.node_id);
+        let is_tree = cfg.tree.is_some();
+        let children_metrics: ChildMetrics = Arc::new(Mutex::new(BTreeMap::new()));
+
         let uplink = cfg.tree.as_ref().and_then(|t| {
             t.parent
                 .as_ref()
@@ -184,6 +218,13 @@ impl NetServer {
             write_timeout: cfg.write_timeout,
             core_wait: cfg.core_wait,
             uplink: uplink.clone(),
+            registry: Arc::clone(&registry),
+            node_id,
+            is_tree,
+            children_metrics: Arc::clone(&children_metrics),
+            // Generous slack over the push cadence: one missed tick is a
+            // hiccup, five in a row is a dead child.
+            metrics_ttl: cfg.push_interval * 5 + Duration::from_millis(200),
         });
 
         let core = {
@@ -205,27 +246,24 @@ impl NetServer {
                 .spawn(move || accept_loop(listener, ctx, handlers, max_conns))?
         };
 
-        let pump = match (&uplink, &cfg.tree) {
-            (Some((dialer, ccfg)), Some(_)) => {
-                let stop = Arc::clone(&stop);
-                let core_tx = core_tx.clone();
-                let dialer = Arc::clone(dialer);
-                let ccfg = ccfg.clone();
+        let pump = match &uplink {
+            Some(_) => {
+                let ctx = Arc::clone(&ctx);
                 let interval = cfg.push_interval;
-                let wait = cfg.core_wait;
                 Some(
                     std::thread::Builder::new()
                         .name("net-uplink".into())
-                        .spawn(move || uplink_pump(stop, core_tx, dialer, ccfg, interval, wait))?,
+                        .spawn(move || uplink_pump(ctx, interval))?,
                 )
             }
-            _ => None,
+            None => None,
         };
 
         Ok(Self {
             addr,
             stop,
             metrics,
+            registry,
             core_tx,
             accept: Some(accept),
             pump,
@@ -241,6 +279,12 @@ impl NetServer {
 
     pub fn metrics(&self) -> NetMetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// This node's observability registry (session + coordinator + net
+    /// sources) — what a `METRICS_REQ` or `--metrics-json` tick gathers.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
     }
 
     /// Stop accepting, drain handlers, drain + checkpoint the session
@@ -553,6 +597,26 @@ fn dispatch(ctx: &Ctx, msg: Msg) -> Msg {
                 other => other,
             }
         }
+        Msg::MetricsReq => {
+            // Answered entirely in the handler: gather is a lock-free
+            // read of the live atomics, so a metrics scrape never takes
+            // a core-queue slot away from accumulation work.
+            Msg::Metrics(gather_dump(ctx))
+        }
+        Msg::Metrics(dump) => {
+            if !ctx.is_tree {
+                return error_msg(ERR_NOT_TREE, 0, "this server is not a tree node");
+            }
+            let from = dump.node;
+            ctx.children_metrics
+                .lock()
+                .expect("children metrics lock")
+                .insert(from, (Instant::now(), dump.nodes));
+            Msg::Ack(Ack {
+                stream: from,
+                seq: 0,
+            })
+        }
         other => core_round_trip(ctx, other),
     }
 }
@@ -581,20 +645,20 @@ fn core_round_trip(ctx: &Ctx, msg: Msg) -> Msg {
 /// so partial sums propagate upward without anyone asking — a mid node
 /// whose children are done forwards on its own, and a late child's
 /// contribution still flows up (the parent deduplicates by node id).
-fn uplink_pump(
-    stop: Arc<AtomicBool>,
-    core_tx: SyncSender<CoreMsg>,
-    dialer: Arc<dyn Dialer>,
-    ccfg: ClientConfig,
-    interval: Duration,
-    wait: Duration,
-) {
-    let mut client = NetClient::new(dialer, ccfg);
+///
+/// Metric dumps ride the same cycle: every tick this node pushes its own
+/// gathered samples plus the dumps its children pushed to it, so metrics
+/// roll up level by level and the root's dump covers the whole live tree.
+fn uplink_pump(ctx: Arc<Ctx>, interval: Duration) {
+    let (dialer, ccfg) = ctx.uplink.as_ref().expect("uplink pump requires a parent");
+    let mut client = NetClient::new(Arc::clone(dialer), ccfg.clone());
     let mut last_pushed: Option<(u32, u64, u32)> = None;
-    while !stop.load(Ordering::SeqCst) {
+    while !ctx.stop.load(Ordering::SeqCst) {
         std::thread::sleep(interval);
+        let _ = client.push_metrics(&gather_dump(&ctx));
         let (tx, rx) = mpsc::sync_channel::<Msg>(2);
-        if core_tx
+        if ctx
+            .core_tx
             .try_send(CoreMsg::Req {
                 msg: Msg::Flush,
                 reply: tx,
@@ -603,7 +667,7 @@ fn uplink_pump(
         {
             continue;
         }
-        let push = match rx.recv_timeout(wait) {
+        let push = match rx.recv_timeout(ctx.core_wait) {
             Ok(Msg::Push(p)) => p,
             _ => continue,
         };
@@ -617,6 +681,26 @@ fn uplink_pump(
         if client.push(&push).is_ok() {
             last_pushed = Some(fingerprint);
         }
+    }
+}
+
+/// This node's metrics dump: its own gather plus every node entry its
+/// children have pushed recently (see [`ChildMetrics`] for the dead-leaf
+/// rule — stale entries are pruned here, at gather time).
+fn gather_dump(ctx: &Ctx) -> MetricsDump {
+    let mut nodes = vec![NodeMetrics {
+        node: ctx.node_id,
+        samples: ctx.registry.gather(),
+    }];
+    let mut children = ctx.children_metrics.lock().expect("children metrics lock");
+    let now = Instant::now();
+    children.retain(|_, (at, _)| now.duration_since(*at) <= ctx.metrics_ttl);
+    for (_, v) in children.values() {
+        nodes.extend(v.iter().cloned());
+    }
+    MetricsDump {
+        node: ctx.node_id,
+        nodes,
     }
 }
 

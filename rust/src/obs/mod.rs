@@ -1,0 +1,421 @@
+//! Unified observability: a name-keyed metrics registry over the
+//! subsystem metric structs, text/JSON exposition, sample wire transport
+//! for the tree roll-up, and stage-latency tracing ([`trace`]).
+//!
+//! Design rule #1: **the hot paths stay what they were.** The
+//! coordinator, session, net, and scatter subsystems keep their
+//! lock-free atomic counters; the registry holds closures over the same
+//! `Arc`s and reads them only at *gather* time (a `stats` request, a
+//! `--metrics-json` tick, an uplink metrics push). Registration is
+//! wiring, not instrumentation — nothing on the submit/append/reduce
+//! path changed to make metrics exposable.
+//!
+//! One metric, three exits:
+//!
+//! - `jugglepac stats [--watch]` dials a node and renders
+//!   [`render_text`] (Prometheus-style plain text).
+//! - The `METRICS_REQ`/`METRICS` wire frames serve the same samples to
+//!   any peer; tree nodes also *push* their samples up alongside the
+//!   partial-sum pushes, so a root's dump carries every live node and a
+//!   dead leaf is visible as a missing entry.
+//! - `--metrics-json` appends [`render_json_line`] snapshots to a
+//!   JSON-lines file for CI scraping.
+
+pub mod trace;
+
+pub use trace::{Stage, StageTrace, TraceEntry, TracePolicy};
+
+use crate::util::Histogram;
+use crate::wire::{ByteReader, ByteWriter, CodecError};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One exposed metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SampleValue {
+    /// Monotone event count.
+    Counter(u64),
+    /// Level that rises and falls (and must fall back to zero on clean
+    /// shutdown — see the gauge-discipline tests).
+    Gauge(u64),
+    /// Log2 latency/size histogram with estimated quantiles.
+    Hist(Histogram),
+}
+
+/// A named metric sample. Names are `snake_case`, prefixed by subsystem
+/// (`coordinator_`, `session_`, `net_`, `scatter_`, `trace_`), unique
+/// across the whole registry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub value: SampleValue,
+}
+
+impl Sample {
+    pub fn counter(name: impl Into<String>, v: u64) -> Self {
+        Self { name: name.into(), value: SampleValue::Counter(v) }
+    }
+
+    pub fn gauge(name: impl Into<String>, v: u64) -> Self {
+        Self { name: name.into(), value: SampleValue::Gauge(v) }
+    }
+}
+
+type Source = Box<dyn Fn(&mut Vec<Sample>) + Send + Sync>;
+
+/// The name-keyed registry: subsystems register gather closures (each
+/// holding an `Arc` to its live metrics struct); [`Registry::gather`]
+/// runs them and returns one name-sorted snapshot.
+#[derive(Default)]
+pub struct Registry {
+    sources: Mutex<Vec<Source>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.sources.lock().map(|s| s.len()).unwrap_or(0);
+        f.debug_struct("Registry").field("sources", &n).finish()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one gather source. Called at service construction; the
+    /// closure runs only on gather, never on the hot path.
+    pub fn register<F>(&self, source: F)
+    where
+        F: Fn(&mut Vec<Sample>) + Send + Sync + 'static,
+    {
+        self.sources.lock().unwrap().push(Box::new(source));
+    }
+
+    /// Snapshot every registered source, sorted by name (stable
+    /// exposition order; duplicate names are a registration bug the
+    /// golden test catches).
+    pub fn gather(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for s in self.sources.lock().unwrap().iter() {
+            s(&mut out);
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+/// Saturating gauge decrement: a double-discharge bug (or a crash-path
+/// replay) pins the gauge at zero instead of wrapping to ~2^64, which
+/// would poison every report and capacity check built on it. All gauge
+/// decrements in the codebase go through here.
+pub fn gauge_discharge(gauge: &AtomicU64, v: u64) {
+    if v == 0 {
+        return;
+    }
+    // The closure never returns None, so the update always succeeds.
+    let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+        Some(cur.saturating_sub(v))
+    });
+}
+
+// ── Exposition ──────────────────────────────────────────────────────────
+
+/// Prometheus-style plain text: a `# TYPE` comment per metric, scalar
+/// lines for counters/gauges, and `_count/_sum/_min/_max/_p50/_p90/_p99`
+/// lines for histograms (quantiles via
+/// [`Histogram::quantile_est`]).
+pub fn render_text(samples: &[Sample]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for smp in samples {
+        let name = &smp.name;
+        match &smp.value {
+            SampleValue::Counter(v) => {
+                let _ = writeln!(s, "# TYPE {name} counter\n{name} {v}");
+            }
+            SampleValue::Gauge(v) => {
+                let _ = writeln!(s, "# TYPE {name} gauge\n{name} {v}");
+            }
+            SampleValue::Hist(h) => {
+                let _ = writeln!(s, "# TYPE {name} histogram");
+                let _ = writeln!(s, "{name}_count {}", h.count());
+                let _ = writeln!(s, "{name}_sum {}", h.sum());
+                let _ = writeln!(s, "{name}_min {}", h.min());
+                let _ = writeln!(s, "{name}_max {}", h.max());
+                for (q, label) in [(0.5, "p50"), (0.9, "p90"), (0.99, "p99")] {
+                    let _ = writeln!(s, "{name}_{label} {:.1}", h.quantile_est(q));
+                }
+            }
+        }
+    }
+    s
+}
+
+/// One JSON-lines snapshot for CI scraping: `seq` is the writer's
+/// monotone snapshot counter, metric names map to numbers
+/// (counters/gauges) or `{count, sum, min, max, p50, p90, p99}` objects
+/// (histograms). Hand-rolled like [`crate::benchkit::JsonSink`] — the
+/// offline crate set has no serde.
+pub fn render_json_line(seq: u64, samples: &[Sample]) -> String {
+    use std::fmt::Write;
+    let mut s = format!("{{\"seq\":{seq},\"metrics\":{{");
+    for (i, smp) in samples.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        match &smp.value {
+            SampleValue::Counter(v) | SampleValue::Gauge(v) => {
+                let _ = write!(s, "\"{}\":{v}", smp.name);
+            }
+            SampleValue::Hist(h) => {
+                let _ = write!(
+                    s,
+                    "\"{}\":{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\
+                     \"p50\":{:.1},\"p90\":{:.1},\"p99\":{:.1}}}",
+                    smp.name,
+                    h.count(),
+                    h.sum(),
+                    h.min(),
+                    h.max(),
+                    h.quantile_est(0.5),
+                    h.quantile_est(0.9),
+                    h.quantile_est(0.99),
+                );
+            }
+        }
+    }
+    s.push_str("}}");
+    s
+}
+
+// ── Sample wire codec (rides inside METRICS frames) ─────────────────────
+
+/// Wire kind byte for [`SampleValue::Counter`].
+pub const KIND_COUNTER: u8 = 0;
+/// Wire kind byte for [`SampleValue::Gauge`].
+pub const KIND_GAUGE: u8 = 1;
+/// Wire kind byte for [`SampleValue::Hist`].
+pub const KIND_HIST: u8 = 2;
+
+/// Smallest possible encoded sample (empty name + kind + u64): the
+/// count-vs-payload bound [`get_samples`] enforces before allocating.
+const MIN_SAMPLE_BYTES: usize = 2 + 1 + 8;
+
+/// Encode one sample. Histograms ship sparse: only non-zero log2
+/// buckets, as `(index, count)` pairs.
+pub fn put_sample(w: &mut ByteWriter, s: &Sample) {
+    w.put_str(&s.name);
+    match &s.value {
+        SampleValue::Counter(v) => {
+            w.put_u8(KIND_COUNTER);
+            w.put_u64(*v);
+        }
+        SampleValue::Gauge(v) => {
+            w.put_u8(KIND_GAUGE);
+            w.put_u64(*v);
+        }
+        SampleValue::Hist(h) => {
+            w.put_u8(KIND_HIST);
+            w.put_u64(h.count());
+            let sum = h.sum();
+            w.put_u64(sum as u64);
+            w.put_u64((sum >> 64) as u64);
+            w.put_u64(h.min());
+            w.put_u64(h.max());
+            let nonzero: u8 =
+                h.buckets().iter().filter(|&&c| c > 0).count() as u8;
+            w.put_u8(nonzero);
+            for (i, &c) in h.buckets().iter().enumerate() {
+                if c > 0 {
+                    w.put_u8(i as u8);
+                    w.put_u64(c);
+                }
+            }
+        }
+    }
+}
+
+/// Decode one sample. Histogram parts are validated (≤ 64 buckets,
+/// in-range unique indices, bucket totals matching `count`) before a
+/// [`Histogram`] exists — peer arithmetic is never trusted.
+pub fn get_sample(r: &mut ByteReader) -> Result<Sample, CodecError> {
+    let name = r.str()?.to_string();
+    let value = match r.u8()? {
+        KIND_COUNTER => SampleValue::Counter(r.u64()?),
+        KIND_GAUGE => SampleValue::Gauge(r.u64()?),
+        KIND_HIST => {
+            let count = r.u64()?;
+            let lo = r.u64()? as u128;
+            let hi = r.u64()? as u128;
+            let sum = (hi << 64) | lo;
+            let min = r.u64()?;
+            let max = r.u64()?;
+            let nonzero = r.u8()? as usize;
+            if nonzero > 64 {
+                return Err(CodecError::Malformed { what: "histogram bucket count > 64" });
+            }
+            let mut buckets = vec![0u64; 64];
+            let mut seen: u64 = 0;
+            for _ in 0..nonzero {
+                let i = r.u8()? as usize;
+                if i >= 64 {
+                    return Err(CodecError::Malformed {
+                        what: "histogram bucket index out of range",
+                    });
+                }
+                if seen & (1u64 << i) != 0 {
+                    return Err(CodecError::Malformed { what: "duplicate histogram bucket" });
+                }
+                seen |= 1u64 << i;
+                buckets[i] = r.u64()?;
+            }
+            let h = Histogram::from_parts(buckets, count, sum, min, max)
+                .ok_or(CodecError::Malformed { what: "inconsistent histogram parts" })?;
+            SampleValue::Hist(h)
+        }
+        _ => return Err(CodecError::Malformed { what: "unknown sample kind" }),
+    };
+    Ok(Sample { name, value })
+}
+
+/// Encode a sample list with a u32 count prefix.
+pub fn put_samples(w: &mut ByteWriter, samples: &[Sample]) {
+    w.put_u32(samples.len() as u32);
+    for s in samples {
+        put_sample(w, s);
+    }
+}
+
+/// Decode a sample list. The declared count is bounds-checked against
+/// the remaining payload **before** any allocation — the same
+/// memory-bomb defense the APPEND decoder uses.
+pub fn get_samples(r: &mut ByteReader) -> Result<Vec<Sample>, CodecError> {
+    let n = r.u32()? as usize;
+    match n.checked_mul(MIN_SAMPLE_BYTES) {
+        Some(need) if need <= r.remaining() => {}
+        _ => return Err(CodecError::Malformed { what: "sample count exceeds payload" }),
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_sample(r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(values: &[u64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &v in values {
+            h.record(v);
+        }
+        h
+    }
+
+    fn round_trip(samples: &[Sample]) -> Vec<Sample> {
+        let mut w = ByteWriter::new();
+        put_samples(&mut w, samples);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = get_samples(&mut r).expect("decode");
+        r.done().expect("fully consumed");
+        back
+    }
+
+    #[test]
+    fn samples_round_trip_bitwise() {
+        let samples = vec![
+            Sample::counter("coordinator_submitted", 42),
+            Sample::gauge("session_streams_open", 7),
+            Sample { name: "trace_total_us".into(), value: SampleValue::Hist(hist(&[0, 3, 900, 70_000])) },
+            Sample { name: "empty_hist".into(), value: SampleValue::Hist(Histogram::new()) },
+        ];
+        assert_eq!(round_trip(&samples), samples);
+    }
+
+    #[test]
+    fn forged_sample_count_is_refused_before_allocating() {
+        let mut w = ByteWriter::new();
+        put_samples(&mut w, &[Sample::counter("a", 1)]);
+        let mut buf = w.into_inner();
+        // Forge the count prefix to claim 2^32 - 1 samples.
+        buf[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(get_samples(&mut r), Err(CodecError::Malformed { .. })));
+    }
+
+    #[test]
+    fn corrupt_histogram_parts_are_refused() {
+        let mut w = ByteWriter::new();
+        put_samples(
+            &mut w,
+            &[Sample { name: "h".into(), value: SampleValue::Hist(hist(&[5, 5, 5])) }],
+        );
+        let mut buf = w.into_inner();
+        // The count field sits right after the 4-byte list prefix, the
+        // 2+1 name bytes, and the kind byte: corrupt it so bucket totals
+        // disagree.
+        let count_at = 4 + 2 + 1 + 1;
+        buf[count_at] = 99;
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(get_samples(&mut r), Err(CodecError::Malformed { .. })));
+    }
+
+    #[test]
+    fn registry_gathers_sorted_across_sources() {
+        let reg = Registry::new();
+        reg.register(|out| {
+            out.push(Sample::counter("z_last", 1));
+            out.push(Sample::counter("b_mid", 2));
+        });
+        reg.register(|out| out.push(Sample::gauge("a_first", 3)));
+        let names: Vec<&str> = reg.gather().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["a_first", "b_mid", "z_last"]);
+    }
+
+    #[test]
+    fn text_rendering_covers_every_kind() {
+        let samples = vec![
+            Sample::counter("c", 9),
+            Sample::gauge("g", 2),
+            Sample { name: "h_us".into(), value: SampleValue::Hist(hist(&[1, 2, 3, 4, 100])) },
+        ];
+        let text = render_text(&samples);
+        assert!(text.contains("# TYPE c counter\nc 9\n"), "{text}");
+        assert!(text.contains("# TYPE g gauge\ng 2\n"), "{text}");
+        assert!(text.contains("# TYPE h_us histogram\n"), "{text}");
+        assert!(text.contains("h_us_count 5\n"), "{text}");
+        assert!(text.contains("h_us_max 100\n"), "{text}");
+        assert!(text.contains("h_us_p50 "), "{text}");
+    }
+
+    #[test]
+    fn json_line_is_parseable_shape() {
+        let samples = vec![
+            Sample::counter("c", 9),
+            Sample { name: "h".into(), value: SampleValue::Hist(hist(&[8])) },
+        ];
+        let line = render_json_line(3, &samples);
+        assert!(line.starts_with("{\"seq\":3,\"metrics\":{"), "{line}");
+        assert!(line.ends_with("}}"), "{line}");
+        assert!(line.contains("\"c\":9"), "{line}");
+        assert!(line.contains("\"h\":{\"count\":1"), "{line}");
+        assert_eq!(line.matches('{').count(), line.matches('}').count(), "{line}");
+    }
+
+    #[test]
+    fn gauge_discharge_saturates_instead_of_wrapping() {
+        let g = AtomicU64::new(5);
+        gauge_discharge(&g, 3);
+        assert_eq!(g.load(Ordering::Relaxed), 2);
+        // The double-discharge bug: a second discharge of the same debt
+        // pins at zero, never wraps.
+        gauge_discharge(&g, 3);
+        assert_eq!(g.load(Ordering::Relaxed), 0);
+        gauge_discharge(&g, 0);
+        assert_eq!(g.load(Ordering::Relaxed), 0);
+    }
+}

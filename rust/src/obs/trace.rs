@@ -1,0 +1,361 @@
+//! Stage-latency tracing: per-stage log2 histograms, a preallocated
+//! ring of recent request totals, and a slow-request log.
+//!
+//! Cost model, in order of importance:
+//!
+//! - [`TracePolicy::Off`] (the default) is **zero-cost**: every hook in
+//!   the pipeline guards on [`StageTrace::should_sample`], which is one
+//!   relaxed atomic load — no clock read, no lock, no allocation. The
+//!   `obs_overhead` bench pins this against the untraced PR 9 path.
+//! - `Sampled(n)` admits every n-th gate hit. An admitted span costs two
+//!   `Instant` reads plus one short mutex-protected
+//!   [`Histogram::record`](crate::util::Histogram::record) — and
+//!   **allocates nothing**: the histograms and the trace ring are fully
+//!   preallocated at construction, so the counting-allocator proof in
+//!   `tests/obs_alloc.rs` holds at steady state (the `ring_stress`
+//!   discipline, applied to tracing).
+//! - `Full` admits everything; for debugging, not serving.
+//!
+//! Stages are measured **independently** (each hook times its own leg of
+//! the pipeline) rather than assembled into cross-thread spans — the
+//! histograms answer "where does the time go" without any per-request
+//! span state to allocate, hand off, or leak.
+
+use super::{Sample, SampleValue};
+use crate::util::Histogram;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// How much of the traffic the stage hooks admit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePolicy {
+    /// No tracing: hooks reduce to one relaxed load.
+    Off,
+    /// Admit every n-th gate hit (n clamped to ≥ 1).
+    Sampled(u32),
+    /// Admit everything.
+    Full,
+}
+
+impl TracePolicy {
+    /// Parse the CLI/env spelling: `off`, `full`, `sampled`
+    /// (= every 64th), or `sampled:N`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(TracePolicy::Off),
+            "full" => Some(TracePolicy::Full),
+            "sampled" => Some(TracePolicy::Sampled(64)),
+            other => {
+                let n: u32 = other.strip_prefix("sampled:")?.parse().ok()?;
+                Some(TracePolicy::Sampled(n.max(1)))
+            }
+        }
+    }
+
+    /// `JUGGLEPAC_TRACE` override (unset / unparsable → `None`).
+    pub fn from_env() -> Option<Self> {
+        std::env::var("JUGGLEPAC_TRACE").ok().and_then(|v| Self::parse(&v))
+    }
+}
+
+/// The pipeline legs that get their own latency histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Batch dispatch → shard worker pop (time on the injector deque).
+    QueueWait = 0,
+    /// First row into the batcher → flush (batch-fill / deadline hold).
+    DispatchHold = 1,
+    /// Engine execute per batch (from the measured `engine_ns`).
+    Engine = 2,
+    /// Completion arrival → in-order release at the reorder buffer.
+    ReorderHold = 3,
+    /// Submit → response delivery, whole-request.
+    Total = 4,
+    /// `SessionService::open` call.
+    SessionOpen = 5,
+    /// `SessionService::append` call.
+    SessionAppend = 6,
+    /// `SessionService::close` call.
+    SessionClose = 7,
+    /// Stream open → finished sum (the session-level "total").
+    SessionLifetime = 8,
+}
+
+/// Number of [`Stage`] variants (array sizing).
+pub const N_STAGES: usize = 9;
+
+/// Metric-name suffix per stage, indexed by `Stage as usize`.
+pub const STAGE_NAMES: [&str; N_STAGES] = [
+    "queue_wait_us",
+    "dispatch_hold_us",
+    "engine_us",
+    "reorder_hold_us",
+    "total_us",
+    "session_open_us",
+    "session_append_us",
+    "session_close_us",
+    "session_lifetime_us",
+];
+
+/// Entries kept in the recent-requests ring.
+pub const TRACE_RING_CAP: usize = 1024;
+
+/// One sampled request in the trace ring. `Copy` and fixed-size: ring
+/// writes move no heap memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub req_id: u64,
+    pub total_us: u64,
+}
+
+struct Ring {
+    entries: Box<[TraceEntry]>,
+    next: usize,
+    len: usize,
+}
+
+/// The shared trace sink: policy gate, per-stage histograms, recent ring,
+/// slow-request accounting. Lives on the coordinator's metrics struct so
+/// every pipeline thread reaches it through the existing `Arc`.
+pub struct StageTrace {
+    /// 0 = off, 1 = sampled, 2 = full.
+    mode: AtomicU8,
+    every: AtomicU32,
+    tick: AtomicU64,
+    /// Slow-request threshold in µs; 0 disables the slow log.
+    slow_us: AtomicU64,
+    slow_seen: AtomicU64,
+    stages: [Mutex<Histogram>; N_STAGES],
+    ring: Mutex<Ring>,
+}
+
+impl std::fmt::Debug for StageTrace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageTrace").field("policy", &self.policy()).finish()
+    }
+}
+
+impl Default for StageTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageTrace {
+    /// Off by default; all storage (histograms + ring) preallocated here,
+    /// so nothing on the record path ever allocates.
+    pub fn new() -> Self {
+        Self {
+            mode: AtomicU8::new(0),
+            every: AtomicU32::new(64),
+            tick: AtomicU64::new(0),
+            slow_us: AtomicU64::new(0),
+            slow_seen: AtomicU64::new(0),
+            stages: std::array::from_fn(|_| Mutex::new(Histogram::new())),
+            ring: Mutex::new(Ring {
+                entries: vec![TraceEntry::default(); TRACE_RING_CAP].into_boxed_slice(),
+                next: 0,
+                len: 0,
+            }),
+        }
+    }
+
+    /// Install a policy and slow threshold (µs; 0 disables the slow log).
+    /// Atomics throughout, so this works on the shared `Arc` after start.
+    pub fn configure(&self, policy: TracePolicy, slow_us: u64) {
+        match policy {
+            TracePolicy::Off => self.mode.store(0, Ordering::Relaxed),
+            TracePolicy::Sampled(n) => {
+                self.every.store(n.max(1), Ordering::Relaxed);
+                self.mode.store(1, Ordering::Relaxed);
+            }
+            TracePolicy::Full => self.mode.store(2, Ordering::Relaxed),
+        }
+        self.slow_us.store(slow_us, Ordering::Relaxed);
+    }
+
+    pub fn policy(&self) -> TracePolicy {
+        match self.mode.load(Ordering::Relaxed) {
+            0 => TracePolicy::Off,
+            2 => TracePolicy::Full,
+            _ => TracePolicy::Sampled(self.every.load(Ordering::Relaxed).max(1)),
+        }
+    }
+
+    /// Is any tracing installed at all? One relaxed load — the guard the
+    /// cheapest hooks use when the measurement itself is already free.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.mode.load(Ordering::Relaxed) != 0
+    }
+
+    /// The sampling gate. `Off` is one relaxed load returning `false`;
+    /// `Full` always admits; `Sampled(n)` admits every n-th hit.
+    #[inline]
+    pub fn should_sample(&self) -> bool {
+        match self.mode.load(Ordering::Relaxed) {
+            0 => false,
+            2 => true,
+            _ => {
+                let n = self.every.load(Ordering::Relaxed).max(1) as u64;
+                self.tick.fetch_add(1, Ordering::Relaxed) % n == 0
+            }
+        }
+    }
+
+    /// Gate + clock read in one step: `None` without touching the clock
+    /// when the sample is not admitted.
+    #[inline]
+    pub fn maybe_now(&self) -> Option<Instant> {
+        self.should_sample().then(Instant::now)
+    }
+
+    /// Record one admitted measurement into a stage histogram.
+    /// Allocation-free (log2 bucket increment under a short lock).
+    pub fn record_us(&self, stage: Stage, us: u64) {
+        self.stages[stage as usize].lock().unwrap().record(us);
+    }
+
+    /// Record a whole-request total: the `Total` histogram, the recent
+    /// ring (index-overwrite into preallocated `Copy` slots), and the
+    /// slow-request check. Only the slow *log line* allocates, and only
+    /// past the threshold — steady state below it is allocation-free.
+    pub fn record_total(&self, req_id: u64, us: u64) {
+        self.record_us(Stage::Total, us);
+        {
+            let mut ring = self.ring.lock().unwrap();
+            let i = ring.next;
+            ring.entries[i] = TraceEntry { req_id, total_us: us };
+            ring.next = (i + 1) % TRACE_RING_CAP;
+            ring.len = (ring.len + 1).min(TRACE_RING_CAP);
+        }
+        let slow = self.slow_us.load(Ordering::Relaxed);
+        if slow > 0 && us >= slow {
+            let n = self.slow_seen.fetch_add(1, Ordering::Relaxed) + 1;
+            // First few verbatim, then every 64th: a diagnostic, not a
+            // firehose.
+            if n <= 8 || n % 64 == 0 {
+                eprintln!(
+                    "slow request: req_id={req_id} total={us}us (threshold {slow}us, {n} so far)"
+                );
+            }
+        }
+    }
+
+    /// Requests that crossed the slow threshold so far.
+    pub fn slow_seen(&self) -> u64 {
+        self.slow_seen.load(Ordering::Relaxed)
+    }
+
+    /// Copy of one stage's histogram.
+    pub fn stage_snapshot(&self, stage: Stage) -> Histogram {
+        self.stages[stage as usize].lock().unwrap().clone()
+    }
+
+    /// The ring's contents, oldest → newest (report-time allocation).
+    pub fn recent(&self) -> Vec<TraceEntry> {
+        let ring = self.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(ring.len);
+        let start = (ring.next + TRACE_RING_CAP - ring.len) % TRACE_RING_CAP;
+        for k in 0..ring.len {
+            out.push(ring.entries[(start + k) % TRACE_RING_CAP]);
+        }
+        out
+    }
+
+    /// Every stage histogram (empty ones included, so the exposed metric
+    /// set is stable) plus the slow-request counter, as registry samples.
+    pub fn samples_into(&self, prefix: &str, out: &mut Vec<Sample>) {
+        for (i, name) in STAGE_NAMES.iter().enumerate() {
+            out.push(Sample {
+                name: format!("{prefix}{name}"),
+                value: SampleValue::Hist(self.stages[i].lock().unwrap().clone()),
+            });
+        }
+        out.push(Sample {
+            name: format!("{prefix}slow_requests"),
+            value: SampleValue::Counter(self.slow_seen()),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_admits_nothing_and_full_admits_everything() {
+        let t = StageTrace::new();
+        assert_eq!(t.policy(), TracePolicy::Off);
+        assert!(!t.enabled());
+        for _ in 0..100 {
+            assert!(!t.should_sample());
+        }
+        t.configure(TracePolicy::Full, 0);
+        for _ in 0..100 {
+            assert!(t.should_sample());
+        }
+    }
+
+    #[test]
+    fn sampled_admits_one_in_n() {
+        let t = StageTrace::new();
+        t.configure(TracePolicy::Sampled(8), 0);
+        let admitted = (0..800).filter(|_| t.should_sample()).count();
+        assert_eq!(admitted, 100);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reads_in_order() {
+        let t = StageTrace::new();
+        t.configure(TracePolicy::Full, 0);
+        for i in 0..(TRACE_RING_CAP as u64 + 10) {
+            t.record_total(i, i);
+        }
+        let recent = t.recent();
+        assert_eq!(recent.len(), TRACE_RING_CAP);
+        assert_eq!(recent[0].req_id, 10, "oldest ten were overwritten");
+        assert_eq!(recent.last().unwrap().req_id, TRACE_RING_CAP as u64 + 9);
+        assert_eq!(
+            t.stage_snapshot(Stage::Total).count(),
+            TRACE_RING_CAP as u64 + 10,
+            "the histogram keeps everything even as the ring wraps"
+        );
+    }
+
+    #[test]
+    fn slow_threshold_counts_only_past_it() {
+        let t = StageTrace::new();
+        t.configure(TracePolicy::Full, 1000);
+        t.record_total(1, 999);
+        t.record_total(2, 1000);
+        t.record_total(3, 5000);
+        assert_eq!(t.slow_seen(), 2);
+    }
+
+    #[test]
+    fn policy_parses_cli_spellings() {
+        assert_eq!(TracePolicy::parse("off"), Some(TracePolicy::Off));
+        assert_eq!(TracePolicy::parse("full"), Some(TracePolicy::Full));
+        assert_eq!(TracePolicy::parse("sampled"), Some(TracePolicy::Sampled(64)));
+        assert_eq!(TracePolicy::parse("sampled:7"), Some(TracePolicy::Sampled(7)));
+        assert_eq!(TracePolicy::parse("sampled:0"), Some(TracePolicy::Sampled(1)));
+        assert_eq!(TracePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn samples_expose_every_stage_plus_the_slow_counter() {
+        let t = StageTrace::new();
+        t.configure(TracePolicy::Full, 10);
+        t.record_us(Stage::Engine, 5);
+        t.record_total(1, 50);
+        let mut out = Vec::new();
+        t.samples_into("trace_", &mut out);
+        assert_eq!(out.len(), N_STAGES + 1);
+        assert!(out.iter().any(|s| s.name == "trace_engine_us"));
+        assert!(out.iter().any(|s| s.name == "trace_slow_requests"
+            && matches!(s.value, SampleValue::Counter(1))));
+    }
+}

@@ -111,6 +111,33 @@ impl SessionMetrics {
         ]
     }
 
+    /// Append every session counter and gauge to `out` as observability
+    /// samples, `session_`-prefixed (see [`crate::obs::Registry`]).
+    pub fn samples_into(&self, out: &mut Vec<crate::obs::Sample>) {
+        use crate::obs::Sample;
+        let s = self.snapshot();
+        let c = |name: &str, v: u64| Sample::counter(name, v);
+        out.push(c("session_streams_opened", s.streams_opened));
+        out.push(Sample::gauge("session_streams_open", s.streams_open));
+        out.push(c("session_streams_closed", s.streams_closed));
+        out.push(c("session_streams_finished", s.streams_finished));
+        out.push(c("session_fragments_in", s.fragments_in));
+        out.push(c("session_values_in", s.values_in));
+        out.push(c("session_chunks_submitted", s.chunks_submitted));
+        out.push(c("session_evictions", s.evictions));
+        out.push(c("session_admission_rejections", s.admission_rejections));
+        out.push(c("session_late_partials", s.late_partials));
+        out.push(Sample::gauge("session_partial_bytes", s.partial_bytes));
+        out.push(c("session_streams_resumed", s.streams_resumed));
+        out.push(c("session_snapshots_written", s.snapshots_written));
+        out.push(c("session_snapshot_bytes", s.snapshot_bytes));
+        out.push(c("session_snapshot_retries", s.snapshot_retries));
+        out.push(c("session_snapshot_failures", s.snapshot_failures));
+        out.push(c("session_log_rotations", s.log_rotations));
+        out.push(c("session_coalesce_flushes", s.coalesce_flushes));
+        out.push(c("session_coalesce_deadline_flushes", s.coalesce_deadline_flushes));
+    }
+
     /// Restore persisted counters from a recovered snapshot. Tolerates a
     /// shorter slice (an older snapshot with fewer counters): missing
     /// tail counters keep their current value.
@@ -253,6 +280,24 @@ mod tests {
         assert!(line.contains("4 snapshots"), "{line}");
         assert!(line.contains("degraded"), "{line}");
         assert!(line.contains("2 streams resumed"), "{line}");
+    }
+
+    #[test]
+    fn samples_are_unique_and_subsystem_prefixed() {
+        let m = SessionMetrics::default();
+        m.streams_opened.store(3, Ordering::Relaxed);
+        let mut out = Vec::new();
+        m.samples_into(&mut out);
+        let mut names: Vec<&str> = out.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.iter().all(|n| n.starts_with("session_")), "{names:?}");
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate sample names");
+        assert!(out
+            .iter()
+            .any(|s| s.name == "session_streams_opened"
+                && s.value == crate::obs::SampleValue::Counter(3)));
     }
 
     #[test]

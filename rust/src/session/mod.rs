@@ -81,10 +81,12 @@ use crate::coordinator::{
     BurstSlab, MetricsSnapshot, Response, Service, ServiceConfig, SlabRef,
 };
 use crate::engine::partial::{combine, PartialState};
+use crate::obs::{gauge_discharge, Stage};
 use anyhow::Result;
 use durable::{SnapshotLog, StagedStream};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use table::{Phase, SessionTable, StreamState};
 
@@ -218,7 +220,13 @@ pub struct SessionService {
     next_close_seq: u64,
     next_out: u64,
     open_count: usize,
-    metrics: SessionMetrics,
+    /// Shared so observability gather sources can read the live counters
+    /// (see [`Self::metrics_arc`]); the session paths deref through the
+    /// `Arc` exactly as before.
+    metrics: Arc<SessionMetrics>,
+    /// Cached handle to the coordinator's metrics (trace hooks; avoids an
+    /// `Arc` clone per session call).
+    svc_metrics: Arc<crate::coordinator::Metrics>,
     /// Slab arenas the pipeline may still be packing (reclaim source).
     in_flight: Vec<SlabRef>,
     /// Reclaimed arenas ready for the next append (bounded).
@@ -257,6 +265,7 @@ impl SessionService {
             None => (None, Duration::ZERO),
         };
         let svc = Service::start(cfg.service)?;
+        let svc_metrics = svc.metrics_handle();
         Ok(Self {
             svc,
             n,
@@ -272,7 +281,8 @@ impl SessionService {
             next_close_seq: 0,
             next_out: 0,
             open_count: 0,
-            metrics: SessionMetrics::default(),
+            metrics: Arc::new(SessionMetrics::default()),
+            svc_metrics,
             in_flight: Vec::new(),
             free: Vec::new(),
             last_sweep: Instant::now(),
@@ -359,6 +369,7 @@ impl SessionService {
     /// when `max_open_streams` are already open and an eviction sweep
     /// frees none.
     pub fn open(&mut self) -> std::result::Result<StreamId, SessionError> {
+        let t0 = self.svc_metrics.trace.maybe_now();
         self.pump_nonblocking();
         if self.open_count >= self.max_open {
             self.sweep_idle();
@@ -373,6 +384,9 @@ impl SessionService {
         self.open_count += 1;
         self.metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
         self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            self.svc_metrics.trace.record_us(Stage::SessionOpen, t0.elapsed().as_micros() as u64);
+        }
         Ok(id)
     }
 
@@ -422,6 +436,15 @@ impl SessionService {
     /// carry-flagged); the sub-row remainder waits in the stream's tail
     /// for the next fragment or [`close`](Self::close).
     pub fn append(&mut self, id: StreamId, values: &[f32]) -> std::result::Result<(), SessionError> {
+        let t0 = self.svc_metrics.trace.maybe_now();
+        let r = self.append_inner(id, values);
+        if let Some(t0) = t0 {
+            self.svc_metrics.trace.record_us(Stage::SessionAppend, t0.elapsed().as_micros() as u64);
+        }
+        r
+    }
+
+    fn append_inner(&mut self, id: StreamId, values: &[f32]) -> std::result::Result<(), SessionError> {
         self.pump_nonblocking();
         let n = self.n;
         let mut arena = self.take_arena();
@@ -510,7 +533,7 @@ impl SessionService {
                 state.tail.extend_from_slice(&values[consumed..]);
                 let new_tail_bytes = 4 * state.tail.len() as u64;
                 state.carried_bytes = state.carried_bytes - old_tail_bytes + new_tail_bytes;
-                self.metrics.partial_bytes.fetch_sub(old_tail_bytes, Ordering::Relaxed);
+                gauge_discharge(&self.metrics.partial_bytes, old_tail_bytes);
                 self.metrics.partial_bytes.fetch_add(new_tail_bytes, Ordering::Relaxed);
                 let first_chunk = state.chunks_submitted;
                 let chunks = arena.sets() as u32;
@@ -536,6 +559,15 @@ impl SessionService {
     /// close-order slot, and its [`StreamResult`] becomes receivable once
     /// every chunk partial has arrived.
     pub fn close(&mut self, id: StreamId) -> std::result::Result<(), SessionError> {
+        let t0 = self.svc_metrics.trace.maybe_now();
+        let r = self.close_inner(id);
+        if let Some(t0) = t0 {
+            self.svc_metrics.trace.record_us(Stage::SessionClose, t0.elapsed().as_micros() as u64);
+        }
+        r
+    }
+
+    fn close_inner(&mut self, id: StreamId) -> std::result::Result<(), SessionError> {
         self.pump_nonblocking();
         // The tail may hold complete rows (coalescing, or a stream resumed
         // from a mid-coalesce snapshot): flush them as their own chunks
@@ -560,7 +592,7 @@ impl SessionService {
                 let tail = std::mem::take(&mut state.tail);
                 let b = 4 * tail.len() as u64;
                 state.carried_bytes -= b;
-                self.metrics.partial_bytes.fetch_sub(b, Ordering::Relaxed);
+                gauge_discharge(&self.metrics.partial_bytes, b);
                 let idx = state.chunks_submitted;
                 state.chunks_submitted += 1;
                 state.parts.push(None);
@@ -673,7 +705,7 @@ impl SessionService {
             self.open_count -= evicted as usize;
             self.metrics.evictions.fetch_add(evicted, Ordering::Relaxed);
             self.metrics.streams_open.store(self.open_count as u64, Ordering::Relaxed);
-            self.metrics.partial_bytes.fetch_sub(freed_bytes, Ordering::Relaxed);
+            gauge_discharge(&self.metrics.partial_bytes, freed_bytes);
         }
     }
 
@@ -803,6 +835,19 @@ impl SessionService {
         self.svc.metrics()
     }
 
+    /// Shared handle to the live session counters, for registering an
+    /// observability gather source (reads are lock-free snapshots of the
+    /// same atomics the hot paths bump).
+    pub fn metrics_arc(&self) -> Arc<SessionMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Shared handle to the live coordinator metrics (counters, latency
+    /// histogram, and the stage-trace sink).
+    pub fn service_metrics_arc(&self) -> Arc<crate::coordinator::Metrics> {
+        Arc::clone(&self.svc_metrics)
+    }
+
     pub fn uptime(&self) -> Duration {
         self.started.elapsed()
     }
@@ -896,19 +941,25 @@ impl SessionService {
         };
         let Some(state) = taken else { return };
         let Phase::Closed { close_seq } = state.phase else { unreachable!() };
-        self.metrics.partial_bytes.fetch_sub(state.carried_bytes, Ordering::Relaxed);
+        gauge_discharge(&self.metrics.partial_bytes, state.carried_bytes);
         // Combine in chunk order via the shared rule — the same function
         // the assembler applies to one-shot multi-chunk sets, so streamed
         // and one-shot sums cannot diverge.
         let parts: Vec<PartialState> =
             state.parts.into_iter().map(|p| p.expect("stream complete")).collect();
         let (sum, combined) = combine(parts);
+        let latency = state.opened_at.elapsed();
+        if self.svc_metrics.trace.should_sample() {
+            self.svc_metrics
+                .trace
+                .record_us(Stage::SessionLifetime, latency.as_micros() as u64);
+        }
         let result = StreamResult {
             stream: id,
             sum,
             values: state.values,
             fragments: state.fragments,
-            latency: state.opened_at.elapsed(),
+            latency,
             state: combined,
         };
         self.finished.insert(close_seq, result);
@@ -940,7 +991,7 @@ impl SessionService {
         state.tail.truncate(keep);
         let freed = 4 * (rows * n) as u64;
         state.carried_bytes -= freed;
-        metrics.partial_bytes.fetch_sub(freed, Ordering::Relaxed);
+        gauge_discharge(&metrics.partial_bytes, freed);
         state.chunks_submitted += rows as u32;
         for _ in 0..rows {
             state.parts.push(None);

@@ -1,7 +1,7 @@
 //! A small latency histogram (log2 buckets + exact min/max/mean) used by
 //! the coordinator's metrics and the benches.
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Histogram {
     /// bucket\[i\] counts values v with floor(log2(v)) == i (v >= 1);
     /// bucket\[0\] also holds v == 0.
@@ -73,6 +73,67 @@ impl Histogram {
         self.max
     }
 
+    /// Estimated quantile via linear interpolation *within* the log2
+    /// bucket holding the q-th value (bucket `i >= 1` spans
+    /// `[2^i, 2^(i+1))`, bucket 0 spans `[0, 2)`), clamped to the exact
+    /// observed `[min, max]`. Tighter than [`Self::quantile`]'s upper
+    /// bound — on a uniform distribution the estimate is exact at bucket
+    /// granularity — and the form the exposition layer reports as
+    /// p50/p90/p99.
+    pub fn quantile_est(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let frac = (target - seen) as f64 / c as f64;
+                let (lower, width) = if i == 0 {
+                    (0.0, 2.0)
+                } else {
+                    ((1u64 << i) as f64, (1u64 << i) as f64)
+                };
+                let est = lower + frac * width;
+                return est.clamp(self.min() as f64, self.max as f64);
+            }
+            seen += c;
+        }
+        self.max as f64
+    }
+
+    /// Total of all recorded values (for wire transport / roll-up).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// The 64 log2 bucket counts (for wire transport / roll-up).
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Rebuild a histogram from transported parts. Returns `None` when
+    /// the parts are inconsistent (wrong bucket count, or bucket totals
+    /// disagreeing with `count`) — wire decoders turn that into a typed
+    /// malformed-payload error instead of trusting peer arithmetic.
+    pub fn from_parts(buckets: Vec<u64>, count: u64, sum: u128, min: u64, max: u64) -> Option<Self> {
+        if buckets.len() != 64 {
+            return None;
+        }
+        let mut total = 0u64;
+        for &b in &buckets {
+            total = total.checked_add(b)?;
+        }
+        if total != count {
+            return None;
+        }
+        let min = if count == 0 { u64::MAX } else { min };
+        Some(Self { buckets, count, sum, min, max })
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -142,6 +203,67 @@ mod tests {
         assert_eq!(h.min(), 0);
         assert_eq!(h.max(), 0);
         assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile_est(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantile_est_is_exact_on_a_uniform_distribution_at_bucket_granularity() {
+        let mut h = Histogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        // The 500th value falls in bucket 8 ([256, 512)), which holds
+        // exactly the values 256..=511 — linear interpolation lands on
+        // the true p50 exactly.
+        assert!((h.quantile_est(0.5) - 500.0).abs() < 1e-9, "{}", h.quantile_est(0.5));
+        // Higher quantiles sit in the partially-filled top bucket
+        // ([512, 1024) holding only 512..=999): interpolation over the
+        // full bucket width overshoots a little, the clamp to max bounds
+        // it. Pin the window so a regression in either direction trips.
+        let p90 = h.quantile_est(0.9);
+        assert!((860.0..=940.0).contains(&p90), "p90 est {p90}");
+        let p99 = h.quantile_est(0.99);
+        assert!((970.0..=999.0).contains(&p99), "p99 est {p99}");
+        // Estimates never leave the observed range.
+        assert!(h.quantile_est(1.0) <= 999.0);
+    }
+
+    #[test]
+    fn quantile_est_collapses_to_the_value_on_a_point_distribution() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(7);
+        }
+        // All mass in bucket 2 ([4, 8)); the [min, max] clamp pins the
+        // estimate to the single observed value at every quantile.
+        assert_eq!(h.quantile_est(0.5), 7.0);
+        assert_eq!(h.quantile_est(0.99), 7.0);
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_rejects_inconsistency() {
+        let mut h = Histogram::new();
+        for v in [0u64, 3, 900, 70_000] {
+            h.record(v);
+        }
+        let back = Histogram::from_parts(
+            h.buckets().to_vec(),
+            h.count(),
+            h.sum(),
+            h.min(),
+            h.max(),
+        )
+        .expect("consistent parts");
+        assert_eq!(back, h);
+        assert_eq!(back.quantile(0.99), h.quantile(0.99));
+        // Bucket totals disagreeing with count are refused.
+        assert!(Histogram::from_parts(h.buckets().to_vec(), 3, h.sum(), 0, 70_000).is_none());
+        // Wrong bucket-vector length is refused.
+        assert!(Histogram::from_parts(vec![0; 8], 0, 0, 0, 0).is_none());
+        // An empty transported histogram merges like a fresh one (min
+        // identity is restored).
+        let empty = Histogram::from_parts(vec![0; 64], 0, 0, 0, 0).unwrap();
+        assert_eq!(empty, Histogram::new());
     }
 }

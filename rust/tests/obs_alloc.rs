@@ -1,0 +1,231 @@
+//! Observability cost proofs: the sampled stage-trace record path must be
+//! allocation-free at steady state (the `ring_stress` counting-allocator
+//! discipline, applied to tracing), and every gauge in the codebase must
+//! settle to exactly zero after a clean drain + shutdown — a saturating-
+//! decrement or double-discharge bug shows up here as a nonzero (or
+//! wrapped) gauge.
+
+use jugglepac::coordinator::{
+    BurstSlab, EngineConfig, ScatterConfig, ScatterService, Service, ServiceConfig,
+};
+use jugglepac::obs::{Sample, SampleValue, Stage, StageTrace, TracePolicy};
+use jugglepac::session::{SessionConfig, SessionService, StreamId};
+use jugglepac::util::Xoshiro256;
+use jugglepac::workload::{scatter_pairs, KeyGen};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::Duration;
+
+struct CountingAlloc;
+
+thread_local! {
+    // const-initialized (no lazy init, no destructor): safe to touch from
+    // inside the allocator without recursing.
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation tracking armed on this thread; returns
+/// (allocations made by this thread during `f`, f's result).
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    ALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    let r = f();
+    TRACKING.with(|t| t.set(false));
+    (ALLOCS.with(|c| c.get()), r)
+}
+
+#[test]
+fn sampled_trace_record_path_is_allocation_free() {
+    let trace = StageTrace::new();
+    // slow_us = 0 keeps the slow log (the one deliberately allocating
+    // path: the format machinery of its eprintln) out of the audit.
+    trace.configure(TracePolicy::Sampled(4), 0);
+
+    // Warm-up: one full wrap of the preallocated ring, every stage
+    // histogram touched once.
+    for i in 0..2048u64 {
+        if let Some(t0) = trace.maybe_now() {
+            trace.record_us(Stage::QueueWait, i % 100);
+            trace.record_us(Stage::Engine, t0.elapsed().as_micros() as u64);
+            trace.record_total(i, i % 900);
+        }
+    }
+
+    // Steady state: the gate, the clock reads, the histogram records,
+    // and the ring overwrite must all stay off the allocator.
+    let (allocs, admitted) = count_allocs(|| {
+        let mut admitted = 0u64;
+        for i in 0..8192u64 {
+            if let Some(t0) = trace.maybe_now() {
+                trace.record_us(Stage::QueueWait, i % 37);
+                trace.record_us(Stage::Engine, t0.elapsed().as_micros() as u64);
+                trace.record_us(Stage::ReorderHold, i % 11);
+                trace.record_total(i, (i % 900) + 40);
+                admitted += 1;
+            }
+        }
+        admitted
+    });
+    assert_eq!(allocs, 0, "sampled trace path allocated {allocs} times at steady state");
+    assert_eq!(admitted, 8192 / 4, "Sampled(4) admits exactly one in four");
+    assert!(trace.stage_snapshot(Stage::Total).count() >= admitted);
+}
+
+fn assert_gauges_zero(samples: &[Sample], who: &str) {
+    let mut gauges = 0usize;
+    for s in samples {
+        if let SampleValue::Gauge(v) = s.value {
+            gauges += 1;
+            assert_eq!(v, 0, "{who}: gauge {} did not settle to zero", s.name);
+        }
+    }
+    assert!(gauges > 0, "{who}: expected at least one gauge in the sample set");
+}
+
+#[test]
+fn session_and_coordinator_gauges_settle_to_zero_after_clean_shutdown() {
+    // Fuzzed open/append/close traffic (seeded, so failures replay), all
+    // streams eventually closed, results flushed, clean shutdown: the
+    // streams-open and partial-bytes gauges must land on exactly zero.
+    let mut ss = SessionService::start(SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::native(4, 16),
+            shards: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("session service starts");
+    let session_metrics = ss.metrics_arc();
+    let svc_metrics = ss.service_metrics_arc();
+
+    let mut rng = Xoshiro256::seeded(0xD15C);
+    let mut open: Vec<StreamId> = Vec::new();
+    let mut closed = 0u64;
+    for _ in 0..600 {
+        let roll = rng.next_u64() % 10;
+        if roll < 3 || open.is_empty() {
+            open.push(ss.open().expect("open under the admission cap"));
+        } else if roll < 8 {
+            let i = (rng.next_u64() as usize) % open.len();
+            let n = rng.range(1, 96);
+            let vals: Vec<f32> =
+                (0..n).map(|_| rng.range_i64(-32, 32) as f32 / 4.0).collect();
+            ss.append(open[i], &vals).expect("append");
+        } else {
+            let i = (rng.next_u64() as usize) % open.len();
+            ss.close(open.swap_remove(i)).expect("close");
+            closed += 1;
+        }
+    }
+    for id in open.drain(..) {
+        ss.close(id).expect("close tail");
+        closed += 1;
+    }
+    let results = ss.flush(Duration::from_secs(60));
+    assert_eq!(results.len() as u64, closed, "every closed stream delivers a result");
+    let (sm, _svc) = ss.shutdown();
+    assert_eq!(sm.streams_finished, closed);
+
+    // The metric atomics outlive the service through their Arcs.
+    let mut out = Vec::new();
+    session_metrics.samples_into(&mut out);
+    svc_metrics.samples_into(&mut out);
+    assert_gauges_zero(&out, "session+coordinator");
+}
+
+#[test]
+fn slab_gauge_settles_to_zero_after_burst_traffic() {
+    let mut svc = Service::start(ServiceConfig {
+        engine: EngineConfig::native(4, 16),
+        ..Default::default()
+    })
+    .expect("service starts");
+    let svc_metrics = svc.metrics_handle();
+    let mut rng = Xoshiro256::seeded(0x51AB);
+    let mut in_flight = Vec::new();
+    let bursts = 6u64;
+    let per_burst = 64u64;
+    for _ in 0..bursts {
+        let mut slab = BurstSlab::with_capacity(per_burst as usize * 32, per_burst as usize);
+        for _ in 0..per_burst {
+            slab.begin_set();
+            let n = rng.range(1, 32);
+            for _ in 0..n {
+                slab.push_value(1.0);
+            }
+            slab.end_set();
+        }
+        let shared = slab.share();
+        svc.submit_burst_slab(&shared).expect("submit burst");
+        in_flight.push(shared);
+    }
+    for i in 0..bursts * per_burst {
+        let r = svc.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(r.req_id, i, "ordered delivery");
+    }
+    drop(in_flight);
+    let m = svc.shutdown();
+    assert_eq!(m.completed, bursts * per_burst);
+
+    let mut out = Vec::new();
+    svc_metrics.samples_into(&mut out);
+    assert_gauges_zero(&out, "coordinator slab path");
+}
+
+#[test]
+fn scatter_gauges_settle_to_zero_after_drain() {
+    let mut svc = ScatterService::start(ScatterConfig {
+        engine: EngineConfig::native(8, 256),
+        shards: 2,
+        ..Default::default()
+    })
+    .expect("scatter service starts");
+    let scatter_metrics = svc.metrics_handle();
+    let keygen = KeyGen::uniform(512);
+    let mut rng = Xoshiro256::seeded(0x5CA7);
+    for _ in 0..8 {
+        let burst = scatter_pairs(&keygen, 1000, &mut rng);
+        svc.submit(&burst).expect("submit");
+    }
+    let acks = svc.settle(Duration::from_secs(60)).expect("settle");
+    let applied: u64 = acks.iter().map(|a| a.applied).sum();
+    assert!(applied > 0, "fuzz traffic must land");
+    // Ephemeral drain evicts every live key — keys-live and
+    // pairs-in-flight must both discharge to exactly zero.
+    let drained = svc.drain(Duration::from_secs(30)).expect("drain");
+    assert!(!drained.is_empty());
+    svc.shutdown();
+
+    let mut out = Vec::new();
+    scatter_metrics.samples_into(&mut out);
+    assert_gauges_zero(&out, "scatter");
+}

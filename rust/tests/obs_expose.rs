@@ -1,0 +1,115 @@
+//! Exposition-layer integration: the pinned text and JSON-lines formats,
+//! a live serving node's registry covering every subsystem prefix with no
+//! duplicate names, and the METRICS wire frame round-tripping the same
+//! sample set a local gather sees.
+
+use jugglepac::net::{ClientConfig, NetClient, NetServer, NetServerConfig};
+use jugglepac::obs::{render_json_line, render_text, Sample, SampleValue};
+use jugglepac::util::Histogram;
+
+#[test]
+fn text_format_is_pinned() {
+    // One recorded value pins every histogram line: quantile estimates
+    // clamp to [min, max], so p50/p90/p99 are all exactly 4.0.
+    let mut h = Histogram::new();
+    h.record(4);
+    let samples = vec![
+        Sample::counter("a_total", 3),
+        Sample::gauge("b_live", 2),
+        Sample { name: "lat_us".into(), value: SampleValue::Hist(h) },
+    ];
+    let want = "\
+# TYPE a_total counter
+a_total 3
+# TYPE b_live gauge
+b_live 2
+# TYPE lat_us histogram
+lat_us_count 1
+lat_us_sum 4
+lat_us_min 4
+lat_us_max 4
+lat_us_p50 4.0
+lat_us_p90 4.0
+lat_us_p99 4.0
+";
+    assert_eq!(render_text(&samples), want);
+}
+
+#[test]
+fn json_line_shape_is_pinned() {
+    let samples = vec![Sample::counter("frames", 7), Sample::gauge("live", 1)];
+    assert_eq!(
+        render_json_line(3, &samples),
+        "{\"seq\":3,\"metrics\":{\"frames\":7,\"live\":1}}"
+    );
+    let mut h = Histogram::new();
+    h.record(8);
+    let samples = vec![Sample { name: "h".into(), value: SampleValue::Hist(h) }];
+    assert_eq!(
+        render_json_line(0, &samples),
+        "{\"seq\":0,\"metrics\":{\"h\":{\"count\":1,\"sum\":8,\"min\":8,\"max\":8,\
+         \"p50\":8.0,\"p90\":8.0,\"p99\":8.0}}}"
+    );
+}
+
+#[test]
+fn live_registry_covers_every_subsystem_and_round_trips_the_wire() {
+    let server = NetServer::start(NetServerConfig::default()).expect("server starts");
+    let addr = server.local_addr().to_string();
+
+    // Drive one stream end to end so counters on every layer are nonzero.
+    let mut client = NetClient::connect_tcp(&addr, ClientConfig::default());
+    let key = client.open().expect("open");
+    client.append(key, &[1.0, 2.0, 3.0]).expect("append");
+    let r = client.close(key).expect("close");
+    assert_eq!(r.values, 3);
+
+    let samples = server.registry().gather();
+    // Gather sorts by name; strict ordering also proves there are no
+    // duplicate names across the subsystem sources.
+    for w in samples.windows(2) {
+        assert!(
+            w[0].name < w[1].name,
+            "gather must be sorted and duplicate-free: {:?} then {:?}",
+            w[0].name,
+            w[1].name
+        );
+    }
+    for prefix in ["coordinator_", "net_", "scatter_", "session_", "trace_"] {
+        assert!(
+            samples.iter().any(|s| s.name.starts_with(prefix)),
+            "no {prefix} samples in one-snapshot gather"
+        );
+    }
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("{name} missing from gather"))
+    };
+    assert_eq!(find("session_streams_opened").value, SampleValue::Counter(1));
+    assert_eq!(find("session_streams_open").value, SampleValue::Gauge(0));
+    assert!(
+        matches!(find("net_frames_in").value, SampleValue::Counter(n) if n >= 4),
+        "hello + open + append + close all count"
+    );
+    assert!(matches!(find("coordinator_latency_us").value, SampleValue::Hist(_)));
+
+    // Text exposition of the full gather: every subsystem shows up in one
+    // `stats` snapshot.
+    let text = render_text(&samples);
+    assert!(text.contains("# TYPE coordinator_latency_us histogram"));
+    assert!(text.contains("session_streams_opened 1"));
+    assert!(text.contains("# TYPE trace_slow_requests counter"));
+
+    // Wire round-trip: METRICS_REQ over the same TCP connection must
+    // carry the identical metric name set a local gather sees.
+    let dump = client.fetch_metrics().expect("fetch metrics");
+    assert_eq!(dump.node, 0, "standalone server reports node id 0");
+    assert_eq!(dump.nodes.len(), 1, "no tree, no roll-up entries");
+    let wire_names: Vec<&str> = dump.nodes[0].samples.iter().map(|s| s.name.as_str()).collect();
+    let local_names: Vec<&str> = samples.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(wire_names, local_names, "wire dump carries the same metric set");
+
+    server.shutdown();
+}

@@ -1,0 +1,140 @@
+//! Tree-wide metric roll-up over real TCP: leaves push their samples up
+//! on every uplink tick, a 3-level tree's root exposes every live node in
+//! one METRICS dump, and a killed leaf's node id ages out of the roll-up
+//! (absent, never forever-stale).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jugglepac::coordinator::ServiceConfig;
+use jugglepac::engine::EngineConfig;
+use jugglepac::net::{
+    leaf_values, ClientConfig, Dialer, NetClient, NetServer, NetServerConfig, TcpDialer,
+    TreeConfig,
+};
+use jugglepac::obs::SampleValue;
+use jugglepac::session::SessionConfig;
+
+fn exact_session() -> SessionConfig {
+    SessionConfig {
+        service: ServiceConfig {
+            engine: EngineConfig::named("exact", 4, 16),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn dial(addr: &str) -> Arc<dyn Dialer> {
+    Arc::new(TcpDialer::new(addr.to_string(), Duration::from_secs(2)))
+}
+
+fn tree_server(tree: TreeConfig) -> NetServer {
+    NetServer::start(NetServerConfig {
+        session: exact_session(),
+        tree: Some(tree),
+        push_interval: Duration::from_millis(20),
+        ..NetServerConfig::default()
+    })
+    .expect("server starts")
+}
+
+fn drive_leaf(addr: &str, vals: &[f32]) {
+    let mut client = NetClient::connect_tcp(addr, ClientConfig::default());
+    let key = client.open().expect("open");
+    for chunk in vals.chunks(32) {
+        client.append(key, chunk).expect("append");
+    }
+    let r = client.close(key).expect("close");
+    assert_eq!(r.values, vals.len() as u64);
+    client.flush_up().expect("flush");
+}
+
+/// Sorted node ids present in the peer's METRICS dump.
+fn roll_up_ids(client: &mut NetClient) -> Vec<u64> {
+    let dump = client.fetch_metrics().expect("fetch metrics");
+    let mut ids: Vec<u64> = dump.nodes.iter().map(|n| n.node).collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Poll until the peer's roll-up is exactly `want`, or time out and
+/// return whatever it last was (pushes are periodic, so convergence takes
+/// a few ticks either direction).
+fn await_ids(client: &mut NetClient, want: &[u64], timeout: Duration) -> Vec<u64> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let ids = roll_up_ids(client);
+        if ids == want || Instant::now() >= deadline {
+            return ids;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn three_level_roll_up_shows_every_node_and_drops_a_dead_leaf() {
+    // root ← mid ← {leaf 1, leaf 2}
+    let root = tree_server(TreeConfig {
+        node_id: 100,
+        expected_children: 1,
+        expected_leaves: 2,
+        ..TreeConfig::default()
+    });
+    let mid = tree_server(TreeConfig {
+        node_id: 10,
+        parent: Some(dial(&root.local_addr().to_string())),
+        expected_children: 2,
+        expected_leaves: 2,
+        ..TreeConfig::default()
+    });
+    let mut leaves = Vec::new();
+    for id in 1..=2u64 {
+        let leaf = tree_server(TreeConfig {
+            parent: Some(dial(&mid.local_addr().to_string())),
+            ..TreeConfig::leaf(id)
+        });
+        drive_leaf(&leaf.local_addr().to_string(), &leaf_values(id, 60));
+        leaves.push(leaf);
+    }
+
+    let mut oracle =
+        NetClient::connect_tcp(&root.local_addr().to_string(), ClientConfig::default());
+    let ids = await_ids(&mut oracle, &[1, 2, 10, 100], Duration::from_secs(10));
+    assert_eq!(ids, vec![1, 2, 10, 100], "root roll-up must cover the whole live tree");
+
+    // Leaf counters travel up intact: leaf 1's entry at the ROOT still
+    // shows the stream it finished two hops down.
+    let dump = oracle.fetch_metrics().expect("fetch");
+    let leaf1 = dump.nodes.iter().find(|n| n.node == 1).expect("leaf 1 in root dump");
+    let finished = leaf1
+        .samples
+        .iter()
+        .find(|s| s.name == "session_streams_finished")
+        .expect("leaf counters roll up by name");
+    assert_eq!(finished.value, SampleValue::Counter(1));
+
+    // Every level answers METRICS_REQ with its own horizon: the mid sees
+    // itself plus both leaves, a leaf sees only itself.
+    let mut mid_client =
+        NetClient::connect_tcp(&mid.local_addr().to_string(), ClientConfig::default());
+    let mid_ids = await_ids(&mut mid_client, &[1, 2, 10], Duration::from_secs(10));
+    assert_eq!(mid_ids, vec![1, 2, 10]);
+    let mut leaf_client =
+        NetClient::connect_tcp(&leaves[0].local_addr().to_string(), ClientConfig::default());
+    assert_eq!(roll_up_ids(&mut leaf_client), vec![1]);
+    drop(leaf_client);
+
+    // Kill leaf 2. Its entry must age out of the mid's (and therefore the
+    // root's) roll-up within the metrics TTL — absent node id, not a
+    // forever-stale snapshot.
+    leaves.pop().expect("leaf 2").shutdown();
+    let ids = await_ids(&mut oracle, &[1, 10, 100], Duration::from_secs(10));
+    assert_eq!(ids, vec![1, 10, 100], "dead leaf's node id must disappear from the root");
+
+    for leaf in leaves {
+        leaf.shutdown();
+    }
+    mid.shutdown();
+    root.shutdown();
+}
